@@ -1,0 +1,52 @@
+//! Quickstart: train a small LM with Adapprox and inspect memory savings.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::rc::Rc;
+
+use adapprox::coordinator::{memory_table, TrainOptions, Trainer};
+use adapprox::optim::{Hyper, OptKind};
+use adapprox::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Open the AOT artifact bundle (built once by `make artifacts`;
+    //    Python never runs again after that).
+    let rt = Rc::new(Runtime::new("artifacts")?);
+
+    // 2. Paper-default Adapprox hyperparameters (§4.1): beta2=0.999,
+    //    k_init=1, k_max=0.25*min(m,n), l=p=5, xi_thresh=0.01, delta_s=10.
+    let hyper = Hyper::paper_defaults(OptKind::Adapprox, &rt.manifest.hyper);
+
+    // 3. Train the micro config for a quick demonstration.
+    let opts = TrainOptions {
+        steps: 40,
+        warmup: 4,
+        eval_every: 10,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(rt.clone(), "micro", hyper, opts)?;
+    let history = trainer.run()?;
+
+    let last = history.last().unwrap();
+    println!("\nfinal train loss {:.4}, val loss {:.4}",
+             last.train_loss, last.val_loss.unwrap());
+    println!("adaptive rank settled at {:.1} (xi = {:.4})",
+             last.mean_rank, last.mean_xi);
+
+    // 4. The memory story (Table 2): Adapprox vs the baselines on this
+    //    config, plus the exact GPT-2 117M inventory from the paper.
+    println!("\noptimizer state memory (micro config):");
+    for row in memory_table(trainer.rt.manifest.config("micro")?, 1, 0.25) {
+        if row.pct_of_adamw.is_nan() {
+            println!("  {:<28} -", row.label);
+        } else {
+            println!("  {:<28} {:>10} B ({:>5.1}% of AdamW)", row.label,
+                     row.bytes, row.pct_of_adamw);
+        }
+    }
+    println!("\nlive optimizer state right now: {} bytes",
+             trainer.opt.state_bytes());
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Watch AS-RSI's adaptive rank selection in action (paper Alg. 2): the
+//! per-step ξ (approximation-error rate) and the rank trajectory as the
+//! controller balances accuracy against memory during training.
+//!
+//! ```bash
+//! cargo run --release --example rank_adaptation -- [steps]
+//! ```
+
+use std::rc::Rc;
+
+use adapprox::coordinator::{TrainOptions, Trainer};
+use adapprox::optim::{f_xi, Hyper, OptKind};
+use adapprox::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .map_or(60, |s| s.parse().unwrap());
+    let rt = Rc::new(Runtime::new("artifacts")?);
+    let hyper = Hyper::paper_defaults(OptKind::Adapprox, &rt.manifest.hyper);
+
+    // show the growth function first (paper Eq. 14 with eta=200, omega=-10,
+    // phi=-2.5, tau=-9)
+    println!("f(xi) growth function (Eq. 14):");
+    for xi in [0.005f64, 0.01, 0.05, 0.2, 0.8] {
+        println!("  f({xi:<5}) = {:6.2} ranks", f_xi(&hyper, xi));
+    }
+
+    let opts = TrainOptions {
+        steps,
+        warmup: (steps / 10).max(1),
+        eval_every: 0,
+        log_every: usize::MAX,
+        ..Default::default()
+    };
+    let mut tr = Trainer::new(rt.clone(), "micro", hyper, opts)?;
+    println!(
+        "\nrank ladder per matrix shape (k_max = 0.25 min(m,n)):"
+    );
+    for (shape, l) in &rt.manifest.ladders {
+        println!("  {:<10} buckets {:?}", shape, l.buckets);
+    }
+
+    println!("\n{:>5} {:>10} {:>10} {:>9} {:>10}", "step", "mean_xi",
+             "mean_rank", "retries", "state_kb");
+    let hist = tr.run()?;
+    for row in hist.iter().step_by((steps / 20).max(1)) {
+        println!(
+            "{:>5} {:>10.4} {:>10.1} {:>9} {:>10.1}",
+            row.step,
+            row.mean_xi,
+            row.mean_rank,
+            "-",
+            row.state_mb * 1024.0,
+        );
+    }
+    let last = hist.last().unwrap();
+    println!(
+        "\nconverged: rank {:.1}, xi {:.4} (threshold {}), state {:.1} KiB",
+        last.mean_rank,
+        last.mean_xi,
+        rt.manifest.hyper.xi_thresh,
+        last.state_mb * 1024.0
+    );
+    println!("(refreshes every delta_s = {} steps reset k to k_init = {} \
+              and re-grow via f(xi))",
+             rt.manifest.hyper.delta_s, rt.manifest.hyper.k_init);
+    Ok(())
+}

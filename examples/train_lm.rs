@@ -1,0 +1,108 @@
+//! End-to-end LM training driver — the full-system workload (DESIGN.md
+//! deliverable e): raw text → in-repo byte-BPE tokenizer → token stream →
+//! batches → AOT train_step (fwd/bwd through PJRT) → optimizer (HLO data
+//! plane + Rust AS-RSI control plane) → loss curve CSV.
+//!
+//! ```bash
+//! cargo run --release --example train_lm -- [steps] [config] [optimizer]
+//! ```
+//!
+//! The recorded run for EXPERIMENTS.md uses `300 nano adapprox`.
+
+use std::rc::Rc;
+
+use adapprox::coordinator::{perplexity, CsvWriter, TrainOptions, Trainer};
+use adapprox::data::{BatchIterator, Split, TemplateCorpus};
+use adapprox::optim::{Hyper, OptKind};
+use adapprox::runtime::Runtime;
+use adapprox::tokenizer::BpeTrainer;
+use adapprox::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = argv.first().map_or(300, |s| s.parse().unwrap());
+    let config = argv.get(1).map_or("nano".to_string(), |s| s.clone());
+    let opt_name = argv.get(2).map_or("adapprox".to_string(), |s| s.clone());
+
+    let rt = Rc::new(Runtime::new("artifacts")?);
+    let cfg = rt.manifest.config(&config)?.clone();
+
+    // --- text pipeline: template corpus -> byte-BPE -> token stream ------
+    println!("training byte-BPE tokenizer on the template corpus...");
+    let text = TemplateCorpus::generate(20_000, 0x7E47);
+    let mut bpe = BpeTrainer::new();
+    bpe.feed(&text);
+    let tok = bpe.train(cfg.vocab.min(4096));
+    let mut stream = tok.encode(&text);
+    // wrap token ids into the model vocab (BPE vocab may exceed tiny vocabs)
+    for t in stream.iter_mut() {
+        *t %= cfg.vocab as i32;
+    }
+    println!("corpus: {} chars -> {} tokens (tokenizer vocab {})",
+             text.len(), stream.len(), tok.vocab_size());
+
+    // --- trainer over the tokenized stream -------------------------------
+    let kind = OptKind::parse(&opt_name).expect("bad optimizer");
+    let hyper = Hyper::paper_defaults(kind, &rt.manifest.hyper);
+    let opts = TrainOptions {
+        steps,
+        warmup: (steps / 10).max(1),
+        eval_every: 0, // we run our own eval over the BPE stream
+        log_every: usize::MAX,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(rt.clone(), &config, hyper, opts)?;
+
+    // random-window sampler over the BPE stream
+    let sampler = |len: usize, rng: &mut Rng| -> Vec<i32> {
+        let start = rng.below((stream.len() - len - 1) as u64) as usize;
+        stream[start..start + len].to_vec()
+    };
+    let mut its = vec![BatchIterator::new(
+        &sampler, cfg.batch, cfg.seq_len, 0xE2E, Split::Train, (0, 1),
+    )];
+    let mut val_it = BatchIterator::new(
+        &sampler, cfg.batch, cfg.seq_len, 0xE2E, Split::Valid, (0, 1),
+    );
+
+    std::fs::create_dir_all("results").ok();
+    let csv_path = format!("results/train_lm_{config}_{opt_name}.csv");
+    let mut csv = CsvWriter::create(
+        &csv_path,
+        &["step", "train_loss", "val_loss", "val_ppl", "state_mb", "rank"],
+    )?;
+    let t0 = std::time::Instant::now();
+    for t in 1..=steps {
+        let (loss, info) = trainer.train_one_step(&mut its)?;
+        let val = if t % (steps / 20).max(1) == 0 || t == steps {
+            trainer.eval_batch(&val_it.next_batch())? as f64
+        } else {
+            f64::NAN
+        };
+        csv.row(&[
+            t as f64,
+            loss as f64,
+            val,
+            perplexity(val),
+            info.state_bytes as f64 / (1024.0 * 1024.0),
+            info.mean_rank,
+        ])?;
+        if t % (steps / 15).max(1) == 0 || t == 1 || t == steps {
+            println!(
+                "step {t:>5}/{steps} loss {loss:.4} val {} rank {:.1} \
+                 ({:.2} s/step)",
+                if val.is_nan() { "-".into() } else { format!("{val:.4}") },
+                info.mean_rank,
+                t0.elapsed().as_secs_f64() / t as f64,
+            );
+        }
+    }
+    csv.flush()?;
+    let s = rt.stats();
+    println!(
+        "\ndone: {} PJRT executions ({:.1}s exec, {:.1}s compile across {} \
+         programs); curve -> {csv_path}",
+        s.executions, s.exec_seconds, s.compile_seconds, s.compiles,
+    );
+    Ok(())
+}

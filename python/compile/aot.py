@@ -1,0 +1,349 @@
+"""AOT driver: lower every Layer-2 program to HLO text + write the manifest.
+
+This is the single build-time entry point (``make artifacts``).  Python never
+runs after this: the Rust coordinator loads ``artifacts/manifest.json``, lazily
+compiles the referenced ``*.hlo.txt`` modules on the PJRT CPU client, and owns
+all state.
+
+Interchange is HLO **text** — ``lowered.compiler_ir("stablehlo")`` converted
+through ``mlir_module_to_xla_computation`` — because xla_extension 0.5.1
+rejects jax>=0.5's serialized protos (64-bit instruction ids); the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Emitted program families (DESIGN.md §2.2):
+
+- per trainable model config: ``train_step_<cfg>``, ``eval_step_<cfg>``,
+  ``predict_step_<cfg>``;
+- per distinct 2-D parameter shape: ``adamw_step_MxN``,
+  ``adafactor_step_MxN``, ``came_step_MxN`` and the rank-ladder family
+  ``adapprox_step_MxN_kK`` (one bucket per power of two up to
+  k_max = ceil(0.25 min(M,N)), paper §4.1) plus standalone ``srsi_MxN_kK``;
+- per distinct 1-D length: ``vec_adamw_step_N``, ``vec_factored_step_N``.
+
+The manifest records, for every program, the ordered input/output names,
+dtypes and shapes — the binding contract for rust/src/runtime.
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import optimizers as opt
+from .srsi import srsi, approx_error_rate
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+POWER_ITERS = 5  # paper l = 5
+OVERSAMPLE = 5   # paper p = 5
+
+# Paper §4.1 hyperparameter defaults, recorded in the manifest for the Rust
+# config system.
+HYPER_DEFAULTS = {
+    "beta1": 0.9,
+    "beta2": 0.999,
+    "eps": 1e-8,
+    "weight_decay": 0.1,
+    "clip_d": 1.0,
+    "k_init": 1,
+    "kmax_frac": 0.25,
+    "l": POWER_ITERS,
+    "p": OVERSAMPLE,
+    "xi_thresh": 0.01,
+    "delta_s": 10,
+    "f_eta": 200.0,
+    "f_omega": -10.0,
+    "f_phi": -2.5,
+    "f_tau": -9.0,
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax computation -> HLO text (the xla-crate-safe format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def rank_ladder(m: int, n: int):
+    """Rank buckets {1, 2, 4, ...} U {k_max}, k_max = ceil(0.25 min(m, n))."""
+    kmax = max(1, (min(m, n) + 3) // 4)
+    ks = []
+    k = 1
+    while k < kmax:
+        ks.append(k)
+        k *= 2
+    ks.append(kmax)
+    return ks, kmax
+
+
+def oversample(k: int, kmax: int) -> int:
+    """p <- min(p, k_max - k)  (paper Alg. 2's cap)."""
+    return max(0, min(OVERSAMPLE, kmax - k))
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _arg(name, shape, dtype="f32"):
+    return {"name": name, "dtype": dtype, "shape": list(shape)}
+
+
+SCALAR_F32 = ()
+
+
+class Emitter:
+    """Lowers programs, writes HLO files, accumulates the manifest."""
+
+    def __init__(self, out_dir: str, skip_existing: bool):
+        self.out_dir = out_dir
+        self.skip_existing = skip_existing
+        self.programs = {}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name, fn, inputs, outputs):
+        """inputs/outputs: list of (name, shape, dtype-str)."""
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(self.out_dir, fname)
+        self.programs[name] = {
+            "file": fname,
+            "inputs": [_arg(n, s, d) for (n, s, d) in inputs],
+            "outputs": [_arg(n, s, d) for (n, s, d) in outputs],
+        }
+        if self.skip_existing and os.path.exists(path):
+            return False
+        t0 = time.time()
+        specs = [
+            _spec(s, I32 if d == "i32" else F32) for (_, s, d) in inputs
+        ]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  {name}: {len(text)} chars in {time.time() - t0:.1f}s",
+              flush=True)
+        return True
+
+
+def scalars(*names):
+    return [(n, SCALAR_F32, "f32") for n in names]
+
+
+def emit_model_programs(em: Emitter, cfg: M.ModelConfig):
+    specs = M.param_specs(cfg)
+    b, s, v = cfg.batch, cfg.seq_len, cfg.vocab
+    p_in = [(n, sh, "f32") for (n, sh, _) in specs]
+    data_in = [("tokens", (b, s), "i32"), ("targets", (b, s), "i32"),
+               ("mask", (b, s), "f32")]
+    grad_out = [("grad." + n, sh, "f32") for (n, sh, _) in specs]
+
+    em.emit(f"train_step_{cfg.name}", M.make_train_step(cfg),
+            p_in + data_in, [("loss", (), "f32")] + grad_out)
+    em.emit(f"eval_step_{cfg.name}", M.make_eval_step(cfg),
+            p_in + data_in, [("loss", (), "f32")])
+    em.emit(f"predict_step_{cfg.name}", M.make_predict_step(cfg),
+            [*p_in, ("tokens", (b, s), "i32")],
+            [("logits", (b, s, v), "f32")])
+
+
+def emit_matrix_optimizers(em: Emitter, m: int, n: int):
+    shp = (m, n)
+    sname = f"{m}x{n}"
+    ladder, kmax = rank_ladder(m, n)
+
+    # AdamW
+    em.emit(
+        f"adamw_step_{sname}",
+        lambda w, mm, vv, g, t, lr, b1, b2, eps, wd: opt.adamw_step(
+            w, mm, vv, g, t, lr, b1, b2, eps, wd),
+        [("w", shp, "f32"), ("m", shp, "f32"), ("v", shp, "f32"),
+         ("g", shp, "f32")] + scalars("t", "lr", "beta1", "beta2", "eps",
+                                      "wd"),
+        [("w", shp, "f32"), ("m", shp, "f32"), ("v", shp, "f32")],
+    )
+    # Adafactor
+    em.emit(
+        f"adafactor_step_{sname}",
+        opt.adafactor_step,
+        [("w", shp, "f32"), ("m", shp, "f32"), ("r", (m,), "f32"),
+         ("c", (n,), "f32"), ("g", shp, "f32")]
+        + scalars("lr", "beta1", "beta2", "eps1", "wd", "d"),
+        [("w", shp, "f32"), ("m", shp, "f32"), ("r", (m,), "f32"),
+         ("c", (n,), "f32")],
+    )
+    # CAME
+    em.emit(
+        f"came_step_{sname}",
+        opt.came_step,
+        [("w", shp, "f32"), ("m", shp, "f32"), ("r", (m,), "f32"),
+         ("c", (n,), "f32"), ("rc", (m,), "f32"), ("cc", (n,), "f32"),
+         ("g", shp, "f32")]
+        + scalars("lr", "beta1", "beta2", "beta3", "eps1", "eps2", "wd", "d"),
+        [("w", shp, "f32"), ("m", shp, "f32"), ("r", (m,), "f32"),
+         ("c", (n,), "f32"), ("rc", (m,), "f32"), ("cc", (n,), "f32")],
+    )
+    # Adapprox split path (refresh steps): V reconstruction at the stored
+    # factor rank + rank-independent update application.
+    em.emit(
+        f"adapprox_apply_{sname}",
+        opt.adapprox_apply,
+        [("w", shp, "f32"), ("m", shp, "f32"), ("v", shp, "f32"),
+         ("g", shp, "f32")]
+        + scalars("lr", "beta1", "eps", "wd", "d", "cos_flag"),
+        [("w", shp, "f32"), ("m", shp, "f32")],
+    )
+    # Adapprox rank ladder + standalone S-RSI
+    for k in ladder:
+        p = oversample(k, kmax)
+        kp = k + p
+        em.emit(
+            f"adapprox_step_{sname}_k{k}",
+            (lambda k_: lambda w, mm, q, u, g, om, lr, b1, b2, eps, wd, d,
+             cf: opt.adapprox_step(w, mm, q, u, g, om, lr, b1, b2, eps, wd,
+                                   d, cf, k=k_, l=POWER_ITERS))(k),
+            [("w", shp, "f32"), ("m", shp, "f32"), ("q", (m, k), "f32"),
+             ("u", (n, k), "f32"), ("g", shp, "f32"),
+             ("omega", (n, kp), "f32")]
+            + scalars("lr", "beta1", "beta2", "eps", "wd", "d", "cos_flag"),
+            [("w", shp, "f32"), ("m", shp, "f32"), ("q", (m, k), "f32"),
+             ("u", (n, k), "f32"), ("xi", (), "f32")],
+        )
+        em.emit(
+            f"adapprox_fast_{sname}_k{k}",
+            (lambda k_: lambda w, mm, q, u, g, om, lr, b1, b2, eps, wd, d,
+             cf: opt.adapprox_step_fast(w, mm, q, u, g, om, lr, b1, b2, eps,
+                                        wd, d, cf, k=k_, l=POWER_ITERS))(k),
+            [("w", shp, "f32"), ("m", shp, "f32"), ("q", (m, k), "f32"),
+             ("u", (n, k), "f32"), ("g", shp, "f32"),
+             ("omega", (n, kp), "f32")]
+            + scalars("lr", "beta1", "beta2", "eps", "wd", "d", "cos_flag"),
+            [("w", shp, "f32"), ("m", shp, "f32"), ("q", (m, k), "f32"),
+             ("u", (n, k), "f32")],
+        )
+        em.emit(
+            f"srsi_{sname}_k{k}",
+            (lambda k_: lambda a, om: _srsi_with_xi(a, om, k_))(k),
+            [("a", shp, "f32"), ("omega", (n, kp), "f32")],
+            [("q", (m, k), "f32"), ("u", (n, k), "f32"), ("xi", (), "f32")],
+        )
+        em.emit(
+            f"adapprox_vstep_{sname}_k{k}",
+            (lambda k_: lambda q, u, g, b2: opt.adapprox_vstep(
+                q, u, g, b2, k=k_))(k),
+            [("q", (m, k), "f32"), ("u", (n, k), "f32"), ("g", shp, "f32"),
+             ("beta2", SCALAR_F32, "f32")],
+            [("v", shp, "f32")],
+        )
+    return ladder, kmax
+
+
+def _srsi_with_xi(a, om, k):
+    q, u = srsi(a, om, k=k, l=POWER_ITERS)
+    return q, u, approx_error_rate(a, q, u)
+
+
+def emit_vector_optimizers(em: Emitter, n: int):
+    shp = (n,)
+    em.emit(
+        f"vec_adamw_step_{n}",
+        opt.vec_adamw_step,
+        [("w", shp, "f32"), ("m", shp, "f32"), ("v", shp, "f32"),
+         ("g", shp, "f32")] + scalars("t", "lr", "beta1", "beta2", "eps",
+                                      "wd"),
+        [("w", shp, "f32"), ("m", shp, "f32"), ("v", shp, "f32")],
+    )
+    em.emit(
+        f"vec_factored_step_{n}",
+        opt.vec_factored_step,
+        [("w", shp, "f32"), ("m", shp, "f32"), ("v", shp, "f32"),
+         ("g", shp, "f32")] + scalars("lr", "beta1", "beta2", "eps", "wd",
+                                      "d"),
+        [("w", shp, "f32"), ("m", shp, "f32"), ("v", shp, "f32")],
+    )
+
+
+def config_manifest(cfg: M.ModelConfig):
+    return {
+        "vocab": cfg.vocab,
+        "n_layer": cfg.n_layer,
+        "d_model": cfg.d_model,
+        "n_head": cfg.n_head,
+        "seq_len": cfg.seq_len,
+        "batch": cfg.batch,
+        "inventory_only": cfg.inventory_only,
+        "param_count": M.param_count(cfg),
+        "params": [
+            {"name": n, "shape": list(s), "kind": k}
+            for (n, s, k) in M.param_specs(cfg)
+        ],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="nano,tiny",
+                    help="comma-separated trainable configs to lower")
+    ap.add_argument("--force", action="store_true",
+                    help="re-emit even if the HLO file exists")
+    args = ap.parse_args()
+
+    em = Emitter(args.out_dir, skip_existing=not args.force)
+    trainable = [c for c in args.configs.split(",") if c]
+
+    manifest = {
+        "version": 1,
+        "hyper_defaults": HYPER_DEFAULTS,
+        "configs": {},
+        "ladders": {},
+    }
+
+    matrix_shapes = set()
+    vector_lens = set()
+    for name in trainable:
+        cfg = M.CONFIGS[name]
+        assert not cfg.inventory_only, name
+        print(f"config {name} ({M.param_count(cfg)/1e6:.2f}M params)",
+              flush=True)
+        emit_model_programs(em, cfg)
+        manifest["configs"][name] = config_manifest(cfg)
+        for (_, shape, kind) in M.param_specs(cfg):
+            if kind == "matrix":
+                matrix_shapes.add(tuple(shape))
+            else:
+                vector_lens.add(shape[0])
+
+    # Inventory-only configs (paper Table 1) for Table 2 memory accounting.
+    for name in ("gpt2_117m", "gpt2_345m"):
+        manifest["configs"][name] = config_manifest(M.CONFIGS[name])
+
+    for (m, n) in sorted(matrix_shapes):
+        print(f"optimizer programs for {m}x{n}", flush=True)
+        ladder, kmax = emit_matrix_optimizers(em, m, n)
+        manifest["ladders"][f"{m}x{n}"] = {
+            "buckets": ladder,
+            "kmax": kmax,
+            "p": [oversample(k, kmax) for k in ladder],
+        }
+    for n in sorted(vector_lens):
+        emit_vector_optimizers(em, n)
+
+    manifest["programs"] = em.programs
+    path = os.path.join(args.out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {path} with {len(em.programs)} programs", flush=True)
+
+
+if __name__ == "__main__":
+    main()

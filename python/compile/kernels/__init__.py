@@ -1,0 +1,25 @@
+"""Layer-1 Pallas kernels for the Adapprox optimizer hot path.
+
+All kernels run under ``interpret=True`` so they lower to plain HLO ops that
+the standalone PJRT CPU client can execute (real-TPU lowering would emit a
+Mosaic custom-call).  The BlockSpecs are nevertheless written for TPU VMEM
+tiling — see DESIGN.md §3 (Hardware adaptation) for the footprint / MXU
+utilization estimates.
+
+Kernels
+-------
+- :func:`matmul`           tiled matmul, the S-RSI sketch/reconstruction GEMM.
+- :func:`second_moment`    fused ``V = beta2 * Q @ U.T + (1 - beta2) * G**2``.
+- :func:`scaled_update`    fused ``G / (sqrt(V) + eps)`` plus per-block sum of
+                           squares feeding the RMS update-clipping.
+
+``ref.py`` holds the pure-jnp oracles; ``python/tests`` sweeps shapes and
+dtypes with hypothesis and asserts allclose.
+"""
+
+from .matmul import matmul, pick_block
+from .second_moment import second_moment
+from .scaled_update import scaled_update
+from . import ref
+
+__all__ = ["matmul", "pick_block", "second_moment", "scaled_update", "ref"]

@@ -1,0 +1,82 @@
+"""Tiled Pallas matmul kernel.
+
+This is the GEMM under S-RSI's sketch products ``A @ U`` / ``A.T @ Q`` and the
+low-rank reconstruction ``Q @ U.T``.  The block schedule is the classic
+three-level tiling: grid ``(m/bm, n/bn, k/bk)`` with an f32 accumulator that
+lives in the output block across the contraction dimension (Pallas guarantees
+grid-minor iteration order over the last grid axis, so ``o_ref`` acts as the
+accumulator).
+
+TPU notes (DESIGN.md §3): default 128x128x128 f32 blocks use
+3 * 128*128*4 B = 192 KiB of VMEM per step — comfortably double-bufferable in
+16 MiB VMEM — and feed the 128x128 MXU with full tiles.  On this CPU testbed
+the kernel runs in interpret mode, so block sizes also cap the unrolled HLO
+size; ``pick_block`` chooses the largest power-of-two divisor <= target.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def pick_block(dim: int, target: int = 128) -> int:
+    """Largest power-of-two divisor of ``dim`` that is <= ``target``.
+
+    Falls back to ``dim`` itself when ``dim`` has no power-of-two factor
+    (odd dims), keeping the grid exact without padding logic.
+    """
+    if dim <= target:
+        return dim
+    b = 1
+    while b * 2 <= target and dim % (b * 2) == 0:
+        b *= 2
+    return b if dim % b == 0 else dim
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    # o_ref is always f32: accumulating partial k-tiles in a narrow dtype
+    # (bf16) compounds rounding error across grid steps; we accumulate in
+    # f32 and the wrapper casts once at the end.
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(a, b, *, bm: int = 0, bn: int = 0, bk: int = 0):
+    """``a @ b`` via a tiled Pallas kernel (interpret mode).
+
+    Args:
+      a: ``(m, k)`` array.
+      b: ``(k, n)`` array.
+      bm/bn/bk: block sizes; 0 means auto (largest pow2 divisor <= 128).
+
+    Returns:
+      ``(m, n)`` array with dtype promoted as jnp.dot would.
+    """
+    m, ka = a.shape
+    kb, n = b.shape
+    assert ka == kb, f"contraction mismatch {a.shape} @ {b.shape}"
+    bm = bm or pick_block(m)
+    bn = bn or pick_block(n)
+    bk = bk or pick_block(ka)
+    out_dtype = jnp.promote_types(a.dtype, b.dtype)
+    grid = (m // bm, n // bn, ka // bk)
+    acc = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+    return acc.astype(out_dtype)

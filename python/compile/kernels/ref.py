@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Layer-1 Pallas kernels.
+
+These are the correctness ground truth: python/tests/test_kernels.py sweeps
+shapes/dtypes with hypothesis and asserts the Pallas outputs match these to
+float32 tolerance.  They are also what the Rust native-optimizer mirrors are
+validated against (via the AOT parity integration tests).
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    """Plain ``a @ b`` in the promoted dtype."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(
+        jnp.promote_types(a.dtype, b.dtype)
+    )
+
+
+def second_moment_ref(q, u, g, beta2):
+    """``beta2 * relu(q @ u.T) + (1 - beta2) * g**2`` without fusion.
+
+    The reconstruction is clamped at zero: see the kernel docstring — rank-k
+    factors of a non-negative matrix carry small negative noise entries that
+    would otherwise unboundedly amplify ``g / (sqrt(V) + eps)``.
+    """
+    recon = jnp.maximum(jnp.dot(q, u.T, preferred_element_type=jnp.float32),
+                        0.0)
+    return (beta2 * recon + (1.0 - beta2) * g * g).astype(g.dtype)
+
+
+def scaled_update_ref(g, v, eps):
+    """``g / (sqrt(v) + eps)`` and its total sum of squares."""
+    upd = g / (jnp.sqrt(v) + eps)
+    return upd.astype(g.dtype), jnp.sum(
+        (upd * upd).astype(jnp.float32)
+    )

@@ -1,0 +1,72 @@
+"""Fused second-moment reconstruct-accumulate kernel.
+
+Computes Adapprox's running second moment (paper Alg. 3, line 2)
+
+    V_t = beta2 * Q_{t-1} @ U_{t-1}.T + (1 - beta2) * G_t ** 2
+
+in a single pass: the ``(m, n)`` reconstruction ``Q @ U.T`` is never
+materialised separately — each ``(bm, bn)`` output tile computes its slice of
+the rank-k product and immediately accumulates the elementwise gradient term.
+This halves HBM traffic versus reconstruct-then-axpy (one m*n write + one m*n
+read saved), which matters because the op is bandwidth-bound: arithmetic
+intensity ~= 2k / 12 FLOP/byte at rank k (DESIGN.md §3).
+
+The rank dimension k (+ oversampling) is small (<= k_max + p <= ~64), so each
+tile loads full ``(bm, k)`` / ``(bn, k)`` panels of Q and U — no k-tiling.
+``beta2`` arrives as a (1, 1) array broadcast to every tile (scalars cannot be
+closed over by a traced pallas kernel).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import pick_block
+
+
+def _second_moment_kernel(beta2_ref, q_ref, u_ref, g_ref, o_ref):
+    beta2 = beta2_ref[0, 0]
+    recon = jnp.dot(q_ref[...], u_ref[...].T, preferred_element_type=jnp.float32)
+    # The rank-k reconstruction of the (entrywise non-negative) second moment
+    # is not itself entrywise non-negative: small negative entries appear as
+    # approximation noise. Clamping the reconstruction keeps V >= (1-b2) G^2
+    # everywhere, so the subsequent rsqrt update is bounded by
+    # 1/sqrt(1-beta2) instead of 1/eps (which would dominate the RMS clip
+    # and freeze every other coordinate).
+    recon = jnp.maximum(recon, 0.0)
+    g = g_ref[...]
+    o_ref[...] = (beta2 * recon + (1.0 - beta2) * g * g).astype(o_ref.dtype)
+
+
+def second_moment(q, u, g, beta2):
+    """Fused ``beta2 * q @ u.T + (1 - beta2) * g**2``.
+
+    Args:
+      q: ``(m, k)`` left factor of the previous second moment.
+      u: ``(n, k)`` right factor of the previous second moment.
+      g: ``(m, n)`` current gradient.
+      beta2: scalar (python float or traced 0-d array).
+
+    Returns:
+      ``(m, n)`` second-moment estimate, dtype of ``g``.
+    """
+    m, k = q.shape
+    n, k2 = u.shape
+    assert k == k2 and g.shape == (m, n), (q.shape, u.shape, g.shape)
+    bm = pick_block(m)
+    bn = pick_block(n)
+    beta2_arr = jnp.asarray(beta2, dtype=jnp.float32).reshape(1, 1)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _second_moment_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), g.dtype),
+        interpret=True,
+    )(beta2_arr, q, u, g)

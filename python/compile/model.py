@@ -1,0 +1,243 @@
+"""Layer-2 model: GPT-2-style decoder-only transformer (pure jax).
+
+The whole forward+backward is lowered as ONE HLO program per model config
+(``train_step``), with parameters passed as a flat, manifest-ordered argument
+list so the Rust coordinator can own all state.  Companion programs:
+``eval_step`` (loss only) and ``predict_step`` (full logits, used by the
+downstream-task harness).
+
+Architecture (matching the paper's GPT-2 targets, Table 1, scaled down per
+DESIGN.md §4): learned token + position embeddings, pre-LN blocks with fused
+QKV causal self-attention and a GELU MLP (d_ff = 4 d_model), final LN, LM
+head tied to the token embedding.  The per-layer parameter shape family
+(V x H, S x H, H x 3H, H x H, H x 4H, 4H x H and the 1-D LN/bias vectors) is
+exactly the inventory the optimizer programs are compiled against.
+
+``ModelConfig.use_pallas`` routes the MLP projections through the Layer-1
+Pallas matmul so a test config proves L1-in-L2 composition end to end; it is
+off by default to keep interpret-mode HLO small (DESIGN.md §3).
+"""
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul as pallas_matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer hyperparameters; see ``CONFIGS`` for the named presets."""
+
+    name: str
+    vocab: int
+    n_layer: int
+    d_model: int
+    n_head: int
+    seq_len: int
+    batch: int
+    use_pallas: bool = False
+    # Inventory-only configs (the paper's real GPT-2 sizes) are never lowered;
+    # they exist so Table 2's memory accounting uses the true shape inventory.
+    inventory_only: bool = False
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_head == 0
+        return self.d_model // self.n_head
+
+
+# Named presets.  nano/tiny are the trainable testbed configs (DESIGN.md §4);
+# gpt2_117m/gpt2_345m reproduce the paper's Table 1 inventory (GPT-2 BPE
+# vocab 50257, sequence length 1024) for exact Table 2 memory accounting.
+CONFIGS = {
+    "micro": ModelConfig("micro", vocab=256, n_layer=2, d_model=64, n_head=4,
+                         seq_len=32, batch=8),
+    "nano": ModelConfig("nano", vocab=512, n_layer=2, d_model=128, n_head=4,
+                        seq_len=64, batch=16),
+    "nano_pallas": ModelConfig("nano_pallas", vocab=512, n_layer=2,
+                               d_model=128, n_head=4, seq_len=64, batch=16,
+                               use_pallas=True),
+    "tiny": ModelConfig("tiny", vocab=4096, n_layer=4, d_model=256, n_head=8,
+                        seq_len=128, batch=8),
+    "small": ModelConfig("small", vocab=8192, n_layer=8, d_model=512,
+                         n_head=8, seq_len=256, batch=4),
+    "gpt2_117m": ModelConfig("gpt2_117m", vocab=50257, n_layer=12,
+                             d_model=768, n_head=12, seq_len=1024, batch=128,
+                             inventory_only=True),
+    "gpt2_345m": ModelConfig("gpt2_345m", vocab=50257, n_layer=24,
+                             d_model=1024, n_head=16, seq_len=1024, batch=128,
+                             inventory_only=True),
+}
+
+
+ParamSpec = Tuple[str, Tuple[int, ...], str]  # (name, shape, kind)
+
+
+def param_specs(cfg: ModelConfig) -> List[ParamSpec]:
+    """Flat, ordered parameter inventory.  kind in {"matrix", "vector"}.
+
+    This ordering is the contract between aot.py's manifest and the Rust
+    state manager: train_step consumes params in this order and returns
+    gradients in the same order (after the loss).
+    """
+    h, v, s, f = cfg.d_model, cfg.vocab, cfg.seq_len, cfg.d_ff
+    specs: List[ParamSpec] = [
+        ("embed", (v, h), "matrix"),   # token embedding, tied LM head
+        ("pos", (s, h), "matrix"),
+    ]
+    for i in range(cfg.n_layer):
+        p = f"layer{i}."
+        specs += [
+            (p + "ln1.g", (h,), "vector"),
+            (p + "ln1.b", (h,), "vector"),
+            (p + "qkv.w", (h, 3 * h), "matrix"),
+            (p + "qkv.b", (3 * h,), "vector"),
+            (p + "proj.w", (h, h), "matrix"),
+            (p + "proj.b", (h,), "vector"),
+            (p + "ln2.g", (h,), "vector"),
+            (p + "ln2.b", (h,), "vector"),
+            (p + "fc1.w", (h, f), "matrix"),
+            (p + "fc1.b", (f,), "vector"),
+            (p + "fc2.w", (f, h), "matrix"),
+            (p + "fc2.b", (h,), "vector"),
+        ]
+    specs += [("lnf.g", (h,), "vector"), ("lnf.b", (h,), "vector")]
+    return specs
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Total trainable parameters."""
+    total = 0
+    for _, shape, _ in param_specs(cfg):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n
+    return total
+
+
+def init_params(cfg: ModelConfig, key) -> List[jnp.ndarray]:
+    """GPT-2-style init: N(0, 0.02) weights, zero biases, unit LN gains."""
+    params = []
+    for name, shape, _ in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith((".b", "lnf.b")) or ".b" in name.split("/")[-1]:
+            params.append(jnp.zeros(shape, jnp.float32))
+        elif name.endswith(".g"):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            params.append(0.02 * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _proj(x, w, cfg: ModelConfig):
+    """(B, S, D) @ (D, E) — optionally through the Layer-1 Pallas kernel."""
+    if cfg.use_pallas:
+        bsz, s, d = x.shape
+        flat = x.reshape(bsz * s, d)
+        return pallas_matmul(flat, w).reshape(bsz, s, w.shape[1])
+    return jnp.einsum("bsd,de->bse", x, w)
+
+
+def _attention(x, qkv_w, qkv_b, proj_w, proj_b, cfg: ModelConfig):
+    bsz, s, h = x.shape
+    nh, hd = cfg.n_head, cfg.head_dim
+    qkv = _proj(x, qkv_w, cfg) + qkv_b
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(bsz, s, nh, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(bsz, s, nh, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(bsz, s, nh, hd).transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(hd))
+    causal = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    att = jnp.where(causal[None, None], att, jnp.float32(-1e9))
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(bsz, s, h)
+    return _proj(out, proj_w, cfg) + proj_b
+
+
+def forward(cfg: ModelConfig, params: List[jnp.ndarray], tokens):
+    """Token ids ``(B, S)`` -> logits ``(B, S, V)`` (tied LM head)."""
+    it = iter(params)
+    embed = next(it)
+    pos = next(it)
+    x = embed[tokens] + pos[None, : tokens.shape[1]]
+    for _ in range(cfg.n_layer):
+        ln1_g, ln1_b = next(it), next(it)
+        qkv_w, qkv_b = next(it), next(it)
+        proj_w, proj_b = next(it), next(it)
+        ln2_g, ln2_b = next(it), next(it)
+        fc1_w, fc1_b = next(it), next(it)
+        fc2_w, fc2_b = next(it), next(it)
+        x = x + _attention(
+            _layer_norm(x, ln1_g, ln1_b), qkv_w, qkv_b, proj_w, proj_b, cfg
+        )
+        hmid = jax.nn.gelu(_proj(_layer_norm(x, ln2_g, ln2_b), fc1_w, cfg) + fc1_b)
+        x = x + _proj(hmid, fc2_w, cfg) + fc2_b
+    lnf_g, lnf_b = next(it), next(it)
+    x = _layer_norm(x, lnf_g, lnf_b)
+    return jnp.einsum("bsd,vd->bsv", x, embed)
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, targets, mask):
+    """Masked mean cross-entropy.
+
+    ``mask`` is f32 (B, S); pretraining uses all-ones, the downstream-task
+    harness masks everything but the label position.
+    """
+    logits = forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.sum(ll * mask) / (jnp.sum(mask) + 1e-9)
+
+
+def make_train_step(cfg: ModelConfig):
+    """(params..., tokens, targets, mask) -> (loss, grads...)."""
+
+    def train_step(*args):
+        n = len(param_specs(cfg))
+        params = list(args[:n])
+        tokens, targets, mask = args[n], args[n + 1], args[n + 2]
+        loss, grads = jax.value_and_grad(
+            lambda ps: loss_fn(cfg, ps, tokens, targets, mask)
+        )(params)
+        return (loss, *grads)
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    """(params..., tokens, targets, mask) -> (loss,)."""
+
+    def eval_step(*args):
+        n = len(param_specs(cfg))
+        params = list(args[:n])
+        tokens, targets, mask = args[n], args[n + 1], args[n + 2]
+        return (loss_fn(cfg, params, tokens, targets, mask),)
+
+    return eval_step
+
+
+def make_predict_step(cfg: ModelConfig):
+    """(params..., tokens) -> (logits,)  — full (B, S, V) logits."""
+
+    def predict_step(*args):
+        n = len(param_specs(cfg))
+        params = list(args[:n])
+        tokens = args[n]
+        return (forward(cfg, params, tokens),)
+
+    return predict_step

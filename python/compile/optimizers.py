@@ -1,0 +1,274 @@
+"""Layer-2 optimizer step programs (lowered per parameter shape by aot.py).
+
+Each function is a pure jax function over concrete-shaped arrays plus scalar
+hyperparameters; aot.py lowers one HLO program per (optimizer, shape[, rank
+bucket]).  Hyperparameters are *runtime scalar inputs* so a single executable
+serves every schedule; only shapes and the S-RSI rank/iterations are static.
+
+Implemented optimizers (paper §4.1 baselines + the contribution):
+
+- :func:`adapprox_step`   — paper Alg. 3: fused second moment via the L1
+  kernel, AS-RSI data plane (S-RSI at a static rank bucket + xi output; the
+  adaptive control plane lives in the Rust coordinator), update clipping,
+  optional first moment (beta1 scalar), optional cosine-similarity guidance.
+- :func:`adamw_step`      — Loshchilov & Hutter, with bias correction.
+- :func:`adafactor_step`  — Shazeer & Stern row/col factored second moment.
+- :func:`came_step`       — Luo et al., Adafactor + factored confidence.
+- :func:`vec_adamw_step` / :func:`vec_factored_step` — 1-D parameters are
+  never factorized (full second moment), matching Adafactor/CAME practice.
+
+Fidelity notes (DESIGN.md §7): Adapprox omits bias correction; its first
+moment averages the *update*, not the gradient; cosine guidance scales the
+applied update while the stored accumulator stays unguided (Eq. 18 applied at
+update time, as in CAME — storing the guided value would compound the
+division across steps).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import second_moment, scaled_update
+from .srsi import srsi, reconstruct
+
+_TINY = 1e-30
+
+
+def _rms(x):
+    """RMS(x) = ||x||_F / sqrt(numel)  (Shazeer & Stern update clipping)."""
+    return jnp.sqrt(jnp.mean(jnp.square(x.astype(jnp.float32))))
+
+
+def _clip_by_rms(x, d):
+    """x / max(1, RMS(x)/d)."""
+    return x / jnp.maximum(1.0, _rms(x) / d)
+
+
+# ---------------------------------------------------------------------------
+# Adapprox (paper Alg. 3)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("k", "l"))
+def adapprox_step(
+    w, m, q, u, g, omega, lr, beta1, beta2, eps, wd, d, cos_flag, *, k, l=5
+):
+    """One Adapprox step for a 2-D parameter at static rank bucket ``k``.
+
+    Args:
+      w: ``(M, N)`` parameter.
+      m: ``(M, N)`` first-moment accumulator (running average of updates;
+        pass zeros and ``beta1 = 0`` to disable — the math reduces exactly).
+      q: ``(M, K)`` left factor of V_{t-1} (zeros at t=1).
+      u: ``(N, K)`` right factor of V_{t-1}.
+      g: ``(M, N)`` gradient.
+      omega: ``(N, K + p)`` Gaussian sketch from the Rust RNG.
+      lr, beta1, beta2, eps, wd, d: scalar hyperparameters (paper defaults:
+        beta2=0.999, eps=1e-8, d=1).
+      cos_flag: scalar 0/1 enabling cosine-similarity guidance (§3.5).
+      k: static target rank (bucket).
+      l: static power-iteration count (paper: 5).
+
+    Returns:
+      ``(w_new, m_new, q_new, u_new, xi)`` — xi is Eq. 13's relative error,
+      consumed by the Rust rank controller.
+    """
+    # V_t = beta2 * Q U^T + (1 - beta2) * G^2   (fused L1 kernel)
+    v = second_moment(q, u, g, beta2)
+    # Factor V_t at the current rank bucket.
+    q_new, u_new = srsi(v, omega, k=k, l=l)
+    recon = reconstruct(q_new, u_new)
+    v_norm = jnp.linalg.norm(v.astype(jnp.float32)) + _TINY
+    xi = jnp.linalg.norm((v - recon).astype(jnp.float32)) / v_norm
+    # Raw update + RMS clipping (fused L1 kernel provides tile sumsq).
+    upd, tile_ss = scaled_update(g, v, eps)
+    numel = jnp.float32(v.shape[0] * v.shape[1])
+    rms = jnp.sqrt(jnp.sum(tile_ss) / numel)
+    upd = upd / jnp.maximum(1.0, rms / d)
+    # First moment = running average of updates (beta1 = 0 disables exactly).
+    m_new = beta1 * m + (1.0 - beta1) * upd
+    # Optional cosine-similarity guidance (Eq. 17-18), applied to the update.
+    dot = jnp.sum(upd.astype(jnp.float32) * m_new.astype(jnp.float32))
+    denom = (
+        jnp.linalg.norm(upd.astype(jnp.float32))
+        * jnp.linalg.norm(m_new.astype(jnp.float32))
+        + _TINY
+    )
+    theta = dot / denom
+    guided = m_new / (1.0 - theta + eps)
+    m_used = cos_flag * guided + (1.0 - cos_flag) * m_new
+    # Decoupled weight decay (Eq. 2).
+    w_new = w - lr * (m_used + wd * w)
+    return w_new, m_new, q_new, u_new, xi
+
+
+@functools.partial(jax.jit, static_argnames=("k", "l"))
+def adapprox_step_fast(
+    w, m, q, u, g, omega, lr, beta1, beta2, eps, wd, d, cos_flag, *, k, l=5
+):
+    """Between-refresh Adapprox step WITHOUT the xi evaluation.
+
+    Paper Alg. 2 only evaluates the approximation-error rate xi at refresh
+    steps (t mod Δs == 1); the fused :func:`adapprox_step` reconstructs
+    Q Uᵀ a second time just to report xi, which is pure telemetry between
+    refreshes. Dropping it saves a rank-k reconstruction + two norms per
+    step (~25% of the fused step at k_max) and is *more* faithful to the
+    paper's control flow. The Rust coordinator uses this variant between
+    refreshes and the split vstep/srsi/apply path at refreshes.
+    """
+    v = second_moment(q, u, g, beta2)
+    q_new, u_new = srsi(v, omega, k=k, l=l)
+    upd, tile_ss = scaled_update(g, v, eps)
+    numel = jnp.float32(v.shape[0] * v.shape[1])
+    rms = jnp.sqrt(jnp.sum(tile_ss) / numel)
+    upd = upd / jnp.maximum(1.0, rms / d)
+    m_new = beta1 * m + (1.0 - beta1) * upd
+    dot = jnp.sum(upd.astype(jnp.float32) * m_new.astype(jnp.float32))
+    denom = (
+        jnp.linalg.norm(upd.astype(jnp.float32))
+        * jnp.linalg.norm(m_new.astype(jnp.float32))
+        + _TINY
+    )
+    theta = dot / denom
+    guided = m_new / (1.0 - theta + eps)
+    m_used = cos_flag * guided + (1.0 - cos_flag) * m_new
+    w_new = w - lr * (m_used + wd * w)
+    return w_new, m_new, q_new, u_new
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def adapprox_vstep(q, u, g, beta2, *, k):
+    """Second-moment reconstruction only:  V = beta2 Q U^T + (1-beta2) G^2.
+
+    Used by the Rust AS-RSI control plane at *refresh* steps (t mod Δs == 1),
+    where Alg. 2 re-factorizes the same V_t at growing ranks: V is computed
+    once here (at the previous step's factor rank K), then the standalone
+    ``srsi`` programs are retried at higher buckets, then ``adapprox_apply``
+    finishes the parameter update.  ``k`` is static only to pin the input
+    factor shapes.
+    """
+    del k
+    return (second_moment(q, u, g, beta2),)
+
+
+@jax.jit
+def adapprox_apply(w, m, v, g, lr, beta1, eps, wd, d, cos_flag):
+    """Parameter/first-moment update given an already-computed V.
+
+    Rank-independent tail of Alg. 3: scaled update + RMS clipping + optional
+    first moment + optional cosine guidance + decoupled weight decay.
+    """
+    upd, tile_ss = scaled_update(g, v, eps)
+    numel = jnp.float32(v.shape[0] * v.shape[1])
+    rms = jnp.sqrt(jnp.sum(tile_ss) / numel)
+    upd = upd / jnp.maximum(1.0, rms / d)
+    m_new = beta1 * m + (1.0 - beta1) * upd
+    dot = jnp.sum(upd.astype(jnp.float32) * m_new.astype(jnp.float32))
+    denom = (
+        jnp.linalg.norm(upd.astype(jnp.float32))
+        * jnp.linalg.norm(m_new.astype(jnp.float32))
+        + _TINY
+    )
+    theta = dot / denom
+    guided = m_new / (1.0 - theta + eps)
+    m_used = cos_flag * guided + (1.0 - cos_flag) * m_new
+    w_new = w - lr * (m_used + wd * w)
+    return w_new, m_new
+
+
+# ---------------------------------------------------------------------------
+# AdamW baseline
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def adamw_step(w, m, v, g, t, lr, beta1, beta2, eps, wd):
+    """One AdamW step (bias-corrected; t is the 1-based step as f32)."""
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    m_hat = m_new / (1.0 - jnp.power(beta1, t))
+    v_hat = v_new / (1.0 - jnp.power(beta2, t))
+    w_new = w - lr * (m_hat / (jnp.sqrt(v_hat) + eps) + wd * w)
+    return w_new, m_new, v_new
+
+
+# ---------------------------------------------------------------------------
+# Adafactor baseline (2-D path)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def adafactor_step(w, m, r, c, g, lr, beta1, beta2, eps1, wd, d):
+    """One Adafactor step for a 2-D parameter.
+
+    r: ``(M,)`` row statistics; c: ``(N,)`` column statistics.  The factored
+    estimate is ``V ~= outer(r, c) / mean(r)`` (rank-1, I-divergence optimal
+    for non-negative matrices).  beta1 = 0 reproduces memory-less Adafactor.
+    """
+    sq = g * g + eps1
+    r_new = beta2 * r + (1.0 - beta2) * jnp.mean(sq, axis=1)
+    c_new = beta2 * c + (1.0 - beta2) * jnp.mean(sq, axis=0)
+    v_hat = jnp.outer(r_new, c_new) / (jnp.mean(r_new) + _TINY)
+    upd = g / (jnp.sqrt(v_hat) + _TINY)
+    upd = _clip_by_rms(upd, d)
+    m_new = beta1 * m + (1.0 - beta1) * upd
+    w_new = w - lr * (m_new + wd * w)
+    return w_new, m_new, r_new, c_new
+
+
+# ---------------------------------------------------------------------------
+# CAME baseline (2-D path; requires beta1 > 0)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def came_step(w, m, r, c, rc, cc, g, lr, beta1, beta2, beta3, eps1, eps2, wd, d):
+    """One CAME step: Adafactor + confidence-guided scaling.
+
+    rc/cc are the row/col factors of the instability statistic
+    ``S = (u_hat - m)^2`` (beta3-EMA, factored exactly like V), and the final
+    update is ``m / sqrt(S_hat)`` — high deviation => low confidence => damped
+    step.  CAME is undefined at beta1 = 0 (paper Table 2's dash).
+    """
+    sq = g * g + eps1
+    r_new = beta2 * r + (1.0 - beta2) * jnp.mean(sq, axis=1)
+    c_new = beta2 * c + (1.0 - beta2) * jnp.mean(sq, axis=0)
+    v_hat = jnp.outer(r_new, c_new) / (jnp.mean(r_new) + _TINY)
+    u_hat = g / (jnp.sqrt(v_hat) + _TINY)
+    u_hat = _clip_by_rms(u_hat, d)
+    m_new = beta1 * m + (1.0 - beta1) * u_hat
+    inst = jnp.square(u_hat - m_new) + eps2
+    rc_new = beta3 * rc + (1.0 - beta3) * jnp.mean(inst, axis=1)
+    cc_new = beta3 * cc + (1.0 - beta3) * jnp.mean(inst, axis=0)
+    s_hat = jnp.outer(rc_new, cc_new) / (jnp.mean(rc_new) + _TINY)
+    upd = m_new / (jnp.sqrt(s_hat) + _TINY)
+    w_new = w - lr * (upd + wd * w)
+    return w_new, m_new, r_new, c_new, rc_new, cc_new
+
+
+# ---------------------------------------------------------------------------
+# 1-D parameter paths (never factorized)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def vec_adamw_step(w, m, v, g, t, lr, beta1, beta2, eps, wd):
+    """AdamW for 1-D parameters (identical math, separate lowering)."""
+    return adamw_step(w, m, v, g, t, lr, beta1, beta2, eps, wd)
+
+
+@jax.jit
+def vec_factored_step(w, m, v, g, lr, beta1, beta2, eps, wd, d):
+    """Factored-family 1-D path: full V, no bias correction, RMS clipping.
+
+    Shared by Adafactor, CAME and Adapprox for vectors/scalars — all three
+    fall back to an un-factored second moment below 2-D (matching the
+    reference implementations).
+    """
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    upd = g / (jnp.sqrt(v_new) + eps)
+    upd = _clip_by_rms(upd, d)
+    m_new = beta1 * m + (1.0 - beta1) * upd
+    w_new = w - lr * (m_new + wd * w)
+    return w_new, m_new, v_new

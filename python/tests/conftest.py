@@ -1,0 +1,27 @@
+"""Shared pytest fixtures/helpers for the compile-path test suite."""
+
+import os
+import sys
+
+import numpy as np
+import pytest
+
+# Make `compile` importable when pytest runs from python/ or the repo root.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0xADA9)
+
+
+def lowrank_nonneg(rng, m, n, k, noise=1e-3):
+    """Non-negative matrix with (numerical) rank ~= k plus small noise.
+
+    Mimics the paper's Fig. 1 second-moment structure: a handful of dominant
+    singular values and a fast-decaying tail.
+    """
+    c = np.abs(rng.normal(size=(m, k)))
+    d = np.abs(rng.normal(size=(k, n)))
+    a = c @ d + noise * np.abs(rng.normal(size=(m, n)))
+    return a.astype(np.float32)

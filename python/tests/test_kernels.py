@@ -1,0 +1,135 @@
+"""Layer-1 Pallas kernels vs pure-jnp oracles (the CORE correctness signal).
+
+Hypothesis sweeps shapes (including non-128-divisible and tall/flat cases)
+and dtypes; every property asserts allclose against ``kernels.ref``.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+
+DIMS = st.sampled_from([1, 2, 3, 4, 8, 16, 24, 48, 64, 96, 128, 160, 256])
+SMALL_DIMS = st.sampled_from([1, 2, 4, 8, 16, 32, 37, 64])
+DTYPES = st.sampled_from([jnp.float32, jnp.bfloat16])
+HSET = settings(max_examples=12, deadline=None)
+
+
+def _randn(rng, shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(scale * rng.normal(size=shape), dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-5, atol=2e-5)
+
+
+class TestMatmul:
+    @HSET
+    @given(m=DIMS, k=DIMS, n=DIMS, dtype=DTYPES)
+    def test_matches_ref(self, m, k, n, dtype):
+        rng = np.random.default_rng(m * 7919 + k * 31 + n)
+        a = _randn(rng, (m, k), dtype)
+        b = _randn(rng, (k, n), dtype)
+        got = K.matmul(a, b)
+        want = K.ref.matmul_ref(a, b)
+        assert got.shape == (m, n) and got.dtype == want.dtype
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            **_tol(dtype))
+
+    def test_explicit_blocks(self):
+        rng = np.random.default_rng(3)
+        a = _randn(rng, (256, 128))
+        b = _randn(rng, (128, 384))
+        got = K.matmul(a, b, bm=64, bn=128, bk=32)
+        np.testing.assert_allclose(got, K.ref.matmul_ref(a, b), rtol=2e-5,
+                                   atol=2e-5)
+
+    def test_identity(self):
+        eye = jnp.eye(64, dtype=jnp.float32)
+        x = _randn(np.random.default_rng(4), (64, 96))
+        np.testing.assert_allclose(K.matmul(eye, x), x, rtol=1e-6, atol=1e-6)
+
+    def test_shape_mismatch_raises(self):
+        a = jnp.zeros((4, 5))
+        b = jnp.zeros((6, 4))
+        with pytest.raises(AssertionError):
+            K.matmul(a, b)
+
+
+class TestPickBlock:
+    @given(d=st.integers(1, 4096), t=st.sampled_from([32, 64, 128]))
+    @settings(max_examples=60, deadline=None)
+    def test_divides(self, d, t):
+        b = K.pick_block(d, t)
+        assert d % b == 0
+        assert b <= max(t, d if d <= t else b)
+
+    def test_small_dim_full_block(self):
+        assert K.pick_block(37) == 37
+        assert K.pick_block(128) == 128
+        assert K.pick_block(384) == 128
+        assert K.pick_block(96, 64) == 32
+
+
+class TestSecondMoment:
+    @HSET
+    @given(m=DIMS, n=DIMS, k=SMALL_DIMS,
+           beta2=st.sampled_from([0.0, 0.5, 0.999, 1.0]))
+    def test_matches_ref(self, m, n, k, beta2):
+        rng = np.random.default_rng(m + n * 13 + k * 101)
+        q = _randn(rng, (m, k))
+        u = _randn(rng, (n, k))
+        g = _randn(rng, (m, n), scale=1e-2)
+        got = K.second_moment(q, u, g, beta2)
+        want = K.ref.second_moment_ref(q, u, g, beta2)
+        np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-6)
+
+    def test_zero_factors_is_pure_grad_term(self):
+        """At t=1 (Q=U=0) the fused kernel must reduce to (1-b2) G^2."""
+        rng = np.random.default_rng(9)
+        g = _randn(rng, (64, 96))
+        got = K.second_moment(jnp.zeros((64, 4)), jnp.zeros((96, 4)), g,
+                              0.999)
+        np.testing.assert_allclose(got, (1 - 0.999) * g * g, rtol=5e-5,
+                                   atol=1e-9)
+
+    def test_nonnegative_preservation(self):
+        """With non-negative factors and any G, V stays non-negative."""
+        rng = np.random.default_rng(10)
+        q = jnp.abs(_randn(rng, (32, 4)))
+        u = jnp.abs(_randn(rng, (48, 4)))
+        g = _randn(rng, (32, 48))
+        v = K.second_moment(q, u, g, 0.9)
+        assert float(v.min()) >= 0.0
+
+
+class TestScaledUpdate:
+    @HSET
+    @given(m=DIMS, n=DIMS, eps=st.sampled_from([1e-8, 1e-4, 1.0]))
+    def test_matches_ref(self, m, n, eps):
+        rng = np.random.default_rng(m * 3 + n)
+        g = _randn(rng, (m, n))
+        v = jnp.abs(_randn(rng, (m, n))) * 1e-4
+        got_u, got_ss = K.scaled_update(g, v, eps)
+        want_u, want_ss = K.ref.scaled_update_ref(g, v, eps)
+        np.testing.assert_allclose(got_u, want_u, rtol=2e-5, atol=2e-6)
+        np.testing.assert_allclose(float(jnp.sum(got_ss)), float(want_ss),
+                                   rtol=1e-4)
+
+    def test_tile_sumsq_totals_frobenius(self):
+        rng = np.random.default_rng(11)
+        g = _randn(rng, (128, 128))
+        v = jnp.abs(_randn(rng, (128, 128)))
+        upd, ss = K.scaled_update(g, v, 1e-8)
+        np.testing.assert_allclose(
+            float(jnp.sum(ss)), float(jnp.sum(upd * upd)), rtol=1e-4)
+
+    def test_zero_v_bounded_by_eps(self):
+        """V = 0 must not produce inf: update = g / eps."""
+        g = jnp.ones((8, 8))
+        upd, _ = K.scaled_update(g, jnp.zeros((8, 8)), 1e-2)
+        np.testing.assert_allclose(upd, 100.0 * jnp.ones((8, 8)), rtol=1e-5)

@@ -1,0 +1,156 @@
+"""Transformer LM correctness: shapes, masking/causality, trainability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig("test", vocab=64, n_layer=2, d_model=32, n_head=4,
+                    seq_len=16, batch=2)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _batch(rng, cfg=CFG):
+    toks = rng.integers(0, cfg.vocab, size=(cfg.batch, cfg.seq_len))
+    return jnp.asarray(toks, jnp.int32)
+
+
+class TestInventory:
+    def test_param_specs_order_stable(self):
+        names = [n for n, _, _ in M.param_specs(CFG)]
+        assert names[0] == "embed" and names[1] == "pos"
+        assert names[-2:] == ["lnf.g", "lnf.b"]
+        assert "layer0.qkv.w" in names and "layer1.fc2.w" in names
+
+    def test_param_count_formula(self):
+        got = M.param_count(CFG)
+        h, v, s, f, L = 32, 64, 16, 128, 2
+        manual = v * h + s * h + L * (
+            2 * h + h * 3 * h + 3 * h + h * h + h + 2 * h + h * f + f
+            + f * h + h) + 2 * h
+        assert got == manual
+
+    def test_gpt2_inventories_match_paper_sizes(self):
+        """Table 1 sanity: parameter totals near 117M / 345M."""
+        c117 = M.param_count(M.CONFIGS["gpt2_117m"])
+        c345 = M.param_count(M.CONFIGS["gpt2_345m"])
+        assert 1.10e8 < c117 < 1.30e8, c117
+        assert 3.3e8 < c345 < 3.7e8, c345
+
+    def test_init_kinds(self, params):
+        for (name, shape, kind), p in zip(M.param_specs(CFG), params):
+            assert p.shape == shape
+            if name.endswith(".g"):
+                np.testing.assert_allclose(p, 1.0)
+            elif name.endswith(".b"):
+                np.testing.assert_allclose(p, 0.0)
+
+
+class TestForward:
+    def test_logits_shape(self, params):
+        rng = np.random.default_rng(0)
+        logits = M.forward(CFG, params, _batch(rng))
+        assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_causality(self, params):
+        """Changing a future token must not change past logits."""
+        rng = np.random.default_rng(1)
+        toks = np.asarray(_batch(rng))
+        logits_a = np.asarray(M.forward(CFG, params, jnp.asarray(toks)))
+        toks_b = toks.copy()
+        toks_b[:, -1] = (toks_b[:, -1] + 1) % CFG.vocab
+        logits_b = np.asarray(M.forward(CFG, params, jnp.asarray(toks_b)))
+        np.testing.assert_allclose(logits_a[:, :-1], logits_b[:, :-1],
+                                   atol=1e-5)
+        assert np.abs(logits_a[:, -1] - logits_b[:, -1]).max() > 1e-6
+
+    def test_position_dependence(self, params):
+        """Same token at different positions gets different logits (pos
+        embedding is live)."""
+        toks = jnp.zeros((1, CFG.seq_len), jnp.int32)
+        logits = np.asarray(M.forward(CFG, params, toks))
+        assert np.abs(logits[0, 0] - logits[0, 5]).max() > 1e-6
+
+
+class TestLoss:
+    def test_initial_loss_near_uniform(self, params):
+        """Fresh init => CE ~= ln(vocab)."""
+        rng = np.random.default_rng(2)
+        toks = _batch(rng)
+        mask = jnp.ones((CFG.batch, CFG.seq_len))
+        loss = float(M.loss_fn(CFG, params, toks, toks, mask))
+        assert abs(loss - np.log(CFG.vocab)) < 0.5, loss
+
+    def test_mask_selects_positions(self, params):
+        """Loss with a single-position mask equals the CE at that position."""
+        rng = np.random.default_rng(3)
+        toks = _batch(rng)
+        mask = np.zeros((CFG.batch, CFG.seq_len), np.float32)
+        mask[:, 7] = 1.0
+        loss = float(M.loss_fn(CFG, params, toks, toks, jnp.asarray(mask)))
+        logits = M.forward(CFG, params, toks)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        manual = -float(jnp.mean(
+            jnp.take_along_axis(logp[:, 7], toks[:, 7, None], -1)))
+        np.testing.assert_allclose(loss, manual, rtol=1e-5)
+
+    def test_gradients_flow_everywhere(self, params):
+        rng = np.random.default_rng(4)
+        toks = _batch(rng)
+        mask = jnp.ones((CFG.batch, CFG.seq_len))
+        step = M.make_train_step(CFG)
+        outs = step(*params, toks, toks, mask)
+        loss, grads = outs[0], outs[1:]
+        assert len(grads) == len(params)
+        for (name, _, _), g in zip(M.param_specs(CFG), grads):
+            assert np.isfinite(np.asarray(g)).all(), name
+            assert float(jnp.abs(g).max()) > 0, f"dead grad for {name}"
+
+    def test_sgd_descends(self, params):
+        """A few SGD steps on a fixed batch reduce the loss (model+grads are
+        a working learner)."""
+        rng = np.random.default_rng(5)
+        toks = _batch(rng)
+        mask = jnp.ones((CFG.batch, CFG.seq_len))
+        step = M.make_train_step(CFG)
+        ps = list(params)
+        losses = []
+        for _ in range(5):
+            outs = step(*ps, toks, toks, mask)
+            losses.append(float(outs[0]))
+            ps = [p - 0.5 * g for p, g in zip(ps, outs[1:])]
+        assert losses[-1] < losses[0] - 0.1, losses
+
+
+class TestPallasParity:
+    def test_pallas_projection_matches_einsum(self):
+        """use_pallas routes MLP/QKV through the L1 kernel — logits must
+        match the einsum path to f32 tolerance (L1-in-L2 composition)."""
+        cfg_a = M.ModelConfig("a", vocab=32, n_layer=1, d_model=16, n_head=2,
+                              seq_len=8, batch=2, use_pallas=False)
+        cfg_b = M.ModelConfig("b", vocab=32, n_layer=1, d_model=16, n_head=2,
+                              seq_len=8, batch=2, use_pallas=True)
+        params = M.init_params(cfg_a, jax.random.PRNGKey(7))
+        toks = jnp.asarray(
+            np.random.default_rng(8).integers(0, 32, (2, 8)), jnp.int32)
+        la = M.forward(cfg_a, params, toks)
+        lb = M.forward(cfg_b, params, toks)
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestPredict:
+    def test_predict_step_returns_forward_logits(self, params):
+        rng = np.random.default_rng(9)
+        toks = _batch(rng)
+        (logits,) = M.make_predict_step(CFG)(*params, toks)
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(M.forward(CFG, params, toks)),
+                                   rtol=1e-6)

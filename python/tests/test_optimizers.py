@@ -1,0 +1,202 @@
+"""Optimizer step programs vs hand-written references and paper invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import optimizers as opt
+from tests.conftest import lowrank_nonneg
+
+HSET = settings(max_examples=8, deadline=None)
+SHAPES = st.sampled_from([(16, 16), (32, 48), (64, 24), (128, 128)])
+
+
+def _mk(rng, shape, scale=1.0):
+    return jnp.asarray(scale * rng.normal(size=shape), jnp.float32)
+
+
+class TestAdamW:
+    @HSET
+    @given(shape=SHAPES, t=st.sampled_from([1.0, 10.0, 1000.0]))
+    def test_matches_manual(self, shape, t):
+        rng = np.random.default_rng(int(t) + shape[0])
+        w, m, v, g = (_mk(rng, shape), _mk(rng, shape, 0.1),
+                      jnp.abs(_mk(rng, shape, 0.01)), _mk(rng, shape, 0.01))
+        lr, b1, b2, eps, wd = 1e-3, 0.9, 0.999, 1e-8, 0.1
+        w2, m2, v2 = opt.adamw_step(w, m, v, g, t, lr, b1, b2, eps, wd)
+        m_ref = b1 * m + (1 - b1) * g
+        v_ref = b2 * v + (1 - b2) * g * g
+        mh = m_ref / (1 - b1 ** t)
+        vh = v_ref / (1 - b2 ** t)
+        w_ref = w - lr * (mh / (jnp.sqrt(vh) + eps) + wd * w)
+        np.testing.assert_allclose(w2, w_ref, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(m2, m_ref, rtol=1e-5, atol=1e-8)
+        np.testing.assert_allclose(v2, v_ref, rtol=1e-5, atol=1e-10)
+
+    def test_zero_grad_pure_decay(self):
+        """g = 0, m = v = 0: the only movement is weight decay."""
+        w = jnp.ones((8, 8))
+        z = jnp.zeros((8, 8))
+        w2, _, _ = opt.adamw_step(w, z, z, z, 1.0, 0.1, 0.9, 0.999, 1e-8, 0.5)
+        np.testing.assert_allclose(w2, w * (1 - 0.1 * 0.5), rtol=1e-6)
+
+
+class TestAdapprox:
+    def _step(self, rng, shape=(64, 48), k=4, **kw):
+        m, n = shape
+        defaults = dict(lr=1e-3, beta1=0.9, beta2=0.999, eps=1e-8, wd=0.1,
+                        d=1.0, cos_flag=0.0)
+        defaults.update(kw)
+        w = _mk(rng, shape)
+        mm = jnp.zeros(shape)
+        q = jnp.zeros((m, k))
+        u = jnp.zeros((n, k))
+        g = _mk(rng, shape, 0.01)
+        om = _mk(rng, (n, k + 5))
+        return opt.adapprox_step(
+            w, mm, q, u, g, om, defaults["lr"], defaults["beta1"],
+            defaults["beta2"], defaults["eps"], defaults["wd"],
+            defaults["d"], defaults["cos_flag"], k=k, l=5), (w, g, defaults)
+
+    def test_first_step_matches_manual(self, rng):
+        """At t=1 (Q=U=M=0): V = (1-b2) G^2 and the update is clipped
+        G/(sqrt(V)+eps), scaled by (1-b1)."""
+        (w2, m2, q2, u2, xi), (w, g, hp) = self._step(rng)
+        v = (1 - hp["beta2"]) * g * g
+        upd = g / (jnp.sqrt(v) + hp["eps"])
+        rms = jnp.sqrt(jnp.mean(upd ** 2))
+        upd = upd / jnp.maximum(1.0, rms / hp["d"])
+        m_ref = (1 - hp["beta1"]) * upd
+        w_ref = w - hp["lr"] * (m_ref + hp["wd"] * w)
+        np.testing.assert_allclose(np.asarray(m2), np.asarray(m_ref),
+                                   rtol=2e-4, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(w2), np.asarray(w_ref),
+                                   rtol=2e-4, atol=1e-6)
+
+    def test_beta1_zero_reduces_to_no_first_moment(self, rng):
+        (w2, m2, *_), (w, g, hp) = self._step(rng, beta1=0.0)
+        v = (1 - hp["beta2"]) * g * g
+        upd = g / (jnp.sqrt(v) + hp["eps"])
+        rms = jnp.sqrt(jnp.mean(upd ** 2))
+        upd = upd / jnp.maximum(1.0, rms / hp["d"])
+        np.testing.assert_allclose(np.asarray(m2), np.asarray(upd),
+                                   rtol=2e-4, atol=1e-6)
+
+    def test_xi_bounded_and_finite(self, rng):
+        (_, _, _, _, xi), _ = self._step(rng)
+        xi = float(xi)
+        assert 0.0 <= xi <= 1.5 and np.isfinite(xi)
+
+    def test_clipping_engages_for_huge_update(self, rng):
+        """d tiny => RMS clip active => ||m|| scales with d."""
+        (_, m_small, *_), _ = self._step(rng, d=1e-3, beta1=0.0)
+        (_, m_big, *_), _ = self._step(rng, d=1e6, beta1=0.0)
+        r = float(jnp.sqrt(jnp.mean(m_small ** 2)))
+        assert r <= 1.1e-3, r
+        assert float(jnp.sqrt(jnp.mean(m_big ** 2))) > r
+
+    def test_cosine_guidance_amplifies_aligned_update(self, rng):
+        """theta ~= 1 when M aligns with the update => applied step grows
+        ~1/eps... bounded by (1 - theta + eps); compare w/ and w/o flag."""
+        (w_on, *_), (w, g, hp) = self._step(rng, cos_flag=1.0, beta1=0.5)
+        (w_off, *_), _ = self._step(rng, cos_flag=0.0, beta1=0.5)
+        step_on = float(jnp.linalg.norm(w - w_on))
+        step_off = float(jnp.linalg.norm(w - w_off))
+        assert step_on > step_off, (step_on, step_off)
+
+    def test_factors_follow_second_moment(self, rng):
+        """Q/U outputs reconstruct V: feed-forward consistency with srsi."""
+        (_, _, q2, u2, xi), (_, g, hp) = self._step(rng, k=16)
+        v = (1 - hp["beta2"]) * g * g
+        recon = q2 @ u2.T
+        rel = float(jnp.linalg.norm(v - recon) / jnp.linalg.norm(v))
+        np.testing.assert_allclose(rel, float(xi), rtol=1e-3, atol=1e-5)
+
+
+class TestAdafactor:
+    def test_rank1_estimate_properties(self, rng):
+        shape = (32, 48)
+        w = _mk(rng, shape)
+        g = _mk(rng, shape, 0.01)
+        z2 = jnp.zeros(shape)
+        r0, c0 = jnp.zeros(32), jnp.zeros(48)
+        w2, m2, r2, c2 = opt.adafactor_step(
+            w, z2, r0, c0, g, 1e-3, 0.0, 0.999, 1e-30, 0.0, 1.0)
+        sq = g * g + 1e-30
+        np.testing.assert_allclose(r2, (1 - 0.999) * jnp.mean(sq, axis=1),
+                                   rtol=5e-5)
+        np.testing.assert_allclose(c2, (1 - 0.999) * jnp.mean(sq, axis=0),
+                                   rtol=5e-5)
+        assert np.isfinite(np.asarray(w2)).all()
+
+    def test_state_is_sublinear(self):
+        """Adafactor state per matrix is (m + n), not m*n — the memory claim
+        is structural: the step function only takes r (m,) and c (n,)."""
+        import inspect
+        sig = inspect.signature(opt.adafactor_step)
+        assert list(sig.parameters)[:5] == ["w", "m", "r", "c", "g"]
+
+
+class TestCame:
+    def test_confidence_damps_unstable_update(self, rng):
+        """An update far from its running average (low confidence) must be
+        damped relative to a perfectly-aligned one."""
+        shape = (16, 16)
+        w = jnp.zeros(shape)
+        g = _mk(rng, shape, 0.01)
+        r = jnp.ones(16) * 1e-4
+        c = jnp.ones(16) * 1e-4
+        rc = jnp.ones(16) * 1e-8
+        cc = jnp.ones(16) * 1e-8
+        # aligned: m == expected update direction
+        hp = dict(lr=1e-3, beta1=0.9, beta2=0.999, beta3=0.9999, eps1=1e-30,
+                  eps2=1e-16, wd=0.0, d=1.0)
+        m_aligned = g / (jnp.sqrt(jnp.outer(
+            (1 - 0.999) * jnp.mean(g * g + 1e-30, 1),
+            (1 - 0.999) * jnp.mean(g * g + 1e-30, 0))
+            / jnp.mean((1 - 0.999) * jnp.mean(g * g + 1e-30, 1))) + 1e-30)
+        m_opposed = -m_aligned
+        outs_a = opt.came_step(w, m_aligned, r, c, rc, cc, g, *hp.values())
+        outs_o = opt.came_step(w, m_opposed, r, c, rc, cc, g, *hp.values())
+        step_a = float(jnp.linalg.norm(outs_a[0] - w))
+        step_o = float(jnp.linalg.norm(outs_o[0] - w))
+        assert step_a > step_o, (step_a, step_o)
+
+    def test_outputs_finite(self, rng):
+        shape = (24, 24)
+        args = [_mk(rng, shape), _mk(rng, shape, 0.1), jnp.abs(_mk(rng, (24,))),
+                jnp.abs(_mk(rng, (24,))), jnp.abs(_mk(rng, (24,))),
+                jnp.abs(_mk(rng, (24,))), _mk(rng, shape, 0.01)]
+        outs = opt.came_step(*args, 1e-3, 0.9, 0.999, 0.9999, 1e-30, 1e-16,
+                             0.1, 1.0)
+        for o in outs:
+            assert np.isfinite(np.asarray(o)).all()
+
+
+class TestVectorPaths:
+    @HSET
+    @given(n=st.sampled_from([8, 128, 384, 1024]))
+    def test_vec_adamw_matches_matrix_math(self, n):
+        rng = np.random.default_rng(n)
+        w, m, v, g = (_mk(rng, (n,)), _mk(rng, (n,), 0.1),
+                      jnp.abs(_mk(rng, (n,), 0.01)), _mk(rng, (n,), 0.01))
+        out_vec = opt.vec_adamw_step(w, m, v, g, 5.0, 1e-3, 0.9, 0.999,
+                                     1e-8, 0.1)
+        out_mat = opt.adamw_step(w, m, v, g, 5.0, 1e-3, 0.9, 0.999, 1e-8,
+                                 0.1)
+        for a, b in zip(out_vec, out_mat):
+            np.testing.assert_allclose(a, b, rtol=1e-6)
+
+    def test_vec_factored_no_bias_correction(self, rng):
+        """First-step magnitude ~ g/(sqrt((1-b2) g^2)) (clipped), i.e. the
+        *uncorrected* factored-family behaviour, not Adam's."""
+        n = 64
+        g = _mk(rng, (n,), 0.01)
+        z = jnp.zeros(n)
+        w2, m2, v2 = opt.vec_factored_step(z, z, z, g, 1.0, 0.0, 0.999,
+                                           1e-8, 0.0, 1e9)
+        expect = g / (jnp.sqrt((1 - 0.999) * g * g) + 1e-8)
+        np.testing.assert_allclose(m2, expect, rtol=1e-4)
+        np.testing.assert_allclose(v2, (1 - 0.999) * g * g, rtol=5e-5)

@@ -1,0 +1,107 @@
+"""S-RSI (paper Alg. 1) correctness: orthonormality (Prop. 3.1), error vs the
+SVD optimum (Eq. 5), the power-iteration / oversampling effects (Eq. 12), and
+the pure-HLO MGS-QR against numpy's QR.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.srsi import mgs_qr, srsi, approx_error_rate, reconstruct
+from tests.conftest import lowrank_nonneg
+
+HSET = settings(max_examples=10, deadline=None)
+
+
+def _omega(rng, n, kp):
+    return jnp.asarray(rng.normal(size=(n, kp)), jnp.float32)
+
+
+class TestMgsQr:
+    @HSET
+    @given(m=st.sampled_from([16, 64, 128, 200]),
+           c=st.sampled_from([1, 3, 8, 16]))
+    def test_orthonormal_columns(self, m, c):
+        rng = np.random.default_rng(m + c)
+        x = jnp.asarray(rng.normal(size=(m, c)), jnp.float32)
+        q = mgs_qr(x)
+        gram = np.asarray(q.T @ q)
+        np.testing.assert_allclose(gram, np.eye(c), atol=5e-5)
+
+    @HSET
+    @given(m=st.sampled_from([32, 96]), c=st.sampled_from([2, 6, 12]))
+    def test_spans_same_space(self, m, c):
+        """Q Q^T must be the projector onto col(X): Q Q^T X == X."""
+        rng = np.random.default_rng(m * c)
+        x = jnp.asarray(rng.normal(size=(m, c)), jnp.float32)
+        q = mgs_qr(x)
+        np.testing.assert_allclose(np.asarray(q @ (q.T @ x)), np.asarray(x),
+                                   rtol=1e-3, atol=1e-4)
+
+    def test_rank_deficient_no_nan(self):
+        """Duplicate columns (rank-deficient) must not produce NaN/inf."""
+        rng = np.random.default_rng(5)
+        col = rng.normal(size=(64, 1))
+        x = jnp.asarray(np.concatenate([col, col, col], axis=1), jnp.float32)
+        q = mgs_qr(x)
+        assert np.isfinite(np.asarray(q)).all()
+
+
+class TestSrsi:
+    def test_q_orthonormal(self, rng):
+        a = jnp.asarray(lowrank_nonneg(rng, 128, 96, 8))
+        q, u = srsi(a, _omega(rng, 96, 13), k=8, l=5)
+        np.testing.assert_allclose(np.asarray(q.T @ q), np.eye(8), atol=5e-5)
+
+    def test_exact_recovery_of_lowrank(self, rng):
+        """A exactly rank r, k >= r  =>  xi ~= 0 (Eq. 5 tail is zero)."""
+        c = np.abs(rng.normal(size=(64, 4)))
+        d = np.abs(rng.normal(size=(4, 80)))
+        a = jnp.asarray((c @ d).astype(np.float32))
+        q, u = srsi(a, _omega(rng, 80, 9), k=4, l=5)
+        xi = float(approx_error_rate(a, q, u))
+        assert xi < 1e-3, xi
+
+    def test_error_decreases_with_rank(self, rng):
+        a = jnp.asarray(lowrank_nonneg(rng, 128, 128, 16, noise=0.05))
+        xis = []
+        for k in (1, 4, 16):
+            q, u = srsi(a, _omega(rng, 128, k + 5), k=k, l=5)
+            xis.append(float(approx_error_rate(a, q, u)))
+        assert xis[0] > xis[1] > xis[2], xis
+
+    def test_near_svd_optimal(self, rng):
+        """S-RSI error within 10% of the SVD truncation optimum (Fig. 2a)."""
+        a_np = lowrank_nonneg(rng, 96, 96, 12, noise=0.02)
+        k = 8
+        u_, s_, vt_ = np.linalg.svd(a_np)
+        svd_err = np.linalg.norm(
+            a_np - (u_[:, :k] * s_[:k]) @ vt_[:k]) / np.linalg.norm(a_np)
+        a = jnp.asarray(a_np)
+        q, u = srsi(a, _omega(rng, 96, k + 5), k=k, l=5)
+        xi = float(approx_error_rate(a, q, u))
+        assert xi <= 1.1 * svd_err + 1e-6, (xi, svd_err)
+
+    def test_power_iterations_help_flat_spectrum(self, rng):
+        """More power iterations sharpen a flat spectrum (Eq. 11)."""
+        a_np = lowrank_nonneg(rng, 128, 128, 32, noise=0.3)
+        a = jnp.asarray(a_np)
+        om = _omega(rng, 128, 9)
+        xi1 = float(approx_error_rate(a, *srsi(a, om, k=4, l=1)))
+        xi5 = float(approx_error_rate(a, *srsi(a, om, k=4, l=5)))
+        assert xi5 <= xi1 + 1e-4, (xi1, xi5)
+
+    def test_reconstruction_shape_and_dtype(self, rng):
+        a = jnp.asarray(lowrank_nonneg(rng, 64, 48, 4))
+        q, u = srsi(a, _omega(rng, 48, 9), k=4, l=2)
+        r = reconstruct(q, u)
+        assert r.shape == (64, 48) and r.dtype == jnp.float32
+
+    def test_zero_matrix_stable(self):
+        """t=1 corner: V = (1-b2) G^2 can be ~0; S-RSI must stay finite."""
+        a = jnp.zeros((32, 32), jnp.float32)
+        rng = np.random.default_rng(0)
+        q, u = srsi(a, _omega(rng, 32, 6), k=1, l=5)
+        assert np.isfinite(np.asarray(q)).all()
+        assert np.isfinite(np.asarray(u)).all()

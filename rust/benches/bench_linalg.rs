@@ -1,0 +1,46 @@
+//! Linalg substrate benchmarks: the native building blocks under Fig. 2's
+//! sweeps (matmul, MGS-QR, Jacobi SVD, native S-RSI).
+
+use adapprox::bench::{header, Bench};
+use adapprox::linalg::{jacobi_svd, mgs_qr, srsi, Mat};
+use adapprox::util::rng::Rng;
+
+fn main() {
+    let b = Bench::default();
+    let mut rng = Rng::new(0xBE);
+
+    header("matmul (m x k) @ (k x n)");
+    for &(m, k, n) in &[(128usize, 128usize, 128usize), (256, 256, 256),
+                        (512, 64, 512)] {
+        let a = Mat::randn(m, k, &mut rng);
+        let c = Mat::randn(k, n, &mut rng);
+        b.run(&format!("matmul_{m}x{k}x{n}"), || {
+            std::hint::black_box(a.matmul(&c));
+        });
+    }
+
+    header("MGS QR (m x c)");
+    for &(m, c) in &[(256usize, 8usize), (256, 37), (1024, 37)] {
+        let x = Mat::randn(m, c, &mut rng);
+        b.run(&format!("mgs_qr_{m}x{c}"), || {
+            std::hint::black_box(mgs_qr(&x));
+        });
+    }
+
+    header("Jacobi SVD (the Fig.2 'SVD' baseline)");
+    for &n in &[64usize, 128, 256] {
+        let a = Mat::randn(n, n, &mut rng);
+        let bq = Bench::quick();
+        bq.run(&format!("jacobi_svd_{n}x{n}"), || {
+            std::hint::black_box(jacobi_svd(&a));
+        });
+    }
+
+    header("native S-RSI (l=5, p=5) — Fig.2 time-vs-rank");
+    let a = Mat::randn(256, 256, &mut rng);
+    for &k in &[1usize, 4, 16, 64] {
+        b.run(&format!("srsi_256x256_k{k}"), || {
+            std::hint::black_box(srsi(&a, k, 5, 5, &mut rng));
+        });
+    }
+}

@@ -1,0 +1,94 @@
+//! Per-optimizer HLO step latency per parameter shape — the systems cost
+//! behind Fig. 2b / the paper's claim that Adapprox's overhead is
+//! amortizable.
+
+use adapprox::bench::{header, Bench};
+use adapprox::runtime::{Runtime, Tensor};
+use adapprox::util::rng::Rng;
+
+fn main() {
+    let Ok(rt) = Runtime::new("artifacts") else {
+        println!("run `make artifacts` first");
+        return;
+    };
+    let b = Bench::default();
+    let mut rng = Rng::new(0x0557);
+    let (m, n) = (512usize, 128usize);
+    let w = Tensor::f32(vec![m, n], rng.normal_vec_f32(m * n));
+    let g = Tensor::f32(vec![m, n], rng.normal_vec_f32(m * n));
+    let z = Tensor::zeros(vec![m, n]);
+    let s = Tensor::scalar;
+
+    header(&format!("optimizer step programs on {m}x{n}"));
+
+    // AdamW
+    let adamw_args = vec![w.clone(), z.clone(), z.clone(), g.clone(),
+                          s(1.0), s(1e-3), s(0.9), s(0.999), s(1e-8), s(0.1)];
+    let name = format!("adamw_step_{m}x{n}");
+    rt.exec(&name, &adamw_args).unwrap();
+    b.run("adamw_step", || {
+        std::hint::black_box(rt.exec(&name, &adamw_args).unwrap());
+    });
+
+    // Adafactor
+    let ada_args = vec![w.clone(), z.clone(), Tensor::zeros(vec![m]),
+                        Tensor::zeros(vec![n]), g.clone(),
+                        s(1e-3), s(0.9), s(0.999), s(1e-30), s(0.1), s(1.0)];
+    let name = format!("adafactor_step_{m}x{n}");
+    rt.exec(&name, &ada_args).unwrap();
+    b.run("adafactor_step", || {
+        std::hint::black_box(rt.exec(&name, &ada_args).unwrap());
+    });
+
+    // CAME
+    let came_args = vec![w.clone(), z.clone(), Tensor::zeros(vec![m]),
+                         Tensor::zeros(vec![n]), Tensor::zeros(vec![m]),
+                         Tensor::zeros(vec![n]), g.clone(),
+                         s(1e-3), s(0.9), s(0.999), s(0.9999), s(1e-30),
+                         s(1e-16), s(0.1), s(1.0)];
+    let name = format!("came_step_{m}x{n}");
+    rt.exec(&name, &came_args).unwrap();
+    b.run("came_step", || {
+        std::hint::black_box(rt.exec(&name, &came_args).unwrap());
+    });
+
+    // Adapprox at each rank bucket
+    for &k in &[1usize, 4, 16, 32] {
+        let p = 5usize.min(32 - k);
+        let args = vec![
+            w.clone(),
+            z.clone(),
+            Tensor::zeros(vec![m, k]),
+            Tensor::zeros(vec![n, k]),
+            g.clone(),
+            Tensor::f32(vec![n, k + p], rng.normal_vec_f32(n * (k + p))),
+            s(1e-3), s(0.9), s(0.999), s(1e-8), s(0.1), s(1.0), s(0.0),
+        ];
+        let name = format!("adapprox_step_{m}x{n}_k{k}");
+        if rt.manifest.program(&name).is_err() {
+            continue;
+        }
+        rt.exec(&name, &args).unwrap();
+        b.run(&format!("adapprox_step_k{k}"), || {
+            std::hint::black_box(rt.exec(&name, &args).unwrap());
+        });
+    }
+
+    header("vector paths (n = 512)");
+    let vn = 512usize;
+    let vw = Tensor::f32(vec![vn], rng.normal_vec_f32(vn));
+    let vz = Tensor::zeros(vec![vn]);
+    let vg = Tensor::f32(vec![vn], rng.normal_vec_f32(vn));
+    let va = vec![vw.clone(), vz.clone(), vz.clone(), vg.clone(),
+                  s(1.0), s(1e-3), s(0.9), s(0.999), s(1e-8), s(0.1)];
+    rt.exec("vec_adamw_step_512", &va).unwrap();
+    b.run("vec_adamw_step", || {
+        std::hint::black_box(rt.exec("vec_adamw_step_512", &va).unwrap());
+    });
+    let vf = vec![vw, vz.clone(), vz, vg,
+                  s(1e-3), s(0.9), s(0.999), s(1e-8), s(0.1), s(1.0)];
+    rt.exec("vec_factored_step_512", &vf).unwrap();
+    b.run("vec_factored_step", || {
+        std::hint::black_box(rt.exec("vec_factored_step_512", &vf).unwrap());
+    });
+}

@@ -1,0 +1,58 @@
+//! Runtime-layer microbenchmarks: PJRT dispatch overhead, literal
+//! conversion cost, compile latency — the L3 overheads the perf pass
+//! optimizes (EXPERIMENTS.md §Perf).
+
+use adapprox::bench::{header, Bench};
+use adapprox::runtime::{Runtime, Tensor};
+use adapprox::util::rng::Rng;
+
+fn main() {
+    let Ok(rt) = Runtime::new("artifacts") else {
+        println!("run `make artifacts` first");
+        return;
+    };
+    let b = Bench::default();
+    let mut rng = Rng::new(0x9);
+
+    header("PJRT dispatch overhead (smallest program: vec_factored_128)");
+    let n = 128usize;
+    let args = vec![
+        Tensor::f32(vec![n], rng.normal_vec_f32(n)),
+        Tensor::zeros(vec![n]),
+        Tensor::zeros(vec![n]),
+        Tensor::f32(vec![n], rng.normal_vec_f32(n)),
+        Tensor::scalar(1e-3),
+        Tensor::scalar(0.9),
+        Tensor::scalar(0.999),
+        Tensor::scalar(1e-8),
+        Tensor::scalar(0.1),
+        Tensor::scalar(1.0),
+    ];
+    rt.exec("vec_factored_step_128", &args).unwrap();
+    b.run("exec_small_program", || {
+        std::hint::black_box(rt.exec("vec_factored_step_128", &args).unwrap());
+    });
+
+    header("literal conversion (host <-> PJRT)");
+    for &sz in &[128usize * 128, 512 * 512] {
+        let t = Tensor::f32(vec![sz], rng.normal_vec_f32(sz));
+        b.run(&format!("to_literal_{sz}"), || {
+            std::hint::black_box(t.to_literal().unwrap());
+        });
+        let lit = t.to_literal().unwrap();
+        b.run(&format!("from_literal_{sz}"), || {
+            std::hint::black_box(Tensor::from_literal(&lit).unwrap());
+        });
+    }
+
+    header("compile latency (cold, one representative program)");
+    // fresh runtime each iteration so the cache is cold
+    let bq = adapprox::bench::Bench {
+        warmup_iters: 0,
+        sample_iters: 3,
+    };
+    bq.run("compile_adamw_step_128x128", || {
+        let fresh = Runtime::new("artifacts").unwrap();
+        std::hint::black_box(fresh.executable("adamw_step_128x128").unwrap());
+    });
+}

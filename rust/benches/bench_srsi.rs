@@ -1,0 +1,78 @@
+//! S-RSI benchmarks across the two backends — the timing half of Fig. 2
+//! (computation time vs rank), HLO path included.
+
+use adapprox::bench::{header, Bench};
+use adapprox::linalg::{srsi_with_omega, Mat};
+use adapprox::runtime::{Runtime, Tensor};
+use adapprox::util::rng::Rng;
+
+fn main() {
+    let b = Bench::default();
+    let mut rng = Rng::new(0x55);
+    let rt = Runtime::new("artifacts").ok();
+    if rt.is_none() {
+        println!("(artifacts missing — run `make artifacts`; HLO rows skipped)");
+    }
+
+    // a realistic second-moment-like target
+    let (m, n) = (512usize, 128usize);
+    let c = Mat::from_fn(m, 8, |_, _| rng.normal().abs() as f32);
+    let d = Mat::from_fn(8, n, |_, _| rng.normal().abs() as f32);
+    let mut a = c.matmul(&d);
+    for v in a.data.iter_mut() {
+        *v += 0.02 * rng.normal().abs() as f32;
+    }
+
+    header(&format!("S-RSI on {m}x{n} (paper l=5, p=5): native vs HLO"));
+    for &k in &[1usize, 2, 4, 8, 16, 32] {
+        let p = 5usize.min(32usize.saturating_sub(k));
+        let omega = Mat::randn(n, k + p, &mut rng);
+        b.run(&format!("native_srsi_k{k}"), || {
+            std::hint::black_box(srsi_with_omega(&a, &omega, k, 5));
+        });
+        if let Some(rt) = &rt {
+            let at = Tensor::f32(vec![m, n], a.data.clone());
+            let om = Tensor::f32(vec![n, k + p], omega.data.clone());
+            let name = format!("srsi_{m}x{n}_k{k}");
+            if rt.manifest.program(&name).is_ok() {
+                // warm the executable cache outside the timed region
+                rt.exec(&name, &[at.clone(), om.clone()]).unwrap();
+                b.run(&format!("hlo_srsi_k{k}"), || {
+                    std::hint::black_box(
+                        rt.exec(&name, &[at.clone(), om.clone()]).unwrap(),
+                    );
+                });
+            }
+        }
+    }
+
+    header("fused adapprox_step (HLO, the between-refresh hot path)");
+    if let Some(rt) = &rt {
+        let k = 8usize;
+        let p = 5;
+        let args = vec![
+            Tensor::f32(vec![m, n], a.data.clone()),
+            Tensor::zeros(vec![m, n]),
+            Tensor::f32(vec![m, k], Mat::randn(m, k, &mut rng).data),
+            Tensor::f32(vec![n, k], Mat::randn(n, k, &mut rng).data),
+            Tensor::f32(vec![m, n], {
+                let mut g = vec![0.0f32; m * n];
+                rng.fill_normal_f32(&mut g);
+                g
+            }),
+            Tensor::f32(vec![n, k + p], Mat::randn(n, k + p, &mut rng).data),
+            Tensor::scalar(1e-3),
+            Tensor::scalar(0.9),
+            Tensor::scalar(0.999),
+            Tensor::scalar(1e-8),
+            Tensor::scalar(0.1),
+            Tensor::scalar(1.0),
+            Tensor::scalar(0.0),
+        ];
+        let name = format!("adapprox_step_{m}x{n}_k{k}");
+        rt.exec(&name, &args).unwrap();
+        b.run("fused_adapprox_step_k8", || {
+            std::hint::black_box(rt.exec(&name, &args).unwrap());
+        });
+    }
+}

@@ -1,0 +1,64 @@
+//! Whole-model step benchmarks: forward+backward (train_step), eval_step,
+//! and the full coordinator step (fwd/bwd + all per-tensor optimizer
+//! programs) per config — the end-to-end numbers for EXPERIMENTS.md §Perf.
+
+use std::rc::Rc;
+
+use adapprox::bench::{header, Bench};
+use adapprox::coordinator::{TrainOptions, Trainer};
+use adapprox::data::{BatchIterator, Split};
+use adapprox::optim::{Hyper, OptKind};
+use adapprox::runtime::Runtime;
+
+fn main() {
+    let Ok(rt) = Runtime::new("artifacts") else {
+        println!("run `make artifacts` first");
+        return;
+    };
+    let rt = Rc::new(rt);
+    let b = Bench {
+        warmup_iters: 2,
+        sample_iters: 10,
+    };
+
+    for config in ["micro", "nano"] {
+        if rt.manifest.config(config).is_err() {
+            continue;
+        }
+        header(&format!("config {config}"));
+        for kind in [OptKind::AdamW, OptKind::Adapprox] {
+            let hyper = Hyper::paper_defaults(kind, &rt.manifest.hyper);
+            let opts = TrainOptions {
+                steps: 4,
+                eval_every: 0,
+                log_every: usize::MAX,
+                ..Default::default()
+            };
+            let mut tr =
+                Trainer::new(rt.clone(), config, hyper, opts).unwrap();
+            let cfg = tr.cfg.clone();
+            let corpus = adapprox::data::BigramCorpus::new(
+                cfg.vocab, 4, adapprox::coordinator::CORPUS_SEED,
+            );
+            let sampler = |len: usize, rng: &mut adapprox::util::rng::Rng| {
+                corpus.sample(len, rng)
+            };
+            let mut its = vec![BatchIterator::new(
+                &sampler, cfg.batch, cfg.seq_len, 1, Split::Train, (0, 1),
+            )];
+            // fwd/bwd only
+            let batch = its[0].next_batch();
+            tr.forward_backward(&batch).unwrap(); // warm compile
+            b.run(&format!("{config}_fwd_bwd"), || {
+                std::hint::black_box(tr.forward_backward(&batch).unwrap());
+            });
+            b.run(&format!("{config}_eval_step"), || {
+                std::hint::black_box(tr.eval_batch(&batch).unwrap());
+            });
+            // full coordinator step (fwd/bwd + optimizer dispatch)
+            b.run(&format!("{config}_full_step_{}", kind.name()), || {
+                std::hint::black_box(tr.train_one_step(&mut its).unwrap());
+            });
+        }
+    }
+}

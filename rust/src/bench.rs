@@ -1,0 +1,137 @@
+//! Mini benchmark framework (no `criterion` in the vendored set).
+//!
+//! `cargo bench` targets use `harness = false` and call [`Bench::run`] /
+//! [`Bench::run_n`], which warm up, sample wall-clock repeatedly, and print
+//! mean / p50 / p95 with enough samples for stable comparisons. The perf
+//! pass (EXPERIMENTS.md §Perf) reads these numbers.
+
+use std::time::Instant;
+
+use crate::util::{mean, percentile, std_dev};
+
+/// One benchmark group with shared sampling policy.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+}
+
+/// Statistics for one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub std_s: f64,
+    pub samples: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup_iters: 3,
+            sample_iters: 20,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            warmup_iters: 1,
+            sample_iters: 5,
+        }
+    }
+
+    /// Time `f` and print+return the stats row.
+    pub fn run(&self, name: &str, mut f: impl FnMut()) -> Stats {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.sample_iters);
+        for _ in 0..self.sample_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let stats = Stats {
+            name: name.to_string(),
+            mean_s: mean(&samples),
+            p50_s: percentile(&samples, 50.0),
+            p95_s: percentile(&samples, 95.0),
+            std_s: std_dev(&samples),
+            samples: samples.len(),
+        };
+        println!("{}", stats.row());
+        stats
+    }
+
+    /// Time `f` which performs `n` inner operations; reports per-op time.
+    pub fn run_n(&self, name: &str, n: usize, mut f: impl FnMut()) -> Stats {
+        let mut s = self.run(name, &mut f);
+        s.mean_s /= n as f64;
+        s.p50_s /= n as f64;
+        s.p95_s /= n as f64;
+        s.std_s /= n as f64;
+        s
+    }
+}
+
+impl Stats {
+    /// Human row: name, mean, p50, p95.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<48} mean {:>10}  p50 {:>10}  p95 {:>10}  (n={})",
+            self.name,
+            fmt_time(self.mean_s),
+            fmt_time(self.p50_s),
+            fmt_time(self.p95_s),
+            self.samples
+        )
+    }
+}
+
+/// Adaptive time unit formatting.
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+/// Print a table header for a bench group.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_collects_samples() {
+        let b = Bench {
+            warmup_iters: 1,
+            sample_iters: 4,
+        };
+        let mut count = 0;
+        let s = b.run("noop", || count += 1);
+        assert_eq!(count, 5);
+        assert_eq!(s.samples, 4);
+        assert!(s.mean_s >= 0.0);
+        assert!(s.p95_s >= s.p50_s - 1e-12);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2.5e-9).ends_with("ns"));
+        assert!(fmt_time(2.5e-5).ends_with("µs"));
+        assert!(fmt_time(2.5e-2).ends_with("ms"));
+        assert!(fmt_time(2.5).ends_with('s'));
+    }
+}

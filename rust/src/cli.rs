@@ -1,0 +1,143 @@
+//! Minimal CLI argument parser (no `clap` in the vendored set).
+//!
+//! Grammar: `adapprox [global flags] <subcommand> [flags] [positionals]`.
+//! Flags are `--key value` or `--key` (boolean); `-v`/`-q` adjust log level.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positionals: Vec<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+}
+
+/// Flags that take no value.
+const BOOL_FLAGS: &[&str] = &[
+    "help", "quick", "full", "no-clip", "cos-guidance", "native", "v", "vv",
+    "q",
+];
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                if BOOL_FLAGS.contains(&name) {
+                    a.bools.push(name.to_string());
+                } else {
+                    i += 1;
+                    let val = argv.get(i).ok_or_else(|| {
+                        anyhow!("flag --{name} expects a value")
+                    })?;
+                    a.flags.insert(name.to_string(), val.clone());
+                }
+            } else if let Some(short) = tok.strip_prefix('-') {
+                if !BOOL_FLAGS.contains(&short) {
+                    bail!("unknown short flag -{short}");
+                }
+                a.bools.push(short.to_string());
+            } else if a.subcommand.is_empty() {
+                a.subcommand = tok.clone();
+            } else {
+                a.positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(a)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got {v}")),
+        }
+    }
+
+    pub fn f32_or(&self, name: &str, default: f32) -> Result<f32> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a float, got {v}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a u64, got {v}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = Args::parse(&argv(
+            "train --config nano --steps 100 --quick pos1",
+        ))
+        .unwrap();
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.flag("config"), Some("nano"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert!(a.has("quick"));
+        assert_eq!(a.positionals, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&argv("memory")).unwrap();
+        assert_eq!(a.usize_or("steps", 7).unwrap(), 7);
+        assert_eq!(a.get_or("config", "nano"), "nano");
+        assert!(!a.has("quick"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&argv("train --steps")).is_err());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = Args::parse(&argv("train --steps abc")).unwrap();
+        assert!(a.usize_or("steps", 1).is_err());
+    }
+
+    #[test]
+    fn short_flags() {
+        let a = Args::parse(&argv("-v repro fig1")).unwrap();
+        assert!(a.has("v"));
+        assert_eq!(a.subcommand, "repro");
+        assert_eq!(a.positionals, vec!["fig1"]);
+    }
+}

@@ -1,0 +1,192 @@
+//! Checkpointing: versioned binary format for parameters + run metadata.
+//!
+//! Layout: magic "ADPX" + u32 version + u64 json-header length + JSON header
+//! (config name, step, optimizer name, param shapes) + raw little-endian f32
+//! payloads in manifest order. Optimizer *moments* are deliberately not
+//! serialized: every experiment in the paper (and Table 3's fine-tuning
+//! protocol) re-initializes optimizer state at phase boundaries, and the
+//! paper's own memory claim is that second-moment state is cheaply
+//! reconstructible from factors.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::Tensor;
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 4] = b"ADPX";
+const VERSION: u32 = 1;
+
+/// Checkpoint metadata + parameters.
+pub struct Checkpoint {
+    pub config: String,
+    pub step: usize,
+    pub optimizer: String,
+    pub params: Vec<Tensor>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let mut f = std::fs::File::create(&path)
+            .with_context(|| format!("creating {:?}", path.as_ref()))?;
+        let shapes: Vec<Json> = self
+            .params
+            .iter()
+            .map(|t| {
+                Json::Arr(
+                    t.shape.iter().map(|&d| Json::num(d as f64)).collect(),
+                )
+            })
+            .collect();
+        let header = Json::obj(vec![
+            ("config", Json::str(&self.config)),
+            ("step", Json::num(self.step as f64)),
+            ("optimizer", Json::str(&self.optimizer)),
+            ("shapes", Json::Arr(shapes)),
+        ])
+        .to_string();
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for t in &self.params {
+            let data = t.as_f32()?;
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(
+                    data.as_ptr() as *const u8,
+                    data.len() * 4,
+                )
+            };
+            f.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let mut f = std::fs::File::open(&path)
+            .with_context(|| format!("opening {:?}", path.as_ref()))?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not an adapprox checkpoint");
+        }
+        let mut v4 = [0u8; 4];
+        f.read_exact(&mut v4)?;
+        let version = u32::from_le_bytes(v4);
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let mut l8 = [0u8; 8];
+        f.read_exact(&mut l8)?;
+        let hlen = u64::from_le_bytes(l8) as usize;
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = Json::parse(std::str::from_utf8(&hbuf)?)
+            .map_err(|e| anyhow!("checkpoint header: {e}"))?;
+        let config = header
+            .get("config")
+            .and_then(|j| j.as_str())
+            .ok_or_else(|| anyhow!("header missing config"))?
+            .to_string();
+        let step = header
+            .get("step")
+            .and_then(|j| j.as_usize())
+            .ok_or_else(|| anyhow!("header missing step"))?;
+        let optimizer = header
+            .get("optimizer")
+            .and_then(|j| j.as_str())
+            .unwrap_or("unknown")
+            .to_string();
+        let shapes = header
+            .get("shapes")
+            .and_then(|j| j.as_arr())
+            .ok_or_else(|| anyhow!("header missing shapes"))?;
+        let mut params = Vec::with_capacity(shapes.len());
+        for s in shapes {
+            let shape: Vec<usize> = s
+                .as_arr()
+                .ok_or_else(|| anyhow!("bad shape"))?
+                .iter()
+                .map(|d| d.as_usize().unwrap_or(0))
+                .collect();
+            let n: usize = shape.iter().product();
+            let mut buf = vec![0u8; n * 4];
+            f.read_exact(&mut buf)?;
+            let mut data = vec![0.0f32; n];
+            for (i, ch) in buf.chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+            }
+            params.push(Tensor::f32(shape, data));
+        }
+        Ok(Checkpoint {
+            config,
+            step,
+            optimizer,
+            params,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir()
+            .join(format!("adapprox_ckpt_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(1);
+        let ck = Checkpoint {
+            config: "nano".into(),
+            step: 42,
+            optimizer: "adapprox(xla)".into(),
+            params: vec![
+                Tensor::f32(vec![4, 3], rng.normal_vec_f32(12)),
+                Tensor::f32(vec![7], rng.normal_vec_f32(7)),
+            ],
+        };
+        let p = tmp("rt");
+        ck.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back.config, "nano");
+        assert_eq!(back.step, 42);
+        assert_eq!(back.params.len(), 2);
+        assert_eq!(back.params[0], ck.params[0]);
+        assert_eq!(back.params[1], ck.params[1]);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmp("bad");
+        std::fs::write(&p, b"not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let mut rng = Rng::new(2);
+        let ck = Checkpoint {
+            config: "x".into(),
+            step: 1,
+            optimizer: "o".into(),
+            params: vec![Tensor::f32(vec![64], rng.normal_vec_f32(64))],
+        };
+        let p = tmp("trunc");
+        ck.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 10]).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

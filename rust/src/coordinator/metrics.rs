@@ -1,0 +1,176 @@
+//! Metrics logging: CSV (figure series) + JSONL (structured events).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Append-only CSV writer with a fixed header.
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<CsvWriter> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let f = File::create(&path)
+            .with_context(|| format!("creating {:?}", path.as_ref()))?;
+        let mut w = BufWriter::new(f);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(CsvWriter {
+            w,
+            cols: header.len(),
+        })
+    }
+
+    pub fn row(&mut self, values: &[f64]) -> Result<()> {
+        assert_eq!(values.len(), self.cols, "csv row width");
+        let line: Vec<String> = values.iter().map(|v| format!("{v}")).collect();
+        writeln!(self.w, "{}", line.join(","))?;
+        Ok(())
+    }
+
+    pub fn row_mixed(&mut self, values: &[String]) -> Result<()> {
+        assert_eq!(values.len(), self.cols, "csv row width");
+        writeln!(self.w, "{}", values.join(","))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// JSONL event stream (one Json object per line).
+pub struct JsonlWriter {
+    w: BufWriter<File>,
+}
+
+impl JsonlWriter {
+    pub fn create(path: impl AsRef<Path>) -> Result<JsonlWriter> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let f = File::create(&path)
+            .with_context(|| format!("creating {:?}", path.as_ref()))?;
+        Ok(JsonlWriter {
+            w: BufWriter::new(f),
+        })
+    }
+
+    pub fn event(&mut self, j: &Json) -> Result<()> {
+        writeln!(self.w, "{}", j.to_string())?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+/// Running loss statistics (smoothed reporting).
+#[derive(Clone, Debug, Default)]
+pub struct LossTracker {
+    pub count: u64,
+    pub sum: f64,
+    ema: Option<f64>,
+}
+
+impl LossTracker {
+    pub fn push(&mut self, loss: f64) {
+        self.count += 1;
+        self.sum += loss;
+        self.ema = Some(match self.ema {
+            None => loss,
+            Some(e) => 0.95 * e + 0.05 * loss,
+        });
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn smoothed(&self) -> f64 {
+        self.ema.unwrap_or(0.0)
+    }
+}
+
+/// Perplexity from a nats loss (what Fig. 3's bottom row plots).
+pub fn perplexity(loss_nats: f64) -> f64 {
+    loss_nats.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("adapprox_test_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let p = tmp("csv");
+        {
+            let mut w = CsvWriter::create(&p, &["step", "loss"]).unwrap();
+            w.row(&[1.0, 2.5]).unwrap();
+            w.row(&[2.0, 2.25]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("step,loss\n"));
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    #[should_panic]
+    fn csv_wrong_width_panics() {
+        let p = tmp("csv_bad");
+        let mut w = CsvWriter::create(&p, &["a", "b"]).unwrap();
+        let _ = w.row(&[1.0]);
+    }
+
+    #[test]
+    fn jsonl_lines_parse_back() {
+        let p = tmp("jsonl");
+        {
+            let mut w = JsonlWriter::create(&p).unwrap();
+            w.event(&Json::obj(vec![("step", Json::num(1.0))])).unwrap();
+            w.event(&Json::obj(vec![("step", Json::num(2.0))])).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&p).unwrap();
+        for line in text.lines() {
+            assert!(Json::parse(line).is_ok());
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn loss_tracker_stats() {
+        let mut t = LossTracker::default();
+        t.push(4.0);
+        t.push(2.0);
+        assert_eq!(t.mean(), 3.0);
+        assert!(t.smoothed() > 2.0 && t.smoothed() < 4.0);
+    }
+
+    #[test]
+    fn ppl() {
+        assert!((perplexity(0.0) - 1.0).abs() < 1e-12);
+        assert!((perplexity((512f64).ln()) - 512.0).abs() < 1e-6);
+    }
+}

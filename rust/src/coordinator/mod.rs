@@ -1,0 +1,18 @@
+//! Layer-3 coordinator: everything that orchestrates training around the
+//! AOT-compiled programs — the trainer loop, LR schedule, data-parallel
+//! replicas + all-reduce, checkpointing, metrics, and the Table-2 memory
+//! accounting.
+
+pub mod checkpoint;
+pub mod memory;
+pub mod metrics;
+pub mod replicas;
+pub mod schedule;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use memory::{memory_table, state_bytes, MemoryRow, RankPolicy};
+pub use metrics::{perplexity, CsvWriter, JsonlWriter, LossTracker};
+pub use replicas::{allreduce_mean, mean_loss};
+pub use schedule::LrSchedule;
+pub use trainer::{HistoryRow, TrainOptions, Trainer, CORPUS_SEED};

@@ -1,0 +1,121 @@
+//! Data-parallel replica simulation + gradient all-reduce.
+//!
+//! The paper trains on 8 V100s with Megatron data parallelism. On this
+//! single-core CPU testbed we keep the *coordinator code path* identical —
+//! shard the stream, run `train_step` once per replica on its own shard,
+//! average gradients, apply one optimizer step — with replicas multiplexed
+//! on the host thread (PJRT executables are not Send, and with one core
+//! true thread parallelism buys nothing; the arithmetic is exactly the
+//! same). See DESIGN.md §4.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Tensor;
+
+/// Average gradients across replicas (all-reduce mean).
+///
+/// `per_replica[r]` is replica r's gradient list in manifest order.
+pub fn allreduce_mean(per_replica: &[Vec<Tensor>]) -> Result<Vec<Tensor>> {
+    if per_replica.is_empty() {
+        bail!("no replicas");
+    }
+    let n_params = per_replica[0].len();
+    for r in per_replica {
+        if r.len() != n_params {
+            bail!("replica gradient count mismatch");
+        }
+    }
+    let scale = 1.0 / per_replica.len() as f32;
+    let mut out = Vec::with_capacity(n_params);
+    for i in 0..n_params {
+        let shape = per_replica[0][i].shape.clone();
+        let mut acc = per_replica[0][i].as_f32()?.to_vec();
+        for r in &per_replica[1..] {
+            let g = r[i].as_f32()?;
+            if g.len() != acc.len() {
+                bail!("replica gradient shape mismatch at param {i}");
+            }
+            for (a, &b) in acc.iter_mut().zip(g) {
+                *a += b;
+            }
+        }
+        for a in acc.iter_mut() {
+            *a *= scale;
+        }
+        out.push(Tensor::f32(shape, acc));
+    }
+    Ok(out)
+}
+
+/// Average a set of scalar losses.
+pub fn mean_loss(losses: &[f32]) -> f32 {
+    if losses.is_empty() {
+        0.0
+    } else {
+        losses.iter().sum::<f32>() / losses.len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mean_of_two() {
+        let a = vec![Tensor::f32(vec![2], vec![1.0, 3.0])];
+        let b = vec![Tensor::f32(vec![2], vec![3.0, 5.0])];
+        let avg = allreduce_mean(&[a, b]).unwrap();
+        assert_eq!(avg[0].as_f32().unwrap(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn single_replica_identity() {
+        let a = vec![Tensor::f32(vec![3], vec![1.0, 2.0, 3.0])];
+        let avg = allreduce_mean(&[a.clone()]).unwrap();
+        assert_eq!(avg[0], a[0]);
+    }
+
+    #[test]
+    fn linearity_property() {
+        // allreduce(k*g) == k * allreduce(g)
+        forall(8, |rng| {
+            let n = 1 + rng.below(16) as usize;
+            let reps = 2 + rng.below(4) as usize;
+            let gs: Vec<Vec<Tensor>> = (0..reps)
+                .map(|_| vec![Tensor::f32(vec![n], {
+                    let mut r2 = Rng::new(rng.next_u64());
+                    r2.normal_vec_f32(n)
+                })])
+                .collect();
+            let scaled: Vec<Vec<Tensor>> = gs
+                .iter()
+                .map(|r| {
+                    vec![Tensor::f32(
+                        vec![n],
+                        r[0].as_f32().unwrap().iter().map(|x| 2.0 * x).collect(),
+                    )]
+                })
+                .collect();
+            let a = allreduce_mean(&gs).unwrap();
+            let b = allreduce_mean(&scaled).unwrap();
+            for (x, y) in a[0].as_f32().unwrap().iter().zip(b[0].as_f32().unwrap()) {
+                assert!((2.0 * x - y).abs() < 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn mismatched_counts_rejected() {
+        let a = vec![Tensor::f32(vec![1], vec![1.0])];
+        let b: Vec<Tensor> = vec![];
+        assert!(allreduce_mean(&[a, b]).is_err());
+    }
+
+    #[test]
+    fn loss_mean() {
+        assert_eq!(mean_loss(&[1.0, 2.0, 3.0]), 2.0);
+        assert_eq!(mean_loss(&[]), 0.0);
+    }
+}

@@ -1,0 +1,91 @@
+//! Learning-rate schedule: linear warmup + cosine decay (paper §4.1 /
+//! Megatron-LM convention).
+
+/// Warmup-then-cosine schedule.
+#[derive(Clone, Debug)]
+pub struct LrSchedule {
+    pub peak_lr: f32,
+    pub min_lr: f32,
+    pub warmup_steps: usize,
+    pub total_steps: usize,
+}
+
+impl LrSchedule {
+    /// Paper settings for GPT-2 117M: peak 3e-4, min 5e-5, 1K warmup, 100K
+    /// total (scaled down by the caller for small runs).
+    pub fn new(peak_lr: f32, min_lr: f32, warmup: usize, total: usize) -> Self {
+        assert!(peak_lr >= min_lr && min_lr >= 0.0);
+        LrSchedule {
+            peak_lr,
+            min_lr,
+            warmup_steps: warmup.max(1),
+            total_steps: total.max(1),
+        }
+    }
+
+    /// LR at 1-based step t.
+    pub fn lr(&self, t: usize) -> f32 {
+        if t <= self.warmup_steps {
+            return self.peak_lr * t as f32 / self.warmup_steps as f32;
+        }
+        if t >= self.total_steps {
+            return self.min_lr;
+        }
+        let progress = (t - self.warmup_steps) as f64
+            / (self.total_steps - self.warmup_steps) as f64;
+        let cos = 0.5 * (1.0 + (std::f64::consts::PI * progress).cos());
+        self.min_lr + ((self.peak_lr - self.min_lr) as f64 * cos) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+
+    #[test]
+    fn warmup_is_linear() {
+        let s = LrSchedule::new(3e-4, 5e-5, 100, 1000);
+        assert!((s.lr(50) - 1.5e-4).abs() < 1e-9);
+        assert!((s.lr(100) - 3e-4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decays_to_min() {
+        let s = LrSchedule::new(3e-4, 5e-5, 100, 1000);
+        assert!((s.lr(1000) - 5e-5).abs() < 1e-9);
+        assert!((s.lr(5000) - 5e-5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn monotone_decay_after_warmup() {
+        let s = LrSchedule::new(3e-4, 5e-5, 10, 500);
+        let mut prev = s.lr(10);
+        for t in 11..=500 {
+            let cur = s.lr(t);
+            assert!(cur <= prev + 1e-12, "t={t}");
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn bounded_everywhere() {
+        forall(16, |rng| {
+            let warm = 1 + rng.below(50) as usize;
+            let total = warm + 1 + rng.below(500) as usize;
+            let s = LrSchedule::new(1e-3, 1e-5, warm, total);
+            for t in 1..=total + 10 {
+                let lr = s.lr(t);
+                assert!(lr >= 1e-5 - 1e-12 && lr <= 1e-3 + 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn midpoint_is_halfway_cosine() {
+        let s = LrSchedule::new(2e-4, 0.0, 0, 1000);
+        // t=0 handled; halfway through, cosine = 0.5
+        let mid = s.lr(500);
+        assert!((mid - 1e-4).abs() < 2e-6, "{mid}");
+    }
+}

@@ -1,0 +1,388 @@
+//! The training coordinator: the Layer-3 orchestrator tying together data,
+//! the AOT train/eval programs, the optimizer backends, the LR schedule,
+//! replicas and metrics.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::metrics::{perplexity, CsvWriter, LossTracker};
+use crate::coordinator::replicas::{allreduce_mean, mean_loss};
+use crate::coordinator::schedule::LrSchedule;
+use crate::data::{Batch, BatchIterator, BigramCorpus, Split, Task};
+use crate::info;
+use crate::model;
+use crate::optim::{Hyper, Optimizer, XlaOptimizer};
+use crate::runtime::{ConfigSpec, Runtime, Tensor};
+use crate::util::rng::Rng;
+
+/// The pretraining corpus seed — fixed so every optimizer comparison sees
+/// the same synthetic language.
+pub const CORPUS_SEED: u64 = 0xC0DE;
+
+/// Run-level options (schedule, duration, parallelism, logging).
+#[derive(Clone, Debug)]
+pub struct TrainOptions {
+    pub steps: usize,
+    pub warmup: usize,
+    pub peak_lr: f32,
+    pub min_lr: f32,
+    /// data-parallel replica count (grad all-reduce across shards)
+    pub replicas: usize,
+    /// micro-batches accumulated per optimizer step (per replica)
+    pub grad_accum: usize,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub seed: u64,
+    /// optional CSV path for the loss curve (step,lr,train,val,ppl,xi,rank)
+    pub log_csv: Option<PathBuf>,
+    /// log every N steps
+    pub log_every: usize,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions {
+            steps: 100,
+            warmup: 10,
+            peak_lr: 3e-4,
+            min_lr: 5e-5,
+            replicas: 1,
+            grad_accum: 1,
+            eval_every: 20,
+            eval_batches: 2,
+            seed: 0xADA,
+            log_csv: None,
+            log_every: 10,
+        }
+    }
+}
+
+/// One row of training history.
+#[derive(Clone, Debug)]
+pub struct HistoryRow {
+    pub step: usize,
+    pub lr: f32,
+    pub train_loss: f64,
+    pub val_loss: Option<f64>,
+    pub mean_xi: f64,
+    pub mean_rank: f64,
+    pub state_mb: f64,
+}
+
+/// The coordinator.
+pub struct Trainer {
+    pub rt: Rc<Runtime>,
+    pub cfg: ConfigSpec,
+    pub params: Vec<Tensor>,
+    pub opt: Box<dyn Optimizer>,
+    pub schedule: LrSchedule,
+    pub opts: TrainOptions,
+    corpus: BigramCorpus,
+    step: usize,
+}
+
+impl Trainer {
+    /// Build a trainer over a manifest config with an HLO-backed optimizer.
+    pub fn new(
+        rt: Rc<Runtime>,
+        config_name: &str,
+        hyper: Hyper,
+        opts: TrainOptions,
+    ) -> Result<Trainer> {
+        let cfg = rt.manifest.config(config_name)?.clone();
+        if cfg.inventory_only {
+            return Err(anyhow!("config {config_name} is inventory-only"));
+        }
+        let mut rng = Rng::new(opts.seed);
+        let params = model::init_params(&cfg, &mut rng);
+        let opt = Box::new(XlaOptimizer::new(
+            rt.clone(),
+            cfg.params.clone(),
+            hyper,
+            opts.seed ^ 0x09,
+        )?);
+        let schedule =
+            LrSchedule::new(opts.peak_lr, opts.min_lr, opts.warmup, opts.steps);
+        // The synthetic bigram language: vocab-sized, fixed by seed so every
+        // optimizer comparison trains on the *same* task.
+        let corpus = BigramCorpus::new(cfg.vocab, 4, CORPUS_SEED);
+        Ok(Trainer {
+            rt,
+            cfg,
+            params,
+            opt,
+            schedule,
+            opts,
+            corpus,
+            step: 0,
+        })
+    }
+
+    /// Replace the optimizer (used by ablation harnesses).
+    pub fn with_optimizer(mut self, opt: Box<dyn Optimizer>) -> Trainer {
+        self.opt = opt;
+        self
+    }
+
+    fn batch_tensors(&self, b: &Batch) -> [Tensor; 3] {
+        let shape = vec![b.batch, b.seq_len];
+        [
+            Tensor::i32(shape.clone(), b.tokens.clone()),
+            Tensor::i32(shape.clone(), b.targets.clone()),
+            Tensor::f32(shape, b.mask.clone()),
+        ]
+    }
+
+    /// Execute train_step: returns (loss, grads).
+    ///
+    /// Parameters are passed by reference into the runtime (no per-step
+    /// model copy — EXPERIMENTS.md §Perf).
+    pub fn forward_backward(&self, b: &Batch) -> Result<(f32, Vec<Tensor>)> {
+        let [tokens, targets, mask] = self.batch_tensors(b);
+        let mut args: Vec<&Tensor> = self.params.iter().collect();
+        args.push(&tokens);
+        args.push(&targets);
+        args.push(&mask);
+        let mut out =
+            self.rt.exec_ref(&model::train_step_name(&self.cfg), &args)?;
+        let grads = out.split_off(1);
+        let loss = out[0].scalar_f32()?;
+        Ok((loss, grads))
+    }
+
+    /// Loss on one batch via eval_step (no gradients).
+    pub fn eval_batch(&self, b: &Batch) -> Result<f32> {
+        let [tokens, targets, mask] = self.batch_tensors(b);
+        let mut args: Vec<&Tensor> = self.params.iter().collect();
+        args.push(&tokens);
+        args.push(&targets);
+        args.push(&mask);
+        let out = self.rt.exec_ref(&model::eval_step_name(&self.cfg), &args)?;
+        out[0].scalar_f32().map_err(Into::into)
+    }
+
+    /// Mean validation loss over `n` held-out batches.
+    pub fn evaluate(&self, n: usize) -> Result<f64> {
+        let sampler = |len: usize, rng: &mut Rng| self.corpus.sample(len, rng);
+        let mut it = BatchIterator::new(
+            &sampler,
+            self.cfg.batch,
+            self.cfg.seq_len,
+            self.opts.seed,
+            Split::Valid,
+            (0, 1),
+        );
+        let mut tot = 0.0f64;
+        for _ in 0..n.max(1) {
+            tot += self.eval_batch(&it.next_batch())? as f64;
+        }
+        Ok(tot / n.max(1) as f64)
+    }
+
+    /// One full optimizer step: replicas × grad-accum micro-batches,
+    /// all-reduce, optimizer update. Returns (train loss, step info).
+    pub fn train_one_step(
+        &mut self,
+        its: &mut [BatchIterator],
+    ) -> Result<(f32, crate::optim::StepInfo)> {
+        self.step += 1;
+        let lr = self.schedule.lr(self.step);
+        let mut rep_grads = Vec::with_capacity(its.len());
+        let mut losses = Vec::with_capacity(its.len());
+        for it in its.iter_mut() {
+            // gradient accumulation: mean over micro-batches
+            let mut micro_grads = Vec::with_capacity(self.opts.grad_accum);
+            let mut micro_losses = vec![];
+            for _ in 0..self.opts.grad_accum.max(1) {
+                let b = it.next_batch();
+                let (loss, grads) = self.forward_backward(&b)?;
+                micro_losses.push(loss);
+                micro_grads.push(grads);
+            }
+            rep_grads.push(allreduce_mean(&micro_grads)?);
+            losses.push(mean_loss(&micro_losses));
+        }
+        let grads = allreduce_mean(&rep_grads)?;
+        let info = self.opt.step(&mut self.params, &grads, lr)?;
+        Ok((mean_loss(&losses), info))
+    }
+
+    /// Full training run; returns the history (Fig. 3/4/6 series).
+    pub fn run(&mut self) -> Result<Vec<HistoryRow>> {
+        let corpus = std::mem::replace(
+            &mut self.corpus,
+            BigramCorpus::new(self.cfg.vocab, 4, CORPUS_SEED),
+        );
+        let result = self.run_inner(&corpus);
+        self.corpus = corpus;
+        result
+    }
+
+    fn run_inner(&mut self, corpus: &BigramCorpus) -> Result<Vec<HistoryRow>> {
+        let sampler = |len: usize, rng: &mut Rng| corpus.sample(len, rng);
+        let n_rep = self.opts.replicas.max(1);
+        let mut its: Vec<BatchIterator> = (0..n_rep)
+            .map(|r| {
+                BatchIterator::new(
+                    &sampler,
+                    self.cfg.batch,
+                    self.cfg.seq_len,
+                    self.opts.seed,
+                    Split::Train,
+                    (r, n_rep),
+                )
+            })
+            .collect();
+        let mut csv = match &self.opts.log_csv {
+            Some(p) => Some(CsvWriter::create(
+                p,
+                &["step", "lr", "train_loss", "val_loss", "val_ppl",
+                  "mean_xi", "mean_rank", "state_mb"],
+            )?),
+            None => None,
+        };
+        let mut history = Vec::new();
+        let mut tracker = LossTracker::default();
+        info!(
+            "training {} ({} params) with {} for {} steps, floor H={:.3}",
+            self.cfg.name,
+            self.cfg.param_count,
+            self.opt.name(),
+            self.opts.steps,
+            corpus.conditional_entropy(),
+        );
+        for t in 1..=self.opts.steps {
+            let (loss, sinfo) = self.train_one_step(&mut its)?;
+            tracker.push(loss as f64);
+            let do_eval = self.opts.eval_every > 0
+                && (t % self.opts.eval_every == 0 || t == self.opts.steps);
+            let val = if do_eval {
+                Some(self.evaluate(self.opts.eval_batches)?)
+            } else {
+                None
+            };
+            let row = HistoryRow {
+                step: t,
+                lr: self.schedule.lr(t),
+                train_loss: loss as f64,
+                val_loss: val,
+                mean_xi: sinfo.mean_xi,
+                mean_rank: sinfo.mean_rank,
+                state_mb: sinfo.state_bytes as f64 / (1024.0 * 1024.0),
+            };
+            if let Some(csv) = csv.as_mut() {
+                csv.row(&[
+                    t as f64,
+                    row.lr as f64,
+                    row.train_loss,
+                    row.val_loss.unwrap_or(f64::NAN),
+                    row.val_loss.map(perplexity).unwrap_or(f64::NAN),
+                    row.mean_xi,
+                    row.mean_rank,
+                    row.state_mb,
+                ])?;
+            }
+            if t % self.opts.log_every == 0 || t == 1 || t == self.opts.steps {
+                info!(
+                    "step {t:>5} lr {:.2e} loss {:.4} (ema {:.4}) val {} xi {:.4} rank {:.1} state {:.2}MB",
+                    row.lr,
+                    row.train_loss,
+                    tracker.smoothed(),
+                    row.val_loss.map_or("-".into(), |v| format!("{v:.4}")),
+                    row.mean_xi,
+                    row.mean_rank,
+                    row.state_mb,
+                );
+            }
+            history.push(row);
+        }
+        if let Some(csv) = csv.as_mut() {
+            csv.flush()?;
+        }
+        Ok(history)
+    }
+
+    /// Fine-tune on a downstream task (Table 3 protocol): LM training with
+    /// the loss masked to the label position; returns eval accuracy.
+    pub fn finetune_task(
+        &mut self,
+        task: &Task,
+        steps: usize,
+        lr: f32,
+        eval_examples: usize,
+    ) -> Result<f64> {
+        let mut rng = Rng::new(self.opts.seed ^ 0xF17E);
+        self.schedule = LrSchedule::new(lr, lr * 0.1, steps / 10 + 1, steps);
+        for _ in 0..steps {
+            self.step += 1;
+            let step_lr = self.schedule.lr(self.step.min(steps));
+            let (tokens, targets, mask, _labels) =
+                task.batch(self.cfg.batch, &mut rng);
+            let shape = vec![self.cfg.batch, self.cfg.seq_len];
+            let tok_t = Tensor::i32(shape.clone(), tokens);
+            let tgt_t = Tensor::i32(shape.clone(), targets);
+            let mask_t = Tensor::f32(shape, mask);
+            let mut args: Vec<&Tensor> = self.params.iter().collect();
+            args.push(&tok_t);
+            args.push(&tgt_t);
+            args.push(&mask_t);
+            let mut out =
+                self.rt.exec_ref(&model::train_step_name(&self.cfg), &args)?;
+            let grads = out.split_off(1);
+            self.opt.step(&mut self.params, &grads, step_lr)?;
+        }
+        self.task_accuracy(task, eval_examples, &mut rng)
+    }
+
+    /// Accuracy = argmax over the task's label tokens at the label position.
+    pub fn task_accuracy(
+        &self,
+        task: &Task,
+        n_examples: usize,
+        rng: &mut Rng,
+    ) -> Result<f64> {
+        let label_tokens = task.label_tokens();
+        let (b, s, v) = (self.cfg.batch, self.cfg.seq_len, self.cfg.vocab);
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        while total < n_examples {
+            let (tokens, _targets, _mask, labels) = task.batch(b, rng);
+            let tok_t = Tensor::i32(vec![b, s], tokens);
+            let mut args: Vec<&Tensor> = self.params.iter().collect();
+            args.push(&tok_t);
+            let out = self
+                .rt
+                .exec_ref(&model::predict_step_name(&self.cfg), &args)?;
+            let logits = out[0].as_f32()?;
+            for row in 0..b {
+                // position s-2 predicts the label at s-1
+                let base = (row * s + (s - 2)) * v;
+                let best = label_tokens
+                    .iter()
+                    .copied()
+                    .max_by(|&a, &bb| {
+                        logits[base + a as usize]
+                            .partial_cmp(&logits[base + bb as usize])
+                            .unwrap()
+                    })
+                    .unwrap();
+                if best == labels[row] {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f64 / total as f64)
+    }
+
+    /// Reference to the fixed pretraining corpus.
+    pub fn corpus(&self) -> &BigramCorpus {
+        &self.corpus
+    }
+
+    pub fn step_count(&self) -> usize {
+        self.step
+    }
+}

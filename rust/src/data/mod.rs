@@ -1,0 +1,17 @@
+//! Data pipeline substrate: synthetic corpora, downstream-task suites,
+//! shardable batch iterators.
+//!
+//! The paper pretrains on The Pile with SentencePiece; per DESIGN.md §4 we
+//! substitute (a) a Zipf-marginal bigram language whose structure a
+//! transformer can actually learn (so Fig. 3/4/6 loss curves are
+//! meaningful), (b) an English-like template corpus fed through the in-repo
+//! byte-BPE tokenizer for the end-to-end example, and (c) five synthetic
+//! sequence-classification tasks standing in for SQuAD/CoLA/MRPC/SST-2/MNLI.
+
+mod corpus;
+mod loader;
+mod tasks;
+
+pub use corpus::{BigramCorpus, TemplateCorpus};
+pub use loader::{Batch, BatchIterator, Split};
+pub use tasks::{Task, TaskExample, TaskKind, task_suite};

@@ -1,0 +1,353 @@
+//! Synthetic downstream-task suite (Table 3 / Fig. 5 substitution).
+//!
+//! Five sequence-classification tasks standing in for the paper's
+//! SQuAD/CoLA/MRPC/SST-2/MNLI: each example is a token sequence whose final
+//! position must predict a *label token*; fine-tuning is ordinary LM
+//! training with the loss mask restricted to that position, and accuracy is
+//! argmax over the task's label-token subset. This preserves the protocol
+//! the paper measures (pretrain → per-task fine-tune → accuracy) while
+//! staying generable at any vocab size.
+
+use crate::util::rng::Rng;
+
+/// Task family, with its paper analogue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    /// SQuAD-like: retrieve the value paired with a queried key.
+    Retrieval,
+    /// CoLA-like: is the sequence grammatical (bigram-consistent)?
+    Acceptability,
+    /// MRPC-like: are the two halves permutations of each other?
+    Paraphrase,
+    /// SST-2-like: which token pool dominates the sequence?
+    Sentiment,
+    /// MNLI-like: entail / contradict / neutral between two spans.
+    Inference,
+}
+
+impl TaskKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::Retrieval => "retrieval(SQuAD)",
+            TaskKind::Acceptability => "acceptability(CoLA)",
+            TaskKind::Paraphrase => "paraphrase(MRPC)",
+            TaskKind::Sentiment => "sentiment(SST-2)",
+            TaskKind::Inference => "inference(MNLI-m)",
+        }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        match self {
+            TaskKind::Retrieval => 4,
+            TaskKind::Inference => 3,
+            _ => 2,
+        }
+    }
+}
+
+/// One classification example in LM form.
+#[derive(Clone, Debug)]
+pub struct TaskExample {
+    /// length == seq_len token sequence; the model reads tokens[..label_pos]
+    pub tokens: Vec<i32>,
+    /// position whose *target* is the label token (mask = 1 only here)
+    pub label_pos: usize,
+    /// the correct label token id
+    pub label: i32,
+}
+
+/// A task: generator + label-token inventory.
+pub struct Task {
+    pub kind: TaskKind,
+    vocab: usize,
+    seq_len: usize,
+    seed: u64,
+}
+
+/// The full five-task suite over a given (vocab, seq_len).
+pub fn task_suite(vocab: usize, seq_len: usize, seed: u64) -> Vec<Task> {
+    [
+        TaskKind::Retrieval,
+        TaskKind::Acceptability,
+        TaskKind::Paraphrase,
+        TaskKind::Sentiment,
+        TaskKind::Inference,
+    ]
+    .iter()
+    .map(|&kind| Task {
+        kind,
+        vocab,
+        seq_len,
+        seed,
+    })
+    .collect()
+}
+
+impl Task {
+    /// Label token ids: the top of the vocabulary, per class.
+    pub fn label_tokens(&self) -> Vec<i32> {
+        let n = self.kind.n_classes();
+        (0..n).map(|c| (self.vocab - 1 - c) as i32).collect()
+    }
+
+    /// Separator token id (just below the label tokens).
+    fn sep(&self) -> i32 {
+        (self.vocab - 1 - self.kind.n_classes()) as i32
+    }
+
+    /// Content-token half-pools for sentiment-style tasks.
+    fn pool(&self, which: usize, rng: &mut Rng) -> i32 {
+        // pools live in the lower vocab: [8, V/2) and [V/2, V-8)
+        let lo = 8 + (which * (self.vocab / 2 - 8)) as u64;
+        let width = (self.vocab / 2 - 8) as u64;
+        (lo + rng.below(width.max(1))) as i32
+    }
+
+    /// Generate one example. `rng` drives content; the task definition
+    /// (pairings, pools) derives from `self.seed` so train and eval share
+    /// the same underlying task.
+    pub fn example(&self, rng: &mut Rng) -> TaskExample {
+        let s = self.seq_len;
+        let labels = self.label_tokens();
+        let sep = self.sep();
+        let mut toks = vec![sep; s];
+        // the model must emit the label at the last position:
+        // tokens[..s-1] is the input context, target[s-2] is read at
+        // label_pos = s - 2 predicting position s-1... we place the label
+        // as the TARGET of the final input token, i.e. label_pos = s - 1
+        // in target space.
+        let body = s - 1;
+        let (filled, class) = match self.kind {
+            TaskKind::Sentiment => {
+                let mut counts = [0usize; 2];
+                let mut v = Vec::with_capacity(body);
+                for _ in 0..body {
+                    let which = rng.below(2) as usize;
+                    counts[which] += 1;
+                    v.push(self.pool(which, rng));
+                }
+                let class = if counts[0] >= counts[1] { 0 } else { 1 };
+                (v, class)
+            }
+            TaskKind::Retrieval => {
+                // layout: noise ... KEY VAL noise ... SEP KEY -> predict VAL
+                let n_keys = 8usize.min(self.vocab / 8);
+                let mut task_rng = Rng::new(self.seed ^ 0x5EED);
+                // fixed key->class map for the task
+                let key_base = 8;
+                let _ = &mut task_rng;
+                let key_idx = rng.below(n_keys as u64) as usize;
+                let key = (key_base + key_idx) as i32;
+                let class = {
+                    // class assigned per key, derived from task seed
+                    let mut kr = Rng::new(self.seed ^ (key_idx as u64) << 8);
+                    kr.below(self.kind.n_classes() as u64) as usize
+                };
+                let val = labels[class];
+                let mut v: Vec<i32> = (0..body)
+                    .map(|_| self.pool(rng.below(2) as usize, rng))
+                    .collect();
+                let kpos = 1 + rng.below((body as u64 / 2).max(1)) as usize;
+                v[kpos] = key;
+                v[kpos + 1] = val;
+                v[body - 2] = sep;
+                v[body - 1] = key;
+                (v, class)
+            }
+            TaskKind::Acceptability => {
+                // grammatical = ascending runs; shuffled = random
+                let class = rng.below(2) as usize;
+                let mut v = Vec::with_capacity(body);
+                if class == 0 {
+                    // "grammatical": short ascending runs
+                    let mut cur = 8 + rng.below((self.vocab / 2) as u64) as i32;
+                    for _ in 0..body {
+                        v.push(cur);
+                        cur += 1;
+                        if cur as usize >= self.vocab - 16 {
+                            cur = 8;
+                        }
+                        if rng.below(8) == 0 {
+                            cur = 8 + rng.below((self.vocab / 2) as u64) as i32;
+                        }
+                    }
+                } else {
+                    for _ in 0..body {
+                        v.push(8 + rng.below((self.vocab - 24) as u64) as i32);
+                    }
+                }
+                (v, class)
+            }
+            TaskKind::Paraphrase => {
+                let half = (body - 1) / 2;
+                let class = rng.below(2) as usize;
+                let first: Vec<i32> =
+                    (0..half).map(|_| self.pool(0, rng)).collect();
+                let mut second = if class == 0 {
+                    // paraphrase: same multiset, rotated
+                    let mut t = first.clone();
+                    t.rotate_left(1.max(half / 3));
+                    t
+                } else {
+                    (0..half).map(|_| self.pool(0, rng)).collect()
+                };
+                let mut v = first;
+                v.push(sep);
+                v.append(&mut second);
+                while v.len() < body {
+                    v.push(sep);
+                }
+                (v, class)
+            }
+            TaskKind::Inference => {
+                let half = (body - 1) / 2;
+                let class = rng.below(3) as usize;
+                let premise: Vec<i32> =
+                    (0..half).map(|_| self.pool(rng.below(2) as usize, rng)).collect();
+                let hypothesis: Vec<i32> = match class {
+                    0 => premise.iter().take(half).copied().collect(), // entail
+                    1 => premise.iter().map(|&t| {
+                        // contradict: disjoint tokens (shift into other half)
+                        let v = self.vocab as i32;
+                        8 + ((t + v / 2 - 8) % (v - 24))
+                    }).collect(),
+                    _ => premise
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &t)| if i % 2 == 0 { t } else {
+                            self.pool(rng.below(2) as usize, rng)
+                        })
+                        .collect(),
+                };
+                let mut v = premise;
+                v.push(sep);
+                v.extend(hypothesis);
+                while v.len() < body {
+                    v.push(sep);
+                }
+                (v, class)
+            }
+        };
+        toks[..body].copy_from_slice(&filled[..body]);
+        // final input token is SEP; its target is the label
+        toks[body] = labels[class];
+        TaskExample {
+            tokens: toks,
+            label_pos: body - 1 + 1, // target index s-1 predicts labels[class]
+            label: labels[class],
+        }
+    }
+
+    /// Batch of examples as LM tensors (tokens, targets, mask).
+    pub fn batch(&self, n: usize, rng: &mut Rng) -> (Vec<i32>, Vec<i32>, Vec<f32>, Vec<i32>) {
+        let s = self.seq_len;
+        let mut tokens = Vec::with_capacity(n * s);
+        let mut targets = Vec::with_capacity(n * s);
+        let mut mask = vec![0.0f32; n * s];
+        let mut labels = Vec::with_capacity(n);
+        for row in 0..n {
+            let ex = self.example(rng);
+            // input = tokens[..s], target row = tokens shifted left
+            tokens.extend_from_slice(&ex.tokens[..s]);
+            let mut tgt = ex.tokens[1..].to_vec();
+            tgt.push(ex.tokens[s - 1]);
+            targets.extend_from_slice(&tgt);
+            // loss only where the label is predicted: target index s-2
+            // (input position s-2 predicts tokens[s-1] == label)
+            mask[row * s + (s - 2)] = 1.0;
+            labels.push(ex.label);
+        }
+        (tokens, targets, mask, labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+
+    #[test]
+    fn suite_has_five_tasks() {
+        let suite = task_suite(512, 64, 1);
+        assert_eq!(suite.len(), 5);
+        let names: Vec<_> = suite.iter().map(|t| t.kind.name()).collect();
+        assert!(names.iter().any(|n| n.contains("SQuAD")));
+        assert!(names.iter().any(|n| n.contains("MNLI")));
+    }
+
+    #[test]
+    fn label_tokens_disjoint_from_content() {
+        for t in task_suite(512, 64, 3) {
+            let labels = t.label_tokens();
+            let mut rng = Rng::new(5);
+            for _ in 0..20 {
+                let ex = t.example(&mut rng);
+                // label tokens appear as labels...
+                assert!(labels.contains(&ex.label));
+                // ...and the content body avoids them except via layout
+                assert_eq!(ex.tokens.len(), 64);
+                assert!(ex.tokens.iter().all(|&x| (x as usize) < 512));
+            }
+        }
+    }
+
+    #[test]
+    fn batch_shapes_and_mask() {
+        forall(6, |rng| {
+            let t = &task_suite(256, 32, rng.next_u64())[rng.below(5) as usize];
+            let (toks, tgts, mask, labels) = t.batch(4, rng);
+            assert_eq!(toks.len(), 4 * 32);
+            assert_eq!(tgts.len(), 4 * 32);
+            assert_eq!(mask.iter().filter(|&&m| m == 1.0).count(), 4);
+            assert_eq!(labels.len(), 4);
+            // the masked target is the label
+            for row in 0..4 {
+                let pos = row * 32 + 30;
+                assert_eq!(mask[pos], 1.0);
+                assert_eq!(tgts[pos], labels[row]);
+            }
+        });
+    }
+
+    #[test]
+    fn classes_all_reachable() {
+        for t in task_suite(512, 64, 9) {
+            let mut rng = Rng::new(11);
+            let mut seen = std::collections::HashSet::new();
+            for _ in 0..200 {
+                seen.insert(t.example(&mut rng).label);
+            }
+            assert_eq!(seen.len(), t.kind.n_classes(), "{:?}", t.kind);
+        }
+    }
+
+    #[test]
+    fn retrieval_key_value_consistent() {
+        // same key must always map to the same class within a task seed
+        let t = &task_suite(512, 64, 13)[0];
+        let mut rng = Rng::new(1);
+        let mut map = std::collections::HashMap::new();
+        for _ in 0..100 {
+            let ex = t.example(&mut rng);
+            // find the queried key: last body token
+            let key = ex.tokens[62];
+            let prev = map.insert(key, ex.label);
+            if let Some(p) = prev {
+                assert_eq!(p, ex.label, "key {key} mapped to two labels");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_rng() {
+        let t = &task_suite(256, 32, 17)[3];
+        let mut r1 = Rng::new(2);
+        let mut r2 = Rng::new(2);
+        for _ in 0..10 {
+            let a = t.example(&mut r1);
+            let b = t.example(&mut r2);
+            assert_eq!(a.tokens, b.tokens);
+            assert_eq!(a.label, b.label);
+        }
+    }
+}

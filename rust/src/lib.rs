@@ -1,0 +1,34 @@
+//! # Adapprox
+//!
+//! Production-grade reproduction of *Adapprox: Adaptive Approximation in
+//! Adam Optimization via Randomized Low-Rank Matrices* (cs.LG 2024) as a
+//! three-layer Rust + JAX + Pallas training framework.
+//!
+//! - **Layer 3 (this crate)** — training coordinator: orchestration, the
+//!   AS-RSI adaptive-rank control plane, data-parallel replicas, state and
+//!   memory management, checkpoints, metrics, CLI.
+//! - **Layer 2** — JAX model/optimizer programs, AOT-lowered to HLO text at
+//!   build time (`python/compile`, `make artifacts`).
+//! - **Layer 1** — Pallas kernels for the optimizer hot spots (fused
+//!   second-moment reconstruct-accumulate, tiled S-RSI GEMMs, fused scaled
+//!   update).
+//!
+//! Python never runs on the training path: the binary loads
+//! `artifacts/*.hlo.txt` through the PJRT C API (`xla` crate) and owns all
+//! state, randomness and control flow.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod model;
+pub mod optim;
+pub mod repro;
+pub mod runtime;
+pub mod testing;
+pub mod tokenizer;
+pub mod util;

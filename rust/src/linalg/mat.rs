@@ -1,0 +1,277 @@
+//! Row-major f32 matrix with the products the optimizer stack needs.
+
+use crate::util::rng::Rng;
+
+/// Dense row-major f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.data[i * cols + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// Standard-normal entries from the given RNG.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal_f32(&mut m.data);
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            *self.at_mut(i, j) = v[i];
+        }
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// `self @ other` — ikj loop order for row-major locality.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul {}x{} @ {}x{}",
+                   self.rows, self.cols, other.rows, other.cols);
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (kk, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `self.T @ other` without materialising the transpose.
+    pub fn t_matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows);
+        let (k, m, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for kk in 0..k {
+            let arow = &self.data[kk * m..(kk + 1) * m];
+            let brow = &other.data[kk * n..(kk + 1) * n];
+            for i in 0..m {
+                let a = arow[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `self @ other.T` without materialising the transpose.
+    pub fn matmul_t(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols);
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &other.data[j * k..(j + 1) * k];
+                let mut s = 0.0f32;
+                for kk in 0..k {
+                    s += arow[kk] * brow[kk];
+                }
+                out.data[i * n + j] = s;
+            }
+        }
+        out
+    }
+
+    pub fn scale(&self, s: f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| x * s).collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a + b)
+                .collect(),
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a - b)
+                .collect(),
+        }
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Relative Frobenius reconstruction error ||A - B||_F / ||A||_F.
+    pub fn rel_error(&self, approx: &Mat) -> f64 {
+        self.sub(approx).frob_norm() / (self.frob_norm() + 1e-300)
+    }
+
+    /// Keep the first k columns.
+    pub fn take_cols(&self, k: usize) -> Mat {
+        assert!(k <= self.cols);
+        let mut out = Mat::zeros(self.rows, k);
+        for i in 0..self.rows {
+            out.data[i * k..(i + 1) * k]
+                .copy_from_slice(&self.data[i * self.cols..i * self.cols + k]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(5, 7, &mut rng);
+        assert_eq!(a.matmul(&Mat::eye(7)), a);
+        assert_eq!(Mat::eye(5).matmul(&a), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(4, 9, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit() {
+        forall(32, |rng| {
+            let (m, k, n) = (
+                1 + rng.below(8) as usize,
+                1 + rng.below(8) as usize,
+                1 + rng.below(8) as usize,
+            );
+            let a = Mat::randn(k, m, rng);
+            let b = Mat::randn(k, n, rng);
+            let got = a.t_matmul(&b);
+            let want = a.transpose().matmul(&b);
+            assert!(got.sub(&want).frob_norm() < 1e-4);
+        });
+    }
+
+    #[test]
+    fn matmul_t_matches_explicit() {
+        forall(32, |rng| {
+            let (m, k, n) = (
+                1 + rng.below(8) as usize,
+                1 + rng.below(8) as usize,
+                1 + rng.below(8) as usize,
+            );
+            let a = Mat::randn(m, k, rng);
+            let b = Mat::randn(n, k, rng);
+            let got = a.matmul_t(&b);
+            let want = a.matmul(&b.transpose());
+            assert!(got.sub(&want).frob_norm() < 1e-4);
+        });
+    }
+
+    #[test]
+    fn frob_and_rel_error() {
+        let a = Mat::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((a.frob_norm() - 5.0).abs() < 1e-12);
+        assert!(a.rel_error(&a) < 1e-12);
+        let z = Mat::zeros(1, 2);
+        assert!((a.rel_error(&z) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn take_cols() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let t = a.take_cols(2);
+        assert_eq!(t.data, vec![1., 2., 4., 5.]);
+    }
+}

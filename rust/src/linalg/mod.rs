@@ -1,0 +1,20 @@
+//! Dense linear algebra substrate (no BLAS/LAPACK in the vendored set).
+//!
+//! Provides the matrix type and factorizations the coordinator needs:
+//! - [`Mat`] row-major f32 matrix with the usual products;
+//! - [`qr`] modified Gram–Schmidt orthonormalization (mirrors the HLO MGS);
+//! - [`svd`] one-sided Jacobi SVD (exact baseline for Fig. 1/2);
+//! - [`srsi`] the paper's Alg. 1 in native Rust (control-experiments +
+//!   cross-checking the HLO S-RSI);
+//! - [`adafactor_rank1`] Adafactor's non-negative rank-1 factorization
+//!   (the Fig. 2 baseline).
+
+mod mat;
+mod qr;
+mod svd;
+mod srsi;
+
+pub use mat::Mat;
+pub use qr::{mgs_qr, mgs_qr_in_place};
+pub use svd::{jacobi_svd, singular_values, truncation_error, Svd};
+pub use srsi::{adafactor_rank1, srsi, srsi_with_omega, SrsiOutput};

@@ -1,0 +1,104 @@
+//! Modified Gram–Schmidt orthonormalization.
+//!
+//! Mirrors the pure-HLO MGS in `python/compile/srsi.py` (same algorithm,
+//! same epsilon guard) so the native S-RSI and the AOT S-RSI agree to float
+//! tolerance — asserted by the xla_parity integration tests.
+
+use super::Mat;
+
+const EPS: f32 = 1e-30;
+
+/// Orthonormalize the columns of `x` (right-looking MGS), returning Q.
+pub fn mgs_qr(x: &Mat) -> Mat {
+    let mut q = x.clone();
+    mgs_qr_in_place(&mut q);
+    q
+}
+
+/// In-place variant used by the hot native-S-RSI loop (no allocation).
+pub fn mgs_qr_in_place(q: &mut Mat) {
+    let (m, c) = (q.rows, q.cols);
+    for j in 0..c {
+        // normalise column j
+        let mut norm = 0.0f64;
+        for i in 0..m {
+            let v = q.at(i, j) as f64;
+            norm += v * v;
+        }
+        let inv = 1.0 / (norm.sqrt() as f32 + EPS);
+        for i in 0..m {
+            *q.at_mut(i, j) *= inv;
+        }
+        // project q_j out of columns j+1..c
+        for jj in (j + 1)..c {
+            let mut dot = 0.0f64;
+            for i in 0..m {
+                dot += q.at(i, j) as f64 * q.at(i, jj) as f64;
+            }
+            let d = dot as f32;
+            for i in 0..m {
+                let qj = q.at(i, j);
+                *q.at_mut(i, jj) -= d * qj;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+    use crate::util::rng::Rng;
+
+    fn gram_err(q: &Mat) -> f64 {
+        let g = q.t_matmul(q);
+        let mut worst = 0.0f64;
+        for i in 0..g.rows {
+            for j in 0..g.cols {
+                let want = if i == j { 1.0 } else { 0.0 };
+                worst = worst.max((g.at(i, j) as f64 - want).abs());
+            }
+        }
+        worst
+    }
+
+    #[test]
+    fn columns_orthonormal() {
+        forall(24, |rng| {
+            let m = 8 + rng.below(64) as usize;
+            let c = 1 + rng.below(8.min(m as u64)) as usize;
+            let q = mgs_qr(&Mat::randn(m, c, rng));
+            assert!(gram_err(&q) < 1e-4, "gram err {}", gram_err(&q));
+        });
+    }
+
+    #[test]
+    fn preserves_column_space() {
+        let mut rng = Rng::new(3);
+        let x = Mat::randn(32, 4, &mut rng);
+        let q = mgs_qr(&x);
+        // projector onto col(Q) must reproduce X
+        let px = q.matmul(&q.t_matmul(&x));
+        assert!(x.sub(&px).frob_norm() / x.frob_norm() < 1e-4);
+    }
+
+    #[test]
+    fn rank_deficient_stays_finite() {
+        let mut rng = Rng::new(4);
+        let col = Mat::randn(16, 1, &mut rng);
+        let mut x = Mat::zeros(16, 3);
+        for j in 0..3 {
+            x.set_col(j, &col.col(0));
+        }
+        let q = mgs_qr(&x);
+        assert!(q.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn single_column_is_normalised() {
+        let x = Mat::from_vec(3, 1, vec![3.0, 0.0, 4.0]);
+        let q = mgs_qr(&x);
+        assert!((q.data[0] - 0.6).abs() < 1e-6);
+        assert!((q.data[2] - 0.8).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,189 @@
+//! Native-Rust S-RSI (paper Alg. 1) and the Adafactor rank-1 baseline.
+//!
+//! The native S-RSI is the control implementation: it mirrors the HLO
+//! program step-for-step (same Gaussian sketch convention, same MGS-QR, same
+//! truncation), so the xla_parity test can feed both the *same* Ω and demand
+//! float-level agreement. It also powers the Fig. 2 sweeps where running
+//! hundreds of matrices through PJRT would be needlessly slow.
+
+use super::{mgs_qr_in_place, Mat};
+use crate::util::rng::Rng;
+
+/// Result of one S-RSI factorization.
+pub struct SrsiOutput {
+    /// (m, k) orthonormal-column basis.
+    pub q: Mat,
+    /// (n, k) co-factor; A ≈ Q Uᵀ.
+    pub u: Mat,
+    /// Relative Frobenius error ξ (paper Eq. 13).
+    pub xi: f64,
+}
+
+/// Streamlined Randomized Subspace Iteration with explicit sketch Ω.
+///
+/// `omega` must be (n, k+p) standard Gaussian. Mirrors
+/// `python/compile/srsi.py::srsi` exactly.
+pub fn srsi_with_omega(a: &Mat, omega: &Mat, k: usize, l: usize) -> SrsiOutput {
+    let n = a.cols;
+    assert_eq!(omega.rows, n);
+    let kp = omega.cols;
+    assert!(k <= kp && kp <= a.rows.min(n), "k={k} kp={kp} a={}x{}", a.rows, n);
+
+    let mut u = omega.clone();
+    let mut q = Mat::zeros(a.rows, kp);
+    for _ in 0..l.max(1) {
+        q = a.matmul(&u); // (m, kp)
+        mgs_qr_in_place(&mut q);
+        u = a.t_matmul(&q); // (n, kp)
+    }
+    let qk = q.take_cols(k);
+    let uk = u.take_cols(k);
+    let recon = qk.matmul_t(&uk);
+    let xi = a.rel_error(&recon);
+    SrsiOutput { q: qk, u: uk, xi }
+}
+
+/// S-RSI drawing Ω from `rng` (paper defaults l=5, p=5, p capped at
+/// min(m,n) - k).
+pub fn srsi(a: &Mat, k: usize, l: usize, p: usize, rng: &mut Rng) -> SrsiOutput {
+    let kp = (k + p).min(a.rows.min(a.cols));
+    let omega = Mat::randn(a.cols, kp, rng);
+    srsi_with_omega(a, &omega, k, l)
+}
+
+/// Adafactor's non-negative rank-1 factorization (Fig. 2's baseline):
+/// A ≈ r cᵀ / sum(r) with r = row sums, c = col sums. I-divergence optimal
+/// for non-negative matrices (Lee & Seung 1999; Shazeer & Stern 2018).
+/// Returns (reconstruction, relative error).
+pub fn adafactor_rank1(a: &Mat) -> (Mat, f64) {
+    let (m, n) = (a.rows, a.cols);
+    let mut r = vec![0.0f64; m];
+    let mut c = vec![0.0f64; n];
+    for i in 0..m {
+        for j in 0..n {
+            let v = a.at(i, j) as f64;
+            r[i] += v;
+            c[j] += v;
+        }
+    }
+    let total: f64 = r.iter().sum();
+    let inv = if total.abs() > 1e-300 { 1.0 / total } else { 0.0 };
+    let recon = Mat::from_fn(m, n, |i, j| (r[i] * c[j] * inv) as f32);
+    let err = a.rel_error(&recon);
+    (recon, err)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{jacobi_svd, truncation_error};
+    use crate::testing::forall;
+
+    /// Non-negative matrix with numerical rank ~k (Fig. 1-like spectrum).
+    pub fn lowrank_nonneg(m: usize, n: usize, k: usize, noise: f32,
+                          rng: &mut Rng) -> Mat {
+        let c = Mat::from_fn(m, k, |_, _| rng.normal().abs() as f32);
+        let d = Mat::from_fn(k, n, |_, _| rng.normal().abs() as f32);
+        let mut a = c.matmul(&d);
+        for v in a.data.iter_mut() {
+            *v += noise * rng.normal().abs() as f32;
+        }
+        a
+    }
+
+    #[test]
+    fn q_orthonormal() {
+        let mut rng = Rng::new(1);
+        let a = lowrank_nonneg(64, 48, 8, 1e-3, &mut rng);
+        let out = srsi(&a, 8, 5, 5, &mut rng);
+        let g = out.q.t_matmul(&out.q);
+        for i in 0..8 {
+            for j in 0..8 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((g.at(i, j) - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn exact_rank_recovery() {
+        let mut rng = Rng::new(2);
+        let c = Mat::from_fn(40, 4, |_, _| rng.normal().abs() as f32);
+        let d = Mat::from_fn(4, 32, |_, _| rng.normal().abs() as f32);
+        let a = c.matmul(&d);
+        let out = srsi(&a, 4, 5, 5, &mut rng);
+        assert!(out.xi < 1e-3, "xi={}", out.xi);
+    }
+
+    #[test]
+    fn error_decreases_with_rank() {
+        let mut rng = Rng::new(3);
+        let a = lowrank_nonneg(96, 96, 16, 0.05, &mut rng);
+        let xi1 = srsi(&a, 1, 5, 5, &mut rng).xi;
+        let xi4 = srsi(&a, 4, 5, 5, &mut rng).xi;
+        let xi16 = srsi(&a, 16, 5, 5, &mut rng).xi;
+        assert!(xi1 > xi4 && xi4 > xi16, "{xi1} {xi4} {xi16}");
+    }
+
+    #[test]
+    fn near_svd_optimal() {
+        // Fig. 2a's claim: S-RSI approaches the SVD bound.
+        let mut rng = Rng::new(4);
+        let a = lowrank_nonneg(64, 64, 12, 0.02, &mut rng);
+        let svd = jacobi_svd(&a);
+        let opt = truncation_error(&svd.s, 8, a.frob_norm());
+        let got = srsi(&a, 8, 5, 5, &mut rng).xi;
+        assert!(got <= 1.15 * opt + 1e-6, "srsi {got} vs svd {opt}");
+    }
+
+    #[test]
+    fn beats_adafactor_rank1_on_multirank_input() {
+        // Fig. 2a's other claim: rank-1 Adafactor plateaus where S-RSI k>1
+        // keeps improving, on matrices with several dominant singular values.
+        let mut rng = Rng::new(5);
+        let a = lowrank_nonneg(80, 80, 6, 0.01, &mut rng);
+        let (_, ada_err) = adafactor_rank1(&a);
+        let srsi_err = srsi(&a, 6, 5, 5, &mut rng).xi;
+        assert!(srsi_err < 0.5 * ada_err, "srsi {srsi_err} ada {ada_err}");
+    }
+
+    #[test]
+    fn adafactor_exact_on_rank1_nonneg() {
+        let mut rng = Rng::new(6);
+        let r = Mat::from_fn(24, 1, |_, _| rng.normal().abs() as f32);
+        let c = Mat::from_fn(1, 30, |_, _| rng.normal().abs() as f32);
+        let a = r.matmul(&c);
+        let (_, err) = adafactor_rank1(&a);
+        assert!(err < 1e-4, "err={err}");
+    }
+
+    #[test]
+    fn deterministic_given_omega() {
+        let mut rng = Rng::new(7);
+        let a = lowrank_nonneg(32, 24, 4, 0.01, &mut rng);
+        let omega = Mat::randn(24, 9, &mut rng);
+        let o1 = srsi_with_omega(&a, &omega, 4, 5);
+        let o2 = srsi_with_omega(&a, &omega, 4, 5);
+        assert_eq!(o1.q, o2.q);
+        assert_eq!(o1.u, o2.u);
+    }
+
+    #[test]
+    fn oversampling_never_hurts_much() {
+        forall(8, |rng| {
+            let a = lowrank_nonneg(48, 48, 8, 0.05, rng);
+            let no_p = srsi(&a, 4, 5, 0, rng).xi;
+            let with_p = srsi(&a, 4, 5, 5, rng).xi;
+            assert!(with_p <= no_p * 1.25 + 1e-6, "{with_p} vs {no_p}");
+        });
+    }
+
+    #[test]
+    fn zero_matrix_finite() {
+        let mut rng = Rng::new(8);
+        let a = Mat::zeros(16, 16);
+        let out = srsi(&a, 2, 5, 3, &mut rng);
+        assert!(out.q.data.iter().all(|v| v.is_finite()));
+        assert!(out.u.data.iter().all(|v| v.is_finite()));
+    }
+}

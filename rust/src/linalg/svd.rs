@@ -1,0 +1,240 @@
+//! One-sided Jacobi SVD — the exact low-rank baseline for Fig. 1 and Fig. 2.
+//!
+//! One-sided Jacobi (Hestenes) orthogonalizes the columns of A by plane
+//! rotations; at convergence the column norms are the singular values and
+//! the rotated columns the left singular vectors. It is O(mn²·sweeps) —
+//! plenty for the ≤1024² second-moment matrices we analyse, and its accuracy
+//! on small singular values is excellent, which is exactly what Fig. 1's
+//! spectra need.
+
+use super::Mat;
+
+/// Full SVD result: `a = u * diag(s) * vt`, singular values descending.
+pub struct Svd {
+    pub u: Mat,
+    pub s: Vec<f32>,
+    pub vt: Mat,
+}
+
+/// One-sided Jacobi SVD.  Converges when every column pair is orthogonal to
+/// `tol` relative accuracy or after `max_sweeps`.
+pub fn jacobi_svd(a: &Mat) -> Svd {
+    // Work on the tall orientation; transpose back at the end.
+    let transposed = a.rows < a.cols;
+    let mut w = if transposed { a.transpose() } else { a.clone() };
+    let (m, n) = (w.rows, w.cols);
+    let mut v = Mat::eye(n);
+    let tol = 1e-10f64;
+    let max_sweeps = 60;
+
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // 2x2 Gram block
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..m {
+                    let xp = w.at(i, p) as f64;
+                    let xq = w.at(i, q) as f64;
+                    app += xp * xp;
+                    aqq += xq * xq;
+                    apq += xp * xq;
+                }
+                if apq.abs() <= tol * (app * aqq).sqrt() + 1e-300 {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation zeroing the (p,q) Gram entry
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                let (cf, sf) = (c as f32, s as f32);
+                for i in 0..m {
+                    let xp = w.at(i, p);
+                    let xq = w.at(i, q);
+                    *w.at_mut(i, p) = cf * xp - sf * xq;
+                    *w.at_mut(i, q) = sf * xp + cf * xq;
+                }
+                for i in 0..n {
+                    let vp = v.at(i, p);
+                    let vq = v.at(i, q);
+                    *v.at_mut(i, p) = cf * vp - sf * vq;
+                    *v.at_mut(i, q) = sf * vp + cf * vq;
+                }
+            }
+        }
+        if off == 0.0 {
+            break;
+        }
+    }
+
+    // singular values = column norms; U = normalised columns
+    let mut order: Vec<usize> = (0..n).collect();
+    let norms: Vec<f64> = (0..n)
+        .map(|j| {
+            (0..m)
+                .map(|i| (w.at(i, j) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+        })
+        .collect();
+    order.sort_by(|&a, &b| norms[b].partial_cmp(&norms[a]).unwrap());
+
+    let mut u = Mat::zeros(m, n);
+    let mut s = Vec::with_capacity(n);
+    let mut vt = Mat::zeros(n, n);
+    for (dst, &src) in order.iter().enumerate() {
+        let nrm = norms[src];
+        s.push(nrm as f32);
+        let inv = if nrm > 1e-300 { (1.0 / nrm) as f32 } else { 0.0 };
+        for i in 0..m {
+            *u.at_mut(i, dst) = w.at(i, src) * inv;
+        }
+        for i in 0..n {
+            *vt.at_mut(dst, i) = v.at(i, src);
+        }
+    }
+
+    if transposed {
+        // a = (u s vt).T = v s ut
+        Svd {
+            u: vt.transpose(),
+            s,
+            vt: u.transpose(),
+        }
+    } else {
+        Svd { u, s, vt }
+    }
+}
+
+/// Singular values only (descending).
+pub fn singular_values(a: &Mat) -> Vec<f32> {
+    jacobi_svd(a).s
+}
+
+/// Optimal k-rank relative error from the SVD tail (paper Eq. 5):
+/// sqrt(sum_{i>k} sigma_i^2) / ||A||_F.
+pub fn truncation_error(s: &[f32], k: usize, frob: f64) -> f64 {
+    let tail: f64 = s.iter().skip(k).map(|&x| (x as f64) * (x as f64)).sum();
+    tail.sqrt() / (frob + 1e-300)
+}
+
+impl Svd {
+    /// Best k-rank reconstruction  U_k diag(s_k) Vt_k.
+    pub fn reconstruct(&self, k: usize) -> Mat {
+        let k = k.min(self.s.len());
+        let m = self.u.rows;
+        let n = self.vt.cols;
+        let mut out = Mat::zeros(m, n);
+        for r in 0..k {
+            let sr = self.s[r];
+            for i in 0..m {
+                let uis = self.u.at(i, r) * sr;
+                if uis == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                let vrow = self.vt.row(r);
+                for j in 0..n {
+                    orow[j] += uis * vrow[j];
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn diagonal_matrix_exact() {
+        let a = Mat::from_fn(3, 3, |i, j| {
+            if i == j {
+                [5.0, 2.0, 1.0][i]
+            } else {
+                0.0
+            }
+        });
+        let s = singular_values(&a);
+        assert!((s[0] - 5.0).abs() < 1e-5);
+        assert!((s[1] - 2.0).abs() < 1e-5);
+        assert!((s[2] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn full_reconstruction() {
+        forall(12, |rng| {
+            let m = 4 + rng.below(12) as usize;
+            let n = 4 + rng.below(12) as usize;
+            let a = Mat::randn(m, n, rng);
+            let svd = jacobi_svd(&a);
+            let rec = svd.reconstruct(m.min(n));
+            assert!(a.rel_error(&rec) < 1e-4, "{}", a.rel_error(&rec));
+        });
+    }
+
+    #[test]
+    fn rank_k_exact_for_rank_k_matrix() {
+        let mut rng = Rng::new(7);
+        let c = Mat::randn(20, 3, &mut rng);
+        let d = Mat::randn(3, 16, &mut rng);
+        let a = c.matmul(&d);
+        let svd = jacobi_svd(&a);
+        assert!(a.rel_error(&svd.reconstruct(3)) < 1e-4);
+        // sigma_4.. ~ 0
+        assert!(svd.s[3] < 1e-3 * svd.s[0]);
+    }
+
+    #[test]
+    fn singular_values_descending_nonneg() {
+        let mut rng = Rng::new(8);
+        let a = Mat::randn(10, 14, &mut rng);
+        let s = singular_values(&a);
+        for w in s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-6);
+        }
+        assert!(s.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn truncation_error_matches_reconstruction() {
+        // Eq. 5: ||A - A_k||_F = sqrt(sum_{i>k} s_i^2)
+        let mut rng = Rng::new(9);
+        let a = Mat::randn(12, 12, &mut rng);
+        let svd = jacobi_svd(&a);
+        for k in [1usize, 4, 8] {
+            let direct = a.rel_error(&svd.reconstruct(k));
+            let via_tail = truncation_error(&svd.s, k, a.frob_norm());
+            assert!(
+                (direct - via_tail).abs() < 1e-4,
+                "k={k} {direct} vs {via_tail}"
+            );
+        }
+    }
+
+    #[test]
+    fn wide_matrix_handled() {
+        let mut rng = Rng::new(10);
+        let a = Mat::randn(6, 20, &mut rng);
+        let svd = jacobi_svd(&a);
+        assert_eq!(svd.u.rows, 6);
+        assert_eq!(svd.vt.cols, 20);
+        assert!(a.rel_error(&svd.reconstruct(6)) < 1e-4);
+    }
+
+    #[test]
+    fn frobenius_identity() {
+        // sum of squared singular values == squared Frobenius norm
+        let mut rng = Rng::new(11);
+        let a = Mat::randn(9, 7, &mut rng);
+        let s = singular_values(&a);
+        let ss: f64 = s.iter().map(|&x| (x as f64).powi(2)).sum();
+        let fr = a.frob_norm().powi(2);
+        assert!((ss - fr).abs() / fr < 1e-6);
+    }
+}

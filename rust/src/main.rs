@@ -1,0 +1,222 @@
+//! `adapprox` — Layer-3 coordinator CLI.
+//!
+//! Subcommands:
+//! - `train`     pretrain a config with any optimizer (HLO path)
+//! - `eval`      evaluate a checkpoint's validation loss
+//! - `finetune`  fine-tune a checkpoint on a downstream task
+//! - `memory`    print the Table-2 memory accounting
+//! - `repro`     regenerate a paper table/figure (fig1..fig6, table1..3, all)
+//! - `inspect`   list manifest configs/programs
+//!
+//! Run `adapprox <cmd> --help`-free: flags are documented in README.md.
+
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use adapprox::cli::Args;
+use adapprox::coordinator::{Checkpoint, TrainOptions, Trainer};
+use adapprox::data::task_suite;
+use adapprox::optim::{Hyper, OptKind};
+use adapprox::repro;
+use adapprox::runtime::Runtime;
+use adapprox::util::log::{set_level, Level};
+use adapprox::util::rng::Rng;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    if args.has("q") {
+        set_level(Level::Warn);
+    } else if args.has("vv") {
+        set_level(Level::Debug);
+    }
+    match args.subcommand.as_str() {
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "finetune" => cmd_finetune(&args),
+        "memory" => repro::table2::run(&args),
+        "repro" => repro::run(&args),
+        "inspect" => cmd_inspect(&args),
+        other => bail!("unknown subcommand '{other}' (try `adapprox help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "adapprox — Adapprox optimizer (cs.LG 2024) as a three-layer \
+         Rust+JAX+Pallas training framework\n\
+         \n\
+         USAGE: adapprox <cmd> [flags]\n\
+         \n\
+         COMMANDS\n\
+         train     --config micro|nano|tiny --optimizer adamw|adafactor|\
+         came|adapprox\n\
+         \u{20}          --steps N --lr F --beta1 F [--no-clip] \
+         [--cos-guidance]\n\
+         \u{20}          [--replicas N] [--grad-accum N] [--csv PATH] \
+         [--checkpoint PATH]\n\
+         eval      --checkpoint PATH [--eval-batches N]\n\
+         finetune  --checkpoint PATH --task 0..4 --steps N --lr F\n\
+         memory    print Table 2 (exact analytic over GPT-2 inventories)\n\
+         repro     fig1|fig2|fig3|fig4|fig5|fig6|table1|table2|table3|all \
+         [--quick]\n\
+         inspect   list manifest configs + programs\n\
+         \n\
+         GLOBAL: --artifacts DIR (default ./artifacts)  --seed N  -q  -vv"
+    );
+}
+
+fn runtime(args: &Args) -> Result<Rc<Runtime>> {
+    Ok(Rc::new(Runtime::new(args.get_or("artifacts", "artifacts"))?))
+}
+
+fn hyper_from_args(args: &Args, rt: &Runtime) -> Result<Hyper> {
+    let kind = OptKind::parse(args.get_or("optimizer", "adapprox"))
+        .ok_or_else(|| anyhow!("bad --optimizer"))?;
+    let mut h = Hyper::paper_defaults(kind, &rt.manifest.hyper);
+    h.beta1 = args.f32_or("beta1", h.beta1)?;
+    if args.has("no-clip") {
+        h.clip_enabled = false;
+    }
+    if args.has("cos-guidance") {
+        h.cos_guidance = true;
+    }
+    Ok(h)
+}
+
+fn train_options(args: &Args) -> Result<TrainOptions> {
+    let steps = args.usize_or("steps", 200)?;
+    Ok(TrainOptions {
+        steps,
+        warmup: args.usize_or("warmup", (steps / 10).max(1))?,
+        peak_lr: args.f32_or("lr", 3e-4)?,
+        min_lr: args.f32_or("min-lr", 5e-5)?,
+        replicas: args.usize_or("replicas", 1)?,
+        grad_accum: args.usize_or("grad-accum", 1)?,
+        eval_every: args.usize_or("eval-every", (steps / 10).max(1))?,
+        eval_batches: args.usize_or("eval-batches", 2)?,
+        seed: args.u64_or("seed", 0xADA)?,
+        log_csv: args.flag("csv").map(Into::into),
+        log_every: args.usize_or("log-every", (steps / 20).max(1))?,
+    })
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rt = runtime(args)?;
+    let h = hyper_from_args(args, &rt)?;
+    let opts = train_options(args)?;
+    let config = args.get_or("config", "nano");
+    let mut tr = Trainer::new(rt.clone(), config, h, opts)?;
+    let hist = tr.run()?;
+    let last = hist.last().unwrap();
+    println!(
+        "final: step {} train {:.4} val {:.4} state {:.2}MB ({} exec, {} \
+         compiles, {:.1}s exec time)",
+        last.step,
+        last.train_loss,
+        last.val_loss.unwrap_or(f64::NAN),
+        last.state_mb,
+        rt.stats().executions,
+        rt.stats().compiles,
+        rt.stats().exec_seconds,
+    );
+    if let Some(p) = args.flag("checkpoint") {
+        Checkpoint {
+            config: config.to_string(),
+            step: tr.step_count(),
+            optimizer: tr.opt.name(),
+            params: tr.params.clone(),
+        }
+        .save(p)?;
+        println!("checkpoint saved to {p}");
+    }
+    Ok(())
+}
+
+fn load_into_trainer(args: &Args, rt: Rc<Runtime>) -> Result<Trainer> {
+    let p = args
+        .flag("checkpoint")
+        .ok_or_else(|| anyhow!("--checkpoint required"))?;
+    let ck = Checkpoint::load(p)?;
+    let h = hyper_from_args(args, &rt)?;
+    let opts = train_options(args)?;
+    let mut tr = Trainer::new(rt, &ck.config, h, opts)?;
+    tr.params = ck.params;
+    println!("loaded {} @ step {} (pretrained with {})", ck.config, ck.step,
+             ck.optimizer);
+    Ok(tr)
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let rt = runtime(args)?;
+    let tr = load_into_trainer(args, rt)?;
+    let n = args.usize_or("eval-batches", 8)?;
+    let loss = tr.evaluate(n)?;
+    println!("val loss {loss:.4}  ppl {:.2}  (over {n} batches)",
+             loss.exp());
+    Ok(())
+}
+
+fn cmd_finetune(args: &Args) -> Result<()> {
+    let rt = runtime(args)?;
+    let mut tr = load_into_trainer(args, rt)?;
+    let task_idx = args.usize_or("task", 0)?;
+    let cfg = tr.cfg.clone();
+    let tasks = task_suite(cfg.vocab, cfg.seq_len,
+                           args.u64_or("task-seed", 0x7A5C)?);
+    let task = tasks
+        .get(task_idx)
+        .ok_or_else(|| anyhow!("--task must be 0..{}", tasks.len() - 1))?;
+    let steps = args.usize_or("steps", 80)?;
+    let lr = args.f32_or("lr", 1e-3)?;
+    let before = {
+        let mut rng = Rng::new(1);
+        tr.task_accuracy(task, 96, &mut rng)?
+    };
+    let acc = tr.finetune_task(task, steps, lr, 96)?;
+    println!(
+        "task {} ({}): accuracy {:.3} -> {:.3} after {steps} steps @ lr {lr}",
+        task_idx,
+        task.kind.name(),
+        before,
+        acc
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let rt = runtime(args)?;
+    println!("configs:");
+    for (name, c) in &rt.manifest.configs {
+        println!(
+            "  {:<12} {:>10} params, {} tensors{}",
+            name,
+            c.param_count,
+            c.params.len(),
+            if c.inventory_only { " (inventory-only)" } else { "" }
+        );
+    }
+    println!("ladders:");
+    for (shape, l) in &rt.manifest.ladders {
+        println!("  {:<12} buckets {:?} kmax {}", shape, l.buckets, l.kmax);
+    }
+    println!("programs: {} total", rt.manifest.programs.len());
+    if args.has("v") {
+        for name in rt.manifest.programs.keys() {
+            println!("  {name}");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! Model-side helpers on the Rust side: parameter initialization and
+//! program-name mapping for a manifest `ConfigSpec`.
+//!
+//! The architecture itself lives in Layer 2 (python/compile/model.py) and is
+//! executed as the AOT `train_step`/`eval_step`/`predict_step` programs; the
+//! coordinator only needs to *own* the parameter buffers.
+
+use crate::runtime::{ConfigSpec, Tensor};
+use crate::util::rng::Rng;
+
+/// GPT-2-style initialization, mirroring python/compile/model.py:
+/// N(0, 0.02) for weights, ones for LN gains (`.g`), zeros for biases
+/// (`.b`).
+pub fn init_params(cfg: &ConfigSpec, rng: &mut Rng) -> Vec<Tensor> {
+    cfg.params
+        .iter()
+        .map(|spec| {
+            let n = spec.numel();
+            let data = if spec.name.ends_with(".g") {
+                vec![1.0f32; n]
+            } else if spec.name.ends_with(".b") {
+                vec![0.0f32; n]
+            } else {
+                (0..n).map(|_| 0.02 * rng.normal() as f32).collect()
+            };
+            Tensor::f32(spec.shape.clone(), data)
+        })
+        .collect()
+}
+
+/// Program names for a config.
+pub fn train_step_name(cfg: &ConfigSpec) -> String {
+    format!("train_step_{}", cfg.name)
+}
+
+pub fn eval_step_name(cfg: &ConfigSpec) -> String {
+    format!("eval_step_{}", cfg.name)
+}
+
+pub fn predict_step_name(cfg: &ConfigSpec) -> String {
+    format!("predict_step_{}", cfg.name)
+}
+
+/// Total parameter bytes (fp32 weights themselves, not optimizer state).
+pub fn param_bytes(cfg: &ConfigSpec) -> u64 {
+    cfg.params.iter().map(|p| p.numel() as u64 * 4).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ParamSpec;
+
+    fn cfg() -> ConfigSpec {
+        ConfigSpec {
+            name: "t".into(),
+            vocab: 16,
+            n_layer: 1,
+            d_model: 8,
+            n_head: 2,
+            seq_len: 8,
+            batch: 2,
+            inventory_only: false,
+            param_count: 0,
+            params: vec![
+                ParamSpec {
+                    name: "embed".into(),
+                    shape: vec![16, 8],
+                    kind: "matrix".into(),
+                },
+                ParamSpec {
+                    name: "layer0.ln1.g".into(),
+                    shape: vec![8],
+                    kind: "vector".into(),
+                },
+                ParamSpec {
+                    name: "layer0.qkv.b".into(),
+                    shape: vec![24],
+                    kind: "vector".into(),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn init_kinds() {
+        let mut rng = Rng::new(1);
+        let ps = init_params(&cfg(), &mut rng);
+        assert_eq!(ps.len(), 3);
+        // embed: small random
+        let e = ps[0].as_f32().unwrap();
+        assert!(e.iter().any(|&x| x != 0.0));
+        assert!(e.iter().all(|&x| x.abs() < 0.2));
+        // gains ones, biases zeros
+        assert!(ps[1].as_f32().unwrap().iter().all(|&x| x == 1.0));
+        assert!(ps[2].as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn deterministic_init() {
+        let a = init_params(&cfg(), &mut Rng::new(7));
+        let b = init_params(&cfg(), &mut Rng::new(7));
+        assert_eq!(a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
+    }
+
+    #[test]
+    fn names() {
+        let c = cfg();
+        assert_eq!(train_step_name(&c), "train_step_t");
+        assert_eq!(param_bytes(&c), (16 * 8 + 8 + 24) * 4);
+    }
+}

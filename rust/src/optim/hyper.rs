@@ -1,0 +1,176 @@
+//! Optimizer kind + hyperparameters (paper §4.1 defaults).
+
+use crate::runtime::manifest::HyperDefaults;
+
+/// Which optimizer family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OptKind {
+    AdamW,
+    Adafactor,
+    Came,
+    Adapprox,
+}
+
+impl OptKind {
+    pub fn parse(s: &str) -> Option<OptKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "adamw" | "adam" => Some(OptKind::AdamW),
+            "adafactor" => Some(OptKind::Adafactor),
+            "came" => Some(OptKind::Came),
+            "adapprox" => Some(OptKind::Adapprox),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptKind::AdamW => "adamw",
+            OptKind::Adafactor => "adafactor",
+            OptKind::Came => "came",
+            OptKind::Adapprox => "adapprox",
+        }
+    }
+}
+
+/// Full hyperparameter set; constructed from the manifest's paper defaults
+/// and overridden by config/CLI.
+#[derive(Clone, Debug)]
+pub struct Hyper {
+    pub kind: OptKind,
+    /// first-moment decay; 0 disables the first moment (paper §4.2/Fig. 6)
+    pub beta1: f32,
+    pub beta2: f32,
+    /// CAME's confidence decay
+    pub beta3: f32,
+    pub eps: f32,
+    /// CAME's eps2 (instability floor)
+    pub eps2: f32,
+    pub weight_decay: f32,
+    /// update-clipping threshold d; `clip_enabled = false` (Fig. 4 ablation)
+    /// raises it to effectively-infinite
+    pub clip_d: f32,
+    pub clip_enabled: bool,
+    /// cosine-similarity guidance (paper §3.5; requires beta1 > 0)
+    pub cos_guidance: bool,
+    // ---- AS-RSI (paper Alg. 2) ----
+    pub k_init: usize,
+    pub l: usize,
+    pub p: usize,
+    pub xi_thresh: f32,
+    pub delta_s: usize,
+    pub f_eta: f64,
+    pub f_omega: f64,
+    pub f_phi: f64,
+    pub f_tau: f64,
+}
+
+impl Hyper {
+    /// Paper defaults for a given optimizer kind.
+    pub fn paper_defaults(kind: OptKind, hd: &HyperDefaults) -> Hyper {
+        Hyper {
+            kind,
+            beta1: hd.beta1,
+            beta2: hd.beta2,
+            beta3: 0.9999,
+            eps: hd.eps,
+            eps2: 1e-16,
+            weight_decay: hd.weight_decay,
+            clip_d: hd.clip_d,
+            clip_enabled: true,
+            cos_guidance: false,
+            k_init: hd.k_init,
+            l: hd.l,
+            p: hd.p,
+            xi_thresh: hd.xi_thresh,
+            delta_s: hd.delta_s,
+            f_eta: hd.f_eta,
+            f_omega: hd.f_omega,
+            f_phi: hd.f_phi,
+            f_tau: hd.f_tau,
+        }
+    }
+
+    /// Effective clipping threshold (Fig. 4 ablation switch).
+    pub fn d_eff(&self) -> f32 {
+        if self.clip_enabled {
+            self.clip_d
+        } else {
+            1e30
+        }
+    }
+
+    /// Validate paper constraints (e.g. CAME requires a first moment).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.kind == OptKind::Came && self.beta1 <= 0.0 {
+            return Err(
+                "CAME is incompatible with beta1 = 0 (paper Table 2)".into()
+            );
+        }
+        if self.cos_guidance && self.beta1 <= 0.0 {
+            return Err(
+                "cosine guidance requires beta1 > 0 (paper §3.5)".into(),
+            );
+        }
+        if !(0.0..1.0).contains(&self.beta1) && self.beta1 != 0.0 {
+            return Err(format!("beta1 {} out of range", self.beta1));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::HyperDefaults;
+
+    fn hd() -> HyperDefaults {
+        HyperDefaults {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.1,
+            clip_d: 1.0,
+            k_init: 1,
+            l: 5,
+            p: 5,
+            xi_thresh: 0.01,
+            delta_s: 10,
+            f_eta: 200.0,
+            f_omega: -10.0,
+            f_phi: -2.5,
+            f_tau: -9.0,
+        }
+    }
+
+    #[test]
+    fn kind_parsing() {
+        assert_eq!(OptKind::parse("AdamW"), Some(OptKind::AdamW));
+        assert_eq!(OptKind::parse("adapprox"), Some(OptKind::Adapprox));
+        assert_eq!(OptKind::parse("sgd"), None);
+    }
+
+    #[test]
+    fn came_rejects_beta1_zero() {
+        let mut h = Hyper::paper_defaults(OptKind::Came, &hd());
+        h.beta1 = 0.0;
+        assert!(h.validate().is_err());
+        h.beta1 = 0.9;
+        assert!(h.validate().is_ok());
+    }
+
+    #[test]
+    fn cos_guidance_requires_first_moment() {
+        let mut h = Hyper::paper_defaults(OptKind::Adapprox, &hd());
+        h.cos_guidance = true;
+        h.beta1 = 0.0;
+        assert!(h.validate().is_err());
+    }
+
+    #[test]
+    fn clip_ablation_switch() {
+        let mut h = Hyper::paper_defaults(OptKind::Adapprox, &hd());
+        assert_eq!(h.d_eff(), 1.0);
+        h.clip_enabled = false;
+        assert!(h.d_eff() > 1e20);
+    }
+}

@@ -1,0 +1,105 @@
+//! Optimizers: the paper's contribution (Adapprox) + baselines
+//! (AdamW, Adafactor, CAME), each in two interchangeable backends.
+//!
+//! - [`xla_exec::XlaOptimizer`] — the production path: every per-tensor step
+//!   dispatches to an AOT-compiled HLO program through the PJRT runtime.
+//!   The AS-RSI *control plane* (paper Alg. 2: ξ evaluation, f(ξ) rank
+//!   growth, Δs refresh cadence) runs in Rust; the *data plane* (S-RSI,
+//!   moment math) is the compiled XLA.
+//! - [`native`] — pure-Rust mirrors on the linalg substrate, semantically
+//!   identical step-for-step; used for parity tests, artifact-free runs and
+//!   the figure sweeps.
+//!
+//! Both backends share [`Hyper`], [`rank::RankController`] and the
+//! [`state`] memory accounting.
+
+pub mod hyper;
+pub mod native;
+pub mod rank;
+pub mod state;
+pub mod xla_exec;
+
+pub use hyper::{Hyper, OptKind};
+pub use native::NativeOptimizer;
+pub use rank::{f_xi, RankController};
+pub use state::{OptimizerState, ParamState, StepInfo};
+pub use xla_exec::{build_optimizer, XlaOptimizer};
+
+use anyhow::Result;
+
+use crate::runtime::Tensor;
+
+/// A full-model optimizer: owns per-parameter state, applies one step given
+/// gradients in manifest parameter order.
+pub trait Optimizer {
+    /// Apply one optimization step in-place. `lr` comes from the schedule.
+    fn step(
+        &mut self,
+        params: &mut [Tensor],
+        grads: &[Tensor],
+        lr: f32,
+    ) -> Result<StepInfo>;
+
+    /// Bytes of optimizer state currently held (Table 2's quantity).
+    fn state_bytes(&self) -> u64;
+
+    /// Human name for logs/tables.
+    fn name(&self) -> String;
+
+    /// Dense second-moment estimates per *matrix* parameter, as
+    /// (name, [rows, cols], V) — the inputs to Fig. 1's spectra and
+    /// Fig. 2's approximation sweeps. AdamW returns its exact V; factored
+    /// optimizers return their reconstruction.
+    fn second_moments(&self) -> Vec<(String, Vec<usize>, Vec<f32>)> {
+        Vec::new()
+    }
+}
+
+/// Shared reconstruction of dense V from per-parameter state (both
+/// backends' `second_moments` delegate here).
+pub(crate) fn reconstruct_second_moment(
+    spec: &crate::runtime::ParamSpec,
+    st: &ParamState,
+) -> Option<Vec<f32>> {
+    if !spec.is_matrix() {
+        return None;
+    }
+    let (rows, cols) = (spec.shape[0], spec.shape[1]);
+    match st {
+        ParamState::AdamW { v, .. } => Some(v.clone()),
+        ParamState::Adafactor { r, c, .. } => {
+            let rmean: f64 = r.iter().map(|&x| x as f64).sum::<f64>()
+                / rows.max(1) as f64;
+            let inv = 1.0 / (rmean as f32 + 1e-30);
+            let mut v = vec![0.0f32; rows * cols];
+            for i in 0..rows {
+                for j in 0..cols {
+                    v[i * cols + j] = r[i] * c[j] * inv;
+                }
+            }
+            Some(v)
+        }
+        ParamState::Came { r, c, .. } => {
+            let rmean: f64 = r.iter().map(|&x| x as f64).sum::<f64>()
+                / rows.max(1) as f64;
+            let inv = 1.0 / (rmean as f32 + 1e-30);
+            let mut v = vec![0.0f32; rows * cols];
+            for i in 0..rows {
+                for j in 0..cols {
+                    v[i * cols + j] = r[i] * c[j] * inv;
+                }
+            }
+            Some(v)
+        }
+        ParamState::Adapprox { q, u, bucket, .. } => {
+            let qm = crate::linalg::Mat::from_vec(rows, *bucket, q.clone());
+            let um = crate::linalg::Mat::from_vec(cols, *bucket, u.clone());
+            let mut rec = qm.matmul_t(&um);
+            for v in rec.data.iter_mut() {
+                *v = v.max(0.0);
+            }
+            Some(rec.data)
+        }
+        ParamState::FactoredVec { .. } => None,
+    }
+}

@@ -1,0 +1,12 @@
+//! Native-Rust optimizer backend.
+//!
+//! Semantically identical, step-for-step, to the HLO programs lowered from
+//! `python/compile/optimizers.py` (same formulas, same epsilon placement,
+//! same clipping) — the xla_parity integration test feeds both backends the
+//! same inputs and demands float-level agreement.
+
+mod optimizer;
+pub mod steps;
+
+pub use optimizer::NativeOptimizer;
+pub use steps::*;

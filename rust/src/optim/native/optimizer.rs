@@ -1,0 +1,494 @@
+//! Whole-model native optimizer (the artifact-free backend).
+
+use anyhow::{bail, Result};
+
+use crate::linalg::{srsi_with_omega, Mat};
+use crate::optim::state::{OptimizerState, ParamState, StepInfo};
+use crate::optim::{native::steps, Hyper, OptKind, Optimizer};
+use crate::runtime::{Ladder, ParamSpec, Tensor};
+use crate::util::rng::Rng;
+
+/// Native-Rust optimizer over the full parameter set.
+pub struct NativeOptimizer {
+    hyper: Hyper,
+    specs: Vec<ParamSpec>,
+    state: OptimizerState,
+    rng: Rng,
+}
+
+impl NativeOptimizer {
+    pub fn new(
+        specs: Vec<ParamSpec>,
+        hyper: Hyper,
+        ladders: &dyn Fn(usize, usize) -> Option<Ladder>,
+        seed: u64,
+    ) -> Result<NativeOptimizer> {
+        hyper.validate().map_err(|e| anyhow::anyhow!(e))?;
+        let state = OptimizerState::init(&specs, &hyper, ladders);
+        Ok(NativeOptimizer {
+            hyper,
+            specs,
+            state,
+            rng: Rng::new(seed ^ 0x0B71),
+        })
+    }
+
+    /// Shared AS-RSI control plane for one Adapprox matrix parameter.
+    #[allow(clippy::too_many_arguments)]
+    fn adapprox_matrix_step(
+        hyper: &Hyper,
+        rng: &mut Rng,
+        t: usize,
+        rows: usize,
+        cols: usize,
+        w: &mut [f32],
+        g: &[f32],
+        st: &mut ParamState,
+        lr: f32,
+        info: &mut StepInfo,
+    ) {
+        let ParamState::Adapprox {
+            m,
+            q,
+            u,
+            bucket,
+            rank,
+            last_xi,
+        } = st
+        else {
+            unreachable!()
+        };
+        let mut m_buf: &mut [f32] = match m {
+            Some(v) => v,
+            None => &mut [],
+        };
+        let cos = hyper.cos_guidance && hyper.beta1 > 0.0;
+        let d = hyper.d_eff();
+        let qm = Mat::from_vec(rows, *bucket, q.clone());
+        let um = Mat::from_vec(cols, *bucket, u.clone());
+
+        use crate::optim::rank::RankDecision;
+        match rank.decide(t, hyper) {
+            RankDecision::Keep { bucket: b } => {
+                let kp = (b + rank.p_for(b)).min(rows.min(cols));
+                let omega = Mat::randn(cols, kp, rng);
+                let (q2, u2, xi) = steps::adapprox_step(
+                    w,
+                    &mut m_buf,
+                    &qm,
+                    &um,
+                    g,
+                    &omega,
+                    rows,
+                    cols,
+                    b,
+                    hyper.l,
+                    lr,
+                    hyper.beta1,
+                    hyper.beta2,
+                    hyper.eps,
+                    hyper.weight_decay,
+                    d,
+                    cos,
+                );
+                *q = q2.data;
+                *u = u2.data;
+                *bucket = b;
+                *last_xi = xi;
+                info.mean_xi += xi;
+            }
+            RankDecision::Refresh { start_bucket } => {
+                // V computed once from the stored factors (Alg. 2's fixed A)
+                let v = steps::adapprox_vstep(&qm, &um, g, rows, cols,
+                                              hyper.beta2);
+                let vm = Mat::from_vec(rows, cols, v.clone());
+                let mut b = start_bucket;
+                let (mut best, mut xi);
+                loop {
+                    let kp = (b + rank.p_for(b)).min(rows.min(cols));
+                    let omega = Mat::randn(cols, kp, rng);
+                    let out = srsi_with_omega(&vm, &omega, b, hyper.l);
+                    xi = out.xi;
+                    best = out;
+                    match rank.grow(xi, hyper) {
+                        Some(next_b) => {
+                            info.rank_retries += 1;
+                            b = next_b;
+                        }
+                        None => break,
+                    }
+                }
+                steps::adapprox_apply(
+                    w,
+                    &mut m_buf,
+                    &v,
+                    g,
+                    lr,
+                    hyper.beta1,
+                    hyper.eps,
+                    hyper.weight_decay,
+                    d,
+                    cos,
+                );
+                *q = best.q.data;
+                *u = best.u.data;
+                *bucket = best.q.cols;
+                *last_xi = xi;
+                info.mean_xi += xi;
+            }
+        }
+        info.mean_rank += rank.k as f64;
+    }
+}
+
+impl Optimizer for NativeOptimizer {
+    fn step(
+        &mut self,
+        params: &mut [Tensor],
+        grads: &[Tensor],
+        lr: f32,
+    ) -> Result<StepInfo> {
+        if params.len() != self.specs.len() || grads.len() != self.specs.len()
+        {
+            bail!(
+                "param/grad count mismatch: {} params, {} grads, {} specs",
+                params.len(),
+                grads.len(),
+                self.specs.len()
+            );
+        }
+        self.state.step += 1;
+        let t = self.state.step;
+        let h = self.hyper.clone();
+        let mut info = StepInfo {
+            step: t,
+            ..Default::default()
+        };
+        let mut n_matrix = 0usize;
+
+        for ((spec, st), (p, gt)) in self
+            .specs
+            .iter()
+            .zip(self.state.states.iter_mut())
+            .zip(params.iter_mut().zip(grads))
+        {
+            let g = gt.as_f32()?.to_vec();
+            let w = p.as_f32_mut()?;
+            match st {
+                ParamState::AdamW { m, v } => steps::adamw_step(
+                    w,
+                    m,
+                    v,
+                    &g,
+                    t as f32,
+                    lr,
+                    h.beta1,
+                    h.beta2,
+                    h.eps,
+                    h.weight_decay,
+                ),
+                ParamState::FactoredVec { m, v } => {
+                    let mut scratch;
+                    let m_buf: &mut [f32] = match m {
+                        Some(mv) => mv,
+                        None => {
+                            scratch = vec![0.0f32; w.len()];
+                            &mut scratch
+                        }
+                    };
+                    steps::vec_factored_step(
+                        w,
+                        m_buf,
+                        v,
+                        &g,
+                        lr,
+                        h.beta1,
+                        h.beta2,
+                        h.eps,
+                        h.weight_decay,
+                        h.d_eff(),
+                    );
+                }
+                ParamState::Adafactor { m, r, c } => {
+                    let (rows, cols) = (spec.shape[0], spec.shape[1]);
+                    let mut empty: Vec<f32> = vec![];
+                    let m_buf = m.as_mut().unwrap_or(&mut empty);
+                    steps::adafactor_step(
+                        w,
+                        m_buf,
+                        r,
+                        c,
+                        &g,
+                        rows,
+                        cols,
+                        lr,
+                        h.beta1,
+                        h.beta2,
+                        1e-30,
+                        h.weight_decay,
+                        h.d_eff(),
+                    );
+                }
+                ParamState::Came { m, r, c, rc, cc } => {
+                    let (rows, cols) = (spec.shape[0], spec.shape[1]);
+                    steps::came_step(
+                        w,
+                        m,
+                        r,
+                        c,
+                        rc,
+                        cc,
+                        &g,
+                        rows,
+                        cols,
+                        lr,
+                        h.beta1,
+                        h.beta2,
+                        h.beta3,
+                        1e-30,
+                        h.eps2,
+                        h.weight_decay,
+                        h.d_eff(),
+                    );
+                }
+                ParamState::Adapprox { .. } => {
+                    let (rows, cols) = (spec.shape[0], spec.shape[1]);
+                    n_matrix += 1;
+                    Self::adapprox_matrix_step(
+                        &h,
+                        &mut self.rng,
+                        t,
+                        rows,
+                        cols,
+                        w,
+                        &g,
+                        st,
+                        lr,
+                        &mut info,
+                    );
+                }
+            }
+        }
+        if n_matrix > 0 {
+            info.mean_xi /= n_matrix as f64;
+            info.mean_rank /= n_matrix as f64;
+        }
+        info.state_bytes = self.state.bytes();
+        Ok(info)
+    }
+
+    fn state_bytes(&self) -> u64 {
+        self.state.bytes()
+    }
+
+    fn second_moments(&self) -> Vec<(String, Vec<usize>, Vec<f32>)> {
+        self.specs
+            .iter()
+            .zip(&self.state.states)
+            .filter_map(|(spec, st)| {
+                crate::optim::reconstruct_second_moment(spec, st)
+                    .map(|v| (spec.name.clone(), spec.shape.clone(), v))
+            })
+            .collect()
+    }
+
+    fn name(&self) -> String {
+        format!("{}(native)", self.hyper.kind.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::hyper::OptKind;
+    use crate::runtime::manifest::HyperDefaults;
+
+    fn hd() -> HyperDefaults {
+        HyperDefaults {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            clip_d: 1.0,
+            k_init: 1,
+            l: 5,
+            p: 5,
+            xi_thresh: 0.01,
+            delta_s: 10,
+            f_eta: 200.0,
+            f_omega: -10.0,
+            f_phi: -2.5,
+            f_tau: -9.0,
+        }
+    }
+
+    fn specs() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec {
+                name: "w".into(),
+                shape: vec![16, 24],
+                kind: "matrix".into(),
+            },
+            ParamSpec {
+                name: "b".into(),
+                shape: vec![24],
+                kind: "vector".into(),
+            },
+        ]
+    }
+
+    fn ladder(m: usize, n: usize) -> Option<Ladder> {
+        let kmax = (m.min(n) + 3) / 4;
+        let mut buckets = vec![];
+        let mut k = 1;
+        while k < kmax {
+            buckets.push(k);
+            k *= 2;
+        }
+        buckets.push(kmax);
+        let p = buckets.iter().map(|&b| 5usize.min(kmax - b)).collect();
+        Some(Ladder {
+            buckets,
+            oversample: p,
+            kmax,
+        })
+    }
+
+    fn quadratic_descent(kind: OptKind) -> f64 {
+        // minimize ||W||^2 from a random start: loss must drop steadily
+        let mut h = Hyper::paper_defaults(kind, &hd());
+        if kind == OptKind::Came {
+            h.beta1 = 0.9;
+        }
+        let mut opt =
+            NativeOptimizer::new(specs(), h, &|m, n| ladder(m, n), 7).unwrap();
+        let mut rng = Rng::new(3);
+        let mut params = vec![
+            Tensor::f32(vec![16, 24], rng.normal_vec_f32(16 * 24)),
+            Tensor::f32(vec![24], rng.normal_vec_f32(24)),
+        ];
+        let loss = |ps: &[Tensor]| -> f64 {
+            ps.iter()
+                .map(|t| {
+                    t.as_f32()
+                        .unwrap()
+                        .iter()
+                        .map(|&x| (x as f64).powi(2))
+                        .sum::<f64>()
+                })
+                .sum()
+        };
+        let l0 = loss(&params);
+        // factored-family optimizers have no bias correction: the first
+        // moment needs ~1/(1-beta1) steps to reach full step size, so give
+        // everyone a longer horizon than AdamW alone would need
+        for _ in 0..200 {
+            let grads: Vec<Tensor> = params
+                .iter()
+                .map(|t| {
+                    Tensor::f32(
+                        t.shape.clone(),
+                        t.as_f32().unwrap().iter().map(|&x| 2.0 * x).collect(),
+                    )
+                })
+                .collect();
+            opt.step(&mut params, &grads, 0.05).unwrap();
+        }
+        loss(&params) / l0
+    }
+
+    #[test]
+    fn all_optimizers_descend_quadratic() {
+        for kind in [
+            OptKind::AdamW,
+            OptKind::Adafactor,
+            OptKind::Came,
+            OptKind::Adapprox,
+        ] {
+            let ratio = quadratic_descent(kind);
+            assert!(ratio < 0.5, "{kind:?} only reached ratio {ratio}");
+        }
+    }
+
+    #[test]
+    fn adapprox_rank_adapts_and_memory_tracks() {
+        let h = Hyper::paper_defaults(OptKind::Adapprox, &hd());
+        let mut opt =
+            NativeOptimizer::new(specs(), h, &|m, n| ladder(m, n), 11).unwrap();
+        let b0 = opt.state_bytes();
+        let mut rng = Rng::new(5);
+        let mut params = vec![
+            Tensor::f32(vec![16, 24], rng.normal_vec_f32(16 * 24)),
+            Tensor::f32(vec![24], rng.normal_vec_f32(24)),
+        ];
+        let mut infos = vec![];
+        for _ in 0..12 {
+            let grads: Vec<Tensor> = params
+                .iter()
+                .map(|t| {
+                    Tensor::f32(t.shape.clone(),
+                                rng.normal_vec_f32(t.numel()))
+                })
+                .collect();
+            infos.push(opt.step(&mut params, &grads, 1e-3).unwrap());
+        }
+        // random full-rank gradients: xi stays high => rank must grow
+        let last = infos.last().unwrap();
+        assert!(last.mean_rank > 1.0, "rank never grew: {last:?}");
+        assert!(opt.state_bytes() >= b0);
+        // xi recorded and sane
+        assert!(last.mean_xi >= 0.0 && last.mean_xi < 1.5);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let h = Hyper::paper_defaults(OptKind::Adapprox, &hd());
+        let run = |seed| {
+            let mut opt =
+                NativeOptimizer::new(specs(), h.clone(), &|m, n| ladder(m, n),
+                                     seed)
+                .unwrap();
+            let mut rng = Rng::new(9);
+            let mut params = vec![
+                Tensor::f32(vec![16, 24], rng.normal_vec_f32(16 * 24)),
+                Tensor::f32(vec![24], rng.normal_vec_f32(24)),
+            ];
+            for _ in 0..5 {
+                let grads: Vec<Tensor> = params
+                    .iter()
+                    .map(|t| Tensor::f32(t.shape.clone(),
+                                         rng.normal_vec_f32(t.numel())))
+                    .collect();
+                opt.step(&mut params, &grads, 1e-3).unwrap();
+            }
+            params[0].as_f32().unwrap().to_vec()
+        };
+        assert_eq!(run(1), run(1));
+        assert_ne!(run(1), run(2)); // sketch RNG differs
+    }
+
+    #[test]
+    fn memory_ordering_matches_paper_table2() {
+        // adafactor < adapprox(k small) < came_state < adamw on a big matrix
+        let spec = vec![ParamSpec {
+            name: "w".into(),
+            shape: vec![256, 256],
+            kind: "matrix".into(),
+        }];
+        let bytes = |kind: OptKind, beta1: f32| {
+            let mut h = Hyper::paper_defaults(kind, &hd());
+            h.beta1 = beta1;
+            NativeOptimizer::new(spec.clone(), h, &|m, n| ladder(m, n), 1)
+                .unwrap()
+                .state_bytes()
+        };
+        let adamw = bytes(OptKind::AdamW, 0.9);
+        let ada = bytes(OptKind::Adafactor, 0.0);
+        let adap = bytes(OptKind::Adapprox, 0.0);
+        let came = bytes(OptKind::Came, 0.9);
+        assert!(ada < adamw / 10);
+        assert!(adap < adamw / 10); // k_init = 1
+        assert!(came < adamw);
+        assert!(ada <= adap);
+    }
+}

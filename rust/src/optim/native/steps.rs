@@ -1,0 +1,471 @@
+//! Pure per-tensor step functions — exact mirrors of
+//! `python/compile/optimizers.py`.
+//!
+//! Numeric conventions copied from the L2 code: `_TINY = 1e-30` guards, RMS
+//! clipping after the raw update, first moment averages the *update* for the
+//! factored family, decoupled weight decay everywhere.
+
+use crate::linalg::{srsi_with_omega, Mat};
+
+const TINY: f32 = 1e-30;
+
+/// RMS(x) = ||x||_F / sqrt(numel).
+pub fn rms(x: &[f32]) -> f32 {
+    let ss: f64 = x.iter().map(|&v| (v as f64) * (v as f64)).sum();
+    ((ss / x.len().max(1) as f64) as f32).sqrt()
+}
+
+/// In-place `x /= max(1, rms(x)/d)` (Shazeer & Stern update clipping).
+pub fn clip_by_rms(x: &mut [f32], d: f32) {
+    let scale = 1.0 / (rms(x) / d).max(1.0);
+    if scale < 1.0 {
+        for v in x.iter_mut() {
+            *v *= scale;
+        }
+    }
+}
+
+/// AdamW step (bias-corrected; `t` is 1-based). Updates w/m/v in place.
+#[allow(clippy::too_many_arguments)]
+pub fn adamw_step(
+    w: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    t: f32,
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    wd: f32,
+) {
+    let bc1 = 1.0 - beta1.powf(t);
+    let bc2 = 1.0 - beta2.powf(t);
+    for i in 0..w.len() {
+        m[i] = beta1 * m[i] + (1.0 - beta1) * g[i];
+        v[i] = beta2 * v[i] + (1.0 - beta2) * g[i] * g[i];
+        let mh = m[i] / bc1;
+        let vh = v[i] / bc2;
+        w[i] -= lr * (mh / (vh.sqrt() + eps) + wd * w[i]);
+    }
+}
+
+/// Factored-family 1-D step: full V, no bias correction, RMS clipping,
+/// optional first moment (`beta1 = 0` disables exactly).
+#[allow(clippy::too_many_arguments)]
+pub fn vec_factored_step(
+    w: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    wd: f32,
+    d: f32,
+) {
+    let n = w.len();
+    let mut upd = vec![0.0f32; n];
+    for i in 0..n {
+        v[i] = beta2 * v[i] + (1.0 - beta2) * g[i] * g[i];
+        upd[i] = g[i] / (v[i].sqrt() + eps);
+    }
+    clip_by_rms(&mut upd, d);
+    for i in 0..n {
+        m[i] = beta1 * m[i] + (1.0 - beta1) * upd[i];
+        w[i] -= lr * (m[i] + wd * w[i]);
+    }
+}
+
+/// Adafactor 2-D step. `m` may be empty when beta1 = 0 (memory-less mode).
+#[allow(clippy::too_many_arguments)]
+pub fn adafactor_step(
+    w: &mut [f32],
+    m: &mut [f32],
+    r: &mut [f32],
+    c: &mut [f32],
+    g: &[f32],
+    rows: usize,
+    cols: usize,
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps1: f32,
+    wd: f32,
+    d: f32,
+) {
+    // row/col means of g^2 + eps1
+    let mut rsum = vec![0.0f64; rows];
+    let mut csum = vec![0.0f64; cols];
+    for i in 0..rows {
+        for j in 0..cols {
+            let sq = (g[i * cols + j] as f64).powi(2) + eps1 as f64;
+            rsum[i] += sq;
+            csum[j] += sq;
+        }
+    }
+    let mut rmean_total = 0.0f64;
+    for i in 0..rows {
+        r[i] = beta2 * r[i] + (1.0 - beta2) * (rsum[i] / cols as f64) as f32;
+        rmean_total += r[i] as f64;
+    }
+    for j in 0..cols {
+        c[j] = beta2 * c[j] + (1.0 - beta2) * (csum[j] / rows as f64) as f32;
+    }
+    let rmean = (rmean_total / rows as f64) as f32 + TINY;
+    // update = g / sqrt(outer(r, c) / mean(r))
+    let mut upd = vec![0.0f32; rows * cols];
+    for i in 0..rows {
+        for j in 0..cols {
+            let vhat = r[i] * c[j] / rmean;
+            upd[i * cols + j] = g[i * cols + j] / (vhat.sqrt() + TINY);
+        }
+    }
+    clip_by_rms(&mut upd, d);
+    let use_m = !m.is_empty();
+    for i in 0..w.len() {
+        let mu = if use_m {
+            m[i] = beta1 * m[i] + (1.0 - beta1) * upd[i];
+            m[i]
+        } else {
+            upd[i]
+        };
+        w[i] -= lr * (mu + wd * w[i]);
+    }
+}
+
+/// CAME 2-D step (requires beta1 > 0).
+#[allow(clippy::too_many_arguments)]
+pub fn came_step(
+    w: &mut [f32],
+    m: &mut [f32],
+    r: &mut [f32],
+    c: &mut [f32],
+    rc: &mut [f32],
+    cc: &mut [f32],
+    g: &[f32],
+    rows: usize,
+    cols: usize,
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    beta3: f32,
+    eps1: f32,
+    eps2: f32,
+    wd: f32,
+    d: f32,
+) {
+    // Adafactor-style factored second moment
+    let mut rsum = vec![0.0f64; rows];
+    let mut csum = vec![0.0f64; cols];
+    for i in 0..rows {
+        for j in 0..cols {
+            let sq = (g[i * cols + j] as f64).powi(2) + eps1 as f64;
+            rsum[i] += sq;
+            csum[j] += sq;
+        }
+    }
+    let mut rmean_total = 0.0f64;
+    for i in 0..rows {
+        r[i] = beta2 * r[i] + (1.0 - beta2) * (rsum[i] / cols as f64) as f32;
+        rmean_total += r[i] as f64;
+    }
+    for j in 0..cols {
+        c[j] = beta2 * c[j] + (1.0 - beta2) * (csum[j] / rows as f64) as f32;
+    }
+    let rmean = (rmean_total / rows as f64) as f32 + TINY;
+    let mut uhat = vec![0.0f32; rows * cols];
+    for i in 0..rows {
+        for j in 0..cols {
+            let vhat = r[i] * c[j] / rmean;
+            uhat[i * cols + j] = g[i * cols + j] / (vhat.sqrt() + TINY);
+        }
+    }
+    clip_by_rms(&mut uhat, d);
+    // first moment + instability statistic
+    let mut rcsum = vec![0.0f64; rows];
+    let mut ccsum = vec![0.0f64; cols];
+    for i in 0..rows {
+        for j in 0..cols {
+            let idx = i * cols + j;
+            m[idx] = beta1 * m[idx] + (1.0 - beta1) * uhat[idx];
+            let inst = (uhat[idx] - m[idx]).powi(2) + eps2;
+            rcsum[i] += inst as f64;
+            ccsum[j] += inst as f64;
+        }
+    }
+    let mut rcmean_total = 0.0f64;
+    for i in 0..rows {
+        rc[i] = beta3 * rc[i] + (1.0 - beta3) * (rcsum[i] / cols as f64) as f32;
+        rcmean_total += rc[i] as f64;
+    }
+    for j in 0..cols {
+        cc[j] = beta3 * cc[j] + (1.0 - beta3) * (ccsum[j] / rows as f64) as f32;
+    }
+    let rcmean = (rcmean_total / rows as f64) as f32 + TINY;
+    for i in 0..rows {
+        for j in 0..cols {
+            let idx = i * cols + j;
+            let shat = rc[i] * cc[j] / rcmean;
+            let upd = m[idx] / (shat.sqrt() + TINY);
+            w[idx] -= lr * (upd + wd * w[idx]);
+        }
+    }
+}
+
+/// Adapprox second-moment reconstruction: V = beta2 Q Uᵀ + (1-beta2) G².
+pub fn adapprox_vstep(
+    q: &Mat,
+    u: &Mat,
+    g: &[f32],
+    rows: usize,
+    cols: usize,
+    beta2: f32,
+) -> Vec<f32> {
+    let recon = q.matmul_t(u); // (rows, cols)
+    let mut v = vec![0.0f32; rows * cols];
+    for i in 0..v.len() {
+        // reconstruction clamped at zero (mirrors the L1 kernel): rank-k
+        // factors of a non-negative matrix carry small negative noise that
+        // would otherwise explode g / (sqrt(V) + eps) and dominate the RMS
+        // clip, freezing all other coordinates
+        v[i] = beta2 * recon.data[i].max(0.0) + (1.0 - beta2) * g[i] * g[i];
+    }
+    v
+}
+
+/// Adapprox update application (rank-independent tail of Alg. 3).
+/// Returns the new first moment implicitly via `m`; `w` updated in place.
+#[allow(clippy::too_many_arguments)]
+pub fn adapprox_apply(
+    w: &mut [f32],
+    m: &mut [f32],
+    v: &[f32],
+    g: &[f32],
+    lr: f32,
+    beta1: f32,
+    eps: f32,
+    wd: f32,
+    d: f32,
+    cos_guidance: bool,
+) {
+    let n = w.len();
+    let mut upd = vec![0.0f32; n];
+    for i in 0..n {
+        upd[i] = g[i] / (v[i].max(0.0).sqrt() + eps);
+    }
+    clip_by_rms(&mut upd, d);
+    let use_m = !m.is_empty();
+    if use_m {
+        for i in 0..n {
+            m[i] = beta1 * m[i] + (1.0 - beta1) * upd[i];
+        }
+    }
+    let m_slice: &[f32] = if use_m { m } else { &upd };
+    // cosine-similarity guidance (Eq. 17-18), applied to the used update
+    let scale = if cos_guidance && use_m {
+        let mut dot = 0.0f64;
+        let mut nu = 0.0f64;
+        let mut nm = 0.0f64;
+        for i in 0..n {
+            dot += upd[i] as f64 * m_slice[i] as f64;
+            nu += (upd[i] as f64).powi(2);
+            nm += (m_slice[i] as f64).powi(2);
+        }
+        let theta = dot / (nu.sqrt() * nm.sqrt() + TINY as f64);
+        1.0 / (1.0 - theta as f32 + eps)
+    } else {
+        1.0
+    };
+    for i in 0..n {
+        w[i] -= lr * (scale * m_slice[i] + wd * w[i]);
+    }
+}
+
+/// Full fused Adapprox step (non-refresh path): V-step, S-RSI at the fixed
+/// bucket with explicit sketch Ω, update application. Returns (q, u, ξ).
+#[allow(clippy::too_many_arguments)]
+pub fn adapprox_step(
+    w: &mut [f32],
+    m: &mut [f32],
+    q: &Mat,
+    u: &Mat,
+    g: &[f32],
+    omega: &Mat,
+    rows: usize,
+    cols: usize,
+    k: usize,
+    l: usize,
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    wd: f32,
+    d: f32,
+    cos_guidance: bool,
+) -> (Mat, Mat, f64) {
+    let v = adapprox_vstep(q, u, g, rows, cols, beta2);
+    let vm = Mat::from_vec(rows, cols, v.clone());
+    let out = srsi_with_omega(&vm, omega, k, l);
+    adapprox_apply(w, m, &v, g, lr, beta1, eps, wd, d, cos_guidance);
+    (out.q, out.u, out.xi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::assert_allclose;
+    use crate::util::rng::Rng;
+
+    fn randv(n: usize, scale: f32, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| scale * rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn adamw_first_step_is_sign_like() {
+        // t=1, m=v=0: update = g/|g| (bias correction cancels magnitude)
+        let mut w = vec![1.0f32; 8];
+        let mut m = vec![0.0; 8];
+        let mut v = vec![0.0; 8];
+        let g = vec![0.01f32; 8];
+        adamw_step(&mut w, &mut m, &mut v, &g, 1.0, 1e-3, 0.9, 0.999, 1e-8,
+                   0.0);
+        for &x in &w {
+            assert!((x - (1.0 - 1e-3)).abs() < 1e-5, "{x}");
+        }
+    }
+
+    #[test]
+    fn clip_engages_only_above_threshold() {
+        let mut small = vec![0.1f32; 16];
+        clip_by_rms(&mut small, 1.0);
+        assert_eq!(small, vec![0.1f32; 16]); // rms 0.1 < 1: untouched
+        let mut big = vec![10.0f32; 16];
+        clip_by_rms(&mut big, 1.0);
+        assert!((rms(&big) - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn adafactor_memoryless_mode() {
+        let mut rng = Rng::new(1);
+        let (rows, cols) = (8, 12);
+        let mut w = randv(rows * cols, 1.0, &mut rng);
+        let w0 = w.clone();
+        let mut m: Vec<f32> = vec![]; // beta1 = 0 => no first moment buffer
+        let mut r = vec![0.0; rows];
+        let mut c = vec![0.0; cols];
+        let g = randv(rows * cols, 0.01, &mut rng);
+        adafactor_step(&mut w, &mut m, &mut r, &mut c, &g, rows, cols,
+                       1e-3, 0.0, 0.999, 1e-30, 0.0, 1.0);
+        assert!(w.iter().zip(&w0).any(|(a, b)| a != b));
+        assert!(w.iter().all(|x| x.is_finite()));
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn adapprox_first_step_matches_formula() {
+        let mut rng = Rng::new(2);
+        let (rows, cols, k) = (16, 12, 2);
+        let mut w = randv(rows * cols, 1.0, &mut rng);
+        let w0 = w.clone();
+        let mut m = vec![0.0f32; rows * cols];
+        let q = Mat::zeros(rows, k);
+        let u = Mat::zeros(cols, k);
+        let g = randv(rows * cols, 0.01, &mut rng);
+        let omega = Mat::randn(cols, k + 5, &mut rng);
+        let (beta1, beta2, eps, lr, wd, d) = (0.9, 0.999, 1e-8, 1e-3, 0.1, 1.0);
+        let (q2, u2, xi) = adapprox_step(
+            &mut w, &mut m, &q, &u, &g, &omega, rows, cols, k, 5, lr, beta1,
+            beta2, eps, wd, d, false,
+        );
+        assert_eq!(q2.cols, k);
+        assert_eq!(u2.cols, k);
+        assert!((0.0..=1.5).contains(&xi));
+        // manual first-step reference
+        let mut upd: Vec<f32> = g
+            .iter()
+            .map(|&gi| gi / (((1.0 - beta2) * gi * gi).sqrt() + eps))
+            .collect();
+        clip_by_rms(&mut upd, d);
+        let want_w: Vec<f32> = w0
+            .iter()
+            .zip(&upd)
+            .map(|(&wi, &ui)| wi - lr * ((1.0 - beta1) * ui + wd * wi))
+            .collect();
+        assert_allclose(&w, &want_w, 1e-4, 1e-6);
+    }
+
+    #[test]
+    fn cosine_guidance_scales_step() {
+        let mut rng = Rng::new(3);
+        let n = 64;
+        let g = randv(n, 0.01, &mut rng);
+        let v: Vec<f32> = g.iter().map(|&x| x * x).collect();
+        let run = |cos: bool| {
+            let mut w = vec![1.0f32; n];
+            let mut m = vec![0.0f32; n];
+            adapprox_apply(&mut w, &mut m, &v, &g, 1e-3, 0.5, 1e-8, 0.0,
+                           1e9, cos);
+            w
+        };
+        let w_on = run(true);
+        let w_off = run(false);
+        let step_on: f64 = w_on.iter().map(|&x| ((x - 1.0) as f64).powi(2)).sum();
+        let step_off: f64 = w_off.iter().map(|&x| ((x - 1.0) as f64).powi(2)).sum();
+        // update aligns with fresh m (same direction): guidance amplifies
+        assert!(step_on > step_off);
+    }
+
+    #[test]
+    fn came_damps_unstable_direction() {
+        let mut rng = Rng::new(4);
+        let (rows, cols) = (8, 8);
+        let g = randv(rows * cols, 0.01, &mut rng);
+        let run = |m0: Vec<f32>| {
+            let mut w = vec![0.0f32; rows * cols];
+            let mut m = m0;
+            let mut r = vec![1e-4; rows];
+            let mut c = vec![1e-4; cols];
+            let mut rc = vec![1e-8; rows];
+            let mut cc = vec![1e-8; cols];
+            came_step(&mut w, &mut m, &mut r, &mut c, &mut rc, &mut cc, &g,
+                      rows, cols, 1e-3, 0.9, 0.999, 0.9999, 1e-30, 1e-16,
+                      0.0, 1.0);
+            w.iter().map(|&x| (x as f64).powi(2)).sum::<f64>()
+        };
+        // aligned first moment: big confident step; opposed: damped
+        let mut aligned = vec![0.0f32; rows * cols];
+        let mut r0 = vec![1e-4f32; rows];
+        let mut c0 = vec![1e-4f32; cols];
+        // derive the update direction once to align m with it
+        {
+            let mut w = vec![0.0f32; rows * cols];
+            let mut rc = vec![1e-8; rows];
+            let mut cc = vec![1e-8; cols];
+            let mut m = vec![0.0f32; rows * cols];
+            came_step(&mut w, &mut m, &mut r0, &mut c0, &mut rc, &mut cc,
+                      &g, rows, cols, 1.0, 0.0, 0.999, 0.9999, 1e-30,
+                      1e-16, 0.0, 1e9);
+            aligned = m;
+        }
+        let opposed: Vec<f32> = aligned.iter().map(|&x| -x).collect();
+        assert!(run(aligned) > run(opposed));
+    }
+
+    #[test]
+    fn vec_factored_no_bias_correction() {
+        let mut rng = Rng::new(5);
+        let n = 32;
+        let g = randv(n, 0.01, &mut rng);
+        let mut w = vec![0.0f32; n];
+        let mut m = vec![0.0f32; n];
+        let mut v = vec![0.0f32; n];
+        vec_factored_step(&mut w, &mut m, &mut v, &g, 1.0, 0.0, 0.999, 1e-8,
+                          0.0, 1e9);
+        for i in 0..n {
+            let expect = g[i] / (((1.0 - 0.999) * g[i] * g[i]).sqrt() + 1e-8);
+            assert!((m[i] - expect).abs() < 1e-3 * expect.abs() + 1e-5);
+        }
+    }
+}

@@ -1,0 +1,219 @@
+//! Adaptive rank selection — the AS-RSI control plane (paper Alg. 2).
+//!
+//! The data plane (S-RSI itself) is AOT-compiled XLA at static rank
+//! *buckets*; this controller owns the paper's dynamic logic: at refresh
+//! steps (`t mod Δs == 1`) reset k to k_init and grow it by f(ξ)
+//! (Eq. 14's sigmoid variant) until ξ ≤ ξ_thresh or k = k_max, re-running
+//! S-RSI at the bucket covering each requested rank. Between refreshes the
+//! rank is frozen.
+
+use crate::optim::Hyper;
+use crate::runtime::Ladder;
+
+/// f(ξ) = | η / (exp(ωξ + φ) + τ) |   (paper Eq. 14).
+pub fn f_xi(h: &Hyper, xi: f64) -> f64 {
+    (h.f_eta / ((h.f_omega * xi + h.f_phi).exp() + h.f_tau)).abs()
+}
+
+/// Per-tensor rank state.
+#[derive(Clone, Debug)]
+pub struct RankController {
+    /// logical target rank k_t (paper's k, not the bucket)
+    pub k: usize,
+    pub kmax: usize,
+    ladder: Ladder,
+}
+
+/// What the optimizer should do this step.
+#[derive(Debug, PartialEq)]
+pub enum RankDecision {
+    /// Not a refresh step: run the fused program at the current bucket.
+    Keep { bucket: usize },
+    /// Refresh step: re-factorize V at growing ranks (Alg. 2's repeat loop),
+    /// starting from this bucket.
+    Refresh { start_bucket: usize },
+}
+
+impl RankController {
+    pub fn new(hyper: &Hyper, ladder: Ladder) -> RankController {
+        let kmax = ladder.kmax;
+        RankController {
+            k: hyper.k_init.min(kmax).max(1),
+            kmax,
+            ladder,
+        }
+    }
+
+    /// Current executable bucket.
+    pub fn bucket(&self) -> usize {
+        self.ladder.bucket_for(self.k)
+    }
+
+    /// Oversampling for a bucket.
+    pub fn p_for(&self, bucket: usize) -> usize {
+        self.ladder.p_for(bucket)
+    }
+
+    /// Decide the step type (1-based step index; Alg. 2 refreshes when
+    /// `t mod Δs == 1`).
+    pub fn decide(&mut self, step: usize, hyper: &Hyper) -> RankDecision {
+        let refresh = step % hyper.delta_s.max(1) == 1 || hyper.delta_s == 1;
+        if refresh {
+            self.k = hyper.k_init.min(self.kmax).max(1);
+            RankDecision::Refresh {
+                start_bucket: self.bucket(),
+            }
+        } else {
+            RankDecision::Keep {
+                bucket: self.bucket(),
+            }
+        }
+    }
+
+    /// One growth iteration inside the refresh loop: returns the next
+    /// bucket to try, or None when the loop must stop (converged or k_max).
+    pub fn grow(&mut self, xi: f64, hyper: &Hyper) -> Option<usize> {
+        if xi <= hyper.xi_thresh as f64 || self.k >= self.kmax {
+            return None;
+        }
+        let prev_bucket = self.bucket();
+        let next = self.k + f_xi(hyper, xi).round().max(1.0) as usize;
+        self.k = next.min(self.kmax);
+        let b = self.bucket();
+        if b == prev_bucket {
+            // same executable would produce the same xi (modulo sketch
+            // noise); force progress to the next ladder bucket
+            if let Some(idx) = self.ladder.index_of(b) {
+                if idx + 1 < self.ladder.buckets.len() {
+                    self.k = self.ladder.buckets[idx + 1];
+                    return Some(self.k);
+                }
+            }
+            return None;
+        }
+        Some(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{Hyper, OptKind};
+    use crate::runtime::manifest::HyperDefaults;
+    use crate::testing::forall;
+
+    fn hyper() -> Hyper {
+        Hyper::paper_defaults(
+            OptKind::Adapprox,
+            &HyperDefaults {
+                beta1: 0.9,
+                beta2: 0.999,
+                eps: 1e-8,
+                weight_decay: 0.1,
+                clip_d: 1.0,
+                k_init: 1,
+                l: 5,
+                p: 5,
+                xi_thresh: 0.01,
+                delta_s: 10,
+                f_eta: 200.0,
+                f_omega: -10.0,
+                f_phi: -2.5,
+                f_tau: -9.0,
+            },
+        )
+    }
+
+    fn ladder() -> Ladder {
+        Ladder {
+            buckets: vec![1, 2, 4, 8, 16, 32],
+            oversample: vec![5, 5, 5, 5, 5, 0],
+            kmax: 32,
+        }
+    }
+
+    #[test]
+    fn f_xi_paper_range() {
+        // with paper constants f(ξ) ≈ 22 across (0, 1]: bounded, positive
+        let h = hyper();
+        for xi in [0.001, 0.01, 0.1, 0.5, 1.0] {
+            let f = f_xi(&h, xi);
+            assert!(f > 0.0 && f < h.f_eta, "f({xi}) = {f}");
+            // with η=200, ω=-10, φ=-2.5, τ=-9 the growth saturates ≈ 22
+            assert!((20.0..25.0).contains(&f), "f({xi}) = {f}");
+        }
+        // bounded by η/|τ+1| as ξ -> ∞ (denominator -> τ)
+        assert!(f_xi(&h, 100.0) <= h.f_eta / (h.f_tau.abs() - 1.0));
+    }
+
+    #[test]
+    fn refresh_cadence() {
+        let h = hyper();
+        let mut rc = RankController::new(&h, ladder());
+        // steps are 1-based: 1, 11, 21... are refreshes (Δs = 10)
+        assert!(matches!(rc.decide(1, &h), RankDecision::Refresh { .. }));
+        for t in 2..=10 {
+            assert!(matches!(rc.decide(t, &h), RankDecision::Keep { .. }),
+                    "t={t}");
+        }
+        assert!(matches!(rc.decide(11, &h), RankDecision::Refresh { .. }));
+    }
+
+    #[test]
+    fn refresh_resets_to_k_init() {
+        let h = hyper();
+        let mut rc = RankController::new(&h, ladder());
+        rc.k = 32;
+        rc.decide(11, &h);
+        assert_eq!(rc.k, 1);
+    }
+
+    #[test]
+    fn growth_converges_or_caps() {
+        let h = hyper();
+        let mut rc = RankController::new(&h, ladder());
+        rc.decide(1, &h);
+        // xi stays high: growth must terminate at kmax in bounded retries
+        let mut retries = 0;
+        while let Some(_b) = rc.grow(0.8, &h) {
+            retries += 1;
+            assert!(retries <= 8, "unbounded growth");
+        }
+        assert_eq!(rc.k, 32);
+    }
+
+    #[test]
+    fn growth_stops_when_converged() {
+        let h = hyper();
+        let mut rc = RankController::new(&h, ladder());
+        rc.decide(1, &h);
+        assert_eq!(rc.grow(0.005, &h), None); // below threshold
+        assert_eq!(rc.k, 1);
+    }
+
+    #[test]
+    fn bucket_always_covers_k() {
+        let h = hyper();
+        forall(32, |rng| {
+            let mut rc = RankController::new(&h, ladder());
+            for t in 1..=40 {
+                rc.decide(t, &h);
+                let _ = rc.grow(rng.uniform(), &h);
+                assert!(rc.bucket() >= rc.k.min(rc.kmax));
+                assert!(rc.k <= rc.kmax);
+            }
+        });
+    }
+
+    #[test]
+    fn monotone_growth_within_refresh() {
+        let h = hyper();
+        let mut rc = RankController::new(&h, ladder());
+        rc.decide(1, &h);
+        let mut prev = rc.k;
+        while let Some(_) = rc.grow(0.5, &h) {
+            assert!(rc.k > prev);
+            prev = rc.k;
+        }
+    }
+}

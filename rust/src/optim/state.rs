@@ -1,0 +1,272 @@
+//! Per-parameter optimizer state + the memory accounting behind Table 2.
+
+use crate::optim::{Hyper, OptKind, RankController};
+use crate::runtime::ParamSpec;
+
+/// State held for one parameter tensor. Only f32 payloads are counted in
+/// the memory report (Table 2's "optimizer state" quantity).
+#[derive(Clone, Debug)]
+pub enum ParamState {
+    /// AdamW: full first + second moments.
+    AdamW { m: Vec<f32>, v: Vec<f32> },
+    /// Factored-family 1-D path: full second moment, optional first moment.
+    FactoredVec {
+        m: Option<Vec<f32>>,
+        v: Vec<f32>,
+    },
+    /// Adafactor 2-D: row/col statistics, optional first moment.
+    Adafactor {
+        m: Option<Vec<f32>>,
+        r: Vec<f32>,
+        c: Vec<f32>,
+    },
+    /// CAME 2-D: Adafactor + factored confidence statistics.
+    Came {
+        m: Vec<f32>,
+        r: Vec<f32>,
+        c: Vec<f32>,
+        rc: Vec<f32>,
+        cc: Vec<f32>,
+    },
+    /// Adapprox 2-D: rank-k factors (at the current bucket) + controller.
+    Adapprox {
+        m: Option<Vec<f32>>,
+        /// (rows × bucket) left factor, row-major
+        q: Vec<f32>,
+        /// (cols × bucket) right factor, row-major
+        u: Vec<f32>,
+        /// stored factor bucket (columns of q/u)
+        bucket: usize,
+        rank: RankController,
+        /// last observed ξ (Eq. 13), for metrics
+        last_xi: f64,
+    },
+}
+
+impl ParamState {
+    /// Initial state for a parameter under the given optimizer.
+    pub fn init(
+        spec: &ParamSpec,
+        hyper: &Hyper,
+        ladder: Option<&crate::runtime::Ladder>,
+    ) -> ParamState {
+        let n = spec.numel();
+        let with_m = hyper.beta1 > 0.0;
+        if !spec.is_matrix() || hyper.kind == OptKind::AdamW {
+            return match hyper.kind {
+                OptKind::AdamW => ParamState::AdamW {
+                    m: vec![0.0; n],
+                    v: vec![0.0; n],
+                },
+                _ => ParamState::FactoredVec {
+                    m: with_m.then(|| vec![0.0; n]),
+                    v: vec![0.0; n],
+                },
+            };
+        }
+        let (rows, cols) = (spec.shape[0], spec.shape[1]);
+        match hyper.kind {
+            OptKind::AdamW => unreachable!(),
+            OptKind::Adafactor => ParamState::Adafactor {
+                m: with_m.then(|| vec![0.0; n]),
+                r: vec![0.0; rows],
+                c: vec![0.0; cols],
+            },
+            OptKind::Came => ParamState::Came {
+                m: vec![0.0; n],
+                r: vec![0.0; rows],
+                c: vec![0.0; cols],
+                rc: vec![0.0; rows],
+                cc: vec![0.0; cols],
+            },
+            OptKind::Adapprox => {
+                let ladder = ladder.expect("matrix param needs a ladder");
+                let rank = RankController::new(hyper, ladder.clone());
+                let bucket = rank.bucket();
+                ParamState::Adapprox {
+                    m: with_m.then(|| vec![0.0; n]),
+                    q: vec![0.0; rows * bucket],
+                    u: vec![0.0; cols * bucket],
+                    bucket,
+                    rank,
+                    last_xi: 0.0,
+                }
+            }
+        }
+    }
+
+    /// Bytes of optimizer state currently held for this parameter.
+    pub fn bytes(&self) -> u64 {
+        let f = |v: &Vec<f32>| (v.len() * 4) as u64;
+        let fo = |v: &Option<Vec<f32>>| v.as_ref().map_or(0, |x| (x.len() * 4) as u64);
+        match self {
+            ParamState::AdamW { m, v } => f(m) + f(v),
+            ParamState::FactoredVec { m, v } => fo(m) + f(v),
+            ParamState::Adafactor { m, r, c } => fo(m) + f(r) + f(c),
+            ParamState::Came { m, r, c, rc, cc } => {
+                f(m) + f(r) + f(c) + f(rc) + f(cc)
+            }
+            ParamState::Adapprox { m, q, u, .. } => fo(m) + f(q) + f(u),
+        }
+    }
+
+    /// Current Adapprox rank (None for other kinds).
+    pub fn current_rank(&self) -> Option<usize> {
+        match self {
+            ParamState::Adapprox { rank, .. } => Some(rank.k),
+            _ => None,
+        }
+    }
+}
+
+/// Whole-model optimizer state.
+#[derive(Debug)]
+pub struct OptimizerState {
+    pub step: usize,
+    pub states: Vec<ParamState>,
+}
+
+/// Per-step telemetry.
+#[derive(Clone, Debug, Default)]
+pub struct StepInfo {
+    pub step: usize,
+    /// mean ξ across Adapprox matrix params this step
+    pub mean_xi: f64,
+    /// mean current rank across Adapprox matrix params
+    pub mean_rank: f64,
+    /// number of S-RSI retries triggered by refresh loops this step
+    pub rank_retries: usize,
+    /// optimizer state bytes after the step
+    pub state_bytes: u64,
+}
+
+impl OptimizerState {
+    pub fn init(
+        specs: &[ParamSpec],
+        hyper: &Hyper,
+        ladders: &dyn Fn(usize, usize) -> Option<crate::runtime::Ladder>,
+    ) -> OptimizerState {
+        let states = specs
+            .iter()
+            .map(|s| {
+                let ladder = if s.is_matrix() {
+                    ladders(s.shape[0], s.shape[1])
+                } else {
+                    None
+                };
+                ParamState::init(s, hyper, ladder.as_ref())
+            })
+            .collect();
+        OptimizerState { step: 0, states }
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.states.iter().map(|s| s.bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::HyperDefaults;
+    use crate::runtime::Ladder;
+
+    fn hd() -> HyperDefaults {
+        HyperDefaults {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.1,
+            clip_d: 1.0,
+            k_init: 1,
+            l: 5,
+            p: 5,
+            xi_thresh: 0.01,
+            delta_s: 10,
+            f_eta: 200.0,
+            f_omega: -10.0,
+            f_phi: -2.5,
+            f_tau: -9.0,
+        }
+    }
+
+    fn mat(m: usize, n: usize) -> ParamSpec {
+        ParamSpec {
+            name: "w".into(),
+            shape: vec![m, n],
+            kind: "matrix".into(),
+        }
+    }
+
+    fn vecp(n: usize) -> ParamSpec {
+        ParamSpec {
+            name: "b".into(),
+            shape: vec![n],
+            kind: "vector".into(),
+        }
+    }
+
+    fn ladder() -> Ladder {
+        Ladder {
+            buckets: vec![1, 2, 4, 8, 16, 32],
+            oversample: vec![5; 6],
+            kmax: 32,
+        }
+    }
+
+    #[test]
+    fn adamw_bytes_are_2x_param() {
+        let h = Hyper::paper_defaults(OptKind::AdamW, &hd());
+        let s = ParamState::init(&mat(128, 128), &h, None);
+        assert_eq!(s.bytes(), 2 * 128 * 128 * 4);
+    }
+
+    #[test]
+    fn adafactor_bytes_sublinear() {
+        let mut h = Hyper::paper_defaults(OptKind::Adafactor, &hd());
+        h.beta1 = 0.0;
+        let s = ParamState::init(&mat(1024, 1024), &h, None);
+        assert_eq!(s.bytes(), (1024 + 1024) * 4);
+    }
+
+    #[test]
+    fn adapprox_bytes_scale_with_bucket() {
+        let mut h = Hyper::paper_defaults(OptKind::Adapprox, &hd());
+        h.beta1 = 0.0;
+        let l = ladder();
+        let s = ParamState::init(&mat(1024, 512), &h, Some(&l));
+        // k_init = 1 -> bucket 1 -> (1024 + 512) * 1 floats
+        assert_eq!(s.bytes(), (1024 + 512) * 4);
+    }
+
+    #[test]
+    fn first_moment_toggles_memory() {
+        let mut h = Hyper::paper_defaults(OptKind::Adapprox, &hd());
+        let l = ladder();
+        let with_m = ParamState::init(&mat(64, 64), &h, Some(&l)).bytes();
+        h.beta1 = 0.0;
+        let without = ParamState::init(&mat(64, 64), &h, Some(&l)).bytes();
+        assert_eq!(with_m - without, 64 * 64 * 4);
+    }
+
+    #[test]
+    fn came_counts_confidence_factors() {
+        let h = Hyper::paper_defaults(OptKind::Came, &hd());
+        let s = ParamState::init(&mat(100, 60), &h, None);
+        assert_eq!(s.bytes(), (100 * 60 + 2 * (100 + 60)) as u64 * 4);
+    }
+
+    #[test]
+    fn vectors_never_factorized() {
+        for kind in [OptKind::Adafactor, OptKind::Came, OptKind::Adapprox] {
+            let h = Hyper::paper_defaults(kind, &hd());
+            let s = ParamState::init(&vecp(384), &h, None);
+            match s {
+                ParamState::FactoredVec { ref v, .. } => {
+                    assert_eq!(v.len(), 384)
+                }
+                _ => panic!("vector got factorized under {kind:?}"),
+            }
+        }
+    }
+}

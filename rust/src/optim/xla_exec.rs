@@ -1,0 +1,486 @@
+//! HLO-backed optimizer: the production path.
+//!
+//! Identical control flow to [`super::native::NativeOptimizer`], but every
+//! per-tensor step executes an AOT-compiled program through the PJRT
+//! runtime. The split of responsibilities is the paper's contribution in
+//! systems form:
+//!
+//! - **data plane** (XLA): fused second moment (L1 kernel), S-RSI power
+//!   iteration, update clipping, weight application — `adapprox_step_MxN_kK`
+//!   between refreshes, `adapprox_vstep`/`srsi`/`adapprox_apply` at refresh
+//!   steps;
+//! - **control plane** (here): Alg. 2's ξ-driven rank growth, ladder-bucket
+//!   executable selection, Gaussian sketch generation, state residency.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::optim::state::{OptimizerState, ParamState, StepInfo};
+use crate::optim::{Hyper, OptKind, Optimizer};
+use crate::optim::rank::RankDecision;
+use crate::runtime::{ParamSpec, Runtime, Tensor};
+use crate::util::rng::Rng;
+
+/// HLO-backed optimizer over the full parameter set.
+pub struct XlaOptimizer {
+    rt: Rc<Runtime>,
+    hyper: Hyper,
+    specs: Vec<ParamSpec>,
+    state: OptimizerState,
+    rng: Rng,
+}
+
+impl XlaOptimizer {
+    pub fn new(
+        rt: Rc<Runtime>,
+        specs: Vec<ParamSpec>,
+        hyper: Hyper,
+        seed: u64,
+    ) -> Result<XlaOptimizer> {
+        hyper.validate().map_err(|e| anyhow::anyhow!(e))?;
+        // every matrix shape must have a ladder in the manifest
+        for s in specs.iter().filter(|s| s.is_matrix()) {
+            rt.manifest.ladder(s.shape[0], s.shape[1])?;
+        }
+        let ladders = {
+            let rt = rt.clone();
+            move |m: usize, n: usize| rt.manifest.ladder(m, n).ok().cloned()
+        };
+        let state = OptimizerState::init(&specs, &hyper, &ladders);
+        Ok(XlaOptimizer {
+            rt,
+            hyper,
+            specs,
+            state,
+            rng: Rng::new(seed ^ 0x0B71),
+        })
+    }
+
+    fn scalar(v: f32) -> Tensor {
+        Tensor::scalar(v)
+    }
+
+    /// Gaussian sketch Ω (cols × (bucket + p)) from the coordinator RNG.
+    fn omega(&mut self, cols: usize, kp: usize) -> Tensor {
+        Tensor::f32(vec![cols, kp], self.rng.normal_vec_f32(cols * kp))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn adapprox_matrix_step(
+        &mut self,
+        idx: usize,
+        rows: usize,
+        cols: usize,
+        w: &mut Tensor,
+        g: &Tensor,
+        lr: f32,
+        t: usize,
+        info: &mut StepInfo,
+    ) -> Result<()> {
+        let h = self.hyper.clone();
+        let cos_flag = if h.cos_guidance && h.beta1 > 0.0 { 1.0 } else { 0.0 };
+        let d = h.d_eff();
+        let sname = format!("{rows}x{cols}");
+
+        // Pull what we need out of the state to avoid aliasing self.
+        let (decision, bucket_stored, q_t, u_t, m_t) = {
+            let ParamState::Adapprox {
+                m, q, u, bucket, rank, ..
+            } = &mut self.state.states[idx]
+            else {
+                unreachable!()
+            };
+            let decision = rank.decide(t, &h);
+            let q_t = Tensor::f32(vec![rows, *bucket], q.clone());
+            let u_t = Tensor::f32(vec![cols, *bucket], u.clone());
+            let m_t = Tensor::f32(
+                vec![rows, cols],
+                m.clone().unwrap_or_else(|| vec![0.0; rows * cols]),
+            );
+            (decision, *bucket, q_t, u_t, m_t)
+        };
+
+        match decision {
+            RankDecision::Keep { bucket } => {
+                debug_assert_eq!(bucket, bucket_stored);
+                let p = {
+                    let ParamState::Adapprox { rank, .. } =
+                        &self.state.states[idx]
+                    else {
+                        unreachable!()
+                    };
+                    rank.p_for(bucket)
+                };
+                let kp = (bucket + p).min(rows.min(cols));
+                let om = self.omega(cols, kp);
+                // Between refreshes Alg. 2 does not evaluate xi — use the
+                // fast program without the telemetry reconstruction
+                // (EXPERIMENTS.md §Perf); last_xi keeps the refresh value.
+                let out = self.rt.exec_ref(
+                    &format!("adapprox_fast_{sname}_k{bucket}"),
+                    &[
+                        w, &m_t, &q_t, &u_t, g, &om,
+                        &Self::scalar(lr),
+                        &Self::scalar(h.beta1),
+                        &Self::scalar(h.beta2),
+                        &Self::scalar(h.eps),
+                        &Self::scalar(h.weight_decay),
+                        &Self::scalar(d),
+                        &Self::scalar(cos_flag),
+                    ],
+                )?;
+                let [w2, m2, q2, u2] = take4(out)?;
+                *w = w2;
+                let ParamState::Adapprox {
+                    m, q, u, bucket: bk, rank, last_xi,
+                } = &mut self.state.states[idx]
+                else {
+                    unreachable!()
+                };
+                if let Some(mv) = m {
+                    *mv = m2.as_f32()?.to_vec();
+                }
+                *q = q2.as_f32()?.to_vec();
+                *u = u2.as_f32()?.to_vec();
+                *bk = bucket;
+                info.mean_xi += *last_xi;
+                info.mean_rank += rank.k as f64;
+            }
+            RankDecision::Refresh { start_bucket } => {
+                // V computed once at the stored factor bucket
+                let v = self
+                    .rt
+                    .exec(
+                        &format!("adapprox_vstep_{sname}_k{bucket_stored}"),
+                        &[q_t, u_t, g.clone(), Self::scalar(h.beta2)],
+                    )?
+                    .remove(0);
+                // Alg. 2 repeat-loop over growing rank buckets
+                let mut b = start_bucket;
+                let (mut q_best, mut u_best, mut xi);
+                loop {
+                    let p = {
+                        let ParamState::Adapprox { rank, .. } =
+                            &self.state.states[idx]
+                        else {
+                            unreachable!()
+                        };
+                        rank.p_for(b)
+                    };
+                    let kp = (b + p).min(rows.min(cols));
+                    let om = self.omega(cols, kp);
+                    let out = self.rt.exec(
+                        &format!("srsi_{sname}_k{b}"),
+                        &[v.clone(), om],
+                    )?;
+                    let [q2, u2, xi_t] = take3(out)?;
+                    xi = xi_t.scalar_f32()? as f64;
+                    q_best = q2;
+                    u_best = u2;
+                    let grown = {
+                        let ParamState::Adapprox { rank, .. } =
+                            &mut self.state.states[idx]
+                        else {
+                            unreachable!()
+                        };
+                        rank.grow(xi, &h)
+                    };
+                    match grown {
+                        Some(nb) => {
+                            info.rank_retries += 1;
+                            b = nb;
+                        }
+                        None => break,
+                    }
+                }
+                let out = self.rt.exec(
+                    &format!("adapprox_apply_{sname}"),
+                    &[
+                        w.clone(),
+                        m_t,
+                        v,
+                        g.clone(),
+                        Self::scalar(lr),
+                        Self::scalar(h.beta1),
+                        Self::scalar(h.eps),
+                        Self::scalar(h.weight_decay),
+                        Self::scalar(d),
+                        Self::scalar(cos_flag),
+                    ],
+                )?;
+                let [w2, m2] = take2(out)?;
+                *w = w2;
+                let ParamState::Adapprox {
+                    m, q, u, bucket: bk, rank, last_xi,
+                } = &mut self.state.states[idx]
+                else {
+                    unreachable!()
+                };
+                if let Some(mv) = m {
+                    *mv = m2.as_f32()?.to_vec();
+                }
+                *q = q_best.as_f32()?.to_vec();
+                *u = u_best.as_f32()?.to_vec();
+                *bk = q_best.shape[1];
+                *last_xi = xi;
+                info.mean_xi += xi;
+                info.mean_rank += rank.k as f64;
+            }
+        }
+        Ok(())
+    }
+}
+
+fn take2(mut v: Vec<Tensor>) -> Result<[Tensor; 2]> {
+    if v.len() != 2 {
+        bail!("expected 2 outputs, got {}", v.len());
+    }
+    let b = v.pop().unwrap();
+    let a = v.pop().unwrap();
+    Ok([a, b])
+}
+
+fn take3(mut v: Vec<Tensor>) -> Result<[Tensor; 3]> {
+    if v.len() != 3 {
+        bail!("expected 3 outputs, got {}", v.len());
+    }
+    let c = v.pop().unwrap();
+    let b = v.pop().unwrap();
+    let a = v.pop().unwrap();
+    Ok([a, b, c])
+}
+
+fn take4(mut v: Vec<Tensor>) -> Result<[Tensor; 4]> {
+    if v.len() != 4 {
+        bail!("expected 4 outputs, got {}", v.len());
+    }
+    let d = v.pop().unwrap();
+    let c = v.pop().unwrap();
+    let b = v.pop().unwrap();
+    let a = v.pop().unwrap();
+    Ok([a, b, c, d])
+}
+
+fn take5(mut v: Vec<Tensor>) -> Result<[Tensor; 5]> {
+    if v.len() != 5 {
+        bail!("expected 5 outputs, got {}", v.len());
+    }
+    let e = v.pop().unwrap();
+    let d = v.pop().unwrap();
+    let c = v.pop().unwrap();
+    let b = v.pop().unwrap();
+    let a = v.pop().unwrap();
+    Ok([a, b, c, d, e])
+}
+
+impl Optimizer for XlaOptimizer {
+    fn step(
+        &mut self,
+        params: &mut [Tensor],
+        grads: &[Tensor],
+        lr: f32,
+    ) -> Result<StepInfo> {
+        if params.len() != self.specs.len() {
+            bail!("params/specs mismatch");
+        }
+        self.state.step += 1;
+        let t = self.state.step;
+        let h = self.hyper.clone();
+        let mut info = StepInfo {
+            step: t,
+            ..Default::default()
+        };
+        let mut n_matrix = 0usize;
+
+        for i in 0..self.specs.len() {
+            let spec = self.specs[i].clone();
+            let g = grads[i].clone();
+            let is_adapprox_matrix = matches!(
+                self.state.states[i],
+                ParamState::Adapprox { .. }
+            );
+            if is_adapprox_matrix {
+                n_matrix += 1;
+                let mut w = params[i].clone();
+                self.adapprox_matrix_step(
+                    i,
+                    spec.shape[0],
+                    spec.shape[1],
+                    &mut w,
+                    &g,
+                    lr,
+                    t,
+                    &mut info,
+                )?;
+                params[i] = w;
+                continue;
+            }
+            let w = params[i].clone();
+            match &mut self.state.states[i] {
+                ParamState::AdamW { m, v } => {
+                    let prog = if spec.is_matrix() {
+                        format!("adamw_step_{}x{}", spec.shape[0], spec.shape[1])
+                    } else {
+                        format!("vec_adamw_step_{}", spec.shape[0])
+                    };
+                    let out = self.rt.exec(
+                        &prog,
+                        &[
+                            w,
+                            Tensor::f32(spec.shape.clone(), m.clone()),
+                            Tensor::f32(spec.shape.clone(), v.clone()),
+                            g,
+                            Tensor::scalar(t as f32),
+                            Tensor::scalar(lr),
+                            Tensor::scalar(h.beta1),
+                            Tensor::scalar(h.beta2),
+                            Tensor::scalar(h.eps),
+                            Tensor::scalar(h.weight_decay),
+                        ],
+                    )?;
+                    let [w2, m2, v2] = take3(out)?;
+                    params[i] = w2;
+                    *m = m2.as_f32()?.to_vec();
+                    *v = v2.as_f32()?.to_vec();
+                }
+                ParamState::FactoredVec { m, v } => {
+                    let n = spec.shape[0];
+                    let m_in = m.clone().unwrap_or_else(|| vec![0.0; n]);
+                    let out = self.rt.exec(
+                        &format!("vec_factored_step_{n}"),
+                        &[
+                            w,
+                            Tensor::f32(vec![n], m_in),
+                            Tensor::f32(vec![n], v.clone()),
+                            g,
+                            Tensor::scalar(lr),
+                            Tensor::scalar(h.beta1),
+                            Tensor::scalar(h.beta2),
+                            Tensor::scalar(h.eps),
+                            Tensor::scalar(h.weight_decay),
+                            Tensor::scalar(h.d_eff()),
+                        ],
+                    )?;
+                    let [w2, m2, v2] = take3(out)?;
+                    params[i] = w2;
+                    if let Some(mv) = m {
+                        *mv = m2.as_f32()?.to_vec();
+                    }
+                    *v = v2.as_f32()?.to_vec();
+                }
+                ParamState::Adafactor { m, r, c } => {
+                    let (rows, cols) = (spec.shape[0], spec.shape[1]);
+                    let m_in =
+                        m.clone().unwrap_or_else(|| vec![0.0; rows * cols]);
+                    let out = self.rt.exec(
+                        &format!("adafactor_step_{rows}x{cols}"),
+                        &[
+                            w,
+                            Tensor::f32(vec![rows, cols], m_in),
+                            Tensor::f32(vec![rows], r.clone()),
+                            Tensor::f32(vec![cols], c.clone()),
+                            g,
+                            Tensor::scalar(lr),
+                            Tensor::scalar(h.beta1),
+                            Tensor::scalar(h.beta2),
+                            Tensor::scalar(1e-30),
+                            Tensor::scalar(h.weight_decay),
+                            Tensor::scalar(h.d_eff()),
+                        ],
+                    )?;
+                    if out.len() != 4 {
+                        bail!("adafactor: expected 4 outputs");
+                    }
+                    let mut it = out.into_iter();
+                    params[i] = it.next().unwrap();
+                    let m2 = it.next().unwrap();
+                    if let Some(mv) = m {
+                        *mv = m2.as_f32()?.to_vec();
+                    }
+                    *r = it.next().unwrap().as_f32()?.to_vec();
+                    *c = it.next().unwrap().as_f32()?.to_vec();
+                }
+                ParamState::Came { m, r, c, rc, cc } => {
+                    let (rows, cols) = (spec.shape[0], spec.shape[1]);
+                    let out = self.rt.exec(
+                        &format!("came_step_{rows}x{cols}"),
+                        &[
+                            w,
+                            Tensor::f32(vec![rows, cols], m.clone()),
+                            Tensor::f32(vec![rows], r.clone()),
+                            Tensor::f32(vec![cols], c.clone()),
+                            Tensor::f32(vec![rows], rc.clone()),
+                            Tensor::f32(vec![cols], cc.clone()),
+                            g,
+                            Tensor::scalar(lr),
+                            Tensor::scalar(h.beta1),
+                            Tensor::scalar(h.beta2),
+                            Tensor::scalar(h.beta3),
+                            Tensor::scalar(1e-30),
+                            Tensor::scalar(h.eps2),
+                            Tensor::scalar(h.weight_decay),
+                            Tensor::scalar(h.d_eff()),
+                        ],
+                    )?;
+                    if out.len() != 6 {
+                        bail!("came: expected 6 outputs");
+                    }
+                    let mut it = out.into_iter();
+                    params[i] = it.next().unwrap();
+                    *m = it.next().unwrap().as_f32()?.to_vec();
+                    *r = it.next().unwrap().as_f32()?.to_vec();
+                    *c = it.next().unwrap().as_f32()?.to_vec();
+                    *rc = it.next().unwrap().as_f32()?.to_vec();
+                    *cc = it.next().unwrap().as_f32()?.to_vec();
+                }
+                ParamState::Adapprox { .. } => unreachable!(),
+            }
+        }
+        if n_matrix > 0 {
+            info.mean_xi /= n_matrix as f64;
+            info.mean_rank /= n_matrix as f64;
+        }
+        info.state_bytes = self.state.bytes();
+        Ok(info)
+    }
+
+    fn state_bytes(&self) -> u64 {
+        self.state.bytes()
+    }
+
+    fn second_moments(&self) -> Vec<(String, Vec<usize>, Vec<f32>)> {
+        self.specs
+            .iter()
+            .zip(&self.state.states)
+            .filter_map(|(spec, st)| {
+                crate::optim::reconstruct_second_moment(spec, st)
+                    .map(|v| (spec.name.clone(), spec.shape.clone(), v))
+            })
+            .collect()
+    }
+
+    fn name(&self) -> String {
+        format!("{}(xla)", self.hyper.kind.name())
+    }
+}
+
+/// Construct the right backend from a kind string + backend flag.
+pub fn build_optimizer(
+    rt: Option<Rc<Runtime>>,
+    specs: Vec<ParamSpec>,
+    hyper: Hyper,
+    ladders: &dyn Fn(usize, usize) -> Option<crate::runtime::Ladder>,
+    seed: u64,
+) -> Result<Box<dyn Optimizer>> {
+    match rt {
+        Some(rt) => Ok(Box::new(XlaOptimizer::new(rt, specs, hyper, seed)?)),
+        None => Ok(Box::new(super::native::NativeOptimizer::new(
+            specs, hyper, ladders, seed,
+        )?)),
+    }
+}
+
+// keep OptKind referenced for docs
+#[allow(unused_imports)]
+use crate::optim::hyper::OptKind as _OptKindDoc;

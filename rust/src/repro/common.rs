@@ -1,0 +1,94 @@
+//! Shared scaffolding for the reproduction harnesses.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::coordinator::{TrainOptions, Trainer};
+use crate::optim::{Hyper, OptKind};
+use crate::runtime::Runtime;
+
+/// Results directory (created on demand).
+pub fn results_dir() -> PathBuf {
+    let p = PathBuf::from("results");
+    std::fs::create_dir_all(&p).ok();
+    p
+}
+
+/// Open the runtime over `--artifacts DIR` (default `artifacts`).
+pub fn runtime(args: &Args) -> Result<Rc<Runtime>> {
+    Ok(Rc::new(Runtime::new(args.get_or("artifacts", "artifacts"))?))
+}
+
+/// Paper-default hyperparameters for a kind, with CLI overrides.
+pub fn hyper(args: &Args, rt: &Runtime, kind: OptKind) -> Result<Hyper> {
+    let mut h = Hyper::paper_defaults(kind, &hyper_defaults(rt));
+    h.beta1 = args.f32_or("beta1", h.beta1)?;
+    if args.has("no-clip") {
+        h.clip_enabled = false;
+    }
+    if args.has("cos-guidance") {
+        h.cos_guidance = true;
+    }
+    Ok(h)
+}
+
+pub fn hyper_defaults(rt: &Runtime) -> crate::runtime::HyperDefaults {
+    rt.manifest.hyper.clone()
+}
+
+/// Train options scaled by --quick / --steps / --config.
+pub fn train_options(args: &Args, default_steps: usize) -> Result<TrainOptions> {
+    let quick = args.has("quick");
+    let steps = args.usize_or(
+        "steps",
+        if quick { default_steps / 4 } else { default_steps },
+    )?
+    .max(2);
+    Ok(TrainOptions {
+        steps,
+        warmup: (steps / 10).max(1),
+        peak_lr: args.f32_or("lr", 3e-4)?,
+        min_lr: args.f32_or("min-lr", 5e-5)?,
+        replicas: args.usize_or("replicas", 1)?,
+        grad_accum: args.usize_or("grad-accum", 1)?,
+        eval_every: args.usize_or("eval-every", (steps / 10).max(1))?,
+        eval_batches: args.usize_or("eval-batches", 2)?,
+        seed: args.u64_or("seed", 0xADA)?,
+        log_csv: None,
+        log_every: (steps / 10).max(1),
+    })
+}
+
+/// Build a trainer for a (config, optimizer) pair with a CSV log path.
+pub fn trainer(
+    args: &Args,
+    rt: Rc<Runtime>,
+    config: &str,
+    kind: OptKind,
+    default_steps: usize,
+    csv: Option<PathBuf>,
+) -> Result<Trainer> {
+    let h = hyper(args, &rt, kind)?;
+    let mut opts = train_options(args, default_steps)?;
+    opts.log_csv = csv;
+    Trainer::new(rt, config, h, opts)
+}
+
+/// The four compared optimizers, in the paper's order.
+pub fn all_kinds() -> [OptKind; 4] {
+    [
+        OptKind::AdamW,
+        OptKind::Adafactor,
+        OptKind::Came,
+        OptKind::Adapprox,
+    ]
+}
+
+/// Default repro config: micro keeps `repro all` minutes-scale on 1 core;
+/// pass `--config nano|tiny` for the bigger runs.
+pub fn config_name<'a>(args: &'a Args) -> &'a str {
+    args.get_or("config", "micro")
+}

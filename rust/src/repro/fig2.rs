@@ -1,0 +1,96 @@
+//! Fig. 2 — S-RSI vs Adafactor factorization vs SVD: mean approximation
+//! error and computation time as functions of rank (l = 5, p = 5).
+//!
+//! Paper: applied to all second-moment matrices from AdamW-training GPT-2
+//! 345M. Here: the V snapshots from an AdamW run of the chosen config,
+//! swept across the rank ladder with the native backends (the HLO S-RSI
+//! path is timed separately in `benches/bench_srsi.rs`). Expected shape:
+//! SVD and S-RSI error drop steeply with rank and S-RSI approaches the SVD
+//! bound; Adafactor is flat (rank-1); S-RSI time ≪ SVD time.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::coordinator::CsvWriter;
+use crate::info;
+use crate::linalg::{adafactor_rank1, jacobi_svd, srsi, truncation_error, Mat};
+use crate::optim::OptKind;
+use crate::repro::common;
+use crate::util::mean;
+use crate::util::rng::Rng;
+
+pub fn run(args: &Args) -> Result<()> {
+    let rt = common::runtime(args)?;
+    let config = common::config_name(args);
+    let mut tr = common::trainer(args, rt, config, OptKind::AdamW, 60, None)?;
+    info!("fig2: training {config} with AdamW to collect target matrices");
+    tr.run()?;
+    let moments = tr.opt.second_moments();
+    let mut rng = Rng::new(args.u64_or("seed", 0xF162)?);
+
+    let ranks: Vec<usize> = vec![1, 2, 4, 8, 16, 32, 64];
+    let path = common::results_dir().join("fig2_sweep.csv");
+    let mut csv = CsvWriter::create(
+        &path,
+        &["rank", "svd_err", "srsi_err", "adafactor_err", "svd_ms",
+          "srsi_ms", "adafactor_ms"],
+    )?;
+
+    println!("\nFig.2 — mean approximation error / time vs rank \
+              ({} matrices)", moments.len());
+    println!("{:>5} {:>10} {:>10} {:>10} {:>9} {:>9} {:>9}", "rank",
+             "svd_err", "srsi_err", "ada_err", "svd_ms", "srsi_ms",
+             "ada_ms");
+    for &k in &ranks {
+        let mut svd_errs = vec![];
+        let mut srsi_errs = vec![];
+        let mut ada_errs = vec![];
+        let (mut svd_ms, mut srsi_ms, mut ada_ms) = (vec![], vec![], vec![]);
+        for (_, shape, v) in &moments {
+            let (m, n) = (shape[0], shape[1]);
+            if k > m.min(n) / 2 {
+                continue;
+            }
+            let a = Mat::from_vec(m, n, v.clone());
+            // SVD (exact optimum, Eq. 5)
+            let t0 = Instant::now();
+            let svd = jacobi_svd(&a);
+            svd_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            svd_errs.push(truncation_error(&svd.s, k, a.frob_norm()));
+            // S-RSI (paper l=5, p=5)
+            let t0 = Instant::now();
+            let out = srsi(&a, k, 5, 5, &mut rng);
+            srsi_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            srsi_errs.push(out.xi);
+            // Adafactor rank-1 (flat in k)
+            let t0 = Instant::now();
+            let (_, err) = adafactor_rank1(&a);
+            ada_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            ada_errs.push(err);
+        }
+        if svd_errs.is_empty() {
+            continue;
+        }
+        let row = [
+            k as f64,
+            mean(&svd_errs),
+            mean(&srsi_errs),
+            mean(&ada_errs),
+            mean(&svd_ms),
+            mean(&srsi_ms),
+            mean(&ada_ms),
+        ];
+        csv.row(&row)?;
+        println!(
+            "{:>5} {:>10.5} {:>10.5} {:>10.5} {:>9.2} {:>9.2} {:>9.2}",
+            k, row[1], row[2], row[3], row[4], row[5], row[6]
+        );
+    }
+    csv.flush()?;
+    println!("(paper shape: srsi_err -> svd_err as rank grows; ada_err \
+              flat; srsi_ms << svd_ms)");
+    println!("wrote {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Per-experiment reproduction harnesses — one module per table/figure of
+//! the paper (DESIGN.md §6 maps each to its workload and modules).
+//!
+//! Every harness writes CSV series under `results/` and prints the same
+//! rows/series the paper reports. Invoke via `adapprox repro <exp>`.
+
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+use anyhow::{bail, Result};
+
+use crate::cli::Args;
+
+/// Dispatch `adapprox repro <exp>`.
+pub fn run(args: &Args) -> Result<()> {
+    let Some(exp) = args.positionals.first() else {
+        bail!(
+            "usage: adapprox repro <fig1|fig2|fig3|fig4|fig5|fig6|table1|\
+             table2|table3|all> [--quick] [--steps N] [--config NAME]"
+        );
+    };
+    match exp.as_str() {
+        "fig1" => fig1::run(args),
+        "fig2" => fig2::run(args),
+        "fig3" => fig3::run(args),
+        "fig4" => fig4::run(args),
+        "fig5" => fig5::run(args),
+        "fig6" => fig6::run(args),
+        "table1" => table1::run(args),
+        "table2" => table2::run(args),
+        "table3" => table3::run(args),
+        "all" => {
+            table1::run(args)?;
+            table2::run(args)?;
+            fig1::run(args)?;
+            fig2::run(args)?;
+            fig3::run(args)?;
+            fig4::run(args)?;
+            fig6::run(args)?;
+            table3::run(args)?;
+            fig5::run(args)?;
+            Ok(())
+        }
+        other => bail!("unknown experiment '{other}'"),
+    }
+}

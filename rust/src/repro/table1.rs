@@ -1,0 +1,52 @@
+//! Table 1 — model configurations (the paper's GPT-2 sizes plus our
+//! scaled-down trainable configs, DESIGN.md §4).
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::coordinator::CsvWriter;
+use crate::repro::common;
+
+pub fn run(args: &Args) -> Result<()> {
+    let rt = common::runtime(args)?;
+    let path = common::results_dir().join("table1_configs.csv");
+    let mut csv = CsvWriter::create(
+        &path,
+        &["config", "params", "layers", "hidden", "heads", "seq_len",
+          "vocab", "trainable"],
+    )?;
+    println!("\nTable 1 — model configurations");
+    println!(
+        "{:<12} {:>10} {:>7} {:>7} {:>6} {:>8} {:>7} {:>10}",
+        "config", "params", "layers", "hidden", "heads", "seq_len", "vocab",
+        "trainable"
+    );
+    for (name, cfg) in &rt.manifest.configs {
+        csv.row_mixed(&[
+            name.clone(),
+            cfg.param_count.to_string(),
+            cfg.n_layer.to_string(),
+            cfg.d_model.to_string(),
+            cfg.n_head.to_string(),
+            cfg.seq_len.to_string(),
+            cfg.vocab.to_string(),
+            (!cfg.inventory_only).to_string(),
+        ])?;
+        println!(
+            "{:<12} {:>10} {:>7} {:>7} {:>6} {:>8} {:>7} {:>10}",
+            name,
+            format!("{:.1}M", cfg.param_count as f64 / 1e6),
+            cfg.n_layer,
+            cfg.d_model,
+            cfg.n_head,
+            cfg.seq_len,
+            cfg.vocab,
+            !cfg.inventory_only
+        );
+    }
+    csv.flush()?;
+    println!("(paper Table 1: 117M = 12L/768H/12h, 345M = 24L/1024H/16h, \
+              seq 1024)");
+    println!("wrote {}", path.display());
+    Ok(())
+}

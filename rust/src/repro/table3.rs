@@ -1,0 +1,92 @@
+//! Table 3 — downstream fine-tuning performance.
+//!
+//! Paper protocol: GPT-2 pretrained with each optimizer, then fine-tuned
+//! (with the same optimizer, cosine guidance off) on SQuAD/CoLA/MRPC/
+//! SST-2/MNLI; report accuracy/F1 per task + average. Here: the synthetic
+//! five-task suite (DESIGN.md §4's substitution) over the chosen config.
+//! Expected shape: Adapprox ≥ Adafactor ≥ CAME, ≈ AdamW on average.
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::coordinator::{Checkpoint, CsvWriter};
+use crate::data::task_suite;
+use crate::info;
+use crate::optim::OptKind;
+use crate::repro::common;
+use crate::util::mean;
+
+pub fn run(args: &Args) -> Result<()> {
+    let rt = common::runtime(args)?;
+    let config = common::config_name(args);
+    let cfg = rt.manifest.config(config)?.clone();
+    let pretrain_steps = args.usize_or("pretrain-steps",
+                                       if args.has("quick") { 60 } else { 150 })?;
+    let ft_steps = args.usize_or("ft-steps",
+                                 if args.has("quick") { 40 } else { 80 })?;
+    let ft_lr = args.f32_or("ft-lr", 1e-3)?;
+    let eval_examples = args.usize_or("eval-examples", 96)?;
+    let tasks = task_suite(cfg.vocab, cfg.seq_len,
+                           args.u64_or("task-seed", 0x7A5C)?);
+
+    let path = common::results_dir().join("table3_downstream.csv");
+    let mut csv = CsvWriter::create(
+        &path,
+        &["optimizer", "task", "accuracy"],
+    )?;
+
+    let mut summary: Vec<(OptKind, Vec<f64>)> = vec![];
+    for kind in common::all_kinds() {
+        info!("table3: pretraining {config} with {}", kind.name());
+        let mut tr = common::trainer(args, rt.clone(), config, kind,
+                                     pretrain_steps, None)?;
+        tr.run()?;
+        // checkpoint the pretrained weights; each task fine-tunes from here
+        let ckpt = Checkpoint {
+            config: config.to_string(),
+            step: tr.step_count(),
+            optimizer: kind.name().to_string(),
+            params: tr.params.clone(),
+        };
+        let ck_path = common::results_dir()
+            .join(format!("table3_{}_{}.ckpt", config, kind.name()));
+        ckpt.save(&ck_path)?;
+
+        let mut accs = vec![];
+        for task in &tasks {
+            // fresh trainer + optimizer state per task (paper: 3 epochs,
+            // per-task LR; cosine guidance off in fine-tuning)
+            let mut ft = common::trainer(args, rt.clone(), config, kind,
+                                         ft_steps, None)?;
+            ft.params = ckpt.params.clone();
+            let acc = ft.finetune_task(task, ft_steps, ft_lr, eval_examples)?;
+            accs.push(acc);
+            csv.row_mixed(&[
+                kind.name().to_string(),
+                task.kind.name().to_string(),
+                format!("{acc:.4}"),
+            ])?;
+            info!("table3: {} on {}: acc {:.3}", kind.name(),
+                  task.kind.name(), acc);
+        }
+        summary.push((kind, accs));
+    }
+    csv.flush()?;
+
+    println!("\nTable 3 — downstream fine-tuning accuracy on {config}");
+    print!("{:<12}", "optimizer");
+    for task in &tasks {
+        print!(" {:>20}", task.kind.name());
+    }
+    println!(" {:>8}", "average");
+    for (kind, accs) in &summary {
+        print!("{:<12}", kind.name());
+        for a in accs {
+            print!(" {:>20.3}", a);
+        }
+        println!(" {:>8.3}", mean(accs));
+    }
+    println!("(paper shape: adapprox >= adafactor >= came; ~adamw)");
+    println!("wrote {}", path.display());
+    Ok(())
+}

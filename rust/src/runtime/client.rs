@@ -1,0 +1,183 @@
+//! PJRT client wrapper: compile-once executable cache + typed execution.
+//!
+//! Compilation happens lazily on first use of each program (cold start a few
+//! ms per program) and the `PjRtLoadedExecutable` is cached for the process
+//! lifetime. Input shapes/dtypes are validated against the manifest before
+//! every execution — a shape bug fails loudly in Rust instead of deep inside
+//! XLA.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+use xla::{HloModuleProto, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::{Manifest, ProgramSpec, Tensor};
+use crate::info;
+
+/// Runtime = PJRT CPU client + manifest + executable cache + counters.
+pub struct Runtime {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, std::rc::Rc<PjRtLoadedExecutable>>>,
+    /// cumulative (executions, execution seconds, compile seconds)
+    stats: RefCell<RuntimeStats>,
+}
+
+/// Execution counters for the perf pass.
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub exec_seconds: f64,
+    pub compiles: u64,
+    pub compile_seconds: f64,
+}
+
+impl Runtime {
+    /// Create a CPU runtime over an artifact directory.
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client =
+            PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Fetch (compiling if needed) the executable for `name`.
+    pub fn executable(
+        &self,
+        name: &str,
+    ) -> Result<std::rc::Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.program(name)?;
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(
+            spec.file
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {:?}: {e:?}", spec.file))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut s = self.stats.borrow_mut();
+            s.compiles += 1;
+            s.compile_seconds += dt;
+        }
+        info!("compiled {name} in {:.0}ms", dt * 1e3);
+        let rc = std::rc::Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Validate `args` against the program's input contract.
+    fn validate(&self, spec: &ProgramSpec, args: &[&Tensor]) -> Result<()> {
+        if args.len() != spec.inputs.len() {
+            bail!(
+                "{}: got {} args, expected {}",
+                spec.name,
+                args.len(),
+                spec.inputs.len()
+            );
+        }
+        for (&t, a) in args.iter().zip(&spec.inputs) {
+            if t.shape != a.shape {
+                bail!(
+                    "{}: arg '{}' shape {:?} != manifest {:?}",
+                    spec.name,
+                    a.name,
+                    t.shape,
+                    a.shape
+                );
+            }
+            if t.dtype_str() != a.dtype {
+                bail!(
+                    "{}: arg '{}' dtype {} != manifest {}",
+                    spec.name,
+                    a.name,
+                    t.dtype_str(),
+                    a.dtype
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute a program on host tensors, returning host tensors.
+    ///
+    /// All programs are lowered with `return_tuple=True`, so the single
+    /// output buffer is a tuple we decompose into the manifest's outputs.
+    pub fn exec(&self, name: &str, args: &[Tensor]) -> Result<Vec<Tensor>> {
+        let refs: Vec<&Tensor> = args.iter().collect();
+        self.exec_ref(name, &refs)
+    }
+
+    /// By-reference variant of [`Self::exec`] — the hot-path entry point.
+    ///
+    /// Avoids deep-copying argument tensors just to pass them (the
+    /// whole-model train_step takes every parameter every step; cloning
+    /// them first cost one full model copy per step before the perf pass —
+    /// see EXPERIMENTS.md §Perf).
+    pub fn exec_ref(&self, name: &str, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self.manifest.program(name)?.clone();
+        self.validate(&spec, args)?;
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let t0 = Instant::now();
+        let out = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let mut result = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{name}: no replica output"))?
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{name}: empty output"))?
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{name} to_literal: {e:?}"))?;
+        let parts = result
+            .decompose_tuple()
+            .map_err(|e| anyhow!("{name} decompose: {e:?}"))?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.executions += 1;
+            s.exec_seconds += t0.elapsed().as_secs_f64();
+        }
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "{name}: {} outputs, manifest says {}",
+                parts.len(),
+                spec.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .map(Tensor::from_literal)
+            .collect::<Result<Vec<_>>>()
+            .with_context(|| format!("converting outputs of {name}"))
+    }
+
+    /// Number of programs compiled so far (cache size).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

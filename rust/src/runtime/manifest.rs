@@ -1,0 +1,373 @@
+//! Manifest parsing: the contract between aot.py and the coordinator.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One program argument/output: name, dtype ("f32"/"i32"), shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArgSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+/// One lowered HLO program.
+#[derive(Clone, Debug)]
+pub struct ProgramSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<ArgSpec>,
+    pub outputs: Vec<ArgSpec>,
+}
+
+/// One model parameter: name, shape, kind ("matrix"/"vector").
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: String,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_matrix(&self) -> bool {
+        self.kind == "matrix"
+    }
+}
+
+/// One model configuration (trainable or inventory-only).
+#[derive(Clone, Debug)]
+pub struct ConfigSpec {
+    pub name: String,
+    pub vocab: usize,
+    pub n_layer: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub inventory_only: bool,
+    pub param_count: usize,
+    pub params: Vec<ParamSpec>,
+}
+
+/// Rank-bucket ladder for one matrix shape.
+#[derive(Clone, Debug)]
+pub struct Ladder {
+    pub buckets: Vec<usize>,
+    pub oversample: Vec<usize>,
+    pub kmax: usize,
+}
+
+impl Ladder {
+    /// Smallest bucket >= the requested rank (clamped to kmax's bucket).
+    pub fn bucket_for(&self, k: usize) -> usize {
+        for &b in &self.buckets {
+            if b >= k {
+                return b;
+            }
+        }
+        *self.buckets.last().expect("non-empty ladder")
+    }
+
+    /// Index of a bucket in the ladder.
+    pub fn index_of(&self, bucket: usize) -> Option<usize> {
+        self.buckets.iter().position(|&b| b == bucket)
+    }
+
+    /// Oversampling p for a bucket (paper Alg. 2 cap).
+    pub fn p_for(&self, bucket: usize) -> usize {
+        self.index_of(bucket)
+            .map(|i| self.oversample[i])
+            .unwrap_or(0)
+    }
+}
+
+/// Paper hyperparameter defaults (manifest `hyper_defaults`).
+#[derive(Clone, Debug)]
+pub struct HyperDefaults {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    pub clip_d: f32,
+    pub k_init: usize,
+    pub l: usize,
+    pub p: usize,
+    pub xi_thresh: f32,
+    pub delta_s: usize,
+    pub f_eta: f64,
+    pub f_omega: f64,
+    pub f_phi: f64,
+    pub f_tau: f64,
+}
+
+/// Parsed manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: BTreeMap<String, ConfigSpec>,
+    pub programs: BTreeMap<String, ProgramSpec>,
+    pub ladders: BTreeMap<String, Ladder>,
+    pub hyper: HyperDefaults,
+}
+
+fn req<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow!("manifest missing key '{key}'"))
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    req(j, key)?
+        .as_usize()
+        .ok_or_else(|| anyhow!("'{key}' is not a number"))
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64> {
+    req(j, key)?
+        .as_f64()
+        .ok_or_else(|| anyhow!("'{key}' is not a number"))
+}
+
+fn parse_args(j: &Json) -> Result<Vec<ArgSpec>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("args not an array"))?
+        .iter()
+        .map(|a| {
+            Ok(ArgSpec {
+                name: req(a, "name")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("arg name"))?
+                    .to_string(),
+                dtype: req(a, "dtype")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("arg dtype"))?
+                    .to_string(),
+                shape: req(a, "shape")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("arg shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("dim")))
+                    .collect::<Result<_>>()?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+
+        let mut configs = BTreeMap::new();
+        for (name, c) in req(&j, "configs")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("configs"))?
+        {
+            let params = req(c, "params")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("params"))?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: req(p, "name")?
+                            .as_str()
+                            .ok_or_else(|| anyhow!("pname"))?
+                            .to_string(),
+                        shape: req(p, "shape")?
+                            .as_arr()
+                            .ok_or_else(|| anyhow!("pshape"))?
+                            .iter()
+                            .map(|d| d.as_usize().ok_or_else(|| anyhow!("dim")))
+                            .collect::<Result<_>>()?,
+                        kind: req(p, "kind")?
+                            .as_str()
+                            .ok_or_else(|| anyhow!("pkind"))?
+                            .to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            configs.insert(
+                name.clone(),
+                ConfigSpec {
+                    name: name.clone(),
+                    vocab: req_usize(c, "vocab")?,
+                    n_layer: req_usize(c, "n_layer")?,
+                    d_model: req_usize(c, "d_model")?,
+                    n_head: req_usize(c, "n_head")?,
+                    seq_len: req_usize(c, "seq_len")?,
+                    batch: req_usize(c, "batch")?,
+                    inventory_only: req(c, "inventory_only")?
+                        .as_bool()
+                        .unwrap_or(false),
+                    param_count: req_usize(c, "param_count")?,
+                    params,
+                },
+            );
+        }
+
+        let mut programs = BTreeMap::new();
+        for (name, p) in req(&j, "programs")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("programs"))?
+        {
+            programs.insert(
+                name.clone(),
+                ProgramSpec {
+                    name: name.clone(),
+                    file: dir.join(
+                        req(p, "file")?
+                            .as_str()
+                            .ok_or_else(|| anyhow!("file"))?,
+                    ),
+                    inputs: parse_args(req(p, "inputs")?)?,
+                    outputs: parse_args(req(p, "outputs")?)?,
+                },
+            );
+        }
+
+        let mut ladders = BTreeMap::new();
+        for (key, l) in req(&j, "ladders")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("ladders"))?
+        {
+            let buckets: Vec<usize> = req(l, "buckets")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("buckets"))?
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| anyhow!("bucket")))
+                .collect::<Result<_>>()?;
+            let oversample: Vec<usize> = req(l, "p")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("p"))?
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| anyhow!("p entry")))
+                .collect::<Result<_>>()?;
+            if buckets.is_empty() || buckets.len() != oversample.len() {
+                bail!("ladder {key}: bad buckets/p lengths");
+            }
+            ladders.insert(
+                key.clone(),
+                Ladder {
+                    buckets,
+                    oversample,
+                    kmax: req_usize(l, "kmax")?,
+                },
+            );
+        }
+
+        let hd = req(&j, "hyper_defaults")?;
+        let hyper = HyperDefaults {
+            beta1: req_f64(hd, "beta1")? as f32,
+            beta2: req_f64(hd, "beta2")? as f32,
+            eps: req_f64(hd, "eps")? as f32,
+            weight_decay: req_f64(hd, "weight_decay")? as f32,
+            clip_d: req_f64(hd, "clip_d")? as f32,
+            k_init: req_usize(hd, "k_init")?,
+            l: req_usize(hd, "l")?,
+            p: req_usize(hd, "p")?,
+            xi_thresh: req_f64(hd, "xi_thresh")? as f32,
+            delta_s: req_usize(hd, "delta_s")?,
+            f_eta: req_f64(hd, "f_eta")?,
+            f_omega: req_f64(hd, "f_omega")?,
+            f_phi: req_f64(hd, "f_phi")?,
+            f_tau: req_f64(hd, "f_tau")?,
+        };
+
+        Ok(Manifest {
+            dir,
+            configs,
+            programs,
+            ladders,
+            hyper,
+        })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigSpec> {
+        self.configs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown config '{name}'"))
+    }
+
+    pub fn program(&self, name: &str) -> Result<&ProgramSpec> {
+        self.programs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown program '{name}'"))
+    }
+
+    /// Ladder for a matrix shape.
+    pub fn ladder(&self, m: usize, n: usize) -> Result<&Ladder> {
+        let key = format!("{m}x{n}");
+        self.ladders
+            .get(&key)
+            .ok_or_else(|| anyhow!("no ladder for shape {key}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        art_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(art_dir()).unwrap();
+        assert!(m.configs.contains_key("nano"));
+        assert!(m.configs.contains_key("gpt2_117m"));
+        assert!(m.programs.contains_key("train_step_nano"));
+        assert_eq!(m.hyper.delta_s, 10);
+    }
+
+    #[test]
+    fn train_step_contract() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(art_dir()).unwrap();
+        let cfg = m.config("nano").unwrap();
+        let prog = m.program("train_step_nano").unwrap();
+        assert_eq!(prog.inputs.len(), cfg.params.len() + 3);
+        assert_eq!(prog.outputs.len(), cfg.params.len() + 1);
+        assert_eq!(prog.outputs[0].name, "loss");
+    }
+
+    #[test]
+    fn ladder_bucketing() {
+        let l = Ladder {
+            buckets: vec![1, 2, 4, 8, 16, 32],
+            oversample: vec![5, 5, 5, 5, 5, 0],
+            kmax: 32,
+        };
+        assert_eq!(l.bucket_for(1), 1);
+        assert_eq!(l.bucket_for(3), 4);
+        assert_eq!(l.bucket_for(9), 16);
+        assert_eq!(l.bucket_for(33), 32); // clamped
+        assert_eq!(l.p_for(32), 0);
+        assert_eq!(l.p_for(4), 5);
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let err = Manifest::load("/nonexistent-dir-xyz").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: load AOT artifacts, compile once, execute from the hot path.
+//!
+//! - [`manifest`] — parses `artifacts/manifest.json` (the binding contract
+//!   emitted by `python/compile/aot.py`).
+//! - [`tensor`] — host-side tensors and Literal conversion.
+//! - [`client`] — the PJRT CPU client wrapper with a lazy executable cache;
+//!   one compiled executable per program, compiled on first use and reused
+//!   for the rest of the process.
+
+pub mod client;
+pub mod manifest;
+pub mod tensor;
+
+pub use client::{Runtime, RuntimeStats};
+pub use manifest::{
+    ConfigSpec, HyperDefaults, Ladder, Manifest, ParamSpec, ProgramSpec,
+};
+pub use tensor::{Tensor, TensorData};

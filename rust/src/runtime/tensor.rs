@@ -1,0 +1,190 @@
+//! Host tensors and Literal conversion.
+//!
+//! The coordinator keeps all state as plain row-major `Vec<f32>` buffers
+//! (cheap to checkpoint, all-reduce, and account); [`Tensor`] adds shape +
+//! dtype and converts to/from `xla::Literal` at the PJRT boundary.
+
+use anyhow::{anyhow, bail, Result};
+use xla::{ElementType, Literal};
+
+/// Tensor payload: the two dtypes the programs use.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Host tensor: shape + data (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(),
+                   "shape {shape:?} vs len {}", data.len());
+        Tensor {
+            shape,
+            data: TensorData::F32(data),
+        }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor {
+            shape,
+            data: TensorData::I32(data),
+        }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor::f32(vec![], vec![v])
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::f32(shape, vec![0.0; n])
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn dtype_str(&self) -> &'static str {
+        match self.data {
+            TensorData::F32(_) => "f32",
+            TensorData::I32(_) => "i32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut Vec<f32>> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Scalar value of a 0-d / 1-element f32 tensor.
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("tensor has {} elements, expected scalar", d.len());
+        }
+        Ok(d[0])
+    }
+
+    /// Convert to an xla Literal (copies).
+    pub fn to_literal(&self) -> Result<Literal> {
+        match &self.data {
+            TensorData::F32(v) => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(
+                        v.as_ptr() as *const u8,
+                        v.len() * 4,
+                    )
+                };
+                Literal::create_from_shape_and_untyped_data(
+                    ElementType::F32,
+                    &self.shape,
+                    bytes,
+                )
+                .map_err(|e| anyhow!("literal create: {e:?}"))
+            }
+            TensorData::I32(v) => {
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(
+                        v.as_ptr() as *const u8,
+                        v.len() * 4,
+                    )
+                };
+                Literal::create_from_shape_and_untyped_data(
+                    ElementType::S32,
+                    &self.shape,
+                    bytes,
+                )
+                .map_err(|e| anyhow!("literal create: {e:?}"))
+            }
+        }
+    }
+
+    /// Convert a Literal back to a host tensor.
+    pub fn from_literal(lit: &Literal) -> Result<Tensor> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow!("literal shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            ElementType::F32 => {
+                let v = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+                Ok(Tensor::f32(dims, v))
+            }
+            ElementType::S32 => {
+                let v = lit
+                    .to_vec::<i32>()
+                    .map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+                Ok(Tensor::i32(dims, v))
+            }
+            other => bail!("unsupported literal dtype {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = Tensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn roundtrip_i32() {
+        let t = Tensor::i32(vec![4], vec![7, -1, 0, 42]);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn roundtrip_scalar() {
+        let t = Tensor::scalar(3.5);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back.scalar_f32().unwrap(), 3.5);
+        assert!(back.shape.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::f32(vec![2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn dtype_guards() {
+        let t = Tensor::i32(vec![1], vec![1]);
+        assert!(t.as_f32().is_err());
+        assert!(t.as_i32().is_ok());
+    }
+}

@@ -1,0 +1,112 @@
+//! Property-testing harness substrate (no `proptest` in the vendored set).
+//!
+//! A deliberately small API: [`forall`] runs a property under many seeded
+//! RNGs and, on failure, re-runs it to report the failing seed so the case
+//! is reproducible (`FORALL_SEED=<n>` pins a single case). Coordinator
+//! invariants (rank ladder, schedule, batching, state sizes) and linalg
+//! laws are tested through this.
+
+use crate::util::rng::Rng;
+
+/// Run `prop` under `cases` independent seeded RNGs.
+///
+/// Panics (with the seed) on the first failing case. Honouring the
+/// `FORALL_SEED` env var replays exactly one seed for debugging.
+pub fn forall(cases: u64, mut prop: impl FnMut(&mut Rng)) {
+    if let Ok(s) = std::env::var("FORALL_SEED") {
+        let seed: u64 = s.parse().expect("FORALL_SEED must be u64");
+        let mut rng = Rng::new(seed);
+        prop(&mut rng);
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0xF0A11u64.wrapping_mul(case + 1);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        }));
+        if let Err(payload) = result {
+            eprintln!(
+                "forall: property failed on case {case} (replay with \
+                 FORALL_SEED={seed})"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Random usize in [lo, hi] inclusive.
+pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below((hi - lo + 1) as u64) as usize
+}
+
+/// Random f64 in [lo, hi).
+pub fn f64_in(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+    lo + rng.uniform() * (hi - lo)
+}
+
+/// Approximate float equality with mixed tolerance.
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+}
+
+/// Assert two f32 slices agree elementwise within tolerance; reports the
+/// worst offender.
+pub fn assert_allclose(got: &[f32], want: &[f32], rtol: f64, atol: f64) {
+    assert_eq!(got.len(), want.len(), "length mismatch");
+    let mut worst = (0usize, 0.0f64);
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        let err = (g as f64 - w as f64).abs();
+        let bound = atol + rtol * (w as f64).abs().max((g as f64).abs());
+        if err > bound && err > worst.1 {
+            worst = (i, err);
+        }
+    }
+    if worst.1 > 0.0 {
+        panic!(
+            "allclose failed at [{}]: got {} want {} (|err|={:.3e}, \
+             rtol={rtol}, atol={atol})",
+            worst.0, got[worst.0], want[worst.0], worst.1
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut n = 0;
+        forall(17, |_| n += 1);
+        assert_eq!(n, 17);
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_propagates_failure() {
+        forall(4, |rng| {
+            assert!(rng.uniform() < 2.0); // always true
+            assert!(false);
+        });
+    }
+
+    #[test]
+    fn usize_in_bounds() {
+        forall(16, |rng| {
+            let v = usize_in(rng, 3, 9);
+            assert!((3..=9).contains(&v));
+        });
+    }
+
+    #[test]
+    fn allclose_passes_equal() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-8], 1e-6, 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn allclose_fails_on_mismatch() {
+        assert_allclose(&[1.0], &[2.0], 1e-6, 1e-6);
+    }
+}

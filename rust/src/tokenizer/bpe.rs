@@ -1,0 +1,261 @@
+//! Byte-pair encoding: trainer + encoder/decoder.
+//!
+//! Vocabulary layout: ids 0..N_SPECIAL are reserved specials, then 256 byte
+//! tokens, then learned merges. Training is the classic greedy scheme —
+//! repeatedly merge the most frequent adjacent pair — over a word-frequency
+//! table (words = whitespace-split chunks, with the space folded into the
+//! following word, GPT-2 style).
+
+use std::collections::HashMap;
+
+/// Reserved special token ids.
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const SEP: i32 = 3;
+pub const N_SPECIAL: usize = 4;
+
+/// A trained byte-level BPE tokenizer.
+#[derive(Clone, Debug)]
+pub struct BpeTokenizer {
+    /// merge rules in priority order: (left id, right id) -> new id
+    merges: HashMap<(i32, i32), i32>,
+    /// id -> byte sequence
+    vocab_bytes: Vec<Vec<u8>>,
+}
+
+/// Streaming BPE trainer.
+pub struct BpeTrainer {
+    /// word (byte chunk) -> count
+    word_counts: HashMap<Vec<u8>, u64>,
+}
+
+impl BpeTrainer {
+    pub fn new() -> Self {
+        BpeTrainer {
+            word_counts: HashMap::new(),
+        }
+    }
+
+    /// Accumulate text into the word-frequency table.
+    pub fn feed(&mut self, text: &str) {
+        // GPT-2-style: a leading space belongs to the word that follows.
+        let mut word = Vec::new();
+        for &b in text.as_bytes() {
+            if b == b' ' || b == b'\n' {
+                if !word.is_empty() {
+                    *self.word_counts.entry(std::mem::take(&mut word)).or_insert(0) += 1;
+                }
+                word.push(b);
+            } else {
+                word.push(b);
+            }
+        }
+        if !word.is_empty() {
+            *self.word_counts.entry(word).or_insert(0) += 1;
+        }
+    }
+
+    /// Learn merges until the vocabulary reaches `vocab_size`.
+    pub fn train(&self, vocab_size: usize) -> BpeTokenizer {
+        assert!(vocab_size >= N_SPECIAL + 256, "vocab too small for bytes");
+        let base = (N_SPECIAL + 256) as i32;
+        let mut vocab_bytes: Vec<Vec<u8>> = Vec::with_capacity(vocab_size);
+        for _ in 0..N_SPECIAL {
+            vocab_bytes.push(Vec::new());
+        }
+        for b in 0..=255u8 {
+            vocab_bytes.push(vec![b]);
+        }
+
+        // words as id sequences
+        let mut words: Vec<(Vec<i32>, u64)> = self
+            .word_counts
+            .iter()
+            .map(|(w, &c)| {
+                (
+                    w.iter().map(|&b| N_SPECIAL as i32 + b as i32).collect(),
+                    c,
+                )
+            })
+            .collect();
+        words.sort(); // deterministic training independent of hash order
+
+        let mut merges: HashMap<(i32, i32), i32> = HashMap::new();
+        let mut next_id = base;
+        while (next_id as usize) < vocab_size {
+            // count adjacent pairs
+            let mut pair_counts: HashMap<(i32, i32), u64> = HashMap::new();
+            for (ids, c) in &words {
+                for w in ids.windows(2) {
+                    *pair_counts.entry((w[0], w[1])).or_insert(0) += c;
+                }
+            }
+            // deterministic argmax: highest count, ties by smallest pair
+            let best = pair_counts
+                .iter()
+                .max_by_key(|(&pair, &c)| (c, std::cmp::Reverse(pair)))
+                .map(|(&p, &c)| (p, c));
+            let Some((pair, count)) = best else { break };
+            if count < 2 {
+                break; // nothing worth merging
+            }
+            let id = next_id;
+            next_id += 1;
+            merges.insert(pair, id);
+            let mut bytes = vocab_bytes[pair.0 as usize].clone();
+            bytes.extend_from_slice(&vocab_bytes[pair.1 as usize]);
+            vocab_bytes.push(bytes);
+            // apply the merge to every word
+            for (ids, _) in words.iter_mut() {
+                apply_merge(ids, pair, id);
+            }
+        }
+
+        BpeTokenizer {
+            merges,
+            vocab_bytes,
+        }
+    }
+}
+
+fn apply_merge(ids: &mut Vec<i32>, pair: (i32, i32), new_id: i32) {
+    let mut out = Vec::with_capacity(ids.len());
+    let mut i = 0;
+    while i < ids.len() {
+        if i + 1 < ids.len() && ids[i] == pair.0 && ids[i + 1] == pair.1 {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(ids[i]);
+            i += 1;
+        }
+    }
+    *ids = out;
+}
+
+impl BpeTokenizer {
+    /// Vocabulary size including specials and byte tokens.
+    pub fn vocab_size(&self) -> usize {
+        self.vocab_bytes.len()
+    }
+
+    /// Encode text to token ids (no specials added).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut ids: Vec<i32> = text
+            .as_bytes()
+            .iter()
+            .map(|&b| N_SPECIAL as i32 + b as i32)
+            .collect();
+        // iteratively apply the highest-priority (lowest id) applicable merge
+        loop {
+            let mut best: Option<(usize, i32)> = None; // (pos, new_id)
+            for i in 0..ids.len().saturating_sub(1) {
+                if let Some(&nid) = self.merges.get(&(ids[i], ids[i + 1])) {
+                    if best.map_or(true, |(_, b)| nid < b) {
+                        best = Some((i, nid));
+                    }
+                }
+            }
+            match best {
+                Some((_, nid)) => {
+                    // rebuild, merging every occurrence of this rule
+                    let pair = *self
+                        .merges
+                        .iter()
+                        .find(|(_, &v)| v == nid)
+                        .map(|(k, _)| k)
+                        .unwrap();
+                    apply_merge(&mut ids, pair, nid);
+                }
+                None => break,
+            }
+        }
+        ids
+    }
+
+    /// Decode ids back to text (lossy on invalid UTF-8).
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if (id as usize) < self.vocab_bytes.len() {
+                bytes.extend_from_slice(&self.vocab_bytes[id as usize]);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_corpus() -> String {
+        let mut s = String::new();
+        for _ in 0..50 {
+            s.push_str("the quick brown fox jumps over the lazy dog ");
+            s.push_str("the rank of the moment matrix is low ");
+        }
+        s
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let mut tr = BpeTrainer::new();
+        tr.feed(&sample_corpus());
+        let tok = tr.train(300);
+        for text in ["the quick brown fox", "unseen wörds déjà vu!",
+                     "  spaces   and\nnewlines "] {
+            assert_eq!(tok.decode(&tok.encode(text)), text);
+        }
+    }
+
+    #[test]
+    fn merges_compress_frequent_words() {
+        let mut tr = BpeTrainer::new();
+        tr.feed(&sample_corpus());
+        let tok = tr.train(400);
+        let ids = tok.encode("the the the");
+        // "the" is the most frequent word: must be far fewer tokens than bytes
+        assert!(ids.len() <= 6, "got {} tokens", ids.len());
+    }
+
+    #[test]
+    fn vocab_size_respected() {
+        let mut tr = BpeTrainer::new();
+        tr.feed(&sample_corpus());
+        let tok = tr.train(280);
+        assert!(tok.vocab_size() <= 280);
+        assert!(tok.vocab_size() > N_SPECIAL + 256);
+    }
+
+    #[test]
+    fn unseen_bytes_fall_back_to_byte_tokens() {
+        let mut tr = BpeTrainer::new();
+        tr.feed("aaa bbb");
+        let tok = tr.train(262);
+        let ids = tok.encode("\u{00ff}zq");
+        assert!(!ids.is_empty());
+        assert_eq!(tok.decode(&ids), "\u{00ff}zq");
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let mut tr1 = BpeTrainer::new();
+        tr1.feed(&sample_corpus());
+        let t1 = tr1.train(320);
+        let mut tr2 = BpeTrainer::new();
+        tr2.feed(&sample_corpus());
+        let t2 = tr2.train(320);
+        assert_eq!(t1.encode("the quick brown"), t2.encode("the quick brown"));
+    }
+
+    #[test]
+    fn specials_reserved() {
+        let mut tr = BpeTrainer::new();
+        tr.feed("x y z");
+        let tok = tr.train(260);
+        // byte tokens start after specials
+        assert_eq!(tok.encode("\0")[0], N_SPECIAL as i32);
+    }
+}

@@ -1,0 +1,7 @@
+//! Byte-level BPE tokenizer substrate (the paper uses SentencePiece; we
+//! train our own byte-pair-encoding vocabulary over the synthetic corpus —
+//! same role in the pipeline: text → fixed-vocab token ids).
+
+mod bpe;
+
+pub use bpe::{BpeTokenizer, BpeTrainer};

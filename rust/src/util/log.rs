@@ -1,0 +1,80 @@
+//! Tiny leveled logger (no `log`/`env_logger` facade needed at runtime).
+//!
+//! The coordinator logs to stderr with a monotonic timestamp; verbosity is a
+//! process-global set once by the CLI (`-q` / `-v` / `-vv`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // info
+
+#[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+fn start() -> Instant {
+    use std::sync::OnceLock;
+    static START: OnceLock<Instant> = OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+pub fn log(l: Level, args: std::fmt::Arguments) {
+    if enabled(l) {
+        let t = start().elapsed().as_secs_f64();
+        let tag = match l {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+        };
+        eprintln!("[{t:9.3}s {tag}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($a:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, format_args!($($a)*)) };
+}
+
+#[macro_export]
+macro_rules! warn_ {
+    ($($a:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, format_args!($($a)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($a:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, format_args!($($a)*)) };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($a:tt)*) => { $crate::util::log::log($crate::util::log::Level::Error, format_args!($($a)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+    }
+}

@@ -1,0 +1,68 @@
+//! Integration tests over the PJRT runtime + real artifacts.
+//!
+//! All tests no-op gracefully when `artifacts/` hasn't been built
+//! (`make artifacts`), so `cargo test` stays green in a fresh checkout.
+
+use adapprox::runtime::{Runtime, Tensor};
+
+fn runtime() -> Option<Runtime> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        return None;
+    }
+    Some(Runtime::new(dir).expect("runtime"))
+}
+
+#[test]
+fn executes_vec_adamw_artifact_with_known_numbers() {
+    let Some(rt) = runtime() else { return };
+    let n = 128usize;
+    let args = vec![
+        Tensor::f32(vec![n], vec![1.0; n]),
+        Tensor::zeros(vec![n]),
+        Tensor::zeros(vec![n]),
+        Tensor::f32(vec![n], vec![0.01; n]),
+        Tensor::scalar(1.0),
+        Tensor::scalar(1e-3),
+        Tensor::scalar(0.9),
+        Tensor::scalar(0.999),
+        Tensor::scalar(1e-8),
+        Tensor::scalar(0.1),
+    ];
+    let out = rt.exec("vec_adamw_step_128", &args).unwrap();
+    assert_eq!(out.len(), 3);
+    // bias-corrected first step: update = g/|g| = 1, w' = 1 - lr*(1 + wd*1)
+    let w2 = out[0].as_f32().unwrap();
+    assert!((w2[0] - 0.9989).abs() < 1e-5, "{}", w2[0]);
+}
+
+#[test]
+fn shape_validation_rejects_bad_args() {
+    let Some(rt) = runtime() else { return };
+    let bad = vec![Tensor::zeros(vec![64])]; // wrong arity
+    let err = rt.exec("vec_adamw_step_128", &bad).unwrap_err();
+    assert!(err.to_string().contains("args"));
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(rt) = runtime() else { return };
+    let n = 128usize;
+    let args: Vec<Tensor> = vec![
+        Tensor::zeros(vec![n]),
+        Tensor::zeros(vec![n]),
+        Tensor::zeros(vec![n]),
+        Tensor::zeros(vec![n]),
+        Tensor::scalar(1.0),
+        Tensor::scalar(0.0),
+        Tensor::scalar(0.9),
+        Tensor::scalar(0.999),
+        Tensor::scalar(1e-8),
+        Tensor::scalar(0.0),
+    ];
+    rt.exec("vec_adamw_step_128", &args).unwrap();
+    rt.exec("vec_adamw_step_128", &args).unwrap();
+    let s = rt.stats();
+    assert_eq!(s.compiles, 1);
+    assert_eq!(s.executions, 2);
+}

@@ -1,0 +1,168 @@
+//! End-to-end training tests through the full three-layer stack:
+//! coordinator -> AOT train_step + optimizer programs -> PJRT.
+//! Skipped gracefully when `artifacts/` is missing.
+
+use std::rc::Rc;
+
+use adapprox::coordinator::{Checkpoint, TrainOptions, Trainer};
+use adapprox::data::task_suite;
+use adapprox::optim::{Hyper, OptKind};
+use adapprox::runtime::Runtime;
+use adapprox::util::rng::Rng;
+
+fn runtime() -> Option<Rc<Runtime>> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        return None;
+    }
+    Some(Rc::new(Runtime::new(dir).unwrap()))
+}
+
+fn quick_opts(steps: usize, seed: u64) -> TrainOptions {
+    TrainOptions {
+        steps,
+        warmup: 2,
+        eval_every: 0,
+        eval_batches: 1,
+        log_every: usize::MAX,
+        seed,
+        ..Default::default()
+    }
+}
+
+fn train(rt: Rc<Runtime>, kind: OptKind, steps: usize, seed: u64) -> (f64, f64, Trainer) {
+    let hyper = Hyper::paper_defaults(kind, &rt.manifest.hyper);
+    let mut tr =
+        Trainer::new(rt, "micro", hyper, quick_opts(steps, seed)).unwrap();
+    let hist = tr.run().unwrap();
+    let first = hist.first().unwrap().train_loss;
+    let last = hist.last().unwrap().train_loss;
+    (first, last, tr)
+}
+
+#[test]
+fn adapprox_loss_decreases_e2e() {
+    let Some(rt) = runtime() else { return };
+    let (first, last, tr) = train(rt, OptKind::Adapprox, 30, 1);
+    // initial loss ~ ln(vocab) = ln(256) ~ 5.55
+    assert!((first - 5.55).abs() < 0.6, "initial loss {first}");
+    assert!(last < first - 0.05, "no descent: {first} -> {last}");
+    // adaptive rank engaged
+    let moments = tr.opt.second_moments();
+    assert!(!moments.is_empty());
+}
+
+#[test]
+fn all_optimizers_descend_e2e() {
+    let Some(rt) = runtime() else { return };
+    for kind in [OptKind::AdamW, OptKind::Adafactor, OptKind::Came] {
+        let (first, last, _) = train(rt.clone(), kind, 25, 2);
+        assert!(last < first, "{kind:?}: {first} -> {last}");
+    }
+}
+
+#[test]
+fn deterministic_replay_e2e() {
+    let Some(rt) = runtime() else { return };
+    let (_, l1, tr1) = train(rt.clone(), OptKind::Adapprox, 8, 7);
+    let (_, l2, tr2) = train(rt, OptKind::Adapprox, 8, 7);
+    assert_eq!(l1, l2);
+    assert_eq!(
+        tr1.params[0].as_f32().unwrap(),
+        tr2.params[0].as_f32().unwrap()
+    );
+}
+
+#[test]
+fn replicas_match_bigger_batch_semantics() {
+    let Some(rt) = runtime() else { return };
+    // 2 replicas must produce a valid run with identical shapes and a
+    // finite loss (the all-reduce path)
+    let hyper = Hyper::paper_defaults(OptKind::Adapprox, &rt.manifest.hyper);
+    let mut opts = quick_opts(6, 3);
+    opts.replicas = 2;
+    let mut tr = Trainer::new(rt, "micro", hyper, opts).unwrap();
+    let hist = tr.run().unwrap();
+    assert!(hist.iter().all(|r| r.train_loss.is_finite()));
+}
+
+#[test]
+fn grad_accumulation_runs() {
+    let Some(rt) = runtime() else { return };
+    let hyper = Hyper::paper_defaults(OptKind::AdamW, &rt.manifest.hyper);
+    let mut opts = quick_opts(4, 4);
+    opts.grad_accum = 3;
+    let mut tr = Trainer::new(rt, "micro", hyper, opts).unwrap();
+    let hist = tr.run().unwrap();
+    assert!(hist.last().unwrap().train_loss.is_finite());
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_eval() {
+    let Some(rt) = runtime() else { return };
+    let (_, _, tr) = train(rt.clone(), OptKind::Adapprox, 10, 5);
+    let val_before = tr.evaluate(2).unwrap();
+    let path = std::env::temp_dir()
+        .join(format!("adapprox_e2e_{}.ckpt", std::process::id()));
+    Checkpoint {
+        config: "micro".into(),
+        step: tr.step_count(),
+        optimizer: tr.opt.name(),
+        params: tr.params.clone(),
+    }
+    .save(&path)
+    .unwrap();
+    let ck = Checkpoint::load(&path).unwrap();
+    let hyper = Hyper::paper_defaults(OptKind::Adapprox, &rt.manifest.hyper);
+    let mut tr2 =
+        Trainer::new(rt, "micro", hyper, quick_opts(1, 5)).unwrap();
+    tr2.params = ck.params;
+    let val_after = tr2.evaluate(2).unwrap();
+    assert!((val_before - val_after).abs() < 1e-6,
+            "{val_before} vs {val_after}");
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn finetune_beats_chance_on_retrieval() {
+    let Some(rt) = runtime() else { return };
+    let cfg = rt.manifest.config("micro").unwrap().clone();
+    let tasks = task_suite(cfg.vocab, cfg.seq_len, 0x7A5C);
+    // retrieval (4-class) is pure key->label memorization over 8 keys —
+    // the fastest-learnable task in the suite
+    let task = &tasks[0];
+    let (_, _, mut tr) = train(rt, OptKind::Adapprox, 20, 6);
+    let acc = tr.finetune_task(task, 120, 3e-3, 128).unwrap();
+    let chance = 1.0 / task.kind.n_classes() as f64;
+    assert!(
+        acc > chance + 0.15,
+        "finetune did not beat chance: acc {acc} vs chance {chance}"
+    );
+}
+
+#[test]
+fn beta1_zero_trains_and_uses_less_memory() {
+    let Some(rt) = runtime() else { return };
+    let mut h9 = Hyper::paper_defaults(OptKind::Adapprox, &rt.manifest.hyper);
+    h9.beta1 = 0.9;
+    let mut h0 = h9.clone();
+    h0.beta1 = 0.0;
+    let mut tr9 =
+        Trainer::new(rt.clone(), "micro", h9, quick_opts(6, 8)).unwrap();
+    let mut tr0 = Trainer::new(rt, "micro", h0, quick_opts(6, 8)).unwrap();
+    tr9.run().unwrap();
+    tr0.run().unwrap();
+    assert!(tr0.opt.state_bytes() < tr9.opt.state_bytes());
+}
+
+#[test]
+fn live_state_bytes_match_accounting() {
+    use adapprox::coordinator::memory::{state_bytes, RankPolicy};
+    let Some(rt) = runtime() else { return };
+    let cfg = rt.manifest.config("micro").unwrap().clone();
+    // AdamW is rank-free: live bytes must equal the analytic table exactly
+    let hyper = Hyper::paper_defaults(OptKind::AdamW, &rt.manifest.hyper);
+    let tr = Trainer::new(rt, "micro", hyper, quick_opts(2, 9)).unwrap();
+    let analytic = state_bytes(&cfg, OptKind::AdamW, true, RankPolicy::Init(1));
+    assert_eq!(tr.opt.state_bytes(), analytic);
+}
