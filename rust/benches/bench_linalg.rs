@@ -1,23 +1,85 @@
 //! Linalg substrate benchmarks: the native building blocks under Fig. 2's
-//! sweeps (matmul, MGS-QR, Jacobi SVD, native S-RSI).
+//! sweeps (matmul, MGS-QR, Jacobi SVD, native S-RSI), plus before/after
+//! cases for the compute-core work: seed naive kernels vs the cache-blocked
+//! `_into` kernels vs the pool-parallel row-block path.
+//!
+//! Set BENCH_JSON=BENCH_linalg.json to record machine-readable lines.
 
 use adapprox::bench::{header, Bench};
 use adapprox::linalg::{jacobi_svd, mgs_qr, srsi, Mat};
+use adapprox::util::pool::Pool;
 use adapprox::util::rng::Rng;
 
-fn main() {
-    let b = Bench::default();
-    let mut rng = Rng::new(0xBE);
+/// The seed repo's matmul (naive ikj with the `a == 0.0` skip branch),
+/// kept here verbatim as the "before" case.
+fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut out = Mat::zeros(m, n);
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let orow = &mut out.data[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
 
-    header("matmul (m x k) @ (k x n)");
+fn main() {
+    let b = Bench::default().with_json_from_env();
+    let mut rng = Rng::new(0xBE);
+    let pool = Pool::machine_sized();
+
+    header("matmul (m x k) @ (k x n): seed naive vs blocked vs pooled");
     for &(m, k, n) in &[(128usize, 128usize, 128usize), (256, 256, 256),
                         (512, 64, 512)] {
         let a = Mat::randn(m, k, &mut rng);
         let c = Mat::randn(k, n, &mut rng);
+        b.run(&format!("naive_matmul_{m}x{k}x{n}"), || {
+            std::hint::black_box(naive_matmul(&a, &c));
+        });
         b.run(&format!("matmul_{m}x{k}x{n}"), || {
             std::hint::black_box(a.matmul(&c));
         });
+        let mut out = Mat::empty();
+        b.run(&format!("matmul_into_{m}x{k}x{n}"), || {
+            a.matmul_into(&c, &mut out);
+            std::hint::black_box(&out);
+        });
+        b.run(
+            &format!("matmul_into_pool{}_{m}x{k}x{n}", pool.threads()),
+            || {
+                a.matmul_into_pooled(&c, &mut out, &pool);
+                std::hint::black_box(&out);
+            },
+        );
     }
+
+    header("transpose-products into reusable buffers");
+    let a = Mat::randn(512, 96, &mut rng);
+    let c = Mat::randn(512, 128, &mut rng);
+    let d = Mat::randn(128, 96, &mut rng);
+    let mut out = Mat::empty();
+    b.run("t_matmul_512x96_512x128", || {
+        std::hint::black_box(a.t_matmul(&c));
+    });
+    b.run("t_matmul_into_512x96_512x128", || {
+        a.t_matmul_into(&c, &mut out);
+        std::hint::black_box(&out);
+    });
+    b.run("matmul_t_512x96_128x96", || {
+        std::hint::black_box(a.matmul_t(&d));
+    });
+    b.run("matmul_t_into_512x96_128x96", || {
+        a.matmul_t_into(&d, &mut out);
+        std::hint::black_box(&out);
+    });
 
     header("MGS QR (m x c)");
     for &(m, c) in &[(256usize, 8usize), (256, 37), (1024, 37)] {

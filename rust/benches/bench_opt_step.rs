@@ -1,18 +1,203 @@
-//! Per-optimizer HLO step latency per parameter shape — the systems cost
-//! behind Fig. 2b / the paper's claim that Adapprox's overhead is
-//! amortizable.
+//! Optimizer step latency per parameter shape — the systems cost behind
+//! Fig. 2b / the paper's claim that Adapprox's overhead is amortizable.
+//!
+//! The native section (always runs) holds the compute-core before/after
+//! cases: seed allocating step functions vs the workspace-reusing `_ws`
+//! paths vs the factored fast path, plus the whole-model per-tensor loop at
+//! 1 and N threads. The HLO section runs when `artifacts/` exists.
+//!
+//! Set BENCH_JSON=BENCH_opt_step.json to record machine-readable lines.
 
 use adapprox::bench::{header, Bench};
-use adapprox::runtime::{Runtime, Tensor};
+use adapprox::linalg::{mgs_qr, Mat};
+use adapprox::optim::native::steps;
+use adapprox::optim::{
+    Hyper, NativeOptimizer, OptKind, Optimizer, Workspace,
+};
+use adapprox::runtime::{Ladder, ParamSpec, Runtime, Tensor};
+use adapprox::util::pool::Pool;
 use adapprox::util::rng::Rng;
 
-fn main() {
+fn ladder(m: usize, n: usize) -> Option<Ladder> {
+    let kmax = (m.min(n) / 4).max(1);
+    let mut buckets = vec![];
+    let mut k = 1;
+    while k < kmax {
+        buckets.push(k);
+        k *= 2;
+    }
+    buckets.push(kmax);
+    let p = buckets.iter().map(|&b| 5usize.min(kmax - b)).collect();
+    Some(Ladder {
+        buckets,
+        oversample: p,
+        kmax,
+    })
+}
+
+fn native_section(b: &Bench, rng: &mut Rng) {
+    let (m, n, k) = (512usize, 128usize, 8usize);
+    let numel = m * n;
+    let g: Vec<f32> = rng.normal_vec_f32(numel).iter()
+        .map(|x| 0.02 * x).collect();
+    let w0 = rng.normal_vec_f32(numel);
+    let q0 = mgs_qr(&Mat::randn(m, k, rng));
+    let u0 = Mat::randn(n, k, rng);
+    let omega = Mat::randn(n, k + 5, rng);
+
+    header(&format!(
+        "native 2-D steps on {m}x{n} (k={k}): seed alloc vs workspace"
+    ));
+
+    // Adapprox fused step: the headline before/after
+    let mut w = w0.clone();
+    let mut mm = vec![0.0f32; numel];
+    b.run("adapprox_step_alloc", || {
+        std::hint::black_box(steps::adapprox_step(
+            &mut w, &mut mm, &q0, &u0, &g, &omega, m, n, k, 5, 1e-3, 0.9,
+            0.999, 1e-8, 0.1, 1.0, false,
+        ));
+    });
+    let mut w = w0.clone();
+    let mut mm = vec![0.0f32; numel];
+    let mut ws = Workspace::new();
+    b.run("adapprox_step_ws", || {
+        std::hint::black_box(steps::adapprox_step_ws(
+            &mut w, &mut mm, &q0, &u0, &g, &omega, m, n, k, 5, 1e-3, 0.9,
+            0.999, 1e-8, 0.1, 1.0, false, &mut ws,
+        ));
+    });
+    let mut w = w0.clone();
+    let mut mm = vec![0.0f32; numel];
+    b.run("adapprox_step_fast_ws", || {
+        std::hint::black_box(steps::adapprox_step_fast_ws(
+            &mut w, &mut mm, &q0, &u0, &g, &omega, m, n, k, 5, 1e-3, 0.9,
+            0.999, 1e-8, 0.1, 1.0, false, &mut ws,
+        ));
+    });
+
+    // Adafactor / CAME: buffer-reuse before/after
+    let mut w = w0.clone();
+    let mut mm = vec![0.0f32; numel];
+    let mut r = vec![0.0f32; m];
+    let mut c = vec![0.0f32; n];
+    b.run("adafactor_step_alloc", || {
+        steps::adafactor_step(&mut w, &mut mm, &mut r, &mut c, &g, m, n,
+                              1e-3, 0.9, 0.999, 1e-30, 0.1, 1.0);
+        std::hint::black_box(&w);
+    });
+    let mut w = w0.clone();
+    let mut mm = vec![0.0f32; numel];
+    let mut r = vec![0.0f32; m];
+    let mut c = vec![0.0f32; n];
+    b.run("adafactor_step_ws", || {
+        steps::adafactor_step_ws(&mut w, &mut mm, &mut r, &mut c, &g, m, n,
+                                 1e-3, 0.9, 0.999, 1e-30, 0.1, 1.0,
+                                 &mut ws);
+        std::hint::black_box(&w);
+    });
+    let mut w = w0.clone();
+    let mut mm = vec![0.0f32; numel];
+    let mut r = vec![0.0f32; m];
+    let mut c = vec![0.0f32; n];
+    let mut rc = vec![0.0f32; m];
+    let mut cc = vec![0.0f32; n];
+    b.run("came_step_alloc", || {
+        steps::came_step(&mut w, &mut mm, &mut r, &mut c, &mut rc, &mut cc,
+                         &g, m, n, 1e-3, 0.9, 0.999, 0.9999, 1e-30, 1e-16,
+                         0.1, 1.0);
+        std::hint::black_box(&w);
+    });
+    let mut w = w0.clone();
+    let mut mm = vec![0.0f32; numel];
+    let mut r = vec![0.0f32; m];
+    let mut c = vec![0.0f32; n];
+    let mut rc = vec![0.0f32; m];
+    let mut cc = vec![0.0f32; n];
+    b.run("came_step_ws", || {
+        steps::came_step_ws(&mut w, &mut mm, &mut r, &mut c, &mut rc,
+                            &mut cc, &g, m, n, 1e-3, 0.9, 0.999, 0.9999,
+                            1e-30, 1e-16, 0.1, 1.0, &mut ws);
+        std::hint::black_box(&w);
+    });
+
+    // whole-model step: the per-tensor parallel loop
+    let machine = Pool::machine_sized().threads();
+    header(&format!(
+        "NativeOptimizer::step, 6-tensor model: 1 vs {machine} threads"
+    ));
+    let specs: Vec<ParamSpec> = (0..3)
+        .flat_map(|i| {
+            [
+                ParamSpec {
+                    name: format!("w{i}"),
+                    shape: vec![256, 128],
+                    kind: "matrix".into(),
+                },
+                ParamSpec {
+                    name: format!("b{i}"),
+                    shape: vec![256],
+                    kind: "vector".into(),
+                },
+            ]
+        })
+        .collect();
+    for threads in [1usize, machine] {
+        let h = Hyper::paper_defaults(
+            OptKind::Adapprox,
+            &adapprox::runtime::manifest::HyperDefaults {
+                beta1: 0.9,
+                beta2: 0.999,
+                eps: 1e-8,
+                weight_decay: 0.0,
+                clip_d: 1.0,
+                k_init: 4,
+                l: 5,
+                p: 5,
+                xi_thresh: 0.01,
+                delta_s: 10,
+                f_eta: 200.0,
+                f_omega: -10.0,
+                f_phi: -2.5,
+                f_tau: -9.0,
+            },
+        );
+        let mut opt = NativeOptimizer::new(
+            specs.clone(), h, &|mm, nn| ladder(mm, nn), 7,
+        )
+        .unwrap()
+        .with_threads(threads);
+        let mut prng = Rng::new(23);
+        let mut params: Vec<Tensor> = specs
+            .iter()
+            .map(|s| Tensor::f32(s.shape.clone(),
+                                 prng.normal_vec_f32(s.numel())))
+            .collect();
+        let grads: Vec<Tensor> = specs
+            .iter()
+            .map(|s| {
+                Tensor::f32(
+                    s.shape.clone(),
+                    prng.normal_vec_f32(s.numel())
+                        .iter()
+                        .map(|x| 0.02 * x)
+                        .collect(),
+                )
+            })
+            .collect();
+        b.run(&format!("native_opt_step_{threads}t"), || {
+            std::hint::black_box(
+                opt.step(&mut params, &grads, 1e-3).unwrap(),
+            );
+        });
+    }
+}
+
+fn hlo_section(b: &Bench, rng: &mut Rng) {
     let Ok(rt) = Runtime::new("artifacts") else {
-        println!("run `make artifacts` first");
+        println!("(artifacts missing — HLO step rows skipped)");
         return;
     };
-    let b = Bench::default();
-    let mut rng = Rng::new(0x0557);
     let (m, n) = (512usize, 128usize);
     let w = Tensor::f32(vec![m, n], rng.normal_vec_f32(m * n));
     let g = Tensor::f32(vec![m, n], rng.normal_vec_f32(m * n));
@@ -91,4 +276,11 @@ fn main() {
     b.run("vec_factored_step", || {
         std::hint::black_box(rt.exec("vec_factored_step_512", &vf).unwrap());
     });
+}
+
+fn main() {
+    let b = Bench::default().with_json_from_env();
+    let mut rng = Rng::new(0x0557);
+    native_section(&b, &mut rng);
+    hlo_section(&b, &mut rng);
 }

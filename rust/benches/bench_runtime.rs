@@ -11,7 +11,7 @@ fn main() {
         println!("run `make artifacts` first");
         return;
     };
-    let b = Bench::default();
+    let b = Bench::default().with_json_from_env();
     let mut rng = Rng::new(0x9);
 
     header("PJRT dispatch overhead (smallest program: vec_factored_128)");
@@ -50,6 +50,7 @@ fn main() {
     let bq = adapprox::bench::Bench {
         warmup_iters: 0,
         sample_iters: 3,
+        ..Bench::default()
     };
     bq.run("compile_adamw_step_128x128", || {
         let fresh = Runtime::new("artifacts").unwrap();

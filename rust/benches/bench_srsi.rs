@@ -1,13 +1,23 @@
-//! S-RSI benchmarks across the two backends — the timing half of Fig. 2
-//! (computation time vs rank), HLO path included.
+//! S-RSI benchmarks — the timing half of Fig. 2 (computation time vs rank)
+//! plus the compute-core before/after: the seed allocating dense path vs
+//! the scratch-reusing dense path vs the structure-aware factored path on
+//! Adapprox's actual iteration target V = β₂QUᵀ + (1−β₂)G². HLO rows are
+//! included when `artifacts/` exists.
+//!
+//! Set BENCH_JSON=BENCH_srsi.json to record machine-readable lines.
 
 use adapprox::bench::{header, Bench};
-use adapprox::linalg::{srsi_with_omega, Mat};
+use adapprox::linalg::{
+    mgs_qr, srsi_factored_scratch, srsi_with_omega, srsi_with_omega_scratch,
+    Mat, SrsiScratch,
+};
+use adapprox::optim::native::steps::{adapprox_vstep, adapprox_vstep_ws};
+use adapprox::optim::Workspace;
 use adapprox::runtime::{Runtime, Tensor};
 use adapprox::util::rng::Rng;
 
 fn main() {
-    let b = Bench::default();
+    let b = Bench::default().with_json_from_env();
     let mut rng = Rng::new(0x55);
     let rt = Runtime::new("artifacts").ok();
     if rt.is_none() {
@@ -30,6 +40,12 @@ fn main() {
         b.run(&format!("native_srsi_k{k}"), || {
             std::hint::black_box(srsi_with_omega(&a, &omega, k, 5));
         });
+        let mut scratch = SrsiScratch::new();
+        b.run(&format!("native_srsi_scratch_k{k}"), || {
+            std::hint::black_box(srsi_with_omega_scratch(
+                &a, &omega, k, 5, &mut scratch,
+            ));
+        });
         if let Some(rt) = &rt {
             let at = Tensor::f32(vec![m, n], a.data.clone());
             let om = Tensor::f32(vec![n, k + p], omega.data.clone());
@@ -44,6 +60,47 @@ fn main() {
                 });
             }
         }
+    }
+
+    // ---- the acceptance-criterion case: factored vs dense on 512x512 ----
+    header("Adapprox V-factorization 512x512 (l=5, p=5): dense vs factored");
+    let (vm, vn) = (512usize, 512usize);
+    let beta2 = 0.999f32;
+    for &k in &[4usize, 8, 16] {
+        let kp = k + 5;
+        // stored factors Q (m,k) orthonormal, U (n,k); fresh gradient G
+        let q0 = mgs_qr(&Mat::randn(vm, k, &mut rng));
+        let mut u0 = Mat::randn(vn, k, &mut rng);
+        for v in u0.data.iter_mut() {
+            *v = v.abs();
+        }
+        let mut g = Mat::randn(vm, vn, &mut rng);
+        for v in g.data.iter_mut() {
+            *v *= 0.02;
+        }
+        let omega = Mat::randn(vn, kp, &mut rng);
+
+        // seed path: allocate + materialise V, then dense S-RSI
+        b.run(&format!("dense_alloc_vstep_srsi_{vm}x{vn}_k{k}"), || {
+            let v = adapprox_vstep(&q0, &u0, &g.data, vm, vn, beta2);
+            let vmademat = Mat::from_vec(vm, vn, v);
+            std::hint::black_box(srsi_with_omega(&vmademat, &omega, k, 5));
+        });
+        // workspace path: same math, zero steady-state allocation
+        let mut ws = Workspace::new();
+        b.run(&format!("dense_ws_vstep_srsi_{vm}x{vn}_k{k}"), || {
+            adapprox_vstep_ws(&q0, &u0, &g.data, vm, vn, beta2, &mut ws);
+            std::hint::black_box(srsi_with_omega_scratch(
+                &ws.vmat, &omega, k, 5, &mut ws.srsi,
+            ));
+        });
+        // structure-aware path: never materialises V at all
+        let mut scratch = SrsiScratch::new();
+        b.run(&format!("factored_srsi_{vm}x{vn}_k{k}"), || {
+            std::hint::black_box(srsi_factored_scratch(
+                &q0, &u0, &g.data, beta2, &omega, k, 5, &mut scratch,
+            ));
+        });
     }
 
     header("fused adapprox_step (HLO, the between-refresh hot path)");

@@ -19,7 +19,9 @@ fn main() {
     let b = Bench {
         warmup_iters: 2,
         sample_iters: 10,
-    };
+        ..Bench::default()
+    }
+    .with_json_from_env();
 
     for config in ["micro", "nano"] {
         if rt.manifest.config(config).is_err() {

@@ -4,15 +4,31 @@
 //! [`Bench::run_n`], which warm up, sample wall-clock repeatedly, and print
 //! mean / p50 / p95 with enough samples for stable comparisons. The perf
 //! pass (EXPERIMENTS.md §Perf) reads these numbers.
+//!
+//! Set `BENCH_JSON=/path/to/BENCH_<name>.json` (or call
+//! [`Bench::with_json_path`]) to additionally append one machine-readable
+//! JSON line per case — `{"name", "mean_s", "p50_s", "p95_s", "samples"}` —
+//! so the perf trajectory can be tracked across PRs.
 
+use std::io::Write;
+use std::path::PathBuf;
 use std::time::Instant;
 
 use crate::util::{mean, percentile, std_dev};
 
 /// One benchmark group with shared sampling policy.
+#[derive(Clone, Debug)]
 pub struct Bench {
     pub warmup_iters: usize,
     pub sample_iters: usize,
+    /// When set, every case appends its [`Stats::json_line`] here.
+    pub json_path: Option<PathBuf>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench::new()
+    }
 }
 
 /// Statistics for one benchmark case.
@@ -26,21 +42,38 @@ pub struct Stats {
     pub samples: usize,
 }
 
-impl Default for Bench {
-    fn default() -> Self {
+impl Bench {
+    /// Default sampling policy (3 warmups, 20 samples).
+    pub fn new() -> Self {
         Bench {
             warmup_iters: 3,
             sample_iters: 20,
+            json_path: None,
         }
     }
-}
 
-impl Bench {
     pub fn quick() -> Self {
         Bench {
             warmup_iters: 1,
             sample_iters: 5,
+            json_path: None,
         }
+    }
+
+    /// Append a JSON line per case to `path`.
+    pub fn with_json_path(mut self, path: impl Into<PathBuf>) -> Self {
+        self.json_path = Some(path.into());
+        self
+    }
+
+    /// Honour the `BENCH_JSON` env var (no-op when unset/empty).
+    pub fn with_json_from_env(mut self) -> Self {
+        if let Ok(p) = std::env::var("BENCH_JSON") {
+            if !p.is_empty() {
+                self.json_path = Some(p.into());
+            }
+        }
+        self
     }
 
     /// Time `f` and print+return the stats row.
@@ -63,6 +96,11 @@ impl Bench {
             samples: samples.len(),
         };
         println!("{}", stats.row());
+        if let Some(path) = &self.json_path {
+            if let Err(e) = append_line(path, &stats.json_line()) {
+                eprintln!("bench: cannot append to {path:?}: {e}");
+            }
+        }
         stats
     }
 
@@ -77,6 +115,14 @@ impl Bench {
     }
 }
 
+fn append_line(path: &std::path::Path, line: &str) -> std::io::Result<()> {
+    let mut file = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)?;
+    writeln!(file, "{line}")
+}
+
 impl Stats {
     /// Human row: name, mean, p50, p95.
     pub fn row(&self) -> String {
@@ -89,6 +135,25 @@ impl Stats {
             self.samples
         )
     }
+
+    /// One machine-readable JSON object (`BENCH_*.json` line format).
+    pub fn json_line(&self) -> String {
+        format!(
+            "{{\"name\":\"{}\",\"mean_s\":{:e},\"p50_s\":{:e},\
+             \"p95_s\":{:e},\"samples\":{}}}",
+            json_escape(&self.name),
+            self.mean_s,
+            self.p50_s,
+            self.p95_s,
+            self.samples
+        )
+    }
+}
+
+/// Escape the two characters bench-case names could smuggle into a JSON
+/// string (names are ASCII identifiers by convention).
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
 /// Adaptive time unit formatting.
@@ -118,6 +183,7 @@ mod tests {
         let b = Bench {
             warmup_iters: 1,
             sample_iters: 4,
+            json_path: None,
         };
         let mut count = 0;
         let s = b.run("noop", || count += 1);
@@ -133,5 +199,55 @@ mod tests {
         assert!(fmt_time(2.5e-5).ends_with("µs"));
         assert!(fmt_time(2.5e-2).ends_with("ms"));
         assert!(fmt_time(2.5).ends_with('s'));
+    }
+
+    #[test]
+    fn json_line_shape() {
+        let s = Stats {
+            name: "case\"x\"".into(),
+            mean_s: 1.5e-3,
+            p50_s: 1.25e-3,
+            p95_s: 2.5e-3,
+            std_s: 1e-4,
+            samples: 20,
+        };
+        let line = s.json_line();
+        assert!(line.starts_with('{') && line.ends_with('}'), "{line}");
+        assert!(line.contains("\"name\":\"case\\\"x\\\"\""), "{line}");
+        assert!(line.contains("\"samples\":20"), "{line}");
+        assert!(line.contains("\"mean_s\":"), "{line}");
+        // numbers round-trip through the in-tree JSON parser
+        let parsed =
+            crate::util::json::Json::parse(&line).expect("valid json");
+        let mean = parsed.get("mean_s").and_then(|v| v.as_f64());
+        assert!(mean.is_some(), "{line}");
+        assert!((mean.unwrap() - 1.5e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_lines_append_per_case() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!(
+            "BENCH_test_{}.json",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let b = Bench {
+            warmup_iters: 0,
+            sample_iters: 2,
+            json_path: None,
+        }
+        .with_json_path(&path);
+        b.run("first", || {});
+        b.run("second", || {});
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "{text}");
+        assert!(lines[0].contains("\"name\":\"first\""));
+        assert!(lines[1].contains("\"name\":\"second\""));
+        for l in lines {
+            assert!(crate::util::json::Json::parse(l).is_ok(), "{l}");
+        }
+        let _ = std::fs::remove_file(&path);
     }
 }

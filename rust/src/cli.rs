@@ -18,8 +18,8 @@ pub struct Args {
 
 /// Flags that take no value.
 const BOOL_FLAGS: &[&str] = &[
-    "help", "quick", "full", "no-clip", "cos-guidance", "native", "v", "vv",
-    "q",
+    "help", "quick", "full", "no-clip", "cos-guidance", "fast-srsi",
+    "native", "v", "vv", "q",
 ];
 
 impl Args {

@@ -13,7 +13,7 @@ use crate::coordinator::schedule::LrSchedule;
 use crate::data::{Batch, BatchIterator, BigramCorpus, Split, Task};
 use crate::info;
 use crate::model;
-use crate::optim::{Hyper, Optimizer, XlaOptimizer};
+use crate::optim::{Hyper, NativeOptimizer, Optimizer, XlaOptimizer};
 use crate::runtime::{ConfigSpec, Runtime, Tensor};
 use crate::util::rng::Rng;
 
@@ -39,6 +39,13 @@ pub struct TrainOptions {
     pub log_csv: Option<PathBuf>,
     /// log every N steps
     pub log_every: usize,
+    /// run the optimizer steps on the native backend (`--native`) instead
+    /// of the per-tensor HLO programs; forward/backward stays on PJRT
+    pub native: bool,
+    /// worker threads for the native backend's per-tensor step loop
+    /// (`NativeOptimizer::with_threads`); results are bitwise identical for
+    /// any value. The HLO backend dispatches whole programs and ignores it.
+    pub threads: usize,
 }
 
 impl Default for TrainOptions {
@@ -55,6 +62,8 @@ impl Default for TrainOptions {
             seed: 0xADA,
             log_csv: None,
             log_every: 10,
+            native: false,
+            threads: 1,
         }
     }
 }
@@ -84,7 +93,11 @@ pub struct Trainer {
 }
 
 impl Trainer {
-    /// Build a trainer over a manifest config with an HLO-backed optimizer.
+    /// Build a trainer over a manifest config. The optimizer backend comes
+    /// from `opts.native`: per-tensor HLO programs by default, or the
+    /// native compute core (honouring `opts.threads` and
+    /// `Hyper::fast_srsi`) with `--native`; forward/backward always runs
+    /// through PJRT.
     pub fn new(
         rt: Rc<Runtime>,
         config_name: &str,
@@ -97,12 +110,28 @@ impl Trainer {
         }
         let mut rng = Rng::new(opts.seed);
         let params = model::init_params(&cfg, &mut rng);
-        let opt = Box::new(XlaOptimizer::new(
-            rt.clone(),
-            cfg.params.clone(),
-            hyper,
-            opts.seed ^ 0x09,
-        )?);
+        let opt: Box<dyn Optimizer> = if opts.native {
+            let ladders = {
+                let rt = rt.clone();
+                move |m: usize, n: usize| rt.manifest.ladder(m, n).ok().cloned()
+            };
+            Box::new(
+                NativeOptimizer::new(
+                    cfg.params.clone(),
+                    hyper,
+                    &ladders,
+                    opts.seed ^ 0x09,
+                )?
+                .with_threads(opts.threads),
+            )
+        } else {
+            Box::new(XlaOptimizer::new(
+                rt.clone(),
+                cfg.params.clone(),
+                hyper,
+                opts.seed ^ 0x09,
+            )?)
+        };
         let schedule =
             LrSchedule::new(opts.peak_lr, opts.min_lr, opts.warmup, opts.steps);
         // The synthetic bigram language: vocab-sized, fixed by seed so every

@@ -1,6 +1,26 @@
 //! Row-major f32 matrix with the products the optimizer stack needs.
+//!
+//! Every product has an `_into` variant writing into a caller-provided
+//! buffer ([`Mat::reset`] reuses the existing allocation), so hot loops —
+//! the native S-RSI power iteration, the per-step optimizer math — run
+//! allocation-free in steady state. The kernels are cache-blocked, and the
+//! blocking is chosen so each output element accumulates its k-terms in
+//! ascending order — the *same* order as the naive reference loops — which
+//! keeps results bitwise identical to the unblocked kernels and independent
+//! of tile sizes and thread counts (`matmul_into_pooled` assigns whole rows
+//! to threads).
 
+use crate::util::pool::Pool;
 use crate::util::rng::Rng;
+
+/// Row tile for the A/out panels of `matmul_into`.
+const TILE_I: usize = 64;
+/// Depth tile: how many B rows stay hot across an out-row tile.
+const TILE_K: usize = 64;
+/// Column tile for the Bᵀ panel of `matmul_t_into`.
+const TILE_J: usize = 64;
+/// Square tile for `transpose_into`.
+const TILE_T: usize = 32;
 
 /// Dense row-major f32 matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -10,6 +30,96 @@ pub struct Mat {
     pub data: Vec<f32>,
 }
 
+impl Default for Mat {
+    /// The empty matrix (an `_into` destination holding no allocation).
+    fn default() -> Mat {
+        Mat::empty()
+    }
+}
+
+/// `out_rows` covers rows `r0..` of the product `a @ b`; cache-blocked ikj
+/// with ascending-k accumulation per output element.
+fn matmul_rows(
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    n: usize,
+    r0: usize,
+    out_rows: &mut [f32],
+) {
+    let rows = out_rows.len() / n;
+    for ib in (0..rows).step_by(TILE_I) {
+        let ie = (ib + TILE_I).min(rows);
+        for kb in (0..k).step_by(TILE_K) {
+            let ke = (kb + TILE_K).min(k);
+            for i in ib..ie {
+                let arow = &a[(r0 + i) * k..(r0 + i) * k + k];
+                let orow = &mut out_rows[i * n..(i + 1) * n];
+                for kk in kb..ke {
+                    let av = arow[kk];
+                    let brow = &b[kk * n..kk * n + n];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `out_rows` covers rows `r0..` of `aᵀ @ b` where `a` is (k, m): for each
+/// output row block, stream the k outer products; ascending-k per element.
+fn t_matmul_rows(
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    m: usize,
+    n: usize,
+    r0: usize,
+    out_rows: &mut [f32],
+) {
+    let rows = out_rows.len() / n;
+    for kk in 0..k {
+        let arow = &a[kk * m..kk * m + m];
+        let brow = &b[kk * n..kk * n + n];
+        for i in 0..rows {
+            let av = arow[r0 + i];
+            let orow = &mut out_rows[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// `out_rows` covers rows `r0..` of `a @ bᵀ` where `b` is (n, k): blocked
+/// over b-rows so a (TILE_J × k) panel of B stays hot across output rows.
+fn matmul_t_rows(
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    n: usize,
+    r0: usize,
+    out_rows: &mut [f32],
+) {
+    let rows = out_rows.len() / n;
+    for jb in (0..n).step_by(TILE_J) {
+        let je = (jb + TILE_J).min(n);
+        for i in 0..rows {
+            let arow = &a[(r0 + i) * k..(r0 + i) * k + k];
+            let orow = &mut out_rows[i * n..(i + 1) * n];
+            for j in jb..je {
+                let brow = &b[j * k..j * k + k];
+                let mut s = 0.0f32;
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    s += av * bv;
+                }
+                orow[j] = s;
+            }
+        }
+    }
+}
+
 impl Mat {
     pub fn zeros(rows: usize, cols: usize) -> Mat {
         Mat {
@@ -17,6 +127,44 @@ impl Mat {
             cols,
             data: vec![0.0; rows * cols],
         }
+    }
+
+    /// An empty matrix intended as an `_into` destination; holds no
+    /// allocation until first use.
+    pub fn empty() -> Mat {
+        Mat {
+            rows: 0,
+            cols: 0,
+            data: Vec::new(),
+        }
+    }
+
+    /// Reshape to `rows × cols` with all elements zero, reusing the
+    /// existing allocation when capacity suffices.
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Reshape to `rows × cols` reusing the allocation *without* zeroing
+    /// retained elements — for kernels that assign (rather than
+    /// accumulate into) every output element. Retained contents are
+    /// unspecified until overwritten.
+    pub fn reset_for_assign(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Copy `src`'s shape and contents into this buffer (no allocation in
+    /// steady state).
+    pub fn copy_from(&mut self, src: &Mat) {
+        self.rows = src.rows;
+        self.cols = src.cols;
+        self.data.clear();
+        self.data.extend_from_slice(&src.data);
     }
 
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
@@ -71,76 +219,121 @@ impl Mat {
     }
 
     pub fn transpose(&self) -> Mat {
-        let mut t = Mat::zeros(self.cols, self.rows);
-        for i in 0..self.rows {
-            for j in 0..self.cols {
-                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+        let mut t = Mat::empty();
+        self.transpose_into(&mut t);
+        t
+    }
+
+    /// Tiled transpose into a caller buffer.
+    pub fn transpose_into(&self, out: &mut Mat) {
+        out.reset_for_assign(self.cols, self.rows);
+        for ib in (0..self.rows).step_by(TILE_T) {
+            let ie = (ib + TILE_T).min(self.rows);
+            for jb in (0..self.cols).step_by(TILE_T) {
+                let je = (jb + TILE_T).min(self.cols);
+                for i in ib..ie {
+                    for j in jb..je {
+                        out.data[j * self.rows + i] =
+                            self.data[i * self.cols + j];
+                    }
+                }
             }
         }
-        t
     }
 
     /// `self @ other` — ikj loop order for row-major locality.
     pub fn matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.rows, "matmul {}x{} @ {}x{}",
-                   self.rows, self.cols, other.rows, other.cols);
-        let (m, k, n) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(m, n);
-        for i in 0..m {
-            let arow = &self.data[i * k..(i + 1) * k];
-            let orow = &mut out.data[i * n..(i + 1) * n];
-            for (kk, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &other.data[kk * n..(kk + 1) * n];
-                for j in 0..n {
-                    orow[j] += a * brow[j];
-                }
-            }
-        }
+        let mut out = Mat::empty();
+        self.matmul_into(other, &mut out);
         out
+    }
+
+    /// `self @ other` into a caller buffer (cache-blocked, allocation-free
+    /// in steady state).
+    pub fn matmul_into(&self, other: &Mat, out: &mut Mat) {
+        self.matmul_into_pooled(other, out, &Pool::single());
+    }
+
+    /// `self @ other` with output rows fanned out over `pool`. Each row is
+    /// produced by exactly one thread with the same accumulation order as
+    /// the serial kernel, so results are bitwise thread-count-independent.
+    pub fn matmul_into_pooled(&self, other: &Mat, out: &mut Mat, pool: &Pool) {
+        assert_eq!(
+            self.cols, other.rows,
+            "matmul {}x{} @ {}x{}",
+            self.rows, self.cols, other.rows, other.cols
+        );
+        let (k, n) = (self.cols, other.cols);
+        out.reset(self.rows, n);
+        if n == 0 {
+            return;
+        }
+        let (a, b) = (&self.data, &other.data);
+        pool.run_units(&mut out.data, n, |start, span| {
+            matmul_rows(a, b, k, n, start / n, span);
+        });
     }
 
     /// `self.T @ other` without materialising the transpose.
     pub fn t_matmul(&self, other: &Mat) -> Mat {
+        let mut out = Mat::empty();
+        self.t_matmul_into(other, &mut out);
+        out
+    }
+
+    /// `self.T @ other` into a caller buffer.
+    pub fn t_matmul_into(&self, other: &Mat, out: &mut Mat) {
+        self.t_matmul_into_pooled(other, out, &Pool::single());
+    }
+
+    /// `self.T @ other` with output rows fanned out over `pool`.
+    pub fn t_matmul_into_pooled(
+        &self,
+        other: &Mat,
+        out: &mut Mat,
+        pool: &Pool,
+    ) {
         assert_eq!(self.rows, other.rows);
         let (k, m, n) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(m, n);
-        for kk in 0..k {
-            let arow = &self.data[kk * m..(kk + 1) * m];
-            let brow = &other.data[kk * n..(kk + 1) * n];
-            for i in 0..m {
-                let a = arow[i];
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = &mut out.data[i * n..(i + 1) * n];
-                for j in 0..n {
-                    orow[j] += a * brow[j];
-                }
-            }
+        out.reset(m, n);
+        if n == 0 {
+            return;
         }
-        out
+        let (a, b) = (&self.data, &other.data);
+        pool.run_units(&mut out.data, n, |start, span| {
+            t_matmul_rows(a, b, k, m, n, start / n, span);
+        });
     }
 
     /// `self @ other.T` without materialising the transpose.
     pub fn matmul_t(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.cols);
-        let (m, k, n) = (self.rows, self.cols, other.rows);
-        let mut out = Mat::zeros(m, n);
-        for i in 0..m {
-            let arow = &self.data[i * k..(i + 1) * k];
-            for j in 0..n {
-                let brow = &other.data[j * k..(j + 1) * k];
-                let mut s = 0.0f32;
-                for kk in 0..k {
-                    s += arow[kk] * brow[kk];
-                }
-                out.data[i * n + j] = s;
-            }
-        }
+        let mut out = Mat::empty();
+        self.matmul_t_into(other, &mut out);
         out
+    }
+
+    /// `self @ other.T` into a caller buffer.
+    pub fn matmul_t_into(&self, other: &Mat, out: &mut Mat) {
+        self.matmul_t_into_pooled(other, out, &Pool::single());
+    }
+
+    /// `self @ other.T` with output rows fanned out over `pool`.
+    pub fn matmul_t_into_pooled(
+        &self,
+        other: &Mat,
+        out: &mut Mat,
+        pool: &Pool,
+    ) {
+        assert_eq!(self.cols, other.cols);
+        let (k, n) = (self.cols, other.rows);
+        out.reset_for_assign(self.rows, n);
+        if n == 0 {
+            return;
+        }
+        let (a, b) = (&self.data, &other.data);
+        pool.run_units(&mut out.data, n, |start, span| {
+            matmul_t_rows(a, b, k, n, start / n, span);
+        });
     }
 
     pub fn scale(&self, s: f32) -> Mat {
@@ -190,13 +383,19 @@ impl Mat {
 
     /// Keep the first k columns.
     pub fn take_cols(&self, k: usize) -> Mat {
+        let mut out = Mat::empty();
+        self.take_cols_into(k, &mut out);
+        out
+    }
+
+    /// Keep the first k columns, writing into a caller buffer.
+    pub fn take_cols_into(&self, k: usize, out: &mut Mat) {
         assert!(k <= self.cols);
-        let mut out = Mat::zeros(self.rows, k);
+        out.reset_for_assign(self.rows, k);
         for i in 0..self.rows {
             out.data[i * k..(i + 1) * k]
                 .copy_from_slice(&self.data[i * self.cols..i * self.cols + k]);
         }
-        out
     }
 }
 
@@ -204,6 +403,21 @@ impl Mat {
 mod tests {
     use super::*;
     use crate::testing::forall;
+
+    /// Unblocked reference ikj matmul (the seed kernel, zero-skip removed).
+    fn matmul_ref(a: &Mat, b: &Mat) -> Mat {
+        let (m, k, n) = (a.rows, a.cols, b.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            for kk in 0..k {
+                let av = a.data[i * k + kk];
+                for j in 0..n {
+                    out.data[i * n + j] += av * b.data[kk * n + j];
+                }
+            }
+        }
+        out
+    }
 
     #[test]
     fn matmul_identity() {
@@ -221,10 +435,86 @@ mod tests {
     }
 
     #[test]
+    fn blocked_matmul_bitwise_matches_reference() {
+        // tile boundaries exercised: sizes straddle TILE_I/TILE_K/TILE_J
+        forall(16, |rng| {
+            let m = 1 + rng.below(97) as usize;
+            let k = 1 + rng.below(97) as usize;
+            let n = 1 + rng.below(97) as usize;
+            let a = Mat::randn(m, k, rng);
+            let b = Mat::randn(k, n, rng);
+            assert_eq!(a.matmul(&b), matmul_ref(&a, &b));
+        });
+    }
+
+    #[test]
+    fn pooled_matmul_bitwise_matches_serial() {
+        let mut rng = Rng::new(9);
+        let a = Mat::randn(129, 65, &mut rng);
+        let b = Mat::randn(65, 77, &mut rng);
+        let serial = a.matmul(&b);
+        for threads in [2, 3, 4] {
+            let pool = Pool::new(threads);
+            let mut out = Mat::empty();
+            a.matmul_into_pooled(&b, &mut out, &pool);
+            assert_eq!(out, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pooled_t_matmul_and_matmul_t_bitwise_match_serial() {
+        let mut rng = Rng::new(10);
+        let a = Mat::randn(67, 33, &mut rng);
+        let b = Mat::randn(67, 41, &mut rng);
+        let c = Mat::randn(41, 67, &mut rng);
+        let pool = Pool::new(4);
+        let mut out = Mat::empty();
+        a.t_matmul_into_pooled(&b, &mut out, &pool);
+        assert_eq!(out, a.t_matmul(&b));
+        a.matmul_t_into_pooled(&c, &mut out, &pool);
+        assert_eq!(out, a.matmul_t(&c));
+    }
+
+    #[test]
+    fn into_kernels_reuse_allocation() {
+        let mut rng = Rng::new(11);
+        let a = Mat::randn(40, 30, &mut rng);
+        let b = Mat::randn(30, 20, &mut rng);
+        let mut out = Mat::empty();
+        a.matmul_into(&b, &mut out);
+        let cap = out.data.capacity();
+        let ptr = out.data.as_ptr();
+        for _ in 0..3 {
+            a.matmul_into(&b, &mut out);
+        }
+        assert_eq!(out.data.capacity(), cap);
+        assert_eq!(out.data.as_ptr(), ptr);
+        // shrinking reshape also reuses the buffer
+        out.reset(5, 4);
+        assert_eq!(out.data.as_ptr(), ptr);
+        assert!(out.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
     fn transpose_roundtrip() {
         let mut rng = Rng::new(2);
         let a = Mat::randn(4, 9, &mut rng);
         assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn tiled_transpose_matches_naive() {
+        forall(8, |rng| {
+            let m = 1 + rng.below(80) as usize;
+            let n = 1 + rng.below(80) as usize;
+            let a = Mat::randn(m, n, rng);
+            let t = a.transpose();
+            for i in 0..m {
+                for j in 0..n {
+                    assert_eq!(t.at(j, i), a.at(i, j));
+                }
+            }
+        });
     }
 
     #[test]
@@ -273,5 +563,16 @@ mod tests {
         let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
         let t = a.take_cols(2);
         assert_eq!(t.data, vec![1., 2., 4., 5.]);
+    }
+
+    #[test]
+    fn copy_from_reuses_allocation() {
+        let mut rng = Rng::new(12);
+        let a = Mat::randn(8, 8, &mut rng);
+        let mut dst = Mat::zeros(8, 8);
+        let ptr = dst.data.as_ptr();
+        dst.copy_from(&a);
+        assert_eq!(dst, a);
+        assert_eq!(dst.data.as_ptr(), ptr);
     }
 }

@@ -7,7 +7,10 @@
 //! - [`srsi`] the paper's Alg. 1 in native Rust (control-experiments +
 //!   cross-checking the HLO S-RSI);
 //! - [`adafactor_rank1`] Adafactor's non-negative rank-1 factorization
-//!   (the Fig. 2 baseline).
+//!   (the Fig. 2 baseline);
+//! - [`srsi_factored`] the structure-aware S-RSI fast path iterating on
+//!   Adapprox's β₂QUᵀ + (1−β₂)G² target in factored space (never
+//!   materialising V), with [`SrsiScratch`] buffer reuse for both paths.
 
 mod mat;
 mod qr;
@@ -17,4 +20,7 @@ mod srsi;
 pub use mat::Mat;
 pub use qr::{mgs_qr, mgs_qr_in_place};
 pub use svd::{jacobi_svd, singular_values, truncation_error, Svd};
-pub use srsi::{adafactor_rank1, srsi, srsi_with_omega, SrsiOutput};
+pub use srsi::{
+    adafactor_rank1, srsi, srsi_factored, srsi_factored_scratch,
+    srsi_with_omega, srsi_with_omega_scratch, SrsiOutput, SrsiScratch,
+};

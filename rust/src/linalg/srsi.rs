@@ -5,6 +5,14 @@
 //! truncation), so the xla_parity test can feed both the *same* Ω and demand
 //! float-level agreement. It also powers the Fig. 2 sweeps where running
 //! hundreds of matrices through PJRT would be needlessly slow.
+//!
+//! Two performance paths sit next to the reference:
+//! - [`srsi_with_omega_scratch`] runs the dense iteration allocation-free
+//!   through a reusable [`SrsiScratch`] (bitwise identical results);
+//! - [`srsi_factored`] exploits Adapprox's structure — the iteration target
+//!   V = β₂·Q₀U₀ᵀ + (1−β₂)·G∘G is *known low-rank plus a non-negative
+//!   correction* — to run every subspace-iteration product in factored
+//!   space, never materialising V.
 
 use super::{mgs_qr_in_place, Mat};
 use crate::util::rng::Rng;
@@ -19,28 +27,85 @@ pub struct SrsiOutput {
     pub xi: f64,
 }
 
+/// Reusable buffers for the S-RSI iterations. One scratch per worker keeps
+/// the hot path allocation-free in steady state; a fresh scratch is
+/// equivalent (results never depend on previous contents).
+#[derive(Debug, Default)]
+pub struct SrsiScratch {
+    /// (m, k+p) iterate: A@U, orthonormalized in place to Q.
+    pub y: Mat,
+    /// (n, k+p) co-iterate: Aᵀ@Q.
+    pub u: Mat,
+    /// (m, n) rank-k reconstruction for the exact ξ (dense path only).
+    pub recon: Mat,
+    /// (m, k₀+1) left factor [Q₀ | r] (factored path only).
+    pub lf: Mat,
+    /// (n, k₀+1) right factor [β₂U₀ | ((1−β₂)/Σr)·c] (factored path only).
+    pub rf: Mat,
+    /// Small (k₀+1, k+p) / (k₀+1, k₀+1) products.
+    pub small: Mat,
+    /// Second small Gram buffer for the ξ estimate.
+    pub small2: Mat,
+    /// Row-sum accumulator for the rank-1 compression (factored path).
+    pub rsum: Vec<f64>,
+    /// Column-sum accumulator for the rank-1 compression (factored path).
+    pub csum: Vec<f64>,
+}
+
+impl SrsiScratch {
+    pub fn new() -> SrsiScratch {
+        SrsiScratch::default()
+    }
+}
+
 /// Streamlined Randomized Subspace Iteration with explicit sketch Ω.
 ///
 /// `omega` must be (n, k+p) standard Gaussian. Mirrors
 /// `python/compile/srsi.py::srsi` exactly.
 pub fn srsi_with_omega(a: &Mat, omega: &Mat, k: usize, l: usize) -> SrsiOutput {
+    srsi_with_omega_scratch(a, omega, k, l, &mut SrsiScratch::new())
+}
+
+/// [`srsi_with_omega`] writing every iterate into `scratch` — the
+/// allocation-free hot path. Bitwise identical to the allocating entry
+/// point (the `_into` kernels preserve per-element accumulation order).
+pub fn srsi_with_omega_scratch(
+    a: &Mat,
+    omega: &Mat,
+    k: usize,
+    l: usize,
+    scratch: &mut SrsiScratch,
+) -> SrsiOutput {
     let n = a.cols;
     assert_eq!(omega.rows, n);
     let kp = omega.cols;
     assert!(k <= kp && kp <= a.rows.min(n), "k={k} kp={kp} a={}x{}", a.rows, n);
 
-    let mut u = omega.clone();
-    let mut q = Mat::zeros(a.rows, kp);
+    scratch.u.copy_from(omega);
     for _ in 0..l.max(1) {
-        q = a.matmul(&u); // (m, kp)
-        mgs_qr_in_place(&mut q);
-        u = a.t_matmul(&q); // (n, kp)
+        a.matmul_into(&scratch.u, &mut scratch.y); // (m, kp)
+        mgs_qr_in_place(&mut scratch.y);
+        a.t_matmul_into(&scratch.y, &mut scratch.u); // (n, kp)
     }
-    let qk = q.take_cols(k);
-    let uk = u.take_cols(k);
-    let recon = qk.matmul_t(&uk);
-    let xi = a.rel_error(&recon);
+    let qk = scratch.y.take_cols(k);
+    let uk = scratch.u.take_cols(k);
+    qk.matmul_t_into(&uk, &mut scratch.recon);
+    let xi = rel_frob_error(a, &scratch.recon);
     SrsiOutput { q: qk, u: uk, xi }
+}
+
+/// ||A - B||_F / ||A||_F without materialising the difference (same f64
+/// accumulation order as `Mat::rel_error`).
+fn rel_frob_error(a: &Mat, approx: &Mat) -> f64 {
+    debug_assert_eq!((a.rows, a.cols), (approx.rows, approx.cols));
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&x, &y) in a.data.iter().zip(&approx.data) {
+        let d = (x - y) as f64;
+        num += d * d;
+        den += (x as f64) * (x as f64);
+    }
+    num.sqrt() / (den.sqrt() + 1e-300)
 }
 
 /// S-RSI drawing Ω from `rng` (paper defaults l=5, p=5, p capped at
@@ -49,6 +114,128 @@ pub fn srsi(a: &Mat, k: usize, l: usize, p: usize, rng: &mut Rng) -> SrsiOutput 
     let kp = (k + p).min(a.rows.min(a.cols));
     let omega = Mat::randn(a.cols, kp, rng);
     srsi_with_omega(a, &omega, k, l)
+}
+
+/// Structure-aware S-RSI fast path for Adapprox's between-refresh steps.
+///
+/// The iteration target is V = β₂·Q₀U₀ᵀ + (1−β₂)·G∘G: a *known* rank-k₀
+/// matrix plus a non-negative correction with a tiny (1−β₂) weight. The
+/// fast path compresses the correction to Adafactor's rank-1 non-negative
+/// factorization r·cᵀ/Σr (I-divergence optimal for non-negative matrices;
+/// Lee & Seung 1999, Shazeer & Stern 2018) — the "diagonal-style" summary
+/// of G² — and runs the whole subspace iteration on the exact rank-(k₀+1)
+/// surrogate
+///
+/// ```text
+/// Ṽ = L Rᵀ,   L = [Q₀ | r],   R = [β₂·U₀ | ((1−β₂)/Σr)·c]
+/// ```
+///
+/// so each half-iteration costs O((m+n)·k₀·(k+p)) instead of the dense
+/// O(m·n·(k+p)) — and V is never materialised. The returned ξ is the
+/// (cheap, Gram-based) error of the rank-k truncation *of the surrogate*:
+/// ‖Ṽ − QₖUₖᵀ‖²_F = ‖Ṽ‖²_F − ‖Uₖ‖²_F by Qₖ's orthonormality. When ξ of the
+/// true V must be exact — the AS-RSI refresh decisions — fall back to the
+/// dense [`srsi_with_omega`]; between refreshes the surrogate error is
+/// O((1−β₂)·‖G² − rcᵀ/Σr‖/‖V‖), negligible against the ξ threshold.
+pub fn srsi_factored(
+    q0: &Mat,
+    u0: &Mat,
+    g: &[f32],
+    beta2: f32,
+    omega: &Mat,
+    k: usize,
+    l: usize,
+) -> SrsiOutput {
+    srsi_factored_scratch(q0, u0, g, beta2, omega, k, l, &mut SrsiScratch::new())
+}
+
+/// [`srsi_factored`] with caller-provided scratch (allocation-free). `g` is
+/// the row-major (q0.rows × u0.rows) gradient.
+#[allow(clippy::too_many_arguments)]
+pub fn srsi_factored_scratch(
+    q0: &Mat,
+    u0: &Mat,
+    g: &[f32],
+    beta2: f32,
+    omega: &Mat,
+    k: usize,
+    l: usize,
+    s: &mut SrsiScratch,
+) -> SrsiOutput {
+    let (m, n) = (q0.rows, u0.rows);
+    let k0 = q0.cols;
+    assert_eq!(g.len(), m * n, "g len {} != {m}x{n}", g.len());
+    assert_eq!(u0.cols, k0, "u0 cols {} != q0 cols {k0}", u0.cols);
+    assert_eq!(omega.rows, n);
+    let kp = omega.cols;
+    assert!(k <= kp && kp <= m.min(n), "k={k} kp={kp} g={m}x{n}");
+
+    // Rank-1 compression of the correction: r_i = Σ_j g²_ij, c_j = Σ_i g²_ij.
+    s.rsum.clear();
+    s.rsum.resize(m, 0.0);
+    s.csum.clear();
+    s.csum.resize(n, 0.0);
+    for i in 0..m {
+        let grow = &g[i * n..(i + 1) * n];
+        let mut acc = 0.0f64;
+        for (cj, &gv) in s.csum.iter_mut().zip(grow) {
+            let sq = (gv as f64) * (gv as f64);
+            acc += sq;
+            *cj += sq;
+        }
+        s.rsum[i] = acc;
+    }
+    let total: f64 = s.rsum.iter().sum();
+    let cscale = if total > 1e-300 {
+        (1.0 - beta2 as f64) / total
+    } else {
+        0.0
+    };
+
+    // L = [Q₀ | r] (m, k₀+1), R = [β₂·U₀ | ((1−β₂)/Σr)·c] (n, k₀+1).
+    let k1 = k0 + 1;
+    s.lf.reset(m, k1);
+    for i in 0..m {
+        let row = &mut s.lf.data[i * k1..(i + 1) * k1];
+        row[..k0].copy_from_slice(&q0.data[i * k0..(i + 1) * k0]);
+        row[k0] = s.rsum[i] as f32;
+    }
+    s.rf.reset(n, k1);
+    for j in 0..n {
+        let row = &mut s.rf.data[j * k1..(j + 1) * k1];
+        for (dst, &uv) in row[..k0].iter_mut().zip(&u0.data[j * k0..(j + 1) * k0]) {
+            *dst = beta2 * uv;
+        }
+        row[k0] = (s.csum[j] * cscale) as f32;
+    }
+
+    // Power iteration entirely in the factored space.
+    s.u.copy_from(omega);
+    for _ in 0..l.max(1) {
+        s.rf.t_matmul_into(&s.u, &mut s.small); // (k₁, kp) = Rᵀ U
+        s.lf.matmul_into(&s.small, &mut s.y); // (m, kp) = L (Rᵀ U)
+        mgs_qr_in_place(&mut s.y);
+        s.lf.t_matmul_into(&s.y, &mut s.small); // (k₁, kp) = Lᵀ Q
+        s.rf.matmul_into(&s.small, &mut s.u); // (n, kp) = R (Lᵀ Q)
+    }
+    let qk = s.y.take_cols(k);
+    let uk = s.u.take_cols(k);
+
+    // ξ̂² = (‖Ṽ‖² − ‖Uₖ‖²) / ‖Ṽ‖², with ‖Ṽ‖² = trace((LᵀL)(RᵀR)) from the
+    // two (k₀+1)² Gram matrices — no m×n object anywhere.
+    s.lf.t_matmul_into(&s.lf, &mut s.small);
+    s.rf.t_matmul_into(&s.rf, &mut s.small2);
+    let mut v2 = 0.0f64;
+    for (&x, &y) in s.small.data.iter().zip(&s.small2.data) {
+        v2 += (x as f64) * (y as f64);
+    }
+    let uk2: f64 = uk.data.iter().map(|&x| (x as f64) * (x as f64)).sum();
+    let xi = if v2 > 1e-300 {
+        ((v2 - uk2).max(0.0) / v2).sqrt()
+    } else {
+        0.0
+    };
+    SrsiOutput { q: qk, u: uk, xi }
 }
 
 /// Adafactor's non-negative rank-1 factorization (Fig. 2's baseline):
@@ -76,7 +263,7 @@ pub fn adafactor_rank1(a: &Mat) -> (Mat, f64) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::{jacobi_svd, truncation_error};
+    use crate::linalg::{jacobi_svd, mgs_qr, truncation_error};
     use crate::testing::forall;
 
     /// Non-negative matrix with numerical rank ~k (Fig. 1-like spectrum).
@@ -166,6 +353,150 @@ mod tests {
         let o2 = srsi_with_omega(&a, &omega, 4, 5);
         assert_eq!(o1.q, o2.q);
         assert_eq!(o1.u, o2.u);
+    }
+
+    #[test]
+    fn scratch_reuse_is_bitwise_stable() {
+        // a dirty scratch must not leak into results
+        let mut rng = Rng::new(19);
+        let a = lowrank_nonneg(40, 28, 4, 0.02, &mut rng);
+        let b = lowrank_nonneg(24, 36, 3, 0.05, &mut rng);
+        let oa = Mat::randn(28, 9, &mut rng);
+        let ob = Mat::randn(36, 8, &mut rng);
+        let mut scratch = SrsiScratch::new();
+        let fresh_a = srsi_with_omega(&a, &oa, 4, 5);
+        let fresh_b = srsi_with_omega(&b, &ob, 3, 5);
+        // interleave shapes through one scratch
+        let ra1 = srsi_with_omega_scratch(&a, &oa, 4, 5, &mut scratch);
+        let rb = srsi_with_omega_scratch(&b, &ob, 3, 5, &mut scratch);
+        let ra2 = srsi_with_omega_scratch(&a, &oa, 4, 5, &mut scratch);
+        assert_eq!(ra1.q, fresh_a.q);
+        assert_eq!(ra2.q, fresh_a.q);
+        assert_eq!(ra2.u, fresh_a.u);
+        assert_eq!(rb.q, fresh_b.q);
+        assert_eq!(ra1.xi, fresh_a.xi);
+    }
+
+    /// The dense surrogate Ṽ = L Rᵀ that `srsi_factored` iterates on,
+    /// built with the same f32 factor entries.
+    fn dense_surrogate(q0: &Mat, u0: &Mat, g: &Mat, beta2: f32) -> Mat {
+        let (m, n) = (g.rows, g.cols);
+        let k0 = q0.cols;
+        let mut r = vec![0.0f64; m];
+        let mut c = vec![0.0f64; n];
+        for i in 0..m {
+            for j in 0..n {
+                let sq = (g.at(i, j) as f64).powi(2);
+                r[i] += sq;
+                c[j] += sq;
+            }
+        }
+        let total: f64 = r.iter().sum();
+        let cscale = if total > 1e-300 {
+            (1.0 - beta2 as f64) / total
+        } else {
+            0.0
+        };
+        let lf = Mat::from_fn(m, k0 + 1, |i, q| {
+            if q < k0 { q0.at(i, q) } else { r[i] as f32 }
+        });
+        let rf = Mat::from_fn(n, k0 + 1, |j, q| {
+            if q < k0 { beta2 * u0.at(j, q) } else { (c[j] * cscale) as f32 }
+        });
+        lf.matmul_t(&rf)
+    }
+
+    /// Well-separated factored target: orthonormal Q₀, per-column scaled U₀.
+    fn factored_target(m: usize, n: usize, k0: usize,
+                       rng: &mut Rng) -> (Mat, Mat, Mat) {
+        let q0 = mgs_qr(&Mat::randn(m, k0, rng));
+        let mut u0 = Mat::randn(n, k0, rng);
+        for j in 0..n {
+            for q in 0..k0 {
+                *u0.at_mut(j, q) *= 4.0 * 0.5f32.powi(q as i32);
+            }
+        }
+        let mut g = Mat::randn(m, n, rng);
+        for v in g.data.iter_mut() {
+            *v *= 0.05;
+        }
+        (q0, u0, g)
+    }
+
+    #[test]
+    fn factored_matches_dense_reference_on_surrogate() {
+        // srsi_factored must agree with the dense S-RSI applied to the
+        // *same* rank-(k0+1) surrogate it iterates on: same Ω, same l, same
+        // MGS — only the product factorization differs.
+        let mut rng = Rng::new(21);
+        let (m, n, k0, k, l) = (48, 40, 4, 4, 5);
+        let (q0, u0, g) = factored_target(m, n, k0, &mut rng);
+        let beta2 = 0.999f32;
+        let vt = dense_surrogate(&q0, &u0, &g, beta2);
+        let omega = Mat::randn(n, k + 5, &mut rng);
+        let dense = srsi_with_omega(&vt, &omega, k, l);
+        let fact = srsi_factored(&q0, &u0, &g.data, beta2, &omega, k, l);
+        // compare reconstructions (stable under within-subspace rotation)
+        let rd = dense.q.matmul_t(&dense.u);
+        let rf = fact.q.matmul_t(&fact.u);
+        let rel = rd.rel_error(&rf);
+        assert!(rel < 1e-3, "recon mismatch rel={rel}");
+        assert!(
+            (dense.xi - fact.xi).abs() < 2e-2,
+            "xi dense {} vs factored {}",
+            dense.xi,
+            fact.xi
+        );
+    }
+
+    #[test]
+    fn factored_recovers_full_surrogate_rank() {
+        // k = k0+1 captures the surrogate exactly: ξ̂ ≈ 0 and the
+        // reconstruction matches Ṽ.
+        let mut rng = Rng::new(22);
+        let (m, n, k0) = (40, 32, 3);
+        let (q0, u0, g) = factored_target(m, n, k0, &mut rng);
+        let beta2 = 0.999f32;
+        let vt = dense_surrogate(&q0, &u0, &g, beta2);
+        let omega = Mat::randn(n, k0 + 1 + 5, &mut rng);
+        let out = srsi_factored(&q0, &u0, &g.data, beta2, &omega, k0 + 1, 5);
+        assert!(out.xi < 1e-2, "xi={}", out.xi);
+        let recon = out.q.matmul_t(&out.u);
+        let rel = vt.rel_error(&recon);
+        assert!(rel < 1e-2, "rel={rel}");
+    }
+
+    #[test]
+    fn factored_deterministic_and_scratch_clean() {
+        let mut rng = Rng::new(23);
+        let (q0, u0, g) = factored_target(32, 24, 2, &mut rng);
+        let omega = Mat::randn(24, 8, &mut rng);
+        let mut scratch = SrsiScratch::new();
+        let o1 = srsi_factored(&q0, &u0, &g.data, 0.999, &omega, 3, 4);
+        let o2 =
+            srsi_factored_scratch(&q0, &u0, &g.data, 0.999, &omega, 3, 4,
+                                  &mut scratch);
+        let o3 =
+            srsi_factored_scratch(&q0, &u0, &g.data, 0.999, &omega, 3, 4,
+                                  &mut scratch);
+        assert_eq!(o1.q, o2.q);
+        assert_eq!(o1.u, o2.u);
+        assert_eq!(o2.q, o3.q);
+        assert_eq!(o2.u, o3.u);
+        assert_eq!(o1.xi, o3.xi);
+    }
+
+    #[test]
+    fn factored_zero_gradient_and_zero_factors_finite() {
+        let q0 = Mat::zeros(16, 2);
+        let u0 = Mat::zeros(12, 2);
+        let g = Mat::zeros(16, 12);
+        let mut rng = Rng::new(24);
+        let omega = Mat::randn(12, 6, &mut rng);
+        let out = srsi_factored(&q0, &u0, &g.data, 0.999, &omega, 2, 5);
+        assert!(out.q.data.iter().all(|v| v.is_finite()));
+        assert!(out.u.data.iter().all(|v| v.is_finite()));
+        assert!(out.xi.is_finite());
     }
 
     #[test]

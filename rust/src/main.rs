@@ -67,6 +67,8 @@ fn print_help() {
          [--cos-guidance]\n\
          \u{20}          [--replicas N] [--grad-accum N] [--csv PATH] \
          [--checkpoint PATH]\n\
+         \u{20}          [--native (+ --threads N --fast-srsi: the \
+         parallel compute core)]\n\
          eval      --checkpoint PATH [--eval-batches N]\n\
          finetune  --checkpoint PATH --task 0..4 --steps N --lr F\n\
          memory    print Table 2 (exact analytic over GPT-2 inventories)\n\
@@ -93,6 +95,9 @@ fn hyper_from_args(args: &Args, rt: &Runtime) -> Result<Hyper> {
     if args.has("cos-guidance") {
         h.cos_guidance = true;
     }
+    if args.has("fast-srsi") {
+        h.fast_srsi = true;
+    }
     Ok(h)
 }
 
@@ -110,6 +115,8 @@ fn train_options(args: &Args) -> Result<TrainOptions> {
         seed: args.u64_or("seed", 0xADA)?,
         log_csv: args.flag("csv").map(Into::into),
         log_every: args.usize_or("log-every", (steps / 20).max(1))?,
+        native: args.has("native"),
+        threads: args.usize_or("threads", 1)?,
     })
 }
 

@@ -52,6 +52,13 @@ pub struct Hyper {
     pub clip_enabled: bool,
     /// cosine-similarity guidance (paper §3.5; requires beta1 > 0)
     pub cos_guidance: bool,
+    /// structure-aware S-RSI on between-refresh steps: iterate on the
+    /// rank-(k+1) surrogate β₂QUᵀ + (1−β₂)·rank1(G²) in factored space
+    /// (`linalg::srsi_factored`) instead of the dense V. The weight update
+    /// is unchanged; the stored factors and ξ become (tight) estimates.
+    /// Refresh steps always use the dense path, so AS-RSI's rank decisions
+    /// stay exact. Off by default (exact paper semantics).
+    pub fast_srsi: bool,
     // ---- AS-RSI (paper Alg. 2) ----
     pub k_init: usize,
     pub l: usize,
@@ -78,6 +85,7 @@ impl Hyper {
             clip_d: hd.clip_d,
             clip_enabled: true,
             cos_guidance: false,
+            fast_srsi: false,
             k_init: hd.k_init,
             l: hd.l,
             p: hd.p,

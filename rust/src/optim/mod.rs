@@ -17,12 +17,14 @@ pub mod hyper;
 pub mod native;
 pub mod rank;
 pub mod state;
+pub mod workspace;
 pub mod xla_exec;
 
 pub use hyper::{Hyper, OptKind};
 pub use native::NativeOptimizer;
 pub use rank::{f_xi, RankController};
 pub use state::{OptimizerState, ParamState, StepInfo};
+pub use workspace::Workspace;
 pub use xla_exec::{build_optimizer, XlaOptimizer};
 
 use anyhow::Result;

@@ -1,11 +1,32 @@
 //! Whole-model native optimizer (the artifact-free backend).
+//!
+//! Built as a compute core rather than a loop over allocating helpers:
+//!
+//! - **per-worker contexts** ([`WorkerCtx`]: a [`Workspace`] + sketch
+//!   buffer) keep the hot path free of m×n-sized allocations: scratch
+//!   memory is bounded by `threads × (largest parameter)`, not by the
+//!   parameter count, and is reused for the rest of training (the only
+//!   remaining steady-state allocations are the factor-sized (m+n)·k
+//!   outputs the S-RSI hands back as new state);
+//! - **per-parameter RNG streams** (split once from the seed) make the
+//!   sketch draws independent of parameter visit order, so
+//! - **the per-tensor step loop is embarrassingly parallel**: jobs own
+//!   disjoint state and fan out over a [`Pool`] (thread count from
+//!   `TrainOptions::threads` via [`NativeOptimizer::with_threads`]), with
+//!   results *bitwise identical* for every thread count (workspace
+//!   contents never affect results);
+//! - the optional [`Hyper::fast_srsi`] switch routes between-refresh
+//!   Adapprox factorizations through the structure-aware
+//!   `linalg::srsi_factored` fast path.
 
 use anyhow::{bail, Result};
 
-use crate::linalg::{srsi_with_omega, Mat};
+use crate::linalg::{srsi_with_omega_scratch, Mat};
 use crate::optim::state::{OptimizerState, ParamState, StepInfo};
-use crate::optim::{native::steps, Hyper, OptKind, Optimizer};
+use crate::optim::workspace::Workspace;
+use crate::optim::{native::steps, Hyper, Optimizer};
 use crate::runtime::{Ladder, ParamSpec, Tensor};
+use crate::util::pool::Pool;
 use crate::util::rng::Rng;
 
 /// Native-Rust optimizer over the full parameter set.
@@ -13,7 +34,38 @@ pub struct NativeOptimizer {
     hyper: Hyper,
     specs: Vec<ParamSpec>,
     state: OptimizerState,
-    rng: Rng,
+    /// One sketch stream per parameter: drawing Ω for parameter i never
+    /// perturbs parameter j's stream, whatever the execution schedule.
+    rngs: Vec<Rng>,
+    /// One reusable scratch context per worker span (grown lazily to the
+    /// pool width in `step`).
+    ctxs: Vec<WorkerCtx>,
+    pool: Pool,
+}
+
+/// Reusable scratch for one worker: the step workspace plus the sketch Ω
+/// buffer (kept outside [`Workspace`] so Ω can be borrowed immutably while
+/// the workspace is borrowed mutably by the same step call).
+#[derive(Debug, Default)]
+struct WorkerCtx {
+    ws: Workspace,
+    omega: Mat,
+}
+
+/// One parameter's slice of a step: everything the worker touches is owned
+/// by (or uniquely borrowed into) the job, so jobs are `Send` and mutate
+/// nothing shared.
+struct StepJob<'a> {
+    spec: &'a ParamSpec,
+    st: &'a mut ParamState,
+    rng: &'a mut Rng,
+    w: &'a mut [f32],
+    g: &'a [f32],
+    /// outputs (aggregated single-threaded after the fan-out)
+    xi: f64,
+    rank: f64,
+    retries: usize,
+    is_matrix: bool,
 }
 
 impl NativeOptimizer {
@@ -25,15 +77,37 @@ impl NativeOptimizer {
     ) -> Result<NativeOptimizer> {
         hyper.validate().map_err(|e| anyhow::anyhow!(e))?;
         let state = OptimizerState::init(&specs, &hyper, ladders);
+        let mut root = Rng::new(seed ^ 0x0B71);
+        let rngs = (0..specs.len())
+            .map(|i| root.split(i as u64))
+            .collect();
         Ok(NativeOptimizer {
             hyper,
             specs,
             state,
-            rng: Rng::new(seed ^ 0x0B71),
+            rngs,
+            ctxs: Vec::new(),
+            pool: Pool::single(),
         })
     }
 
+    /// Fan the per-tensor step loop out over `threads` workers (typically
+    /// `TrainOptions::threads`). Any count produces bitwise-identical
+    /// weights: each parameter's math runs on exactly one worker, in the
+    /// same order, from its own RNG stream.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.pool = Pool::new(threads);
+        self
+    }
+
+    /// Worker thread count currently configured.
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
     /// Shared AS-RSI control plane for one Adapprox matrix parameter.
+    /// Returns (ξ, rank, refresh retries). `omega_buf` is the reusable
+    /// sketch buffer (filled from `rng` exactly as `Mat::randn` would).
     #[allow(clippy::too_many_arguments)]
     fn adapprox_matrix_step(
         hyper: &Hyper,
@@ -44,9 +118,10 @@ impl NativeOptimizer {
         w: &mut [f32],
         g: &[f32],
         st: &mut ParamState,
+        ws: &mut Workspace,
+        omega_buf: &mut Mat,
         lr: f32,
-        info: &mut StepInfo,
-    ) {
+    ) -> (f64, f64, usize) {
         let ParamState::Adapprox {
             m,
             q,
@@ -58,27 +133,36 @@ impl NativeOptimizer {
         else {
             unreachable!()
         };
-        let mut m_buf: &mut [f32] = match m {
+        let m_buf: &mut [f32] = match m {
             Some(v) => v,
             None => &mut [],
         };
         let cos = hyper.cos_guidance && hyper.beta1 > 0.0;
         let d = hyper.d_eff();
-        let qm = Mat::from_vec(rows, *bucket, q.clone());
-        let um = Mat::from_vec(cols, *bucket, u.clone());
+        // move the stored factors into Mat views (no copy); both branches
+        // overwrite *q/*u with the fresh factors before returning
+        let qm = Mat::from_vec(rows, *bucket, std::mem::take(q));
+        let um = Mat::from_vec(cols, *bucket, std::mem::take(u));
+        let mut retries = 0usize;
 
         use crate::optim::rank::RankDecision;
-        match rank.decide(t, hyper) {
+        let xi = match rank.decide(t, hyper) {
             RankDecision::Keep { bucket: b } => {
                 let kp = (b + rank.p_for(b)).min(rows.min(cols));
-                let omega = Mat::randn(cols, kp, rng);
-                let (q2, u2, xi) = steps::adapprox_step(
+                omega_buf.reset_for_assign(cols, kp);
+                rng.fill_normal_f32(&mut omega_buf.data);
+                let step_fn = if hyper.fast_srsi {
+                    steps::adapprox_step_fast_ws
+                } else {
+                    steps::adapprox_step_ws
+                };
+                let (q2, u2, xi) = step_fn(
                     w,
-                    &mut m_buf,
+                    m_buf,
                     &qm,
                     &um,
                     g,
-                    &omega,
+                    omega_buf,
                     rows,
                     cols,
                     b,
@@ -90,38 +174,42 @@ impl NativeOptimizer {
                     hyper.weight_decay,
                     d,
                     cos,
+                    ws,
                 );
                 *q = q2.data;
                 *u = u2.data;
                 *bucket = b;
                 *last_xi = xi;
-                info.mean_xi += xi;
+                xi
             }
             RankDecision::Refresh { start_bucket } => {
-                // V computed once from the stored factors (Alg. 2's fixed A)
-                let v = steps::adapprox_vstep(&qm, &um, g, rows, cols,
-                                              hyper.beta2);
-                let vm = Mat::from_vec(rows, cols, v.clone());
+                // V computed once from the stored factors (Alg. 2's fixed
+                // A); refresh decisions need the exact dense ξ, so the
+                // factored fast path never applies here.
+                steps::adapprox_vstep_ws(&qm, &um, g, rows, cols,
+                                         hyper.beta2, ws);
                 let mut b = start_bucket;
                 let (mut best, mut xi);
                 loop {
                     let kp = (b + rank.p_for(b)).min(rows.min(cols));
-                    let omega = Mat::randn(cols, kp, rng);
-                    let out = srsi_with_omega(&vm, &omega, b, hyper.l);
+                    omega_buf.reset_for_assign(cols, kp);
+                    rng.fill_normal_f32(&mut omega_buf.data);
+                    let out = srsi_with_omega_scratch(&ws.vmat, omega_buf, b,
+                                                      hyper.l, &mut ws.srsi);
                     xi = out.xi;
                     best = out;
                     match rank.grow(xi, hyper) {
                         Some(next_b) => {
-                            info.rank_retries += 1;
+                            retries += 1;
                             b = next_b;
                         }
                         None => break,
                     }
                 }
-                steps::adapprox_apply(
+                steps::adapprox_apply_ws(
                     w,
-                    &mut m_buf,
-                    &v,
+                    m_buf,
+                    &ws.vmat.data,
                     g,
                     lr,
                     hyper.beta1,
@@ -129,15 +217,112 @@ impl NativeOptimizer {
                     hyper.weight_decay,
                     d,
                     cos,
+                    &mut ws.upd,
                 );
                 *q = best.q.data;
                 *u = best.u.data;
                 *bucket = best.q.cols;
                 *last_xi = xi;
-                info.mean_xi += xi;
+                xi
+            }
+        };
+        (xi, rank.k as f64, retries)
+    }
+
+    /// Execute one parameter's step inside a job (any worker thread owns
+    /// `ctx` exclusively for its whole span).
+    fn step_one(h: &Hyper, t: usize, lr: f32, job: &mut StepJob, ctx: &mut WorkerCtx) {
+        let g = job.g;
+        match job.st {
+            ParamState::AdamW { m, v } => steps::adamw_step(
+                job.w,
+                m,
+                v,
+                g,
+                t as f32,
+                lr,
+                h.beta1,
+                h.beta2,
+                h.eps,
+                h.weight_decay,
+            ),
+            ParamState::FactoredVec { m, v } => {
+                let m_buf: &mut [f32] = match m {
+                    Some(mv) => mv,
+                    None => &mut [],
+                };
+                steps::vec_factored_step_ws(
+                    job.w,
+                    m_buf,
+                    v,
+                    g,
+                    lr,
+                    h.beta1,
+                    h.beta2,
+                    h.eps,
+                    h.weight_decay,
+                    h.d_eff(),
+                    &mut ctx.ws,
+                );
+            }
+            ParamState::Adafactor { m, r, c } => {
+                let (rows, cols) = (job.spec.shape[0], job.spec.shape[1]);
+                let m_buf: &mut [f32] = match m {
+                    Some(mv) => mv,
+                    None => &mut [],
+                };
+                steps::adafactor_step_ws(
+                    job.w,
+                    m_buf,
+                    r,
+                    c,
+                    g,
+                    rows,
+                    cols,
+                    lr,
+                    h.beta1,
+                    h.beta2,
+                    1e-30,
+                    h.weight_decay,
+                    h.d_eff(),
+                    &mut ctx.ws,
+                );
+            }
+            ParamState::Came { m, r, c, rc, cc } => {
+                let (rows, cols) = (job.spec.shape[0], job.spec.shape[1]);
+                steps::came_step_ws(
+                    job.w,
+                    m,
+                    r,
+                    c,
+                    rc,
+                    cc,
+                    g,
+                    rows,
+                    cols,
+                    lr,
+                    h.beta1,
+                    h.beta2,
+                    h.beta3,
+                    1e-30,
+                    h.eps2,
+                    h.weight_decay,
+                    h.d_eff(),
+                    &mut ctx.ws,
+                );
+            }
+            ParamState::Adapprox { .. } => {
+                let (rows, cols) = (job.spec.shape[0], job.spec.shape[1]);
+                job.is_matrix = true;
+                let (xi, rank, retries) = Self::adapprox_matrix_step(
+                    h, job.rng, t, rows, cols, job.w, g, job.st,
+                    &mut ctx.ws, &mut ctx.omega, lr,
+                );
+                job.xi = xi;
+                job.rank = rank;
+                job.retries = retries;
             }
         }
-        info.mean_rank += rank.k as f64;
     }
 }
 
@@ -160,114 +345,56 @@ impl Optimizer for NativeOptimizer {
         self.state.step += 1;
         let t = self.state.step;
         let h = self.hyper.clone();
+        let pool = self.pool.clone();
+        // one scratch context per worker span: scratch memory is bounded by
+        // the pool width, not the parameter count
+        let spans = pool.threads().min(self.specs.len()).max(1);
+        if self.ctxs.len() < spans {
+            self.ctxs.resize_with(spans, WorkerCtx::default);
+        }
+
+        // Build one job per parameter; gradients are borrowed, not copied.
+        let mut jobs: Vec<StepJob> = Vec::with_capacity(self.specs.len());
+        for (((spec, st), rng), (p, gt)) in self
+            .specs
+            .iter()
+            .zip(self.state.states.iter_mut())
+            .zip(self.rngs.iter_mut())
+            .zip(params.iter_mut().zip(grads))
+        {
+            let g = gt.as_f32()?;
+            let w: &mut [f32] = p.as_f32_mut()?;
+            jobs.push(StepJob {
+                spec,
+                st,
+                rng,
+                w,
+                g,
+                xi: 0.0,
+                rank: 0.0,
+                retries: 0,
+                is_matrix: false,
+            });
+        }
+
+        pool.run_units_ctx(&mut jobs, 1, &mut self.ctxs, |ctx, _, span| {
+            for job in span.iter_mut() {
+                Self::step_one(&h, t, lr, job, ctx);
+            }
+        });
+
         let mut info = StepInfo {
             step: t,
             ..Default::default()
         };
         let mut n_matrix = 0usize;
-
-        for ((spec, st), (p, gt)) in self
-            .specs
-            .iter()
-            .zip(self.state.states.iter_mut())
-            .zip(params.iter_mut().zip(grads))
-        {
-            let g = gt.as_f32()?.to_vec();
-            let w = p.as_f32_mut()?;
-            match st {
-                ParamState::AdamW { m, v } => steps::adamw_step(
-                    w,
-                    m,
-                    v,
-                    &g,
-                    t as f32,
-                    lr,
-                    h.beta1,
-                    h.beta2,
-                    h.eps,
-                    h.weight_decay,
-                ),
-                ParamState::FactoredVec { m, v } => {
-                    let mut scratch;
-                    let m_buf: &mut [f32] = match m {
-                        Some(mv) => mv,
-                        None => {
-                            scratch = vec![0.0f32; w.len()];
-                            &mut scratch
-                        }
-                    };
-                    steps::vec_factored_step(
-                        w,
-                        m_buf,
-                        v,
-                        &g,
-                        lr,
-                        h.beta1,
-                        h.beta2,
-                        h.eps,
-                        h.weight_decay,
-                        h.d_eff(),
-                    );
-                }
-                ParamState::Adafactor { m, r, c } => {
-                    let (rows, cols) = (spec.shape[0], spec.shape[1]);
-                    let mut empty: Vec<f32> = vec![];
-                    let m_buf = m.as_mut().unwrap_or(&mut empty);
-                    steps::adafactor_step(
-                        w,
-                        m_buf,
-                        r,
-                        c,
-                        &g,
-                        rows,
-                        cols,
-                        lr,
-                        h.beta1,
-                        h.beta2,
-                        1e-30,
-                        h.weight_decay,
-                        h.d_eff(),
-                    );
-                }
-                ParamState::Came { m, r, c, rc, cc } => {
-                    let (rows, cols) = (spec.shape[0], spec.shape[1]);
-                    steps::came_step(
-                        w,
-                        m,
-                        r,
-                        c,
-                        rc,
-                        cc,
-                        &g,
-                        rows,
-                        cols,
-                        lr,
-                        h.beta1,
-                        h.beta2,
-                        h.beta3,
-                        1e-30,
-                        h.eps2,
-                        h.weight_decay,
-                        h.d_eff(),
-                    );
-                }
-                ParamState::Adapprox { .. } => {
-                    let (rows, cols) = (spec.shape[0], spec.shape[1]);
-                    n_matrix += 1;
-                    Self::adapprox_matrix_step(
-                        &h,
-                        &mut self.rng,
-                        t,
-                        rows,
-                        cols,
-                        w,
-                        &g,
-                        st,
-                        lr,
-                        &mut info,
-                    );
-                }
+        for job in &jobs {
+            if job.is_matrix {
+                n_matrix += 1;
+                info.mean_xi += job.xi;
+                info.mean_rank += job.rank;
             }
+            info.rank_retries += job.retries;
         }
         if n_matrix > 0 {
             info.mean_xi /= n_matrix as f64;
@@ -337,6 +464,31 @@ mod tests {
         ]
     }
 
+    fn specs4() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec {
+                name: "w0".into(),
+                shape: vec![16, 24],
+                kind: "matrix".into(),
+            },
+            ParamSpec {
+                name: "b0".into(),
+                shape: vec![24],
+                kind: "vector".into(),
+            },
+            ParamSpec {
+                name: "w1".into(),
+                shape: vec![12, 20],
+                kind: "matrix".into(),
+            },
+            ParamSpec {
+                name: "b1".into(),
+                shape: vec![20],
+                kind: "vector".into(),
+            },
+        ]
+    }
+
     fn ladder(m: usize, n: usize) -> Option<Ladder> {
         let kmax = (m.min(n) + 3) / 4;
         let mut buckets = vec![];
@@ -354,12 +506,8 @@ mod tests {
         })
     }
 
-    fn quadratic_descent(kind: OptKind) -> f64 {
+    fn quadratic_descent_hyper(h: Hyper) -> f64 {
         // minimize ||W||^2 from a random start: loss must drop steadily
-        let mut h = Hyper::paper_defaults(kind, &hd());
-        if kind == OptKind::Came {
-            h.beta1 = 0.9;
-        }
         let mut opt =
             NativeOptimizer::new(specs(), h, &|m, n| ladder(m, n), 7).unwrap();
         let mut rng = Rng::new(3);
@@ -397,6 +545,14 @@ mod tests {
         loss(&params) / l0
     }
 
+    fn quadratic_descent(kind: OptKind) -> f64 {
+        let mut h = Hyper::paper_defaults(kind, &hd());
+        if kind == OptKind::Came {
+            h.beta1 = 0.9;
+        }
+        quadratic_descent_hyper(h)
+    }
+
     #[test]
     fn all_optimizers_descend_quadratic() {
         for kind in [
@@ -408,6 +564,14 @@ mod tests {
             let ratio = quadratic_descent(kind);
             assert!(ratio < 0.5, "{kind:?} only reached ratio {ratio}");
         }
+    }
+
+    #[test]
+    fn fast_srsi_descends_quadratic_too() {
+        let mut h = Hyper::paper_defaults(OptKind::Adapprox, &hd());
+        h.fast_srsi = true;
+        let ratio = quadratic_descent_hyper(h);
+        assert!(ratio < 0.5, "fast_srsi only reached ratio {ratio}");
     }
 
     #[test]
@@ -465,6 +629,59 @@ mod tests {
         };
         assert_eq!(run(1), run(1));
         assert_ne!(run(1), run(2)); // sketch RNG differs
+    }
+
+    #[test]
+    fn threaded_step_bitwise_matches_single_threaded() {
+        // the acceptance bar for the parallel-for layer: any thread count
+        // must reproduce the single-threaded weights exactly, for every
+        // optimizer family in the same model
+        for kind in [OptKind::Adapprox, OptKind::Came, OptKind::Adafactor] {
+            let mut h = Hyper::paper_defaults(kind, &hd());
+            if kind == OptKind::Came {
+                h.beta1 = 0.9;
+            }
+            let run = |threads: usize| {
+                let mut opt = NativeOptimizer::new(
+                    specs4(), h.clone(), &|m, n| ladder(m, n), 13,
+                )
+                .unwrap()
+                .with_threads(threads);
+                assert_eq!(opt.threads(), threads.max(1));
+                let mut rng = Rng::new(17);
+                let mut params: Vec<Tensor> = specs4()
+                    .iter()
+                    .map(|s| {
+                        Tensor::f32(s.shape.clone(),
+                                    rng.normal_vec_f32(s.numel()))
+                    })
+                    .collect();
+                let mut xis = vec![];
+                for _ in 0..8 {
+                    let grads: Vec<Tensor> = params
+                        .iter()
+                        .map(|t| Tensor::f32(t.shape.clone(),
+                                             rng.normal_vec_f32(t.numel())))
+                        .collect();
+                    let info =
+                        opt.step(&mut params, &grads, 1e-3).unwrap();
+                    xis.push(info.mean_xi);
+                }
+                let weights: Vec<Vec<f32>> = params
+                    .iter()
+                    .map(|p| p.as_f32().unwrap().to_vec())
+                    .collect();
+                (weights, xis)
+            };
+            let single = run(1);
+            for threads in [2, 4] {
+                let multi = run(threads);
+                assert_eq!(single.0, multi.0,
+                           "{kind:?} weights diverged at {threads} threads");
+                assert_eq!(single.1, multi.1,
+                           "{kind:?} telemetry diverged at {threads} threads");
+            }
+        }
     }
 
     #[test]

@@ -4,8 +4,17 @@
 //! Numeric conventions copied from the L2 code: `_TINY = 1e-30` guards, RMS
 //! clipping after the raw update, first moment averages the *update* for the
 //! factored family, decoupled weight decay everywhere.
+//!
+//! Every 2-D step comes in two flavours: the original allocating signature
+//! (kept for the parity tests and one-shot callers) and a `_ws` variant
+//! writing all scratch into a reusable [`Workspace`]. The allocating entry
+//! points are thin wrappers over the `_ws` bodies with a fresh workspace,
+//! so both flavours are bitwise identical by construction.
 
-use crate::linalg::{srsi_with_omega, Mat};
+use crate::linalg::{
+    srsi_factored_scratch, srsi_with_omega_scratch, Mat,
+};
+use crate::optim::workspace::{buf_f32, buf_f64, Workspace};
 
 const TINY: f32 = 1e-30;
 
@@ -51,7 +60,9 @@ pub fn adamw_step(
 }
 
 /// Factored-family 1-D step: full V, no bias correction, RMS clipping,
-/// optional first moment (`beta1 = 0` disables exactly).
+/// optional first moment (`beta1 = 0` disables exactly; `m` may be empty
+/// in that case and the clipped update is applied directly — numerically
+/// identical to a zeroed scratch moment).
 #[allow(clippy::too_many_arguments)]
 pub fn vec_factored_step(
     w: &mut [f32],
@@ -65,16 +76,41 @@ pub fn vec_factored_step(
     wd: f32,
     d: f32,
 ) {
+    vec_factored_step_ws(w, m, v, g, lr, beta1, beta2, eps, wd, d,
+                         &mut Workspace::new());
+}
+
+/// [`vec_factored_step`] with workspace-backed scratch (allocation-free).
+#[allow(clippy::too_many_arguments)]
+pub fn vec_factored_step_ws(
+    w: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    wd: f32,
+    d: f32,
+    ws: &mut Workspace,
+) {
     let n = w.len();
-    let mut upd = vec![0.0f32; n];
+    let upd = buf_f32(&mut ws.upd, n);
     for i in 0..n {
         v[i] = beta2 * v[i] + (1.0 - beta2) * g[i] * g[i];
         upd[i] = g[i] / (v[i].sqrt() + eps);
     }
-    clip_by_rms(&mut upd, d);
+    clip_by_rms(upd, d);
+    let use_m = !m.is_empty();
     for i in 0..n {
-        m[i] = beta1 * m[i] + (1.0 - beta1) * upd[i];
-        w[i] -= lr * (m[i] + wd * w[i]);
+        let mu = if use_m {
+            m[i] = beta1 * m[i] + (1.0 - beta1) * upd[i];
+            m[i]
+        } else {
+            upd[i]
+        };
+        w[i] -= lr * (mu + wd * w[i]);
     }
 }
 
@@ -95,9 +131,31 @@ pub fn adafactor_step(
     wd: f32,
     d: f32,
 ) {
+    adafactor_step_ws(w, m, r, c, g, rows, cols, lr, beta1, beta2, eps1,
+                      wd, d, &mut Workspace::new());
+}
+
+/// [`adafactor_step`] with workspace-backed scratch (allocation-free).
+#[allow(clippy::too_many_arguments)]
+pub fn adafactor_step_ws(
+    w: &mut [f32],
+    m: &mut [f32],
+    r: &mut [f32],
+    c: &mut [f32],
+    g: &[f32],
+    rows: usize,
+    cols: usize,
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps1: f32,
+    wd: f32,
+    d: f32,
+    ws: &mut Workspace,
+) {
     // row/col means of g^2 + eps1
-    let mut rsum = vec![0.0f64; rows];
-    let mut csum = vec![0.0f64; cols];
+    let rsum = buf_f64(&mut ws.rsum, rows);
+    let csum = buf_f64(&mut ws.csum, cols);
     for i in 0..rows {
         for j in 0..cols {
             let sq = (g[i * cols + j] as f64).powi(2) + eps1 as f64;
@@ -115,14 +173,14 @@ pub fn adafactor_step(
     }
     let rmean = (rmean_total / rows as f64) as f32 + TINY;
     // update = g / sqrt(outer(r, c) / mean(r))
-    let mut upd = vec![0.0f32; rows * cols];
+    let upd = buf_f32(&mut ws.upd, rows * cols);
     for i in 0..rows {
         for j in 0..cols {
             let vhat = r[i] * c[j] / rmean;
             upd[i * cols + j] = g[i * cols + j] / (vhat.sqrt() + TINY);
         }
     }
-    clip_by_rms(&mut upd, d);
+    clip_by_rms(upd, d);
     let use_m = !m.is_empty();
     for i in 0..w.len() {
         let mu = if use_m {
@@ -156,9 +214,35 @@ pub fn came_step(
     wd: f32,
     d: f32,
 ) {
+    came_step_ws(w, m, r, c, rc, cc, g, rows, cols, lr, beta1, beta2, beta3,
+                 eps1, eps2, wd, d, &mut Workspace::new());
+}
+
+/// [`came_step`] with workspace-backed scratch (allocation-free).
+#[allow(clippy::too_many_arguments)]
+pub fn came_step_ws(
+    w: &mut [f32],
+    m: &mut [f32],
+    r: &mut [f32],
+    c: &mut [f32],
+    rc: &mut [f32],
+    cc: &mut [f32],
+    g: &[f32],
+    rows: usize,
+    cols: usize,
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    beta3: f32,
+    eps1: f32,
+    eps2: f32,
+    wd: f32,
+    d: f32,
+    ws: &mut Workspace,
+) {
     // Adafactor-style factored second moment
-    let mut rsum = vec![0.0f64; rows];
-    let mut csum = vec![0.0f64; cols];
+    let rsum = buf_f64(&mut ws.rsum, rows);
+    let csum = buf_f64(&mut ws.csum, cols);
     for i in 0..rows {
         for j in 0..cols {
             let sq = (g[i * cols + j] as f64).powi(2) + eps1 as f64;
@@ -175,17 +259,17 @@ pub fn came_step(
         c[j] = beta2 * c[j] + (1.0 - beta2) * (csum[j] / rows as f64) as f32;
     }
     let rmean = (rmean_total / rows as f64) as f32 + TINY;
-    let mut uhat = vec![0.0f32; rows * cols];
+    let uhat = buf_f32(&mut ws.upd, rows * cols);
     for i in 0..rows {
         for j in 0..cols {
             let vhat = r[i] * c[j] / rmean;
             uhat[i * cols + j] = g[i * cols + j] / (vhat.sqrt() + TINY);
         }
     }
-    clip_by_rms(&mut uhat, d);
+    clip_by_rms(uhat, d);
     // first moment + instability statistic
-    let mut rcsum = vec![0.0f64; rows];
-    let mut ccsum = vec![0.0f64; cols];
+    let rcsum = buf_f64(&mut ws.rcsum, rows);
+    let ccsum = buf_f64(&mut ws.ccsum, cols);
     for i in 0..rows {
         for j in 0..cols {
             let idx = i * cols + j;
@@ -223,16 +307,37 @@ pub fn adapprox_vstep(
     cols: usize,
     beta2: f32,
 ) -> Vec<f32> {
-    let recon = q.matmul_t(u); // (rows, cols)
-    let mut v = vec![0.0f32; rows * cols];
-    for i in 0..v.len() {
+    let mut ws = Workspace::new();
+    adapprox_vstep_ws(q, u, g, rows, cols, beta2, &mut ws);
+    ws.vmat.data
+}
+
+/// [`adapprox_vstep`] writing V into `ws.vmat` (and the Q Uᵀ product into
+/// `ws.recon`) — no allocation in steady state.
+pub fn adapprox_vstep_ws(
+    q: &Mat,
+    u: &Mat,
+    g: &[f32],
+    rows: usize,
+    cols: usize,
+    beta2: f32,
+    ws: &mut Workspace,
+) {
+    q.matmul_t_into(u, &mut ws.recon); // (rows, cols)
+    ws.vmat.reset_for_assign(rows, cols);
+    for (i, (v, &rec)) in ws
+        .vmat
+        .data
+        .iter_mut()
+        .zip(&ws.recon.data)
+        .enumerate()
+    {
         // reconstruction clamped at zero (mirrors the L1 kernel): rank-k
         // factors of a non-negative matrix carry small negative noise that
         // would otherwise explode g / (sqrt(V) + eps) and dominate the RMS
         // clip, freezing all other coordinates
-        v[i] = beta2 * recon.data[i].max(0.0) + (1.0 - beta2) * g[i] * g[i];
+        *v = beta2 * rec.max(0.0) + (1.0 - beta2) * g[i] * g[i];
     }
-    v
 }
 
 /// Adapprox update application (rank-independent tail of Alg. 3).
@@ -250,19 +355,39 @@ pub fn adapprox_apply(
     d: f32,
     cos_guidance: bool,
 ) {
+    adapprox_apply_ws(w, m, v, g, lr, beta1, eps, wd, d, cos_guidance,
+                      &mut Vec::new());
+}
+
+/// [`adapprox_apply`] with a caller-provided update buffer (usually
+/// `&mut ws.upd`; passed separately so `v` may borrow `ws.vmat`).
+#[allow(clippy::too_many_arguments)]
+pub fn adapprox_apply_ws(
+    w: &mut [f32],
+    m: &mut [f32],
+    v: &[f32],
+    g: &[f32],
+    lr: f32,
+    beta1: f32,
+    eps: f32,
+    wd: f32,
+    d: f32,
+    cos_guidance: bool,
+    upd_buf: &mut Vec<f32>,
+) {
     let n = w.len();
-    let mut upd = vec![0.0f32; n];
+    let upd = buf_f32(upd_buf, n);
     for i in 0..n {
         upd[i] = g[i] / (v[i].max(0.0).sqrt() + eps);
     }
-    clip_by_rms(&mut upd, d);
+    clip_by_rms(upd, d);
     let use_m = !m.is_empty();
     if use_m {
         for i in 0..n {
             m[i] = beta1 * m[i] + (1.0 - beta1) * upd[i];
         }
     }
-    let m_slice: &[f32] = if use_m { m } else { &upd };
+    let m_slice: &[f32] = if use_m { m } else { upd };
     // cosine-similarity guidance (Eq. 17-18), applied to the used update
     let scale = if cos_guidance && use_m {
         let mut dot = 0.0f64;
@@ -305,17 +430,82 @@ pub fn adapprox_step(
     d: f32,
     cos_guidance: bool,
 ) -> (Mat, Mat, f64) {
-    let v = adapprox_vstep(q, u, g, rows, cols, beta2);
-    let vm = Mat::from_vec(rows, cols, v.clone());
-    let out = srsi_with_omega(&vm, omega, k, l);
-    adapprox_apply(w, m, &v, g, lr, beta1, eps, wd, d, cos_guidance);
+    adapprox_step_ws(w, m, q, u, g, omega, rows, cols, k, l, lr, beta1,
+                     beta2, eps, wd, d, cos_guidance, &mut Workspace::new())
+}
+
+/// [`adapprox_step`] running every stage through `ws` — no m×n-sized
+/// allocations in steady state (the returned factors are fresh
+/// (m+n)·k-sized buffers that become the new optimizer state); bitwise
+/// identical to the allocating entry point.
+#[allow(clippy::too_many_arguments)]
+pub fn adapprox_step_ws(
+    w: &mut [f32],
+    m: &mut [f32],
+    q: &Mat,
+    u: &Mat,
+    g: &[f32],
+    omega: &Mat,
+    rows: usize,
+    cols: usize,
+    k: usize,
+    l: usize,
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    wd: f32,
+    d: f32,
+    cos_guidance: bool,
+    ws: &mut Workspace,
+) -> (Mat, Mat, f64) {
+    adapprox_vstep_ws(q, u, g, rows, cols, beta2, ws);
+    let out = srsi_with_omega_scratch(&ws.vmat, omega, k, l, &mut ws.srsi);
+    adapprox_apply_ws(w, m, &ws.vmat.data, g, lr, beta1, eps, wd, d,
+                      cos_guidance, &mut ws.upd);
+    (out.q, out.u, out.xi)
+}
+
+/// Structure-aware fused Adapprox step: identical weight/moment update to
+/// [`adapprox_step_ws`] (the update consumes the same dense V), but the
+/// next factors come from [`srsi_factored_scratch`] — the subspace
+/// iteration runs on the rank-(k₀+1) surrogate β₂QUᵀ + (1−β₂)·rank1(G²)
+/// without ever materialising an m×n iteration target, turning the
+/// per-step factorization from O(mn(k+p)l) into O((m+n)k(k+p)l). The
+/// returned ξ is the surrogate's truncation error (an estimate of the
+/// dense ξ); refresh steps, which need ξ exactly, keep the dense path.
+#[allow(clippy::too_many_arguments)]
+pub fn adapprox_step_fast_ws(
+    w: &mut [f32],
+    m: &mut [f32],
+    q: &Mat,
+    u: &Mat,
+    g: &[f32],
+    omega: &Mat,
+    rows: usize,
+    cols: usize,
+    k: usize,
+    l: usize,
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    wd: f32,
+    d: f32,
+    cos_guidance: bool,
+    ws: &mut Workspace,
+) -> (Mat, Mat, f64) {
+    adapprox_vstep_ws(q, u, g, rows, cols, beta2, ws);
+    let out = srsi_factored_scratch(q, u, g, beta2, omega, k, l, &mut ws.srsi);
+    adapprox_apply_ws(w, m, &ws.vmat.data, g, lr, beta1, eps, wd, d,
+                      cos_guidance, &mut ws.upd);
     (out.q, out.u, out.xi)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::testing::assert_allclose;
+    use crate::testing::{assert_allclose, forall};
     use crate::util::rng::Rng;
 
     fn randv(n: usize, scale: f32, rng: &mut Rng) -> Vec<f32> {
@@ -467,5 +657,179 @@ mod tests {
             let expect = g[i] / (((1.0 - 0.999) * g[i] * g[i]).sqrt() + 1e-8);
             assert!((m[i] - expect).abs() < 1e-3 * expect.abs() + 1e-5);
         }
+    }
+
+    // ---- workspace variants: bitwise parity with the allocating paths ----
+
+    #[test]
+    fn adafactor_ws_bitwise_matches_allocating() {
+        forall(8, |rng| {
+            let rows = 2 + rng.below(12) as usize;
+            let cols = 2 + rng.below(12) as usize;
+            let n = rows * cols;
+            let g = randv(n, 0.02, rng);
+            let w0 = randv(n, 1.0, rng);
+            let m0 = randv(n, 0.01, rng);
+            let r0: Vec<f32> = randv(rows, 0.01, rng)
+                .iter().map(|x| x.abs()).collect();
+            let c0: Vec<f32> = randv(cols, 0.01, rng)
+                .iter().map(|x| x.abs()).collect();
+            let (mut w1, mut m1) = (w0.clone(), m0.clone());
+            let (mut r1, mut c1) = (r0.clone(), c0.clone());
+            adafactor_step(&mut w1, &mut m1, &mut r1, &mut c1, &g, rows,
+                           cols, 1e-3, 0.9, 0.999, 1e-30, 0.01, 1.0);
+            let (mut w2, mut m2) = (w0.clone(), m0.clone());
+            let (mut r2, mut c2) = (r0.clone(), c0.clone());
+            // deliberately dirty workspace from a different shape
+            let mut ws = Workspace::new();
+            buf_f32(&mut ws.upd, 7).fill(9.0);
+            buf_f64(&mut ws.rsum, 3).fill(9.0);
+            adafactor_step_ws(&mut w2, &mut m2, &mut r2, &mut c2, &g, rows,
+                              cols, 1e-3, 0.9, 0.999, 1e-30, 0.01, 1.0,
+                              &mut ws);
+            assert_eq!(w1, w2);
+            assert_eq!(m1, m2);
+            assert_eq!(r1, r2);
+            assert_eq!(c1, c2);
+        });
+    }
+
+    #[test]
+    fn came_ws_bitwise_matches_allocating() {
+        forall(8, |rng| {
+            let rows = 2 + rng.below(10) as usize;
+            let cols = 2 + rng.below(10) as usize;
+            let n = rows * cols;
+            let g = randv(n, 0.02, rng);
+            let w0 = randv(n, 1.0, rng);
+            let m0 = randv(n, 0.01, rng);
+            let pos = |v: Vec<f32>| -> Vec<f32> {
+                v.iter().map(|x| x.abs() + 1e-6).collect()
+            };
+            let r0 = pos(randv(rows, 0.01, rng));
+            let c0 = pos(randv(cols, 0.01, rng));
+            let rc0 = pos(randv(rows, 0.001, rng));
+            let cc0 = pos(randv(cols, 0.001, rng));
+            let run_alloc = || {
+                let (mut w, mut m) = (w0.clone(), m0.clone());
+                let (mut r, mut c) = (r0.clone(), c0.clone());
+                let (mut rc, mut cc) = (rc0.clone(), cc0.clone());
+                came_step(&mut w, &mut m, &mut r, &mut c, &mut rc, &mut cc,
+                          &g, rows, cols, 1e-3, 0.9, 0.999, 0.9999, 1e-30,
+                          1e-16, 0.01, 1.0);
+                (w, m, r, c, rc, cc)
+            };
+            let run_ws = |ws: &mut Workspace| {
+                let (mut w, mut m) = (w0.clone(), m0.clone());
+                let (mut r, mut c) = (r0.clone(), c0.clone());
+                let (mut rc, mut cc) = (rc0.clone(), cc0.clone());
+                came_step_ws(&mut w, &mut m, &mut r, &mut c, &mut rc,
+                             &mut cc, &g, rows, cols, 1e-3, 0.9, 0.999,
+                             0.9999, 1e-30, 1e-16, 0.01, 1.0, ws);
+                (w, m, r, c, rc, cc)
+            };
+            let mut ws = Workspace::new();
+            let a = run_alloc();
+            let b = run_ws(&mut ws);
+            let c2 = run_ws(&mut ws); // reuse: still identical
+            assert_eq!(a, b);
+            assert_eq!(a, c2);
+        });
+    }
+
+    #[test]
+    fn vec_factored_ws_bitwise_matches_allocating() {
+        forall(8, |rng| {
+            let n = 1 + rng.below(64) as usize;
+            let g = randv(n, 0.02, rng);
+            let w0 = randv(n, 1.0, rng);
+            let v0: Vec<f32> =
+                randv(n, 0.01, rng).iter().map(|x| x.abs()).collect();
+            let (mut w1, mut m1, mut v1) =
+                (w0.clone(), vec![0.0f32; n], v0.clone());
+            vec_factored_step(&mut w1, &mut m1, &mut v1, &g, 1e-3, 0.9,
+                              0.999, 1e-8, 0.01, 1.0);
+            let (mut w2, mut m2, mut v2) =
+                (w0.clone(), vec![0.0f32; n], v0.clone());
+            let mut ws = Workspace::new();
+            vec_factored_step_ws(&mut w2, &mut m2, &mut v2, &g, 1e-3, 0.9,
+                                 0.999, 1e-8, 0.01, 1.0, &mut ws);
+            assert_eq!(w1, w2);
+            assert_eq!(m1, m2);
+            assert_eq!(v1, v2);
+        });
+    }
+
+    #[test]
+    fn adapprox_step_ws_bitwise_matches_allocating() {
+        let mut rng = Rng::new(31);
+        let (rows, cols, k) = (24, 16, 3);
+        let n = rows * cols;
+        let w0 = randv(n, 1.0, &mut rng);
+        let m0 = randv(n, 0.001, &mut rng);
+        let q = Mat::randn(rows, k, &mut rng);
+        let u = Mat::randn(cols, k, &mut rng);
+        let g = randv(n, 0.01, &mut rng);
+        let omega = Mat::randn(cols, k + 5, &mut rng);
+        let run = |ws: Option<&mut Workspace>| {
+            let mut w = w0.clone();
+            let mut m = m0.clone();
+            let (q2, u2, xi) = match ws {
+                None => adapprox_step(&mut w, &mut m, &q, &u, &g, &omega,
+                                      rows, cols, k, 5, 1e-3, 0.9, 0.999,
+                                      1e-8, 0.01, 1.0, false),
+                Some(ws) => adapprox_step_ws(&mut w, &mut m, &q, &u, &g,
+                                             &omega, rows, cols, k, 5, 1e-3,
+                                             0.9, 0.999, 1e-8, 0.01, 1.0,
+                                             false, ws),
+            };
+            (w, m, q2, u2, xi)
+        };
+        let a = run(None);
+        let mut ws = Workspace::new();
+        let b = run(Some(&mut ws));
+        let c = run(Some(&mut ws)); // dirty reuse
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+        assert_eq!(a.2, b.2);
+        assert_eq!(a.3, b.3);
+        assert_eq!(a.4, b.4);
+        assert_eq!(a.0, c.0);
+        assert_eq!(a.2, c.2);
+    }
+
+    #[test]
+    fn adapprox_fast_step_same_update_different_factor_path() {
+        // the fast path must apply the *identical* weight/moment update (it
+        // consumes the same dense V); only the returned factors/ξ come from
+        // the factored iteration
+        let mut rng = Rng::new(32);
+        let (rows, cols, k) = (20, 14, 2);
+        let n = rows * cols;
+        let w0 = randv(n, 1.0, &mut rng);
+        let m0 = randv(n, 0.001, &mut rng);
+        let q = Mat::randn(rows, k, &mut rng);
+        let u = Mat::randn(cols, k, &mut rng);
+        let g = randv(n, 0.01, &mut rng);
+        let omega = Mat::randn(cols, k + 5, &mut rng);
+        let mut ws = Workspace::new();
+        let mut w1 = w0.clone();
+        let mut m1 = m0.clone();
+        let (qd, _, _) = adapprox_step_ws(&mut w1, &mut m1, &q, &u, &g,
+                                          &omega, rows, cols, k, 5, 1e-3,
+                                          0.9, 0.999, 1e-8, 0.01, 1.0,
+                                          false, &mut ws);
+        let mut w2 = w0.clone();
+        let mut m2 = m0.clone();
+        let (qf, uf, xi) = adapprox_step_fast_ws(&mut w2, &mut m2, &q, &u,
+                                                 &g, &omega, rows, cols, k,
+                                                 5, 1e-3, 0.9, 0.999, 1e-8,
+                                                 0.01, 1.0, false, &mut ws);
+        assert_eq!(w1, w2);
+        assert_eq!(m1, m2);
+        assert_eq!(qf.cols, k);
+        assert_eq!(uf.cols, k);
+        assert_eq!((qd.rows, qd.cols), (qf.rows, qf.cols));
+        assert!(xi.is_finite() && (0.0..=1.5).contains(&xi));
     }
 }

@@ -1,0 +1,119 @@
+//! Reusable per-parameter step buffers.
+//!
+//! Every 2-D step function used to allocate its update/statistic buffers
+//! (`upd`, `uhat`, `recon`, `rsum`, `csum`, dense `V`, the S-RSI iterates)
+//! from scratch on *every* optimizer step — for a transformer-sized model
+//! that is dozens of heap round-trips per parameter per step. A
+//! [`Workspace`] owns all of them; buffers grow to the high-water mark of
+//! the parameter they serve and are reused for the rest of training, so
+//! steady-state steps touch the allocator zero times.
+//!
+//! [`NativeOptimizer`](crate::optim::NativeOptimizer) keeps one workspace
+//! per *worker* (each parallel span of its per-tensor loop owns one
+//! exclusively), so scratch memory is bounded by the thread count times the
+//! largest parameter — not by the parameter count.
+//!
+//! Contents never carry semantic state between steps: every step fully
+//! overwrites (or zero-resets) what it reads, so a fresh workspace and a
+//! reused one produce bitwise-identical results — asserted by the
+//! `steps.rs` property tests.
+
+use crate::linalg::{Mat, SrsiScratch};
+
+/// Scratch buffers for one parameter's optimizer step.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// Clipped raw update û (numel).
+    pub upd: Vec<f32>,
+    /// Dense second moment V (rows × cols) for the Adapprox family.
+    pub vmat: Mat,
+    /// Q Uᵀ reconstruction scratch.
+    pub recon: Mat,
+    /// Row statistics accumulator (f64, rows).
+    pub rsum: Vec<f64>,
+    /// Column statistics accumulator (f64, cols).
+    pub csum: Vec<f64>,
+    /// CAME instability row accumulator (f64, rows).
+    pub rcsum: Vec<f64>,
+    /// CAME instability column accumulator (f64, cols).
+    pub ccsum: Vec<f64>,
+    /// S-RSI iteration buffers (dense and factored paths).
+    pub srsi: SrsiScratch,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+
+    /// Approximate bytes currently held (for memory telemetry; workspace
+    /// buffers are scratch, not optimizer state, so they are *not* part of
+    /// the Table 2 accounting).
+    pub fn bytes(&self) -> u64 {
+        let f32s = self.upd.len()
+            + self.vmat.data.len()
+            + self.recon.data.len()
+            + self.srsi.y.data.len()
+            + self.srsi.u.data.len()
+            + self.srsi.recon.data.len()
+            + self.srsi.lf.data.len()
+            + self.srsi.rf.data.len()
+            + self.srsi.small.data.len()
+            + self.srsi.small2.data.len();
+        let f64s = self.rsum.len()
+            + self.csum.len()
+            + self.rcsum.len()
+            + self.ccsum.len();
+        (f32s * 4 + f64s * 8) as u64
+    }
+}
+
+/// Zero-reset `buf` to `n` f32 elements, reusing the allocation.
+pub fn buf_f32(buf: &mut Vec<f32>, n: usize) -> &mut [f32] {
+    buf.clear();
+    buf.resize(n, 0.0);
+    buf
+}
+
+/// Zero-reset `buf` to `n` f64 elements, reusing the allocation.
+pub fn buf_f64(buf: &mut Vec<f64>, n: usize) -> &mut [f64] {
+    buf.clear();
+    buf.resize(n, 0.0);
+    buf
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_reuse_allocation() {
+        let mut ws = Workspace::new();
+        buf_f32(&mut ws.upd, 256);
+        let ptr = ws.upd.as_ptr();
+        let cap = ws.upd.capacity();
+        for n in [256, 128, 17, 256] {
+            let b = buf_f32(&mut ws.upd, n);
+            assert_eq!(b.len(), n);
+            assert!(b.iter().all(|&v| v == 0.0));
+        }
+        assert_eq!(ws.upd.as_ptr(), ptr);
+        assert_eq!(ws.upd.capacity(), cap);
+    }
+
+    #[test]
+    fn zero_reset_clears_dirty_contents() {
+        let mut buf = vec![1.0f64; 8];
+        let b = buf_f64(&mut buf, 8);
+        assert!(b.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn bytes_track_growth() {
+        let mut ws = Workspace::new();
+        assert_eq!(ws.bytes(), 0);
+        buf_f32(&mut ws.upd, 100);
+        buf_f64(&mut ws.rsum, 10);
+        assert_eq!(ws.bytes(), 100 * 4 + 10 * 8);
+    }
+}

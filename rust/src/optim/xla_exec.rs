@@ -466,18 +466,23 @@ impl Optimizer for XlaOptimizer {
 }
 
 /// Construct the right backend from a kind string + backend flag.
+/// `threads` fans the native backend's per-tensor loop out over a pool
+/// (`TrainOptions::threads`); the HLO backend dispatches whole programs
+/// and ignores it.
 pub fn build_optimizer(
     rt: Option<Rc<Runtime>>,
     specs: Vec<ParamSpec>,
     hyper: Hyper,
     ladders: &dyn Fn(usize, usize) -> Option<crate::runtime::Ladder>,
     seed: u64,
+    threads: usize,
 ) -> Result<Box<dyn Optimizer>> {
     match rt {
         Some(rt) => Ok(Box::new(XlaOptimizer::new(rt, specs, hyper, seed)?)),
-        None => Ok(Box::new(super::native::NativeOptimizer::new(
-            specs, hyper, ladders, seed,
-        )?)),
+        None => Ok(Box::new(
+            super::native::NativeOptimizer::new(specs, hyper, ladders, seed)?
+                .with_threads(threads),
+        )),
     }
 }
 

@@ -59,6 +59,8 @@ pub fn train_options(args: &Args, default_steps: usize) -> Result<TrainOptions> 
         seed: args.u64_or("seed", 0xADA)?,
         log_csv: None,
         log_every: (steps / 10).max(1),
+        native: args.has("native"),
+        threads: args.usize_or("threads", 1)?,
     })
 }
 

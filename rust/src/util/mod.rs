@@ -3,7 +3,10 @@
 
 pub mod json;
 pub mod log;
+pub mod pool;
 pub mod rng;
+
+pub use pool::Pool;
 
 /// Pretty byte counts for memory reports (Table 2 prints MB like the paper).
 pub fn fmt_mb(bytes: u64) -> String {

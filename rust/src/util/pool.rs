@@ -1,0 +1,226 @@
+//! Tiny std-only parallel-for layer (no `rayon` in the vendored set).
+//!
+//! [`Pool`] fans work out over `std::thread::scope` threads. The split is
+//! *deterministic*: a mutable slice is partitioned into at most
+//! `threads` contiguous spans, each a multiple of an indivisible `unit`
+//! (e.g. one matrix row, one optimizer job), and every unit is processed by
+//! exactly one thread with the same inner loop the single-threaded path
+//! runs. No unit's arithmetic depends on which thread runs it or on timing,
+//! so results are *bitwise identical* for every thread count — the property
+//! the `xla_parity` / `deterministic_given_omega` tests and the
+//! threaded-vs-single optimizer test rely on.
+//!
+//! Threads are scoped (spawned per call, joined before return). For the
+//! workloads this pool serves — row-block GEMMs and per-tensor optimizer
+//! steps, each span doing at least tens of microseconds of math — spawn
+//! cost is noise; a persistent work-stealing pool would buy little and cost
+//! determinism.
+
+/// Upper bound on concurrent spans for the context-free `run_units` path
+/// (contexts are zero-sized there; this just caps the span count).
+const MAX_SPANS: usize = 1024;
+
+/// A fixed-width parallel-for executor.
+#[derive(Clone, Debug)]
+pub struct Pool {
+    threads: usize,
+}
+
+impl Pool {
+    /// A pool running `threads` ways (clamped to at least 1).
+    pub fn new(threads: usize) -> Pool {
+        Pool {
+            threads: threads.max(1),
+        }
+    }
+
+    /// The single-threaded pool: every `run_units` call runs inline.
+    pub fn single() -> Pool {
+        Pool::new(1)
+    }
+
+    /// A pool sized to the machine (`std::thread::available_parallelism`).
+    pub fn machine_sized() -> Pool {
+        Pool::new(
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+        )
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Process `data` in parallel as contiguous spans of whole `unit`s.
+    ///
+    /// `data.len()` must be a multiple of `unit` (a unit is the indivisible
+    /// element group: a row of `cols` floats, a single job, ...). `f` is
+    /// called as `f(start_element_offset, span)`; spans are disjoint and
+    /// cover `data` exactly, in order. With 1 thread (or 1 unit) the call
+    /// is inlined with zero overhead.
+    pub fn run_units<T, F>(&self, data: &mut [T], unit: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        self.run_units_ctx(data, unit, &mut [(); MAX_SPANS], |_, s, d| {
+            f(s, d)
+        });
+    }
+
+    /// [`Pool::run_units`] with a dedicated mutable context per span —
+    /// the lock-free way to give each worker a reusable scratch arena.
+    /// `ctxs` needs at least `min(threads, units)` entries; entry `i` is
+    /// handed to span `i` exclusively.
+    pub fn run_units_ctx<T, C, F>(
+        &self,
+        data: &mut [T],
+        unit: usize,
+        ctxs: &mut [C],
+        f: F,
+    ) where
+        T: Send,
+        C: Send,
+        F: Fn(&mut C, usize, &mut [T]) + Sync,
+    {
+        assert!(unit > 0, "unit must be positive");
+        assert!(!ctxs.is_empty(), "at least one span context required");
+        assert_eq!(
+            data.len() % unit,
+            0,
+            "data length {} not a multiple of unit {unit}",
+            data.len()
+        );
+        let units = data.len() / unit;
+        if units == 0 {
+            return;
+        }
+        if self.threads <= 1 || units <= 1 {
+            f(&mut ctxs[0], 0, data);
+            return;
+        }
+        let spans = self.threads.min(units).min(ctxs.len());
+        // ceil(units / spans) whole units per span
+        let per = (1 + (units - 1) / spans) * unit;
+        std::thread::scope(|scope| {
+            let f = &f;
+            let mut rest = data;
+            let mut crest = ctxs;
+            let mut start = 0usize;
+            while !rest.is_empty() {
+                let take = per.min(rest.len());
+                let (head, tail) = rest.split_at_mut(take);
+                let (chead, ctail) = crest.split_at_mut(1);
+                rest = tail;
+                crest = ctail;
+                let ctx = &mut chead[0];
+                let offset = start;
+                start += take;
+                if rest.is_empty() {
+                    // run the final span on the calling thread
+                    f(ctx, offset, head);
+                } else {
+                    scope.spawn(move || f(ctx, offset, head));
+                }
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn covers_every_unit_exactly_once() {
+        for threads in [1, 2, 3, 4, 7] {
+            let pool = Pool::new(threads);
+            let mut data = vec![0u32; 12 * 5];
+            pool.run_units(&mut data, 5, |_, span| {
+                for v in span.iter_mut() {
+                    *v += 1;
+                }
+            });
+            assert!(data.iter().all(|&v| v == 1), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn spans_are_unit_aligned_and_ordered() {
+        let pool = Pool::new(3);
+        let mut data = vec![0usize; 10 * 4];
+        pool.run_units(&mut data, 4, |start, span| {
+            assert_eq!(start % 4, 0);
+            assert_eq!(span.len() % 4, 0);
+            for (i, v) in span.iter_mut().enumerate() {
+                *v = start + i;
+            }
+        });
+        let want: Vec<usize> = (0..40).collect();
+        assert_eq!(data, want);
+    }
+
+    #[test]
+    fn parallel_matches_single_threaded() {
+        let work = |start: usize, span: &mut [f64]| {
+            for (i, v) in span.iter_mut().enumerate() {
+                let x = (start + i) as f64;
+                *v = (x * 1.7).sin() + x.sqrt();
+            }
+        };
+        let mut a = vec![0.0f64; 997];
+        let mut b = vec![0.0f64; 997];
+        Pool::single().run_units(&mut a, 1, work);
+        Pool::new(4).run_units(&mut b, 1, work);
+        assert_eq!(a, b); // bitwise
+    }
+
+    #[test]
+    fn uses_multiple_threads_when_asked() {
+        let pool = Pool::new(4);
+        let seen = AtomicUsize::new(0);
+        let mut data = vec![0u8; 64];
+        pool.run_units(&mut data, 1, |_, _| {
+            seen.fetch_add(1, Ordering::SeqCst);
+        });
+        // 64 units across 4 threads -> 4 spans of 16
+        assert_eq!(seen.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn empty_and_single_unit_inputs() {
+        let pool = Pool::new(8);
+        let mut empty: Vec<u8> = vec![];
+        pool.run_units(&mut empty, 3, |_, _| panic!("no spans expected"));
+        let mut one = vec![1u8, 2, 3];
+        pool.run_units(&mut one, 3, |start, span| {
+            assert_eq!(start, 0);
+            assert_eq!(span.len(), 3);
+        });
+    }
+
+    #[test]
+    fn clamps_zero_threads() {
+        assert_eq!(Pool::new(0).threads(), 1);
+    }
+
+    #[test]
+    fn ctx_spans_get_exclusive_contexts() {
+        let pool = Pool::new(3);
+        let mut data = vec![0usize; 12];
+        let mut ctxs = vec![0usize; 3];
+        pool.run_units_ctx(&mut data, 1, &mut ctxs, |ctx, _, span| {
+            *ctx += span.len();
+        });
+        // every unit counted exactly once across the per-span contexts
+        assert_eq!(ctxs.iter().sum::<usize>(), 12);
+        // fewer contexts than threads: spans clamp to ctxs.len()
+        let mut one = vec![0usize; 1];
+        pool.run_units_ctx(&mut data, 1, &mut one, |ctx, _, span| {
+            *ctx += span.len();
+        });
+        assert_eq!(one[0], 12);
+    }
+}

@@ -1,0 +1,339 @@
+//! Host-side stub of the `xla-rs` surface the coordinator uses.
+//!
+//! The training framework talks to XLA through a narrow API: build a
+//! [`Literal`] from host bytes, compile an HLO text program, execute it, and
+//! read literals back. This crate implements the *host* half of that surface
+//! (literals, shapes, dtypes) exactly, so tensor round-trips work everywhere,
+//! and stubs the *device* half ([`PjRtClient::compile`] /
+//! [`PjRtLoadedExecutable::execute`]) with a descriptive error.
+//!
+//! All artifact-gated code paths check for `artifacts/manifest.json` before
+//! touching PJRT, so on a machine without an XLA toolchain every integration
+//! test skips gracefully while the native backend stays fully functional.
+//! Point the `xla` dependency at the real bindings to light up the HLO
+//! backend; no coordinator code changes are needed.
+
+use std::fmt;
+
+/// Stub error type; formats like the real crate's error for log parity.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching the real crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what} is unavailable: the `xla` dependency is the vendored host \
+         stub (rust/vendor/xla); build against real xla-rs bindings to \
+         enable PJRT execution"
+    ))
+}
+
+/// Element dtypes the programs use (plus the common extras so dtype
+/// matches stay non-exhaustive-safe downstream).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S32,
+    S64,
+    U8,
+    U32,
+    U64,
+    F16,
+    F32,
+    F64,
+}
+
+impl ElementType {
+    /// Size of one element in bytes.
+    pub fn byte_size(&self) -> usize {
+        match self {
+            ElementType::Pred | ElementType::S8 | ElementType::U8 => 1,
+            ElementType::F16 => 2,
+            ElementType::S32 | ElementType::U32 | ElementType::F32 => 4,
+            ElementType::S64 | ElementType::U64 | ElementType::F64 => 8,
+        }
+    }
+}
+
+/// Host types that can view a literal's payload.
+pub trait NativeType: Copy {
+    const TY: ElementType;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+}
+
+impl NativeType for f64 {
+    const TY: ElementType = ElementType::F64;
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+}
+
+impl NativeType for i64 {
+    const TY: ElementType = ElementType::S64;
+}
+
+impl NativeType for u8 {
+    const TY: ElementType = ElementType::U8;
+}
+
+/// Array shape: dims + element type.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Host literal: a dense array (shape + bytes) or a tuple of literals.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    shape: Option<ArrayShape>,
+    bytes: Vec<u8>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// Build an array literal from raw host bytes (row-major).
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let numel: usize = dims.iter().product();
+        if numel * ty.byte_size() != data.len() {
+            return Err(Error(format!(
+                "literal payload {} bytes != shape {dims:?} x {ty:?}",
+                data.len()
+            )));
+        }
+        Ok(Literal {
+            shape: Some(ArrayShape {
+                dims: dims.iter().map(|&d| d as i64).collect(),
+                ty,
+            }),
+            bytes: data.to_vec(),
+            tuple: None,
+        })
+    }
+
+    /// Build a tuple literal (what `return_tuple=True` programs produce).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal {
+            shape: None,
+            bytes: Vec::new(),
+            tuple: Some(parts),
+        }
+    }
+
+    /// Shape of an array literal; error for tuples.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        self.shape
+            .clone()
+            .ok_or_else(|| Error("literal is a tuple, not an array".into()))
+    }
+
+    /// Copy the payload out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        let shape = self.array_shape()?;
+        if shape.ty() != T::TY {
+            return Err(Error(format!(
+                "literal dtype {:?} != requested {:?}",
+                shape.ty(),
+                T::TY
+            )));
+        }
+        let n = self.bytes.len() / std::mem::size_of::<T>();
+        let mut out = Vec::with_capacity(n);
+        // Safety: bytes were produced from a properly aligned `Vec<T>` (or
+        // validated against the dtype size above); read unaligned to be
+        // independent of the Vec<u8> allocation's alignment.
+        unsafe {
+            let base = self.bytes.as_ptr();
+            for i in 0..n {
+                out.push(std::ptr::read_unaligned(
+                    base.add(i * std::mem::size_of::<T>()) as *const T,
+                ));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Split a tuple literal into its parts; error for arrays.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        self.tuple
+            .take()
+            .ok_or_else(|| Error("literal is not a tuple".into()))
+    }
+}
+
+/// Parsed HLO module (stub: retains the source path for error messages).
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    path: String,
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file. The stub only checks the file exists so the
+    /// caller's error handling stays on the same path as the real crate.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        if !std::path::Path::new(path).exists() {
+            return Err(Error(format!("no such HLO text file: {path}")));
+        }
+        Ok(HloModuleProto { path: path.to_string() })
+    }
+
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+}
+
+/// An XLA computation handle.
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { proto: proto.clone() }
+    }
+}
+
+/// PJRT client handle. The stub constructs successfully (so runtimes over a
+/// valid artifact manifest can be opened and inspected) and fails at
+/// `compile` with a descriptive error.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn compile(
+        &self,
+        comp: &XlaComputation,
+    ) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable(&format!(
+            "compiling {:?}",
+            comp.proto.path()
+        )))
+    }
+}
+
+/// A device buffer holding one output literal.
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// Compiled executable handle (never constructed by the stub client).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute on host literals: one replica, one output buffer each.
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("executing a PJRT program"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> =
+            data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[3],
+            &bytes,
+        )
+        .unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[3]);
+        assert_eq!(shape.ty(), ElementType::F32);
+    }
+
+    #[test]
+    fn literal_size_validation() {
+        assert!(Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2, 2],
+            &[0u8; 12],
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn tuple_decompose() {
+        let part = Literal::create_from_shape_and_untyped_data(
+            ElementType::S32,
+            &[1],
+            &42i32.to_le_bytes(),
+        )
+        .unwrap();
+        let mut tup = Literal::tuple(vec![part.clone()]);
+        let parts = tup.decompose_tuple().unwrap();
+        assert_eq!(parts, vec![part]);
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[1],
+            &[0u8; 4],
+        )
+        .unwrap();
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn compile_reports_stub() {
+        let client = PjRtClient::cpu().unwrap();
+        let proto = HloModuleProto { path: "x.hlo.txt".into() };
+        let err = client
+            .compile(&XlaComputation::from_proto(&proto))
+            .unwrap_err();
+        assert!(err.0.contains("vendored host stub"), "{err}");
+    }
+}
