@@ -191,6 +191,77 @@ fn native_section(b: &Bench, rng: &mut Rng) {
             );
         });
     }
+
+    // refresh-step wall-clock: two 512×512 tensors, every step a refresh
+    // (delta_s = 1 → dense S-RSI each time). With more threads than
+    // tensors the adaptive budget split hands idle workers to each dense
+    // factorization as intra-tensor slices — this is the case the pooled
+    // S-RSI exists for.
+    header("refresh step (delta_s=1 forces dense S-RSI): 1/4/8 threads");
+    let bq = adapprox::bench::Bench::quick().with_json_from_env();
+    let rspecs: Vec<ParamSpec> = (0..2)
+        .map(|i| ParamSpec {
+            name: format!("m{i}"),
+            shape: vec![512, 512],
+            kind: "matrix".into(),
+        })
+        .collect();
+    let refresh_ladder = |_m: usize, _n: usize| {
+        Some(Ladder {
+            buckets: vec![8, 16],
+            oversample: vec![5, 0],
+            kmax: 16,
+        })
+    };
+    for threads in [1usize, 4, 8] {
+        let h = Hyper::paper_defaults(
+            OptKind::Adapprox,
+            &adapprox::runtime::manifest::HyperDefaults {
+                beta1: 0.9,
+                beta2: 0.999,
+                eps: 1e-8,
+                weight_decay: 0.0,
+                clip_d: 1.0,
+                k_init: 8,
+                l: 5,
+                p: 5,
+                xi_thresh: 0.01,
+                delta_s: 1,
+                f_eta: 200.0,
+                f_omega: -10.0,
+                f_phi: -2.5,
+                f_tau: -9.0,
+            },
+        );
+        let mut opt =
+            NativeOptimizer::new(rspecs.clone(), h, &refresh_ladder, 11)
+                .unwrap()
+                .with_threads(threads);
+        let mut prng = Rng::new(29);
+        let mut params: Vec<Tensor> = rspecs
+            .iter()
+            .map(|s| {
+                Tensor::f32(s.shape.clone(), prng.normal_vec_f32(s.numel()))
+            })
+            .collect();
+        let grads: Vec<Tensor> = rspecs
+            .iter()
+            .map(|s| {
+                Tensor::f32(
+                    s.shape.clone(),
+                    prng.normal_vec_f32(s.numel())
+                        .iter()
+                        .map(|x| 0.02 * x)
+                        .collect(),
+                )
+            })
+            .collect();
+        bq.run(&format!("native_refresh_step_{threads}t"), || {
+            std::hint::black_box(
+                opt.step(&mut params, &grads, 1e-3).unwrap(),
+            );
+        });
+    }
 }
 
 fn hlo_section(b: &Bench, rng: &mut Rng) {

@@ -9,11 +9,12 @@
 use adapprox::bench::{header, Bench};
 use adapprox::linalg::{
     mgs_qr, srsi_factored_scratch, srsi_with_omega, srsi_with_omega_scratch,
-    Mat, SrsiScratch,
+    srsi_with_omega_scratch_pooled, Mat, SrsiScratch,
 };
 use adapprox::optim::native::steps::{adapprox_vstep, adapprox_vstep_ws};
 use adapprox::optim::Workspace;
 use adapprox::runtime::{Runtime, Tensor};
+use adapprox::util::pool::Pool;
 use adapprox::util::rng::Rng;
 
 fn main() {
@@ -101,6 +102,39 @@ fn main() {
                 &q0, &u0, &g.data, beta2, &omega, k, 5, &mut scratch,
             ));
         });
+    }
+
+    // ---- dense S-RSI: serial vs pooled (the intra-tensor refresh path) --
+    let threads = Pool::machine_sized().threads();
+    header(&format!(
+        "dense S-RSI serial vs pooled ({threads} threads), k=16, l=5"
+    ));
+    // quick sampling: the 2048² case runs ~1s per call; 5 samples is
+    // plenty for a serial-vs-pooled ratio
+    let bq = Bench::quick().with_json_from_env();
+    for &sz in &[512usize, 1024, 2048] {
+        let k = 16usize;
+        let kp = k + 5;
+        let mut a = Mat::randn(sz, sz, &mut rng);
+        for v in a.data.iter_mut() {
+            *v = v.abs();
+        }
+        let omega = Mat::randn(sz, kp, &mut rng);
+        let mut scratch = SrsiScratch::new();
+        bq.run(&format!("dense_srsi_serial_{sz}x{sz}_k{k}"), || {
+            std::hint::black_box(srsi_with_omega_scratch(
+                &a, &omega, k, 5, &mut scratch,
+            ));
+        });
+        let pool = Pool::new(threads);
+        bq.run(
+            &format!("dense_srsi_pooled_{sz}x{sz}_k{k}_{threads}t"),
+            || {
+                std::hint::black_box(srsi_with_omega_scratch_pooled(
+                    &a, &omega, k, 5, &mut scratch, &pool,
+                ));
+            },
+        );
     }
 
     header("fused adapprox_step (HLO, the between-refresh hot path)");

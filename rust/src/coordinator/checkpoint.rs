@@ -19,6 +19,11 @@ use crate::util::json::Json;
 const MAGIC: &[u8; 4] = b"ADPX";
 const VERSION: u32 = 1;
 
+/// Per-call component of the temp-file name: the pid alone is not unique
+/// when two saves of the same path race within one process.
+static SAVE_SEQ: std::sync::atomic::AtomicU64 =
+    std::sync::atomic::AtomicU64::new(0);
+
 /// Checkpoint metadata + parameters.
 pub struct Checkpoint {
     pub config: String,
@@ -28,48 +33,90 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
+    /// Serialize to `path` atomically: the bytes go to a sibling temp file
+    /// which is renamed into place only after every write (and an fsync)
+    /// succeeded. A crash mid-write leaves at worst a stale temp file —
+    /// never a truncated checkpoint at the final path, so the previous
+    /// checkpoint survives any interrupted save.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        if let Some(dir) = path.as_ref().parent() {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir).ok();
         }
-        let mut f = std::fs::File::create(&path)
-            .with_context(|| format!("creating {:?}", path.as_ref()))?;
-        let shapes: Vec<Json> = self
-            .params
-            .iter()
-            .map(|t| {
-                Json::Arr(
-                    t.shape.iter().map(|&d| Json::num(d as f64)).collect(),
-                )
-            })
-            .collect();
-        let header = Json::obj(vec![
-            ("config", Json::str(&self.config)),
-            ("step", Json::num(self.step as f64)),
-            ("optimizer", Json::str(&self.optimizer)),
-            ("shapes", Json::Arr(shapes)),
-        ])
-        .to_string();
-        f.write_all(MAGIC)?;
-        f.write_all(&VERSION.to_le_bytes())?;
-        f.write_all(&(header.len() as u64).to_le_bytes())?;
-        f.write_all(header.as_bytes())?;
-        for t in &self.params {
-            let data = t.as_f32()?;
-            let bytes: &[u8] = unsafe {
-                std::slice::from_raw_parts(
-                    data.as_ptr() as *const u8,
-                    data.len() * 4,
-                )
-            };
-            f.write_all(bytes)?;
+        let fname = path
+            .file_name()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "checkpoint".into());
+        let seq =
+            SAVE_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let tmp = path.with_file_name(format!(
+            "{fname}.tmp{}-{seq}",
+            std::process::id()
+        ));
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {tmp:?}"))?;
+        let write = |f: &mut std::fs::File| -> Result<()> {
+            let shapes: Vec<Json> = self
+                .params
+                .iter()
+                .map(|t| {
+                    Json::Arr(
+                        t.shape
+                            .iter()
+                            .map(|&d| Json::num(d as f64))
+                            .collect(),
+                    )
+                })
+                .collect();
+            let header = Json::obj(vec![
+                ("config", Json::str(&self.config)),
+                ("step", Json::num(self.step as f64)),
+                ("optimizer", Json::str(&self.optimizer)),
+                ("shapes", Json::Arr(shapes)),
+            ])
+            .to_string();
+            f.write_all(MAGIC)?;
+            f.write_all(&VERSION.to_le_bytes())?;
+            f.write_all(&(header.len() as u64).to_le_bytes())?;
+            f.write_all(header.as_bytes())?;
+            for t in &self.params {
+                let data = t.as_f32()?;
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(
+                        data.as_ptr() as *const u8,
+                        data.len() * 4,
+                    )
+                };
+                f.write_all(bytes)?;
+            }
+            f.sync_all()?;
+            Ok(())
+        };
+        let res = write(&mut f);
+        drop(f);
+        if let Err(e) = res {
+            std::fs::remove_file(&tmp).ok();
+            return Err(e);
+        }
+        if let Err(e) = std::fs::rename(&tmp, path) {
+            // don't leak the (complete but unreachable) temp file when the
+            // final path is unwritable — e.g. replaced by a directory
+            std::fs::remove_file(&tmp).ok();
+            return Err(e)
+                .with_context(|| format!("renaming {tmp:?} to {path:?}"));
         }
         Ok(())
     }
 
+    /// Deserialize from `path`. Header-declared sizes are *not* trusted:
+    /// both the header length and every shape's payload size are validated
+    /// against the actual file length before any allocation, so a corrupt
+    /// or truncated header fails fast instead of attempting an unbounded
+    /// (OOM-sized) allocation.
     pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
         let mut f = std::fs::File::open(&path)
             .with_context(|| format!("opening {:?}", path.as_ref()))?;
+        let flen = f.metadata()?.len();
         let mut magic = [0u8; 4];
         f.read_exact(&mut magic)?;
         if &magic != MAGIC {
@@ -83,7 +130,16 @@ impl Checkpoint {
         }
         let mut l8 = [0u8; 8];
         f.read_exact(&mut l8)?;
-        let hlen = u64::from_le_bytes(l8) as usize;
+        // magic + version + header-length prefix
+        const FIXED: u64 = 16;
+        let hlen64 = u64::from_le_bytes(l8);
+        if hlen64 > flen.saturating_sub(FIXED) {
+            bail!(
+                "corrupt checkpoint: header length {hlen64} exceeds file \
+                 size {flen}"
+            );
+        }
+        let hlen = hlen64 as usize;
         let mut hbuf = vec![0u8; hlen];
         f.read_exact(&mut hbuf)?;
         let header = Json::parse(std::str::from_utf8(&hbuf)?)
@@ -107,14 +163,35 @@ impl Checkpoint {
             .and_then(|j| j.as_arr())
             .ok_or_else(|| anyhow!("header missing shapes"))?;
         let mut params = Vec::with_capacity(shapes.len());
+        let mut remaining = flen - FIXED - hlen64;
         for s in shapes {
             let shape: Vec<usize> = s
                 .as_arr()
                 .ok_or_else(|| anyhow!("bad shape"))?
                 .iter()
-                .map(|d| d.as_usize().unwrap_or(0))
-                .collect();
-            let n: usize = shape.iter().product();
+                .map(|d| {
+                    d.as_usize().ok_or_else(|| {
+                        anyhow!("corrupt checkpoint: bad shape dim")
+                    })
+                })
+                .collect::<Result<_>>()?;
+            let n = shape
+                .iter()
+                .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                .ok_or_else(|| {
+                    anyhow!("corrupt checkpoint: shape {shape:?} overflows")
+                })?;
+            let need = (n as u64).checked_mul(4).ok_or_else(|| {
+                anyhow!("corrupt checkpoint: shape {shape:?} overflows")
+            })?;
+            if need > remaining {
+                bail!(
+                    "corrupt or truncated checkpoint: shape {shape:?} \
+                     declares {need} payload bytes but only {remaining} \
+                     remain in the file"
+                );
+            }
+            remaining -= need;
             let mut buf = vec![0u8; n * 4];
             f.read_exact(&mut buf)?;
             let mut data = vec![0.0f32; n];
@@ -188,5 +265,93 @@ mod tests {
         std::fs::write(&p, &bytes[..bytes.len() - 10]).unwrap();
         assert!(Checkpoint::load(&p).is_err());
         std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_header_shapes_without_allocating() {
+        // a hand-corrupted header declaring a multi-terabyte shape must
+        // fail the length check, not attempt the allocation
+        let header = "{\"config\":\"x\",\"step\":1,\"optimizer\":\"o\",\
+                      \"shapes\":[[1073741824,4096]]}";
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"ADPX");
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.extend_from_slice(&[0u8; 64]);
+        let p = tmp("hdr_shape");
+        std::fs::write(&p, &bytes).unwrap();
+        let err = Checkpoint::load(&p).unwrap_err();
+        assert!(err.to_string().contains("corrupt"), "{err}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_header_length_without_allocating() {
+        // header length u64::MAX: must bail on the file-size check instead
+        // of allocating an unbounded header buffer
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"ADPX");
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        let p = tmp("hdr_len");
+        std::fs::write(&p, &bytes).unwrap();
+        let err = Checkpoint::load(&p).unwrap_err();
+        assert!(err.to_string().contains("header length"), "{err}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_simulated_partial_write() {
+        // a crash partway through a (pre-atomic-rename) write would leave
+        // a prefix of the file, possibly ending inside the header
+        let mut rng = Rng::new(3);
+        let ck = Checkpoint {
+            config: "x".into(),
+            step: 7,
+            optimizer: "o".into(),
+            params: vec![Tensor::f32(vec![32, 8], rng.normal_vec_f32(256))],
+        };
+        let p = tmp("partial");
+        ck.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        for cut in [3usize, 10, 20, bytes.len() / 2] {
+            std::fs::write(&p, &bytes[..cut]).unwrap();
+            assert!(Checkpoint::load(&p).is_err(), "cut={cut}");
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn save_is_atomic_replace() {
+        // overwriting an existing checkpoint goes through a temp file +
+        // rename; the final path always holds a complete checkpoint and
+        // no temp files linger
+        let mut rng = Rng::new(4);
+        let mk = |step: usize, rng: &mut Rng| Checkpoint {
+            config: "x".into(),
+            step,
+            optimizer: "o".into(),
+            params: vec![Tensor::f32(vec![16], rng.normal_vec_f32(16))],
+        };
+        let dir = std::env::temp_dir()
+            .join(format!("adapprox_ckpt_atomic_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("model.ckpt");
+        mk(1, &mut rng).save(&p).unwrap();
+        let b = mk(2, &mut rng);
+        b.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back.step, 2);
+        assert_eq!(back.params[0], b.params[0]);
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                e.file_name().to_string_lossy().contains(".tmp")
+            })
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left: {leftovers:?}");
+        std::fs::remove_dir_all(dir).ok();
     }
 }

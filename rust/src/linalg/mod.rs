@@ -10,7 +10,11 @@
 //!   (the Fig. 2 baseline);
 //! - [`srsi_factored`] the structure-aware S-RSI fast path iterating on
 //!   Adapprox's β₂QUᵀ + (1−β₂)G² target in factored space (never
-//!   materialising V), with [`SrsiScratch`] buffer reuse for both paths.
+//!   materialising V), with [`SrsiScratch`] buffer reuse for both paths;
+//! - [`srsi_with_omega_scratch_pooled`] / [`mgs_qr_in_place_pooled`] the
+//!   intra-tensor parallel dense path: every product, the QR panel updates
+//!   and the ξ reduction fan out over a `util::pool::Pool` with bitwise
+//!   thread-count independence.
 
 mod mat;
 mod qr;
@@ -18,9 +22,10 @@ mod svd;
 mod srsi;
 
 pub use mat::Mat;
-pub use qr::{mgs_qr, mgs_qr_in_place};
+pub use qr::{mgs_qr, mgs_qr_in_place, mgs_qr_in_place_pooled};
 pub use svd::{jacobi_svd, singular_values, truncation_error, Svd};
 pub use srsi::{
     adafactor_rank1, srsi, srsi_factored, srsi_factored_scratch,
-    srsi_with_omega, srsi_with_omega_scratch, SrsiOutput, SrsiScratch,
+    srsi_with_omega, srsi_with_omega_scratch,
+    srsi_with_omega_scratch_pooled, SrsiOutput, SrsiScratch,
 };

@@ -3,8 +3,16 @@
 //! Mirrors the pure-HLO MGS in `python/compile/srsi.py` (same algorithm,
 //! same epsilon guard) so the native S-RSI and the AOT S-RSI agree to float
 //! tolerance — asserted by the xla_parity integration tests.
+//!
+//! [`mgs_qr_in_place_pooled`] is the panel-parallel variant: for each
+//! pivot column the projections onto the trailing columns fan out over a
+//! [`Pool`], one whole column per work unit. Every column still receives
+//! its projections in the same sequential pivot order (0, 1, …, j) with
+//! the same ascending-row dot products as the serial loop, so results are
+//! bitwise identical to [`mgs_qr_in_place`] for every thread count.
 
 use super::Mat;
+use crate::util::pool::Pool;
 
 const EPS: f32 = 1e-30;
 
@@ -42,6 +50,71 @@ pub fn mgs_qr_in_place(q: &mut Mat) {
             }
         }
     }
+}
+
+/// Trailing-panel element count below which a pivot's projections run on
+/// the calling thread: the pool spawns scoped threads per call (tens of
+/// µs), so a fan-out only pays for itself on panels doing comparable
+/// math. Results are identical either way — this is purely scheduling.
+const MIN_PAR_ELEMS: usize = 16 * 1024;
+
+/// Project the (normalized) pivot column out of each trailing column in
+/// `cols` (a concatenation of m-length columns) — the serial inner loop
+/// both the pooled and the fallback path run.
+fn project_out(col_j: &[f32], cols: &mut [f32], m: usize) {
+    for col in cols.chunks_exact_mut(m) {
+        let mut dot = 0.0f64;
+        for (&qj, &x) in col_j.iter().zip(col.iter()) {
+            dot += qj as f64 * x as f64;
+        }
+        let d = dot as f32;
+        for (x, &qj) in col.iter_mut().zip(col_j) {
+            *x -= d * qj;
+        }
+    }
+}
+
+/// [`mgs_qr_in_place`] with the trailing-column projections fanned out
+/// over `pool` — the intra-tensor parallel path of the dense S-RSI.
+///
+/// `qt` is caller scratch for the transposed panel (each column becomes a
+/// contiguous row so the pool can hand whole columns to threads); its
+/// contents never affect the result. Bitwise identical to the serial MGS:
+/// per element the arithmetic sequence — ascending-row norm, ascending-row
+/// dot, one subtraction per pivot in pivot order — is unchanged, and the
+/// transposes move bits without touching them. Small panels (and small
+/// trailing tails) skip the fan-out entirely — see [`MIN_PAR_ELEMS`].
+pub fn mgs_qr_in_place_pooled(q: &mut Mat, qt: &mut Mat, pool: &Pool) {
+    let (m, c) = (q.rows, q.cols);
+    if pool.threads() <= 1 || c <= 1 || m == 0 || m * c < MIN_PAR_ELEMS {
+        mgs_qr_in_place(q);
+        return;
+    }
+    q.transpose_into(qt); // (c, m): column j of Q is row j of Qᵀ
+    for j in 0..c {
+        let (head, tail) = qt.data.split_at_mut((j + 1) * m);
+        let col_j = &mut head[j * m..];
+        // normalise column j (ascending-row f64 norm, as in the serial MGS)
+        let mut norm = 0.0f64;
+        for &v in col_j.iter() {
+            norm += v as f64 * v as f64;
+        }
+        let inv = 1.0 / (norm.sqrt() as f32 + EPS);
+        for v in col_j.iter_mut() {
+            *v *= inv;
+        }
+        let col_j: &[f32] = col_j;
+        // project q_j out of columns j+1..c, one whole column per unit;
+        // late pivots with little trailing work skip the fan-out
+        if tail.len() < MIN_PAR_ELEMS {
+            project_out(col_j, tail, m);
+        } else {
+            pool.run_units(tail, m, |_, span| {
+                project_out(col_j, span, m);
+            });
+        }
+    }
+    qt.transpose_into(q);
 }
 
 #[cfg(test)]
@@ -92,6 +165,52 @@ mod tests {
         }
         let q = mgs_qr(&x);
         assert!(q.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn pooled_mgs_bitwise_matches_serial() {
+        // small panels take the serial fallback; result must match anyway
+        forall(12, |rng| {
+            let m = 4 + rng.below(60) as usize;
+            let c = 1 + rng.below(10.min(m as u64)) as usize;
+            let x = Mat::randn(m, c, rng);
+            let want = mgs_qr(&x);
+            let mut qt = Mat::empty();
+            for threads in [1usize, 2, 3, 4] {
+                let mut q = x.clone();
+                mgs_qr_in_place_pooled(&mut q, &mut qt, &Pool::new(threads));
+                assert_eq!(q, want, "m={m} c={c} threads={threads}");
+            }
+        });
+    }
+
+    #[test]
+    fn pooled_mgs_large_panel_bitwise_matches_serial() {
+        // 4096×8 crosses MIN_PAR_ELEMS: early pivots fan out over the
+        // pool, late pivots (small trailing panels) run inline — both
+        // branches must reproduce the serial MGS bitwise
+        let mut rng = Rng::new(9);
+        let x = Mat::randn(4096, 8, &mut rng);
+        let want = mgs_qr(&x);
+        let mut qt = Mat::empty();
+        for threads in [2usize, 3, 4] {
+            let mut q = x.clone();
+            mgs_qr_in_place_pooled(&mut q, &mut qt, &Pool::new(threads));
+            assert_eq!(q, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pooled_mgs_rank_deficient_stays_finite() {
+        let mut rng = Rng::new(6);
+        let col = Mat::randn(24, 1, &mut rng);
+        let mut x = Mat::zeros(24, 4);
+        for j in 0..4 {
+            x.set_col(j, &col.col(0));
+        }
+        let mut qt = Mat::empty();
+        mgs_qr_in_place_pooled(&mut x, &mut qt, &Pool::new(3));
+        assert!(x.data.iter().all(|v| v.is_finite()));
     }
 
     #[test]

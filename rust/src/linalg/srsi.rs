@@ -6,15 +6,22 @@
 //! float-level agreement. It also powers the Fig. 2 sweeps where running
 //! hundreds of matrices through PJRT would be needlessly slow.
 //!
-//! Two performance paths sit next to the reference:
+//! Three performance paths sit next to the reference:
 //! - [`srsi_with_omega_scratch`] runs the dense iteration allocation-free
 //!   through a reusable [`SrsiScratch`] (bitwise identical results);
+//! - [`srsi_with_omega_scratch_pooled`] fans every dense product — the
+//!   power-iteration GEMMs, the panel-parallel MGS-QR, the rank-k
+//!   reconstruction and the ξ reduction — out over a [`Pool`]. Each work
+//!   unit (an output row, a trailing QR column, a ξ row-partial) runs the
+//!   serial inner loop on exactly one thread, so the pooled path is
+//!   *bitwise identical* to the serial path for every thread count;
 //! - [`srsi_factored`] exploits Adapprox's structure — the iteration target
 //!   V = β₂·Q₀U₀ᵀ + (1−β₂)·G∘G is *known low-rank plus a non-negative
 //!   correction* — to run every subspace-iteration product in factored
 //!   space, never materialising V.
 
-use super::{mgs_qr_in_place, Mat};
+use super::{mgs_qr_in_place, mgs_qr_in_place_pooled, Mat};
+use crate::util::pool::Pool;
 use crate::util::rng::Rng;
 
 /// Result of one S-RSI factorization.
@@ -50,6 +57,10 @@ pub struct SrsiScratch {
     pub rsum: Vec<f64>,
     /// Column-sum accumulator for the rank-1 compression (factored path).
     pub csum: Vec<f64>,
+    /// (k+p, m) transposed panel for the pooled MGS-QR.
+    pub qt: Mat,
+    /// Per-row (num, den) partials for the pooled ξ reduction.
+    pub xi_parts: Vec<f64>,
 }
 
 impl SrsiScratch {
@@ -76,6 +87,23 @@ pub fn srsi_with_omega_scratch(
     l: usize,
     scratch: &mut SrsiScratch,
 ) -> SrsiOutput {
+    srsi_with_omega_scratch_pooled(a, omega, k, l, scratch, &Pool::single())
+}
+
+/// [`srsi_with_omega_scratch`] with every dense product fanned out over
+/// `pool`: row-parallel GEMMs for A·U, Aᵀ·Q and the QₖUₖᵀ reconstruction,
+/// the panel-parallel [`mgs_qr_in_place_pooled`], and the row-partial ξ
+/// reduction. Bitwise identical to the serial path for any thread count —
+/// every work unit runs the serial inner loop on exactly one thread and
+/// all reductions combine fixed-size partials in a fixed order.
+pub fn srsi_with_omega_scratch_pooled(
+    a: &Mat,
+    omega: &Mat,
+    k: usize,
+    l: usize,
+    scratch: &mut SrsiScratch,
+    pool: &Pool,
+) -> SrsiOutput {
     let n = a.cols;
     assert_eq!(omega.rows, n);
     let kp = omega.cols;
@@ -83,27 +111,58 @@ pub fn srsi_with_omega_scratch(
 
     scratch.u.copy_from(omega);
     for _ in 0..l.max(1) {
-        a.matmul_into(&scratch.u, &mut scratch.y); // (m, kp)
-        mgs_qr_in_place(&mut scratch.y);
-        a.t_matmul_into(&scratch.y, &mut scratch.u); // (n, kp)
+        a.matmul_into_pooled(&scratch.u, &mut scratch.y, pool); // (m, kp)
+        mgs_qr_in_place_pooled(&mut scratch.y, &mut scratch.qt, pool);
+        a.t_matmul_into_pooled(&scratch.y, &mut scratch.u, pool); // (n, kp)
     }
     let qk = scratch.y.take_cols(k);
     let uk = scratch.u.take_cols(k);
-    qk.matmul_t_into(&uk, &mut scratch.recon);
-    let xi = rel_frob_error(a, &scratch.recon);
+    qk.matmul_t_into_pooled(&uk, &mut scratch.recon, pool);
+    let xi =
+        rel_frob_error_pooled(a, &scratch.recon, &mut scratch.xi_parts, pool);
     SrsiOutput { q: qk, u: uk, xi }
 }
 
-/// ||A - B||_F / ||A||_F without materialising the difference (same f64
-/// accumulation order as `Mat::rel_error`).
-fn rel_frob_error(a: &Mat, approx: &Mat) -> f64 {
+/// ||A - B||_F / ||A||_F without materialising the difference.
+///
+/// Accumulates one (num, den) f64 partial per row — each row ascending-
+/// column on exactly one thread — then combines the partials in ascending
+/// row order on the caller thread, so the result is bitwise identical for
+/// every thread count (including the serial path, which uses the same
+/// row-partial order through `Pool::single`).
+fn rel_frob_error_pooled(
+    a: &Mat,
+    approx: &Mat,
+    parts: &mut Vec<f64>,
+    pool: &Pool,
+) -> f64 {
     debug_assert_eq!((a.rows, a.cols), (approx.rows, approx.cols));
+    let cols = a.cols;
+    parts.clear();
+    parts.resize(a.rows * 2, 0.0);
+    let (ad, bd) = (&a.data, &approx.data);
+    pool.run_units(parts, 2, |start, span| {
+        let mut row = start / 2;
+        for pair in span.chunks_exact_mut(2) {
+            let ar = &ad[row * cols..(row + 1) * cols];
+            let br = &bd[row * cols..(row + 1) * cols];
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            for (&x, &y) in ar.iter().zip(br) {
+                let d = (x - y) as f64;
+                num += d * d;
+                den += (x as f64) * (x as f64);
+            }
+            pair[0] = num;
+            pair[1] = den;
+            row += 1;
+        }
+    });
     let mut num = 0.0f64;
     let mut den = 0.0f64;
-    for (&x, &y) in a.data.iter().zip(&approx.data) {
-        let d = (x - y) as f64;
-        num += d * d;
-        den += (x as f64) * (x as f64);
+    for pair in parts.chunks_exact(2) {
+        num += pair[0];
+        den += pair[1];
     }
     num.sqrt() / (den.sqrt() + 1e-300)
 }
@@ -353,6 +412,28 @@ mod tests {
         let o2 = srsi_with_omega(&a, &omega, 4, 5);
         assert_eq!(o1.q, o2.q);
         assert_eq!(o1.u, o2.u);
+    }
+
+    #[test]
+    fn pooled_dense_srsi_bitwise_matches_serial() {
+        // the acceptance bar for the pooled refresh path: any thread count
+        // must reproduce the serial factors AND the serial ξ exactly
+        let mut rng = Rng::new(25);
+        for (m, n, k) in [(96, 64, 8), (64, 96, 6), (33, 129, 4)] {
+            let a = lowrank_nonneg(m, n, k, 0.02, &mut rng);
+            let omega = Mat::randn(n, (k + 5).min(m.min(n)), &mut rng);
+            let serial = srsi_with_omega(&a, &omega, k, 5);
+            let mut scratch = SrsiScratch::new();
+            for threads in [1usize, 2, 4] {
+                let pool = Pool::new(threads);
+                let got = srsi_with_omega_scratch_pooled(
+                    &a, &omega, k, 5, &mut scratch, &pool,
+                );
+                assert_eq!(got.q, serial.q, "{m}x{n} t={threads}");
+                assert_eq!(got.u, serial.u, "{m}x{n} t={threads}");
+                assert_eq!(got.xi, serial.xi, "{m}x{n} t={threads}");
+            }
+        }
     }
 
     #[test]

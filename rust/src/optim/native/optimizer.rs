@@ -15,19 +15,33 @@
 //!   `TrainOptions::threads` via [`NativeOptimizer::with_threads`]), with
 //!   results *bitwise identical* for every thread count (workspace
 //!   contents never affect results);
+//! - **the thread budget splits adaptively**: matrix jobs fan out first
+//!   (one span each when they are scarce), vector jobs second. With at
+//!   least `threads` matrices each worker runs serial per-tensor math;
+//!   when a step has fewer matrices than workers — the common case on
+//!   refresh steps, which `t mod Δs == 1` synchronizes across all
+//!   parameters — the idle workers join each matrix's dense factorization
+//!   as intra-tensor pool slices ([`Pool::split_inner`]; armed only for
+//!   matrices of ≥ `MIN_INTRA_ELEMS` elements), still bitwise identical
+//!   because every pooled kernel is thread-count-independent;
 //! - the optional [`Hyper::fast_srsi`] switch routes between-refresh
 //!   Adapprox factorizations through the structure-aware
 //!   `linalg::srsi_factored` fast path.
 
 use anyhow::{bail, Result};
 
-use crate::linalg::{srsi_with_omega_scratch, Mat};
+use crate::linalg::{srsi_with_omega_scratch_pooled, Mat};
 use crate::optim::state::{OptimizerState, ParamState, StepInfo};
 use crate::optim::workspace::Workspace;
 use crate::optim::{native::steps, Hyper, Optimizer};
 use crate::runtime::{Ladder, ParamSpec, Tensor};
 use crate::util::pool::Pool;
 use crate::util::rng::Rng;
+
+/// Matrix element count below which a step never arms an intra-tensor
+/// pool: the pooled kernels spawn scoped threads per product, which only
+/// pays off once each tensor's per-product spans carry real work.
+const MIN_INTRA_ELEMS: usize = 1 << 16;
 
 /// Native-Rust optimizer over the full parameter set.
 pub struct NativeOptimizer {
@@ -50,6 +64,10 @@ pub struct NativeOptimizer {
 struct WorkerCtx {
     ws: Workspace,
     omega: Mat,
+    /// Intra-tensor pool slice for this worker's dense factorizations:
+    /// single-threaded when matrix tensors ≥ threads, wider when idle
+    /// budget is handed down (resized each step; only matrix jobs use it).
+    inner: Pool,
 }
 
 /// One parameter's slice of a step: everything the worker touches is owned
@@ -107,7 +125,9 @@ impl NativeOptimizer {
 
     /// Shared AS-RSI control plane for one Adapprox matrix parameter.
     /// Returns (ξ, rank, refresh retries). `omega_buf` is the reusable
-    /// sketch buffer (filled from `rng` exactly as `Mat::randn` would).
+    /// sketch buffer (filled from `rng` exactly as `Mat::randn` would);
+    /// `pool` is this worker's intra-tensor slice — the dense V-step and
+    /// S-RSI products fan out over it (bitwise identical at any width).
     #[allow(clippy::too_many_arguments)]
     fn adapprox_matrix_step(
         hyper: &Hyper,
@@ -120,6 +140,7 @@ impl NativeOptimizer {
         st: &mut ParamState,
         ws: &mut Workspace,
         omega_buf: &mut Mat,
+        pool: &Pool,
         lr: f32,
     ) -> (f64, f64, usize) {
         let ParamState::Adapprox {
@@ -151,31 +172,50 @@ impl NativeOptimizer {
                 let kp = (b + rank.p_for(b)).min(rows.min(cols));
                 omega_buf.reset_for_assign(cols, kp);
                 rng.fill_normal_f32(&mut omega_buf.data);
-                let step_fn = if hyper.fast_srsi {
-                    steps::adapprox_step_fast_ws
+                let (q2, u2, xi) = if hyper.fast_srsi {
+                    steps::adapprox_step_fast_ws(
+                        w,
+                        m_buf,
+                        &qm,
+                        &um,
+                        g,
+                        omega_buf,
+                        rows,
+                        cols,
+                        b,
+                        hyper.l,
+                        lr,
+                        hyper.beta1,
+                        hyper.beta2,
+                        hyper.eps,
+                        hyper.weight_decay,
+                        d,
+                        cos,
+                        ws,
+                    )
                 } else {
-                    steps::adapprox_step_ws
+                    steps::adapprox_step_pooled_ws(
+                        w,
+                        m_buf,
+                        &qm,
+                        &um,
+                        g,
+                        omega_buf,
+                        rows,
+                        cols,
+                        b,
+                        hyper.l,
+                        lr,
+                        hyper.beta1,
+                        hyper.beta2,
+                        hyper.eps,
+                        hyper.weight_decay,
+                        d,
+                        cos,
+                        ws,
+                        pool,
+                    )
                 };
-                let (q2, u2, xi) = step_fn(
-                    w,
-                    m_buf,
-                    &qm,
-                    &um,
-                    g,
-                    omega_buf,
-                    rows,
-                    cols,
-                    b,
-                    hyper.l,
-                    lr,
-                    hyper.beta1,
-                    hyper.beta2,
-                    hyper.eps,
-                    hyper.weight_decay,
-                    d,
-                    cos,
-                    ws,
-                );
                 *q = q2.data;
                 *u = u2.data;
                 *bucket = b;
@@ -185,17 +225,19 @@ impl NativeOptimizer {
             RankDecision::Refresh { start_bucket } => {
                 // V computed once from the stored factors (Alg. 2's fixed
                 // A); refresh decisions need the exact dense ξ, so the
-                // factored fast path never applies here.
-                steps::adapprox_vstep_ws(&qm, &um, g, rows, cols,
-                                         hyper.beta2, ws);
+                // factored fast path never applies here — the pool slice
+                // is what keeps this dense pass fast.
+                steps::adapprox_vstep_pooled_ws(&qm, &um, g, rows, cols,
+                                                hyper.beta2, ws, pool);
                 let mut b = start_bucket;
                 let (mut best, mut xi);
                 loop {
                     let kp = (b + rank.p_for(b)).min(rows.min(cols));
                     omega_buf.reset_for_assign(cols, kp);
                     rng.fill_normal_f32(&mut omega_buf.data);
-                    let out = srsi_with_omega_scratch(&ws.vmat, omega_buf, b,
-                                                      hyper.l, &mut ws.srsi);
+                    let out = srsi_with_omega_scratch_pooled(
+                        &ws.vmat, omega_buf, b, hyper.l, &mut ws.srsi, pool,
+                    );
                     xi = out.xi;
                     best = out;
                     match rank.grow(xi, hyper) {
@@ -316,7 +358,7 @@ impl NativeOptimizer {
                 job.is_matrix = true;
                 let (xi, rank, retries) = Self::adapprox_matrix_step(
                     h, job.rng, t, rows, cols, job.w, g, job.st,
-                    &mut ctx.ws, &mut ctx.omega, lr,
+                    &mut ctx.ws, &mut ctx.omega, &ctx.inner, lr,
                 );
                 job.xi = xi;
                 job.rank = rank;
@@ -377,7 +419,65 @@ impl Optimizer for NativeOptimizer {
             });
         }
 
-        pool.run_units_ctx(&mut jobs, 1, &mut self.ctxs, |ctx, _, span| {
+        // Two-phase fan-out: heavy (matrix) jobs first — largest first —
+        // then light vector jobs, so a span never serializes two dense
+        // factorizations while other workers idle on microsecond bias
+        // updates. Job order is deterministic (stable sort on spec kind
+        // and size), so results stay bitwise thread-count-independent.
+        jobs.sort_by_key(|j| {
+            (!j.spec.is_matrix(), std::cmp::Reverse(j.spec.numel()))
+        });
+        let n_mat = jobs.iter().take_while(|j| j.spec.is_matrix()).count();
+        let (mjobs, vjobs) = jobs.split_at_mut(n_mat);
+
+        if !mjobs.is_empty() {
+            // Adaptive thread-budget split: with matrices ≥ threads every
+            // inner pool is single-threaded — the classic per-tensor
+            // fan-out; with fewer matrices than workers (e.g. the
+            // Δs-synchronized refresh of a small model) the idle budget
+            // joins each dense factorization as intra-tensor row slices,
+            // each matrix in its own span aligned with its inner pool.
+            // `Pool::span_ranges` is the packing `run_units_ctx` will
+            // use; spans holding only tiny matrices count as light in
+            // `Pool::split_inner_weighted`, so their budget flows to the
+            // heavy factorizations instead of stranding (per-product
+            // spans must amortize the scoped-thread spawns). The split
+            // never affects results — every pooled kernel is bitwise
+            // thread-count-independent.
+            // a span is heavy only if one of its jobs will actually run
+            // the pooled dense path this step: an Adapprox matrix of
+            // pool-worthy size on a refresh step or with fast_srsi off —
+            // fast_srsi Keep steps run the factored iteration (serial by
+            // design) and Adafactor/CAME matrices never use the pool
+            let refresh_step =
+                crate::optim::rank::is_refresh_step(t, &h);
+            let pool_using = |j: &StepJob| {
+                j.spec.numel() >= MIN_INTRA_ELEMS
+                    && matches!(*j.st, ParamState::Adapprox { .. })
+                    && (refresh_step || !h.fast_srsi)
+            };
+            let heavy: Vec<bool> = pool
+                .span_ranges(mjobs.len())
+                .into_iter()
+                .map(|r| mjobs[r].iter().any(|j| pool_using(j)))
+                .collect();
+            let inners = pool.split_inner_weighted(&heavy);
+            let spans1 = inners.len();
+            for (ctx, inner) in self.ctxs.iter_mut().zip(inners) {
+                ctx.inner = inner;
+            }
+            pool.run_units_ctx(
+                mjobs,
+                1,
+                &mut self.ctxs[..spans1],
+                |ctx, _, span| {
+                    for job in span.iter_mut() {
+                        Self::step_one(&h, t, lr, job, ctx);
+                    }
+                },
+            );
+        }
+        pool.run_units_ctx(vjobs, 1, &mut self.ctxs, |ctx, _, span| {
             for job in span.iter_mut() {
                 Self::step_one(&h, t, lr, job, ctx);
             }
@@ -682,6 +782,115 @@ mod tests {
                            "{kind:?} telemetry diverged at {threads} threads");
             }
         }
+    }
+
+    #[test]
+    fn intra_tensor_pool_bitwise_matches_single_threaded() {
+        // threads > runnable matrices: the budget split hands idle workers
+        // to each tensor's dense factorization as intra-tensor slices
+        // (both matrices exceed MIN_INTRA_ELEMS, so the split arms).
+        // delta_s = 2 keeps the (dense, pooled) refresh path hot; results
+        // must stay bitwise identical at every thread count.
+        let mut h = Hyper::paper_defaults(OptKind::Adapprox, &hd());
+        h.delta_s = 2;
+        h.k_init = 2;
+        let two = vec![
+            ParamSpec {
+                name: "w0".into(),
+                shape: vec![80, 840],
+                kind: "matrix".into(),
+            },
+            ParamSpec {
+                name: "w1".into(),
+                shape: vec![320, 224],
+                kind: "matrix".into(),
+            },
+        ];
+        assert!(two.iter().all(|s| s.numel() >= MIN_INTRA_ELEMS));
+        let small_ladder = |_m: usize, _n: usize| {
+            Some(Ladder {
+                buckets: vec![2, 4, 8],
+                oversample: vec![5, 5, 0],
+                kmax: 8,
+            })
+        };
+        let run = |threads: usize| {
+            let mut opt = NativeOptimizer::new(
+                two.clone(), h.clone(), &small_ladder, 29,
+            )
+            .unwrap()
+            .with_threads(threads);
+            let mut rng = Rng::new(31);
+            let mut params: Vec<Tensor> = two
+                .iter()
+                .map(|s| {
+                    Tensor::f32(s.shape.clone(),
+                                rng.normal_vec_f32(s.numel()))
+                })
+                .collect();
+            let mut xis = vec![];
+            for _ in 0..6 {
+                let grads: Vec<Tensor> = params
+                    .iter()
+                    .map(|t| Tensor::f32(t.shape.clone(),
+                                         rng.normal_vec_f32(t.numel())))
+                    .collect();
+                xis.push(opt.step(&mut params, &grads, 1e-3).unwrap().mean_xi);
+            }
+            let weights: Vec<Vec<f32>> = params
+                .iter()
+                .map(|p| p.as_f32().unwrap().to_vec())
+                .collect();
+            (weights, xis)
+        };
+        let single = run(1);
+        assert!(single.0.iter().flatten().all(|v| v.is_finite()));
+        for threads in [2, 4, 8] {
+            let multi = run(threads);
+            assert_eq!(single.0, multi.0,
+                       "weights diverged at {threads} threads");
+            assert_eq!(single.1, multi.1,
+                       "xi diverged at {threads} threads");
+        }
+    }
+
+    #[test]
+    fn skinny_matrix_steps_without_panic() {
+        // regression: a 16×4096 parameter under a shared kmax=32 ladder
+        // used to trip `assert!(k <= kp)` in S-RSI (kp clamps to 16 but
+        // the bucket does not); the ladder now clamps at state init
+        let mut h = Hyper::paper_defaults(OptKind::Adapprox, &hd());
+        h.delta_s = 2;
+        h.k_init = 32;
+        let specs = vec![ParamSpec {
+            name: "skinny".into(),
+            shape: vec![16, 4096],
+            kind: "matrix".into(),
+        }];
+        let wide = |_m: usize, _n: usize| {
+            Some(Ladder {
+                buckets: vec![1, 2, 4, 8, 16, 32],
+                oversample: vec![5, 5, 5, 5, 5, 0],
+                kmax: 32,
+            })
+        };
+        let mut opt = NativeOptimizer::new(specs, h, &wide, 37)
+            .unwrap()
+            .with_threads(4);
+        let mut rng = Rng::new(41);
+        let mut params = vec![Tensor::f32(
+            vec![16, 4096],
+            rng.normal_vec_f32(16 * 4096),
+        )];
+        for _ in 0..4 {
+            let grads = vec![Tensor::f32(
+                vec![16, 4096],
+                rng.normal_vec_f32(16 * 4096),
+            )];
+            let info = opt.step(&mut params, &grads, 1e-3).unwrap();
+            assert!(info.mean_rank <= 16.0, "rank exceeded min dim");
+        }
+        assert!(params[0].as_f32().unwrap().iter().all(|v| v.is_finite()));
     }
 
     #[test]

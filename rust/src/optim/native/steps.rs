@@ -12,9 +12,10 @@
 //! so both flavours are bitwise identical by construction.
 
 use crate::linalg::{
-    srsi_factored_scratch, srsi_with_omega_scratch, Mat,
+    srsi_factored_scratch, srsi_with_omega_scratch_pooled, Mat,
 };
 use crate::optim::workspace::{buf_f32, buf_f64, Workspace};
+use crate::util::pool::Pool;
 
 const TINY: f32 = 1e-30;
 
@@ -323,21 +324,37 @@ pub fn adapprox_vstep_ws(
     beta2: f32,
     ws: &mut Workspace,
 ) {
-    q.matmul_t_into(u, &mut ws.recon); // (rows, cols)
+    adapprox_vstep_pooled_ws(q, u, g, rows, cols, beta2, ws,
+                             &Pool::single());
+}
+
+/// [`adapprox_vstep_ws`] with the Q Uᵀ product and the elementwise V
+/// combine fanned out over `pool` (row units; bitwise identical — every
+/// element's arithmetic is independent of its thread).
+#[allow(clippy::too_many_arguments)]
+pub fn adapprox_vstep_pooled_ws(
+    q: &Mat,
+    u: &Mat,
+    g: &[f32],
+    rows: usize,
+    cols: usize,
+    beta2: f32,
+    ws: &mut Workspace,
+    pool: &Pool,
+) {
+    q.matmul_t_into_pooled(u, &mut ws.recon, pool); // (rows, cols)
     ws.vmat.reset_for_assign(rows, cols);
-    for (i, (v, &rec)) in ws
-        .vmat
-        .data
-        .iter_mut()
-        .zip(&ws.recon.data)
-        .enumerate()
-    {
-        // reconstruction clamped at zero (mirrors the L1 kernel): rank-k
-        // factors of a non-negative matrix carry small negative noise that
-        // would otherwise explode g / (sqrt(V) + eps) and dominate the RMS
-        // clip, freezing all other coordinates
-        *v = beta2 * rec.max(0.0) + (1.0 - beta2) * g[i] * g[i];
-    }
+    let rec = &ws.recon.data;
+    pool.run_units(&mut ws.vmat.data, cols.max(1), |start, span| {
+        for (off, v) in span.iter_mut().enumerate() {
+            let i = start + off;
+            // reconstruction clamped at zero (mirrors the L1 kernel):
+            // rank-k factors of a non-negative matrix carry small negative
+            // noise that would otherwise explode g / (sqrt(V) + eps) and
+            // dominate the RMS clip, freezing all other coordinates
+            *v = beta2 * rec[i].max(0.0) + (1.0 - beta2) * g[i] * g[i];
+        }
+    });
 }
 
 /// Adapprox update application (rank-independent tail of Alg. 3).
@@ -459,8 +476,41 @@ pub fn adapprox_step_ws(
     cos_guidance: bool,
     ws: &mut Workspace,
 ) -> (Mat, Mat, f64) {
-    adapprox_vstep_ws(q, u, g, rows, cols, beta2, ws);
-    let out = srsi_with_omega_scratch(&ws.vmat, omega, k, l, &mut ws.srsi);
+    adapprox_step_pooled_ws(w, m, q, u, g, omega, rows, cols, k, l, lr,
+                            beta1, beta2, eps, wd, d, cos_guidance, ws,
+                            &Pool::single())
+}
+
+/// [`adapprox_step_ws`] with the dense V-step and S-RSI fanned out over
+/// `pool` — the intra-tensor parallel path the optimizer uses when a step
+/// has fewer runnable tensors than worker threads. Bitwise identical to
+/// the serial `_ws` path for any thread count (the update application
+/// stays serial; it is O(mn) elementwise against the GEMMs' O(mn·k·l)).
+#[allow(clippy::too_many_arguments)]
+pub fn adapprox_step_pooled_ws(
+    w: &mut [f32],
+    m: &mut [f32],
+    q: &Mat,
+    u: &Mat,
+    g: &[f32],
+    omega: &Mat,
+    rows: usize,
+    cols: usize,
+    k: usize,
+    l: usize,
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    wd: f32,
+    d: f32,
+    cos_guidance: bool,
+    ws: &mut Workspace,
+    pool: &Pool,
+) -> (Mat, Mat, f64) {
+    adapprox_vstep_pooled_ws(q, u, g, rows, cols, beta2, ws, pool);
+    let out = srsi_with_omega_scratch_pooled(&ws.vmat, omega, k, l,
+                                             &mut ws.srsi, pool);
     adapprox_apply_ws(w, m, &ws.vmat.data, g, lr, beta1, eps, wd, d,
                       cos_guidance, &mut ws.upd);
     (out.q, out.u, out.xi)
@@ -796,6 +846,42 @@ mod tests {
         assert_eq!(a.4, b.4);
         assert_eq!(a.0, c.0);
         assert_eq!(a.2, c.2);
+    }
+
+    #[test]
+    fn adapprox_pooled_step_bitwise_matches_serial() {
+        // any pool width must reproduce the serial fused step exactly:
+        // weights, moments, factors and ξ
+        let mut rng = Rng::new(41);
+        let (rows, cols, k) = (48, 40, 4);
+        let n = rows * cols;
+        let w0 = randv(n, 1.0, &mut rng);
+        let m0 = randv(n, 0.001, &mut rng);
+        let q = Mat::randn(rows, k, &mut rng);
+        let u = Mat::randn(cols, k, &mut rng);
+        let g = randv(n, 0.01, &mut rng);
+        let omega = Mat::randn(cols, k + 5, &mut rng);
+        let mut ws = Workspace::new();
+        let mut w1 = w0.clone();
+        let mut m1 = m0.clone();
+        let (qa, ua, xia) = adapprox_step_ws(
+            &mut w1, &mut m1, &q, &u, &g, &omega, rows, cols, k, 5, 1e-3,
+            0.9, 0.999, 1e-8, 0.01, 1.0, false, &mut ws,
+        );
+        for threads in [2usize, 4] {
+            let pool = Pool::new(threads);
+            let mut w2 = w0.clone();
+            let mut m2 = m0.clone();
+            let (qb, ub, xib) = adapprox_step_pooled_ws(
+                &mut w2, &mut m2, &q, &u, &g, &omega, rows, cols, k, 5,
+                1e-3, 0.9, 0.999, 1e-8, 0.01, 1.0, false, &mut ws, &pool,
+            );
+            assert_eq!(w1, w2, "threads={threads}");
+            assert_eq!(m1, m2, "threads={threads}");
+            assert_eq!(qa, qb, "threads={threads}");
+            assert_eq!(ua, ub, "threads={threads}");
+            assert_eq!(xia, xib, "threads={threads}");
+        }
     }
 
     #[test]

@@ -15,6 +15,15 @@ pub fn f_xi(h: &Hyper, xi: f64) -> f64 {
     (h.f_eta / ((h.f_omega * xi + h.f_phi).exp() + h.f_tau)).abs()
 }
 
+/// Alg. 2's refresh cadence: 1-based `t mod Δs == 1`, with `Δs <= 1`
+/// meaning refresh *every* step (`Δs == 0` would otherwise make the
+/// condition unsatisfiable, so refresh would never fire and the factors
+/// would never be initialized). Shared by [`RankController::decide`] and
+/// the optimizer's thread-budget planner.
+pub fn is_refresh_step(step: usize, hyper: &Hyper) -> bool {
+    hyper.delta_s <= 1 || step % hyper.delta_s == 1
+}
+
 /// Per-tensor rank state.
 #[derive(Clone, Debug)]
 pub struct RankController {
@@ -35,7 +44,15 @@ pub enum RankDecision {
 }
 
 impl RankController {
-    pub fn new(hyper: &Hyper, ladder: Ladder) -> RankController {
+    /// `max_rank` is the largest factorizable rank for this parameter —
+    /// `min(rows, cols)`. A manifest ladder is shared per *shape class*,
+    /// so a skinny matrix (e.g. 16×4096 under a kmax=32 ladder) can be
+    /// handed buckets its own dimensions cannot support; executing such a
+    /// bucket would demand a sketch wider than min(rows, cols) and trip
+    /// the `k <= kp` assert in S-RSI. Clamp the whole ladder (buckets and
+    /// kmax) here so every decision downstream is representable.
+    pub fn new(hyper: &Hyper, ladder: Ladder, max_rank: usize) -> RankController {
+        let ladder = ladder.clamped(max_rank);
         let kmax = ladder.kmax;
         RankController {
             k: hyper.k_init.min(kmax).max(1),
@@ -54,10 +71,9 @@ impl RankController {
         self.ladder.p_for(bucket)
     }
 
-    /// Decide the step type (1-based step index; Alg. 2 refreshes when
-    /// `t mod Δs == 1`).
+    /// Decide the step type (see [`is_refresh_step`] for the cadence).
     pub fn decide(&mut self, step: usize, hyper: &Hyper) -> RankDecision {
-        let refresh = step % hyper.delta_s.max(1) == 1 || hyper.delta_s == 1;
+        let refresh = is_refresh_step(step, hyper);
         if refresh {
             self.k = hyper.k_init.min(self.kmax).max(1);
             RankDecision::Refresh {
@@ -149,7 +165,7 @@ mod tests {
     #[test]
     fn refresh_cadence() {
         let h = hyper();
-        let mut rc = RankController::new(&h, ladder());
+        let mut rc = RankController::new(&h, ladder(), 4096);
         // steps are 1-based: 1, 11, 21... are refreshes (Δs = 10)
         assert!(matches!(rc.decide(1, &h), RankDecision::Refresh { .. }));
         for t in 2..=10 {
@@ -160,9 +176,48 @@ mod tests {
     }
 
     #[test]
+    fn delta_s_zero_and_one_refresh_every_step() {
+        // regression: Δs = 0 used to make `step % 1 == 1` unsatisfiable,
+        // so refresh never fired and factors were never initialized
+        for ds in [0usize, 1] {
+            let mut h = hyper();
+            h.delta_s = ds;
+            let mut rc = RankController::new(&h, ladder(), 4096);
+            for t in 1..=5 {
+                assert!(
+                    matches!(rc.decide(t, &h), RankDecision::Refresh { .. }),
+                    "delta_s={ds} t={t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn skinny_matrix_ladder_clamps_to_min_dim() {
+        // a 16×4096 parameter under a kmax=32 ladder: every bucket and
+        // kmax must clamp to 16, so kp = (b + p).min(16) >= b always holds
+        let h = hyper();
+        let mut rc = RankController::new(&h, ladder(), 16);
+        assert_eq!(rc.kmax, 16);
+        assert!(rc.bucket() <= 16);
+        rc.decide(1, &h);
+        let mut retries = 0;
+        while let Some(b) = rc.grow(0.9, &h) {
+            assert!(b <= 16, "bucket {b} exceeds min dim");
+            retries += 1;
+            assert!(retries <= 8, "unbounded growth");
+        }
+        assert_eq!(rc.k, 16);
+        // degenerate 1-row parameter still yields a usable controller
+        let rc1 = RankController::new(&h, ladder(), 1);
+        assert_eq!(rc1.kmax, 1);
+        assert_eq!(rc1.bucket(), 1);
+    }
+
+    #[test]
     fn refresh_resets_to_k_init() {
         let h = hyper();
-        let mut rc = RankController::new(&h, ladder());
+        let mut rc = RankController::new(&h, ladder(), 4096);
         rc.k = 32;
         rc.decide(11, &h);
         assert_eq!(rc.k, 1);
@@ -171,7 +226,7 @@ mod tests {
     #[test]
     fn growth_converges_or_caps() {
         let h = hyper();
-        let mut rc = RankController::new(&h, ladder());
+        let mut rc = RankController::new(&h, ladder(), 4096);
         rc.decide(1, &h);
         // xi stays high: growth must terminate at kmax in bounded retries
         let mut retries = 0;
@@ -185,7 +240,7 @@ mod tests {
     #[test]
     fn growth_stops_when_converged() {
         let h = hyper();
-        let mut rc = RankController::new(&h, ladder());
+        let mut rc = RankController::new(&h, ladder(), 4096);
         rc.decide(1, &h);
         assert_eq!(rc.grow(0.005, &h), None); // below threshold
         assert_eq!(rc.k, 1);
@@ -195,7 +250,7 @@ mod tests {
     fn bucket_always_covers_k() {
         let h = hyper();
         forall(32, |rng| {
-            let mut rc = RankController::new(&h, ladder());
+            let mut rc = RankController::new(&h, ladder(), 4096);
             for t in 1..=40 {
                 rc.decide(t, &h);
                 let _ = rc.grow(rng.uniform(), &h);
@@ -208,7 +263,7 @@ mod tests {
     #[test]
     fn monotone_growth_within_refresh() {
         let h = hyper();
-        let mut rc = RankController::new(&h, ladder());
+        let mut rc = RankController::new(&h, ladder(), 4096);
         rc.decide(1, &h);
         let mut prev = rc.k;
         while let Some(_) = rc.grow(0.5, &h) {

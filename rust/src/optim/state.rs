@@ -81,7 +81,11 @@ impl ParamState {
             },
             OptKind::Adapprox => {
                 let ladder = ladder.expect("matrix param needs a ladder");
-                let rank = RankController::new(hyper, ladder.clone());
+                // clamp the ladder to this parameter's own factorizable
+                // rank: a shared ladder can carry buckets a skinny matrix
+                // (min dim < kmax) cannot execute
+                let rank =
+                    RankController::new(hyper, ladder.clone(), rows.min(cols));
                 let bucket = rank.bucket();
                 ParamState::Adapprox {
                     m: with_m.then(|| vec![0.0; n]),
@@ -237,6 +241,24 @@ mod tests {
         let s = ParamState::init(&mat(1024, 512), &h, Some(&l));
         // k_init = 1 -> bucket 1 -> (1024 + 512) * 1 floats
         assert_eq!(s.bytes(), (1024 + 512) * 4);
+    }
+
+    #[test]
+    fn skinny_adapprox_state_clamps_bucket() {
+        // 16×4096 under a kmax=32 ladder: the stored factors must size to
+        // a bucket the matrix can actually support (≤ 16)
+        let mut h = Hyper::paper_defaults(OptKind::Adapprox, &hd());
+        h.beta1 = 0.0;
+        h.k_init = 32;
+        let l = ladder();
+        let s = ParamState::init(&mat(16, 4096), &h, Some(&l));
+        match s {
+            ParamState::Adapprox { bucket, ref rank, .. } => {
+                assert!(bucket <= 16, "bucket {bucket} > min dim");
+                assert_eq!(rank.kmax, 16);
+            }
+            _ => panic!("expected Adapprox state"),
+        }
     }
 
     #[test]

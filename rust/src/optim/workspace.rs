@@ -59,11 +59,15 @@ impl Workspace {
             + self.srsi.lf.data.len()
             + self.srsi.rf.data.len()
             + self.srsi.small.data.len()
-            + self.srsi.small2.data.len();
+            + self.srsi.small2.data.len()
+            + self.srsi.qt.data.len();
         let f64s = self.rsum.len()
             + self.csum.len()
             + self.rcsum.len()
-            + self.ccsum.len();
+            + self.ccsum.len()
+            + self.srsi.rsum.len()
+            + self.srsi.csum.len()
+            + self.srsi.xi_parts.len();
         (f32s * 4 + f64s * 8) as u64
     }
 }

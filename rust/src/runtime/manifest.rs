@@ -87,6 +87,39 @@ impl Ladder {
             .map(|i| self.oversample[i])
             .unwrap_or(0)
     }
+
+    /// This ladder with every bucket and kmax clamped to `max_rank`,
+    /// deduplicating buckets that collapse together (the first oversample
+    /// entry wins). Guards Adapprox state for skinny matrices whose min
+    /// dimension is below the ladder's kmax: S-RSI cannot run at a rank
+    /// above min(rows, cols).
+    pub fn clamped(&self, max_rank: usize) -> Ladder {
+        let cap = max_rank.max(1);
+        if self.kmax <= cap && self.buckets.iter().all(|&b| b <= cap) {
+            return self.clone();
+        }
+        let mut buckets = Vec::with_capacity(self.buckets.len());
+        let mut oversample = Vec::with_capacity(self.buckets.len());
+        for (&b, &p) in self.buckets.iter().zip(&self.oversample) {
+            let b = b.min(cap);
+            if buckets.last() == Some(&b) {
+                continue;
+            }
+            buckets.push(b);
+            oversample.push(p);
+        }
+        Ladder {
+            buckets,
+            oversample,
+            kmax: self.kmax.min(cap),
+        }
+    }
+}
+
+/// Parse a ladder key of the form `"{m}x{n}"` into its shape.
+fn parse_shape_key(key: &str) -> Option<(usize, usize)> {
+    let (m, n) = key.split_once('x')?;
+    Some((m.trim().parse().ok()?, n.trim().parse().ok()?))
 }
 
 /// Paper hyperparameter defaults (manifest `hyper_defaults`).
@@ -255,12 +288,34 @@ impl Manifest {
             if buckets.is_empty() || buckets.len() != oversample.len() {
                 bail!("ladder {key}: bad buckets/p lengths");
             }
+            if buckets[0] == 0 || buckets.windows(2).any(|w| w[0] >= w[1]) {
+                bail!(
+                    "ladder {key}: buckets must be strictly ascending and \
+                     >= 1, got {buckets:?}"
+                );
+            }
+            let kmax = req_usize(l, "kmax")?;
+            let top = *buckets.last().unwrap();
+            if kmax < top {
+                bail!("ladder {key}: kmax {kmax} below largest bucket {top}");
+            }
+            // the key names the shape class this ladder serves: no bucket
+            // may exceed the factorizable rank min(m, n)
+            if let Some((m, n)) = parse_shape_key(key) {
+                let lim = m.min(n);
+                if kmax > lim {
+                    bail!(
+                        "ladder {key}: kmax {kmax} exceeds min dimension \
+                         {lim} (S-RSI rank cannot exceed min(rows, cols))"
+                    );
+                }
+            }
             ladders.insert(
                 key.clone(),
                 Ladder {
                     buckets,
                     oversample,
-                    kmax: req_usize(l, "kmax")?,
+                    kmax,
                 },
             );
         }
@@ -369,5 +424,95 @@ mod tests {
     fn missing_manifest_errors() {
         let err = Manifest::load("/nonexistent-dir-xyz").unwrap_err();
         assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn ladder_clamped_dedups_and_caps() {
+        let l = Ladder {
+            buckets: vec![1, 2, 4, 8, 16, 32],
+            oversample: vec![5, 5, 5, 5, 5, 0],
+            kmax: 32,
+        };
+        let c = l.clamped(16);
+        assert_eq!(c.buckets, vec![1, 2, 4, 8, 16]);
+        assert_eq!(c.oversample, vec![5, 5, 5, 5, 5]);
+        assert_eq!(c.kmax, 16);
+        // clamp below every bucket degenerates to rank 1
+        let one = l.clamped(1);
+        assert_eq!(one.buckets, vec![1]);
+        assert_eq!(one.kmax, 1);
+        // no-op clamp returns the ladder unchanged
+        let same = l.clamped(64);
+        assert_eq!(same.buckets, l.buckets);
+        assert_eq!(same.kmax, 32);
+        // zero is treated as 1 (never an empty/invalid ladder)
+        assert_eq!(l.clamped(0).kmax, 1);
+    }
+
+    fn write_manifest(name: &str, ladder_json: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("adapprox_manifest_{name}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let json = format!(
+            "{{\"configs\": {{}}, \"programs\": {{}}, \
+             \"ladders\": {{{ladder_json}}}, \
+             \"hyper_defaults\": {{\"beta1\": 0.9, \"beta2\": 0.999, \
+             \"eps\": 1e-8, \"weight_decay\": 0.1, \"clip_d\": 1.0, \
+             \"k_init\": 1, \"l\": 5, \"p\": 5, \"xi_thresh\": 0.01, \
+             \"delta_s\": 10, \"f_eta\": 200.0, \"f_omega\": -10.0, \
+             \"f_phi\": -2.5, \"f_tau\": -9.0}}}}"
+        );
+        std::fs::write(dir.join("manifest.json"), json).unwrap();
+        dir
+    }
+
+    #[test]
+    fn load_accepts_valid_ladder() {
+        let dir = write_manifest(
+            "ok",
+            "\"64x128\": {\"buckets\": [1, 2, 4, 8, 16], \
+             \"p\": [5, 5, 5, 5, 0], \"kmax\": 16}",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.ladder(64, 128).unwrap().kmax, 16);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_ladder_kmax_over_min_dim() {
+        // a 16x4096 shape class cannot execute rank-32 buckets
+        let dir = write_manifest(
+            "skinny",
+            "\"16x4096\": {\"buckets\": [1, 2, 4, 8, 16, 32], \
+             \"p\": [5, 5, 5, 5, 5, 0], \"kmax\": 32}",
+        );
+        let err = Manifest::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("min dimension"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_unsorted_or_zero_buckets() {
+        for (name, ladder) in [
+            (
+                "unsorted",
+                "\"64x64\": {\"buckets\": [4, 2, 8], \
+                 \"p\": [5, 5, 5], \"kmax\": 8}",
+            ),
+            (
+                "zero",
+                "\"64x64\": {\"buckets\": [0, 2], \
+                 \"p\": [5, 5], \"kmax\": 8}",
+            ),
+            (
+                "kmax_low",
+                "\"64x64\": {\"buckets\": [1, 2, 16], \
+                 \"p\": [5, 5, 5], \"kmax\": 8}",
+            ),
+        ] {
+            let dir = write_manifest(name, ladder);
+            assert!(Manifest::load(&dir).is_err(), "{name} should fail");
+            std::fs::remove_dir_all(dir).ok();
+        }
     }
 }

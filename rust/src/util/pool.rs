@@ -15,15 +15,34 @@
 //! steps, each span doing at least tens of microseconds of math — spawn
 //! cost is noise; a persistent work-stealing pool would buy little and cost
 //! determinism.
+//!
+//! Pools *nest*: a worker span of one `run_units` call may itself drive an
+//! inner [`Pool`] (scoped threads compose), which is how the optimizer
+//! hands idle workers to a single tensor's dense factorization when there
+//! are fewer runnable tensors than threads. [`Pool::split_inner`] computes
+//! that budget split deterministically.
 
 /// Upper bound on concurrent spans for the context-free `run_units` path
 /// (contexts are zero-sized there; this just caps the span count).
 const MAX_SPANS: usize = 1024;
 
+/// Whole units per span for `units` units over `spans` spans — the single
+/// packing rule `run_units_ctx` and [`Pool::span_ranges`] share.
+fn per_span(units: usize, spans: usize) -> usize {
+    1 + (units - 1) / spans
+}
+
 /// A fixed-width parallel-for executor.
 #[derive(Clone, Debug)]
 pub struct Pool {
     threads: usize,
+}
+
+impl Default for Pool {
+    /// The single-threaded pool (safe everywhere, zero overhead).
+    fn default() -> Pool {
+        Pool::single()
+    }
 }
 
 impl Pool {
@@ -50,6 +69,75 @@ impl Pool {
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Split this pool's thread budget over `units` outer work units.
+    ///
+    /// Returns one inner [`Pool`] per *actual* outer span — the span
+    /// count of [`Pool::span_ranges`], so entry `i` always aligns with
+    /// the units span `i` receives. The inner widths sum to exactly
+    /// `threads`, remainder to the front. With `units <= threads` every
+    /// unit gets its own span and the idle workers become intra-unit
+    /// parallelism; with more units than threads the spans are (close to)
+    /// single-threaded — the classic per-unit fan-out. Results never
+    /// depend on the split because every pooled kernel is bitwise
+    /// thread-count-independent.
+    pub fn split_inner(&self, units: usize) -> Vec<Pool> {
+        let spans = self.span_ranges(units.max(1)).len();
+        self.split_inner_weighted(&vec![true; spans])
+    }
+
+    /// [`Pool::split_inner`] with a per-span weight: spans marked `false`
+    /// (light — e.g. holding only tiny tensors whose pooled products
+    /// cannot amortize a thread spawn) keep a single-threaded pool, and
+    /// the whole remaining budget is divided over the heavy spans
+    /// (remainder to the front), so light work never strands threads
+    /// that heavy factorizations could use. Widths sum to `threads`
+    /// whenever at least one span is heavy and `heavy.len() <= threads`.
+    pub fn split_inner_weighted(&self, heavy: &[bool]) -> Vec<Pool> {
+        let n_heavy = heavy.iter().filter(|&&h| h).count();
+        if n_heavy == 0 {
+            return vec![Pool::single(); heavy.len()];
+        }
+        let light = heavy.len() - n_heavy;
+        let budget = self.threads.saturating_sub(light).max(n_heavy);
+        let base = budget / n_heavy;
+        let extra = budget % n_heavy;
+        let mut nth = 0usize;
+        heavy
+            .iter()
+            .map(|&h| {
+                if h {
+                    let w = base + usize::from(nth < extra);
+                    nth += 1;
+                    Pool::new(w)
+                } else {
+                    Pool::single()
+                }
+            })
+            .collect()
+    }
+
+    /// The contiguous unit ranges a `run_units`/`run_units_ctx` call over
+    /// `units` whole units hands to its spans: `ceil(units / spans)` units
+    /// per span with `spans = min(threads, units)`, the final span taking
+    /// the remainder. The single source of truth for callers that need to
+    /// know which units will share a span (the packing is stable under
+    /// re-capping: calling with `ctxs.len() == span_ranges(units).len()`
+    /// reproduces exactly these chunks).
+    pub fn span_ranges(&self, units: usize) -> Vec<std::ops::Range<usize>> {
+        if units == 0 {
+            return Vec::new();
+        }
+        let per = per_span(units, self.threads.min(units));
+        let mut out = Vec::new();
+        let mut start = 0usize;
+        while start < units {
+            let end = (start + per).min(units);
+            out.push(start..end);
+            start = end;
+        }
+        out
     }
 
     /// Process `data` in parallel as contiguous spans of whole `unit`s.
@@ -101,8 +189,7 @@ impl Pool {
             return;
         }
         let spans = self.threads.min(units).min(ctxs.len());
-        // ceil(units / spans) whole units per span
-        let per = (1 + (units - 1) / spans) * unit;
+        let per = per_span(units, spans) * unit;
         std::thread::scope(|scope| {
             let f = &f;
             let mut rest = data;
@@ -204,6 +291,106 @@ mod tests {
     #[test]
     fn clamps_zero_threads() {
         assert_eq!(Pool::new(0).threads(), 1);
+    }
+
+    #[test]
+    fn split_inner_conserves_thread_budget() {
+        for threads in [1usize, 2, 3, 4, 8] {
+            let pool = Pool::new(threads);
+            for units in [1usize, 2, 3, 5, 8, 16] {
+                let inner = pool.split_inner(units);
+                // one pool per actual span, aligned with span_ranges
+                assert_eq!(inner.len(), pool.span_ranges(units).len());
+                let total: usize = inner.iter().map(|p| p.threads()).sum();
+                assert_eq!(total, threads, "t={threads} u={units}");
+                // remainder goes to the front: widths never increase
+                for w in inner.windows(2) {
+                    assert!(w[0].threads() >= w[1].threads());
+                }
+            }
+        }
+        // zero units degrades to a single serial span
+        assert_eq!(Pool::new(4).split_inner(0).len(), 1);
+    }
+
+    #[test]
+    fn split_inner_weighted_reroutes_light_budget() {
+        // light spans keep width 1; their budget flows to heavy spans
+        let pool = Pool::new(8);
+        let w = pool.split_inner_weighted(&[true, false]);
+        assert_eq!(w.iter().map(|p| p.threads()).collect::<Vec<_>>(),
+                   vec![7, 1]);
+        // all light: everything single-threaded
+        let w = pool.split_inner_weighted(&[false, false, false]);
+        assert!(w.iter().all(|p| p.threads() == 1));
+        // all heavy: identical to split_inner
+        let a = pool.split_inner_weighted(&[true, true, true]);
+        let b = pool.split_inner(3);
+        assert_eq!(a.iter().map(|p| p.threads()).collect::<Vec<_>>(),
+                   b.iter().map(|p| p.threads()).collect::<Vec<_>>());
+        // conservation with a mix
+        for threads in [2usize, 4, 8] {
+            let pool = Pool::new(threads);
+            let heavy = [true, false, true];
+            if heavy.len() > threads {
+                continue;
+            }
+            let w = pool.split_inner_weighted(&heavy);
+            let total: usize = w.iter().map(|p| p.threads()).sum();
+            assert_eq!(total, threads.max(heavy.len()), "t={threads}");
+        }
+    }
+
+    #[test]
+    fn span_ranges_match_run_units_packing() {
+        for threads in [1usize, 2, 3, 4, 7] {
+            let pool = Pool::new(threads);
+            for units in [0usize, 1, 2, 3, 4, 5, 10, 16] {
+                let ranges = pool.span_ranges(units);
+                // ranges cover 0..units exactly, in order
+                let mut next = 0usize;
+                for r in &ranges {
+                    assert_eq!(r.start, next);
+                    assert!(r.end > r.start);
+                    next = r.end;
+                }
+                assert_eq!(next, units);
+                // observed spans of a real run match the advertised ranges
+                let mut data = vec![usize::MAX; units];
+                pool.run_units(&mut data, 1, |start, span| {
+                    for v in span.iter_mut() {
+                        *v = start;
+                    }
+                });
+                for (i, r) in ranges.iter().enumerate() {
+                    for u in r.clone() {
+                        assert_eq!(
+                            data[u], r.start,
+                            "t={threads} u={units} span={i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn nested_pools_compose() {
+        // outer per-unit fan-out, inner element fan-out: every element is
+        // still processed exactly once
+        let outer = Pool::new(4);
+        let mut ctxs = outer.split_inner(2);
+        assert_eq!(ctxs.iter().map(|p| p.threads()).collect::<Vec<_>>(),
+                   vec![2, 2]);
+        let mut data = vec![0u32; 2 * 31];
+        outer.run_units_ctx(&mut data, 31, &mut ctxs, |inner, _, span| {
+            inner.run_units(span, 1, |_, s| {
+                for v in s.iter_mut() {
+                    *v += 1;
+                }
+            });
+        });
+        assert!(data.iter().all(|&v| v == 1));
     }
 
     #[test]
