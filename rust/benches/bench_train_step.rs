@@ -1,27 +1,173 @@
 //! Whole-model step benchmarks: forward+backward (train_step), eval_step,
 //! and the full coordinator step (fwd/bwd + all per-tensor optimizer
 //! programs) per config — the end-to-end numbers for EXPERIMENTS.md §Perf.
+//!
+//! The first two groups need no artifacts: the unsharded-vs-ZeRO-1 native
+//! step (sharding must be overhead-free — same jobs, same fan-out, state
+//! merely partitioned) and the serial-vs-pooled bucketed all-reduce. Both
+//! emit `BENCH_JSON` lines, so the sharded-path perf trajectory is tracked
+//! even on CI machines without an XLA toolchain.
 
 use std::rc::Rc;
 
 use adapprox::bench::{header, Bench};
+use adapprox::coordinator::replicas::{allreduce_mean, allreduce_mean_pooled};
 use adapprox::coordinator::{TrainOptions, Trainer};
 use adapprox::data::{BatchIterator, Split};
-use adapprox::optim::{Hyper, OptKind};
-use adapprox::runtime::Runtime;
+use adapprox::optim::{
+    Hyper, NativeOptimizer, OptKind, Optimizer, ShardedNativeOptimizer,
+};
+use adapprox::runtime::manifest::HyperDefaults;
+use adapprox::runtime::{Ladder, ParamSpec, Runtime, Tensor};
+use adapprox::util::pool::Pool;
+use adapprox::util::rng::Rng;
+
+fn hd() -> HyperDefaults {
+    HyperDefaults {
+        beta1: 0.9,
+        beta2: 0.999,
+        eps: 1e-8,
+        weight_decay: 0.0,
+        clip_d: 1.0,
+        k_init: 2,
+        l: 5,
+        p: 5,
+        xi_thresh: 0.01,
+        delta_s: 10,
+        f_eta: 200.0,
+        f_omega: -10.0,
+        f_phi: -2.5,
+        f_tau: -9.0,
+    }
+}
+
+fn bench_specs() -> Vec<ParamSpec> {
+    let mut specs = Vec::new();
+    for (i, (m, n)) in [(512, 640), (640, 512), (512, 512), (320, 512)]
+        .into_iter()
+        .enumerate()
+    {
+        specs.push(ParamSpec {
+            name: format!("w{i}"),
+            shape: vec![m, n],
+            kind: "matrix".into(),
+        });
+        specs.push(ParamSpec {
+            name: format!("b{i}"),
+            shape: vec![n],
+            kind: "vector".into(),
+        });
+    }
+    specs
+}
+
+fn ladder(_m: usize, _n: usize) -> Option<Ladder> {
+    Some(Ladder {
+        buckets: vec![2, 4, 8],
+        oversample: vec![5, 5, 0],
+        kmax: 8,
+    })
+}
+
+/// Unsharded vs ZeRO-1 native optimizer step over a ~1.3M-param synthetic
+/// inventory (4 matrices + 4 vectors), 4 worker threads.
+fn bench_sharded_native_step(b: &Bench) {
+    header("native optimizer step: unsharded vs ZeRO-1 sharded (4 threads)");
+    let specs = bench_specs();
+    let h = Hyper::paper_defaults(OptKind::Adapprox, &hd());
+    for shards in [1usize, 2, 4] {
+        let mut opt: Box<dyn Optimizer> = if shards == 1 {
+            Box::new(
+                NativeOptimizer::new(specs.clone(), h.clone(), &ladder, 7)
+                    .unwrap()
+                    .with_threads(4),
+            )
+        } else {
+            Box::new(
+                ShardedNativeOptimizer::new(
+                    specs.clone(),
+                    h.clone(),
+                    &ladder,
+                    7,
+                    shards,
+                )
+                .unwrap()
+                .with_threads(4),
+            )
+        };
+        let mut rng = Rng::new(11);
+        let mut params: Vec<Tensor> = specs
+            .iter()
+            .map(|s| {
+                Tensor::f32(s.shape.clone(), rng.normal_vec_f32(s.numel()))
+            })
+            .collect();
+        let grads: Vec<Tensor> = specs
+            .iter()
+            .map(|s| {
+                Tensor::f32(s.shape.clone(), rng.normal_vec_f32(s.numel()))
+            })
+            .collect();
+        let name = if shards == 1 {
+            "native_step_unsharded_4t".to_string()
+        } else {
+            format!("native_step_zero1x{shards}_4t")
+        };
+        b.run(&name, || {
+            std::hint::black_box(
+                opt.step(&mut params, &grads, 1e-4).unwrap(),
+            );
+        });
+    }
+}
+
+/// Serial vs pooled bucketed all-reduce: 4 replicas × ~1.3M elements.
+fn bench_allreduce(b: &Bench) {
+    header("gradient all-reduce: per-tensor serial vs bucketed pooled");
+    let mut rng = Rng::new(13);
+    let shapes: Vec<Vec<usize>> =
+        vec![vec![512, 640], vec![640, 512], vec![512, 512], vec![512]];
+    let reps: Vec<Vec<Tensor>> = (0..4)
+        .map(|_| {
+            shapes
+                .iter()
+                .map(|s| {
+                    let numel: usize = s.iter().product();
+                    Tensor::f32(s.clone(), rng.normal_vec_f32(numel))
+                })
+                .collect()
+        })
+        .collect();
+    b.run("allreduce_serial_r4_1m3", || {
+        std::hint::black_box(allreduce_mean(&reps).unwrap());
+    });
+    for threads in [2usize, 4] {
+        let pool = Pool::new(threads);
+        b.run(&format!("allreduce_pooled_r4_1m3_{threads}t"), || {
+            std::hint::black_box(
+                allreduce_mean_pooled(&reps, &pool).unwrap(),
+            );
+        });
+    }
+}
 
 fn main() {
-    let Ok(rt) = Runtime::new("artifacts") else {
-        println!("run `make artifacts` first");
-        return;
-    };
-    let rt = Rc::new(rt);
     let b = Bench {
         warmup_iters: 2,
         sample_iters: 10,
         ..Bench::default()
     }
     .with_json_from_env();
+
+    // artifact-free groups first: these always run
+    bench_sharded_native_step(&b);
+    bench_allreduce(&b);
+
+    let Ok(rt) = Runtime::new("artifacts") else {
+        println!("run `make artifacts` for the PJRT train_step benches");
+        return;
+    };
+    let rt = Rc::new(rt);
 
     for config in ["micro", "nano"] {
         if rt.manifest.config(config).is_err() {

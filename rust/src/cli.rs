@@ -115,6 +115,22 @@ mod tests {
     }
 
     #[test]
+    fn parses_sharded_native_invocation() {
+        // the ZeRO-1 training invocation: value flags need no registry
+        let a = Args::parse(&argv(
+            "train --native --shards 2 --threads 2 --replicas 2",
+        ))
+        .unwrap();
+        assert!(a.has("native"));
+        assert_eq!(a.usize_or("shards", 1).unwrap(), 2);
+        assert_eq!(a.usize_or("threads", 1).unwrap(), 2);
+        assert_eq!(a.usize_or("replicas", 1).unwrap(), 2);
+        // default when absent
+        let b = Args::parse(&argv("train --native")).unwrap();
+        assert_eq!(b.usize_or("shards", 1).unwrap(), 1);
+    }
+
+    #[test]
     fn defaults() {
         let a = Args::parse(&argv("memory")).unwrap();
         assert_eq!(a.usize_or("steps", 7).unwrap(), 7);

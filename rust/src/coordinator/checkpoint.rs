@@ -7,12 +7,33 @@
 //! protocol) re-initializes optimizer state at phase boundaries, and the
 //! paper's own memory claim is that second-moment state is cheaply
 //! reconstructible from factors.
+//!
+//! **Sharded layout** ([`Checkpoint::save_sharded`]): one *head* file at
+//! the checkpoint path (same ADPX container, zero payload, header fields
+//! `shards` + `shard_gen` + `full_shapes`) plus one ADPX file per shard
+//! (`<name>.shard<r>of<R>.g<gen>`, header fields
+//! `shard`/`shards`/`offset`/`shard_gen`) holding the parameters that
+//! shard owns under the same contiguous ZeRO-1 plan the sharded optimizer
+//! uses (`optim::shard_ranges` over element counts).
+//! [`Checkpoint::load_sharded`] merges the shard files back into one full
+//! `Checkpoint`, so an R-shard checkpoint restores into R'-shard or
+//! unsharded runs unchanged; [`Checkpoint::load_auto`] dispatches on the
+//! header; [`Checkpoint::shard_files`] lists the files the head
+//! references. Crash safety: every save writes its shard files under a
+//! *fresh generation tag*, so the generation the old head points at is
+//! never touched; the head's own temp-file + fsync + rename is the single
+//! publication point. A crash or failure anywhere before that rename
+//! leaves the previous checkpoint fully loadable (an explicit failure
+//! also rolls back this generation's files), and stale generations are
+//! garbage-collected after the next successful save. Cross-file
+//! config/step/generation checks at load refuse any frankenstein mix.
 
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::optim::shard_ranges;
 use crate::runtime::Tensor;
 use crate::util::json::Json;
 
@@ -32,141 +53,39 @@ pub struct Checkpoint {
     pub params: Vec<Tensor>,
 }
 
-impl Checkpoint {
-    /// Serialize to `path` atomically: the bytes go to a sibling temp file
-    /// which is renamed into place only after every write (and an fsync)
-    /// succeeded. A crash mid-write leaves at worst a stale temp file —
-    /// never a truncated checkpoint at the final path, so the previous
-    /// checkpoint survives any interrupted save.
-    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
-        let path = path.as_ref();
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir).ok();
-        }
-        let fname = path
-            .file_name()
-            .map(|s| s.to_string_lossy().into_owned())
-            .unwrap_or_else(|| "checkpoint".into());
-        let seq =
-            SAVE_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let tmp = path.with_file_name(format!(
-            "{fname}.tmp{}-{seq}",
-            std::process::id()
-        ));
-        let mut f = std::fs::File::create(&tmp)
-            .with_context(|| format!("creating {tmp:?}"))?;
-        let write = |f: &mut std::fs::File| -> Result<()> {
-            let shapes: Vec<Json> = self
-                .params
-                .iter()
-                .map(|t| {
-                    Json::Arr(
-                        t.shape
-                            .iter()
-                            .map(|&d| Json::num(d as f64))
-                            .collect(),
-                    )
-                })
-                .collect();
-            let header = Json::obj(vec![
-                ("config", Json::str(&self.config)),
-                ("step", Json::num(self.step as f64)),
-                ("optimizer", Json::str(&self.optimizer)),
-                ("shapes", Json::Arr(shapes)),
-            ])
-            .to_string();
-            f.write_all(MAGIC)?;
-            f.write_all(&VERSION.to_le_bytes())?;
-            f.write_all(&(header.len() as u64).to_le_bytes())?;
-            f.write_all(header.as_bytes())?;
-            for t in &self.params {
-                let data = t.as_f32()?;
-                let bytes: &[u8] = unsafe {
-                    std::slice::from_raw_parts(
-                        data.as_ptr() as *const u8,
-                        data.len() * 4,
-                    )
-                };
-                f.write_all(bytes)?;
-            }
-            f.sync_all()?;
-            Ok(())
-        };
-        let res = write(&mut f);
-        drop(f);
-        if let Err(e) = res {
-            std::fs::remove_file(&tmp).ok();
-            return Err(e);
-        }
-        if let Err(e) = std::fs::rename(&tmp, path) {
-            // don't leak the (complete but unreachable) temp file when the
-            // final path is unwritable — e.g. replaced by a directory
-            std::fs::remove_file(&tmp).ok();
-            return Err(e)
-                .with_context(|| format!("renaming {tmp:?} to {path:?}"));
-        }
-        Ok(())
-    }
+/// Sibling temp path for an atomic write of `path`.
+fn tmp_path(path: &Path) -> PathBuf {
+    let fname = path
+        .file_name()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "checkpoint".into());
+    let seq = SAVE_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    path.with_file_name(format!("{fname}.tmp{}-{seq}", std::process::id()))
+}
 
-    /// Deserialize from `path`. Header-declared sizes are *not* trusted:
-    /// both the header length and every shape's payload size are validated
-    /// against the actual file length before any allocation, so a corrupt
-    /// or truncated header fails fast instead of attempting an unbounded
-    /// (OOM-sized) allocation.
-    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
-        let mut f = std::fs::File::open(&path)
-            .with_context(|| format!("opening {:?}", path.as_ref()))?;
-        let flen = f.metadata()?.len();
-        let mut magic = [0u8; 4];
-        f.read_exact(&mut magic)?;
-        if &magic != MAGIC {
-            bail!("not an adapprox checkpoint");
-        }
-        let mut v4 = [0u8; 4];
-        f.read_exact(&mut v4)?;
-        let version = u32::from_le_bytes(v4);
-        if version != VERSION {
-            bail!("unsupported checkpoint version {version}");
-        }
-        let mut l8 = [0u8; 8];
-        f.read_exact(&mut l8)?;
-        // magic + version + header-length prefix
-        const FIXED: u64 = 16;
-        let hlen64 = u64::from_le_bytes(l8);
-        if hlen64 > flen.saturating_sub(FIXED) {
-            bail!(
-                "corrupt checkpoint: header length {hlen64} exceeds file \
-                 size {flen}"
-            );
-        }
-        let hlen = hlen64 as usize;
-        let mut hbuf = vec![0u8; hlen];
-        f.read_exact(&mut hbuf)?;
-        let header = Json::parse(std::str::from_utf8(&hbuf)?)
-            .map_err(|e| anyhow!("checkpoint header: {e}"))?;
-        let config = header
-            .get("config")
-            .and_then(|j| j.as_str())
-            .ok_or_else(|| anyhow!("header missing config"))?
-            .to_string();
-        let step = header
-            .get("step")
-            .and_then(|j| j.as_usize())
-            .ok_or_else(|| anyhow!("header missing step"))?;
-        let optimizer = header
-            .get("optimizer")
-            .and_then(|j| j.as_str())
-            .unwrap_or("unknown")
-            .to_string();
-        let shapes = header
-            .get("shapes")
-            .and_then(|j| j.as_arr())
-            .ok_or_else(|| anyhow!("header missing shapes"))?;
-        let mut params = Vec::with_capacity(shapes.len());
-        let mut remaining = flen - FIXED - hlen64;
-        for s in shapes {
-            let shape: Vec<usize> = s
-                .as_arr()
+/// Shapes of a tensor list as the header's array-of-arrays encoding.
+fn shapes_json(params: &[Tensor]) -> Json {
+    Json::Arr(
+        params
+            .iter()
+            .map(|t| {
+                Json::Arr(
+                    t.shape.iter().map(|&d| Json::num(d as f64)).collect(),
+                )
+            })
+            .collect(),
+    )
+}
+
+/// Parse an array-of-arrays shape list out of a header field.
+fn parse_shapes(header: &Json, key: &str) -> Result<Vec<Vec<usize>>> {
+    header
+        .get(key)
+        .and_then(|j| j.as_arr())
+        .ok_or_else(|| anyhow!("header missing {key}"))?
+        .iter()
+        .map(|s| {
+            s.as_arr()
                 .ok_or_else(|| anyhow!("bad shape"))?
                 .iter()
                 .map(|d| {
@@ -174,38 +93,478 @@ impl Checkpoint {
                         anyhow!("corrupt checkpoint: bad shape dim")
                     })
                 })
-                .collect::<Result<_>>()?;
-            let n = shape
-                .iter()
-                .try_fold(1usize, |acc, &d| acc.checked_mul(d))
-                .ok_or_else(|| {
-                    anyhow!("corrupt checkpoint: shape {shape:?} overflows")
-                })?;
-            let need = (n as u64).checked_mul(4).ok_or_else(|| {
+                .collect::<Result<Vec<usize>>>()
+        })
+        .collect()
+}
+
+/// Write one complete ADPX container (magic, version, header, payloads) to
+/// `path` and fsync it. No rename — callers stage and rename themselves.
+fn write_adpx_to(path: &Path, header: &str, params: &[Tensor]) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {path:?}"))?;
+    let write = |f: &mut std::fs::File| -> Result<()> {
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&(header.len() as u64).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for t in params {
+            let data = t.as_f32()?;
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(
+                    data.as_ptr() as *const u8,
+                    data.len() * 4,
+                )
+            };
+            f.write_all(bytes)?;
+        }
+        f.sync_all()?;
+        Ok(())
+    };
+    let res = write(&mut f);
+    drop(f);
+    if let Err(e) = res {
+        std::fs::remove_file(path).ok();
+        return Err(e);
+    }
+    Ok(())
+}
+
+/// Atomic single-file write: stage at a sibling temp path, rename into
+/// place only after every byte (and an fsync) landed.
+fn write_adpx(path: &Path, header: &str, params: &[Tensor]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let tmp = tmp_path(path);
+    write_adpx_to(&tmp, header, params)?;
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        // don't leak the (complete but unreachable) temp file when the
+        // final path is unwritable — e.g. replaced by a directory
+        std::fs::remove_file(&tmp).ok();
+        return Err(e)
+            .with_context(|| format!("renaming {tmp:?} to {path:?}"));
+    }
+    Ok(())
+}
+
+/// Read one ADPX container: returns (header, params). Header-declared
+/// sizes are *not* trusted: both the header length and every shape's
+/// payload size are validated against the actual file length before any
+/// allocation, so a corrupt or truncated file fails fast instead of
+/// attempting an unbounded (OOM-sized) allocation.
+fn read_adpx(path: &Path) -> Result<(Json, Vec<Tensor>)> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {path:?}"))?;
+    let flen = f.metadata()?.len();
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not an adapprox checkpoint");
+    }
+    let mut v4 = [0u8; 4];
+    f.read_exact(&mut v4)?;
+    let version = u32::from_le_bytes(v4);
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let mut l8 = [0u8; 8];
+    f.read_exact(&mut l8)?;
+    // magic + version + header-length prefix
+    const FIXED: u64 = 16;
+    let hlen64 = u64::from_le_bytes(l8);
+    if hlen64 > flen.saturating_sub(FIXED) {
+        bail!(
+            "corrupt checkpoint: header length {hlen64} exceeds file \
+             size {flen}"
+        );
+    }
+    let hlen = hlen64 as usize;
+    let mut hbuf = vec![0u8; hlen];
+    f.read_exact(&mut hbuf)?;
+    let header = Json::parse(std::str::from_utf8(&hbuf)?)
+        .map_err(|e| anyhow!("checkpoint header: {e}"))?;
+    let shapes = parse_shapes(&header, "shapes")?;
+    let mut params = Vec::with_capacity(shapes.len());
+    let mut remaining = flen - FIXED - hlen64;
+    for shape in shapes {
+        let n = shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .ok_or_else(|| {
                 anyhow!("corrupt checkpoint: shape {shape:?} overflows")
             })?;
-            if need > remaining {
-                bail!(
-                    "corrupt or truncated checkpoint: shape {shape:?} \
-                     declares {need} payload bytes but only {remaining} \
-                     remain in the file"
-                );
-            }
-            remaining -= need;
-            let mut buf = vec![0u8; n * 4];
-            f.read_exact(&mut buf)?;
-            let mut data = vec![0.0f32; n];
-            for (i, ch) in buf.chunks_exact(4).enumerate() {
-                data[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
-            }
-            params.push(Tensor::f32(shape, data));
+        let need = (n as u64).checked_mul(4).ok_or_else(|| {
+            anyhow!("corrupt checkpoint: shape {shape:?} overflows")
+        })?;
+        if need > remaining {
+            bail!(
+                "corrupt or truncated checkpoint: shape {shape:?} \
+                 declares {need} payload bytes but only {remaining} \
+                 remain in the file"
+            );
         }
+        remaining -= need;
+        let mut buf = vec![0u8; n * 4];
+        f.read_exact(&mut buf)?;
+        let mut data = vec![0.0f32; n];
+        for (i, ch) in buf.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+        }
+        params.push(Tensor::f32(shape, data));
+    }
+    Ok((header, params))
+}
+
+/// Required usize header field.
+fn header_usize(header: &Json, key: &str) -> Result<usize> {
+    header
+        .get(key)
+        .and_then(|j| j.as_usize())
+        .ok_or_else(|| anyhow!("header missing {key}"))
+}
+
+impl Checkpoint {
+    /// The common header fields, plus any `extra` (shard bookkeeping).
+    fn header(&self, shapes: Json, extra: Vec<(&str, Json)>) -> String {
+        let mut fields = vec![
+            ("config", Json::str(&self.config)),
+            ("step", Json::num(self.step as f64)),
+            ("optimizer", Json::str(&self.optimizer)),
+            ("shapes", shapes),
+        ];
+        fields.extend(extra);
+        Json::obj(fields).to_string()
+    }
+
+    /// Serialize to `path` atomically: the bytes go to a sibling temp file
+    /// which is renamed into place only after every write (and an fsync)
+    /// succeeded. A crash mid-write leaves at worst a stale temp file —
+    /// never a truncated checkpoint at the final path, so the previous
+    /// checkpoint survives any interrupted save.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let header = self.header(shapes_json(&self.params), vec![]);
+        write_adpx(path.as_ref(), &header, &self.params)
+    }
+
+    /// The files shard `r` of generation `gen` lives in: a sibling of the
+    /// head named `<file name>.shard<r>of<R>.g<gen>`.
+    fn shard_file_path(
+        head: &Path,
+        r: usize,
+        shards: usize,
+        gen: &str,
+    ) -> PathBuf {
+        let fname = head
+            .file_name()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "checkpoint".into());
+        head.with_file_name(format!("{fname}.shard{r}of{shards}.g{gen}"))
+    }
+
+    /// The shard files the head at `path` references, in shard order
+    /// (derived from the head's `shards` + `shard_gen` header fields;
+    /// existence is not checked). Errors when `path` is not a sharded
+    /// checkpoint head.
+    pub fn shard_files(path: impl AsRef<Path>) -> Result<Vec<PathBuf>> {
+        let path = path.as_ref();
+        let (header, _) = read_adpx(path)?;
+        let shards = header
+            .get("shards")
+            .and_then(|j| j.as_usize())
+            .ok_or_else(|| {
+                anyhow!("{path:?} is not a sharded checkpoint head")
+            })?;
+        let gen = header
+            .get("shard_gen")
+            .and_then(|j| j.as_str())
+            .ok_or_else(|| {
+                anyhow!("sharded checkpoint head missing shard_gen")
+            })?;
+        Ok((0..shards)
+            .map(|r| Self::shard_file_path(path, r, shards, gen))
+            .collect())
+    }
+
+    /// Remove shard files of superseded generations (best effort) — every
+    /// sibling named `<head>.shard…` that does not carry `keep_suffix`.
+    fn gc_stale_shards(head: &Path, keep_suffix: &str) {
+        let fname = match head.file_name() {
+            Some(s) => s.to_string_lossy().into_owned(),
+            None => return,
+        };
+        let prefix = format!("{fname}.shard");
+        let dir = match head.parent() {
+            Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+            _ => PathBuf::from("."),
+        };
+        let Ok(entries) = std::fs::read_dir(dir) else { return };
+        for e in entries.flatten() {
+            let name = e.file_name().to_string_lossy().into_owned();
+            if name.starts_with(&prefix) && !name.ends_with(keep_suffix) {
+                std::fs::remove_file(e.path()).ok();
+            }
+        }
+    }
+
+    /// Serialize as an `R`-shard checkpoint: a head file at `path` (no
+    /// payload; declares `shards`, the generation tag and the full shape
+    /// list) plus one file per shard holding its owned parameters under
+    /// the contiguous ZeRO-1 plan ([`shard_ranges`] by element count —
+    /// the same plan the sharded optimizer and the memory accounting
+    /// use).
+    ///
+    /// Crash safety: this save's shard files are written under a fresh
+    /// generation tag, so the generation the current head references is
+    /// never touched; the head's atomic temp+fsync+rename is the single
+    /// publication point. A crash before it leaves the previous
+    /// checkpoint fully loadable (at worst with stale extra files, which
+    /// the next successful save garbage-collects); an explicit failure
+    /// also rolls this generation's files back immediately. Concurrent
+    /// saves to the *same* path are not supported (the GC of one save
+    /// may collect the other's staging files).
+    pub fn save_sharded(
+        &self,
+        path: impl AsRef<Path>,
+        shards: usize,
+    ) -> Result<()> {
+        let path = path.as_ref();
+        let shards = shards.max(1);
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let numels: Vec<usize> =
+            self.params.iter().map(|t| t.numel()).collect();
+        let plan = shard_ranges(&numels, shards);
+        let gen = format!(
+            "{}-{}",
+            std::process::id(),
+            SAVE_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        );
+        // every path this save has created so far; all removed on any
+        // failure, so the previous checkpoint is left fully intact
+        let mut created: Vec<PathBuf> = Vec::new();
+        let fail = |created: &[PathBuf], e: anyhow::Error| -> anyhow::Error {
+            for p in created {
+                std::fs::remove_file(p).ok();
+            }
+            e
+        };
+        for (r, range) in plan.iter().enumerate() {
+            let owned = &self.params[range.clone()];
+            let header = self.header(
+                shapes_json(owned),
+                vec![
+                    ("shard", Json::num(r as f64)),
+                    ("shards", Json::num(shards as f64)),
+                    ("offset", Json::num(range.start as f64)),
+                    ("shard_gen", Json::str(&gen)),
+                ],
+            );
+            let fin = Self::shard_file_path(path, r, shards, &gen);
+            let tmp = tmp_path(&fin);
+            if let Err(e) = write_adpx_to(&tmp, &header, owned) {
+                return Err(fail(&created, e));
+            }
+            created.push(tmp.clone());
+            if let Err(e) = std::fs::rename(&tmp, &fin) {
+                let e = anyhow::Error::from(e)
+                    .context(format!("renaming {tmp:?} to {fin:?}"));
+                return Err(fail(&created, e));
+            }
+            created.pop();
+            created.push(fin);
+        }
+        // the head publishes the new generation — atomically, last
+        let head_header = self.header(
+            Json::Arr(vec![]),
+            vec![
+                ("shards", Json::num(shards as f64)),
+                ("shard_gen", Json::str(&gen)),
+                ("full_shapes", shapes_json(&self.params)),
+            ],
+        );
+        let head_tmp = tmp_path(path);
+        if let Err(e) = write_adpx_to(&head_tmp, &head_header, &[]) {
+            return Err(fail(&created, e));
+        }
+        created.push(head_tmp.clone());
+        if let Err(e) = std::fs::rename(&head_tmp, path) {
+            let e = anyhow::Error::from(e)
+                .context(format!("renaming {head_tmp:?} to {path:?}"));
+            return Err(fail(&created, e));
+        }
+        // durable now: drop whatever the replaced head referenced
+        Self::gc_stale_shards(path, &format!(".g{gen}"));
+        Ok(())
+    }
+
+    /// Build a `Checkpoint` from a parsed single-file container.
+    fn from_parts(header: Json, params: Vec<Tensor>) -> Result<Checkpoint> {
+        let config = header
+            .get("config")
+            .and_then(|j| j.as_str())
+            .ok_or_else(|| anyhow!("header missing config"))?
+            .to_string();
+        let step = header_usize(&header, "step")?;
+        let optimizer = header
+            .get("optimizer")
+            .and_then(|j| j.as_str())
+            .unwrap_or("unknown")
+            .to_string();
         Ok(Checkpoint {
             config,
             step,
             optimizer,
             params,
         })
+    }
+
+    /// Deserialize a plain (single-file) checkpoint from `path`. Fails
+    /// with a pointed message when handed a sharded head or a single
+    /// shard file — use [`Checkpoint::load_auto`] to accept both layouts.
+    pub fn load(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let path = path.as_ref();
+        let (header, params) = read_adpx(path)?;
+        if header.get("shard").is_some() {
+            bail!(
+                "{path:?} is one shard of a sharded checkpoint — load its \
+                 head file (the path without the .shard<r>of<R> suffix)"
+            );
+        }
+        if header.get("shards").is_some() {
+            bail!(
+                "{path:?} is a sharded checkpoint head — use \
+                 Checkpoint::load_sharded / load_auto"
+            );
+        }
+        Self::from_parts(header, params)
+    }
+
+    /// Load an `R`-shard checkpoint headed at `path`, merging the shard
+    /// files back into one full parameter list (so the result restores
+    /// into runs with any shard count, including unsharded). Every
+    /// failure mode is a clean error before any partial state escapes:
+    /// missing shard file, truncated/corrupt shard payload, shard-count
+    /// or config/step mismatch between head and shards, wrong offsets,
+    /// and shapes that disagree with the head's declared inventory.
+    pub fn load_sharded(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let path = path.as_ref();
+        let (header, head_params) = read_adpx(path)?;
+        let shards = header.get("shards").and_then(|j| j.as_usize()).ok_or_else(
+            || anyhow!("{path:?} is not a sharded checkpoint head"),
+        )?;
+        if header.get("shard").is_some() {
+            bail!(
+                "{path:?} is one shard of a sharded checkpoint — load its \
+                 head file (the path without the .shard<r>of<R> suffix)"
+            );
+        }
+        if shards == 0 {
+            bail!("corrupt sharded checkpoint head: zero shards");
+        }
+        if !head_params.is_empty() {
+            bail!("corrupt sharded checkpoint head: unexpected payload");
+        }
+        let head = Self::from_parts(header.clone(), vec![])?;
+        let gen = header
+            .get("shard_gen")
+            .and_then(|j| j.as_str())
+            .ok_or_else(|| {
+                anyhow!("sharded checkpoint head missing shard_gen")
+            })?
+            .to_string();
+        let full_shapes = parse_shapes(&header, "full_shapes")?;
+        let mut params: Vec<Tensor> = Vec::with_capacity(full_shapes.len());
+        for r in 0..shards {
+            let sp = Self::shard_file_path(path, r, shards, &gen);
+            if !sp.exists() {
+                bail!(
+                    "sharded checkpoint {path:?} is missing shard file \
+                     {sp:?}"
+                );
+            }
+            let (sh, sparams) = read_adpx(&sp)
+                .with_context(|| format!("loading shard {r} ({sp:?})"))?;
+            let s_shard = header_usize(&sh, "shard")?;
+            let s_shards = header_usize(&sh, "shards")?;
+            if s_shard != r || s_shards != shards {
+                bail!(
+                    "shard-count mismatch: {sp:?} declares shard {s_shard} \
+                     of {s_shards}, head declares {shards} shards"
+                );
+            }
+            let s_gen = sh
+                .get("shard_gen")
+                .and_then(|j| j.as_str())
+                .unwrap_or_default();
+            let s_config = sh
+                .get("config")
+                .and_then(|j| j.as_str())
+                .unwrap_or_default();
+            let s_step = header_usize(&sh, "step")?;
+            if s_config != head.config || s_step != head.step || s_gen != gen
+            {
+                bail!(
+                    "shard {r} does not match the head (config {s_config:?} \
+                     step {s_step} gen {s_gen:?} vs {:?} step {} gen \
+                     {gen:?} — interrupted save?)",
+                    head.config,
+                    head.step
+                );
+            }
+            let offset = header_usize(&sh, "offset")?;
+            if offset != params.len() {
+                bail!(
+                    "shard {r} declares parameter offset {offset}, expected \
+                     {}",
+                    params.len()
+                );
+            }
+            params.extend(sparams);
+        }
+        if params.len() != full_shapes.len() {
+            bail!(
+                "sharded checkpoint {path:?} merges to {} parameters but \
+                 the head declares {}",
+                params.len(),
+                full_shapes.len()
+            );
+        }
+        for (i, (t, s)) in params.iter().zip(&full_shapes).enumerate() {
+            if &t.shape != s {
+                bail!(
+                    "sharded checkpoint param {i} has shape {:?} but the \
+                     head declares {s:?}",
+                    t.shape
+                );
+            }
+        }
+        Ok(Checkpoint {
+            params,
+            ..head
+        })
+    }
+
+    /// Load either layout: a sharded head (header field `shards`) is
+    /// merged via [`Checkpoint::load_sharded`]; anything else loads as a
+    /// plain checkpoint.
+    pub fn load_auto(path: impl AsRef<Path>) -> Result<Checkpoint> {
+        let path = path.as_ref();
+        let (header, params) = read_adpx(path)?;
+        if header.get("shards").is_some() && header.get("shard").is_none() {
+            drop(params);
+            Self::load_sharded(path)
+        } else {
+            if header.get("shard").is_some() {
+                bail!(
+                    "{path:?} is one shard of a sharded checkpoint — load \
+                     its head file (the path without the .shard<r>of<R> \
+                     suffix)"
+                );
+            }
+            Self::from_parts(header, params)
+        }
     }
 }
 
@@ -217,6 +576,19 @@ mod tests {
     fn tmp(name: &str) -> std::path::PathBuf {
         std::env::temp_dir()
             .join(format!("adapprox_ckpt_{name}_{}", std::process::id()))
+    }
+
+    fn ck(step: usize, rng: &mut Rng) -> Checkpoint {
+        Checkpoint {
+            config: "nano".into(),
+            step,
+            optimizer: "adapprox(native)".into(),
+            params: vec![
+                Tensor::f32(vec![4, 3], rng.normal_vec_f32(12)),
+                Tensor::f32(vec![7], rng.normal_vec_f32(7)),
+                Tensor::f32(vec![2, 5], rng.normal_vec_f32(10)),
+            ],
+        }
     }
 
     #[test]
@@ -352,6 +724,128 @@ mod tests {
             })
             .collect();
         assert!(leftovers.is_empty(), "temp files left: {leftovers:?}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn sharded_roundtrip_any_shard_count() {
+        let mut rng = Rng::new(5);
+        let orig = ck(9, &mut rng);
+        for shards in [1usize, 2, 3, 5] {
+            let dir = std::env::temp_dir().join(format!(
+                "adapprox_ckpt_shrt{shards}_{}",
+                std::process::id()
+            ));
+            std::fs::create_dir_all(&dir).unwrap();
+            let p = dir.join("model.ckpt");
+            orig.save_sharded(&p, shards).unwrap();
+            // both the explicit and the dispatching loader merge shards
+            for back in
+                [Checkpoint::load_sharded(&p), Checkpoint::load_auto(&p)]
+            {
+                let back = back.unwrap();
+                assert_eq!(back.config, orig.config, "shards={shards}");
+                assert_eq!(back.step, orig.step);
+                assert_eq!(back.optimizer, orig.optimizer);
+                assert_eq!(back.params, orig.params, "shards={shards}");
+            }
+            std::fs::remove_dir_all(dir).ok();
+        }
+    }
+
+    #[test]
+    fn load_auto_accepts_plain_checkpoints() {
+        let mut rng = Rng::new(6);
+        let orig = ck(3, &mut rng);
+        let p = tmp("auto_plain");
+        orig.save(&p).unwrap();
+        let back = Checkpoint::load_auto(&p).unwrap();
+        assert_eq!(back.params, orig.params);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn plain_load_refuses_sharded_files_with_pointed_errors() {
+        let mut rng = Rng::new(7);
+        let orig = ck(4, &mut rng);
+        let dir = std::env::temp_dir().join(format!(
+            "adapprox_ckpt_refuse_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("model.ckpt");
+        orig.save_sharded(&p, 2).unwrap();
+        let err = Checkpoint::load(&p).unwrap_err();
+        assert!(err.to_string().contains("sharded"), "{err}");
+        let sp = Checkpoint::shard_files(&p).unwrap()[0].clone();
+        let err = Checkpoint::load(&sp).unwrap_err();
+        assert!(err.to_string().contains("shard"), "{err}");
+        let err = Checkpoint::load_auto(&sp).unwrap_err();
+        assert!(err.to_string().contains("head file"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn sharded_save_is_atomic_replace_and_gcs_old_generations() {
+        // overwriting a sharded checkpoint in place: the new generation's
+        // files are staged and the head renamed last; afterwards the
+        // merge loads the new step, no temp files linger, and the old
+        // generation's shard files have been garbage-collected
+        let mut rng = Rng::new(8);
+        let dir = std::env::temp_dir().join(format!(
+            "adapprox_ckpt_shatomic_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("model.ckpt");
+        ck(1, &mut rng).save_sharded(&p, 2).unwrap();
+        let gen1_files = Checkpoint::shard_files(&p).unwrap();
+        let b = ck(2, &mut rng);
+        b.save_sharded(&p, 2).unwrap();
+        let back = Checkpoint::load_auto(&p).unwrap();
+        assert_eq!(back.step, 2);
+        assert_eq!(back.params, b.params);
+        for old in &gen1_files {
+            assert!(!old.exists(), "stale generation left: {old:?}");
+        }
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect();
+        assert!(
+            !names.iter().any(|n| n.contains(".tmp")),
+            "temp files left: {names:?}"
+        );
+        // exactly head + the 2 current-generation shard files remain
+        assert_eq!(names.len(), 3, "{names:?}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn sharded_shard_files_follow_the_optimizer_plan() {
+        // the file split must agree with optim::shard_ranges over the
+        // same element counts — one source of truth for ownership
+        let mut rng = Rng::new(9);
+        let orig = ck(1, &mut rng);
+        let dir = std::env::temp_dir().join(format!(
+            "adapprox_ckpt_plan_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("model.ckpt");
+        orig.save_sharded(&p, 2).unwrap();
+        let numels: Vec<usize> =
+            orig.params.iter().map(|t| t.numel()).collect();
+        let plan = shard_ranges(&numels, 2);
+        let files = Checkpoint::shard_files(&p).unwrap();
+        for (r, range) in plan.iter().enumerate() {
+            let (sh, sparams) = read_adpx(&files[r]).unwrap();
+            assert_eq!(header_usize(&sh, "offset").unwrap(), range.start);
+            assert_eq!(sparams.len(), range.len());
+            assert_eq!(sparams, orig.params[range.clone()].to_vec());
+        }
         std::fs::remove_dir_all(dir).ok();
     }
 }

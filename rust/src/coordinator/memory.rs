@@ -6,8 +6,50 @@
 //! manifest — no training required. The same accounting runs live against
 //! `Optimizer::state_bytes()` during training (asserted equal in tests).
 
-use crate::optim::OptKind;
-use crate::runtime::ConfigSpec;
+use crate::optim::{shard_ranges, OptKind};
+use crate::runtime::{ConfigSpec, ParamSpec};
+
+/// Bytes of optimizer state for one parameter.
+pub fn param_state_bytes(
+    p: &ParamSpec,
+    kind: OptKind,
+    beta1_enabled: bool,
+    rank: RankPolicy,
+) -> u64 {
+    let numel = p.numel() as u64;
+    let first_moment = if beta1_enabled { numel } else { 0 };
+    4 * match kind {
+        // AdamW always stores m (even at beta1=0, the reference impl
+        // keeps the buffer) + v
+        OptKind::AdamW => numel + numel,
+        OptKind::Adafactor => {
+            if p.is_matrix() {
+                let (m, n) = (p.shape[0] as u64, p.shape[1] as u64);
+                first_moment + m + n
+            } else {
+                first_moment + numel
+            }
+        }
+        OptKind::Came => {
+            // requires beta1 > 0; confidence factors double the 1-D stats
+            if p.is_matrix() {
+                let (m, n) = (p.shape[0] as u64, p.shape[1] as u64);
+                numel + 2 * (m + n)
+            } else {
+                numel + numel
+            }
+        }
+        OptKind::Adapprox => {
+            if p.is_matrix() {
+                let (m, n) = (p.shape[0] as u64, p.shape[1] as u64);
+                let k = rank.rank_for(p.shape[0].min(p.shape[1])) as u64;
+                first_moment + k * (m + n)
+            } else {
+                first_moment + numel
+            }
+        }
+    }
+}
 
 /// Bytes of optimizer state for a full parameter inventory.
 ///
@@ -20,43 +62,35 @@ pub fn state_bytes(
     beta1_enabled: bool,
     rank: RankPolicy,
 ) -> u64 {
-    let mut total: u64 = 0;
-    for p in &cfg.params {
-        let numel = p.numel() as u64;
-        let first_moment = if beta1_enabled { numel } else { 0 };
-        total += 4 * match kind {
-            // AdamW always stores m (even at beta1=0, the reference impl
-            // keeps the buffer) + v
-            OptKind::AdamW => numel + numel,
-            OptKind::Adafactor => {
-                if p.is_matrix() {
-                    let (m, n) = (p.shape[0] as u64, p.shape[1] as u64);
-                    first_moment + m + n
-                } else {
-                    first_moment + numel
-                }
-            }
-            OptKind::Came => {
-                // requires beta1 > 0; confidence factors double the 1-D stats
-                if p.is_matrix() {
-                    let (m, n) = (p.shape[0] as u64, p.shape[1] as u64);
-                    numel + 2 * (m + n)
-                } else {
-                    numel + numel
-                }
-            }
-            OptKind::Adapprox => {
-                if p.is_matrix() {
-                    let (m, n) = (p.shape[0] as u64, p.shape[1] as u64);
-                    let k = rank.rank_for(p.shape[0].min(p.shape[1])) as u64;
-                    first_moment + k * (m + n)
-                } else {
-                    first_moment + numel
-                }
-            }
-        };
-    }
-    total
+    cfg.params
+        .iter()
+        .map(|p| param_state_bytes(p, kind, beta1_enabled, rank))
+        .sum()
+}
+
+/// Per-shard optimizer-state bytes under the contiguous ZeRO-1 plan
+/// (`optim::shard_ranges` over the same inventory the sharded optimizer
+/// partitions) — entry s is the optimizer footprint replica s would
+/// actually materialize when training with `--shards N`. Sums to
+/// [`state_bytes`] exactly, so the paper's Table-2-style claims extend to
+/// the sharded regime by dividing through.
+pub fn shard_state_bytes(
+    cfg: &ConfigSpec,
+    kind: OptKind,
+    beta1_enabled: bool,
+    rank: RankPolicy,
+    shards: usize,
+) -> Vec<u64> {
+    let numels: Vec<usize> = cfg.params.iter().map(|p| p.numel()).collect();
+    shard_ranges(&numels, shards)
+        .into_iter()
+        .map(|r| {
+            cfg.params[r]
+                .iter()
+                .map(|p| param_state_bytes(p, kind, beta1_enabled, rank))
+                .sum()
+        })
+        .collect()
 }
 
 /// Adapprox rank policy for the accounting.
@@ -89,11 +123,17 @@ pub struct MemoryRow {
     pub pct_of_adamw: f64,
 }
 
-/// Build the full Table 2 for one config (both β₁ regimes).
-pub fn memory_table(cfg: &ConfigSpec, k_init: usize, kmax_frac: f64) -> Vec<MemoryRow> {
+/// Shared Table-2 row structure over an arbitrary pricing function (whole
+/// inventory for [`memory_table`], max single shard for
+/// [`memory_table_sharded`]).
+fn table_rows(
+    k_init: usize,
+    kmax_frac: f64,
+    price: impl Fn(OptKind, bool, RankPolicy) -> u64,
+) -> Vec<MemoryRow> {
     let mut rows = Vec::new();
     for &beta1 in &[true, false] {
-        let adamw = state_bytes(cfg, OptKind::AdamW, beta1, RankPolicy::Init(1));
+        let adamw = price(OptKind::AdamW, beta1, RankPolicy::Init(1));
         let mut push = |label: String, bytes: Option<u64>| {
             rows.push(MemoryRow {
                 label,
@@ -107,30 +147,59 @@ pub fn memory_table(cfg: &ConfigSpec, k_init: usize, kmax_frac: f64) -> Vec<Memo
         push(format!("{tag} adamw"), Some(adamw));
         push(
             format!("{tag} adafactor"),
-            Some(state_bytes(cfg, OptKind::Adafactor, beta1,
-                             RankPolicy::Init(1))),
+            Some(price(OptKind::Adafactor, beta1, RankPolicy::Init(1))),
         );
         push(
             format!("{tag} came"),
             if beta1 {
-                Some(state_bytes(cfg, OptKind::Came, beta1,
-                                 RankPolicy::Init(1)))
+                Some(price(OptKind::Came, beta1, RankPolicy::Init(1)))
             } else {
                 None // CAME undefined at beta1 = 0 (paper's dash)
             },
         );
         push(
             format!("{tag} adapprox(k_init)"),
-            Some(state_bytes(cfg, OptKind::Adapprox, beta1,
-                             RankPolicy::Init(k_init))),
+            Some(price(OptKind::Adapprox, beta1, RankPolicy::Init(k_init))),
         );
         push(
             format!("{tag} adapprox(k_max)"),
-            Some(state_bytes(cfg, OptKind::Adapprox, beta1,
-                             RankPolicy::MaxFrac(kmax_frac))),
+            Some(price(
+                OptKind::Adapprox,
+                beta1,
+                RankPolicy::MaxFrac(kmax_frac),
+            )),
         );
     }
     rows
+}
+
+/// Build the full Table 2 for one config (both β₁ regimes).
+pub fn memory_table(cfg: &ConfigSpec, k_init: usize, kmax_frac: f64) -> Vec<MemoryRow> {
+    table_rows(k_init, kmax_frac, |kind, beta1, rank| {
+        state_bytes(cfg, kind, beta1, rank)
+    })
+}
+
+/// Table 2 priced per ZeRO-1 shard: each row's bytes are the **largest
+/// single-shard footprint** under an `shards`-way contiguous plan — what
+/// one data-parallel replica holds when the optimizer state is sharded.
+/// `pct_of_adamw` compares worst-case replica footprints: each
+/// optimizer's largest shard against *AdamW's own largest shard* (the
+/// plan is shared, but which shard is largest can differ per optimizer —
+/// factored state weights vectors more heavily than AdamW's dense
+/// moments do).
+pub fn memory_table_sharded(
+    cfg: &ConfigSpec,
+    k_init: usize,
+    kmax_frac: f64,
+    shards: usize,
+) -> Vec<MemoryRow> {
+    table_rows(k_init, kmax_frac, |kind, beta1, rank| {
+        shard_state_bytes(cfg, kind, beta1, rank, shards)
+            .into_iter()
+            .max()
+            .unwrap_or(0)
+    })
 }
 
 #[cfg(test)]
@@ -226,5 +295,92 @@ mod tests {
         let rows = memory_table(&toy_cfg(), 1, 0.25);
         let came0 = rows.iter().find(|r| r.label == "b1=0.0 came").unwrap();
         assert!(came0.pct_of_adamw.is_nan());
+    }
+
+    fn multi_cfg() -> ConfigSpec {
+        let params = vec![
+            ParamSpec {
+                name: "w0".into(),
+                shape: vec![64, 32],
+                kind: "matrix".into(),
+            },
+            ParamSpec {
+                name: "b0".into(),
+                shape: vec![32],
+                kind: "vector".into(),
+            },
+            ParamSpec {
+                name: "w1".into(),
+                shape: vec![32, 48],
+                kind: "matrix".into(),
+            },
+            ParamSpec {
+                name: "b1".into(),
+                shape: vec![48],
+                kind: "vector".into(),
+            },
+        ];
+        ConfigSpec {
+            name: "multi".into(),
+            vocab: 8,
+            n_layer: 1,
+            d_model: 32,
+            n_head: 1,
+            seq_len: 4,
+            batch: 1,
+            inventory_only: true,
+            param_count: params.iter().map(|p| p.numel()).sum(),
+            params,
+        }
+    }
+
+    #[test]
+    fn shard_bytes_partition_the_total() {
+        let cfg = multi_cfg();
+        for kind in [OptKind::AdamW, OptKind::Adafactor, OptKind::Adapprox] {
+            for shards in [1usize, 2, 3, 4, 7] {
+                let per = shard_state_bytes(&cfg, kind, true,
+                                            RankPolicy::Init(1), shards);
+                assert_eq!(per.len(), shards, "{kind:?}");
+                assert_eq!(
+                    per.iter().sum::<u64>(),
+                    state_bytes(&cfg, kind, true, RankPolicy::Init(1)),
+                    "{kind:?} shards={shards}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sharding_shrinks_the_per_replica_footprint() {
+        let cfg = multi_cfg();
+        let total = state_bytes(&cfg, OptKind::AdamW, true,
+                                RankPolicy::Init(1));
+        let per = shard_state_bytes(&cfg, OptKind::AdamW, true,
+                                    RankPolicy::Init(1), 2);
+        let max = per.iter().copied().max().unwrap();
+        assert!(max < total, "max shard {max} vs total {total}");
+        // roughly balanced on this inventory: the bigger shard holds less
+        // than 80% of the state
+        assert!(max * 10 < total * 8, "max shard {max} vs total {total}");
+    }
+
+    #[test]
+    fn sharded_table_matches_unsharded_at_one_shard() {
+        let cfg = multi_cfg();
+        let a = memory_table(&cfg, 1, 0.25);
+        let b = memory_table_sharded(&cfg, 1, 0.25, 1);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.bytes, y.bytes, "{}", x.label);
+        }
+        // and at 2 shards every priced row shrinks
+        let c = memory_table_sharded(&cfg, 1, 0.25, 2);
+        for (x, y) in a.iter().zip(&c) {
+            if x.bytes > 0 {
+                assert!(y.bytes < x.bytes, "{}", x.label);
+            }
+        }
     }
 }

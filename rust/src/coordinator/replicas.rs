@@ -1,4 +1,4 @@
-//! Data-parallel replica simulation + gradient all-reduce.
+//! Data-parallel replica simulation + the bucketed gradient reduce.
 //!
 //! The paper trains on 8 V100s with Megatron data parallelism. On this
 //! single-core CPU testbed we keep the *coordinator code path* identical —
@@ -7,15 +7,81 @@
 //! on the host thread (PJRT executables are not Send, and with one core
 //! true thread parallelism buys nothing; the arithmetic is exactly the
 //! same). See DESIGN.md §4.
+//!
+//! The reduce is structured as a **bucketed reduce-scatter + all-gather**
+//! rather than a per-tensor clone loop: the flattened gradient space is
+//! chopped into fixed-size buckets ([`BUCKET_ELEMS`]), each bucket is
+//! reduced across all replicas by exactly one [`Pool`] worker (that's the
+//! scatter — disjoint workers own disjoint slices of the reduction, the
+//! same ownership structure a multi-host ZeRO reduce-scatter has), and the
+//! all-gather is implicit because every bucket writes straight into shared
+//! host output tensors. Every element accumulates its replicas in ascending
+//! order 0, 1, …, R−1 before one scale by 1/R, so the result is **bitwise
+//! identical to the serial mean for any bucket size and thread count**.
+//! Output tensors are reused across steps via [`allreduce_mean_into`]
+//! (`Workspace`-style: the steady-state reduce allocates nothing but the
+//! small bucket descriptor list).
 
 use anyhow::{bail, Result};
 
 use crate::runtime::Tensor;
+use crate::util::pool::Pool;
 
-/// Average gradients across replicas (all-reduce mean).
+/// Elements per reduce bucket — the scatter granularity. Small enough that
+/// a typical model yields far more buckets than threads (good balance),
+/// large enough that one bucket amortizes its scheduling overhead.
+const BUCKET_ELEMS: usize = 1 << 15;
+
+/// One bucket of the reduce-scatter: a contiguous element range of one
+/// output tensor plus the matching source slice from every replica. Owned
+/// by exactly one worker; buckets are disjoint, so jobs mutate nothing
+/// shared.
+struct Bucket<'a> {
+    out: &'a mut [f32],
+    /// `srcs[r]` is replica r's slice for this element range.
+    srcs: Vec<&'a [f32]>,
+}
+
+/// Reduce one bucket: elementwise ascending-replica sum, then scale — the
+/// exact accumulation order of the serial mean.
+fn reduce_bucket(b: &mut Bucket, scale: f32) {
+    for (e, o) in b.out.iter_mut().enumerate() {
+        let mut acc = b.srcs[0][e];
+        for s in &b.srcs[1..] {
+            acc += s[e];
+        }
+        *o = acc * scale;
+    }
+}
+
+/// Average gradients across replicas (all-reduce mean), serial.
 ///
 /// `per_replica[r]` is replica r's gradient list in manifest order.
+/// Convenience wrapper over [`allreduce_mean_into`] with a fresh output
+/// and a single-threaded pool.
 pub fn allreduce_mean(per_replica: &[Vec<Tensor>]) -> Result<Vec<Tensor>> {
+    allreduce_mean_pooled(per_replica, &Pool::single())
+}
+
+/// [`allreduce_mean`] with the bucket reduction fanned out over `pool`.
+/// Bitwise identical to the serial path for any thread count.
+pub fn allreduce_mean_pooled(
+    per_replica: &[Vec<Tensor>],
+    pool: &Pool,
+) -> Result<Vec<Tensor>> {
+    let mut out = Vec::new();
+    allreduce_mean_into(per_replica, &mut out, pool)?;
+    Ok(out)
+}
+
+/// The allocation-free entry point: reduce into `out`, reusing its tensor
+/// allocations whenever the element counts line up (the steady-state case —
+/// gradient shapes never change across steps).
+pub fn allreduce_mean_into(
+    per_replica: &[Vec<Tensor>],
+    out: &mut Vec<Tensor>,
+    pool: &Pool,
+) -> Result<()> {
     if per_replica.is_empty() {
         bail!("no replicas");
     }
@@ -25,26 +91,66 @@ pub fn allreduce_mean(per_replica: &[Vec<Tensor>]) -> Result<Vec<Tensor>> {
             bail!("replica gradient count mismatch");
         }
     }
-    let scale = 1.0 / per_replica.len() as f32;
-    let mut out = Vec::with_capacity(n_params);
+    // Validate full shapes, not just flat lengths: two replicas holding
+    // transposed-but-equal-size gradients must fail loudly, not silently
+    // average elementwise garbage.
+    for (r, rep) in per_replica.iter().enumerate().skip(1) {
+        for i in 0..n_params {
+            if rep[i].shape != per_replica[0][i].shape {
+                bail!(
+                    "replica gradient shape mismatch at param {i}: replica \
+                     0 has {:?}, replica {r} has {:?}",
+                    per_replica[0][i].shape,
+                    rep[i].shape
+                );
+            }
+        }
+    }
+    // Source views up-front (also validates dtype before any work).
+    let mut srcs: Vec<Vec<&[f32]>> = Vec::with_capacity(n_params);
+    for i in 0..n_params {
+        let mut s = Vec::with_capacity(per_replica.len());
+        for rep in per_replica {
+            s.push(rep[i].as_f32()?);
+        }
+        srcs.push(s);
+    }
+    // (Re)shape `out`, reusing any same-size f32 allocation in place.
+    out.truncate(n_params);
     for i in 0..n_params {
         let shape = per_replica[0][i].shape.clone();
-        let mut acc = per_replica[0][i].as_f32()?.to_vec();
-        for r in &per_replica[1..] {
-            let g = r[i].as_f32()?;
-            if g.len() != acc.len() {
-                bail!("replica gradient shape mismatch at param {i}");
-            }
-            for (a, &b) in acc.iter_mut().zip(g) {
-                *a += b;
-            }
+        let numel = per_replica[0][i].numel();
+        let reusable = out
+            .get(i)
+            .is_some_and(|t| t.numel() == numel && t.as_f32().is_ok());
+        if reusable {
+            out[i].shape = shape;
+        } else if i < out.len() {
+            out[i] = Tensor::zeros(shape);
+        } else {
+            out.push(Tensor::zeros(shape));
         }
-        for a in acc.iter_mut() {
-            *a *= scale;
-        }
-        out.push(Tensor::f32(shape, acc));
     }
-    Ok(out)
+    // Reduce-scatter: build the disjoint bucket list, fan it out. The
+    // all-gather is the write into the shared output tensors.
+    let scale = 1.0 / per_replica.len() as f32;
+    let mut buckets: Vec<Bucket> = Vec::new();
+    for (i, t) in out.iter_mut().enumerate() {
+        let data: &mut [f32] = t.as_f32_mut()?;
+        for (bi, chunk) in data.chunks_mut(BUCKET_ELEMS).enumerate() {
+            let off = bi * BUCKET_ELEMS;
+            let take = chunk.len();
+            buckets.push(Bucket {
+                out: chunk,
+                srcs: srcs[i]
+                    .iter()
+                    .map(|s| &s[off..off + take])
+                    .collect(),
+            });
+        }
+    }
+    pool.run_each(&mut buckets, |b| reduce_bucket(b, scale));
+    Ok(())
 }
 
 /// Average a set of scalar losses.
@@ -114,8 +220,129 @@ mod tests {
     }
 
     #[test]
+    fn transposed_shapes_rejected() {
+        // regression: equal flat length, different shape — the old check
+        // compared only lengths and silently averaged garbage
+        let a = vec![Tensor::f32(vec![2, 3], vec![1.0; 6])];
+        let b = vec![Tensor::f32(vec![3, 2], vec![1.0; 6])];
+        let err = allreduce_mean(&[a, b]).unwrap_err();
+        assert!(err.to_string().contains("shape mismatch"), "{err}");
+    }
+
+    #[test]
+    fn pooled_reduce_bitwise_matches_serial() {
+        // the reduce-level acceptance bar: any thread count (and the
+        // bucketing itself) reproduces the serial mean exactly
+        forall(8, |rng| {
+            let n_params = 1 + rng.below(5) as usize;
+            let reps = 1 + rng.below(4) as usize;
+            let shapes: Vec<Vec<usize>> = (0..n_params)
+                .map(|_| match rng.below(3) {
+                    0 => vec![1 + rng.below(80) as usize],
+                    1 => vec![
+                        1 + rng.below(24) as usize,
+                        1 + rng.below(24) as usize,
+                    ],
+                    // cross BUCKET_ELEMS so multi-bucket tensors are hit
+                    _ => vec![40_000 + rng.below(9000) as usize],
+                })
+                .collect();
+            let gs: Vec<Vec<Tensor>> = (0..reps)
+                .map(|_| {
+                    shapes
+                        .iter()
+                        .map(|s| {
+                            let numel = s.iter().product();
+                            Tensor::f32(
+                                s.clone(),
+                                rng.normal_vec_f32(numel),
+                            )
+                        })
+                        .collect()
+                })
+                .collect();
+            let serial = allreduce_mean(&gs).unwrap();
+            for threads in [2usize, 4] {
+                let pooled =
+                    allreduce_mean_pooled(&gs, &Pool::new(threads))
+                        .unwrap();
+                assert_eq!(serial, pooled, "threads={threads}");
+            }
+        });
+    }
+
+    #[test]
+    fn into_reuses_buffers_across_shapes() {
+        let mut rng = Rng::new(41);
+        let mut out = Vec::new();
+        let pool = Pool::new(2);
+        // first shape set
+        let gs1: Vec<Vec<Tensor>> = (0..2)
+            .map(|_| {
+                vec![
+                    Tensor::f32(vec![8, 4], rng.normal_vec_f32(32)),
+                    Tensor::f32(vec![5], rng.normal_vec_f32(5)),
+                ]
+            })
+            .collect();
+        allreduce_mean_into(&gs1, &mut out, &pool).unwrap();
+        assert_eq!(out, allreduce_mean(&gs1).unwrap());
+        // same element counts, different shape: buffers reused, shape fixed
+        let gs2: Vec<Vec<Tensor>> = (0..2)
+            .map(|_| {
+                vec![
+                    Tensor::f32(vec![4, 8], rng.normal_vec_f32(32)),
+                    Tensor::f32(vec![5], rng.normal_vec_f32(5)),
+                ]
+            })
+            .collect();
+        allreduce_mean_into(&gs2, &mut out, &pool).unwrap();
+        assert_eq!(out, allreduce_mean(&gs2).unwrap());
+        assert_eq!(out[0].shape, vec![4, 8]);
+        // different sizes: buffers replaced, result still exact
+        let gs3: Vec<Vec<Tensor>> = (0..3)
+            .map(|_| vec![Tensor::f32(vec![7], rng.normal_vec_f32(7))])
+            .collect();
+        allreduce_mean_into(&gs3, &mut out, &pool).unwrap();
+        assert_eq!(out, allreduce_mean(&gs3).unwrap());
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn identical_replicas_equal_single_replica() {
+        // replica invariance: R identical gradient lists reduce to the
+        // single-replica values — bitwise for R = 2 ((x + x) · ½ is exact
+        // in IEEE-754), to tight tolerance for R = 3 and 4 (the sequential
+        // sum 3x = 2x + x can round)
+        let mut rng = Rng::new(43);
+        let g =
+            vec![Tensor::f32(vec![16, 3], rng.normal_vec_f32(48))];
+        let single = allreduce_mean(&[g.clone()]).unwrap();
+        let gs: Vec<Vec<Tensor>> = (0..2).map(|_| g.clone()).collect();
+        assert_eq!(allreduce_mean(&gs).unwrap(), single);
+        for reps in [3usize, 4] {
+            let gs: Vec<Vec<Tensor>> =
+                (0..reps).map(|_| g.clone()).collect();
+            let avg = allreduce_mean(&gs).unwrap();
+            for (a, b) in avg[0]
+                .as_f32()
+                .unwrap()
+                .iter()
+                .zip(single[0].as_f32().unwrap())
+            {
+                assert!(
+                    (a - b).abs() <= 1e-6 * b.abs().max(1.0),
+                    "reps={reps}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn loss_mean() {
         assert_eq!(mean_loss(&[1.0, 2.0, 3.0]), 2.0);
+        // pinned edge case: the empty loss list means "no replicas ran" —
+        // 0.0, never NaN
         assert_eq!(mean_loss(&[]), 0.0);
     }
 }

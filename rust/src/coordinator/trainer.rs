@@ -8,13 +8,16 @@ use std::rc::Rc;
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::metrics::{perplexity, CsvWriter, LossTracker};
-use crate::coordinator::replicas::{allreduce_mean, mean_loss};
+use crate::coordinator::replicas::{allreduce_mean_into, mean_loss};
 use crate::coordinator::schedule::LrSchedule;
 use crate::data::{Batch, BatchIterator, BigramCorpus, Split, Task};
 use crate::info;
 use crate::model;
-use crate::optim::{Hyper, NativeOptimizer, Optimizer, XlaOptimizer};
+use crate::optim::{
+    Hyper, NativeOptimizer, Optimizer, ShardedNativeOptimizer, XlaOptimizer,
+};
 use crate::runtime::{ConfigSpec, Runtime, Tensor};
+use crate::util::pool::Pool;
 use crate::util::rng::Rng;
 
 /// The pretraining corpus seed — fixed so every optimizer comparison sees
@@ -45,7 +48,13 @@ pub struct TrainOptions {
     /// worker threads for the native backend's per-tensor step loop
     /// (`NativeOptimizer::with_threads`); results are bitwise identical for
     /// any value. The HLO backend dispatches whole programs and ignores it.
+    /// Also sizes the pool of the bucketed gradient all-reduce.
     pub threads: usize,
+    /// ZeRO-1 optimizer-state shards for the native backend (`--shards`):
+    /// each shard owns a contiguous slice of the parameter list and holds
+    /// optimizer state only for its owned parameters. 1 = unsharded;
+    /// results are bitwise identical for any value. Requires `native`.
+    pub shards: usize,
 }
 
 impl Default for TrainOptions {
@@ -64,6 +73,7 @@ impl Default for TrainOptions {
             log_every: 10,
             native: false,
             threads: 1,
+            shards: 1,
         }
     }
 }
@@ -78,6 +88,18 @@ pub struct HistoryRow {
     pub mean_xi: f64,
     pub mean_rank: f64,
     pub state_mb: f64,
+    /// largest single-shard footprint (== `state_mb` unsharded) — what one
+    /// replica holds under `--shards`
+    pub max_shard_mb: f64,
+}
+
+/// Reusable gradient-reduce buffers: one per-replica micro-batch mean list
+/// plus the final cross-replica mean. After the first step the reduce makes
+/// no tensor-sized allocations.
+#[derive(Default)]
+struct ReduceBufs {
+    rep: Vec<Vec<Tensor>>,
+    out: Vec<Tensor>,
 }
 
 /// The coordinator.
@@ -90,6 +112,9 @@ pub struct Trainer {
     pub opts: TrainOptions,
     corpus: BigramCorpus,
     step: usize,
+    /// pool for the bucketed gradient all-reduce (width `opts.threads`)
+    reduce_pool: Pool,
+    reduce_bufs: ReduceBufs,
 }
 
 impl Trainer {
@@ -115,16 +140,36 @@ impl Trainer {
                 let rt = rt.clone();
                 move |m: usize, n: usize| rt.manifest.ladder(m, n).ok().cloned()
             };
-            Box::new(
-                NativeOptimizer::new(
-                    cfg.params.clone(),
-                    hyper,
-                    &ladders,
-                    opts.seed ^ 0x09,
-                )?
-                .with_threads(opts.threads),
-            )
+            if opts.shards > 1 {
+                Box::new(
+                    ShardedNativeOptimizer::new(
+                        cfg.params.clone(),
+                        hyper,
+                        &ladders,
+                        opts.seed ^ 0x09,
+                        opts.shards,
+                    )?
+                    .with_threads(opts.threads),
+                )
+            } else {
+                Box::new(
+                    NativeOptimizer::new(
+                        cfg.params.clone(),
+                        hyper,
+                        &ladders,
+                        opts.seed ^ 0x09,
+                    )?
+                    .with_threads(opts.threads),
+                )
+            }
         } else {
+            if opts.shards > 1 {
+                return Err(anyhow!(
+                    "--shards requires the native backend (--native): the \
+                     HLO path keeps optimizer state inside per-tensor \
+                     programs and cannot partition it"
+                ));
+            }
             Box::new(XlaOptimizer::new(
                 rt.clone(),
                 cfg.params.clone(),
@@ -137,6 +182,7 @@ impl Trainer {
         // The synthetic bigram language: vocab-sized, fixed by seed so every
         // optimizer comparison trains on the *same* task.
         let corpus = BigramCorpus::new(cfg.vocab, 4, CORPUS_SEED);
+        let reduce_pool = Pool::new(opts.threads);
         Ok(Trainer {
             rt,
             cfg,
@@ -146,6 +192,8 @@ impl Trainer {
             opts,
             corpus,
             step: 0,
+            reduce_pool,
+            reduce_bufs: ReduceBufs::default(),
         })
     }
 
@@ -211,16 +259,22 @@ impl Trainer {
     }
 
     /// One full optimizer step: replicas × grad-accum micro-batches,
-    /// all-reduce, optimizer update. Returns (train loss, step info).
+    /// bucketed all-reduce, optimizer update. Returns (train loss, step
+    /// info). Both reduce levels (micro-batch mean per replica, then
+    /// cross-replica mean) run through the pooled reduce-scatter path into
+    /// reused buffers — bitwise identical to the serial per-tensor mean.
     pub fn train_one_step(
         &mut self,
         its: &mut [BatchIterator],
     ) -> Result<(f32, crate::optim::StepInfo)> {
         self.step += 1;
         let lr = self.schedule.lr(self.step);
-        let mut rep_grads = Vec::with_capacity(its.len());
+        let mut bufs = std::mem::take(&mut self.reduce_bufs);
+        if bufs.rep.len() != its.len() {
+            bufs.rep.resize_with(its.len(), Vec::new);
+        }
         let mut losses = Vec::with_capacity(its.len());
-        for it in its.iter_mut() {
+        for (it, rep_out) in its.iter_mut().zip(bufs.rep.iter_mut()) {
             // gradient accumulation: mean over micro-batches
             let mut micro_grads = Vec::with_capacity(self.opts.grad_accum);
             let mut micro_losses = vec![];
@@ -230,11 +284,12 @@ impl Trainer {
                 micro_losses.push(loss);
                 micro_grads.push(grads);
             }
-            rep_grads.push(allreduce_mean(&micro_grads)?);
+            allreduce_mean_into(&micro_grads, rep_out, &self.reduce_pool)?;
             losses.push(mean_loss(&micro_losses));
         }
-        let grads = allreduce_mean(&rep_grads)?;
-        let info = self.opt.step(&mut self.params, &grads, lr)?;
+        allreduce_mean_into(&bufs.rep, &mut bufs.out, &self.reduce_pool)?;
+        let info = self.opt.step(&mut self.params, &bufs.out, lr)?;
+        self.reduce_bufs = bufs;
         Ok((mean_loss(&losses), info))
     }
 
@@ -268,7 +323,7 @@ impl Trainer {
             Some(p) => Some(CsvWriter::create(
                 p,
                 &["step", "lr", "train_loss", "val_loss", "val_ppl",
-                  "mean_xi", "mean_rank", "state_mb"],
+                  "mean_xi", "mean_rank", "state_mb", "max_shard_mb"],
             )?),
             None => None,
         };
@@ -300,6 +355,8 @@ impl Trainer {
                 mean_xi: sinfo.mean_xi,
                 mean_rank: sinfo.mean_rank,
                 state_mb: sinfo.state_bytes as f64 / (1024.0 * 1024.0),
+                max_shard_mb: sinfo.max_shard_bytes as f64
+                    / (1024.0 * 1024.0),
             };
             if let Some(csv) = csv.as_mut() {
                 csv.row(&[
@@ -311,11 +368,19 @@ impl Trainer {
                     row.mean_xi,
                     row.mean_rank,
                     row.state_mb,
+                    row.max_shard_mb,
                 ])?;
             }
             if t % self.opts.log_every == 0 || t == 1 || t == self.opts.steps {
+                // under --shards the headline number is what one replica
+                // holds, not the cluster-wide sum
+                let shard_note = if self.opts.shards > 1 {
+                    format!(" (shard {:.2}MB)", row.max_shard_mb)
+                } else {
+                    String::new()
+                };
                 info!(
-                    "step {t:>5} lr {:.2e} loss {:.4} (ema {:.4}) val {} xi {:.4} rank {:.1} state {:.2}MB",
+                    "step {t:>5} lr {:.2e} loss {:.4} (ema {:.4}) val {} xi {:.4} rank {:.1} state {:.2}MB{}",
                     row.lr,
                     row.train_loss,
                     tracker.smoothed(),
@@ -323,6 +388,7 @@ impl Trainer {
                     row.mean_xi,
                     row.mean_rank,
                     row.state_mb,
+                    shard_note,
                 );
             }
             history.push(row);

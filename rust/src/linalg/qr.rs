@@ -156,6 +156,27 @@ mod tests {
     }
 
     #[test]
+    fn qr_reconstructs_input_on_random_sizes() {
+        // the full factorization law behind the reduce path: with
+        // R := QᵀA (upper-triangular up to float noise for MGS), QR ≈ A —
+        // on random (m, c) with A full column rank almost surely
+        forall(24, |rng| {
+            // aspect ratio ≥ 2 keeps random Gaussian panels well
+            // conditioned, so the f32 tolerance holds for every seed
+            let m = 8 + rng.below(92) as usize;
+            let c = 1 + rng.below(8.min(m as u64 / 2)) as usize;
+            let a = Mat::randn(m, c, rng);
+            let q = mgs_qr(&a);
+            let r = q.t_matmul(&a);
+            let qr = q.matmul(&r);
+            let rel = a.sub(&qr).frob_norm() / a.frob_norm().max(1e-12);
+            assert!(rel < 1e-3, "m={m} c={c}: |A - QR|/|A| = {rel}");
+            // and Q stays orthonormal on the same draw
+            assert!(gram_err(&q) < 1e-3, "m={m} c={c}");
+        });
+    }
+
+    #[test]
     fn rank_deficient_stays_finite() {
         let mut rng = Rng::new(4);
         let col = Mat::randn(16, 1, &mut rng);

@@ -362,6 +362,33 @@ mod tests {
     }
 
     #[test]
+    fn xi_non_increasing_in_iteration_count() {
+        // Alg. 1's convergence law: with the sketch Ω held fixed, more
+        // power iterations can only sharpen the captured subspace, so the
+        // rank-k truncation error ξ is non-increasing in l (up to float
+        // noise on clustered spectra — hence the small slack factor)
+        forall(12, |rng| {
+            let m = 24 + rng.below(40) as usize;
+            let n = 24 + rng.below(40) as usize;
+            let k = 1 + rng.below(6.min(m.min(n) as u64 / 2)) as usize;
+            let a = lowrank_nonneg(m, n, k + 2, 0.05, rng);
+            let kp = (k + 5).min(m.min(n));
+            let omega = Mat::randn(n, kp, rng);
+            let xis: Vec<f64> = [1usize, 3, 6, 10]
+                .iter()
+                .map(|&l| srsi_with_omega(&a, &omega, k, l).xi)
+                .collect();
+            for w in xis.windows(2) {
+                assert!(
+                    w[1] <= w[0] * 1.05 + 1e-6,
+                    "m={m} n={n} k={k}: xi grew with more iterations: \
+                     {xis:?}"
+                );
+            }
+        });
+    }
+
+    #[test]
     fn error_decreases_with_rank() {
         let mut rng = Rng::new(3);
         let a = lowrank_nonneg(96, 96, 16, 0.05, &mut rng);
@@ -528,6 +555,41 @@ mod tests {
             dense.xi,
             fact.xi
         );
+    }
+
+    #[test]
+    fn factored_within_tolerance_of_dense_on_random_shapes() {
+        // srsi_factored must track the dense S-RSI applied to the same
+        // rank-(k0+1) surrogate across random (m, n, k0, k, seed): same
+        // Ω, same l, same MGS — only the product factorization differs,
+        // so the reconstructions agree to float tolerance
+        forall(10, |rng| {
+            let m = 16 + rng.below(48) as usize;
+            let n = 16 + rng.below(48) as usize;
+            let k0 = 1 + rng.below(4) as usize;
+            let k = 1 + rng.below(k0 as u64 + 1) as usize; // k ≤ k0 + 1
+            let (q0, u0, g) = factored_target(m, n, k0, rng);
+            let beta2 = 0.999f32;
+            let vt = dense_surrogate(&q0, &u0, &g, beta2);
+            let kp = (k + 5).min(m.min(n));
+            let omega = Mat::randn(n, kp, rng);
+            let dense = srsi_with_omega(&vt, &omega, k, 5);
+            let fact = srsi_factored(&q0, &u0, &g.data, beta2, &omega, k, 5);
+            let rd = dense.q.matmul_t(&dense.u);
+            let rf = fact.q.matmul_t(&fact.u);
+            let denom = vt.frob_norm().max(1e-12);
+            let rel = rd.sub(&rf).frob_norm() / denom;
+            assert!(
+                rel < 5e-3,
+                "m={m} n={n} k0={k0} k={k}: recon mismatch rel={rel}"
+            );
+            assert!(
+                (dense.xi - fact.xi).abs() < 5e-2,
+                "m={m} n={n} k0={k0} k={k}: xi dense {} vs factored {}",
+                dense.xi,
+                fact.xi
+            );
+        });
     }
 
     #[test]

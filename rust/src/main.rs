@@ -69,6 +69,8 @@ fn print_help() {
          [--checkpoint PATH]\n\
          \u{20}          [--native (+ --threads N --fast-srsi: the \
          parallel compute core)]\n\
+         \u{20}          [--shards N (ZeRO-1 optimizer-state shards; \
+         needs --native; sharded checkpoints)]\n\
          eval      --checkpoint PATH [--eval-batches N]\n\
          finetune  --checkpoint PATH --task 0..4 --steps N --lr F\n\
          memory    print Table 2 (exact analytic over GPT-2 inventories)\n\
@@ -117,6 +119,7 @@ fn train_options(args: &Args) -> Result<TrainOptions> {
         log_every: args.usize_or("log-every", (steps / 20).max(1))?,
         native: args.has("native"),
         threads: args.usize_or("threads", 1)?,
+        shards: args.usize_or("shards", 1)?,
     })
 }
 
@@ -140,14 +143,23 @@ fn cmd_train(args: &Args) -> Result<()> {
         rt.stats().exec_seconds,
     );
     if let Some(p) = args.flag("checkpoint") {
-        Checkpoint {
+        let ck = Checkpoint {
             config: config.to_string(),
             step: tr.step_count(),
             optimizer: tr.opt.name(),
             params: tr.params.clone(),
+        };
+        if tr.opts.shards > 1 {
+            // per-shard files + head; restores into any shard count
+            ck.save_sharded(p, tr.opts.shards)?;
+            println!(
+                "sharded checkpoint ({} shards) saved to {p}",
+                tr.opts.shards
+            );
+        } else {
+            ck.save(p)?;
+            println!("checkpoint saved to {p}");
         }
-        .save(p)?;
-        println!("checkpoint saved to {p}");
     }
     Ok(())
 }
@@ -156,7 +168,8 @@ fn load_into_trainer(args: &Args, rt: Rc<Runtime>) -> Result<Trainer> {
     let p = args
         .flag("checkpoint")
         .ok_or_else(|| anyhow!("--checkpoint required"))?;
-    let ck = Checkpoint::load(p)?;
+    // accepts plain and sharded checkpoints (shards are merged on load)
+    let ck = Checkpoint::load_auto(p)?;
     let h = hyper_from_args(args, &rt)?;
     let opts = train_options(args)?;
     let mut tr = Trainer::new(rt, &ck.config, h, opts)?;

@@ -21,9 +21,9 @@ pub mod workspace;
 pub mod xla_exec;
 
 pub use hyper::{Hyper, OptKind};
-pub use native::NativeOptimizer;
+pub use native::{NativeOptimizer, ShardedNativeOptimizer};
 pub use rank::{f_xi, RankController};
-pub use state::{OptimizerState, ParamState, StepInfo};
+pub use state::{shard_ranges, OptimizerState, ParamState, StepInfo};
 pub use workspace::Workspace;
 pub use xla_exec::{build_optimizer, XlaOptimizer};
 

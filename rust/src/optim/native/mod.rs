@@ -6,7 +6,9 @@
 //! same inputs and demands float-level agreement.
 
 mod optimizer;
+mod sharded;
 pub mod steps;
 
 pub use optimizer::NativeOptimizer;
+pub use sharded::ShardedNativeOptimizer;
 pub use steps::*;

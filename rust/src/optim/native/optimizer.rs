@@ -41,7 +41,7 @@ use crate::util::rng::Rng;
 /// Matrix element count below which a step never arms an intra-tensor
 /// pool: the pooled kernels spawn scoped threads per product, which only
 /// pays off once each tensor's per-product spans carry real work.
-const MIN_INTRA_ELEMS: usize = 1 << 16;
+pub(crate) const MIN_INTRA_ELEMS: usize = 1 << 16;
 
 /// Native-Rust optimizer over the full parameter set.
 pub struct NativeOptimizer {
@@ -59,9 +59,11 @@ pub struct NativeOptimizer {
 
 /// Reusable scratch for one worker: the step workspace plus the sketch Ω
 /// buffer (kept outside [`Workspace`] so Ω can be borrowed immutably while
-/// the workspace is borrowed mutably by the same step call).
+/// the workspace is borrowed mutably by the same step call). Shared with
+/// the ZeRO-1 sharded engine (`super::sharded`), which runs the exact same
+/// fan-out over shard-owned state.
 #[derive(Debug, Default)]
-struct WorkerCtx {
+pub(crate) struct WorkerCtx {
     ws: Workspace,
     omega: Mat,
     /// Intra-tensor pool slice for this worker's dense factorizations:
@@ -73,7 +75,7 @@ struct WorkerCtx {
 /// One parameter's slice of a step: everything the worker touches is owned
 /// by (or uniquely borrowed into) the job, so jobs are `Send` and mutate
 /// nothing shared.
-struct StepJob<'a> {
+pub(crate) struct StepJob<'a> {
     spec: &'a ParamSpec,
     st: &'a mut ParamState,
     rng: &'a mut Rng,
@@ -84,6 +86,152 @@ struct StepJob<'a> {
     rank: f64,
     retries: usize,
     is_matrix: bool,
+}
+
+/// Append one [`StepJob`] per parameter of a (sub)model, in slice order.
+/// The five input slices run in parallel (`specs[i]` ↔ `states[i]` ↔
+/// `rngs[i]` ↔ `params[i]` ↔ `grads[i]`); the sharded engine calls this
+/// once per shard with that shard's contiguous sub-slices, so the
+/// concatenated job list is identical to the unsharded one.
+pub(crate) fn build_jobs<'a>(
+    specs: &'a [ParamSpec],
+    states: &'a mut [ParamState],
+    rngs: &'a mut [Rng],
+    params: &'a mut [Tensor],
+    grads: &'a [Tensor],
+    jobs: &mut Vec<StepJob<'a>>,
+) -> Result<()> {
+    for (((spec, st), rng), (p, gt)) in specs
+        .iter()
+        .zip(states.iter_mut())
+        .zip(rngs.iter_mut())
+        .zip(params.iter_mut().zip(grads))
+    {
+        let g = gt.as_f32()?;
+        let w: &mut [f32] = p.as_f32_mut()?;
+        jobs.push(StepJob {
+            spec,
+            st,
+            rng,
+            w,
+            g,
+            xi: 0.0,
+            rank: 0.0,
+            retries: 0,
+            is_matrix: false,
+        });
+    }
+    Ok(())
+}
+
+/// Run one optimizer step's job list over the pool: the two-phase
+/// (matrices-then-vectors) fan-out with the adaptive thread-budget split.
+/// Jobs are sorted deterministically (stable, on spec kind and size), so
+/// for a given job list the schedule — and, because every pooled kernel is
+/// thread-count-independent, every result bit — is identical whatever
+/// `pool` width or prior `ctxs` contents the caller brings.
+pub(crate) fn fan_out_jobs(
+    h: &Hyper,
+    t: usize,
+    lr: f32,
+    jobs: &mut [StepJob],
+    pool: &Pool,
+    ctxs: &mut Vec<WorkerCtx>,
+) {
+    // one scratch context per worker span: scratch memory is bounded by
+    // the pool width, not the parameter count
+    let spans = pool.threads().min(jobs.len()).max(1);
+    if ctxs.len() < spans {
+        ctxs.resize_with(spans, WorkerCtx::default);
+    }
+
+    // Two-phase fan-out: heavy (matrix) jobs first — largest first —
+    // then light vector jobs, so a span never serializes two dense
+    // factorizations while other workers idle on microsecond bias
+    // updates. Job order is deterministic (stable sort on spec kind
+    // and size), so results stay bitwise thread-count-independent.
+    jobs.sort_by_key(|j| {
+        (!j.spec.is_matrix(), std::cmp::Reverse(j.spec.numel()))
+    });
+    let n_mat = jobs.iter().take_while(|j| j.spec.is_matrix()).count();
+    let (mjobs, vjobs) = jobs.split_at_mut(n_mat);
+
+    if !mjobs.is_empty() {
+        // Adaptive thread-budget split: with matrices ≥ threads every
+        // inner pool is single-threaded — the classic per-tensor
+        // fan-out; with fewer matrices than workers (e.g. the
+        // Δs-synchronized refresh of a small model) the idle budget
+        // joins each dense factorization as intra-tensor row slices,
+        // each matrix in its own span aligned with its inner pool.
+        // `Pool::span_ranges` is the packing `run_units_ctx` will
+        // use; spans holding only tiny matrices count as light in
+        // `Pool::split_inner_weighted`, so their budget flows to the
+        // heavy factorizations instead of stranding (per-product
+        // spans must amortize the scoped-thread spawns). The split
+        // never affects results — every pooled kernel is bitwise
+        // thread-count-independent.
+        // a span is heavy only if one of its jobs will actually run
+        // the pooled dense path this step: an Adapprox matrix of
+        // pool-worthy size on a refresh step or with fast_srsi off —
+        // fast_srsi Keep steps run the factored iteration (serial by
+        // design) and Adafactor/CAME matrices never use the pool
+        let refresh_step = crate::optim::rank::is_refresh_step(t, h);
+        let pool_using = |j: &StepJob| {
+            j.spec.numel() >= MIN_INTRA_ELEMS
+                && matches!(*j.st, ParamState::Adapprox { .. })
+                && (refresh_step || !h.fast_srsi)
+        };
+        let heavy: Vec<bool> = pool
+            .span_ranges(mjobs.len())
+            .into_iter()
+            .map(|r| mjobs[r].iter().any(|j| pool_using(j)))
+            .collect();
+        let inners = pool.split_inner_weighted(&heavy);
+        let spans1 = inners.len();
+        for (ctx, inner) in ctxs.iter_mut().zip(inners) {
+            ctx.inner = inner;
+        }
+        pool.run_units_ctx(
+            mjobs,
+            1,
+            &mut ctxs[..spans1],
+            |ctx, _, span| {
+                for job in span.iter_mut() {
+                    NativeOptimizer::step_one(h, t, lr, job, ctx);
+                }
+            },
+        );
+    }
+    pool.run_units_ctx(vjobs, 1, ctxs, |ctx, _, span| {
+        for job in span.iter_mut() {
+            NativeOptimizer::step_one(h, t, lr, job, ctx);
+        }
+    });
+}
+
+/// Aggregate per-job telemetry into a [`StepInfo`] — in job (i.e. sorted)
+/// order, so sharded and unsharded steps sum the same floats in the same
+/// sequence. `state_bytes` is left 0 for the caller to fill once the job
+/// borrows are released.
+pub(crate) fn collect_info(t: usize, jobs: &[StepJob]) -> StepInfo {
+    let mut info = StepInfo {
+        step: t,
+        ..Default::default()
+    };
+    let mut n_matrix = 0usize;
+    for job in jobs {
+        if job.is_matrix {
+            n_matrix += 1;
+            info.mean_xi += job.xi;
+            info.mean_rank += job.rank;
+        }
+        info.rank_retries += job.retries;
+    }
+    if n_matrix > 0 {
+        info.mean_xi /= n_matrix as f64;
+        info.mean_rank /= n_matrix as f64;
+    }
+    info
 }
 
 impl NativeOptimizer {
@@ -388,119 +536,23 @@ impl Optimizer for NativeOptimizer {
         let t = self.state.step;
         let h = self.hyper.clone();
         let pool = self.pool.clone();
-        // one scratch context per worker span: scratch memory is bounded by
-        // the pool width, not the parameter count
-        let spans = pool.threads().min(self.specs.len()).max(1);
-        if self.ctxs.len() < spans {
-            self.ctxs.resize_with(spans, WorkerCtx::default);
-        }
 
-        // Build one job per parameter; gradients are borrowed, not copied.
+        // Build one job per parameter (gradients are borrowed, not
+        // copied), then run the shared two-phase fan-out.
         let mut jobs: Vec<StepJob> = Vec::with_capacity(self.specs.len());
-        for (((spec, st), rng), (p, gt)) in self
-            .specs
-            .iter()
-            .zip(self.state.states.iter_mut())
-            .zip(self.rngs.iter_mut())
-            .zip(params.iter_mut().zip(grads))
-        {
-            let g = gt.as_f32()?;
-            let w: &mut [f32] = p.as_f32_mut()?;
-            jobs.push(StepJob {
-                spec,
-                st,
-                rng,
-                w,
-                g,
-                xi: 0.0,
-                rank: 0.0,
-                retries: 0,
-                is_matrix: false,
-            });
-        }
-
-        // Two-phase fan-out: heavy (matrix) jobs first — largest first —
-        // then light vector jobs, so a span never serializes two dense
-        // factorizations while other workers idle on microsecond bias
-        // updates. Job order is deterministic (stable sort on spec kind
-        // and size), so results stay bitwise thread-count-independent.
-        jobs.sort_by_key(|j| {
-            (!j.spec.is_matrix(), std::cmp::Reverse(j.spec.numel()))
-        });
-        let n_mat = jobs.iter().take_while(|j| j.spec.is_matrix()).count();
-        let (mjobs, vjobs) = jobs.split_at_mut(n_mat);
-
-        if !mjobs.is_empty() {
-            // Adaptive thread-budget split: with matrices ≥ threads every
-            // inner pool is single-threaded — the classic per-tensor
-            // fan-out; with fewer matrices than workers (e.g. the
-            // Δs-synchronized refresh of a small model) the idle budget
-            // joins each dense factorization as intra-tensor row slices,
-            // each matrix in its own span aligned with its inner pool.
-            // `Pool::span_ranges` is the packing `run_units_ctx` will
-            // use; spans holding only tiny matrices count as light in
-            // `Pool::split_inner_weighted`, so their budget flows to the
-            // heavy factorizations instead of stranding (per-product
-            // spans must amortize the scoped-thread spawns). The split
-            // never affects results — every pooled kernel is bitwise
-            // thread-count-independent.
-            // a span is heavy only if one of its jobs will actually run
-            // the pooled dense path this step: an Adapprox matrix of
-            // pool-worthy size on a refresh step or with fast_srsi off —
-            // fast_srsi Keep steps run the factored iteration (serial by
-            // design) and Adafactor/CAME matrices never use the pool
-            let refresh_step =
-                crate::optim::rank::is_refresh_step(t, &h);
-            let pool_using = |j: &StepJob| {
-                j.spec.numel() >= MIN_INTRA_ELEMS
-                    && matches!(*j.st, ParamState::Adapprox { .. })
-                    && (refresh_step || !h.fast_srsi)
-            };
-            let heavy: Vec<bool> = pool
-                .span_ranges(mjobs.len())
-                .into_iter()
-                .map(|r| mjobs[r].iter().any(|j| pool_using(j)))
-                .collect();
-            let inners = pool.split_inner_weighted(&heavy);
-            let spans1 = inners.len();
-            for (ctx, inner) in self.ctxs.iter_mut().zip(inners) {
-                ctx.inner = inner;
-            }
-            pool.run_units_ctx(
-                mjobs,
-                1,
-                &mut self.ctxs[..spans1],
-                |ctx, _, span| {
-                    for job in span.iter_mut() {
-                        Self::step_one(&h, t, lr, job, ctx);
-                    }
-                },
-            );
-        }
-        pool.run_units_ctx(vjobs, 1, &mut self.ctxs, |ctx, _, span| {
-            for job in span.iter_mut() {
-                Self::step_one(&h, t, lr, job, ctx);
-            }
-        });
-
-        let mut info = StepInfo {
-            step: t,
-            ..Default::default()
-        };
-        let mut n_matrix = 0usize;
-        for job in &jobs {
-            if job.is_matrix {
-                n_matrix += 1;
-                info.mean_xi += job.xi;
-                info.mean_rank += job.rank;
-            }
-            info.rank_retries += job.retries;
-        }
-        if n_matrix > 0 {
-            info.mean_xi /= n_matrix as f64;
-            info.mean_rank /= n_matrix as f64;
-        }
+        build_jobs(
+            &self.specs,
+            &mut self.state.states,
+            &mut self.rngs,
+            params,
+            grads,
+            &mut jobs,
+        )?;
+        fan_out_jobs(&h, t, lr, &mut jobs, &pool, &mut self.ctxs);
+        let mut info = collect_info(t, &jobs);
+        drop(jobs); // release the state borrows before sizing the state
         info.state_bytes = self.state.bytes();
+        info.max_shard_bytes = info.state_bytes;
         Ok(info)
     }
 

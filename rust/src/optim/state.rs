@@ -123,6 +123,64 @@ impl ParamState {
     }
 }
 
+/// Contiguous ZeRO-1 partition of a parameter list into `shards` ranges,
+/// balanced by element count.
+///
+/// `numels[i]` is parameter i's element count. The returned ranges are
+/// contiguous, in order, and cover `0..numels.len()` exactly — shard s owns
+/// `specs[ranges[s]]`. Contiguity is what makes sharding transparent: the
+/// concatenation of the shards' parameter lists *is* the original manifest
+/// order, so a sharded step visits parameters (and their RNG streams) in
+/// exactly the unsharded order. The same function prices per-shard
+/// footprints in `coordinator::memory` and splits `Checkpoint::save_sharded`
+/// files, so the three layers always agree on ownership.
+///
+/// Balancing is greedy: each shard takes parameters while staying under
+/// `ceil(remaining_elems / remaining_shards)`, always takes at least one
+/// parameter when enough remain, and never starves a later shard (every
+/// shard is non-empty whenever `numels.len() >= shards`). Deterministic —
+/// no tie-breaking randomness anywhere.
+pub fn shard_ranges(
+    numels: &[usize],
+    shards: usize,
+) -> Vec<std::ops::Range<usize>> {
+    let shards = shards.max(1);
+    let n = numels.len();
+    let mut rem_total: u64 = numels.iter().map(|&x| x as u64).sum();
+    let mut out = Vec::with_capacity(shards);
+    let mut start = 0usize;
+    for s in 0..shards {
+        let rem_shards = shards - s;
+        let rem_params = n - start;
+        let end = if rem_shards == 1 {
+            n
+        } else if rem_params <= rem_shards {
+            // one parameter each until exhausted
+            start + rem_params.min(1)
+        } else {
+            let rs = rem_shards as u64;
+            let target = (rem_total + rs - 1) / rs;
+            let mut acc = numels[start] as u64;
+            let mut e = start + 1;
+            // keep taking while under target, leaving ≥1 param per later
+            // shard
+            while e < n
+                && n - e >= rem_shards
+                && acc + numels[e] as u64 <= target
+            {
+                acc += numels[e] as u64;
+                e += 1;
+            }
+            e
+        };
+        rem_total -=
+            numels[start..end].iter().map(|&x| x as u64).sum::<u64>();
+        out.push(start..end);
+        start = end;
+    }
+    out
+}
+
 /// Whole-model optimizer state.
 #[derive(Debug)]
 pub struct OptimizerState {
@@ -142,6 +200,9 @@ pub struct StepInfo {
     pub rank_retries: usize,
     /// optimizer state bytes after the step
     pub state_bytes: u64,
+    /// largest single-shard footprint: what one data-parallel replica
+    /// actually holds under ZeRO-1 sharding (== `state_bytes` unsharded)
+    pub max_shard_bytes: u64,
 }
 
 impl OptimizerState {
@@ -276,6 +337,67 @@ mod tests {
         let h = Hyper::paper_defaults(OptKind::Came, &hd());
         let s = ParamState::init(&mat(100, 60), &h, None);
         assert_eq!(s.bytes(), (100 * 60 + 2 * (100 + 60)) as u64 * 4);
+    }
+
+    #[test]
+    fn shard_ranges_partition_and_balance() {
+        use super::shard_ranges;
+        use crate::testing::forall;
+        forall(24, |rng| {
+            let n = 1 + rng.below(24) as usize;
+            let shards = 1 + rng.below(8) as usize;
+            let numels: Vec<usize> =
+                (0..n).map(|_| 1 + rng.below(4096) as usize).collect();
+            let plan = shard_ranges(&numels, shards);
+            // exactly `shards` contiguous in-order ranges covering 0..n
+            assert_eq!(plan.len(), shards);
+            let mut next = 0usize;
+            for r in &plan {
+                assert_eq!(r.start, next);
+                assert!(r.end >= r.start);
+                next = r.end;
+            }
+            assert_eq!(next, n);
+            // no shard starves while parameters remain
+            if n >= shards {
+                assert!(plan.iter().all(|r| !r.is_empty()), "{plan:?}");
+            }
+            // ownership sums to the whole model
+            let total: u64 = numels.iter().map(|&x| x as u64).sum();
+            let sum: u64 = plan
+                .iter()
+                .map(|r| {
+                    numels[r.clone()].iter().map(|&x| x as u64).sum::<u64>()
+                })
+                .sum();
+            assert_eq!(sum, total);
+            // deterministic
+            assert_eq!(plan, shard_ranges(&numels, shards));
+        });
+    }
+
+    #[test]
+    fn shard_ranges_single_shard_owns_everything() {
+        assert_eq!(shard_ranges(&[7, 3, 9], 1), vec![0..3]);
+        // shards.max(1): zero behaves like one
+        assert_eq!(shard_ranges(&[7, 3], 0), vec![0..2]);
+        // empty inventory: all shards empty
+        assert_eq!(shard_ranges(&[], 3), vec![0..0, 0..0, 0..0]);
+    }
+
+    #[test]
+    fn shard_ranges_balance_uniform_inventory() {
+        use super::shard_ranges;
+        // 8 equal params over 4 shards: exactly 2 each
+        let numels = vec![100usize; 8];
+        let plan = shard_ranges(&numels, 4);
+        assert!(plan.iter().all(|r| r.len() == 2), "{plan:?}");
+        // one giant param cannot be split: it lands on one shard, the
+        // rest share the remainder
+        let numels = vec![10, 10_000, 10, 10];
+        let plan = shard_ranges(&numels, 2);
+        assert_eq!(plan.iter().map(|r| r.len()).sum::<usize>(), 4);
+        assert!(plan.iter().all(|r| !r.is_empty()), "{plan:?}");
     }
 
     #[test]

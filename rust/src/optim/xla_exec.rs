@@ -442,6 +442,8 @@ impl Optimizer for XlaOptimizer {
             info.mean_rank /= n_matrix as f64;
         }
         info.state_bytes = self.state.bytes();
+        // the HLO backend never shards: one "shard" holds everything
+        info.max_shard_bytes = info.state_bytes;
         Ok(info)
     }
 

@@ -61,6 +61,7 @@ pub fn train_options(args: &Args, default_steps: usize) -> Result<TrainOptions> 
         log_every: (steps / 10).max(1),
         native: args.has("native"),
         threads: args.usize_or("threads", 1)?,
+        shards: args.usize_or("shards", 1)?,
     })
 }
 

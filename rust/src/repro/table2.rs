@@ -9,7 +9,7 @@
 use anyhow::Result;
 
 use crate::cli::Args;
-use crate::coordinator::memory::memory_table;
+use crate::coordinator::memory::{memory_table, memory_table_sharded};
 use crate::coordinator::CsvWriter;
 use crate::repro::common;
 use crate::util::fmt_mb;
@@ -82,6 +82,25 @@ pub fn run(args: &Args) -> Result<()> {
             ])?;
             println!("{:<28} {:>12} {:>10} {:>12}", r.label, mb, pct,
                      paper_mb);
+        }
+        // `memory --shards N`: the per-replica footprint under ZeRO-1
+        // sharding — largest single shard per optimizer row
+        let shards = args.usize_or("shards", 1)?;
+        if shards > 1 {
+            println!(
+                "\nTable 2 — {cfg_name} max per-shard state \
+                 (ZeRO-1, {shards} shards)"
+            );
+            println!("{:<28} {:>12} {:>10}", "optimizer", "MB/shard",
+                     "% adamw");
+            for r in memory_table_sharded(cfg, hd.k_init, 0.25, shards) {
+                let (mb, pct) = if r.pct_of_adamw.is_nan() {
+                    ("-".to_string(), "-".to_string())
+                } else {
+                    (fmt_mb(r.bytes), format!("{:.1}%", r.pct_of_adamw))
+                };
+                println!("{:<28} {:>12} {:>10}", r.label, mb, pct);
+            }
         }
     }
     csv.flush()?;

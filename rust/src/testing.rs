@@ -2,16 +2,21 @@
 //!
 //! A deliberately small API: [`forall`] runs a property under many seeded
 //! RNGs and, on failure, re-runs it to report the failing seed so the case
-//! is reproducible (`FORALL_SEED=<n>` pins a single case). Coordinator
-//! invariants (rank ladder, schedule, batching, state sizes) and linalg
-//! laws are tested through this.
+//! is reproducible (`FORALL_SEED=<n>` pins a single case;
+//! `FORALL_CASES=<n>` overrides every call's case count — CI runs the
+//! battery deeper than the local default). Coordinator invariants (rank
+//! ladder, schedule, batching, state sizes) and linalg laws are tested
+//! through this.
 
 use crate::util::rng::Rng;
 
 /// Run `prop` under `cases` independent seeded RNGs.
 ///
 /// Panics (with the seed) on the first failing case. Honouring the
-/// `FORALL_SEED` env var replays exactly one seed for debugging.
+/// `FORALL_SEED` env var replays exactly one seed for debugging;
+/// `FORALL_CASES` overrides `cases` globally (seeds are a deterministic
+/// function of the case index, so a deeper run is a strict superset of a
+/// shallower one).
 pub fn forall(cases: u64, mut prop: impl FnMut(&mut Rng)) {
     if let Ok(s) = std::env::var("FORALL_SEED") {
         let seed: u64 = s.parse().expect("FORALL_SEED must be u64");
@@ -19,6 +24,10 @@ pub fn forall(cases: u64, mut prop: impl FnMut(&mut Rng)) {
         prop(&mut rng);
         return;
     }
+    let cases = match std::env::var("FORALL_CASES") {
+        Ok(s) => s.parse().expect("FORALL_CASES must be u64"),
+        Err(_) => cases,
+    };
     for case in 0..cases {
         let seed = 0xF0A11u64.wrapping_mul(case + 1);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
@@ -77,9 +86,19 @@ mod tests {
 
     #[test]
     fn forall_runs_all_cases() {
-        let mut n = 0;
+        // the battery env vars change the expected count — account for
+        // them so this test holds locally AND under the CI bump
+        let want: u64 = if std::env::var("FORALL_SEED").is_ok() {
+            1
+        } else {
+            std::env::var("FORALL_CASES")
+                .ok()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(17)
+        };
+        let mut n = 0u64;
         forall(17, |_| n += 1);
-        assert_eq!(n, 17);
+        assert_eq!(n, want);
     }
 
     #[test]

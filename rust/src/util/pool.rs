@@ -157,6 +157,24 @@ impl Pool {
         });
     }
 
+    /// Process each item of `items` independently over the pool — the
+    /// common "bag of independent jobs" case ([`Pool::run_units`] with
+    /// `unit = 1` and a per-item callback). Each item is processed by
+    /// exactly one thread; `f` must not make item `i`'s result depend on
+    /// any other item, which keeps the usual bitwise thread-count
+    /// independence.
+    pub fn run_each<T, F>(&self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(&mut T) + Sync,
+    {
+        self.run_units(items, 1, |_, span| {
+            for item in span.iter_mut() {
+                f(item);
+            }
+        });
+    }
+
     /// [`Pool::run_units`] with a dedicated mutable context per span —
     /// the lock-free way to give each worker a reusable scratch arena.
     /// `ctxs` needs at least `min(threads, units)` entries; entry `i` is
@@ -372,6 +390,18 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn run_each_touches_every_item_once() {
+        for threads in [1, 2, 5] {
+            let pool = Pool::new(threads);
+            let mut items = vec![0u32; 23];
+            pool.run_each(&mut items, |v| *v += 1);
+            assert!(items.iter().all(|&v| v == 1), "threads={threads}");
+        }
+        let mut empty: Vec<u32> = vec![];
+        Pool::new(4).run_each(&mut empty, |_| panic!("no items expected"));
     }
 
     #[test]

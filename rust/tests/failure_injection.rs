@@ -1,11 +1,13 @@
 //! Failure-injection and contract tests: the coordinator must fail loudly
 //! and precisely on bad inputs, not deep inside XLA.
 
+use std::path::PathBuf;
 use std::rc::Rc;
 
 use adapprox::coordinator::{Checkpoint, TrainOptions, Trainer};
 use adapprox::optim::{Hyper, OptKind, XlaOptimizer};
 use adapprox::runtime::{ParamSpec, Runtime, Tensor};
+use adapprox::util::rng::Rng;
 
 fn runtime() -> Option<Rc<Runtime>> {
     let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
@@ -122,6 +124,150 @@ fn checkpoint_of_wrong_config_still_loads_but_mismatches() {
     tr.params = loaded.params;
     assert!(tr.evaluate(1).is_err());
     std::fs::remove_file(path).ok();
+}
+
+// ---------------------------------------------------------------------
+// Sharded-checkpoint failure injection (no artifacts needed): a missing
+// shard file, a truncated shard payload and a shard-count mismatch must
+// each fail cleanly at load — and none of them may damage the on-disk
+// files of an intact checkpoint saved before the corruption.
+
+/// A scratch dir + a 2-shard checkpoint saved in it, plus a pristine copy
+/// of every file for later diffing.
+fn sharded_fixture(name: &str) -> (PathBuf, PathBuf, Checkpoint) {
+    let dir = std::env::temp_dir().join(format!(
+        "adapprox_shfail_{name}_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut rng = Rng::new(0x5AD);
+    let ck = Checkpoint {
+        config: "micro".into(),
+        step: 11,
+        optimizer: "adapprox(native,zero1x2)".into(),
+        params: vec![
+            Tensor::f32(vec![12, 8], rng.normal_vec_f32(96)),
+            Tensor::f32(vec![30], rng.normal_vec_f32(30)),
+            Tensor::f32(vec![6, 9], rng.normal_vec_f32(54)),
+        ],
+    };
+    let head = dir.join("model.ckpt");
+    ck.save_sharded(&head, 2).unwrap();
+    Checkpoint::load_auto(&head).unwrap(); // sanity: intact merge works
+    (dir, head, ck)
+}
+
+/// Load must fail with a message containing `needle`; restoring the
+/// injected file's pristine bytes must then make the checkpoint load to
+/// the original params — i.e. the failure corrupted nothing else.
+fn assert_fails_then_recovers(
+    head: &std::path::Path,
+    ck: &Checkpoint,
+    needle: &str,
+    injected: &std::path::Path,
+    pristine_bytes: Vec<u8>,
+) {
+    let err = Checkpoint::load_auto(head).unwrap_err();
+    assert!(
+        format!("{err:#}").contains(needle),
+        "wanted {needle:?} in: {err:#}"
+    );
+    std::fs::write(injected, pristine_bytes).unwrap();
+    let back = Checkpoint::load_auto(head).unwrap();
+    assert_eq!(back.params, ck.params);
+    assert_eq!(back.step, ck.step);
+}
+
+#[test]
+fn sharded_checkpoint_missing_shard_fails_cleanly() {
+    let (dir, head, ck) = sharded_fixture("missing");
+    let victim = Checkpoint::shard_files(&head).unwrap()[1].clone();
+    let pristine = std::fs::read(&victim).unwrap();
+    std::fs::remove_file(&victim).unwrap();
+    let err = Checkpoint::load_auto(&head).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("missing shard"),
+        "{err:#}"
+    );
+    // the failure must not have touched the surviving files
+    std::fs::write(&victim, pristine).unwrap();
+    let back = Checkpoint::load_auto(&head).unwrap();
+    assert_eq!(back.params, ck.params);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn sharded_checkpoint_truncated_shard_fails_cleanly() {
+    let (dir, head, ck) = sharded_fixture("trunc");
+    let victim = Checkpoint::shard_files(&head).unwrap()[0].clone();
+    let pristine = std::fs::read(&victim).unwrap();
+    // cut inside the payload and inside the header
+    for cut in [pristine.len() - 7, 9] {
+        std::fs::write(&victim, &pristine[..cut]).unwrap();
+        assert!(
+            Checkpoint::load_auto(&head).is_err(),
+            "cut={cut} loaded anyway"
+        );
+    }
+    assert_fails_then_recovers(
+        &head,
+        &ck,
+        "shard",
+        &victim,
+        pristine,
+    );
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn sharded_checkpoint_shard_count_mismatch_fails_cleanly() {
+    let (dir, head, ck) = sharded_fixture("mismatch");
+    // build a 3-shard save of the same params under another head, then
+    // plant one of its shard files where the 2-shard layout expects its
+    // own — the shard's self-declared (shard, shards) must be caught
+    let other_head = dir.join("other.ckpt");
+    ck.save_sharded(&other_head, 3).unwrap();
+    let victim = Checkpoint::shard_files(&head).unwrap()[1].clone();
+    let pristine = std::fs::read(&victim).unwrap();
+    std::fs::copy(&Checkpoint::shard_files(&other_head).unwrap()[1], &victim)
+        .unwrap();
+    assert_fails_then_recovers(
+        &head,
+        &ck,
+        "mismatch",
+        &victim,
+        pristine,
+    );
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn sharded_checkpoint_stale_shard_from_older_save_detected() {
+    // simulates a crash between the renames of two saves: shard 1 still
+    // holds the *previous* step's payload — config/step cross-checks
+    // must refuse the frankenstein instead of merging silently
+    let (dir, head, ck) = sharded_fixture("stale");
+    let victim = Checkpoint::shard_files(&head).unwrap()[1].clone();
+    let pristine = std::fs::read(&victim).unwrap();
+    let older = Checkpoint {
+        step: ck.step - 1,
+        config: ck.config.clone(),
+        optimizer: ck.optimizer.clone(),
+        params: ck.params.clone(),
+    };
+    let older_head = dir.join("older.ckpt");
+    older.save_sharded(&older_head, 2).unwrap();
+    std::fs::copy(&Checkpoint::shard_files(&older_head).unwrap()[1], &victim)
+        .unwrap();
+    assert_fails_then_recovers(
+        &head,
+        &ck,
+        "does not match the head",
+        &victim,
+        pristine,
+    );
+    std::fs::remove_dir_all(dir).ok();
 }
 
 #[test]

@@ -87,6 +87,107 @@ fn replicas_match_bigger_batch_semantics() {
 }
 
 #[test]
+fn sharded_native_training_bitwise_matches_unsharded() {
+    // the trainer-level acceptance bar for the ZeRO-1 engine: with the
+    // native backend, every (shards, threads) combination — across 2
+    // data-parallel replicas and a refresh step — reproduces the
+    // unsharded single-threaded losses AND final weights exactly
+    let Some(rt) = runtime() else { return };
+    let hyper = Hyper::paper_defaults(OptKind::Adapprox, &rt.manifest.hyper);
+    let run = |shards: usize, threads: usize| {
+        let mut opts = quick_opts(6, 11);
+        opts.native = true;
+        opts.replicas = 2;
+        opts.shards = shards;
+        opts.threads = threads;
+        let mut tr =
+            Trainer::new(rt.clone(), "micro", hyper.clone(), opts).unwrap();
+        let hist = tr.run().unwrap();
+        let losses: Vec<f64> =
+            hist.iter().map(|r| r.train_loss).collect();
+        let xis: Vec<f64> = hist.iter().map(|r| r.mean_xi).collect();
+        let weights: Vec<Vec<f32>> = tr
+            .params
+            .iter()
+            .map(|p| p.as_f32().unwrap().to_vec())
+            .collect();
+        (losses, xis, weights)
+    };
+    let base = run(1, 1);
+    for (shards, threads) in [(1, 2), (2, 1), (2, 2), (4, 2)] {
+        let got = run(shards, threads);
+        assert_eq!(
+            base, got,
+            "diverged at shards={shards} threads={threads}"
+        );
+    }
+}
+
+#[test]
+fn sharded_training_reports_smaller_shard_footprint() {
+    let Some(rt) = runtime() else { return };
+    let hyper = Hyper::paper_defaults(OptKind::Adapprox, &rt.manifest.hyper);
+    let mut opts = quick_opts(2, 12);
+    opts.native = true;
+    opts.shards = 2;
+    let mut tr = Trainer::new(rt, "micro", hyper, opts).unwrap();
+    tr.run().unwrap();
+    assert!(tr.opt.state_bytes() > 0);
+    assert!(tr.opt.name().contains("zero1x2"), "{}", tr.opt.name());
+}
+
+#[test]
+fn shards_require_native_backend() {
+    let Some(rt) = runtime() else { return };
+    let hyper = Hyper::paper_defaults(OptKind::Adapprox, &rt.manifest.hyper);
+    let mut opts = quick_opts(1, 13);
+    opts.shards = 2; // no --native: must be a clean construction error
+    let err = match Trainer::new(rt, "micro", hyper, opts) {
+        Err(e) => e,
+        Ok(_) => panic!("expected --shards/--native error"),
+    };
+    assert!(err.to_string().contains("native"), "{err}");
+}
+
+#[test]
+fn sharded_checkpoint_roundtrips_through_training() {
+    // train sharded, save per-shard files, restore into an unsharded run:
+    // the merge path must hand back bit-identical parameters
+    let Some(rt) = runtime() else { return };
+    let hyper = Hyper::paper_defaults(OptKind::Adapprox, &rt.manifest.hyper);
+    let mut opts = quick_opts(5, 14);
+    opts.native = true;
+    opts.shards = 2;
+    opts.threads = 2;
+    let mut tr =
+        Trainer::new(rt.clone(), "micro", hyper.clone(), opts).unwrap();
+    tr.run().unwrap();
+    let dir = std::env::temp_dir().join(format!(
+        "adapprox_e2e_shck_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.ckpt");
+    Checkpoint {
+        config: "micro".into(),
+        step: tr.step_count(),
+        optimizer: tr.opt.name(),
+        params: tr.params.clone(),
+    }
+    .save_sharded(&path, 2)
+    .unwrap();
+    let ck = Checkpoint::load_auto(&path).unwrap();
+    assert_eq!(ck.params, tr.params);
+    // restores into an unsharded (HLO-backend) run
+    let mut tr2 =
+        Trainer::new(rt, "micro", hyper, quick_opts(1, 14)).unwrap();
+    tr2.params = ck.params;
+    let val = tr2.evaluate(1).unwrap();
+    assert!(val.is_finite());
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
 fn grad_accumulation_runs() {
     let Some(rt) = runtime() else { return };
     let hyper = Hyper::paper_defaults(OptKind::AdamW, &rt.manifest.hyper);
