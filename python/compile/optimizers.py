@@ -45,6 +45,30 @@ def _clip_by_rms(x, d):
     return x / jnp.maximum(1.0, _rms(x) / d)
 
 
+# Cap on the cosine-guidance amplification 1/(1 - theta + eps): theta -> 1
+# (update collinear with the first moment) would otherwise scale the step by
+# ~1/eps ~ 1e8, and float roundoff can push theta past 1.0 and flip the
+# update sign. Mirrors COS_SCALE_MAX in the Rust native backend.
+_COS_SCALE_MAX = 10.0
+
+
+def _cos_guidance_scale(upd, m_new, eps):
+    """Cosine-guidance scale (Eq. 17-18), clamped and capped.
+
+    theta is clamped to its mathematical range [-1, 1] and the scale bounded
+    to ``_COS_SCALE_MAX``, so the result is finite, strictly positive and
+    bounded for every input (the theta -> -1 side is naturally ~1/2).
+    """
+    dot = jnp.sum(upd.astype(jnp.float32) * m_new.astype(jnp.float32))
+    denom = (
+        jnp.linalg.norm(upd.astype(jnp.float32))
+        * jnp.linalg.norm(m_new.astype(jnp.float32))
+        + _TINY
+    )
+    theta = jnp.clip(dot / denom, -1.0, 1.0)
+    return jnp.minimum(1.0 / (1.0 - theta + eps), _COS_SCALE_MAX)
+
+
 # ---------------------------------------------------------------------------
 # Adapprox (paper Alg. 3)
 # ---------------------------------------------------------------------------
@@ -88,15 +112,9 @@ def adapprox_step(
     upd = upd / jnp.maximum(1.0, rms / d)
     # First moment = running average of updates (beta1 = 0 disables exactly).
     m_new = beta1 * m + (1.0 - beta1) * upd
-    # Optional cosine-similarity guidance (Eq. 17-18), applied to the update.
-    dot = jnp.sum(upd.astype(jnp.float32) * m_new.astype(jnp.float32))
-    denom = (
-        jnp.linalg.norm(upd.astype(jnp.float32))
-        * jnp.linalg.norm(m_new.astype(jnp.float32))
-        + _TINY
-    )
-    theta = dot / denom
-    guided = m_new / (1.0 - theta + eps)
+    # Optional cosine-similarity guidance (Eq. 17-18), applied to the update
+    # (clamped and capped -- see _cos_guidance_scale).
+    guided = m_new * _cos_guidance_scale(upd, m_new, eps)
     m_used = cos_flag * guided + (1.0 - cos_flag) * m_new
     # Decoupled weight decay (Eq. 2).
     w_new = w - lr * (m_used + wd * w)
@@ -124,14 +142,7 @@ def adapprox_step_fast(
     rms = jnp.sqrt(jnp.sum(tile_ss) / numel)
     upd = upd / jnp.maximum(1.0, rms / d)
     m_new = beta1 * m + (1.0 - beta1) * upd
-    dot = jnp.sum(upd.astype(jnp.float32) * m_new.astype(jnp.float32))
-    denom = (
-        jnp.linalg.norm(upd.astype(jnp.float32))
-        * jnp.linalg.norm(m_new.astype(jnp.float32))
-        + _TINY
-    )
-    theta = dot / denom
-    guided = m_new / (1.0 - theta + eps)
+    guided = m_new * _cos_guidance_scale(upd, m_new, eps)
     m_used = cos_flag * guided + (1.0 - cos_flag) * m_new
     w_new = w - lr * (m_used + wd * w)
     return w_new, m_new, q_new, u_new
@@ -164,14 +175,7 @@ def adapprox_apply(w, m, v, g, lr, beta1, eps, wd, d, cos_flag):
     rms = jnp.sqrt(jnp.sum(tile_ss) / numel)
     upd = upd / jnp.maximum(1.0, rms / d)
     m_new = beta1 * m + (1.0 - beta1) * upd
-    dot = jnp.sum(upd.astype(jnp.float32) * m_new.astype(jnp.float32))
-    denom = (
-        jnp.linalg.norm(upd.astype(jnp.float32))
-        * jnp.linalg.norm(m_new.astype(jnp.float32))
-        + _TINY
-    )
-    theta = dot / denom
-    guided = m_new / (1.0 - theta + eps)
+    guided = m_new * _cos_guidance_scale(upd, m_new, eps)
     m_used = cos_flag * guided + (1.0 - cos_flag) * m_new
     w_new = w - lr * (m_used + wd * w)
     return w_new, m_new

@@ -98,13 +98,36 @@ class TestAdapprox:
         assert float(jnp.sqrt(jnp.mean(m_big ** 2))) > r
 
     def test_cosine_guidance_amplifies_aligned_update(self, rng):
-        """theta ~= 1 when M aligns with the update => applied step grows
-        ~1/eps... bounded by (1 - theta + eps); compare w/ and w/o flag."""
+        """theta ~= 1 when M aligns with the update => the applied step is
+        amplified (now capped at _COS_SCALE_MAX, not the old unbounded
+        ~1/eps); compare w/ and w/o flag."""
         (w_on, *_), (w, g, hp) = self._step(rng, cos_flag=1.0, beta1=0.5)
         (w_off, *_), _ = self._step(rng, cos_flag=0.0, beta1=0.5)
         step_on = float(jnp.linalg.norm(w - w_on))
         step_off = float(jnp.linalg.norm(w - w_off))
         assert step_on > step_off, (step_on, step_off)
+
+    def test_cosine_guidance_scale_finite_positive_capped(self, rng):
+        """Regression for the guidance blow-up: the scale stays finite,
+        strictly positive and <= _COS_SCALE_MAX for collinear (theta = 1,
+        formerly ~1/eps ~ 1e8), anti-collinear (theta = -1, ~1/2 — never a
+        flipped sign) and zero-moment inputs. Mirrors the Rust
+        cosine_guidance_scale_finite_positive_capped test."""
+        eps = 1e-8
+        upd = _mk(rng, (64,), 0.01)
+        for m in (upd, -upd, jnp.zeros_like(upd), _mk(rng, (64,), 0.5)):
+            s = float(opt._cos_guidance_scale(upd, m, eps))
+            assert np.isfinite(s), s
+            assert 0.0 < s <= opt._COS_SCALE_MAX, s
+        # exactly collinear hits the cap (pre-fix: ~1/eps)
+        s = float(opt._cos_guidance_scale(upd, upd, eps))
+        assert s == pytest.approx(opt._COS_SCALE_MAX), s
+        # anti-collinear damps toward 1/2 and never flips the sign
+        s = float(opt._cos_guidance_scale(upd, -upd, eps))
+        assert 0.0 < s < 1.0, s
+        # zero moment: theta = 0 => scale ~= 1
+        s = float(opt._cos_guidance_scale(upd, jnp.zeros_like(upd), eps))
+        assert s == pytest.approx(1.0, rel=1e-5), s
 
     def test_factors_follow_second_moment(self, rng):
         """Q/U outputs reconstruct V: feed-forward consistency with srsi."""

@@ -2,20 +2,27 @@
 //! and the full coordinator step (fwd/bwd + all per-tensor optimizer
 //! programs) per config — the end-to-end numbers for EXPERIMENTS.md §Perf.
 //!
-//! The first two groups need no artifacts: the unsharded-vs-ZeRO-1 native
-//! step (sharding must be overhead-free — same jobs, same fan-out, state
-//! merely partitioned) and the serial-vs-pooled bucketed all-reduce. Both
-//! emit `BENCH_JSON` lines, so the sharded-path perf trajectory is tracked
-//! even on CI machines without an XLA toolchain.
+//! The artifact-free groups need no XLA toolchain: the
+//! unsharded-vs-ZeRO-1-vs-ZeRO-2 native step (sharding must be
+//! overhead-free — same jobs, same fan-out, state merely partitioned;
+//! ZeRO-2 additionally consumes per-shard owned gradient slices and
+//! reports peak resident averaged-gradient bytes per replica), the
+//! serial-vs-pooled bucketed all-reduce and the ZeRO-2 reduce-scatter
+//! counterpart. All emit `BENCH_JSON` lines, so the sharded-path perf
+//! trajectory is tracked even on CI machines without an XLA toolchain.
 
 use std::rc::Rc;
 
 use adapprox::bench::{header, Bench};
-use adapprox::coordinator::replicas::{allreduce_mean, allreduce_mean_pooled};
+use adapprox::coordinator::replicas::{
+    allreduce_mean, allreduce_mean_into, allreduce_mean_pooled,
+    reduce_scatter_into,
+};
 use adapprox::coordinator::{TrainOptions, Trainer};
 use adapprox::data::{BatchIterator, Split};
 use adapprox::optim::{
-    Hyper, NativeOptimizer, OptKind, Optimizer, ShardedNativeOptimizer,
+    shard_ranges, Hyper, NativeOptimizer, OptKind, Optimizer,
+    ShardedNativeOptimizer,
 };
 use adapprox::runtime::manifest::HyperDefaults;
 use adapprox::runtime::{Ladder, ParamSpec, Runtime, Tensor};
@@ -121,13 +128,72 @@ fn bench_sharded_native_step(b: &Bench) {
     }
 }
 
-/// Serial vs pooled bucketed all-reduce: 4 replicas × ~1.3M elements.
-fn bench_allreduce(b: &Bench) {
-    header("gradient all-reduce: per-tensor serial vs bucketed pooled");
+/// ZeRO-2 native step: the optimizer consumes per-shard owned gradient
+/// slices (as the trainer's reduce-scatter hands them over). Also reports
+/// the headline ZeRO-2 memory quantity: peak resident averaged-gradient
+/// bytes per replica, unsharded vs sharded.
+fn bench_zero2_native_step(b: &Bench) {
+    header("native optimizer step: ZeRO-2 sharded gradients (4 threads)");
+    let specs = bench_specs();
+    let h = Hyper::paper_defaults(OptKind::Adapprox, &hd());
+    let numels: Vec<usize> = specs.iter().map(|s| s.numel()).collect();
+    let total_bytes: u64 = numels.iter().map(|&n| 4 * n as u64).sum();
+    for shards in [2usize, 4] {
+        let mut opt = ShardedNativeOptimizer::new(
+            specs.clone(),
+            h.clone(),
+            &ladder,
+            7,
+            shards,
+        )
+        .unwrap()
+        .with_threads(4)
+        .with_zero_level(2);
+        let plan = opt.plan().to_vec();
+        let mut rng = Rng::new(11);
+        let mut params: Vec<Tensor> = specs
+            .iter()
+            .map(|s| {
+                Tensor::f32(s.shape.clone(), rng.normal_vec_f32(s.numel()))
+            })
+            .collect();
+        let grads: Vec<Tensor> = specs
+            .iter()
+            .map(|s| {
+                Tensor::f32(s.shape.clone(), rng.normal_vec_f32(s.numel()))
+            })
+            .collect();
+        let owned: Vec<Vec<Tensor>> = plan
+            .iter()
+            .map(|r| grads[r.clone()].to_vec())
+            .collect();
+        let max_shard_bytes: u64 = plan
+            .iter()
+            .map(|r| numels[r.clone()].iter().map(|&n| 4 * n as u64).sum())
+            .max()
+            .unwrap_or(0);
+        println!(
+            "  peak resident averaged-grad bytes/replica: unsharded \
+             {total_bytes} vs zero2x{shards} {max_shard_bytes} \
+             ({:.1}%)",
+            100.0 * max_shard_bytes as f64 / total_bytes as f64
+        );
+        b.run(&format!("native_step_zero2x{shards}_4t"), || {
+            std::hint::black_box(
+                opt.step_sharded_grads(&mut params, &owned, 1e-4).unwrap(),
+            );
+        });
+    }
+}
+
+/// The shared 4-replica × ~1.3M-element gradient set for the reduce
+/// benches — one construction so the all-reduce and reduce-scatter groups
+/// always measure the identical workload.
+fn reduce_bench_reps() -> Vec<Vec<Tensor>> {
     let mut rng = Rng::new(13);
     let shapes: Vec<Vec<usize>> =
         vec![vec![512, 640], vec![640, 512], vec![512, 512], vec![512]];
-    let reps: Vec<Vec<Tensor>> = (0..4)
+    (0..4)
         .map(|_| {
             shapes
                 .iter()
@@ -137,7 +203,34 @@ fn bench_allreduce(b: &Bench) {
                 })
                 .collect()
         })
-        .collect();
+        .collect()
+}
+
+/// The ZeRO-2 reduce-scatter vs the full all-reduce: 4 replicas × ~1.3M
+/// elements, 4-shard ownership plan, 4 threads — same bucketed reduction,
+/// but the scatter writes only each shard's owned slice.
+fn bench_reduce_scatter(b: &Bench) {
+    header("gradient reduce: all-reduce vs ZeRO-2 reduce-scatter (r=4)");
+    let reps = reduce_bench_reps();
+    let numels: Vec<usize> = reps[0].iter().map(|t| t.numel()).collect();
+    let plan = shard_ranges(&numels, 4);
+    let pool = Pool::new(4);
+    let mut full = Vec::new();
+    let mut owned = Vec::new();
+    b.run("allreduce_into_r4_1m3_4t", || {
+        allreduce_mean_into(&reps, &mut full, &pool).unwrap();
+        std::hint::black_box(&full);
+    });
+    b.run("reduce_scatter_vs_allreduce_r4", || {
+        reduce_scatter_into(&reps, &plan, &mut owned, &pool).unwrap();
+        std::hint::black_box(&owned);
+    });
+}
+
+/// Serial vs pooled bucketed all-reduce: 4 replicas × ~1.3M elements.
+fn bench_allreduce(b: &Bench) {
+    header("gradient all-reduce: per-tensor serial vs bucketed pooled");
+    let reps = reduce_bench_reps();
     b.run("allreduce_serial_r4_1m3", || {
         std::hint::black_box(allreduce_mean(&reps).unwrap());
     });
@@ -161,7 +254,9 @@ fn main() {
 
     // artifact-free groups first: these always run
     bench_sharded_native_step(&b);
+    bench_zero2_native_step(&b);
     bench_allreduce(&b);
+    bench_reduce_scatter(&b);
 
     let Ok(rt) = Runtime::new("artifacts") else {
         println!("run `make artifacts` for the PJRT train_step benches");

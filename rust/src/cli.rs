@@ -118,16 +118,18 @@ mod tests {
     fn parses_sharded_native_invocation() {
         // the ZeRO-1 training invocation: value flags need no registry
         let a = Args::parse(&argv(
-            "train --native --shards 2 --threads 2 --replicas 2",
+            "train --native --shards 2 --threads 2 --replicas 2 --zero 2",
         ))
         .unwrap();
         assert!(a.has("native"));
         assert_eq!(a.usize_or("shards", 1).unwrap(), 2);
         assert_eq!(a.usize_or("threads", 1).unwrap(), 2);
         assert_eq!(a.usize_or("replicas", 1).unwrap(), 2);
-        // default when absent
+        assert_eq!(a.usize_or("zero", 1).unwrap(), 2);
+        // defaults when absent
         let b = Args::parse(&argv("train --native")).unwrap();
         assert_eq!(b.usize_or("shards", 1).unwrap(), 1);
+        assert_eq!(b.usize_or("zero", 1).unwrap(), 1);
     }
 
     #[test]

@@ -286,8 +286,37 @@ impl Checkpoint {
             .collect())
     }
 
+    /// True iff `name` matches the exact shard-file pattern
+    /// [`Checkpoint::shard_file_path`] produces for this head:
+    /// `<prefix><r>of<R>.g<gen>` with numeric `r`/`R` and a non-empty
+    /// generation tag (`prefix` is `<head name>.shard`). The GC only ever
+    /// deletes files matching this — a user's `model.ckpt.notes.txt` or
+    /// `model.ckpt.shard-backup` sibling merely *shares the prefix* and is
+    /// not ours to remove.
+    fn is_shard_file_name(name: &str, prefix: &str) -> bool {
+        let Some(rest) = name.strip_prefix(prefix) else {
+            return false;
+        };
+        let Some((r, rest)) = rest.split_once("of") else {
+            return false;
+        };
+        if r.is_empty() || !r.bytes().all(|b| b.is_ascii_digit()) {
+            return false;
+        }
+        let Some((shards, gen)) = rest.split_once(".g") else {
+            return false;
+        };
+        if shards.is_empty() || !shards.bytes().all(|b| b.is_ascii_digit()) {
+            return false;
+        }
+        !gen.is_empty()
+    }
+
     /// Remove shard files of superseded generations (best effort) — every
-    /// sibling named `<head>.shard…` that does not carry `keep_suffix`.
+    /// sibling matching the strict `<head>.shard<r>of<R>.g<gen>` pattern
+    /// ([`Checkpoint::is_shard_file_name`]) that does not carry
+    /// `keep_suffix`. Prefix-sharing siblings that are *not* shard files
+    /// are never touched.
     fn gc_stale_shards(head: &Path, keep_suffix: &str) {
         let fname = match head.file_name() {
             Some(s) => s.to_string_lossy().into_owned(),
@@ -301,7 +330,9 @@ impl Checkpoint {
         let Ok(entries) = std::fs::read_dir(dir) else { return };
         for e in entries.flatten() {
             let name = e.file_name().to_string_lossy().into_owned();
-            if name.starts_with(&prefix) && !name.ends_with(keep_suffix) {
+            if Self::is_shard_file_name(&name, &prefix)
+                && !name.ends_with(keep_suffix)
+            {
                 std::fs::remove_file(e.path()).ok();
             }
         }
@@ -821,6 +852,71 @@ mod tests {
         // exactly head + the 2 current-generation shard files remain
         assert_eq!(names.len(), 3, "{names:?}");
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn gc_spares_non_shard_siblings_but_collects_stale_generations() {
+        // regression: the GC matched any `<head>.shard*` prefix, so a
+        // user's `model.ckpt.notes.txt`-style sibling sharing the prefix
+        // (e.g. `model.ckpt.shardlist`) was silently deleted on the next
+        // save. Only exact `.shard<r>of<R>.g<gen>` names are collected now.
+        let mut rng = Rng::new(10);
+        let dir = std::env::temp_dir().join(format!(
+            "adapprox_ckpt_gcsib_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("model.ckpt");
+        ck(1, &mut rng).save_sharded(&p, 2).unwrap();
+        let gen1_files = Checkpoint::shard_files(&p).unwrap();
+        // prefix-sharing siblings that are NOT shard files
+        let siblings = [
+            "model.ckpt.notes.txt",
+            "model.ckpt.shardlist",
+            "model.ckpt.shard-backup",
+            "model.ckpt.shard1of2",    // no generation tag
+            "model.ckpt.shard1of2.g",  // empty generation tag
+            "model.ckpt.shardXof2.g7", // non-numeric shard index
+        ];
+        for s in &siblings {
+            std::fs::write(dir.join(s), b"precious user data").unwrap();
+        }
+        let b = ck(2, &mut rng);
+        b.save_sharded(&p, 2).unwrap(); // triggers the GC
+        for s in &siblings {
+            assert!(
+                dir.join(s).exists(),
+                "non-shard sibling {s} was deleted by the GC"
+            );
+        }
+        // while the genuinely stale generation was still collected
+        for old in &gen1_files {
+            assert!(!old.exists(), "stale generation left: {old:?}");
+        }
+        let back = Checkpoint::load_auto(&p).unwrap();
+        assert_eq!(back.params, b.params);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn shard_file_name_matching_is_strict() {
+        let ok = |n: &str| Checkpoint::is_shard_file_name(n, "model.ckpt.shard");
+        assert!(ok("model.ckpt.shard0of2.g123-4"));
+        assert!(ok("model.ckpt.shard17of32.g9"));
+        for bad in [
+            "model.ckpt.notes.txt",
+            "model.ckpt.shardlist",
+            "model.ckpt.shard-backup",
+            "model.ckpt.shard1of2",
+            "model.ckpt.shard1of2.g",
+            "model.ckpt.shardXof2.g7",
+            "model.ckpt.shard1ofYof2.g7",
+            "model.ckpt.shardof2.g7",
+            "other.ckpt.shard0of2.g1",
+        ] {
+            assert!(!ok(bad), "{bad} wrongly matched");
+        }
     }
 
     #[test]

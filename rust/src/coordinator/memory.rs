@@ -93,6 +93,29 @@ pub fn shard_state_bytes(
         .collect()
 }
 
+/// Bytes of one full gradient replica (f32 per element) — the averaged
+/// gradient a data-parallel rank keeps resident without ZeRO-2. At
+/// data-parallel scale this is the next-largest buffer after optimizer
+/// state, and the one `--zero 2` shards away.
+pub fn grad_bytes(cfg: &ConfigSpec) -> u64 {
+    cfg.params.iter().map(|p| 4 * p.numel() as u64).sum()
+}
+
+/// Per-shard **averaged**-gradient bytes under the same contiguous plan
+/// the sharded optimizer uses (`--zero 2`): entry s is the cross-replica
+/// reduce output replica s keeps after the reduce-scatter — matching the
+/// actual `reduce_scatter_into` output buffers by construction (both
+/// derive from `shard_ranges` over element counts). Sums to
+/// [`grad_bytes`]. This prices the averaged buffer only: each replica's
+/// *local* backward gradient stays full-size under any ZeRO level.
+pub fn shard_grad_bytes(cfg: &ConfigSpec, shards: usize) -> Vec<u64> {
+    let numels: Vec<usize> = cfg.params.iter().map(|p| p.numel()).collect();
+    shard_ranges(&numels, shards)
+        .into_iter()
+        .map(|r| numels[r].iter().map(|&x| 4 * x as u64).sum())
+        .collect()
+}
+
 /// Adapprox rank policy for the accounting.
 #[derive(Clone, Copy, Debug)]
 pub enum RankPolicy {
@@ -188,18 +211,45 @@ pub fn memory_table(cfg: &ConfigSpec, k_init: usize, kmax_frac: f64) -> Vec<Memo
 /// plan is shared, but which shard is largest can differ per optimizer —
 /// factored state weights vectors more heavily than AdamW's dense
 /// moments do).
+///
+/// Two optimizer-independent **gradient rows** are appended, pricing the
+/// ZeRO-2 side of the same plan: `grad full-replica` (the averaged
+/// gradient one rank holds without `--zero 2`) and `grad zero2 max-shard`
+/// (the largest owned slice after the reduce-scatter). For these rows
+/// `pct_of_adamw` is the percentage of the **full gradient replica**, not
+/// of AdamW state.
 pub fn memory_table_sharded(
     cfg: &ConfigSpec,
     k_init: usize,
     kmax_frac: f64,
     shards: usize,
 ) -> Vec<MemoryRow> {
-    table_rows(k_init, kmax_frac, |kind, beta1, rank| {
+    let mut rows = table_rows(k_init, kmax_frac, |kind, beta1, rank| {
         shard_state_bytes(cfg, kind, beta1, rank, shards)
             .into_iter()
             .max()
             .unwrap_or(0)
-    })
+    });
+    let full = grad_bytes(cfg);
+    let max_shard = shard_grad_bytes(cfg, shards)
+        .into_iter()
+        .max()
+        .unwrap_or(0);
+    rows.push(MemoryRow {
+        label: "grad full-replica".into(),
+        bytes: full,
+        pct_of_adamw: 100.0,
+    });
+    rows.push(MemoryRow {
+        label: "grad zero2 max-shard".into(),
+        bytes: max_shard,
+        pct_of_adamw: if full > 0 {
+            100.0 * max_shard as f64 / full as f64
+        } else {
+            f64::NAN
+        },
+    });
+    rows
 }
 
 #[cfg(test)]
@@ -370,17 +420,55 @@ mod tests {
         let cfg = multi_cfg();
         let a = memory_table(&cfg, 1, 0.25);
         let b = memory_table_sharded(&cfg, 1, 0.25, 1);
-        assert_eq!(a.len(), b.len());
+        // the sharded table carries the two extra ZeRO-2 gradient rows
+        assert_eq!(a.len() + 2, b.len());
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.label, y.label);
             assert_eq!(x.bytes, y.bytes, "{}", x.label);
         }
-        // and at 2 shards every priced row shrinks
+        // at one shard the max gradient shard is the full replica
+        let (gfull, gshard) = (&b[b.len() - 2], &b[b.len() - 1]);
+        assert_eq!(gfull.label, "grad full-replica");
+        assert_eq!(gfull.bytes, grad_bytes(&cfg));
+        assert_eq!(gshard.bytes, gfull.bytes);
+        // and at 2 shards every priced row shrinks (zip stops before the
+        // gradient rows; they are checked separately below)
         let c = memory_table_sharded(&cfg, 1, 0.25, 2);
         for (x, y) in a.iter().zip(&c) {
             if x.bytes > 0 {
                 assert!(y.bytes < x.bytes, "{}", x.label);
             }
+        }
+        let g2 = &c[c.len() - 1];
+        assert!(g2.bytes < grad_bytes(&cfg), "grad shard did not shrink");
+    }
+
+    #[test]
+    fn grad_bytes_partition_under_the_shared_plan() {
+        let cfg = multi_cfg();
+        let total = grad_bytes(&cfg);
+        assert_eq!(
+            total,
+            4 * cfg.params.iter().map(|p| p.numel() as u64).sum::<u64>()
+        );
+        for shards in [1usize, 2, 3, 4, 7] {
+            let per = shard_grad_bytes(&cfg, shards);
+            assert_eq!(per.len(), shards);
+            assert_eq!(per.iter().sum::<u64>(), total, "shards={shards}");
+            if shards > 1 {
+                let max = per.iter().copied().max().unwrap();
+                assert!(max < total, "shards={shards}: {max} vs {total}");
+            }
+        }
+        // the gradient plan is the optimizer-state plan: same shard_ranges
+        // over the same numels, so the byte split follows the state split
+        let numels: Vec<usize> =
+            cfg.params.iter().map(|p| p.numel()).collect();
+        let plan = shard_ranges(&numels, 3);
+        for (r, bytes) in plan.iter().zip(shard_grad_bytes(&cfg, 3)) {
+            let expect: u64 =
+                numels[r.clone()].iter().map(|&x| 4 * x as u64).sum();
+            assert_eq!(bytes, expect);
         }
     }
 }

@@ -21,6 +21,19 @@
 //! Output tensors are reused across steps via [`allreduce_mean_into`]
 //! (`Workspace`-style: the steady-state reduce allocates nothing but the
 //! small bucket descriptor list).
+//!
+//! The ZeRO-2 entry point is [`reduce_scatter_into`]: the same bucketed
+//! reduction, but each averaged tensor lands in **only the owning shard's
+//! output list** under a caller-supplied contiguous parameter plan (the
+//! `optim::state::shard_ranges` plan the sharded optimizer and the
+//! checkpoint split use). No full averaged-gradient vector exists anywhere
+//! — the total resident reduce output per shard is that shard's owned
+//! elements only. Per-tensor bucketing and accumulation order are shared
+//! with the all-reduce, so each averaged tensor is bitwise identical to
+//! its [`allreduce_mean`] counterpart; [`allreduce_mean_into`] is the
+//! degenerate single-shard case of the same code path.
+
+use std::ops::Range;
 
 use anyhow::{bail, Result};
 
@@ -76,7 +89,9 @@ pub fn allreduce_mean_pooled(
 
 /// The allocation-free entry point: reduce into `out`, reusing its tensor
 /// allocations whenever the element counts line up (the steady-state case —
-/// gradient shapes never change across steps).
+/// gradient shapes never change across steps). Implemented as the
+/// single-shard case of [`reduce_scatter_into`], so the two paths can never
+/// drift apart numerically.
 pub fn allreduce_mean_into(
     per_replica: &[Vec<Tensor>],
     out: &mut Vec<Tensor>,
@@ -86,14 +101,26 @@ pub fn allreduce_mean_into(
         bail!("no replicas");
     }
     let n_params = per_replica[0].len();
+    let mut shards = vec![std::mem::take(out)];
+    let res = reduce_scatter_into(per_replica, &[0..n_params], &mut shards, pool);
+    *out = shards.pop().expect("single-shard reduce output");
+    res
+}
+
+/// Validate a replica gradient set: equal per-replica counts and full shape
+/// agreement (two replicas holding transposed-but-equal-size gradients must
+/// fail loudly, not silently average elementwise garbage). Returns the
+/// parameter count.
+fn validate_replica_grads(per_replica: &[Vec<Tensor>]) -> Result<usize> {
+    if per_replica.is_empty() {
+        bail!("no replicas");
+    }
+    let n_params = per_replica[0].len();
     for r in per_replica {
         if r.len() != n_params {
             bail!("replica gradient count mismatch");
         }
     }
-    // Validate full shapes, not just flat lengths: two replicas holding
-    // transposed-but-equal-size gradients must fail loudly, not silently
-    // average elementwise garbage.
     for (r, rep) in per_replica.iter().enumerate().skip(1) {
         for i in 0..n_params {
             if rep[i].shape != per_replica[0][i].shape {
@@ -106,6 +133,49 @@ pub fn allreduce_mean_into(
             }
         }
     }
+    Ok(n_params)
+}
+
+/// ZeRO-2 reduce-scatter: average gradients across replicas into **per-shard
+/// owned output lists** under a contiguous parameter plan.
+///
+/// `plan` is the gradient-ownership plan — contiguous, in-order parameter
+/// ranges covering `0..n_params` exactly, normally
+/// `optim::state::shard_ranges` over the same inventory the sharded
+/// optimizer partitions. After the call, `owned[s]` holds the averaged
+/// gradients for exactly the parameters in `plan[s]` (reusing its tensor
+/// allocations across steps like [`allreduce_mean_into`]); no buffer
+/// anywhere holds more than one shard's slice of the averaged gradient —
+/// the resident reduce output per shard is `4 × Σ numel(plan[s])` bytes,
+/// which is what `memory --shards N` prices via `shard_grad_bytes`.
+///
+/// Per-tensor bucketing, ascending-replica accumulation and the final
+/// 1/R scale are identical to [`allreduce_mean`], so every averaged tensor
+/// is bitwise equal to its all-reduce counterpart for any (plan, bucket
+/// size, thread count).
+pub fn reduce_scatter_into(
+    per_replica: &[Vec<Tensor>],
+    plan: &[Range<usize>],
+    owned: &mut Vec<Vec<Tensor>>,
+    pool: &Pool,
+) -> Result<()> {
+    let n_params = validate_replica_grads(per_replica)?;
+    let mut next = 0usize;
+    for r in plan {
+        if r.start != next || r.end < r.start || r.end > n_params {
+            bail!(
+                "gradient shard plan is not a contiguous in-order cover of \
+                 {n_params} parameters: {plan:?}"
+            );
+        }
+        next = r.end;
+    }
+    if next != n_params {
+        bail!(
+            "gradient shard plan covers {next} of {n_params} parameters: \
+             {plan:?}"
+        );
+    }
     // Source views up-front (also validates dtype before any work).
     let mut srcs: Vec<Vec<&[f32]>> = Vec::with_capacity(n_params);
     for i in 0..n_params {
@@ -115,38 +185,46 @@ pub fn allreduce_mean_into(
         }
         srcs.push(s);
     }
-    // (Re)shape `out`, reusing any same-size f32 allocation in place.
-    out.truncate(n_params);
-    for i in 0..n_params {
-        let shape = per_replica[0][i].shape.clone();
-        let numel = per_replica[0][i].numel();
-        let reusable = out
-            .get(i)
-            .is_some_and(|t| t.numel() == numel && t.as_f32().is_ok());
-        if reusable {
-            out[i].shape = shape;
-        } else if i < out.len() {
-            out[i] = Tensor::zeros(shape);
-        } else {
-            out.push(Tensor::zeros(shape));
+    // (Re)shape every shard's output list, reusing any same-size f32
+    // allocation in place.
+    owned.resize_with(plan.len(), Vec::new);
+    for (range, shard_out) in plan.iter().zip(owned.iter_mut()) {
+        shard_out.truncate(range.len());
+        for (j, i) in range.clone().enumerate() {
+            let shape = per_replica[0][i].shape.clone();
+            let numel = per_replica[0][i].numel();
+            let reusable = shard_out
+                .get(j)
+                .is_some_and(|t| t.numel() == numel && t.as_f32().is_ok());
+            if reusable {
+                shard_out[j].shape = shape;
+            } else if j < shard_out.len() {
+                shard_out[j] = Tensor::zeros(shape);
+            } else {
+                shard_out.push(Tensor::zeros(shape));
+            }
         }
     }
-    // Reduce-scatter: build the disjoint bucket list, fan it out. The
-    // all-gather is the write into the shared output tensors.
+    // Reduce-scatter: build the disjoint bucket list (per-tensor chunking
+    // independent of the plan, so values match the all-reduce bitwise),
+    // fan it out. Each bucket writes only into its owning shard's buffer.
     let scale = 1.0 / per_replica.len() as f32;
     let mut buckets: Vec<Bucket> = Vec::new();
-    for (i, t) in out.iter_mut().enumerate() {
-        let data: &mut [f32] = t.as_f32_mut()?;
-        for (bi, chunk) in data.chunks_mut(BUCKET_ELEMS).enumerate() {
-            let off = bi * BUCKET_ELEMS;
-            let take = chunk.len();
-            buckets.push(Bucket {
-                out: chunk,
-                srcs: srcs[i]
-                    .iter()
-                    .map(|s| &s[off..off + take])
-                    .collect(),
-            });
+    for (range, shard_out) in plan.iter().zip(owned.iter_mut()) {
+        for (j, t) in shard_out.iter_mut().enumerate() {
+            let i = range.start + j;
+            let data: &mut [f32] = t.as_f32_mut()?;
+            for (bi, chunk) in data.chunks_mut(BUCKET_ELEMS).enumerate() {
+                let off = bi * BUCKET_ELEMS;
+                let take = chunk.len();
+                buckets.push(Bucket {
+                    out: chunk,
+                    srcs: srcs[i]
+                        .iter()
+                        .map(|s| &s[off..off + take])
+                        .collect(),
+                });
+            }
         }
     }
     pool.run_each(&mut buckets, |b| reduce_bucket(b, scale));
@@ -335,6 +413,132 @@ mod tests {
                     "reps={reps}: {a} vs {b}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_sharded_bitwise_matches_allreduce() {
+        // the ZeRO-2 reduce bar: for any (replicas, shards, threads) the
+        // per-shard averaged tensors, concatenated in plan order, equal
+        // the serial all-reduce mean bitwise
+        use crate::optim::state::shard_ranges;
+        forall(8, |rng| {
+            let n_params = 1 + rng.below(6) as usize;
+            let reps = 1 + rng.below(4) as usize;
+            let shapes: Vec<Vec<usize>> = (0..n_params)
+                .map(|_| match rng.below(3) {
+                    0 => vec![1 + rng.below(80) as usize],
+                    1 => vec![
+                        1 + rng.below(24) as usize,
+                        1 + rng.below(24) as usize,
+                    ],
+                    // cross BUCKET_ELEMS so multi-bucket tensors are hit
+                    _ => vec![40_000 + rng.below(9000) as usize],
+                })
+                .collect();
+            let gs: Vec<Vec<Tensor>> = (0..reps)
+                .map(|_| {
+                    shapes
+                        .iter()
+                        .map(|s| {
+                            let numel = s.iter().product();
+                            Tensor::f32(s.clone(), rng.normal_vec_f32(numel))
+                        })
+                        .collect()
+                })
+                .collect();
+            let serial = allreduce_mean(&gs).unwrap();
+            let numels: Vec<usize> =
+                gs[0].iter().map(|t| t.numel()).collect();
+            for shards in [1usize, 2, 4] {
+                let plan = shard_ranges(&numels, shards);
+                for threads in [1usize, 2, 4] {
+                    let mut owned = Vec::new();
+                    reduce_scatter_into(
+                        &gs,
+                        &plan,
+                        &mut owned,
+                        &Pool::new(threads),
+                    )
+                    .unwrap();
+                    let merged: Vec<Tensor> =
+                        owned.iter().flatten().cloned().collect();
+                    assert_eq!(
+                        serial, merged,
+                        "shards={shards} threads={threads}"
+                    );
+                    // ownership: shard s holds exactly plan[s]'s tensors
+                    for (s, r) in plan.iter().enumerate() {
+                        assert_eq!(owned[s].len(), r.len(), "shard {s}");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn reduce_scatter_shard_buffers_never_hold_the_full_gradient() {
+        // the ZeRO-2 memory claim at the reduce level: with > 1 shard on a
+        // multi-parameter model, every shard's resident output is strictly
+        // smaller than the full gradient, and the shards partition it
+        use crate::optim::state::shard_ranges;
+        let mut rng = Rng::new(47);
+        let gs: Vec<Vec<Tensor>> = (0..2)
+            .map(|_| {
+                vec![
+                    Tensor::f32(vec![24, 16], rng.normal_vec_f32(384)),
+                    Tensor::f32(vec![40], rng.normal_vec_f32(40)),
+                    Tensor::f32(vec![12, 12], rng.normal_vec_f32(144)),
+                    Tensor::f32(vec![20], rng.normal_vec_f32(20)),
+                ]
+            })
+            .collect();
+        let numels: Vec<usize> = gs[0].iter().map(|t| t.numel()).collect();
+        let total: usize = numels.iter().sum();
+        let plan = shard_ranges(&numels, 2);
+        let mut owned = Vec::new();
+        reduce_scatter_into(&gs, &plan, &mut owned, &Pool::single()).unwrap();
+        let per: Vec<usize> = owned
+            .iter()
+            .map(|s| s.iter().map(|t| t.numel()).sum())
+            .collect();
+        assert_eq!(per.iter().sum::<usize>(), total);
+        assert!(per.iter().all(|&e| e < total), "{per:?}");
+        // steady state: a second reduce reuses the same tensor buffers
+        let before: Vec<*const f32> = owned
+            .iter()
+            .flatten()
+            .map(|t| t.as_f32().unwrap().as_ptr())
+            .collect();
+        reduce_scatter_into(&gs, &plan, &mut owned, &Pool::new(2)).unwrap();
+        let after: Vec<*const f32> = owned
+            .iter()
+            .flatten()
+            .map(|t| t.as_f32().unwrap().as_ptr())
+            .collect();
+        assert_eq!(before, after, "reduce output buffers were reallocated");
+    }
+
+    #[test]
+    fn reduce_scatter_rejects_bad_plans() {
+        let g = vec![
+            Tensor::f32(vec![4], vec![1.0; 4]),
+            Tensor::f32(vec![2], vec![2.0; 2]),
+        ];
+        let gs = vec![g];
+        let mut owned = Vec::new();
+        let pool = Pool::single();
+        for bad in [
+            vec![0..1],         // gap at the end
+            vec![0..1, 0..2],   // overlap
+            vec![1..2, 0..1],   // out of order
+            vec![0..1, 1..3],   // past the end
+            vec![],             // empty cover
+        ] {
+            assert!(
+                reduce_scatter_into(&gs, &bad, &mut owned, &pool).is_err(),
+                "{bad:?} accepted"
+            );
         }
     }
 

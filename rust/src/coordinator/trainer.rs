@@ -2,13 +2,16 @@
 //! the AOT train/eval programs, the optimizer backends, the LR schedule,
 //! replicas and metrics.
 
+use std::ops::Range;
 use std::path::PathBuf;
 use std::rc::Rc;
 
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::metrics::{perplexity, CsvWriter, LossTracker};
-use crate::coordinator::replicas::{allreduce_mean_into, mean_loss};
+use crate::coordinator::replicas::{
+    allreduce_mean_into, mean_loss, reduce_scatter_into,
+};
 use crate::coordinator::schedule::LrSchedule;
 use crate::data::{Batch, BatchIterator, BigramCorpus, Split, Task};
 use crate::info;
@@ -55,6 +58,14 @@ pub struct TrainOptions {
     /// optimizer state only for its owned parameters. 1 = unsharded;
     /// results are bitwise identical for any value. Requires `native`.
     pub shards: usize,
+    /// ZeRO level (`--zero {1,2}`). 1 shards optimizer state only; 2 also
+    /// shards the **averaged gradient**: the cross-replica reduce becomes a
+    /// reduce-scatter under the optimizer's ownership plan, each shard's
+    /// slice is consumed directly by the optimizer, and no full
+    /// averaged-gradient vector is ever materialized. Bitwise identical to
+    /// ZeRO-1 and unsharded for any (replicas, shards, threads). Requires
+    /// `native`.
+    pub zero_level: usize,
 }
 
 impl Default for TrainOptions {
@@ -74,6 +85,7 @@ impl Default for TrainOptions {
             native: false,
             threads: 1,
             shards: 1,
+            zero_level: 1,
         }
     }
 }
@@ -95,11 +107,14 @@ pub struct HistoryRow {
 
 /// Reusable gradient-reduce buffers: one per-replica micro-batch mean list
 /// plus the final cross-replica mean. After the first step the reduce makes
-/// no tensor-sized allocations.
+/// no tensor-sized allocations. Under ZeRO-2 the cross-replica output is
+/// `owned` (one list per shard, holding only that shard's averaged slice)
+/// and `out` stays empty — the full averaged gradient is never built.
 #[derive(Default)]
 struct ReduceBufs {
     rep: Vec<Vec<Tensor>>,
     out: Vec<Tensor>,
+    owned: Vec<Vec<Tensor>>,
 }
 
 /// The coordinator.
@@ -115,6 +130,9 @@ pub struct Trainer {
     /// pool for the bucketed gradient all-reduce (width `opts.threads`)
     reduce_pool: Pool,
     reduce_bufs: ReduceBufs,
+    /// ZeRO-2 only: the optimizer's gradient-ownership plan the
+    /// reduce-scatter runs under (empty at ZeRO-1 / unsharded).
+    grad_plan: Vec<Range<usize>>,
 }
 
 impl Trainer {
@@ -133,6 +151,12 @@ impl Trainer {
         if cfg.inventory_only {
             return Err(anyhow!("config {config_name} is inventory-only"));
         }
+        if !(1..=2).contains(&opts.zero_level) {
+            return Err(anyhow!(
+                "--zero must be 1 or 2 (got {})",
+                opts.zero_level
+            ));
+        }
         let mut rng = Rng::new(opts.seed);
         let params = model::init_params(&cfg, &mut rng);
         let opt: Box<dyn Optimizer> = if opts.native {
@@ -140,7 +164,7 @@ impl Trainer {
                 let rt = rt.clone();
                 move |m: usize, n: usize| rt.manifest.ladder(m, n).ok().cloned()
             };
-            if opts.shards > 1 {
+            if opts.shards > 1 || opts.zero_level == 2 {
                 Box::new(
                     ShardedNativeOptimizer::new(
                         cfg.params.clone(),
@@ -149,7 +173,8 @@ impl Trainer {
                         opts.seed ^ 0x09,
                         opts.shards,
                     )?
-                    .with_threads(opts.threads),
+                    .with_threads(opts.threads)
+                    .with_zero_level(opts.zero_level),
                 )
             } else {
                 Box::new(
@@ -170,12 +195,26 @@ impl Trainer {
                      programs and cannot partition it"
                 ));
             }
+            if opts.zero_level == 2 {
+                return Err(anyhow!(
+                    "--zero 2 requires the native backend (--native): \
+                     gradient sharding consumes per-shard slices inside \
+                     the native sharded optimizer"
+                ));
+            }
             Box::new(XlaOptimizer::new(
                 rt.clone(),
                 cfg.params.clone(),
                 hyper,
                 opts.seed ^ 0x09,
             )?)
+        };
+        let grad_plan = if opts.zero_level == 2 {
+            opt.grad_shard_plan().ok_or_else(|| {
+                anyhow!("optimizer exposes no gradient shard plan for ZeRO-2")
+            })?
+        } else {
+            Vec::new()
         };
         let schedule =
             LrSchedule::new(opts.peak_lr, opts.min_lr, opts.warmup, opts.steps);
@@ -194,13 +233,35 @@ impl Trainer {
             step: 0,
             reduce_pool,
             reduce_bufs: ReduceBufs::default(),
+            grad_plan,
         })
     }
 
-    /// Replace the optimizer (used by ablation harnesses).
+    /// Replace the optimizer (used by ablation harnesses). Under
+    /// `zero_level == 2` the gradient plan is re-derived from the new
+    /// optimizer; a replacement without one fails at the next step.
     pub fn with_optimizer(mut self, opt: Box<dyn Optimizer>) -> Trainer {
         self.opt = opt;
+        if self.opts.zero_level == 2 {
+            self.grad_plan = self.opt.grad_shard_plan().unwrap_or_default();
+        }
         self
+    }
+
+    /// Resident cross-replica reduce output, in elements: `(full, per_shard)`
+    /// where `full` is the all-reduce buffer (the whole averaged gradient —
+    /// 0 under `--zero 2`, where it is never built) and `per_shard[s]` is
+    /// shard s's owned slice (empty below ZeRO-2). The ZeRO-2 acceptance
+    /// assertion reads this: no replica holds the full averaged gradient.
+    pub fn averaged_grad_buffer_elems(&self) -> (usize, Vec<usize>) {
+        let full = self.reduce_bufs.out.iter().map(|t| t.numel()).sum();
+        let per_shard = self
+            .reduce_bufs
+            .owned
+            .iter()
+            .map(|s| s.iter().map(|t| t.numel()).sum())
+            .collect();
+        (full, per_shard)
     }
 
     fn batch_tensors(&self, b: &Batch) -> [Tensor; 3] {
@@ -287,8 +348,25 @@ impl Trainer {
             allreduce_mean_into(&micro_grads, rep_out, &self.reduce_pool)?;
             losses.push(mean_loss(&micro_losses));
         }
-        allreduce_mean_into(&bufs.rep, &mut bufs.out, &self.reduce_pool)?;
-        let info = self.opt.step(&mut self.params, &bufs.out, lr)?;
+        let info = if self.opts.zero_level == 2 {
+            // ZeRO-2: the cross-replica reduce is a reduce-scatter under
+            // the optimizer's ownership plan — each shard's averaged slice
+            // goes straight into the sharded step, and the full
+            // averaged-gradient vector is never materialized (`bufs.out`
+            // stays empty).
+            bufs.out.clear();
+            reduce_scatter_into(
+                &bufs.rep,
+                &self.grad_plan,
+                &mut bufs.owned,
+                &self.reduce_pool,
+            )?;
+            self.opt
+                .step_sharded_grads(&mut self.params, &bufs.owned, lr)?
+        } else {
+            allreduce_mean_into(&bufs.rep, &mut bufs.out, &self.reduce_pool)?;
+            self.opt.step(&mut self.params, &bufs.out, lr)?
+        };
         self.reduce_bufs = bufs;
         Ok((mean_loss(&losses), info))
     }

@@ -71,6 +71,8 @@ fn print_help() {
          parallel compute core)]\n\
          \u{20}          [--shards N (ZeRO-1 optimizer-state shards; \
          needs --native; sharded checkpoints)]\n\
+         \u{20}          [--zero 1|2 (2 also reduce-scatters gradients: \
+         no full averaged-grad replica)]\n\
          eval      --checkpoint PATH [--eval-batches N]\n\
          finetune  --checkpoint PATH --task 0..4 --steps N --lr F\n\
          memory    print Table 2 (exact analytic over GPT-2 inventories)\n\
@@ -120,6 +122,7 @@ fn train_options(args: &Args) -> Result<TrainOptions> {
         native: args.has("native"),
         threads: args.usize_or("threads", 1)?,
         shards: args.usize_or("shards", 1)?,
+        zero_level: args.usize_or("zero", 1)?,
     })
 }
 

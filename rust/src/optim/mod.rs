@@ -45,6 +45,36 @@ pub trait Optimizer {
     /// Bytes of optimizer state currently held (Table 2's quantity).
     fn state_bytes(&self) -> u64;
 
+    /// The contiguous gradient-ownership plan for ZeRO-2 sharded-gradient
+    /// steps, if this optimizer supports them: entry s is the parameter
+    /// range shard s owns (the same `optim::state::shard_ranges` plan the
+    /// optimizer state is partitioned under). `None` means this optimizer
+    /// only accepts full gradients via [`Optimizer::step`].
+    fn grad_shard_plan(&self) -> Option<Vec<std::ops::Range<usize>>> {
+        None
+    }
+
+    /// ZeRO-2 entry point: apply one step consuming **per-shard owned
+    /// gradient slices** — `owned_grads[s]` holds the averaged gradients
+    /// for exactly the parameters in `grad_shard_plan()[s]`, typically
+    /// produced by `coordinator::replicas::reduce_scatter_into`. No full
+    /// averaged-gradient list is ever assembled. Updated parameters are
+    /// visible to every replica afterwards (the host-simulated all-gather:
+    /// `params` is the single shared copy). The default refuses: only
+    /// sharded backends override this.
+    fn step_sharded_grads(
+        &mut self,
+        _params: &mut [Tensor],
+        _owned_grads: &[Vec<Tensor>],
+        _lr: f32,
+    ) -> Result<StepInfo> {
+        anyhow::bail!(
+            "{} does not support ZeRO-2 sharded gradients (no gradient \
+             shard plan)",
+            self.name()
+        )
+    }
+
     /// Human name for logs/tables.
     fn name(&self) -> String;
 

@@ -51,6 +51,12 @@ pub struct ShardedNativeOptimizer {
     ctxs: Vec<WorkerCtx>,
     pool: Pool,
     step: usize,
+    /// ZeRO level this engine runs under (1 = sharded optimizer state
+    /// only, 2 = gradients sharded too) — affects only the reported name;
+    /// the state partitioning is identical, the gradient path is chosen by
+    /// the caller ([`Optimizer::step`] vs
+    /// [`Optimizer::step_sharded_grads`]).
+    zero_level: usize,
 }
 
 impl ShardedNativeOptimizer {
@@ -84,6 +90,7 @@ impl ShardedNativeOptimizer {
             ctxs: Vec::new(),
             pool: Pool::single(),
             step: 0,
+            zero_level: 1,
         })
     }
 
@@ -91,6 +98,13 @@ impl ShardedNativeOptimizer {
     /// any count, as for the unsharded optimizer).
     pub fn with_threads(mut self, threads: usize) -> Self {
         self.pool = Pool::new(threads);
+        self
+    }
+
+    /// Tag the engine with its ZeRO level (1 or 2) for logs and table
+    /// labels; numerics are unaffected.
+    pub fn with_zero_level(mut self, level: usize) -> Self {
+        self.zero_level = level.clamp(1, 2);
         self
     }
 
@@ -119,6 +133,61 @@ impl ShardedNativeOptimizer {
     pub fn max_shard_bytes(&self) -> u64 {
         self.shards.iter().map(|s| s.bytes()).max().unwrap_or(0)
     }
+
+    /// The shared step core: one gradient slice per shard (`shard_grads[s]`
+    /// covers exactly `plan[s]`). Both the full-gradient [`Optimizer::step`]
+    /// and the ZeRO-2 [`Optimizer::step_sharded_grads`] reduce to this, so
+    /// the two paths build the identical job list — same parameters, same
+    /// order, same RNG streams — and stay bitwise identical by construction.
+    fn step_shard_slices(
+        &mut self,
+        params: &mut [Tensor],
+        shard_grads: &[&[Tensor]],
+        lr: f32,
+    ) -> Result<StepInfo> {
+        self.step += 1;
+        let t = self.step;
+        for st in &mut self.shards {
+            st.step = t; // keep per-shard counters in sync for accounting
+        }
+        let h = self.hyper.clone();
+        let pool = self.pool.clone();
+
+        // Concatenate per-shard job lists. Ranges are contiguous and in
+        // order, so this is the unsharded job list — same parameters, same
+        // order, same RNG streams — and the shared fan-out does the rest.
+        let mut jobs: Vec<StepJob> = Vec::with_capacity(self.specs.len());
+        {
+            let mut prest: &mut [Tensor] = params;
+            let mut rrest: &mut [Rng] = &mut self.rngs;
+            for ((range, shard), &gh) in self
+                .plan
+                .iter()
+                .zip(self.shards.iter_mut())
+                .zip(shard_grads)
+            {
+                let len = range.len();
+                let (ph, pt) = prest.split_at_mut(len);
+                let (rh, rt) = rrest.split_at_mut(len);
+                build_jobs(
+                    &self.specs[range.clone()],
+                    &mut shard.states,
+                    rh,
+                    ph,
+                    gh,
+                    &mut jobs,
+                )?;
+                prest = pt;
+                rrest = rt;
+            }
+        }
+        fan_out_jobs(&h, t, lr, &mut jobs, &pool, &mut self.ctxs);
+        let mut info = collect_info(t, &jobs);
+        drop(jobs); // release the shard-state borrows before sizing them
+        info.state_bytes = self.shards.iter().map(|s| s.bytes()).sum();
+        info.max_shard_bytes = self.max_shard_bytes();
+        Ok(info)
+    }
 }
 
 impl Optimizer for ShardedNativeOptimizer {
@@ -137,47 +206,49 @@ impl Optimizer for ShardedNativeOptimizer {
                 self.specs.len()
             );
         }
-        self.step += 1;
-        let t = self.step;
-        for st in &mut self.shards {
-            st.step = t; // keep per-shard counters in sync for accounting
-        }
-        let h = self.hyper.clone();
-        let pool = self.pool.clone();
+        let shard_grads: Vec<&[Tensor]> =
+            self.plan.iter().map(|r| &grads[r.clone()]).collect();
+        self.step_shard_slices(params, &shard_grads, lr)
+    }
 
-        // Concatenate per-shard job lists. Ranges are contiguous and in
-        // order, so this is the unsharded job list — same parameters, same
-        // order, same RNG streams — and the shared fan-out does the rest.
-        let mut jobs: Vec<StepJob> = Vec::with_capacity(self.specs.len());
+    fn grad_shard_plan(&self) -> Option<Vec<Range<usize>>> {
+        Some(self.plan.clone())
+    }
+
+    fn step_sharded_grads(
+        &mut self,
+        params: &mut [Tensor],
+        owned_grads: &[Vec<Tensor>],
+        lr: f32,
+    ) -> Result<StepInfo> {
+        if params.len() != self.specs.len() {
+            bail!(
+                "param count mismatch: {} params, {} specs",
+                params.len(),
+                self.specs.len()
+            );
+        }
+        if owned_grads.len() != self.plan.len() {
+            bail!(
+                "sharded-gradient count mismatch: {} shard lists, {} shards",
+                owned_grads.len(),
+                self.plan.len()
+            );
+        }
+        for (s, (range, og)) in
+            self.plan.iter().zip(owned_grads).enumerate()
         {
-            let mut prest: &mut [Tensor] = params;
-            let mut grest: &[Tensor] = grads;
-            let mut rrest: &mut [Rng] = &mut self.rngs;
-            for (range, shard) in self.plan.iter().zip(self.shards.iter_mut())
-            {
-                let len = range.len();
-                let (ph, pt) = prest.split_at_mut(len);
-                let (gh, gt) = grest.split_at(len);
-                let (rh, rt) = rrest.split_at_mut(len);
-                build_jobs(
-                    &self.specs[range.clone()],
-                    &mut shard.states,
-                    rh,
-                    ph,
-                    gh,
-                    &mut jobs,
-                )?;
-                prest = pt;
-                grest = gt;
-                rrest = rt;
+            if og.len() != range.len() {
+                bail!(
+                    "shard {s} owns {} parameters but received {} gradients",
+                    range.len(),
+                    og.len()
+                );
             }
         }
-        fan_out_jobs(&h, t, lr, &mut jobs, &pool, &mut self.ctxs);
-        let mut info = collect_info(t, &jobs);
-        drop(jobs); // release the shard-state borrows before sizing them
-        info.state_bytes = self.shards.iter().map(|s| s.bytes()).sum();
-        info.max_shard_bytes = self.max_shard_bytes();
-        Ok(info)
+        let shard_grads: Vec<&[Tensor]> =
+            owned_grads.iter().map(|v| v.as_slice()).collect();
+        self.step_shard_slices(params, &shard_grads, lr)
     }
 
     fn state_bytes(&self) -> u64 {
@@ -202,8 +273,9 @@ impl Optimizer for ShardedNativeOptimizer {
 
     fn name(&self) -> String {
         format!(
-            "{}(native,zero1x{})",
+            "{}(native,zero{}x{})",
             self.hyper.kind.name(),
+            self.zero_level,
             self.plan.len()
         )
     }
@@ -470,6 +542,136 @@ mod tests {
             assert_eq!(s1, s2);
             assert_eq!(v1, v2, "{n1}");
         }
+    }
+
+    /// Split a full gradient list into per-shard owned lists under `plan`.
+    fn scatter_grads(
+        grads: &[Tensor],
+        plan: &[Range<usize>],
+    ) -> Vec<Vec<Tensor>> {
+        plan.iter().map(|r| grads[r.clone()].to_vec()).collect()
+    }
+
+    #[test]
+    fn zero2_sharded_grad_step_bitwise_matches_unsharded() {
+        // the ZeRO-2 optimizer-level bar: consuming per-shard owned
+        // gradient slices reproduces the unsharded full-gradient weights
+        // AND telemetry exactly for every (shards, threads) combination
+        for kind in [OptKind::Adapprox, OptKind::Adafactor] {
+            let h = Hyper::paper_defaults(kind, &hd());
+            let base = run_opt(
+                Box::new(
+                    NativeOptimizer::new(specs6(), h.clone(), &ladder, 13)
+                        .unwrap(),
+                ),
+                12,
+            );
+            for shards in [1usize, 2, 4] {
+                for threads in [1usize, 2, 4] {
+                    let mut opt = ShardedNativeOptimizer::new(
+                        specs6(),
+                        h.clone(),
+                        &ladder,
+                        13,
+                        shards,
+                    )
+                    .unwrap()
+                    .with_threads(threads)
+                    .with_zero_level(2);
+                    let plan = opt.plan().to_vec();
+                    let mut rng = Rng::new(17);
+                    let mut params: Vec<Tensor> = specs6()
+                        .iter()
+                        .map(|s| {
+                            Tensor::f32(
+                                s.shape.clone(),
+                                rng.normal_vec_f32(s.numel()),
+                            )
+                        })
+                        .collect();
+                    let mut tele = vec![];
+                    for _ in 0..12 {
+                        let grads: Vec<Tensor> = params
+                            .iter()
+                            .map(|t| {
+                                Tensor::f32(
+                                    t.shape.clone(),
+                                    rng.normal_vec_f32(t.numel()),
+                                )
+                            })
+                            .collect();
+                        let owned = scatter_grads(&grads, &plan);
+                        let info = opt
+                            .step_sharded_grads(&mut params, &owned, 1e-3)
+                            .unwrap();
+                        tele.push((info.mean_xi, info.mean_rank));
+                    }
+                    let weights: Vec<Vec<f32>> = params
+                        .iter()
+                        .map(|p| p.as_f32().unwrap().to_vec())
+                        .collect();
+                    assert_eq!(
+                        base.0, weights,
+                        "{kind:?} weights diverged at shards={shards} \
+                         threads={threads}"
+                    );
+                    assert_eq!(
+                        base.1, tele,
+                        "{kind:?} telemetry diverged at shards={shards} \
+                         threads={threads}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero2_sharded_grad_step_rejects_mismatched_slices() {
+        let h = Hyper::paper_defaults(OptKind::Adapprox, &hd());
+        let mut opt =
+            ShardedNativeOptimizer::new(specs6(), h, &ladder, 3, 2).unwrap();
+        let plan = opt.plan().to_vec();
+        let mut rng = Rng::new(19);
+        let mut params: Vec<Tensor> = specs6()
+            .iter()
+            .map(|s| {
+                Tensor::f32(s.shape.clone(), rng.normal_vec_f32(s.numel()))
+            })
+            .collect();
+        let grads: Vec<Tensor> = params
+            .iter()
+            .map(|t| Tensor::f32(t.shape.clone(), rng.normal_vec_f32(t.numel())))
+            .collect();
+        let owned = scatter_grads(&grads, &plan);
+        // wrong outer (shard-list) count
+        assert!(opt
+            .step_sharded_grads(&mut params, &owned[..1], 1e-3)
+            .is_err());
+        // wrong inner (per-shard) count
+        let mut bad = owned.clone();
+        bad[1].pop();
+        assert!(opt.step_sharded_grads(&mut params, &bad, 1e-3).is_err());
+        // intact slices still step fine afterwards
+        assert!(opt.step_sharded_grads(&mut params, &owned, 1e-3).is_ok());
+    }
+
+    #[test]
+    fn zero2_sharded_grad_plan_and_name_exposed() {
+        use crate::optim::state::shard_ranges;
+        let h = Hyper::paper_defaults(OptKind::Adapprox, &hd());
+        let opt = ShardedNativeOptimizer::new(specs6(), h.clone(), &ladder, 1, 3)
+            .unwrap()
+            .with_zero_level(2);
+        let numels: Vec<usize> = specs6().iter().map(|s| s.numel()).collect();
+        assert_eq!(
+            opt.grad_shard_plan().unwrap(),
+            shard_ranges(&numels, 3),
+            "gradient plan must be the shared state plan"
+        );
+        assert!(opt.name().contains("zero2x3"), "{}", opt.name());
+        // the unsharded engine advertises no gradient plan
+        let nat = NativeOptimizer::new(specs6(), h, &ladder, 1).unwrap();
+        assert!(nat.grad_shard_plan().is_none());
     }
 
     #[test]

@@ -19,6 +19,33 @@ use crate::util::pool::Pool;
 
 const TINY: f32 = 1e-30;
 
+/// Cap on the §3.5 cosine-guidance amplification 1/(1−θ+ε). Without it,
+/// θ → 1 (update collinear with the first moment — common once momentum
+/// settles) scales the step by ~1/ε ≈ 1e8, and float roundoff can push the
+/// computed θ past 1.0, turning the denominator ≤ 0 and **flipping the
+/// update sign**. θ is clamped to its mathematical range [−1, 1] and the
+/// scale bounded here; the θ → −1 side is naturally bounded near 1/2.
+pub const COS_SCALE_MAX: f32 = 10.0;
+
+/// The §3.5 cosine-guidance scale for an (update, first-moment) pair:
+/// 1/(1−θ+ε) with θ = cos(upd, m), clamped and capped so the result is
+/// finite, strictly positive, and at most [`COS_SCALE_MAX`] for every
+/// input — including exactly (anti)collinear and all-zero vectors.
+pub fn cos_guidance_scale(upd: &[f32], m: &[f32], eps: f32) -> f32 {
+    let mut dot = 0.0f64;
+    let mut nu = 0.0f64;
+    let mut nm = 0.0f64;
+    for i in 0..upd.len().min(m.len()) {
+        dot += upd[i] as f64 * m[i] as f64;
+        nu += (upd[i] as f64).powi(2);
+        nm += (m[i] as f64).powi(2);
+    }
+    let theta = (dot / (nu.sqrt() * nm.sqrt() + TINY as f64)).clamp(-1.0, 1.0);
+    // f32::min returns the non-NaN operand, so even a pathological
+    // (inf-normed) input lands on the cap rather than poisoning the step
+    (1.0 / (1.0 - theta as f32 + eps)).min(COS_SCALE_MAX)
+}
+
 /// RMS(x) = ||x||_F / sqrt(numel).
 pub fn rms(x: &[f32]) -> f32 {
     let ss: f64 = x.iter().map(|&v| (v as f64) * (v as f64)).sum();
@@ -405,18 +432,10 @@ pub fn adapprox_apply_ws(
         }
     }
     let m_slice: &[f32] = if use_m { m } else { upd };
-    // cosine-similarity guidance (Eq. 17-18), applied to the used update
+    // cosine-similarity guidance (Eq. 17-18), applied to the used update —
+    // clamped and capped (see `cos_guidance_scale`)
     let scale = if cos_guidance && use_m {
-        let mut dot = 0.0f64;
-        let mut nu = 0.0f64;
-        let mut nm = 0.0f64;
-        for i in 0..n {
-            dot += upd[i] as f64 * m_slice[i] as f64;
-            nu += (upd[i] as f64).powi(2);
-            nm += (m_slice[i] as f64).powi(2);
-        }
-        let theta = dot / (nu.sqrt() * nm.sqrt() + TINY as f64);
-        1.0 / (1.0 - theta as f32 + eps)
+        cos_guidance_scale(upd, m_slice, eps)
     } else {
         1.0
     };
@@ -655,6 +674,68 @@ mod tests {
         let step_off: f64 = w_off.iter().map(|&x| ((x - 1.0) as f64).powi(2)).sum();
         // update aligns with fresh m (same direction): guidance amplifies
         assert!(step_on > step_off);
+    }
+
+    #[test]
+    fn cosine_guidance_scale_finite_positive_capped() {
+        // regression (§3.5 blow-up): a near-collinear (upd, m) pair used to
+        // yield scale ≈ 1/ε ≈ 1e8, and roundoff past θ = 1 flipped the
+        // update sign; the scale is now clamped into (0, COS_SCALE_MAX]
+        let upd: Vec<f32> =
+            (0..64).map(|i| (i as f32 * 0.37).sin() * 0.01).collect();
+        // exactly collinear: θ = 1 ⇒ the raw 1/ε blow-up ⇒ capped
+        let s = cos_guidance_scale(&upd, &upd, 1e-8);
+        assert!(s.is_finite() && s > 1.0 && s <= COS_SCALE_MAX, "{s}");
+        // anti-collinear: damped toward 1/2, never zero or negative
+        let neg: Vec<f32> = upd.iter().map(|x| -x).collect();
+        let s = cos_guidance_scale(&upd, &neg, 1e-8);
+        assert!(s > 0.0 && s < 1.0, "{s}");
+        // zero first moment: θ = 0 ⇒ scale ≈ 1 (guidance a no-op)
+        let s = cos_guidance_scale(&upd, &[0.0f32; 64], 1e-8);
+        assert!((s - 1.0).abs() < 1e-6, "{s}");
+        // property: every random pair stays finite, positive and capped
+        forall(16, |rng| {
+            let n = 1 + rng.below(64) as usize;
+            let a = rng.normal_vec_f32(n);
+            let b = rng.normal_vec_f32(n);
+            let s = cos_guidance_scale(&a, &b, 1e-8);
+            assert!(
+                s.is_finite() && s > 0.0 && s <= COS_SCALE_MAX,
+                "scale {s} out of range"
+            );
+        });
+    }
+
+    #[test]
+    fn cosine_guidance_update_bounded_near_collinear() {
+        // the applied step with a momentum collinear to the update must be
+        // O(lr · COS_SCALE_MAX), not O(lr/ε): pre-fix this moved weights
+        // by ~1e4·lr·|m| and could even flip sign
+        let n = 32;
+        let g: Vec<f32> =
+            (0..n).map(|i| ((i * 7 + 3) as f32).cos() * 0.1).collect();
+        let v = vec![1.0f32; n]; // upd ≈ g
+        let mut m = g.clone(); // collinear with upd
+        let mut w = vec![1.0f32; n];
+        let w0 = w.clone();
+        let lr = 1e-3;
+        adapprox_apply(&mut w, &mut m, &v, &g, lr, 0.9, 1e-8, 0.0, 1e9, true);
+        for i in 0..n {
+            assert!(w[i].is_finite());
+            let dw = (w[i] - w0[i]).abs();
+            // m holds the post-step first moment the scale multiplied
+            let bound = lr * COS_SCALE_MAX * m[i].abs() * 1.0001 + 1e-12;
+            assert!(dw <= bound, "i={i}: |Δw| {dw} > {bound}");
+            // the update moves against the (positive-aligned) moment:
+            // never in the flipped direction
+            if m[i].abs() > 1e-3 {
+                assert_eq!(
+                    (w0[i] - w[i]).signum(),
+                    m[i].signum(),
+                    "i={i}: update sign flipped"
+                );
+            }
+        }
     }
 
     #[test]

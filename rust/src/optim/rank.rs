@@ -98,12 +98,18 @@ impl RankController {
         let b = self.bucket();
         if b == prev_bucket {
             // same executable would produce the same xi (modulo sketch
-            // noise); force progress to the next ladder bucket
-            if let Some(idx) = self.ladder.index_of(b) {
-                if idx + 1 < self.ladder.buckets.len() {
-                    self.k = self.ladder.buckets[idx + 1];
-                    return Some(self.k);
-                }
+            // noise); force progress to the next *strictly larger* ladder
+            // bucket. Scanning for strictly-greater (rather than index+1)
+            // keeps the guarantee that k grows every call — a ladder
+            // carrying duplicate buckets (possible for programmatically
+            // built ladders; `Ladder::clamped` now dedupes but old state
+            // may carry them) would otherwise hand back a "next" bucket
+            // equal to the current one and re-run S-RSI at the same rank.
+            if let Some(&nb) =
+                self.ladder.buckets.iter().find(|&&x| x > b)
+            {
+                self.k = nb.min(self.kmax);
+                return Some(self.k);
             }
             return None;
         }
@@ -258,6 +264,86 @@ mod tests {
                 assert!(rc.k <= rc.kmax);
             }
         });
+    }
+
+    #[test]
+    fn grow_terminates_and_respects_kmax_on_degenerate_ladders() {
+        // the hardening bar: for ANY ladder shape (random buckets, random
+        // clamp — including clamps that collapse several buckets together
+        // or degenerate the ladder to a single rung) and any xi sequence,
+        // the refresh growth loop terminates in bounded iterations, k
+        // strictly increases every iteration, and neither k nor any
+        // returned bucket ever exceeds kmax
+        let h = hyper();
+        forall(24, |rng| {
+            let n_b = 1 + rng.below(6) as usize;
+            let mut buckets: Vec<usize> =
+                (0..n_b).map(|_| 1 + rng.below(40) as usize).collect();
+            buckets.sort_unstable();
+            buckets.dedup();
+            let kmax = *buckets.last().unwrap() + rng.below(4) as usize;
+            let ladder = Ladder {
+                oversample: vec![3; buckets.len()],
+                buckets,
+                kmax,
+            };
+            let max_rank = 1 + rng.below(48) as usize;
+            let mut rc = RankController::new(&h, ladder, max_rank);
+            // clamped ladders are strictly ascending and capped
+            assert!(
+                rc.ladder.buckets.windows(2).all(|w| w[0] < w[1]),
+                "{:?}",
+                rc.ladder.buckets
+            );
+            assert!(rc.ladder.buckets.iter().all(|&b| b <= max_rank));
+            rc.decide(1, &h);
+            let bound = rc.kmax + rc.ladder.buckets.len() + 2;
+            let mut iters = 0;
+            let mut prev_k = rc.k;
+            loop {
+                let xi = 0.02 + 0.9 * rng.uniform(); // above xi_thresh
+                let Some(b) = rc.grow(xi, &h) else { break };
+                assert!(b <= rc.kmax, "bucket {b} > kmax {}", rc.kmax);
+                assert!(rc.k <= rc.kmax, "k {} > kmax {}", rc.k, rc.kmax);
+                assert!(rc.k > prev_k, "k did not grow: {prev_k}");
+                prev_k = rc.k;
+                iters += 1;
+                assert!(iters <= bound, "growth did not terminate");
+            }
+        });
+    }
+
+    #[test]
+    fn grow_skips_duplicate_buckets_without_rerunning_a_rank() {
+        // regression: a duplicate-carrying ladder (bypassing clamped, as
+        // pre-fix clamps could produce) made the force-progress branch
+        // step to a "next" bucket equal to the current one, re-running
+        // S-RSI at the same rank. grow must hand back a strictly larger
+        // bucket (or stop).
+        let mut h = hyper();
+        // tiny growth increments so the force-progress branch engages
+        h.f_eta = 0.1;
+        let ladder = Ladder {
+            buckets: vec![4, 4, 4, 8],
+            oversample: vec![1; 4],
+            kmax: 8,
+        };
+        let mut rc = RankController {
+            k: 1,
+            kmax: 8,
+            ladder,
+        };
+        let mut prev_bucket = rc.bucket();
+        let mut iters = 0;
+        while let Some(b) = rc.grow(0.9, &h) {
+            assert!(
+                b > prev_bucket || b == rc.kmax,
+                "returned bucket {b} did not advance past {prev_bucket}"
+            );
+            prev_bucket = rc.bucket().max(prev_bucket);
+            iters += 1;
+            assert!(iters <= 16, "unbounded growth");
+        }
     }
 
     #[test]

@@ -62,6 +62,7 @@ pub fn train_options(args: &Args, default_steps: usize) -> Result<TrainOptions> 
         native: args.has("native"),
         threads: args.usize_or("threads", 1)?,
         shards: args.usize_or("shards", 1)?,
+        zero_level: args.usize_or("zero", 1)?,
     })
 }
 

@@ -83,13 +83,15 @@ pub fn run(args: &Args) -> Result<()> {
             println!("{:<28} {:>12} {:>10} {:>12}", r.label, mb, pct,
                      paper_mb);
         }
-        // `memory --shards N`: the per-replica footprint under ZeRO-1
-        // sharding — largest single shard per optimizer row
+        // `memory --shards N`: the per-replica footprint under ZeRO
+        // sharding — largest single shard per optimizer row, plus the
+        // ZeRO-2 gradient rows (full averaged-grad replica vs the largest
+        // owned slice after the `--zero 2` reduce-scatter)
         let shards = args.usize_or("shards", 1)?;
         if shards > 1 {
             println!(
-                "\nTable 2 — {cfg_name} max per-shard state \
-                 (ZeRO-1, {shards} shards)"
+                "\nTable 2 — {cfg_name} max per-shard footprint \
+                 (ZeRO, {shards} shards)"
             );
             println!("{:<28} {:>12} {:>10}", "optimizer", "MB/shard",
                      "% adamw");
@@ -101,6 +103,10 @@ pub fn run(args: &Args) -> Result<()> {
                 };
                 println!("{:<28} {:>12} {:>10}", r.label, mb, pct);
             }
+            println!(
+                "(grad rows: % is of the full gradient replica — the \
+                 ZeRO-2 `--zero 2` saving)"
+            );
         }
     }
     csv.flush()?;

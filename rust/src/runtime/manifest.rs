@@ -93,16 +93,26 @@ impl Ladder {
     /// entry wins). Guards Adapprox state for skinny matrices whose min
     /// dimension is below the ladder's kmax: S-RSI cannot run at a rank
     /// above min(rows, cols).
+    ///
+    /// The result's buckets are always **strictly ascending** — including
+    /// for inputs that already carry duplicates or out-of-order entries
+    /// (programmatically built ladders bypass the manifest validation).
+    /// The old consecutive-only dedupe could hand `RankController::grow`'s
+    /// force-progress branch a "next" bucket equal to the current one,
+    /// wasting duplicate same-rank S-RSI re-runs inside refresh loops.
     pub fn clamped(&self, max_rank: usize) -> Ladder {
         let cap = max_rank.max(1);
-        if self.kmax <= cap && self.buckets.iter().all(|&b| b <= cap) {
+        let sane = self.kmax <= cap
+            && self.buckets.iter().all(|&b| b <= cap)
+            && self.buckets.windows(2).all(|w| w[0] < w[1]);
+        if sane {
             return self.clone();
         }
         let mut buckets = Vec::with_capacity(self.buckets.len());
         let mut oversample = Vec::with_capacity(self.buckets.len());
         for (&b, &p) in self.buckets.iter().zip(&self.oversample) {
             let b = b.min(cap);
-            if buckets.last() == Some(&b) {
+            if buckets.last().is_some_and(|&last| b <= last) {
                 continue;
             }
             buckets.push(b);
@@ -447,6 +457,22 @@ mod tests {
         assert_eq!(same.kmax, 32);
         // zero is treated as 1 (never an empty/invalid ladder)
         assert_eq!(l.clamped(0).kmax, 1);
+        // pre-existing duplicates (programmatic ladders bypass manifest
+        // validation) are deduplicated even by a "no-op" clamp, and the
+        // result is strictly ascending — grow's force-progress invariant
+        let dup = Ladder {
+            buckets: vec![1, 4, 4, 2, 8],
+            oversample: vec![5, 4, 3, 2, 1],
+            kmax: 8,
+        };
+        let d = dup.clamped(8);
+        assert_eq!(d.buckets, vec![1, 4, 8]);
+        assert_eq!(d.oversample, vec![5, 4, 1]); // first entry wins
+        assert!(d.buckets.windows(2).all(|w| w[0] < w[1]));
+        // clamping a duplicate-carrying ladder mid-list
+        let d2 = dup.clamped(3);
+        assert_eq!(d2.buckets, vec![1, 3]);
+        assert_eq!(d2.kmax, 3);
     }
 
     fn write_manifest(name: &str, ladder_json: &str) -> PathBuf {

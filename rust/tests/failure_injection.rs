@@ -271,6 +271,64 @@ fn sharded_checkpoint_stale_shard_from_older_save_detected() {
 }
 
 #[test]
+fn sharded_checkpoint_under_zero2_training_fails_cleanly_and_recovers() {
+    // checkpoint save/load under `--zero 2`: train with sharded gradients,
+    // save the sharded checkpoint, inject a missing-shard failure (clean
+    // error, nothing else damaged), then restore and resume into another
+    // ZeRO-2 run
+    let Some(rt) = runtime() else { return };
+    let hyper = Hyper::paper_defaults(OptKind::Adapprox, &rt.manifest.hyper);
+    let mut opts = TrainOptions {
+        steps: 3,
+        warmup: 1,
+        eval_every: 0,
+        log_every: usize::MAX,
+        seed: 21,
+        native: true,
+        replicas: 2,
+        shards: 2,
+        threads: 2,
+        zero_level: 2,
+        ..Default::default()
+    };
+    let mut tr =
+        Trainer::new(rt.clone(), "micro", hyper.clone(), opts.clone())
+            .unwrap();
+    tr.run().unwrap();
+    assert!(tr.opt.name().contains("zero2x2"), "{}", tr.opt.name());
+    let dir = std::env::temp_dir().join(format!(
+        "adapprox_zero2_ckpt_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let head = dir.join("model.ckpt");
+    let ck = Checkpoint {
+        config: "micro".into(),
+        step: tr.step_count(),
+        optimizer: tr.opt.name(),
+        params: tr.params.clone(),
+    };
+    ck.save_sharded(&head, 2).unwrap();
+    // inject: remove one shard file — load must fail cleanly
+    let victim = Checkpoint::shard_files(&head).unwrap()[0].clone();
+    let pristine = std::fs::read(&victim).unwrap();
+    std::fs::remove_file(&victim).unwrap();
+    let err = Checkpoint::load_auto(&head).unwrap_err();
+    assert!(format!("{err:#}").contains("missing shard"), "{err:#}");
+    // recover: restore the file, merge, resume under ZeRO-2
+    std::fs::write(&victim, pristine).unwrap();
+    let back = Checkpoint::load_auto(&head).unwrap();
+    assert_eq!(back.params, tr.params);
+    opts.seed = 22;
+    let mut tr2 = Trainer::new(rt, "micro", hyper, opts).unwrap();
+    tr2.params = back.params;
+    let hist = tr2.run().unwrap();
+    assert!(hist.iter().all(|r| r.train_loss.is_finite()));
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
 fn second_moments_exposed_for_all_backends() {
     let Some(rt) = runtime() else { return };
     for kind in [OptKind::AdamW, OptKind::Adafactor, OptKind::Came,

@@ -88,39 +88,119 @@ fn replicas_match_bigger_batch_semantics() {
 
 #[test]
 fn sharded_native_training_bitwise_matches_unsharded() {
-    // the trainer-level acceptance bar for the ZeRO-1 engine: with the
-    // native backend, every (shards, threads) combination — across 2
-    // data-parallel replicas and a refresh step — reproduces the
-    // unsharded single-threaded losses AND final weights exactly
+    // the trainer-level acceptance bar for the ZeRO engines: with the
+    // native backend, every (shards, threads, zero level) combination —
+    // across data-parallel replicas and a refresh step — reproduces the
+    // unsharded single-threaded losses AND final weights exactly.
+    // ZeRO-2 (gradients reduce-scattered, owned slices consumed directly)
+    // must be bitwise identical to ZeRO-1 and to the unsharded path.
     let Some(rt) = runtime() else { return };
     let hyper = Hyper::paper_defaults(OptKind::Adapprox, &rt.manifest.hyper);
-    let run = |shards: usize, threads: usize| {
-        let mut opts = quick_opts(6, 11);
-        opts.native = true;
-        opts.replicas = 2;
-        opts.shards = shards;
-        opts.threads = threads;
-        let mut tr =
-            Trainer::new(rt.clone(), "micro", hyper.clone(), opts).unwrap();
-        let hist = tr.run().unwrap();
-        let losses: Vec<f64> =
-            hist.iter().map(|r| r.train_loss).collect();
-        let xis: Vec<f64> = hist.iter().map(|r| r.mean_xi).collect();
-        let weights: Vec<Vec<f32>> = tr
-            .params
-            .iter()
-            .map(|p| p.as_f32().unwrap().to_vec())
-            .collect();
-        (losses, xis, weights)
-    };
-    let base = run(1, 1);
-    for (shards, threads) in [(1, 2), (2, 1), (2, 2), (4, 2)] {
-        let got = run(shards, threads);
-        assert_eq!(
-            base, got,
-            "diverged at shards={shards} threads={threads}"
-        );
+    for replicas in [1usize, 2, 4] {
+        let run = |shards: usize, threads: usize, zero: usize| {
+            let mut opts = quick_opts(6, 11);
+            opts.native = true;
+            opts.replicas = replicas;
+            opts.shards = shards;
+            opts.threads = threads;
+            opts.zero_level = zero;
+            let mut tr =
+                Trainer::new(rt.clone(), "micro", hyper.clone(), opts)
+                    .unwrap();
+            let hist = tr.run().unwrap();
+            let losses: Vec<f64> =
+                hist.iter().map(|r| r.train_loss).collect();
+            let xis: Vec<f64> = hist.iter().map(|r| r.mean_xi).collect();
+            let weights: Vec<Vec<f32>> = tr
+                .params
+                .iter()
+                .map(|p| p.as_f32().unwrap().to_vec())
+                .collect();
+            (losses, xis, weights)
+        };
+        let base = run(1, 1, 1);
+        let combos: &[(usize, usize, usize)] = if replicas == 2 {
+            // the deep sweep on the main replica count
+            &[
+                (1, 2, 1),
+                (2, 1, 1),
+                (2, 2, 1),
+                (4, 2, 1),
+                (1, 1, 2),
+                (2, 1, 2),
+                (2, 2, 2),
+                (4, 2, 2),
+                (4, 4, 2),
+            ]
+        } else {
+            // cheaper spot checks at replicas ∈ {1, 4}
+            &[(2, 2, 1), (2, 2, 2), (4, 2, 2)]
+        };
+        for &(shards, threads, zero) in combos {
+            let got = run(shards, threads, zero);
+            assert_eq!(
+                base, got,
+                "diverged at replicas={replicas} shards={shards} \
+                 threads={threads} zero={zero}"
+            );
+        }
     }
+}
+
+#[test]
+fn zero2_shards_the_averaged_gradient_buffers() {
+    // the ZeRO-2 acceptance assertion at trainer level: under --zero 2 no
+    // full averaged-gradient vector exists — the cross-replica reduce
+    // output is per-shard owned slices whose sizes match the analytic
+    // `shard_grad_bytes` accounting exactly
+    use adapprox::coordinator::memory::{grad_bytes, shard_grad_bytes};
+    let Some(rt) = runtime() else { return };
+    let hyper = Hyper::paper_defaults(OptKind::Adapprox, &rt.manifest.hyper);
+    let mut opts = quick_opts(3, 15);
+    opts.native = true;
+    opts.replicas = 2;
+    opts.shards = 2;
+    opts.threads = 2;
+    opts.zero_level = 2;
+    let mut tr = Trainer::new(rt, "micro", hyper, opts).unwrap();
+    tr.run().unwrap();
+    let (full, per_shard) = tr.averaged_grad_buffer_elems();
+    assert_eq!(full, 0, "full averaged-gradient buffer was materialized");
+    let total: usize = tr.cfg.params.iter().map(|p| p.numel()).sum();
+    assert_eq!(per_shard.iter().sum::<usize>(), total);
+    assert!(
+        per_shard.iter().all(|&e| e < total),
+        "a shard buffer holds the full gradient: {per_shard:?}"
+    );
+    // live buffers match `memory --shards N`'s analytic gradient pricing
+    let analytic = shard_grad_bytes(&tr.cfg, 2);
+    let live: Vec<u64> =
+        per_shard.iter().map(|&e| 4 * e as u64).collect();
+    assert_eq!(live, analytic);
+    assert_eq!(analytic.iter().sum::<u64>(), grad_bytes(&tr.cfg));
+    assert!(tr.opt.name().contains("zero2x2"), "{}", tr.opt.name());
+}
+
+#[test]
+fn zero2_requires_native_backend() {
+    let Some(rt) = runtime() else { return };
+    let hyper = Hyper::paper_defaults(OptKind::Adapprox, &rt.manifest.hyper);
+    let mut opts = quick_opts(1, 16);
+    opts.zero_level = 2; // no --native: must be a clean construction error
+    let err = match Trainer::new(rt.clone(), "micro", hyper.clone(), opts) {
+        Err(e) => e,
+        Ok(_) => panic!("expected --zero 2/--native error"),
+    };
+    assert!(err.to_string().contains("native"), "{err}");
+    // and an out-of-range level is rejected up front
+    let mut opts = quick_opts(1, 16);
+    opts.native = true;
+    opts.zero_level = 3;
+    let err = match Trainer::new(rt, "micro", hyper, opts) {
+        Err(e) => e,
+        Ok(_) => panic!("expected --zero range error"),
+    };
+    assert!(err.to_string().contains("zero"), "{err}");
 }
 
 #[test]
