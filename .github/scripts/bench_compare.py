@@ -1,0 +1,111 @@
+#!/usr/bin/env python3
+"""Compare two directories of BENCH_*.json artifacts and gate regressions.
+
+Usage: bench_compare.py BASELINE_DIR CURRENT_DIR [--threshold 0.25]
+
+Each BENCH_*.json file holds one JSON object per line, as emitted by
+`rust/src/bench.rs::Stats::json_line`:
+
+    {"name":"case_name","mean_s":1.2e-3,"p50_s":1.1e-3,"p95_s":1.4e-3,"samples":10}
+
+The gate compares the median (`p50_s` — more robust than the mean on
+shared CI runners) of every case present in BOTH directories and fails
+(exit 1) when any shared case regressed by more than the threshold
+(default 25%). Cases only present on one side are reported but never
+fail the job: new benches land without a baseline, and retired benches
+must not wedge CI.
+
+A missing or empty BASELINE_DIR is warn-only (exit 0): the very first run
+on a branch, or an expired artifact, should not fail the pipeline.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+
+def load_cases(dirpath):
+    """name -> p50 seconds, merged across every BENCH_*.json in dirpath."""
+    cases = {}
+    if not os.path.isdir(dirpath):
+        return cases
+    for fname in sorted(os.listdir(dirpath)):
+        if not fname.endswith(".json"):
+            continue
+        path = os.path.join(dirpath, fname)
+        with open(path, encoding="utf-8") as f:
+            for lineno, line in enumerate(f, 1):
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    obj = json.loads(line)
+                    cases[obj["name"]] = float(obj["p50_s"])
+                except (json.JSONDecodeError, KeyError, TypeError, ValueError):
+                    print(f"warning: unparseable line {fname}:{lineno}: "
+                          f"{line[:120]}")
+    return cases
+
+
+def fmt(seconds):
+    if seconds >= 1.0:
+        return f"{seconds:.3f}s"
+    if seconds >= 1e-3:
+        return f"{seconds * 1e3:.3f}ms"
+    return f"{seconds * 1e6:.1f}us"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline_dir")
+    ap.add_argument("current_dir")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="relative p50 regression that fails the job")
+    args = ap.parse_args()
+
+    baseline = load_cases(args.baseline_dir)
+    current = load_cases(args.current_dir)
+
+    if not baseline:
+        print(f"warning: no baseline bench JSON under "
+              f"{args.baseline_dir!r} — nothing to compare (warn-only)")
+        return 0
+    if not current:
+        print(f"error: no current bench JSON under {args.current_dir!r} — "
+              f"the bench step produced no artifact")
+        return 1
+
+    shared = sorted(set(baseline) & set(current))
+    only_base = sorted(set(baseline) - set(current))
+    only_cur = sorted(set(current) - set(baseline))
+    regressions = []
+
+    print(f"{'case':<44} {'baseline':>12} {'current':>12} {'delta':>9}")
+    for name in shared:
+        b, c = baseline[name], current[name]
+        # sub-denominator guard: a 0-second baseline cannot price a ratio
+        ratio = (c - b) / b if b > 0 else 0.0
+        flag = ""
+        if ratio > args.threshold:
+            flag = "  << REGRESSION"
+            regressions.append((name, b, c, ratio))
+        print(f"{name:<44} {fmt(b):>12} {fmt(c):>12} {ratio:>+8.1%}{flag}")
+    for name in only_cur:
+        print(f"{name:<44} {'(new)':>12} {fmt(current[name]):>12}")
+    for name in only_base:
+        print(f"{name:<44} {fmt(baseline[name]):>12} {'(gone)':>12}")
+
+    if regressions:
+        print(f"\n{len(regressions)} case(s) regressed more than "
+              f"{args.threshold:.0%} vs the last successful main run:")
+        for name, b, c, ratio in regressions:
+            print(f"  {name}: {fmt(b)} -> {fmt(c)} ({ratio:+.1%})")
+        return 1
+    print(f"\nok: {len(shared)} shared case(s) within {args.threshold:.0%} "
+          f"of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

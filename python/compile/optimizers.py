@@ -66,7 +66,13 @@ def _cos_guidance_scale(upd, m_new, eps):
         + _TINY
     )
     theta = jnp.clip(dot / denom, -1.0, 1.0)
-    return jnp.minimum(1.0 / (1.0 - theta + eps), _COS_SCALE_MAX)
+    scale = 1.0 / (1.0 - theta + eps)
+    # Mirror the Rust backend's NaN handling: f32::min returns the non-NaN
+    # operand, so a pathological (inf-normed) input lands on the cap there,
+    # while jnp.minimum would propagate the NaN and poison the step.
+    return jnp.where(
+        jnp.isfinite(scale), jnp.minimum(scale, _COS_SCALE_MAX), _COS_SCALE_MAX
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -115,17 +115,19 @@ class TestLoss:
 
     def test_sgd_descends(self, params):
         """A few SGD steps on a fixed batch reduce the loss (model+grads are
-        a working learner)."""
+        a working learner). The step size must sit below this config's
+        stability edge: at lr 0.5 plain SGD oscillates and can end the
+        window above where it started."""
         rng = np.random.default_rng(5)
         toks = _batch(rng)
         mask = jnp.ones((CFG.batch, CFG.seq_len))
         step = M.make_train_step(CFG)
         ps = list(params)
         losses = []
-        for _ in range(5):
+        for _ in range(8):
             outs = step(*ps, toks, toks, mask)
             losses.append(float(outs[0]))
-            ps = [p - 0.5 * g for p, g in zip(ps, outs[1:])]
+            ps = [p - 0.05 * g for p, g in zip(ps, outs[1:])]
         assert losses[-1] < losses[0] - 0.1, losses
 
 

@@ -128,6 +128,12 @@ class TestAdapprox:
         # zero moment: theta = 0 => scale ~= 1
         s = float(opt._cos_guidance_scale(upd, jnp.zeros_like(upd), eps))
         assert s == pytest.approx(1.0, rel=1e-5), s
+        # inf-contaminated input: theta is NaN; the Rust backend's f32::min
+        # lands on the cap (non-NaN operand), so the mirror must too rather
+        # than propagating NaN into the step
+        bad = upd.at[0].set(jnp.inf)
+        s = float(opt._cos_guidance_scale(bad, upd, eps))
+        assert s == pytest.approx(opt._COS_SCALE_MAX), s
 
     def test_factors_follow_second_moment(self, rng):
         """Q/U outputs reconstruct V: feed-forward consistency with srsi."""

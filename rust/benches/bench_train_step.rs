@@ -3,20 +3,23 @@
 //! programs) per config — the end-to-end numbers for EXPERIMENTS.md §Perf.
 //!
 //! The artifact-free groups need no XLA toolchain: the
-//! unsharded-vs-ZeRO-1-vs-ZeRO-2 native step (sharding must be
+//! unsharded-vs-ZeRO-1-vs-ZeRO-2-vs-ZeRO-3 native step (sharding must be
 //! overhead-free — same jobs, same fan-out, state merely partitioned;
 //! ZeRO-2 additionally consumes per-shard owned gradient slices and
-//! reports peak resident averaged-gradient bytes per replica), the
-//! serial-vs-pooled bucketed all-reduce and the ZeRO-2 reduce-scatter
-//! counterpart. All emit `BENCH_JSON` lines, so the sharded-path perf
-//! trajectory is tracked even on CI machines without an XLA toolchain.
+//! reports peak resident averaged-gradient bytes per replica; ZeRO-3
+//! updates per-shard owned *parameter* lists in place and reports peak
+//! resident durable parameter bytes per replica), the serial-vs-pooled
+//! bucketed all-reduce, the ZeRO-2 reduce-scatter counterpart and the
+//! ZeRO-3 parameter all-gather. All emit `BENCH_JSON` lines, so the
+//! sharded-path perf trajectory is tracked even on CI machines without
+//! an XLA toolchain.
 
 use std::rc::Rc;
 
 use adapprox::bench::{header, Bench};
 use adapprox::coordinator::replicas::{
-    allreduce_mean, allreduce_mean_into, allreduce_mean_pooled,
-    reduce_scatter_into,
+    all_gather_params_into, allreduce_mean, allreduce_mean_into,
+    allreduce_mean_pooled, reduce_scatter_into,
 };
 use adapprox::coordinator::{TrainOptions, Trainer};
 use adapprox::data::{BatchIterator, Split};
@@ -186,6 +189,101 @@ fn bench_zero2_native_step(b: &Bench) {
     }
 }
 
+/// ZeRO-3 native step: the optimizer updates per-shard owned parameter
+/// lists in place (as the trainer keeps them between gather windows).
+/// Also reports the headline ZeRO-3 memory quantity: peak resident
+/// durable parameter bytes per replica, unsharded vs sharded.
+fn bench_zero3_native_step(b: &Bench) {
+    header("native optimizer step: ZeRO-3 sharded parameters (4 threads)");
+    let specs = bench_specs();
+    let h = Hyper::paper_defaults(OptKind::Adapprox, &hd());
+    let numels: Vec<usize> = specs.iter().map(|s| s.numel()).collect();
+    let total_bytes: u64 = numels.iter().map(|&n| 4 * n as u64).sum();
+    for shards in [2usize, 4] {
+        let mut opt = ShardedNativeOptimizer::new(
+            specs.clone(),
+            h.clone(),
+            &ladder,
+            7,
+            shards,
+        )
+        .unwrap()
+        .with_threads(4)
+        .with_zero_level(3);
+        let plan = opt.plan().to_vec();
+        let mut rng = Rng::new(11);
+        let full: Vec<Tensor> = specs
+            .iter()
+            .map(|s| {
+                Tensor::f32(s.shape.clone(), rng.normal_vec_f32(s.numel()))
+            })
+            .collect();
+        let mut owned_params: Vec<Vec<Tensor>> = plan
+            .iter()
+            .map(|r| full[r.clone()].to_vec())
+            .collect();
+        let grads: Vec<Tensor> = specs
+            .iter()
+            .map(|s| {
+                Tensor::f32(s.shape.clone(), rng.normal_vec_f32(s.numel()))
+            })
+            .collect();
+        let owned_grads: Vec<Vec<Tensor>> = plan
+            .iter()
+            .map(|r| grads[r.clone()].to_vec())
+            .collect();
+        let max_shard_bytes: u64 = plan
+            .iter()
+            .map(|r| numels[r.clone()].iter().map(|&n| 4 * n as u64).sum())
+            .max()
+            .unwrap_or(0);
+        println!(
+            "  peak resident parameter bytes/replica: unsharded \
+             {total_bytes} vs zero3x{shards} {max_shard_bytes} \
+             ({:.1}%)",
+            100.0 * max_shard_bytes as f64 / total_bytes as f64
+        );
+        b.run(&format!("native_step_zero3x{shards}_4t"), || {
+            std::hint::black_box(
+                opt.step_sharded_params(&mut owned_params, &owned_grads, 1e-4)
+                    .unwrap(),
+            );
+        });
+    }
+}
+
+/// The ZeRO-3 parameter all-gather: materialize the full ~1.3M-element
+/// parameter list from a 4-shard ownership plan into reused buffers —
+/// the per-step gather-window cost `--zero 3` pays to stream parameters.
+fn bench_all_gather_params(b: &Bench) {
+    header("parameter all-gather: ZeRO-3 gather window (4-shard plan)");
+    let mut rng = Rng::new(13);
+    let shapes: Vec<Vec<usize>> =
+        vec![vec![512, 640], vec![640, 512], vec![512, 512], vec![512]];
+    let full: Vec<Tensor> = shapes
+        .iter()
+        .map(|s| {
+            let numel: usize = s.iter().product();
+            Tensor::f32(s.clone(), rng.normal_vec_f32(numel))
+        })
+        .collect();
+    let numels: Vec<usize> = full.iter().map(|t| t.numel()).collect();
+    let plan = shard_ranges(&numels, 4);
+    let owned: Vec<Vec<Tensor>> = plan
+        .iter()
+        .map(|r| full[r.clone()].to_vec())
+        .collect();
+    for threads in [2usize, 4] {
+        let pool = Pool::new(threads);
+        let mut gathered = Vec::new();
+        b.run(&format!("all_gather_params_r4_1m3_{threads}t"), || {
+            all_gather_params_into(&owned, &plan, &mut gathered, &pool)
+                .unwrap();
+            std::hint::black_box(&gathered);
+        });
+    }
+}
+
 /// The shared 4-replica × ~1.3M-element gradient set for the reduce
 /// benches — one construction so the all-reduce and reduce-scatter groups
 /// always measure the identical workload.
@@ -255,8 +353,10 @@ fn main() {
     // artifact-free groups first: these always run
     bench_sharded_native_step(&b);
     bench_zero2_native_step(&b);
+    bench_zero3_native_step(&b);
     bench_allreduce(&b);
     bench_reduce_scatter(&b);
+    bench_all_gather_params(&b);
 
     let Ok(rt) = Runtime::new("artifacts") else {
         println!("run `make artifacts` for the PJRT train_step benches");

@@ -130,6 +130,12 @@ mod tests {
         let b = Args::parse(&argv("train --native")).unwrap();
         assert_eq!(b.usize_or("shards", 1).unwrap(), 1);
         assert_eq!(b.usize_or("zero", 1).unwrap(), 1);
+        // the ZeRO-3 parameter-streaming invocation
+        let c = Args::parse(&argv(
+            "train --native --shards 2 --threads 4 --replicas 2 --zero 3",
+        ))
+        .unwrap();
+        assert_eq!(c.usize_or("zero", 1).unwrap(), 3);
     }
 
     #[test]

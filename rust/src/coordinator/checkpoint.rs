@@ -63,18 +63,19 @@ fn tmp_path(path: &Path) -> PathBuf {
     path.with_file_name(format!("{fname}.tmp{}-{seq}", std::process::id()))
 }
 
+/// Shapes of a tensor sequence as the header's array-of-arrays encoding.
+fn shapes_json_iter<'a>(it: impl Iterator<Item = &'a Tensor>) -> Json {
+    Json::Arr(
+        it.map(|t| {
+            Json::Arr(t.shape.iter().map(|&d| Json::num(d as f64)).collect())
+        })
+        .collect(),
+    )
+}
+
 /// Shapes of a tensor list as the header's array-of-arrays encoding.
 fn shapes_json(params: &[Tensor]) -> Json {
-    Json::Arr(
-        params
-            .iter()
-            .map(|t| {
-                Json::Arr(
-                    t.shape.iter().map(|&d| Json::num(d as f64)).collect(),
-                )
-            })
-            .collect(),
-    )
+    shapes_json_iter(params.iter())
 }
 
 /// Parse an array-of-arrays shape list out of a header field.
@@ -361,12 +362,96 @@ impl Checkpoint {
     ) -> Result<()> {
         let path = path.as_ref();
         let shards = shards.max(1);
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir).ok();
-        }
         let numels: Vec<usize> =
             self.params.iter().map(|t| t.numel()).collect();
         let plan = shard_ranges(&numels, shards);
+        let per_shard: Vec<&[Tensor]> =
+            plan.iter().map(|r| &self.params[r.clone()]).collect();
+        let offsets: Vec<usize> = plan.iter().map(|r| r.start).collect();
+        self.save_shard_files(
+            path,
+            &per_shard,
+            &offsets,
+            shapes_json(&self.params),
+        )
+    }
+
+    /// ZeRO-3 companion of [`Checkpoint::save_sharded`]: serialize an
+    /// already-sharded parameter set, writing each shard file's payload
+    /// **straight from that shard's owned list** — no full parameter list
+    /// is assembled at any point, so checkpointing keeps the ZeRO-3
+    /// memory bound. The concatenation of the owned lists is trusted as
+    /// the manifest-order parameter list (the same trust
+    /// [`Checkpoint::save_sharded`] places in `self.params` — a permuted
+    /// caller cannot be detected from shapes alone), but the *split* is
+    /// validated: each `owned[s]` must hold exactly the canonical
+    /// contiguous plan's range s ([`shard_ranges`] over the flattened
+    /// element counts — the split the sharded optimizer and trainer
+    /// maintain), so mis-drawn shard boundaries are refused rather than
+    /// written and later mis-merged. A file written here is
+    /// indistinguishable from a [`Checkpoint::save_sharded`] file and
+    /// [`Checkpoint::load_sharded`] / [`Checkpoint::load_auto`] merge it
+    /// into any shard count unchanged. `self.params` carries no payload
+    /// here and must be empty. Crash-safety contract is identical to
+    /// [`Checkpoint::save_sharded`].
+    pub fn save_sharded_owned(
+        &self,
+        path: impl AsRef<Path>,
+        owned: &[Vec<Tensor>],
+    ) -> Result<()> {
+        let path = path.as_ref();
+        if !self.params.is_empty() {
+            bail!(
+                "save_sharded_owned takes its payload from `owned`; the \
+                 checkpoint's own params list must be empty"
+            );
+        }
+        if owned.is_empty() {
+            bail!("no owned parameter shards to save");
+        }
+        let numels: Vec<usize> =
+            owned.iter().flatten().map(|t| t.numel()).collect();
+        let plan = shard_ranges(&numels, owned.len());
+        for (s, (range, own)) in plan.iter().zip(owned).enumerate() {
+            if own.len() != range.len() {
+                bail!(
+                    "owned shard {s} holds {} parameters but the canonical \
+                     {}-shard plan assigns {} — refusing to write a \
+                     checkpoint the loaders would mis-merge",
+                    own.len(),
+                    owned.len(),
+                    range.len()
+                );
+            }
+        }
+        let per_shard: Vec<&[Tensor]> =
+            owned.iter().map(|v| v.as_slice()).collect();
+        let offsets: Vec<usize> = plan.iter().map(|r| r.start).collect();
+        self.save_shard_files(
+            path,
+            &per_shard,
+            &offsets,
+            shapes_json_iter(owned.iter().flatten()),
+        )
+    }
+
+    /// The shared sharded-save core: write one fresh generation of shard
+    /// files (`per_shard[r]` with its global parameter `offsets[r]`), then
+    /// publish the head atomically and GC stale generations. Both
+    /// [`Checkpoint::save_sharded`] (full list, split here) and
+    /// [`Checkpoint::save_sharded_owned`] (per-shard lists as they live
+    /// under ZeRO-3) funnel into this, so the two layouts are one format.
+    fn save_shard_files(
+        &self,
+        path: &Path,
+        per_shard: &[&[Tensor]],
+        offsets: &[usize],
+        full_shapes: Json,
+    ) -> Result<()> {
+        let shards = per_shard.len();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
         let gen = format!(
             "{}-{}",
             std::process::id(),
@@ -381,14 +466,13 @@ impl Checkpoint {
             }
             e
         };
-        for (r, range) in plan.iter().enumerate() {
-            let owned = &self.params[range.clone()];
+        for (r, owned) in per_shard.iter().enumerate() {
             let header = self.header(
                 shapes_json(owned),
                 vec![
                     ("shard", Json::num(r as f64)),
                     ("shards", Json::num(shards as f64)),
-                    ("offset", Json::num(range.start as f64)),
+                    ("offset", Json::num(offsets[r] as f64)),
                     ("shard_gen", Json::str(&gen)),
                 ],
             );
@@ -412,7 +496,7 @@ impl Checkpoint {
             vec![
                 ("shards", Json::num(shards as f64)),
                 ("shard_gen", Json::str(&gen)),
-                ("full_shapes", shapes_json(&self.params)),
+                ("full_shapes", full_shapes),
             ],
         );
         let head_tmp = tmp_path(path);
@@ -917,6 +1001,86 @@ mod tests {
         ] {
             assert!(!ok(bad), "{bad} wrongly matched");
         }
+    }
+
+    #[test]
+    fn save_sharded_owned_roundtrips_and_matches_full_save() {
+        // the ZeRO-3 save: writing per-shard owned lists directly must
+        // produce a checkpoint byte-compatible with the full-list save —
+        // same plan, same files, same merge result into any shard count
+        let mut rng = Rng::new(11);
+        let orig = ck(6, &mut rng);
+        let numels: Vec<usize> =
+            orig.params.iter().map(|t| t.numel()).collect();
+        for shards in [1usize, 2, 3] {
+            let dir = std::env::temp_dir().join(format!(
+                "adapprox_ckpt_owned{shards}_{}",
+                std::process::id()
+            ));
+            std::fs::remove_dir_all(&dir).ok();
+            std::fs::create_dir_all(&dir).unwrap();
+            let plan = shard_ranges(&numels, shards);
+            let owned: Vec<Vec<Tensor>> = plan
+                .iter()
+                .map(|r| orig.params[r.clone()].to_vec())
+                .collect();
+            let meta = Checkpoint {
+                config: orig.config.clone(),
+                step: orig.step,
+                optimizer: orig.optimizer.clone(),
+                params: vec![],
+            };
+            let p = dir.join("model.ckpt");
+            meta.save_sharded_owned(&p, &owned).unwrap();
+            let back = Checkpoint::load_auto(&p).unwrap();
+            assert_eq!(back.params, orig.params, "shards={shards}");
+            assert_eq!(back.step, orig.step);
+            // shard files follow the canonical plan, like save_sharded's
+            let files = Checkpoint::shard_files(&p).unwrap();
+            for (r, range) in plan.iter().enumerate() {
+                let (sh, sparams) = read_adpx(&files[r]).unwrap();
+                assert_eq!(
+                    header_usize(&sh, "offset").unwrap(),
+                    range.start
+                );
+                assert_eq!(sparams, owned[r]);
+            }
+            std::fs::remove_dir_all(dir).ok();
+        }
+    }
+
+    #[test]
+    fn save_sharded_owned_rejects_non_canonical_splits() {
+        let mut rng = Rng::new(12);
+        let orig = ck(2, &mut rng);
+        let meta = Checkpoint {
+            config: orig.config.clone(),
+            step: orig.step,
+            optimizer: orig.optimizer.clone(),
+            params: vec![],
+        };
+        let dir = std::env::temp_dir().join(format!(
+            "adapprox_ckpt_ownedbad_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("model.ckpt");
+        // a split that disagrees with the canonical plan (all three
+        // params on shard 0) must be refused, not silently mis-merged
+        let lopsided = vec![orig.params.clone(), vec![]];
+        let err = meta.save_sharded_owned(&p, &lopsided).unwrap_err();
+        assert!(err.to_string().contains("canonical"), "{err}");
+        // a non-empty params list on the metadata checkpoint is a misuse
+        let err = orig
+            .save_sharded_owned(&p, &[orig.params.clone()])
+            .unwrap_err();
+        assert!(err.to_string().contains("empty"), "{err}");
+        // empty shard set
+        assert!(meta.save_sharded_owned(&p, &[]).is_err());
+        // nothing was published
+        assert!(!p.exists());
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

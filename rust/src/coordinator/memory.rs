@@ -93,12 +93,31 @@ pub fn shard_state_bytes(
         .collect()
 }
 
+/// One full f32 buffer over the whole inventory (4 bytes per element) —
+/// the shared pricing behind both the averaged-gradient and the parameter
+/// replica, each exactly one f32 per model element.
+fn full_f32_bytes(cfg: &ConfigSpec) -> u64 {
+    cfg.params.iter().map(|p| 4 * p.numel() as u64).sum()
+}
+
+/// Per-shard f32-buffer bytes under the contiguous plan ([`shard_ranges`]
+/// over element counts) — the shared pricing behind the ZeRO-2 gradient
+/// shards and the ZeRO-3 parameter shards, which split byte-for-byte
+/// identically because both are one f32 per owned element.
+fn shard_f32_bytes(cfg: &ConfigSpec, shards: usize) -> Vec<u64> {
+    let numels: Vec<usize> = cfg.params.iter().map(|p| p.numel()).collect();
+    shard_ranges(&numels, shards)
+        .into_iter()
+        .map(|r| numels[r].iter().map(|&x| 4 * x as u64).sum())
+        .collect()
+}
+
 /// Bytes of one full gradient replica (f32 per element) — the averaged
 /// gradient a data-parallel rank keeps resident without ZeRO-2. At
 /// data-parallel scale this is the next-largest buffer after optimizer
 /// state, and the one `--zero 2` shards away.
 pub fn grad_bytes(cfg: &ConfigSpec) -> u64 {
-    cfg.params.iter().map(|p| 4 * p.numel() as u64).sum()
+    full_f32_bytes(cfg)
 }
 
 /// Per-shard **averaged**-gradient bytes under the same contiguous plan
@@ -109,11 +128,26 @@ pub fn grad_bytes(cfg: &ConfigSpec) -> u64 {
 /// [`grad_bytes`]. This prices the averaged buffer only: each replica's
 /// *local* backward gradient stays full-size under any ZeRO level.
 pub fn shard_grad_bytes(cfg: &ConfigSpec, shards: usize) -> Vec<u64> {
-    let numels: Vec<usize> = cfg.params.iter().map(|p| p.numel()).collect();
-    shard_ranges(&numels, shards)
-        .into_iter()
-        .map(|r| numels[r].iter().map(|&x| 4 * x as u64).sum())
-        .collect()
+    shard_f32_bytes(cfg, shards)
+}
+
+/// Bytes of one full parameter replica (f32 per element) — the model
+/// weights every data-parallel rank keeps resident below ZeRO-3. This is
+/// the last full-size per-replica resident after `--zero 2` removed the
+/// averaged gradient, and the one `--zero 3` streams away.
+pub fn param_bytes(cfg: &ConfigSpec) -> u64 {
+    full_f32_bytes(cfg)
+}
+
+/// Per-shard **durable parameter** bytes under the same contiguous plan
+/// (`--zero 3`): entry s is what replica s keeps resident outside the
+/// forward/backward gather window — matching the trainer's
+/// `owned_param_elems` by construction (both derive from [`shard_ranges`]
+/// over element counts). Sums to [`param_bytes`]. The gather window
+/// itself transiently materializes the full list on every replica; this
+/// prices the steady state between windows.
+pub fn shard_param_bytes(cfg: &ConfigSpec, shards: usize) -> Vec<u64> {
+    shard_f32_bytes(cfg, shards)
 }
 
 /// Adapprox rank policy for the accounting.
@@ -212,12 +246,14 @@ pub fn memory_table(cfg: &ConfigSpec, k_init: usize, kmax_frac: f64) -> Vec<Memo
 /// factored state weights vectors more heavily than AdamW's dense
 /// moments do).
 ///
-/// Two optimizer-independent **gradient rows** are appended, pricing the
-/// ZeRO-2 side of the same plan: `grad full-replica` (the averaged
-/// gradient one rank holds without `--zero 2`) and `grad zero2 max-shard`
-/// (the largest owned slice after the reduce-scatter). For these rows
-/// `pct_of_adamw` is the percentage of the **full gradient replica**, not
-/// of AdamW state.
+/// Four optimizer-independent rows are appended, pricing the ZeRO-2/3
+/// sides of the same plan: `grad full-replica` (the averaged gradient one
+/// rank holds without `--zero 2`) and `grad zero2 max-shard` (the largest
+/// owned slice after the reduce-scatter), then `param full-replica` (the
+/// weights one rank holds without `--zero 3`) and `param zero3 max-shard`
+/// (the largest durable parameter slice outside the gather window). For
+/// these rows `pct_of_adamw` is the percentage of the corresponding
+/// **full replica**, not of AdamW state.
 pub fn memory_table_sharded(
     cfg: &ConfigSpec,
     k_init: usize,
@@ -230,25 +266,38 @@ pub fn memory_table_sharded(
             .max()
             .unwrap_or(0)
     });
-    let full = grad_bytes(cfg);
-    let max_shard = shard_grad_bytes(cfg, shards)
-        .into_iter()
-        .max()
-        .unwrap_or(0);
-    rows.push(MemoryRow {
-        label: "grad full-replica".into(),
-        bytes: full,
-        pct_of_adamw: 100.0,
-    });
-    rows.push(MemoryRow {
-        label: "grad zero2 max-shard".into(),
-        bytes: max_shard,
-        pct_of_adamw: if full > 0 {
-            100.0 * max_shard as f64 / full as f64
-        } else {
-            f64::NAN
-        },
-    });
+    let mut push_pair = |label: &str, zero_level: usize, full: u64,
+                         max_shard: u64| {
+        rows.push(MemoryRow {
+            label: format!("{label} full-replica"),
+            bytes: full,
+            pct_of_adamw: 100.0,
+        });
+        rows.push(MemoryRow {
+            label: format!("{label} zero{zero_level} max-shard"),
+            bytes: max_shard,
+            pct_of_adamw: if full > 0 {
+                100.0 * max_shard as f64 / full as f64
+            } else {
+                f64::NAN
+            },
+        });
+    };
+    push_pair(
+        "grad",
+        2,
+        grad_bytes(cfg),
+        shard_grad_bytes(cfg, shards).into_iter().max().unwrap_or(0),
+    );
+    push_pair(
+        "param",
+        3,
+        param_bytes(cfg),
+        shard_param_bytes(cfg, shards)
+            .into_iter()
+            .max()
+            .unwrap_or(0),
+    );
     rows
 }
 
@@ -420,27 +469,58 @@ mod tests {
         let cfg = multi_cfg();
         let a = memory_table(&cfg, 1, 0.25);
         let b = memory_table_sharded(&cfg, 1, 0.25, 1);
-        // the sharded table carries the two extra ZeRO-2 gradient rows
-        assert_eq!(a.len() + 2, b.len());
+        // the sharded table carries the two ZeRO-2 gradient rows and the
+        // two ZeRO-3 parameter rows
+        assert_eq!(a.len() + 4, b.len());
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.label, y.label);
             assert_eq!(x.bytes, y.bytes, "{}", x.label);
         }
-        // at one shard the max gradient shard is the full replica
-        let (gfull, gshard) = (&b[b.len() - 2], &b[b.len() - 1]);
+        // at one shard the max gradient/parameter shard is the full replica
+        let (gfull, gshard) = (&b[b.len() - 4], &b[b.len() - 3]);
         assert_eq!(gfull.label, "grad full-replica");
         assert_eq!(gfull.bytes, grad_bytes(&cfg));
+        assert_eq!(gshard.label, "grad zero2 max-shard");
         assert_eq!(gshard.bytes, gfull.bytes);
+        let (pfull, pshard) = (&b[b.len() - 2], &b[b.len() - 1]);
+        assert_eq!(pfull.label, "param full-replica");
+        assert_eq!(pfull.bytes, param_bytes(&cfg));
+        assert_eq!(pshard.label, "param zero3 max-shard");
+        assert_eq!(pshard.bytes, pfull.bytes);
         // and at 2 shards every priced row shrinks (zip stops before the
-        // gradient rows; they are checked separately below)
+        // gradient/parameter rows; they are checked separately below)
         let c = memory_table_sharded(&cfg, 1, 0.25, 2);
         for (x, y) in a.iter().zip(&c) {
             if x.bytes > 0 {
                 assert!(y.bytes < x.bytes, "{}", x.label);
             }
         }
-        let g2 = &c[c.len() - 1];
+        let g2 = &c[c.len() - 3];
         assert!(g2.bytes < grad_bytes(&cfg), "grad shard did not shrink");
+        let p2 = &c[c.len() - 1];
+        assert!(p2.bytes < param_bytes(&cfg), "param shard did not shrink");
+    }
+
+    #[test]
+    fn param_bytes_partition_under_the_shared_plan() {
+        let cfg = multi_cfg();
+        let total = param_bytes(&cfg);
+        assert_eq!(
+            total,
+            4 * cfg.params.iter().map(|p| p.numel() as u64).sum::<u64>()
+        );
+        for shards in [1usize, 2, 3, 4, 7] {
+            let per = shard_param_bytes(&cfg, shards);
+            assert_eq!(per.len(), shards);
+            assert_eq!(per.iter().sum::<u64>(), total, "shards={shards}");
+            if shards > 1 {
+                let max = per.iter().copied().max().unwrap();
+                assert!(max < total, "shards={shards}: {max} vs {total}");
+            }
+        }
+        // one plan across the three axes: parameter shards price exactly
+        // where gradient shards do (same shard_ranges over the same numels)
+        assert_eq!(shard_param_bytes(&cfg, 3), shard_grad_bytes(&cfg, 3));
     }
 
     #[test]

@@ -12,13 +12,15 @@ pub mod trainer;
 
 pub use checkpoint::Checkpoint;
 pub use memory::{
-    grad_bytes, memory_table, memory_table_sharded, shard_grad_bytes,
-    shard_state_bytes, state_bytes, MemoryRow, RankPolicy,
+    grad_bytes, memory_table, memory_table_sharded, param_bytes,
+    shard_grad_bytes, shard_param_bytes, shard_state_bytes, state_bytes,
+    MemoryRow, RankPolicy,
 };
 pub use metrics::{perplexity, CsvWriter, JsonlWriter, LossTracker};
 pub use replicas::{
-    allreduce_mean, allreduce_mean_into, allreduce_mean_pooled, mean_loss,
-    reduce_scatter_into,
+    all_gather_params_into, allreduce_mean, allreduce_mean_into,
+    allreduce_mean_pooled, mean_loss, reduce_scatter_into,
+    release_gathered_params,
 };
 pub use schedule::LrSchedule;
 pub use trainer::{HistoryRow, TrainOptions, Trainer, CORPUS_SEED};

@@ -32,6 +32,15 @@
 //! with the all-reduce, so each averaged tensor is bitwise identical to
 //! its [`allreduce_mean`] counterpart; [`allreduce_mean_into`] is the
 //! degenerate single-shard case of the same code path.
+//!
+//! The ZeRO-3 side is the **gather/release protocol**:
+//! [`all_gather_params_into`] materializes the full parameter list from
+//! per-shard owned lists (same contiguous plan) into reused buffers for
+//! the live forward/backward window, copying bucket-by-bucket over the
+//! pool, and [`release_gathered_params`] drops the materialization the
+//! moment the reduce-scatter has consumed the gradients — outside the
+//! window a replica durably holds only its owned parameter slice, which
+//! is exactly what `memory::shard_param_bytes` prices.
 
 use std::ops::Range;
 
@@ -40,9 +49,10 @@ use anyhow::{bail, Result};
 use crate::runtime::Tensor;
 use crate::util::pool::Pool;
 
-/// Elements per reduce bucket — the scatter granularity. Small enough that
-/// a typical model yields far more buckets than threads (good balance),
-/// large enough that one bucket amortizes its scheduling overhead.
+/// Elements per reduce/gather bucket — the scatter granularity. Small
+/// enough that a typical model yields far more buckets than threads (good
+/// balance), large enough that one bucket amortizes its scheduling
+/// overhead.
 const BUCKET_ELEMS: usize = 1 << 15;
 
 /// One bucket of the reduce-scatter: a contiguous element range of one
@@ -136,6 +146,33 @@ fn validate_replica_grads(per_replica: &[Vec<Tensor>]) -> Result<usize> {
     Ok(n_params)
 }
 
+/// Validate a shard-ownership plan: contiguous, in-order ranges covering
+/// `0..n_params` exactly — the shape `optim::state::shard_ranges` always
+/// produces. Shared by the ZeRO-2 reduce-scatter, the ZeRO-3 parameter
+/// all-gather and the trainer's optimizer-replacement re-scatter, so no
+/// two consumers can disagree on what a legal plan is.
+pub(crate) fn validate_shard_plan(
+    plan: &[Range<usize>],
+    n_params: usize,
+) -> Result<()> {
+    let mut next = 0usize;
+    for r in plan {
+        if r.start != next || r.end < r.start || r.end > n_params {
+            bail!(
+                "shard plan is not a contiguous in-order cover of \
+                 {n_params} parameters: {plan:?}"
+            );
+        }
+        next = r.end;
+    }
+    if next != n_params {
+        bail!(
+            "shard plan covers {next} of {n_params} parameters: {plan:?}"
+        );
+    }
+    Ok(())
+}
+
 /// ZeRO-2 reduce-scatter: average gradients across replicas into **per-shard
 /// owned output lists** under a contiguous parameter plan.
 ///
@@ -160,22 +197,7 @@ pub fn reduce_scatter_into(
     pool: &Pool,
 ) -> Result<()> {
     let n_params = validate_replica_grads(per_replica)?;
-    let mut next = 0usize;
-    for r in plan {
-        if r.start != next || r.end < r.start || r.end > n_params {
-            bail!(
-                "gradient shard plan is not a contiguous in-order cover of \
-                 {n_params} parameters: {plan:?}"
-            );
-        }
-        next = r.end;
-    }
-    if next != n_params {
-        bail!(
-            "gradient shard plan covers {next} of {n_params} parameters: \
-             {plan:?}"
-        );
-    }
+    validate_shard_plan(plan, n_params)?;
     // Source views up-front (also validates dtype before any work).
     let mut srcs: Vec<Vec<&[f32]>> = Vec::with_capacity(n_params);
     for i in 0..n_params {
@@ -229,6 +251,114 @@ pub fn reduce_scatter_into(
     }
     pool.run_each(&mut buckets, |b| reduce_bucket(b, scale));
     Ok(())
+}
+
+/// One bucket of the parameter all-gather: a contiguous element range of
+/// one full output tensor plus the matching slice of the owning shard's
+/// tensor. Disjoint by construction, so the pooled copy mutates nothing
+/// shared.
+struct GatherBucket<'a> {
+    out: &'a mut [f32],
+    src: &'a [f32],
+}
+
+/// ZeRO-3 all-gather: materialize the **full parameter list** from
+/// per-shard owned lists under the same contiguous plan the reduce-scatter
+/// and the sharded optimizer use.
+///
+/// `owned[s]` holds the parameters shard s owns (`plan[s]`, in order);
+/// after the call `full` is the manifest-order parameter list, bitwise
+/// equal to the concatenation of the owned lists for any (plan, thread
+/// count) — the copy is a pure element move, bucketed ([`BUCKET_ELEMS`])
+/// and fanned out over `pool` with disjoint destination slices.
+///
+/// `full`'s tensor allocations are reused whenever element counts line
+/// up, so repeated gathers into a buffer the caller did *not* release
+/// allocate nothing tensor-sized. The two policies trade off explicitly:
+/// keep the buffer and overwrite each window (steady-state reuse, full
+/// parameters stay resident between windows) or call
+/// [`release_gathered_params`] as soon as the reduce-scatter has consumed
+/// the gradients (one full-model allocation per window, but no replica
+/// holds full parameters outside it). The trainer chooses release — the
+/// strict ZeRO-3 memory bound is the point of `--zero 3`, and on this
+/// testbed one allocation per step is noise next to forward/backward.
+pub fn all_gather_params_into(
+    owned: &[Vec<Tensor>],
+    plan: &[Range<usize>],
+    full: &mut Vec<Tensor>,
+    pool: &Pool,
+) -> Result<()> {
+    if owned.len() != plan.len() {
+        bail!(
+            "all-gather shard-list count mismatch: {} owned lists, {} plan \
+             ranges",
+            owned.len(),
+            plan.len()
+        );
+    }
+    let n_params = plan.last().map_or(0, |r| r.end);
+    validate_shard_plan(plan, n_params)?;
+    for (s, (range, own)) in plan.iter().zip(owned).enumerate() {
+        if own.len() != range.len() {
+            bail!(
+                "shard {s} owns {} parameters but its list holds {}",
+                range.len(),
+                own.len()
+            );
+        }
+    }
+    // Source views up-front (validates dtype before any buffer is touched).
+    let mut srcs: Vec<&[f32]> = Vec::with_capacity(n_params);
+    for own in owned {
+        for t in own {
+            srcs.push(t.as_f32()?);
+        }
+    }
+    // (Re)shape the full output list, reusing same-size f32 allocations.
+    full.truncate(n_params);
+    let mut i = 0usize;
+    for own in owned {
+        for t in own {
+            let numel = t.numel();
+            let reusable = full
+                .get(i)
+                .is_some_and(|o| o.numel() == numel && o.as_f32().is_ok());
+            if reusable {
+                full[i].shape = t.shape.clone();
+            } else if i < full.len() {
+                full[i] = Tensor::zeros(t.shape.clone());
+            } else {
+                full.push(Tensor::zeros(t.shape.clone()));
+            }
+            i += 1;
+        }
+    }
+    // Bucketed copy: disjoint destination chunks, one worker per bucket.
+    let mut buckets: Vec<GatherBucket> = Vec::new();
+    for (i, t) in full.iter_mut().enumerate() {
+        let data: &mut [f32] = t.as_f32_mut()?;
+        for (bi, chunk) in data.chunks_mut(BUCKET_ELEMS).enumerate() {
+            let off = bi * BUCKET_ELEMS;
+            let take = chunk.len();
+            buckets.push(GatherBucket {
+                out: chunk,
+                src: &srcs[i][off..off + take],
+            });
+        }
+    }
+    pool.run_each(&mut buckets, |b| b.out.copy_from_slice(b.src));
+    Ok(())
+}
+
+/// Release a gathered full-parameter materialization: drops every tensor
+/// allocation (not just the vector length), so a replica's resident
+/// parameter bytes fall back to its owned slice the moment the gather
+/// window closes. The next [`all_gather_params_into`] re-allocates once;
+/// callers that prefer steady-state buffer reuse over the strict
+/// outside-the-window bound can simply skip the release and overwrite.
+pub fn release_gathered_params(full: &mut Vec<Tensor>) {
+    full.clear();
+    full.shrink_to_fit();
 }
 
 /// Average a set of scalar losses.
@@ -540,6 +670,128 @@ mod tests {
                 "{bad:?} accepted"
             );
         }
+    }
+
+    #[test]
+    fn all_gather_params_bitwise_matches_manifest_order() {
+        // the ZeRO-3 gather bar: for any (shards, threads) the gathered
+        // full list equals the original manifest-order parameters bitwise
+        use crate::optim::state::shard_ranges;
+        forall(8, |rng| {
+            let n_params = 1 + rng.below(6) as usize;
+            let params: Vec<Tensor> = (0..n_params)
+                .map(|_| match rng.below(3) {
+                    0 => {
+                        let n = 1 + rng.below(80) as usize;
+                        Tensor::f32(vec![n], rng.normal_vec_f32(n))
+                    }
+                    1 => {
+                        let (m, n) = (
+                            1 + rng.below(24) as usize,
+                            1 + rng.below(24) as usize,
+                        );
+                        Tensor::f32(vec![m, n], rng.normal_vec_f32(m * n))
+                    }
+                    // cross BUCKET_ELEMS so multi-bucket tensors are hit
+                    _ => {
+                        let n = 40_000 + rng.below(9000) as usize;
+                        Tensor::f32(vec![n], rng.normal_vec_f32(n))
+                    }
+                })
+                .collect();
+            let numels: Vec<usize> =
+                params.iter().map(|t| t.numel()).collect();
+            for shards in [1usize, 2, 4] {
+                let plan = shard_ranges(&numels, shards);
+                let owned: Vec<Vec<Tensor>> = plan
+                    .iter()
+                    .map(|r| params[r.clone()].to_vec())
+                    .collect();
+                for threads in [1usize, 2, 4] {
+                    let mut full = Vec::new();
+                    all_gather_params_into(
+                        &owned,
+                        &plan,
+                        &mut full,
+                        &Pool::new(threads),
+                    )
+                    .unwrap();
+                    assert_eq!(
+                        full, params,
+                        "shards={shards} threads={threads}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn all_gather_reuses_buffers_then_release_drops_them() {
+        use crate::optim::state::shard_ranges;
+        let mut rng = Rng::new(53);
+        let params: Vec<Tensor> = vec![
+            Tensor::f32(vec![24, 16], rng.normal_vec_f32(384)),
+            Tensor::f32(vec![40], rng.normal_vec_f32(40)),
+            Tensor::f32(vec![12, 12], rng.normal_vec_f32(144)),
+        ];
+        let numels: Vec<usize> = params.iter().map(|t| t.numel()).collect();
+        let plan = shard_ranges(&numels, 2);
+        let owned: Vec<Vec<Tensor>> = plan
+            .iter()
+            .map(|r| params[r.clone()].to_vec())
+            .collect();
+        let pool = Pool::new(2);
+        let mut full = Vec::new();
+        all_gather_params_into(&owned, &plan, &mut full, &pool).unwrap();
+        assert_eq!(full, params);
+        // steady state: a second gather reuses the same tensor buffers
+        let before: Vec<*const f32> =
+            full.iter().map(|t| t.as_f32().unwrap().as_ptr()).collect();
+        all_gather_params_into(&owned, &plan, &mut full, &pool).unwrap();
+        let after: Vec<*const f32> =
+            full.iter().map(|t| t.as_f32().unwrap().as_ptr()).collect();
+        assert_eq!(before, after, "gather buffers were reallocated");
+        // closing the window releases every tensor-sized allocation
+        release_gathered_params(&mut full);
+        assert!(full.is_empty());
+        assert_eq!(full.capacity(), 0);
+        // and a fresh window still gathers exactly
+        all_gather_params_into(&owned, &plan, &mut full, &pool).unwrap();
+        assert_eq!(full, params);
+    }
+
+    #[test]
+    fn all_gather_rejects_bad_plans_and_mismatched_lists() {
+        let t = |n: usize| Tensor::f32(vec![n], vec![1.0; n]);
+        let owned = vec![vec![t(4)], vec![t(2)]];
+        let pool = Pool::single();
+        let mut full = Vec::new();
+        // plan shapes that cannot cover two one-parameter shards
+        for bad in [
+            vec![0..1],         // shard-count mismatch
+            vec![0..1, 0..2],   // overlap
+            vec![1..2, 0..1],   // out of order
+            vec![0..1, 2..3],   // gap
+        ] {
+            assert!(
+                all_gather_params_into(&owned, &bad, &mut full, &pool)
+                    .is_err(),
+                "{bad:?} accepted"
+            );
+        }
+        // owned list longer than its plan range
+        let bad_owned = vec![vec![t(4), t(3)], vec![t(2)]];
+        assert!(all_gather_params_into(
+            &bad_owned,
+            &[0..1, 1..2],
+            &mut full,
+            &pool
+        )
+        .is_err());
+        // intact inputs still gather fine afterwards
+        all_gather_params_into(&owned, &[0..1, 1..2], &mut full, &pool)
+            .unwrap();
+        assert_eq!(full.len(), 2);
     }
 
     #[test]

@@ -10,7 +10,8 @@ use anyhow::{anyhow, Result};
 
 use crate::coordinator::metrics::{perplexity, CsvWriter, LossTracker};
 use crate::coordinator::replicas::{
-    allreduce_mean_into, mean_loss, reduce_scatter_into,
+    all_gather_params_into, allreduce_mean_into, mean_loss,
+    reduce_scatter_into, release_gathered_params,
 };
 use crate::coordinator::schedule::LrSchedule;
 use crate::data::{Batch, BatchIterator, BigramCorpus, Split, Task};
@@ -58,12 +59,18 @@ pub struct TrainOptions {
     /// optimizer state only for its owned parameters. 1 = unsharded;
     /// results are bitwise identical for any value. Requires `native`.
     pub shards: usize,
-    /// ZeRO level (`--zero {1,2}`). 1 shards optimizer state only; 2 also
+    /// ZeRO level (`--zero {1,2,3}`). 1 shards optimizer state only; 2 also
     /// shards the **averaged gradient**: the cross-replica reduce becomes a
     /// reduce-scatter under the optimizer's ownership plan, each shard's
     /// slice is consumed directly by the optimizer, and no full
-    /// averaged-gradient vector is ever materialized. Bitwise identical to
-    /// ZeRO-1 and unsharded for any (replicas, shards, threads). Requires
+    /// averaged-gradient vector is ever materialized. 3 additionally
+    /// shards the **parameters**: each replica durably holds only its
+    /// owned parameter slice, the full tensors are all-gathered into
+    /// reused buffers only for the live forward/backward window
+    /// ([`Trainer::gather_params`]) and released the moment the
+    /// reduce-scatter has consumed the gradients; the weight update
+    /// writes back only the owned ranges. Bitwise identical to lower
+    /// levels and unsharded for any (replicas, shards, threads). Requires
     /// `native`.
     pub zero_level: usize,
 }
@@ -121,6 +128,10 @@ struct ReduceBufs {
 pub struct Trainer {
     pub rt: Rc<Runtime>,
     pub cfg: ConfigSpec,
+    /// Below ZeRO-3: the durable full parameter list. Under `--zero 3`
+    /// this is the **gather buffer** — empty outside the
+    /// forward/backward window, materialized from [`Trainer::owned_params`]
+    /// by the pooled all-gather for the window's duration only.
     pub params: Vec<Tensor>,
     pub opt: Box<dyn Optimizer>,
     pub schedule: LrSchedule,
@@ -130,9 +141,14 @@ pub struct Trainer {
     /// pool for the bucketed gradient all-reduce (width `opts.threads`)
     reduce_pool: Pool,
     reduce_bufs: ReduceBufs,
-    /// ZeRO-2 only: the optimizer's gradient-ownership plan the
-    /// reduce-scatter runs under (empty at ZeRO-1 / unsharded).
+    /// ZeRO-2/3: the optimizer's ownership plan the reduce-scatter (and,
+    /// at level 3, the parameter all-gather) runs under (empty at
+    /// ZeRO-1 / unsharded).
     grad_plan: Vec<Range<usize>>,
+    /// ZeRO-3 only: the durable per-shard parameter storage —
+    /// `owned_params[s]` holds exactly the tensors in `grad_plan[s]`
+    /// (plan order is manifest order). Empty below level 3.
+    owned_params: Vec<Vec<Tensor>>,
 }
 
 impl Trainer {
@@ -151,9 +167,9 @@ impl Trainer {
         if cfg.inventory_only {
             return Err(anyhow!("config {config_name} is inventory-only"));
         }
-        if !(1..=2).contains(&opts.zero_level) {
+        if !(1..=3).contains(&opts.zero_level) {
             return Err(anyhow!(
-                "--zero must be 1 or 2 (got {})",
+                "--zero must be 1, 2 or 3 (got {})",
                 opts.zero_level
             ));
         }
@@ -164,7 +180,7 @@ impl Trainer {
                 let rt = rt.clone();
                 move |m: usize, n: usize| rt.manifest.ladder(m, n).ok().cloned()
             };
-            if opts.shards > 1 || opts.zero_level == 2 {
+            if opts.shards > 1 || opts.zero_level >= 2 {
                 Box::new(
                     ShardedNativeOptimizer::new(
                         cfg.params.clone(),
@@ -195,11 +211,12 @@ impl Trainer {
                      programs and cannot partition it"
                 ));
             }
-            if opts.zero_level == 2 {
+            if opts.zero_level >= 2 {
                 return Err(anyhow!(
-                    "--zero 2 requires the native backend (--native): \
-                     gradient sharding consumes per-shard slices inside \
-                     the native sharded optimizer"
+                    "--zero {} requires the native backend (--native): \
+                     gradient/parameter sharding consumes per-shard \
+                     slices inside the native sharded optimizer",
+                    opts.zero_level
                 ));
             }
             Box::new(XlaOptimizer::new(
@@ -209,12 +226,27 @@ impl Trainer {
                 opts.seed ^ 0x09,
             )?)
         };
-        let grad_plan = if opts.zero_level == 2 {
+        let grad_plan = if opts.zero_level >= 2 {
             opt.grad_shard_plan().ok_or_else(|| {
-                anyhow!("optimizer exposes no gradient shard plan for ZeRO-2")
+                anyhow!(
+                    "optimizer exposes no shard plan for ZeRO-{}",
+                    opts.zero_level
+                )
             })?
         } else {
             Vec::new()
+        };
+        // ZeRO-3: scatter the freshly initialized parameters into the
+        // durable per-shard storage; the full list is released and only
+        // ever re-materialized inside a gather window.
+        let (params, owned_params) = if opts.zero_level == 3 {
+            let owned: Vec<Vec<Tensor>> = grad_plan
+                .iter()
+                .map(|r| params[r.clone()].to_vec())
+                .collect();
+            (Vec::new(), owned)
+        } else {
+            (params, Vec::new())
         };
         let schedule =
             LrSchedule::new(opts.peak_lr, opts.min_lr, opts.warmup, opts.steps);
@@ -234,18 +266,137 @@ impl Trainer {
             reduce_pool,
             reduce_bufs: ReduceBufs::default(),
             grad_plan,
+            owned_params,
         })
     }
 
     /// Replace the optimizer (used by ablation harnesses). Under
-    /// `zero_level == 2` the gradient plan is re-derived from the new
-    /// optimizer; a replacement without one fails at the next step.
+    /// `zero_level >= 2` the ownership plan is re-derived from the new
+    /// optimizer (a replacement without one fails at the next step), and
+    /// under ZeRO-3 the durable parameter shards are re-scattered to the
+    /// new plan.
     pub fn with_optimizer(mut self, opt: Box<dyn Optimizer>) -> Trainer {
         self.opt = opt;
-        if self.opts.zero_level == 2 {
-            self.grad_plan = self.opt.grad_shard_plan().unwrap_or_default();
+        if self.opts.zero_level >= 2 {
+            let plan = self.opt.grad_shard_plan().unwrap_or_default();
+            // ZeRO-3: re-scatter the durable shards to the new plan — but
+            // only when the plan is a contiguous in-order cover of
+            // exactly the parameters we hold (the same validation the
+            // reduce-scatter and all-gather apply); a mismatched
+            // replacement keeps the old scatter intact — no tensor is
+            // dropped or duplicated — and fails loudly at the next step's
+            // validation instead of losing weights here.
+            let held: usize =
+                self.owned_params.iter().map(|s| s.len()).sum();
+            if self.opts.zero_level == 3
+                && !plan.is_empty()
+                && crate::coordinator::replicas::validate_shard_plan(
+                    &plan, held,
+                )
+                .is_ok()
+            {
+                let full: Vec<Tensor> =
+                    self.owned_params.drain(..).flatten().collect();
+                self.owned_params =
+                    plan.iter().map(|r| full[r.clone()].to_vec()).collect();
+            }
+            self.grad_plan = plan;
         }
         self
+    }
+
+    /// ZeRO-3: open the gather window — materialize the full parameter
+    /// list from the owned shards into the reused gather buffer
+    /// (`self.params`). No-op below level 3. `train_one_step` opens and
+    /// closes its own window; callers that evaluate outside a step (the
+    /// coordinator's eval cadence, checkpoint consumers) bracket the use
+    /// with this and [`Trainer::release_params`].
+    pub fn gather_params(&mut self) -> Result<()> {
+        if self.opts.zero_level == 3 {
+            all_gather_params_into(
+                &self.owned_params,
+                &self.grad_plan,
+                &mut self.params,
+                &self.reduce_pool,
+            )?;
+        }
+        Ok(())
+    }
+
+    /// ZeRO-3: close the gather window — release the full-parameter
+    /// materialization, so the replica's durable parameter bytes fall
+    /// back to its owned shard. No-op below level 3.
+    pub fn release_params(&mut self) {
+        if self.opts.zero_level == 3 {
+            release_gathered_params(&mut self.params);
+        }
+    }
+
+    /// The durable per-shard parameter storage under ZeRO-3 (empty below
+    /// level 3): `owned_params()[s]` holds exactly the tensors of
+    /// ownership-plan range s, and their concatenation is the
+    /// manifest-order parameter list.
+    pub fn owned_params(&self) -> &[Vec<Tensor>] {
+        &self.owned_params
+    }
+
+    /// The manifest-order full parameter list, by value: a clone of the
+    /// durable list below ZeRO-3, or a merge of the owned shards under
+    /// ZeRO-3 (plan order is manifest order — no gather buffer involved).
+    pub fn full_params(&self) -> Vec<Tensor> {
+        if self.opts.zero_level == 3 {
+            self.owned_params.iter().flatten().cloned().collect()
+        } else {
+            self.params.clone()
+        }
+    }
+
+    /// Install a full manifest-order parameter list (checkpoint restore):
+    /// stored as the durable list below ZeRO-3; scattered into the owned
+    /// shards under ZeRO-3, with the gather buffer left released.
+    pub fn set_params(&mut self, params: Vec<Tensor>) -> Result<()> {
+        if self.opts.zero_level == 3 {
+            if params.len() != self.cfg.params.len() {
+                return Err(anyhow!(
+                    "checkpoint holds {} parameters, config {} declares {}",
+                    params.len(),
+                    self.cfg.name,
+                    self.cfg.params.len()
+                ));
+            }
+            self.owned_params = self
+                .grad_plan
+                .iter()
+                .map(|r| params[r.clone()].to_vec())
+                .collect();
+            release_gathered_params(&mut self.params);
+        } else {
+            self.params = params;
+        }
+        Ok(())
+    }
+
+    /// Resident full-parameter gather buffer, in elements — the ZeRO-3
+    /// acceptance assertion reads this: outside a gather window it is 0
+    /// (the buffer is released, not merely truncated), so no replica
+    /// holds full parameters between steps. Below level 3 the full list
+    /// is durable by design and this reports 0.
+    pub fn param_buffer_elems(&self) -> usize {
+        if self.opts.zero_level == 3 {
+            self.params.iter().map(|t| t.numel()).sum()
+        } else {
+            0
+        }
+    }
+
+    /// Durable parameter elements per shard under ZeRO-3 (empty below):
+    /// entry s is what replica s keeps resident outside gather windows —
+    /// `4 ×` this must equal `memory::shard_param_bytes` exactly.
+    pub fn owned_param_elems(&self) -> Vec<usize> {
+        self.owned_params
+            .iter()
+            .map(|s| s.iter().map(|t| t.numel()).sum())
+            .collect()
     }
 
     /// Resident cross-replica reduce output, in elements: `(full, per_shard)`
@@ -301,8 +452,20 @@ impl Trainer {
         out[0].scalar_f32().map_err(Into::into)
     }
 
-    /// Mean validation loss over `n` held-out batches.
+    /// Mean validation loss over `n` held-out batches. Under ZeRO-3 the
+    /// full parameters must be materialized first: bracket the call with
+    /// [`Trainer::gather_params`] / [`Trainer::release_params`] (the
+    /// training loop's eval cadence does this itself).
     pub fn evaluate(&self, n: usize) -> Result<f64> {
+        if self.opts.zero_level == 3
+            && self.params.len() != self.cfg.params.len()
+        {
+            return Err(anyhow!(
+                "ZeRO-3: no gather window is open — call \
+                 Trainer::gather_params before evaluate (and \
+                 release_params after)"
+            ));
+        }
         let sampler = |len: usize, rng: &mut Rng| self.corpus.sample(len, rng);
         let mut it = BatchIterator::new(
             &sampler,
@@ -324,12 +487,18 @@ impl Trainer {
     /// info). Both reduce levels (micro-batch mean per replica, then
     /// cross-replica mean) run through the pooled reduce-scatter path into
     /// reused buffers — bitwise identical to the serial per-tensor mean.
+    /// Under ZeRO-3 the step opens its own gather window: parameters are
+    /// all-gathered for the forward/backward passes and released the
+    /// moment the reduce-scatter has consumed the gradients — the weight
+    /// update then writes back only each shard's owned slices.
     pub fn train_one_step(
         &mut self,
         its: &mut [BatchIterator],
     ) -> Result<(f32, crate::optim::StepInfo)> {
         self.step += 1;
         let lr = self.schedule.lr(self.step);
+        // ZeRO-3: open the gather window for the forward/backward passes
+        self.gather_params()?;
         let mut bufs = std::mem::take(&mut self.reduce_bufs);
         if bufs.rep.len() != its.len() {
             bufs.rep.resize_with(its.len(), Vec::new);
@@ -348,8 +517,8 @@ impl Trainer {
             allreduce_mean_into(&micro_grads, rep_out, &self.reduce_pool)?;
             losses.push(mean_loss(&micro_losses));
         }
-        let info = if self.opts.zero_level == 2 {
-            // ZeRO-2: the cross-replica reduce is a reduce-scatter under
+        let info = if self.opts.zero_level >= 2 {
+            // ZeRO-2/3: the cross-replica reduce is a reduce-scatter under
             // the optimizer's ownership plan — each shard's averaged slice
             // goes straight into the sharded step, and the full
             // averaged-gradient vector is never materialized (`bufs.out`
@@ -361,8 +530,21 @@ impl Trainer {
                 &mut bufs.owned,
                 &self.reduce_pool,
             )?;
-            self.opt
-                .step_sharded_grads(&mut self.params, &bufs.owned, lr)?
+            if self.opts.zero_level == 3 {
+                // the reduce-scatter has consumed the gradients: close
+                // the gather window before the update, so the full
+                // parameters never outlive the forward/backward passes —
+                // the step writes back only the owned slices
+                self.release_params();
+                self.opt.step_sharded_params(
+                    &mut self.owned_params,
+                    &bufs.owned,
+                    lr,
+                )?
+            } else {
+                self.opt
+                    .step_sharded_grads(&mut self.params, &bufs.owned, lr)?
+            }
         } else {
             allreduce_mean_into(&bufs.rep, &mut bufs.out, &self.reduce_pool)?;
             self.opt.step(&mut self.params, &bufs.out, lr)?
@@ -421,7 +603,12 @@ impl Trainer {
             let do_eval = self.opts.eval_every > 0
                 && (t % self.opts.eval_every == 0 || t == self.opts.steps);
             let val = if do_eval {
-                Some(self.evaluate(self.opts.eval_batches)?)
+                // ZeRO-3: eval runs on the updated weights, so it opens
+                // its own gather window and releases it right after
+                self.gather_params()?;
+                let v = self.evaluate(self.opts.eval_batches)?;
+                self.release_params();
+                Some(v)
             } else {
                 None
             };
@@ -486,6 +673,12 @@ impl Trainer {
         lr: f32,
         eval_examples: usize,
     ) -> Result<f64> {
+        if self.opts.zero_level == 3 {
+            return Err(anyhow!(
+                "finetune runs on full parameters — restore the checkpoint \
+                 into a --zero 1|2 run instead of --zero 3"
+            ));
+        }
         let mut rng = Rng::new(self.opts.seed ^ 0xF17E);
         self.schedule = LrSchedule::new(lr, lr * 0.1, steps / 10 + 1, steps);
         for _ in 0..steps {
@@ -516,6 +709,15 @@ impl Trainer {
         n_examples: usize,
         rng: &mut Rng,
     ) -> Result<f64> {
+        if self.opts.zero_level == 3
+            && self.params.len() != self.cfg.params.len()
+        {
+            return Err(anyhow!(
+                "ZeRO-3: no gather window is open — call \
+                 Trainer::gather_params before task_accuracy (and \
+                 release_params after)"
+            ));
+        }
         let label_tokens = task.label_tokens();
         let (b, s, v) = (self.cfg.batch, self.cfg.seq_len, self.cfg.vocab);
         let mut correct = 0usize;

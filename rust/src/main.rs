@@ -71,8 +71,10 @@ fn print_help() {
          parallel compute core)]\n\
          \u{20}          [--shards N (ZeRO-1 optimizer-state shards; \
          needs --native; sharded checkpoints)]\n\
-         \u{20}          [--zero 1|2 (2 also reduce-scatters gradients: \
-         no full averaged-grad replica)]\n\
+         \u{20}          [--zero 1|2|3 (2 also reduce-scatters gradients: \
+         no full averaged-grad replica;\n\
+         \u{20}           3 also streams parameters: owned shards durable, \
+         full tensors gathered per step window)]\n\
          eval      --checkpoint PATH [--eval-batches N]\n\
          finetune  --checkpoint PATH --task 0..4 --steps N --lr F\n\
          memory    print Table 2 (exact analytic over GPT-2 inventories)\n\
@@ -150,9 +152,22 @@ fn cmd_train(args: &Args) -> Result<()> {
             config: config.to_string(),
             step: tr.step_count(),
             optimizer: tr.opt.name(),
-            params: tr.params.clone(),
+            params: if tr.opts.zero_level == 3 {
+                Vec::new()
+            } else {
+                tr.params.clone()
+            },
         };
-        if tr.opts.shards > 1 {
+        if tr.opts.zero_level == 3 {
+            // each shard file's payload comes straight from that shard's
+            // owned parameter list — no full materialization even at
+            // checkpoint time; restores into any shard count
+            ck.save_sharded_owned(p, tr.owned_params())?;
+            println!(
+                "sharded checkpoint ({} shards) saved to {p}",
+                tr.owned_params().len()
+            );
+        } else if tr.opts.shards > 1 {
             // per-shard files + head; restores into any shard count
             ck.save_sharded(p, tr.opts.shards)?;
             println!(
@@ -176,7 +191,9 @@ fn load_into_trainer(args: &Args, rt: Rc<Runtime>) -> Result<Trainer> {
     let h = hyper_from_args(args, &rt)?;
     let opts = train_options(args)?;
     let mut tr = Trainer::new(rt, &ck.config, h, opts)?;
-    tr.params = ck.params;
+    // below ZeRO-3 this installs the full list; under --zero 3 it
+    // scatters into the owned shards
+    tr.set_params(ck.params)?;
     println!("loaded {} @ step {} (pretrained with {})", ck.config, ck.step,
              ck.optimizer);
     Ok(tr)
@@ -184,7 +201,8 @@ fn load_into_trainer(args: &Args, rt: Rc<Runtime>) -> Result<Trainer> {
 
 fn cmd_eval(args: &Args) -> Result<()> {
     let rt = runtime(args)?;
-    let tr = load_into_trainer(args, rt)?;
+    let mut tr = load_into_trainer(args, rt)?;
+    tr.gather_params()?; // ZeRO-3: eval needs a gather window (no-op below)
     let n = args.usize_or("eval-batches", 8)?;
     let loss = tr.evaluate(n)?;
     println!("val loss {loss:.4}  ppl {:.2}  (over {n} batches)",

@@ -75,6 +75,27 @@ pub trait Optimizer {
         )
     }
 
+    /// ZeRO-3 entry point: apply one step where **both** the gradients and
+    /// the parameters live as per-shard owned lists — `owned_params[s]` and
+    /// `owned_grads[s]` each cover exactly `grad_shard_plan()[s]` (the
+    /// trainer's reduce-scatter fills the gradient side; the parameter
+    /// side is the durable sharded storage the forward/backward gather
+    /// window was materialized from). The weight update writes back only
+    /// the owned ranges: no full parameter list is assembled anywhere in
+    /// the step. The default refuses: only sharded backends override this.
+    fn step_sharded_params(
+        &mut self,
+        _owned_params: &mut [Vec<Tensor>],
+        _owned_grads: &[Vec<Tensor>],
+        _lr: f32,
+    ) -> Result<StepInfo> {
+        anyhow::bail!(
+            "{} does not support ZeRO-3 sharded parameters (no parameter \
+             shard plan)",
+            self.name()
+        )
+    }
+
     /// Human name for logs/tables.
     fn name(&self) -> String;
 

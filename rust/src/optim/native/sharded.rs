@@ -52,10 +52,11 @@ pub struct ShardedNativeOptimizer {
     pool: Pool,
     step: usize,
     /// ZeRO level this engine runs under (1 = sharded optimizer state
-    /// only, 2 = gradients sharded too) — affects only the reported name;
-    /// the state partitioning is identical, the gradient path is chosen by
-    /// the caller ([`Optimizer::step`] vs
-    /// [`Optimizer::step_sharded_grads`]).
+    /// only, 2 = gradients sharded too, 3 = parameters sharded too) —
+    /// affects only the reported name; the state partitioning is
+    /// identical, the gradient/parameter path is chosen by the caller
+    /// ([`Optimizer::step`] vs [`Optimizer::step_sharded_grads`] vs
+    /// [`Optimizer::step_sharded_params`]).
     zero_level: usize,
 }
 
@@ -101,10 +102,10 @@ impl ShardedNativeOptimizer {
         self
     }
 
-    /// Tag the engine with its ZeRO level (1 or 2) for logs and table
+    /// Tag the engine with its ZeRO level (1, 2 or 3) for logs and table
     /// labels; numerics are unaffected.
     pub fn with_zero_level(mut self, level: usize) -> Self {
-        self.zero_level = level.clamp(1, 2);
+        self.zero_level = level.clamp(1, 3);
         self
     }
 
@@ -134,17 +135,45 @@ impl ShardedNativeOptimizer {
         self.shards.iter().map(|s| s.bytes()).max().unwrap_or(0)
     }
 
-    /// The shared step core: one gradient slice per shard (`shard_grads[s]`
-    /// covers exactly `plan[s]`). Both the full-gradient [`Optimizer::step`]
-    /// and the ZeRO-2 [`Optimizer::step_sharded_grads`] reduce to this, so
-    /// the two paths build the identical job list — same parameters, same
-    /// order, same RNG streams — and stay bitwise identical by construction.
+    /// The shared step core: one parameter slice and one gradient slice per
+    /// shard (`shard_params[s]` / `shard_grads[s]` each cover exactly
+    /// `plan[s]`). The full-gradient [`Optimizer::step`], the ZeRO-2
+    /// [`Optimizer::step_sharded_grads`] and the ZeRO-3
+    /// [`Optimizer::step_sharded_params`] all reduce to this, so the three
+    /// paths build the identical job list — same parameters, same order,
+    /// same RNG streams — and stay bitwise identical by construction.
+    /// Each job mutates only its own shard's parameter slice, so under
+    /// ZeRO-3 the weight update writes back exactly the owned ranges.
     fn step_shard_slices(
         &mut self,
-        params: &mut [Tensor],
+        mut shard_params: Vec<&mut [Tensor]>,
         shard_grads: &[&[Tensor]],
         lr: f32,
     ) -> Result<StepInfo> {
+        if shard_params.len() != self.plan.len()
+            || shard_grads.len() != self.plan.len()
+        {
+            bail!(
+                "shard slice count mismatch: {} param lists, {} grad \
+                 lists, {} shards",
+                shard_params.len(),
+                shard_grads.len(),
+                self.plan.len()
+            );
+        }
+        for (s, range) in self.plan.iter().enumerate() {
+            if shard_params[s].len() != range.len()
+                || shard_grads[s].len() != range.len()
+            {
+                bail!(
+                    "shard {s} owns {} parameters but received {} params \
+                     and {} gradients",
+                    range.len(),
+                    shard_params[s].len(),
+                    shard_grads[s].len()
+                );
+            }
+        }
         self.step += 1;
         let t = self.step;
         for st in &mut self.shards {
@@ -158,26 +187,24 @@ impl ShardedNativeOptimizer {
         // order, same RNG streams — and the shared fan-out does the rest.
         let mut jobs: Vec<StepJob> = Vec::with_capacity(self.specs.len());
         {
-            let mut prest: &mut [Tensor] = params;
             let mut rrest: &mut [Rng] = &mut self.rngs;
-            for ((range, shard), &gh) in self
+            for (((range, shard), ph), &gh) in self
                 .plan
                 .iter()
                 .zip(self.shards.iter_mut())
+                .zip(shard_params.iter_mut())
                 .zip(shard_grads)
             {
                 let len = range.len();
-                let (ph, pt) = prest.split_at_mut(len);
                 let (rh, rt) = rrest.split_at_mut(len);
                 build_jobs(
                     &self.specs[range.clone()],
                     &mut shard.states,
                     rh,
-                    ph,
+                    &mut **ph,
                     gh,
                     &mut jobs,
                 )?;
-                prest = pt;
                 rrest = rt;
             }
         }
@@ -187,6 +214,19 @@ impl ShardedNativeOptimizer {
         info.state_bytes = self.shards.iter().map(|s| s.bytes()).sum();
         info.max_shard_bytes = self.max_shard_bytes();
         Ok(info)
+    }
+
+    /// Split a contiguous full parameter list into per-shard mutable
+    /// slices under the ownership plan (in order, by construction).
+    fn split_params<'a>(&self, params: &'a mut [Tensor]) -> Vec<&'a mut [Tensor]> {
+        let mut out = Vec::with_capacity(self.plan.len());
+        let mut rest = params;
+        for range in &self.plan {
+            let (h, t) = rest.split_at_mut(range.len());
+            out.push(h);
+            rest = t;
+        }
+        out
     }
 }
 
@@ -208,7 +248,8 @@ impl Optimizer for ShardedNativeOptimizer {
         }
         let shard_grads: Vec<&[Tensor]> =
             self.plan.iter().map(|r| &grads[r.clone()]).collect();
-        self.step_shard_slices(params, &shard_grads, lr)
+        let shard_params = self.split_params(params);
+        self.step_shard_slices(shard_params, &shard_grads, lr)
     }
 
     fn grad_shard_plan(&self) -> Option<Vec<Range<usize>>> {
@@ -248,7 +289,23 @@ impl Optimizer for ShardedNativeOptimizer {
         }
         let shard_grads: Vec<&[Tensor]> =
             owned_grads.iter().map(|v| v.as_slice()).collect();
-        self.step_shard_slices(params, &shard_grads, lr)
+        let shard_params = self.split_params(params);
+        self.step_shard_slices(shard_params, &shard_grads, lr)
+    }
+
+    fn step_sharded_params(
+        &mut self,
+        owned_params: &mut [Vec<Tensor>],
+        owned_grads: &[Vec<Tensor>],
+        lr: f32,
+    ) -> Result<StepInfo> {
+        // shard counts and per-shard lengths are validated by the shared
+        // core — one source of truth for all three entry points
+        let shard_grads: Vec<&[Tensor]> =
+            owned_grads.iter().map(|v| v.as_slice()).collect();
+        let shard_params: Vec<&mut [Tensor]> =
+            owned_params.iter_mut().map(|v| v.as_mut_slice()).collect();
+        self.step_shard_slices(shard_params, &shard_grads, lr)
     }
 
     fn state_bytes(&self) -> u64 {
@@ -623,6 +680,146 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn zero3_sharded_param_step_bitwise_matches_unsharded() {
+        // the ZeRO-3 optimizer-level bar: updating per-shard owned
+        // parameter lists in place (no full parameter list anywhere in
+        // the step) reproduces the unsharded full-gradient weights AND
+        // telemetry exactly for every (shards, threads) combination
+        for kind in [OptKind::Adapprox, OptKind::Adafactor] {
+            let h = Hyper::paper_defaults(kind, &hd());
+            let base = run_opt(
+                Box::new(
+                    NativeOptimizer::new(specs6(), h.clone(), &ladder, 13)
+                        .unwrap(),
+                ),
+                12,
+            );
+            for shards in [1usize, 2, 4] {
+                for threads in [1usize, 2, 4] {
+                    let mut opt = ShardedNativeOptimizer::new(
+                        specs6(),
+                        h.clone(),
+                        &ladder,
+                        13,
+                        shards,
+                    )
+                    .unwrap()
+                    .with_threads(threads)
+                    .with_zero_level(3);
+                    let plan = opt.plan().to_vec();
+                    let mut rng = Rng::new(17);
+                    let full: Vec<Tensor> = specs6()
+                        .iter()
+                        .map(|s| {
+                            Tensor::f32(
+                                s.shape.clone(),
+                                rng.normal_vec_f32(s.numel()),
+                            )
+                        })
+                        .collect();
+                    // durable storage: each shard holds only its slice
+                    let mut owned_params: Vec<Vec<Tensor>> = plan
+                        .iter()
+                        .map(|r| full[r.clone()].to_vec())
+                        .collect();
+                    let mut tele = vec![];
+                    for _ in 0..12 {
+                        // gradients are drawn against the *current* merged
+                        // weights so the run matches run_opt's sequence
+                        let grads: Vec<Tensor> = owned_params
+                            .iter()
+                            .flatten()
+                            .map(|t| {
+                                Tensor::f32(
+                                    t.shape.clone(),
+                                    rng.normal_vec_f32(t.numel()),
+                                )
+                            })
+                            .collect();
+                        let owned_grads = scatter_grads(&grads, &plan);
+                        let info = opt
+                            .step_sharded_params(
+                                &mut owned_params,
+                                &owned_grads,
+                                1e-3,
+                            )
+                            .unwrap();
+                        tele.push((info.mean_xi, info.mean_rank));
+                    }
+                    // plan order is manifest order: flatten == full list
+                    let weights: Vec<Vec<f32>> = owned_params
+                        .iter()
+                        .flatten()
+                        .map(|p| p.as_f32().unwrap().to_vec())
+                        .collect();
+                    assert_eq!(
+                        base.0, weights,
+                        "{kind:?} weights diverged at shards={shards} \
+                         threads={threads}"
+                    );
+                    assert_eq!(
+                        base.1, tele,
+                        "{kind:?} telemetry diverged at shards={shards} \
+                         threads={threads}"
+                    );
+                    assert!(
+                        opt.name().contains(&format!("zero3x{shards}")),
+                        "{}",
+                        opt.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero3_sharded_param_step_rejects_mismatched_slices() {
+        let h = Hyper::paper_defaults(OptKind::Adapprox, &hd());
+        let mut opt = ShardedNativeOptimizer::new(specs6(), h, &ladder, 3, 2)
+            .unwrap()
+            .with_zero_level(3);
+        let plan = opt.plan().to_vec();
+        let mut rng = Rng::new(23);
+        let full: Vec<Tensor> = specs6()
+            .iter()
+            .map(|s| {
+                Tensor::f32(s.shape.clone(), rng.normal_vec_f32(s.numel()))
+            })
+            .collect();
+        let mut owned_params: Vec<Vec<Tensor>> =
+            plan.iter().map(|r| full[r.clone()].to_vec()).collect();
+        let grads: Vec<Tensor> = full
+            .iter()
+            .map(|t| {
+                Tensor::f32(t.shape.clone(), rng.normal_vec_f32(t.numel()))
+            })
+            .collect();
+        let owned_grads = scatter_grads(&grads, &plan);
+        // wrong outer (shard-list) count on the parameter side
+        let mut one = owned_params.clone();
+        one.pop();
+        assert!(opt
+            .step_sharded_params(&mut one, &owned_grads, 1e-3)
+            .is_err());
+        // wrong inner (per-shard) count on the parameter side
+        let mut bad = owned_params.clone();
+        bad[1].pop();
+        assert!(opt
+            .step_sharded_params(&mut bad, &owned_grads, 1e-3)
+            .is_err());
+        // wrong inner count on the gradient side
+        let mut badg = owned_grads.clone();
+        badg[0].pop();
+        assert!(opt
+            .step_sharded_params(&mut owned_params, &badg, 1e-3)
+            .is_err());
+        // intact slices still step fine afterwards
+        assert!(opt
+            .step_sharded_params(&mut owned_params, &owned_grads, 1e-3)
+            .is_ok());
     }
 
     #[test]

@@ -32,7 +32,9 @@ pub fn run(args: &Args) -> Result<()> {
     let mut base = common::trainer(args, rt.clone(), config, OptKind::AdamW,
                                    pretrain_steps, None)?;
     base.run()?;
-    let base_params = base.params.clone();
+    // full_params() merges owned shards under --zero 3 (base.params is
+    // the released gather buffer there, not the weights)
+    let base_params = base.full_params();
 
     let path = common::results_dir().join("fig5_lr_sensitivity.csv");
     let mut csv = CsvWriter::create(&path, &["optimizer", "lr", "accuracy"])?;
@@ -48,7 +50,7 @@ pub fn run(args: &Args) -> Result<()> {
         for lr in lrs {
             let mut ft = common::trainer(args, rt.clone(), config, kind,
                                          ft_steps, None)?;
-            ft.params = base_params.clone();
+            ft.set_params(base_params.clone())?;
             let acc = ft.finetune_task(task, ft_steps, lr, eval_examples)?;
             csv.row_mixed(&[
                 kind.name().to_string(),

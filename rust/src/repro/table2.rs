@@ -86,7 +86,9 @@ pub fn run(args: &Args) -> Result<()> {
         // `memory --shards N`: the per-replica footprint under ZeRO
         // sharding — largest single shard per optimizer row, plus the
         // ZeRO-2 gradient rows (full averaged-grad replica vs the largest
-        // owned slice after the `--zero 2` reduce-scatter)
+        // owned slice after the `--zero 2` reduce-scatter) and the ZeRO-3
+        // parameter rows (full weight replica vs the largest durable
+        // owned slice outside the `--zero 3` gather window)
         let shards = args.usize_or("shards", 1)?;
         if shards > 1 {
             println!(
@@ -104,8 +106,9 @@ pub fn run(args: &Args) -> Result<()> {
                 println!("{:<28} {:>12} {:>10}", r.label, mb, pct);
             }
             println!(
-                "(grad rows: % is of the full gradient replica — the \
-                 ZeRO-2 `--zero 2` saving)"
+                "(grad/param rows: % is of the full gradient/parameter \
+                 replica — the ZeRO-2 `--zero 2` and ZeRO-3 `--zero 3` \
+                 savings)"
             );
         }
     }

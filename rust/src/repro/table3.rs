@@ -46,7 +46,9 @@ pub fn run(args: &Args) -> Result<()> {
             config: config.to_string(),
             step: tr.step_count(),
             optimizer: kind.name().to_string(),
-            params: tr.params.clone(),
+            // full_params() merges owned shards under --zero 3 (tr.params
+            // is the released gather buffer there, not the weights)
+            params: tr.full_params(),
         };
         let ck_path = common::results_dir()
             .join(format!("table3_{}_{}.ckpt", config, kind.name()));
@@ -58,7 +60,7 @@ pub fn run(args: &Args) -> Result<()> {
             // per-task LR; cosine guidance off in fine-tuning)
             let mut ft = common::trainer(args, rt.clone(), config, kind,
                                          ft_steps, None)?;
-            ft.params = ckpt.params.clone();
+            ft.set_params(ckpt.params.clone())?;
             let acc = ft.finetune_task(task, ft_steps, ft_lr, eval_examples)?;
             accs.push(acc);
             csv.row_mixed(&[

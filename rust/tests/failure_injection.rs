@@ -329,6 +329,137 @@ fn sharded_checkpoint_under_zero2_training_fails_cleanly_and_recovers() {
 }
 
 #[test]
+fn zero3_parameter_shard_checkpoint_crash_leaves_old_generation_loadable() {
+    // artifact-free ZeRO-3 layout checks: parameter payloads live in the
+    // per-shard files (written straight from owned lists); a crash
+    // mid-save — newer-generation shard files on disk, head never
+    // republished — must leave the old generation fully loadable, a
+    // truncated or missing current shard must fail cleanly, and the next
+    // successful save collects the orphans
+    use adapprox::optim::shard_ranges;
+    let mut rng = Rng::new(0x5AD3);
+    let params: Vec<Tensor> = vec![
+        Tensor::f32(vec![12, 8], rng.normal_vec_f32(96)),
+        Tensor::f32(vec![30], rng.normal_vec_f32(30)),
+        Tensor::f32(vec![6, 9], rng.normal_vec_f32(54)),
+    ];
+    let numels: Vec<usize> = params.iter().map(|t| t.numel()).collect();
+    let plan = shard_ranges(&numels, 2);
+    let owned: Vec<Vec<Tensor>> =
+        plan.iter().map(|r| params[r.clone()].to_vec()).collect();
+    let meta = |step: usize| Checkpoint {
+        config: "micro".into(),
+        step,
+        optimizer: "adapprox(native,zero3x2)".into(),
+        params: vec![],
+    };
+    let dir = std::env::temp_dir().join(format!(
+        "adapprox_zero3_crash_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let head = dir.join("model.ckpt");
+    meta(11).save_sharded_owned(&head, &owned).unwrap();
+    assert_eq!(Checkpoint::load_auto(&head).unwrap().params, params);
+    // simulated crash of a later save: its shard files landed, the head
+    // rename never happened — the published (old) generation still loads
+    for orphan in ["model.ckpt.shard0of2.g999-9",
+                   "model.ckpt.shard1of2.g999-9"] {
+        std::fs::write(dir.join(orphan), b"partial write").unwrap();
+    }
+    let back = Checkpoint::load_auto(&head).unwrap();
+    assert_eq!(back.params, params, "old generation no longer loads");
+    assert_eq!(back.step, 11);
+    // a truncated current-generation parameter shard fails cleanly
+    let victim = Checkpoint::shard_files(&head).unwrap()[1].clone();
+    let pristine = std::fs::read(&victim).unwrap();
+    std::fs::write(&victim, &pristine[..pristine.len() - 9]).unwrap();
+    assert!(Checkpoint::load_auto(&head).is_err(), "truncated shard loaded");
+    // ... as does a missing one
+    std::fs::remove_file(&victim).unwrap();
+    let err = Checkpoint::load_auto(&head).unwrap_err();
+    assert!(format!("{err:#}").contains("missing shard"), "{err:#}");
+    // restoring the pristine bytes recovers the checkpoint — the failures
+    // damaged nothing else
+    std::fs::write(&victim, pristine).unwrap();
+    assert_eq!(Checkpoint::load_auto(&head).unwrap().params, params);
+    // the next successful save garbage-collects the orphaned generation
+    meta(12).save_sharded_owned(&head, &owned).unwrap();
+    for orphan in ["model.ckpt.shard0of2.g999-9",
+                   "model.ckpt.shard1of2.g999-9"] {
+        assert!(!dir.join(orphan).exists(), "{orphan} survived the GC");
+    }
+    assert_eq!(Checkpoint::load_auto(&head).unwrap().step, 12);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn zero3_checkpoint_under_training_fails_cleanly_and_recovers() {
+    // checkpoint save/load under `--zero 3`: train with streamed
+    // parameters, save the sharded checkpoint straight from the owned
+    // shards, inject a truncated and a missing parameter-shard failure
+    // (clean errors, nothing else damaged), then restore and resume into
+    // another ZeRO-3 run
+    let Some(rt) = runtime() else { return };
+    let hyper = Hyper::paper_defaults(OptKind::Adapprox, &rt.manifest.hyper);
+    let mut opts = TrainOptions {
+        steps: 3,
+        warmup: 1,
+        eval_every: 0,
+        log_every: usize::MAX,
+        seed: 31,
+        native: true,
+        replicas: 2,
+        shards: 2,
+        threads: 2,
+        zero_level: 3,
+        ..Default::default()
+    };
+    let mut tr =
+        Trainer::new(rt.clone(), "micro", hyper.clone(), opts.clone())
+            .unwrap();
+    tr.run().unwrap();
+    assert!(tr.opt.name().contains("zero3x2"), "{}", tr.opt.name());
+    let full = tr.full_params();
+    let dir = std::env::temp_dir().join(format!(
+        "adapprox_zero3_ckpt_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let head = dir.join("model.ckpt");
+    Checkpoint {
+        config: "micro".into(),
+        step: tr.step_count(),
+        optimizer: tr.opt.name(),
+        params: vec![],
+    }
+    .save_sharded_owned(&head, tr.owned_params())
+    .unwrap();
+    // inject: truncate one parameter shard — load must fail cleanly
+    let victim = Checkpoint::shard_files(&head).unwrap()[0].clone();
+    let pristine = std::fs::read(&victim).unwrap();
+    std::fs::write(&victim, &pristine[..pristine.len() / 2]).unwrap();
+    assert!(Checkpoint::load_auto(&head).is_err(), "truncated shard loaded");
+    // inject: remove it entirely
+    std::fs::remove_file(&victim).unwrap();
+    let err = Checkpoint::load_auto(&head).unwrap_err();
+    assert!(format!("{err:#}").contains("missing shard"), "{err:#}");
+    // recover: restore the file, merge, resume under ZeRO-3
+    std::fs::write(&victim, pristine).unwrap();
+    let back = Checkpoint::load_auto(&head).unwrap();
+    assert_eq!(back.params, full);
+    opts.seed = 32;
+    let mut tr2 = Trainer::new(rt, "micro", hyper, opts).unwrap();
+    tr2.set_params(back.params).unwrap();
+    let hist = tr2.run().unwrap();
+    assert!(hist.iter().all(|r| r.train_loss.is_finite()));
+    assert_eq!(tr2.param_buffer_elems(), 0);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
 fn second_moments_exposed_for_all_backends() {
     let Some(rt) = runtime() else { return };
     for kind in [OptKind::AdamW, OptKind::Adafactor, OptKind::Came,

@@ -93,7 +93,9 @@ fn sharded_native_training_bitwise_matches_unsharded() {
     // across data-parallel replicas and a refresh step — reproduces the
     // unsharded single-threaded losses AND final weights exactly.
     // ZeRO-2 (gradients reduce-scattered, owned slices consumed directly)
-    // must be bitwise identical to ZeRO-1 and to the unsharded path.
+    // and ZeRO-3 (parameters durable only as owned shards, gathered per
+    // step window, updates written back to owned slices only) must be
+    // bitwise identical to ZeRO-1 and to the unsharded path.
     let Some(rt) = runtime() else { return };
     let hyper = Hyper::paper_defaults(OptKind::Adapprox, &rt.manifest.hyper);
     for replicas in [1usize, 2, 4] {
@@ -111,8 +113,10 @@ fn sharded_native_training_bitwise_matches_unsharded() {
             let losses: Vec<f64> =
                 hist.iter().map(|r| r.train_loss).collect();
             let xis: Vec<f64> = hist.iter().map(|r| r.mean_xi).collect();
+            // full_params merges the owned shards under ZeRO-3 and is the
+            // plain parameter list below — one comparison for all levels
             let weights: Vec<Vec<f32>> = tr
-                .params
+                .full_params()
                 .iter()
                 .map(|p| p.as_f32().unwrap().to_vec())
                 .collect();
@@ -131,10 +135,15 @@ fn sharded_native_training_bitwise_matches_unsharded() {
                 (2, 2, 2),
                 (4, 2, 2),
                 (4, 4, 2),
+                (1, 1, 3),
+                (2, 1, 3),
+                (2, 2, 3),
+                (4, 2, 3),
+                (4, 4, 3),
             ]
         } else {
             // cheaper spot checks at replicas ∈ {1, 4}
-            &[(2, 2, 1), (2, 2, 2), (4, 2, 2)]
+            &[(2, 2, 1), (2, 2, 2), (4, 2, 2), (2, 2, 3), (4, 2, 3)]
         };
         for &(shards, threads, zero) in combos {
             let got = run(shards, threads, zero);
@@ -182,6 +191,63 @@ fn zero2_shards_the_averaged_gradient_buffers() {
 }
 
 #[test]
+fn zero3_shards_the_parameter_buffers() {
+    // the ZeRO-3 acceptance assertion at trainer level: outside the
+    // gather window no replica holds full parameters — the durable
+    // per-shard parameter bytes match the analytic `shard_param_bytes`
+    // accounting exactly, and the retained gather buffer is not merely
+    // under the single-bucket acceptance bound but exactly 0 (the
+    // release policy drops the allocations outright)
+    use adapprox::coordinator::memory::{param_bytes, shard_param_bytes};
+    let Some(rt) = runtime() else { return };
+    let hyper = Hyper::paper_defaults(OptKind::Adapprox, &rt.manifest.hyper);
+    let mut opts = quick_opts(3, 15);
+    opts.native = true;
+    opts.replicas = 2;
+    opts.shards = 2;
+    opts.threads = 2;
+    opts.zero_level = 3;
+    // exercise the eval-window path too (gather -> eval -> release)
+    opts.eval_every = 2;
+    let mut tr = Trainer::new(rt, "micro", hyper, opts).unwrap();
+    let hist = tr.run().unwrap();
+    assert!(hist.iter().all(|r| r.train_loss.is_finite()));
+    assert!(hist.iter().any(|r| r.val_loss.is_some()));
+    // outside any window: gather buffer fully released
+    assert_eq!(tr.param_buffer_elems(), 0, "gather window left open");
+    assert!(tr.params.is_empty(), "full parameter list is resident");
+    // durable parameters == the analytic per-shard pricing, exactly
+    let total: usize = tr.cfg.params.iter().map(|p| p.numel()).sum();
+    let per_shard = tr.owned_param_elems();
+    assert_eq!(per_shard.iter().sum::<usize>(), total);
+    assert!(
+        per_shard.iter().all(|&e| e < total),
+        "a shard durably holds the full parameters: {per_shard:?}"
+    );
+    let analytic = shard_param_bytes(&tr.cfg, 2);
+    let live: Vec<u64> = per_shard.iter().map(|&e| 4 * e as u64).collect();
+    assert_eq!(live, analytic);
+    assert_eq!(analytic.iter().sum::<u64>(), param_bytes(&tr.cfg));
+    // the gradient side still holds the ZeRO-2 invariant
+    let (full, grad_shards) = tr.averaged_grad_buffer_elems();
+    assert_eq!(full, 0, "full averaged-gradient buffer was materialized");
+    assert_eq!(grad_shards.iter().sum::<usize>(), total);
+    assert!(tr.opt.name().contains("zero3x2"), "{}", tr.opt.name());
+    // an explicit gather window materializes exactly the full list for
+    // out-of-loop consumers, and closes back down to zero
+    tr.gather_params().unwrap();
+    assert_eq!(tr.param_buffer_elems(), total);
+    let val = tr.evaluate(1).unwrap();
+    assert!(val.is_finite());
+    tr.release_params();
+    assert_eq!(tr.param_buffer_elems(), 0);
+    // without a window, evaluation refuses cleanly instead of executing
+    // on an empty parameter list
+    let err = tr.evaluate(1).unwrap_err();
+    assert!(err.to_string().contains("gather window"), "{err}");
+}
+
+#[test]
 fn zero2_requires_native_backend() {
     let Some(rt) = runtime() else { return };
     let hyper = Hyper::paper_defaults(OptKind::Adapprox, &rt.manifest.hyper);
@@ -192,10 +258,18 @@ fn zero2_requires_native_backend() {
         Ok(_) => panic!("expected --zero 2/--native error"),
     };
     assert!(err.to_string().contains("native"), "{err}");
+    // --zero 3 without --native is the same clean construction error
+    let mut opts = quick_opts(1, 16);
+    opts.zero_level = 3;
+    let err = match Trainer::new(rt.clone(), "micro", hyper.clone(), opts) {
+        Err(e) => e,
+        Ok(_) => panic!("expected --zero 3/--native error"),
+    };
+    assert!(err.to_string().contains("native"), "{err}");
     // and an out-of-range level is rejected up front
     let mut opts = quick_opts(1, 16);
     opts.native = true;
-    opts.zero_level = 3;
+    opts.zero_level = 4;
     let err = match Trainer::new(rt, "micro", hyper, opts) {
         Err(e) => e,
         Ok(_) => panic!("expected --zero range error"),
