@@ -1,0 +1,127 @@
+//! Comms transport benchmarks: the overhead budget of the fault-tolerant
+//! data-parallel path. Three questions, bottom of the stack upward:
+//!
+//! 1. What does the frame codec (header build + CRC-32 over the payload)
+//!    cost per byte?
+//! 2. What is a framed roundtrip through each carrier — in-process
+//!    channel vs loopback TCP?
+//! 3. What does a full `Cluster::reduce` collective cost over the inproc
+//!    transport, against the same `allreduce_mean_into` kernel called
+//!    directly (the in-memory path it must match bitwise)?
+//!
+//! Set BENCH_JSON=BENCH_comms.json to record machine-readable lines.
+
+use std::cell::Cell;
+use std::time::Duration;
+
+use adapprox::bench::{header, Bench};
+use adapprox::comms::{
+    decode_frame, encode_frame, ChannelPipe, Cluster, CommsOptions, Pipe,
+    ReduceMode, TcpPipe, TransportKind,
+};
+use adapprox::coordinator::allreduce_mean_into;
+use adapprox::runtime::Tensor;
+use adapprox::util::pool::Pool;
+use adapprox::util::rng::Rng;
+
+fn payload(n: usize, rng: &mut Rng) -> Vec<u8> {
+    (0..n).map(|_| (rng.next_u64() & 0xFF) as u8).collect()
+}
+
+/// Gradient-shaped tensor sets for `replicas` ranks: a few mixed shapes
+/// totalling roughly `elems` f32 elements per rank.
+fn grad_sets(replicas: usize, elems: usize, rng: &mut Rng) -> Vec<Vec<Tensor>> {
+    let big = elems * 8 / 10;
+    let shapes = [vec![big / 64, 64], vec![elems / 10], vec![elems / 10]];
+    (0..replicas)
+        .map(|_| {
+            shapes
+                .iter()
+                .map(|s| {
+                    let n: usize = s.iter().product();
+                    Tensor::f32(s.clone(), rng.normal_vec_f32(n))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn bench_framer(b: &Bench, rng: &mut Rng) {
+    header("frame codec: header + CRC-32 per payload size");
+    for &n in &[1usize << 10, 1 << 16, 1 << 20] {
+        let p = payload(n, rng);
+        let frame = encode_frame(&p).unwrap();
+        b.run(&format!("encode_frame_{n}B"), || {
+            std::hint::black_box(encode_frame(&p).unwrap());
+        });
+        b.run(&format!("decode_frame_{n}B"), || {
+            std::hint::black_box(decode_frame(&frame).unwrap());
+        });
+    }
+}
+
+fn bench_pipes(b: &Bench, rng: &mut Rng) {
+    header("framed roundtrip: channel vs loopback tcp");
+    let timeout = Duration::from_secs(5);
+    for &n in &[1usize << 10, 1 << 16, 1 << 20] {
+        let frame = encode_frame(&payload(n, rng)).unwrap();
+
+        let (mut ca, mut cb) = ChannelPipe::pair("a", "b");
+        b.run(&format!("channel_roundtrip_{n}B"), || {
+            ca.send(&frame).unwrap();
+            let echo = cb.recv(timeout).unwrap();
+            cb.send(&echo).unwrap();
+            std::hint::black_box(ca.recv(timeout).unwrap());
+        });
+
+        let (mut ta, mut tb) =
+            TcpPipe::pair("a", "b", timeout).expect("loopback pair");
+        b.run(&format!("tcp_roundtrip_{n}B"), || {
+            ta.send(&frame).unwrap();
+            let echo = tb.recv(timeout).unwrap();
+            tb.send(&echo).unwrap();
+            std::hint::black_box(ta.recv(timeout).unwrap());
+        });
+    }
+}
+
+fn bench_cluster_reduce(b: &Bench, rng: &mut Rng) {
+    header("allreduce: direct kernel vs inproc cluster collective");
+    let opts = CommsOptions {
+        transport: TransportKind::Inproc,
+        poll: Duration::from_micros(200),
+        ..CommsOptions::default()
+    };
+    for &(replicas, elems) in &[(2usize, 1usize << 14), (4, 1 << 14)] {
+        let per_replica = grad_sets(replicas, elems, rng);
+
+        let pool = Pool::new(1);
+        let mut out = Vec::new();
+        b.run(&format!("allreduce_direct_r{replicas}_{elems}el"), || {
+            allreduce_mean_into(&per_replica, &mut out, &pool).unwrap();
+            std::hint::black_box(&out);
+        });
+
+        let mut cluster =
+            Cluster::connect(replicas, ReduceMode::AllReduce, &opts)
+                .expect("inproc cluster");
+        let step = Cell::new(0u64);
+        b.run(&format!("allreduce_cluster_r{replicas}_{elems}el"), || {
+            // monotonic step: a repeated step would be served from the
+            // orchestrator's idempotency cache, measuring nothing
+            step.set(step.get() + 1);
+            std::hint::black_box(
+                cluster.reduce(step.get(), &per_replica).unwrap(),
+            );
+        });
+        cluster.shutdown().expect("clean shutdown");
+    }
+}
+
+fn main() {
+    let b = Bench::default().with_json_from_env();
+    let mut rng = Rng::new(0xC0_0515);
+    bench_framer(&b, &mut rng);
+    bench_pipes(&b, &mut rng);
+    bench_cluster_reduce(&b, &mut rng);
+}

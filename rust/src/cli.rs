@@ -139,6 +139,24 @@ mod tests {
     }
 
     #[test]
+    fn parses_transport_invocation() {
+        // the fault-tolerant comms invocation: --transport takes a value,
+        // --checkpoint-every / --max-recoveries parse as integers
+        let a = Args::parse(&argv(
+            "train --native --replicas 2 --transport tcp \
+             --checkpoint ck.adpx --checkpoint-every 5 --max-recoveries 3",
+        ))
+        .unwrap();
+        assert_eq!(a.flag("transport"), Some("tcp"));
+        assert_eq!(a.flag("checkpoint"), Some("ck.adpx"));
+        assert_eq!(a.usize_or("checkpoint-every", 0).unwrap(), 5);
+        assert_eq!(a.usize_or("max-recoveries", 2).unwrap(), 3);
+        // absent transport stays in-memory (None at the option layer)
+        let b = Args::parse(&argv("train --native")).unwrap();
+        assert_eq!(b.flag("transport"), None);
+    }
+
+    #[test]
     fn defaults() {
         let a = Args::parse(&argv("memory")).unwrap();
         assert_eq!(a.usize_or("steps", 7).unwrap(), 7);

@@ -1,0 +1,393 @@
+//! Cluster assembly: builds the full transport stack for every rank,
+//! spawns the orchestrator service thread, and exposes the two
+//! collectives the trainer needs (`reduce`, `all_gather`) as deadline-
+//! bounded, retrying calls.
+//!
+//! The trainer process drives one [`WorkerHandle`] per data-parallel
+//! replica; each handle talks to the orchestrator over its own connection
+//! ([`ChannelPipe`] for `--transport inproc`, a real loopback socket for
+//! `--transport tcp`). Collectives are two-phase — send every rank's
+//! contribution, then collect every rank's reply — so the orchestrator
+//! can wait for the full set without deadlocking its clients.
+//!
+//! Fault injection threads through [`Cluster::connect_with_faults`]: a
+//! per-rank [`FaultPlan`] wraps that rank's pipe below the framing layer,
+//! exactly where a flaky wire would sit.
+
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use super::fault::{FaultPipe, FaultPlan};
+use super::handles::{Orchestrator, ReduceMode, WorkerHandle};
+use super::pipe::{ChannelPipe, Pipe, TcpPipe};
+use super::transport::{Framed, Timeouter, Transport};
+use super::CommsError;
+use crate::runtime::tensor::Tensor;
+use crate::util::Backoff;
+
+/// Which carrier the cluster's pipes run on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process channels: the reference transport, bitwise identical to
+    /// the thread-multiplexed path and fast enough for every test.
+    Inproc,
+    /// Loopback TCP sockets through the full framing/segmentation path.
+    Tcp,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> anyhow::Result<TransportKind> {
+        match s {
+            "inproc" | "channel" => Ok(TransportKind::Inproc),
+            "tcp" => Ok(TransportKind::Tcp),
+            other => anyhow::bail!(
+                "unknown transport '{other}' (expected 'inproc' or 'tcp')"
+            ),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Inproc => "inproc",
+            TransportKind::Tcp => "tcp",
+        }
+    }
+}
+
+/// Robustness knobs for a cluster. Defaults are production-ish; tests
+/// shrink the timeouts to keep chaos runs fast.
+#[derive(Clone, Debug)]
+pub struct CommsOptions {
+    pub transport: TransportKind,
+    /// Deadline for any single protocol receive.
+    pub op_timeout: Duration,
+    /// Bounded retry attempts per protocol op.
+    pub attempts: u32,
+    /// First backoff delay; doubles per attempt up to `backoff_cap`.
+    pub backoff_base: Duration,
+    pub backoff_cap: Duration,
+    /// Orchestrator per-connection poll slice.
+    pub poll: Duration,
+    /// Orchestrator gives up after this long with no traffic at all.
+    pub idle_budget: Duration,
+    /// Threads for the orchestrator's reduce pool. Must match the
+    /// in-process path's pool for bitwise-identical bucketing.
+    pub threads: usize,
+    /// Seed for backoff jitter (per-rank streams are derived from it).
+    pub seed: u64,
+}
+
+impl Default for CommsOptions {
+    fn default() -> CommsOptions {
+        CommsOptions {
+            transport: TransportKind::Inproc,
+            op_timeout: Duration::from_secs(30),
+            attempts: 4,
+            backoff_base: Duration::from_millis(5),
+            backoff_cap: Duration::from_millis(200),
+            poll: Duration::from_millis(5),
+            idle_budget: Duration::from_secs(60),
+            threads: 1,
+            seed: 0x636f_6d6d_73,
+        }
+    }
+}
+
+/// A connected data-parallel cluster: one worker handle per replica plus
+/// the orchestrator service thread.
+pub struct Cluster {
+    workers: Vec<WorkerHandle>,
+    orchestrator: Option<JoinHandle<Result<(), CommsError>>>,
+}
+
+impl Cluster {
+    pub fn connect(
+        replicas: usize,
+        mode: ReduceMode,
+        opts: &CommsOptions,
+    ) -> anyhow::Result<Cluster> {
+        Cluster::connect_with_faults(replicas, mode, opts, |_| None)
+    }
+
+    /// Like [`Cluster::connect`], with a per-rank fault schedule injected
+    /// below the framing layer of that rank's pipe.
+    pub fn connect_with_faults(
+        replicas: usize,
+        mode: ReduceMode,
+        opts: &CommsOptions,
+        fault_for_rank: impl Fn(usize) -> Option<FaultPlan>,
+    ) -> anyhow::Result<Cluster> {
+        let replicas = replicas.max(1);
+        let mut workers = Vec::with_capacity(replicas);
+        let mut conns: Vec<Box<dyn Transport>> =
+            Vec::with_capacity(replicas);
+        for rank in 0..replicas {
+            let name = format!("rank {rank}");
+            let (w_pipe, o_pipe): (Box<dyn Pipe>, Box<dyn Pipe>) =
+                match opts.transport {
+                    TransportKind::Inproc => {
+                        let (w, o) = ChannelPipe::pair(&name,
+                                                       "orchestrator");
+                        (Box::new(w), Box::new(o))
+                    }
+                    TransportKind::Tcp => {
+                        let (w, o) = TcpPipe::pair(
+                            &name,
+                            "orchestrator",
+                            opts.op_timeout,
+                        )?;
+                        (Box::new(w), Box::new(o))
+                    }
+                };
+            let w_pipe: Box<dyn Pipe> = match fault_for_rank(rank) {
+                Some(plan) => Box::new(FaultPipe::new(w_pipe, plan)),
+                None => w_pipe,
+            };
+            let transport =
+                Timeouter::new(Framed::new(w_pipe), opts.op_timeout);
+            workers.push(WorkerHandle::new(
+                rank as u32,
+                Box::new(transport),
+                opts.op_timeout,
+                opts.attempts,
+                Backoff::new(
+                    opts.backoff_base,
+                    opts.backoff_cap,
+                    opts.seed ^ (rank as u64).wrapping_mul(0x9E37_79B9),
+                ),
+            ));
+            conns.push(Box::new(Framed::new(o_pipe)));
+        }
+        let orch = Orchestrator::new(
+            conns,
+            mode,
+            opts.threads,
+            opts.poll,
+            opts.idle_budget,
+        );
+        let handle = thread::Builder::new()
+            .name("comms-orchestrator".to_string())
+            .spawn(move || orch.run())?;
+        Ok(Cluster { workers, orchestrator: Some(handle) })
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Reduce collective over all ranks. Phase A contributes every rank's
+    /// gradients; phase B collects every rank's reply (each is the same
+    /// full per-shard reduction — this process hosts all shards). Returns
+    /// the per-shard owned lists in plan order.
+    pub fn reduce(
+        &mut self,
+        step: u64,
+        per_replica: &[Vec<Tensor>],
+    ) -> Result<Vec<Vec<Tensor>>, CommsError> {
+        if per_replica.len() != self.workers.len() {
+            return Err(CommsError::Protocol {
+                what: format!(
+                    "reduce got {} replica gradient sets for {} ranks",
+                    per_replica.len(),
+                    self.workers.len()
+                ),
+            });
+        }
+        for (r, w) in self.workers.iter_mut().enumerate() {
+            w.send_grads(step, &per_replica[r])?;
+        }
+        let mut first = None;
+        for (r, w) in self.workers.iter_mut().enumerate() {
+            let owned = w.recv_reduced(step, &per_replica[r])?;
+            if r == 0 {
+                first = Some(owned);
+            }
+        }
+        Ok(first.expect("at least one rank"))
+    }
+
+    /// Gather collective: full parameters from the owned shard lists.
+    pub fn all_gather(
+        &mut self,
+        step: u64,
+        owned: &[Vec<Tensor>],
+    ) -> Result<Vec<Tensor>, CommsError> {
+        self.workers[0].all_gather(step, owned)
+    }
+
+    /// Clean teardown: every rank says goodbye, then the orchestrator's
+    /// exit status is surfaced.
+    pub fn shutdown(mut self) -> Result<(), CommsError> {
+        for w in self.workers.iter_mut() {
+            w.shutdown();
+        }
+        // drop the pipes too, so the orchestrator exits on disconnect
+        // even if a faulted pipe swallowed the goodbye
+        self.workers.clear();
+        match self.orchestrator.take() {
+            Some(h) => h.join().map_err(|_| CommsError::Io {
+                what: "orchestrator thread panicked".to_string(),
+            })?,
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        for w in self.workers.iter_mut() {
+            w.shutdown();
+        }
+        self.workers.clear();
+        if let Some(h) = self.orchestrator.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{
+        all_gather_params_into, allreduce_mean_into, reduce_scatter_into,
+    };
+    use crate::util::Pool;
+
+    fn quick_opts(kind: TransportKind) -> CommsOptions {
+        CommsOptions {
+            transport: kind,
+            op_timeout: Duration::from_millis(500),
+            attempts: 4,
+            backoff_base: Duration::from_micros(200),
+            backoff_cap: Duration::from_millis(2),
+            poll: Duration::from_millis(2),
+            idle_budget: Duration::from_secs(5),
+            threads: 1,
+            seed: 7,
+        }
+    }
+
+    fn per_replica(n: usize) -> Vec<Vec<Tensor>> {
+        (0..n)
+            .map(|r| {
+                vec![
+                    Tensor::f32(vec![4], vec![0.5 + r as f32, -1.0, 2.0,
+                                              r as f32]),
+                    Tensor::f32(vec![2], vec![r as f32 * 0.25, 1.0]),
+                ]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn inproc_allreduce_is_bitwise_identical_to_kernel() {
+        for n in [1usize, 2, 4] {
+            let per = per_replica(n);
+            let mut cluster = Cluster::connect(
+                n,
+                ReduceMode::AllReduce,
+                &quick_opts(TransportKind::Inproc),
+            )
+            .unwrap();
+            let got = cluster.reduce(1, &per).unwrap();
+            cluster.shutdown().unwrap();
+
+            let mut want = Vec::new();
+            allreduce_mean_into(&per, &mut want, &Pool::new(1)).unwrap();
+            assert_eq!(got, vec![want], "replicas={n}");
+        }
+    }
+
+    #[test]
+    fn inproc_scatter_and_gather_match_kernels() {
+        let plan = vec![0..3usize, 3..6];
+        let per = per_replica(2);
+        let mut cluster = Cluster::connect(
+            2,
+            ReduceMode::Scatter(plan.clone()),
+            &quick_opts(TransportKind::Inproc),
+        )
+        .unwrap();
+        let got = cluster.reduce(1, &per).unwrap();
+
+        let mut want = Vec::new();
+        reduce_scatter_into(&per, &plan, &mut want, &Pool::new(1)).unwrap();
+        assert_eq!(got, want);
+
+        let full = cluster.all_gather(1, &got).unwrap();
+        let mut want_full = Vec::new();
+        all_gather_params_into(&want, &plan, &mut want_full, &Pool::new(1))
+            .unwrap();
+        assert_eq!(full, want_full);
+        cluster.shutdown().unwrap();
+    }
+
+    #[test]
+    fn tcp_reduce_matches_inproc() {
+        let per = per_replica(2);
+        let mut inproc = Cluster::connect(
+            2,
+            ReduceMode::AllReduce,
+            &quick_opts(TransportKind::Inproc),
+        )
+        .unwrap();
+        let mut tcp = Cluster::connect(
+            2,
+            ReduceMode::AllReduce,
+            &quick_opts(TransportKind::Tcp),
+        )
+        .unwrap();
+        let a = inproc.reduce(1, &per).unwrap();
+        let b = tcp.reduce(1, &per).unwrap();
+        assert_eq!(a, b);
+        inproc.shutdown().unwrap();
+        tcp.shutdown().unwrap();
+    }
+
+    #[test]
+    fn transient_faults_are_retried_to_the_right_answer() {
+        use super::super::fault::FaultKind;
+        let per = per_replica(2);
+        let mut want = Vec::new();
+        allreduce_mean_into(&per, &mut want, &Pool::new(1)).unwrap();
+
+        // rank 0's first send vanishes; its grads go again on retry
+        let mut cluster = Cluster::connect_with_faults(
+            2,
+            ReduceMode::AllReduce,
+            &quick_opts(TransportKind::Inproc),
+            |rank| (rank == 0).then(|| {
+                FaultPlan::none().on_send(0, FaultKind::Drop)
+            }),
+        )
+        .unwrap();
+        let got = cluster.reduce(1, &per).unwrap();
+        assert_eq!(got, vec![want.clone()]);
+        drop(cluster);
+
+        // rank 1's first reply is corrupted in flight; checksum catches
+        // it and the re-request serves the cached reduction
+        let mut cluster = Cluster::connect_with_faults(
+            2,
+            ReduceMode::AllReduce,
+            &quick_opts(TransportKind::Inproc),
+            |rank| (rank == 1).then(|| {
+                FaultPlan::none().on_recv(0, FaultKind::Corrupt)
+            }),
+        )
+        .unwrap();
+        let got = cluster.reduce(1, &per).unwrap();
+        assert_eq!(got, vec![want]);
+        drop(cluster);
+    }
+
+    #[test]
+    fn parse_transport_kind() {
+        assert_eq!(TransportKind::parse("inproc").unwrap(),
+                   TransportKind::Inproc);
+        assert_eq!(TransportKind::parse("tcp").unwrap(),
+                   TransportKind::Tcp);
+        assert!(TransportKind::parse("smoke-signals").is_err());
+        assert_eq!(TransportKind::Tcp.name(), "tcp");
+    }
+}

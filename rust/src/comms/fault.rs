@@ -1,0 +1,319 @@
+//! Deterministic fault injection for the chaos battery.
+//!
+//! A [`FaultPipe`] wraps any [`Pipe`] and perturbs traffic according to a
+//! [`FaultPlan`]: a schedule keyed on the pipe's own send/recv operation
+//! counters, so a given (plan, workload) pair replays the exact same
+//! faults every run. It sits *below* the framing layer in the stack,
+//! which means injected corruption hits raw frame bytes and must be
+//! caught by the framer's checksum — exactly the path a flaky wire would
+//! exercise — and can never surface as a silently wrong message.
+//!
+//! Fault kinds:
+//! - [`FaultKind::Drop`]: a sent frame vanishes / a received frame is
+//!   discarded (surfaces to the receiver as a timeout).
+//! - [`FaultKind::Delay`]: the op completes after an extra sleep.
+//! - [`FaultKind::Duplicate`]: the frame is delivered twice.
+//! - [`FaultKind::Corrupt`]: one payload byte is flipped in flight.
+//! - [`FaultKind::Disconnect`]: the peer "crashes" mid-message — half a
+//!   frame escapes, then the pipe is permanently dead.
+
+use std::time::Duration;
+
+use super::framer::FRAME_HEADER_BYTES;
+use super::pipe::Pipe;
+use super::CommsError;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    Drop,
+    Delay,
+    Duplicate,
+    Corrupt,
+    Disconnect,
+}
+
+const ALL_KINDS: [FaultKind; 5] = [
+    FaultKind::Drop,
+    FaultKind::Delay,
+    FaultKind::Duplicate,
+    FaultKind::Corrupt,
+    FaultKind::Disconnect,
+];
+
+/// A deterministic fault schedule: which send/recv ops (0-based counters,
+/// per pipe) misbehave, and how.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    send_faults: Vec<(u64, FaultKind)>,
+    recv_faults: Vec<(u64, FaultKind)>,
+    delay: Duration,
+}
+
+impl FaultPlan {
+    /// No faults: the wrapped pipe behaves exactly like the inner one.
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            delay: Duration::from_millis(10),
+            ..FaultPlan::default()
+        }
+    }
+
+    /// Inject `kind` on send op number `at`.
+    pub fn on_send(mut self, at: u64, kind: FaultKind) -> FaultPlan {
+        self.send_faults.push((at, kind));
+        self
+    }
+
+    /// Inject `kind` on recv op number `at`.
+    pub fn on_recv(mut self, at: u64, kind: FaultKind) -> FaultPlan {
+        self.recv_faults.push((at, kind));
+        self
+    }
+
+    /// Sleep this long for [`FaultKind::Delay`] faults.
+    pub fn with_delay(mut self, delay: Duration) -> FaultPlan {
+        self.delay = delay;
+        self
+    }
+
+    /// A random schedule: `faults` perturbations drawn over the first
+    /// `horizon` ops on each side. Same seed, same schedule — the chaos
+    /// battery sweeps seeds, not ad-hoc flakiness.
+    pub fn seeded(seed: u64, horizon: u64, faults: usize) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0x666c_616b_795f_7069);
+        let mut plan = FaultPlan::none();
+        for _ in 0..faults {
+            let kind = ALL_KINDS[rng.below(ALL_KINDS.len() as u64) as usize];
+            let at = rng.below(horizon.max(1));
+            plan = if rng.below(2) == 0 {
+                plan.on_send(at, kind)
+            } else {
+                plan.on_recv(at, kind)
+            };
+        }
+        plan
+    }
+
+    fn lookup(faults: &[(u64, FaultKind)], op: u64) -> Option<FaultKind> {
+        faults.iter().find(|(at, _)| *at == op).map(|(_, k)| *k)
+    }
+}
+
+/// Flip one byte, preferring the payload region so stream carriers keep
+/// their frame boundaries (header corruption would desync TCP and mask
+/// the checksum path this is meant to exercise).
+fn corrupt(frame: &[u8]) -> Vec<u8> {
+    let mut f = frame.to_vec();
+    let i = if f.len() > FRAME_HEADER_BYTES {
+        FRAME_HEADER_BYTES + (f.len() - FRAME_HEADER_BYTES) / 2
+    } else {
+        f.len().saturating_sub(1)
+    };
+    if let Some(b) = f.get_mut(i) {
+        *b ^= 0x5A;
+    }
+    f
+}
+
+/// A [`Pipe`] that misbehaves on schedule.
+pub struct FaultPipe {
+    inner: Box<dyn Pipe>,
+    plan: FaultPlan,
+    sends: u64,
+    recvs: u64,
+    dead: bool,
+    /// Second copy of a duplicated recv, returned by the next call.
+    stash: Option<Vec<u8>>,
+}
+
+impl FaultPipe {
+    pub fn new(inner: Box<dyn Pipe>, plan: FaultPlan) -> FaultPipe {
+        FaultPipe {
+            inner,
+            plan,
+            sends: 0,
+            recvs: 0,
+            dead: false,
+            stash: None,
+        }
+    }
+}
+
+impl Pipe for FaultPipe {
+    fn send(&mut self, frame: &[u8]) -> Result<(), CommsError> {
+        if self.dead {
+            return Err(CommsError::Disconnected { peer: self.peer() });
+        }
+        let op = self.sends;
+        self.sends += 1;
+        match FaultPlan::lookup(&self.plan.send_faults, op) {
+            None => self.inner.send(frame),
+            Some(FaultKind::Drop) => Ok(()), // vanishes without a trace
+            Some(FaultKind::Delay) => {
+                std::thread::sleep(self.plan.delay);
+                self.inner.send(frame)
+            }
+            Some(FaultKind::Duplicate) => {
+                self.inner.send(frame)?;
+                self.inner.send(frame)
+            }
+            Some(FaultKind::Corrupt) => self.inner.send(&corrupt(frame)),
+            Some(FaultKind::Disconnect) => {
+                // crash mid-message: half the frame escapes, then silence
+                let _ = self.inner.send(&frame[..frame.len() / 2]);
+                self.dead = true;
+                Err(CommsError::Disconnected { peer: self.peer() })
+            }
+        }
+    }
+
+    fn recv(&mut self, timeout: Duration) -> Result<Vec<u8>, CommsError> {
+        if self.dead {
+            return Err(CommsError::Disconnected { peer: self.peer() });
+        }
+        if let Some(stashed) = self.stash.take() {
+            return Ok(stashed);
+        }
+        let op = self.recvs;
+        self.recvs += 1;
+        match FaultPlan::lookup(&self.plan.recv_faults, op) {
+            None => self.inner.recv(timeout),
+            Some(FaultKind::Drop) => {
+                let _ = self.inner.recv(timeout)?;
+                Err(CommsError::Timeout {
+                    op: format!(
+                        "recv from {} (frame dropped by fault plan)",
+                        self.inner.peer()
+                    ),
+                    after: timeout,
+                })
+            }
+            Some(FaultKind::Delay) => {
+                std::thread::sleep(self.plan.delay);
+                self.inner.recv(timeout)
+            }
+            Some(FaultKind::Duplicate) => {
+                let frame = self.inner.recv(timeout)?;
+                self.stash = Some(frame.clone());
+                Ok(frame)
+            }
+            Some(FaultKind::Corrupt) => {
+                Ok(corrupt(&self.inner.recv(timeout)?))
+            }
+            Some(FaultKind::Disconnect) => {
+                self.dead = true;
+                Err(CommsError::Disconnected { peer: self.peer() })
+            }
+        }
+    }
+
+    fn peer(&self) -> String {
+        self.inner.peer()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::framer::{decode_frame, encode_frame};
+    use super::super::pipe::ChannelPipe;
+    use super::*;
+
+    const T: Duration = Duration::from_millis(100);
+
+    fn faulty_pair(plan: FaultPlan) -> (FaultPipe, ChannelPipe) {
+        let (a, b) = ChannelPipe::pair("a", "b");
+        (FaultPipe::new(Box::new(a), plan), b)
+    }
+
+    #[test]
+    fn clean_plan_is_transparent() {
+        let (mut a, mut b) = faulty_pair(FaultPlan::none());
+        a.send(b"hello").unwrap();
+        assert_eq!(b.recv(T).unwrap(), b"hello");
+    }
+
+    #[test]
+    fn dropped_send_never_arrives() {
+        let (mut a, mut b) =
+            faulty_pair(FaultPlan::none().on_send(0, FaultKind::Drop));
+        a.send(b"lost").unwrap(); // reports success, like a real wire
+        assert!(matches!(
+            b.recv(Duration::from_millis(20)).unwrap_err(),
+            CommsError::Timeout { .. }
+        ));
+        a.send(b"kept").unwrap(); // only op 0 was scheduled
+        assert_eq!(b.recv(T).unwrap(), b"kept");
+    }
+
+    #[test]
+    fn duplicate_send_arrives_twice() {
+        let (mut a, mut b) =
+            faulty_pair(FaultPlan::none().on_send(0, FaultKind::Duplicate));
+        a.send(b"twin").unwrap();
+        assert_eq!(b.recv(T).unwrap(), b"twin");
+        assert_eq!(b.recv(T).unwrap(), b"twin");
+    }
+
+    #[test]
+    fn corrupt_send_fails_frame_checksum() {
+        let (mut a, mut b) =
+            faulty_pair(FaultPlan::none().on_send(0, FaultKind::Corrupt));
+        let frame = encode_frame(b"important gradients").unwrap();
+        a.send(&frame).unwrap();
+        let wire = b.recv(T).unwrap();
+        let err = decode_frame(&wire).unwrap_err();
+        assert!(matches!(err, CommsError::Corrupt { .. }), "{err}");
+    }
+
+    #[test]
+    fn disconnect_is_permanent_and_leaks_half_a_frame() {
+        let (mut a, mut b) =
+            faulty_pair(FaultPlan::none().on_send(0, FaultKind::Disconnect));
+        let frame = encode_frame(b"never makes it").unwrap();
+        assert!(matches!(
+            a.send(&frame).unwrap_err(),
+            CommsError::Disconnected { .. }
+        ));
+        // the torn half-frame escaped onto the wire
+        let torn = b.recv(T).unwrap();
+        assert_eq!(torn.len(), frame.len() / 2);
+        assert!(decode_frame(&torn).is_err());
+        // and the pipe is dead for good
+        assert!(matches!(
+            a.send(&frame).unwrap_err(),
+            CommsError::Disconnected { .. }
+        ));
+        assert!(matches!(
+            a.recv(T).unwrap_err(),
+            CommsError::Disconnected { .. }
+        ));
+    }
+
+    #[test]
+    fn recv_side_faults() {
+        let plan = FaultPlan::none()
+            .on_recv(0, FaultKind::Duplicate)
+            .on_recv(1, FaultKind::Corrupt);
+        let (mut b_raw, mut a) = {
+            let (a, b) = ChannelPipe::pair("a", "b");
+            (a, FaultPipe::new(Box::new(b), plan))
+        };
+        let frame = encode_frame(b"payload").unwrap();
+        b_raw.send(&frame).unwrap();
+        b_raw.send(&frame).unwrap();
+        assert_eq!(a.recv(T).unwrap(), frame); // op 0
+        assert_eq!(a.recv(T).unwrap(), frame); // stashed duplicate, no op
+        let wire = a.recv(T).unwrap(); // op 1
+        assert!(decode_frame(&wire).is_err());
+    }
+
+    #[test]
+    fn seeded_plans_are_reproducible() {
+        let a = FaultPlan::seeded(42, 100, 8);
+        let b = FaultPlan::seeded(42, 100, 8);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        let c = FaultPlan::seeded(43, 100, 8);
+        assert_ne!(format!("{a:?}"), format!("{c:?}"));
+    }
+}

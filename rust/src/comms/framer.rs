@@ -1,0 +1,211 @@
+//! Length-prefixed frame format: the only bytes that ever cross a pipe.
+//!
+//! ```text
+//!   0  4  magic  b"ADFR"
+//!   4  2  version (LE)
+//!   6  2  reserved flags (0)
+//!   8  4  payload length (LE)
+//!  12  4  payload CRC-32 (IEEE, LE)
+//!  16  …  payload
+//! ```
+//!
+//! [`decode_frame`] rejects short, corrupt and oversized frames with a
+//! typed [`CommsError`] **before** any payload byte is interpreted; the
+//! checksum sits above the fault-injection point in the stack, so a fault
+//! that mangles bytes in flight can only surface as
+//! [`CommsError::Corrupt`], never as a silently wrong message.
+
+use super::CommsError;
+
+pub const FRAME_MAGIC: &[u8; 4] = b"ADFR";
+pub const FRAME_VERSION: u16 = 1;
+/// Frame header length in bytes.
+pub const FRAME_HEADER_BYTES: usize = 16;
+/// Hard ceiling on a frame's payload — a corrupted length field must not
+/// trigger an unbounded allocation.
+pub const MAX_PAYLOAD_BYTES: usize = 1 << 28; // 256 MiB
+
+/// CRC-32 (IEEE 802.3, reflected) over `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    use std::sync::OnceLock;
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut crc = !0u32;
+    for &b in bytes {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+/// Wrap a payload in a complete frame. Fails only on oversize.
+pub fn encode_frame(payload: &[u8]) -> Result<Vec<u8>, CommsError> {
+    if payload.len() > MAX_PAYLOAD_BYTES {
+        return Err(CommsError::Oversized {
+            len: payload.len(),
+            max: MAX_PAYLOAD_BYTES,
+        });
+    }
+    let mut f = Vec::with_capacity(FRAME_HEADER_BYTES + payload.len());
+    f.extend_from_slice(FRAME_MAGIC);
+    f.extend_from_slice(&FRAME_VERSION.to_le_bytes());
+    f.extend_from_slice(&0u16.to_le_bytes());
+    f.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    f.extend_from_slice(&crc32(payload).to_le_bytes());
+    f.extend_from_slice(payload);
+    Ok(f)
+}
+
+/// Validate a header prefix (magic, version, declared length bound) and
+/// return the frame's total length. This is what a byte-stream carrier
+/// uses to segment frames — full payload validation happens in
+/// [`decode_frame`] once the whole frame is in hand.
+pub fn frame_total_len(header: &[u8]) -> Result<usize, CommsError> {
+    if header.len() < FRAME_HEADER_BYTES {
+        return Err(CommsError::Corrupt {
+            what: format!(
+                "short frame header: {} of {FRAME_HEADER_BYTES} bytes",
+                header.len()
+            ),
+        });
+    }
+    if &header[0..4] != FRAME_MAGIC {
+        return Err(CommsError::Corrupt {
+            what: format!("bad magic {:02x?}", &header[0..4]),
+        });
+    }
+    let version = u16::from_le_bytes([header[4], header[5]]);
+    if version != FRAME_VERSION {
+        return Err(CommsError::Corrupt {
+            what: format!("unsupported frame version {version}"),
+        });
+    }
+    let len = u32::from_le_bytes([header[8], header[9], header[10],
+                                  header[11]]) as usize;
+    if len > MAX_PAYLOAD_BYTES {
+        return Err(CommsError::Oversized {
+            len,
+            max: MAX_PAYLOAD_BYTES,
+        });
+    }
+    Ok(FRAME_HEADER_BYTES + len)
+}
+
+/// Validate a complete frame and return its payload. Rejects short frames,
+/// bad magic/version, oversized or mismatched lengths, and checksum
+/// failures — each with a pointed message.
+pub fn decode_frame(frame: &[u8]) -> Result<Vec<u8>, CommsError> {
+    let total = frame_total_len(frame)?;
+    if frame.len() != total {
+        return Err(CommsError::Corrupt {
+            what: format!(
+                "frame length mismatch: header declares {total} bytes, \
+                 got {}",
+                frame.len()
+            ),
+        });
+    }
+    let payload = &frame[FRAME_HEADER_BYTES..];
+    let declared = u32::from_le_bytes([frame[12], frame[13], frame[14],
+                                       frame[15]]);
+    let actual = crc32(payload);
+    if declared != actual {
+        return Err(CommsError::Corrupt {
+            what: format!(
+                "checksum mismatch: header {declared:08x}, payload \
+                 {actual:08x}"
+            ),
+        });
+    }
+    Ok(payload.to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        for payload in [&b""[..], b"x", b"hello frame", &[0u8; 1000]] {
+            let f = encode_frame(payload).unwrap();
+            assert_eq!(f.len(), FRAME_HEADER_BYTES + payload.len());
+            assert_eq!(decode_frame(&f).unwrap(), payload);
+        }
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // the classic check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn short_frame_rejected() {
+        let f = encode_frame(b"payload").unwrap();
+        for cut in [0, 3, FRAME_HEADER_BYTES - 1] {
+            let err = decode_frame(&f[..cut]).unwrap_err();
+            assert!(matches!(err, CommsError::Corrupt { .. }), "{err}");
+        }
+        // truncated payload: header intact, bytes missing
+        let err = decode_frame(&f[..f.len() - 2]).unwrap_err();
+        assert!(err.to_string().contains("length mismatch"), "{err}");
+    }
+
+    #[test]
+    fn bad_magic_and_version_rejected() {
+        let mut f = encode_frame(b"payload").unwrap();
+        f[0] ^= 0xFF;
+        assert!(decode_frame(&f).unwrap_err().to_string().contains("magic"));
+        let mut f = encode_frame(b"payload").unwrap();
+        f[4] = 99;
+        assert!(decode_frame(&f)
+            .unwrap_err()
+            .to_string()
+            .contains("version"));
+    }
+
+    #[test]
+    fn corrupt_payload_caught_by_checksum() {
+        let mut f = encode_frame(b"some gradient bytes").unwrap();
+        let mid = FRAME_HEADER_BYTES + 5;
+        f[mid] ^= 0x40;
+        let err = decode_frame(&f).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        assert!(err.is_transient());
+    }
+
+    #[test]
+    fn oversized_rejected_both_ways() {
+        // encode refuses to build one
+        let big = vec![0u8; MAX_PAYLOAD_BYTES + 1];
+        assert!(matches!(
+            encode_frame(&big).unwrap_err(),
+            CommsError::Oversized { .. }
+        ));
+        // decode refuses a forged length before allocating
+        let mut f = encode_frame(b"x").unwrap();
+        f[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(
+            decode_frame(&f).unwrap_err(),
+            CommsError::Oversized { .. }
+        ));
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let mut f = encode_frame(b"payload").unwrap();
+        f.push(0);
+        let err = decode_frame(&f).unwrap_err();
+        assert!(err.to_string().contains("length mismatch"), "{err}");
+    }
+}

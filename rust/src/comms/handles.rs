@@ -1,0 +1,680 @@
+//! Typed protocol endpoints: [`WorkerHandle`] (per-rank client) and
+//! [`Orchestrator`] (reduce/gather server).
+//!
+//! The protocol is a two-phase collective per step. Reduce: every rank
+//! sends `Grads{rank, step}`; once all ranks have contributed, the
+//! orchestrator runs the *same* `reduce_scatter_into` /
+//! `allreduce_mean_into` kernels as the in-process path — under the same
+//! shard plan — and broadcasts `Reduced{step}` to every rank. Gather:
+//! a rank ships its owned parameter shards in `GatherReq{step}` and gets
+//! back the `all_gather_params_into` result.
+//!
+//! Every exchange is idempotent. The orchestrator deduplicates repeated
+//! `Grads` for a step it is collecting, and caches the encoded reply for
+//! the last completed reduce/gather: a duplicated request — or a rank
+//! whose reply was lost and re-sends its request after a timeout — gets
+//! the cached bytes again. Workers, symmetrically, re-send their request
+//! whenever a receive fails transiently, with bounded attempts and
+//! jittered backoff. Lost frames, duplicated frames, and lost replies all
+//! converge to the same final state; persistent failure surfaces as a
+//! typed [`CommsError`] within the backoff budget, never a hang.
+
+use std::ops::Range;
+use std::time::{Duration, Instant};
+
+use super::transport::Transport;
+use super::wire::Msg;
+use super::CommsError;
+use crate::coordinator::{
+    all_gather_params_into, allreduce_mean_into, reduce_scatter_into,
+};
+use crate::runtime::tensor::Tensor;
+use crate::util::{Backoff, Pool};
+use crate::{debug, warn_};
+
+/// What the orchestrator does with a complete set of per-rank gradients.
+#[derive(Clone, Debug)]
+pub enum ReduceMode {
+    /// zero < 2: one averaged gradient set, identical for every rank.
+    AllReduce,
+    /// zero >= 2: reduce-scatter into the shard plan's owned slices.
+    Scatter(Vec<Range<usize>>),
+}
+
+/// Split a flat tensor list back into per-shard groups.
+fn regroup(
+    groups: &[u32],
+    tensors: Vec<Tensor>,
+) -> Result<Vec<Vec<Tensor>>, CommsError> {
+    let total: usize = groups.iter().map(|&g| g as usize).sum();
+    if total != tensors.len() {
+        return Err(CommsError::Corrupt {
+            what: format!(
+                "group sizes sum to {total} but message carries {} tensors",
+                tensors.len()
+            ),
+        });
+    }
+    let mut it = tensors.into_iter();
+    Ok(groups
+        .iter()
+        .map(|&g| it.by_ref().take(g as usize).collect())
+        .collect())
+}
+
+// ---------------------------------------------------------------- worker
+
+/// Client endpoint for one data-parallel rank.
+pub struct WorkerHandle {
+    rank: u32,
+    transport: Box<dyn Transport>,
+    op_timeout: Duration,
+    attempts: u32,
+    backoff: Backoff,
+}
+
+impl WorkerHandle {
+    pub fn new(
+        rank: u32,
+        transport: Box<dyn Transport>,
+        op_timeout: Duration,
+        attempts: u32,
+        backoff: Backoff,
+    ) -> WorkerHandle {
+        WorkerHandle { rank, transport, op_timeout, attempts, backoff }
+    }
+
+    pub fn rank(&self) -> u32 {
+        self.rank
+    }
+
+    /// Phase A of the reduce collective: contribute this rank's grads.
+    pub fn send_grads(
+        &mut self,
+        step: u64,
+        grads: &[Tensor],
+    ) -> Result<(), CommsError> {
+        self.transport.send(&Msg::grads_bytes(self.rank, step, grads))
+    }
+
+    /// Phase B: await the reduced shards for `step`, re-sending our grads
+    /// (idempotent — the orchestrator dedups and re-serves its cached
+    /// reply) whenever a receive fails transiently.
+    pub fn recv_reduced(
+        &mut self,
+        step: u64,
+        grads: &[Tensor],
+    ) -> Result<Vec<Vec<Tensor>>, CommsError> {
+        let rank = self.rank;
+        self.await_reply(
+            "recv_reduced",
+            |t| t.send(&Msg::grads_bytes(rank, step, grads)),
+            |msg| match msg {
+                Msg::Reduced { step: s, groups, tensors } if s == step => {
+                    regroup(&groups, tensors).map(Some)
+                }
+                Msg::Reduced { step: s, .. } if s < step => Ok(None),
+                // gathers are numbered by the trainer's own gather
+                // sequence — a different number space — so any Gathered
+                // here is a stale leftover, whatever its number says
+                Msg::Gathered { .. } => Ok(None),
+                Msg::Abort { step: s, reason } => {
+                    Err(CommsError::Protocol {
+                        what: format!(
+                            "orchestrator aborted step {s}: {reason}"
+                        ),
+                    })
+                }
+                other => Err(CommsError::Protocol {
+                    what: format!(
+                        "unexpected {} while awaiting Reduced for step \
+                         {step}",
+                        other.kind()
+                    ),
+                }),
+            },
+        )
+    }
+
+    /// Full reduce collective as one call (phase A + phase B).
+    pub fn reduce(
+        &mut self,
+        step: u64,
+        grads: &[Tensor],
+    ) -> Result<Vec<Vec<Tensor>>, CommsError> {
+        self.send_grads(step, grads)?;
+        self.recv_reduced(step, grads)
+    }
+
+    /// Gather collective: ship owned shards, get the full parameter set.
+    pub fn all_gather(
+        &mut self,
+        step: u64,
+        owned: &[Vec<Tensor>],
+    ) -> Result<Vec<Tensor>, CommsError> {
+        let rank = self.rank;
+        self.transport
+            .send(&Msg::gather_req_bytes(rank, step, owned))?;
+        self.await_reply(
+            "all_gather",
+            |t| t.send(&Msg::gather_req_bytes(rank, step, owned)),
+            |msg| match msg {
+                Msg::Gathered { step: s, tensors } if s == step => {
+                    Ok(Some(tensors))
+                }
+                Msg::Gathered { step: s, .. } if s < step => Ok(None),
+                // reduce steps live in a different number space than the
+                // gather sequence: drain any Reduced unconditionally
+                Msg::Reduced { .. } => Ok(None),
+                Msg::Abort { step: s, reason } => {
+                    Err(CommsError::Protocol {
+                        what: format!(
+                            "orchestrator aborted step {s}: {reason}"
+                        ),
+                    })
+                }
+                other => Err(CommsError::Protocol {
+                    what: format!(
+                        "unexpected {} while awaiting Gathered for step \
+                         {step}",
+                        other.kind()
+                    ),
+                }),
+            },
+        )
+    }
+
+    /// Best-effort goodbye; the orchestrator exits once every rank has
+    /// said it (or is gone).
+    pub fn shutdown(&mut self) {
+        let _ = self.transport.send(&Msg::Shutdown { rank: self.rank }
+            .encode());
+    }
+
+    /// Deadline-bounded receive loop with protocol-level retry: stale
+    /// duplicates are drained silently, transient failures trigger a
+    /// re-send of the request, anything else is final.
+    fn await_reply<R>(
+        &mut self,
+        op: &str,
+        mut resend: impl FnMut(
+            &mut Box<dyn Transport>,
+        ) -> Result<(), CommsError>,
+        mut accept: impl FnMut(Msg) -> Result<Option<R>, CommsError>,
+    ) -> Result<R, CommsError> {
+        let attempts = self.attempts.max(1);
+        let mut attempt = 0u32;
+        loop {
+            let err = match self.transport.recv(self.op_timeout) {
+                Ok(bytes) => match Msg::decode(&bytes) {
+                    Ok(msg) => match accept(msg)? {
+                        Some(r) => return Ok(r),
+                        None => continue, // stale duplicate: keep draining
+                    },
+                    Err(e) => e,
+                },
+                Err(e) => e,
+            };
+            if !err.is_transient() {
+                return Err(err);
+            }
+            attempt += 1;
+            if attempt >= attempts {
+                return Err(CommsError::Exhausted {
+                    op: format!("{op} (rank {})", self.rank),
+                    attempts: attempt,
+                    last: Box::new(err),
+                });
+            }
+            debug!(
+                "comms rank {}: {op} attempt {attempt} failed ({err}); \
+                 re-sending",
+                self.rank
+            );
+            std::thread::sleep(self.backoff.delay(attempt - 1));
+            resend(&mut self.transport)?;
+        }
+    }
+}
+
+// ----------------------------------------------------------- orchestrator
+
+/// Reduce/gather server for `n` ranks. Owns one connection per rank and
+/// round-robin polls them with short deadlines — it can never block on a
+/// single silent peer — until every rank shuts down, a collective becomes
+/// impossible (disconnect mid-step, kernel failure), or the idle budget
+/// runs out.
+pub struct Orchestrator {
+    conns: Vec<Option<Box<dyn Transport>>>,
+    mode: ReduceMode,
+    pool: Pool,
+    poll: Duration,
+    idle_budget: Duration,
+}
+
+impl Orchestrator {
+    pub fn new(
+        conns: Vec<Box<dyn Transport>>,
+        mode: ReduceMode,
+        threads: usize,
+        poll: Duration,
+        idle_budget: Duration,
+    ) -> Orchestrator {
+        Orchestrator {
+            conns: conns.into_iter().map(Some).collect(),
+            mode,
+            pool: Pool::new(threads),
+            poll: poll.max(Duration::from_millis(1)),
+            idle_budget,
+        }
+    }
+
+    /// Serve until clean shutdown (`Ok`) or the run becomes unservable.
+    /// Broadcasts `Abort` to surviving ranks before failing, so workers
+    /// get a typed error instead of a timeout where possible.
+    pub fn run(mut self) -> Result<(), CommsError> {
+        let n = self.conns.len();
+        let mut shut = vec![false; n];
+        // reduce in flight: step + per-rank contributions
+        let mut cur: Option<u64> = None;
+        let mut grads: Vec<Option<Vec<Tensor>>> =
+            (0..n).map(|_| None).collect();
+        // encoded replies for the last completed collectives, re-served
+        // on duplicate/re-sent requests (lost-reply recovery)
+        let mut reduce_cache: Option<(u64, Vec<u8>)> = None;
+        let mut gather_cache: Option<(u64, Vec<u8>)> = None;
+        let mut last_activity = Instant::now();
+
+        loop {
+            if (0..n).all(|r| shut[r] || self.conns[r].is_none()) {
+                return Ok(());
+            }
+            for rank in 0..n {
+                if shut[rank] || self.conns[rank].is_none() {
+                    continue;
+                }
+                let bytes = match self.conns[rank]
+                    .as_mut()
+                    .expect("checked live")
+                    .recv(self.poll)
+                {
+                    Ok(b) => b,
+                    Err(CommsError::Timeout { .. }) => continue,
+                    Err(e @ CommsError::Corrupt { .. }) => {
+                        // mangled frame: the worker's retry loop re-sends
+                        debug!("comms orchestrator: rank {rank}: {e}");
+                        last_activity = Instant::now();
+                        continue;
+                    }
+                    Err(e) => {
+                        warn_!(
+                            "comms orchestrator: rank {rank} connection \
+                             lost: {e}"
+                        );
+                        self.conns[rank] = None;
+                        if let Some(step) = cur {
+                            return self.abort(
+                                step,
+                                &format!(
+                                    "rank {rank} disconnected \
+                                     mid-collective"
+                                ),
+                                &shut,
+                            );
+                        }
+                        continue;
+                    }
+                };
+                last_activity = Instant::now();
+                let msg = match Msg::decode(&bytes) {
+                    Ok(m) => m,
+                    Err(e) => {
+                        debug!(
+                            "comms orchestrator: rank {rank}: undecodable \
+                             message: {e}"
+                        );
+                        continue;
+                    }
+                };
+                match msg {
+                    Msg::Shutdown { rank: r } => {
+                        if (r as usize) < n {
+                            shut[r as usize] = true;
+                        }
+                    }
+                    Msg::Grads { rank: r, step, tensors } => {
+                        let r = r as usize;
+                        if r >= n {
+                            continue;
+                        }
+                        if let Some((s, cached)) = &reduce_cache {
+                            if *s == step {
+                                // this rank's reply was lost: re-serve it
+                                let cached = cached.clone();
+                                self.send_to(r, &cached);
+                                continue;
+                            }
+                        }
+                        match cur {
+                            Some(s) if step == s => {
+                                if grads[r].is_none() {
+                                    grads[r] = Some(tensors);
+                                } // else: duplicate frame, already have it
+                            }
+                            Some(s) if step < s => {} // stale, drop
+                            _ => {
+                                // first contribution of a new step
+                                for g in grads.iter_mut() {
+                                    *g = None;
+                                }
+                                cur = Some(step);
+                                grads[r] = Some(tensors);
+                            }
+                        }
+                        if grads.iter().all(|g| g.is_some()) {
+                            let step = cur.take().expect("collecting");
+                            let per_replica: Vec<Vec<Tensor>> = grads
+                                .iter_mut()
+                                .map(|g| g.take().expect("all present"))
+                                .collect();
+                            let reply = match self.reduce(&per_replica) {
+                                Ok(owned) => {
+                                    Msg::reduced_bytes(step, &owned)
+                                }
+                                Err(e) => {
+                                    return self.abort(
+                                        step,
+                                        &format!("reduce failed: {e}"),
+                                        &shut,
+                                    )
+                                }
+                            };
+                            reduce_cache = Some((step, reply.clone()));
+                            for r2 in 0..n {
+                                if !shut[r2] {
+                                    self.send_to(r2, &reply);
+                                }
+                            }
+                        }
+                    }
+                    Msg::GatherReq { rank: r, step, groups, tensors } => {
+                        let r = r as usize;
+                        if r >= n {
+                            continue;
+                        }
+                        if let Some((s, cached)) = &gather_cache {
+                            if *s == step {
+                                let cached = cached.clone();
+                                self.send_to(r, &cached);
+                                continue;
+                            }
+                        }
+                        let owned = match regroup(&groups, tensors) {
+                            Ok(o) => o,
+                            Err(e) => {
+                                debug!(
+                                    "comms orchestrator: rank {rank}: bad \
+                                     GatherReq: {e}"
+                                );
+                                continue; // worker re-sends
+                            }
+                        };
+                        let reply = match self.gather(&owned) {
+                            Ok(full) => Msg::gathered_bytes(step, &full),
+                            Err(e) => {
+                                return self.abort(
+                                    step,
+                                    &format!("gather failed: {e}"),
+                                    &shut,
+                                )
+                            }
+                        };
+                        gather_cache = Some((step, reply.clone()));
+                        self.send_to(r, &reply);
+                    }
+                    // workers never send these; drop silently
+                    Msg::Reduced { .. }
+                    | Msg::Gathered { .. }
+                    | Msg::Abort { .. } => {}
+                }
+            }
+            if last_activity.elapsed() > self.idle_budget {
+                if let Some(step) = cur {
+                    return self.abort(
+                        step,
+                        "collective stalled past the idle budget",
+                        &shut,
+                    );
+                }
+                return Err(CommsError::Timeout {
+                    op: "orchestrator idle".to_string(),
+                    after: self.idle_budget,
+                });
+            }
+        }
+    }
+
+    fn reduce(
+        &self,
+        per_replica: &[Vec<Tensor>],
+    ) -> anyhow::Result<Vec<Vec<Tensor>>> {
+        match &self.mode {
+            ReduceMode::AllReduce => {
+                let mut out = Vec::new();
+                allreduce_mean_into(per_replica, &mut out, &self.pool)?;
+                Ok(vec![out])
+            }
+            ReduceMode::Scatter(plan) => {
+                let mut owned = Vec::new();
+                reduce_scatter_into(per_replica, plan, &mut owned,
+                                    &self.pool)?;
+                Ok(owned)
+            }
+        }
+    }
+
+    fn gather(&self, owned: &[Vec<Tensor>]) -> anyhow::Result<Vec<Tensor>> {
+        let plan = match &self.mode {
+            ReduceMode::Scatter(plan) => plan,
+            ReduceMode::AllReduce => {
+                anyhow::bail!("all-gather without a shard plan")
+            }
+        };
+        let mut full = Vec::new();
+        all_gather_params_into(owned, plan, &mut full, &self.pool)?;
+        Ok(full)
+    }
+
+    fn send_to(&mut self, rank: usize, bytes: &[u8]) {
+        if let Some(conn) = self.conns[rank].as_mut() {
+            if let Err(e) = conn.send(bytes) {
+                warn_!(
+                    "comms orchestrator: dropping rank {rank}: send \
+                     failed: {e}"
+                );
+                self.conns[rank] = None;
+            }
+        }
+    }
+
+    fn abort(
+        &mut self,
+        step: u64,
+        why: &str,
+        shut: &[bool],
+    ) -> Result<(), CommsError> {
+        warn_!("comms orchestrator: aborting step {step}: {why}");
+        let msg = Msg::Abort { step, reason: why.to_string() }.encode();
+        for r in 0..self.conns.len() {
+            if !shut[r] {
+                self.send_to(r, &msg);
+            }
+        }
+        Err(CommsError::Protocol {
+            what: format!("step {step} aborted: {why}"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::pipe::ChannelPipe;
+    use super::super::transport::Framed;
+    use super::*;
+    use std::thread;
+
+    const OP: Duration = Duration::from_millis(500);
+
+    fn backoff() -> Backoff {
+        Backoff::new(Duration::from_micros(200), Duration::from_millis(2), 5)
+    }
+
+    fn endpoints(n: usize) -> (Vec<WorkerHandle>, Vec<Box<dyn Transport>>) {
+        let mut workers = Vec::new();
+        let mut conns: Vec<Box<dyn Transport>> = Vec::new();
+        for rank in 0..n {
+            let (w, o) = ChannelPipe::pair(
+                &format!("rank {rank}"),
+                "orchestrator",
+            );
+            workers.push(WorkerHandle::new(
+                rank as u32,
+                Box::new(Framed::new(Box::new(w))),
+                OP,
+                4,
+                backoff(),
+            ));
+            conns.push(Box::new(Framed::new(Box::new(o))));
+        }
+        (workers, conns)
+    }
+
+    fn grads_for(rank: usize) -> Vec<Tensor> {
+        vec![
+            Tensor::f32(vec![4], vec![rank as f32; 4]),
+            Tensor::f32(vec![2], vec![1.0 + rank as f32, -1.0]),
+        ]
+    }
+
+    #[test]
+    fn allreduce_roundtrip_matches_kernel() {
+        let (mut workers, conns) = endpoints(2);
+        let orch = Orchestrator::new(
+            conns,
+            ReduceMode::AllReduce,
+            1,
+            Duration::from_millis(2),
+            Duration::from_secs(5),
+        );
+        let server = thread::spawn(move || orch.run());
+
+        let per: Vec<Vec<Tensor>> = (0..2).map(grads_for).collect();
+        for (r, w) in workers.iter_mut().enumerate() {
+            w.send_grads(1, &per[r]).unwrap();
+        }
+        let replies: Vec<Vec<Vec<Tensor>>> = workers
+            .iter_mut()
+            .enumerate()
+            .map(|(r, w)| w.recv_reduced(1, &per[r]).unwrap())
+            .collect();
+
+        let mut want = Vec::new();
+        allreduce_mean_into(&per, &mut want, &Pool::new(1)).unwrap();
+        for reply in &replies {
+            assert_eq!(reply.len(), 1);
+            assert_eq!(reply[0], want);
+        }
+        for w in workers.iter_mut() {
+            w.shutdown();
+        }
+        server.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn duplicate_grads_and_rerequest_are_idempotent() {
+        let (mut workers, conns) = endpoints(2);
+        let orch = Orchestrator::new(
+            conns,
+            ReduceMode::AllReduce,
+            1,
+            Duration::from_millis(2),
+            Duration::from_secs(5),
+        );
+        let server = thread::spawn(move || orch.run());
+
+        let per: Vec<Vec<Tensor>> = (0..2).map(grads_for).collect();
+        // rank 0 stutters: its grads go out three times
+        workers[0].send_grads(7, &per[0]).unwrap();
+        workers[0].send_grads(7, &per[0]).unwrap();
+        workers[1].send_grads(7, &per[1]).unwrap();
+        workers[0].send_grads(7, &per[0]).unwrap();
+
+        let a = workers[0].recv_reduced(7, &per[0]).unwrap();
+        let b = workers[1].recv_reduced(7, &per[1]).unwrap();
+        assert_eq!(a, b);
+        // and a late re-request still gets the cached answer
+        workers[1].send_grads(7, &per[1]).unwrap();
+        let c = workers[1].recv_reduced(7, &per[1]).unwrap();
+        assert_eq!(b, c);
+
+        let mut want = Vec::new();
+        allreduce_mean_into(&per, &mut want, &Pool::new(1)).unwrap();
+        assert_eq!(a[0], want);
+
+        for w in workers.iter_mut() {
+            w.shutdown();
+        }
+        server.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn gather_without_plan_aborts_with_typed_error() {
+        let (mut workers, conns) = endpoints(1);
+        let orch = Orchestrator::new(
+            conns,
+            ReduceMode::AllReduce,
+            1,
+            Duration::from_millis(2),
+            Duration::from_secs(5),
+        );
+        let server = thread::spawn(move || orch.run());
+
+        let owned = vec![grads_for(0)];
+        let err = workers[0].all_gather(1, &owned).unwrap_err();
+        assert!(matches!(err, CommsError::Protocol { .. }), "{err}");
+        assert!(server.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn dead_rank_aborts_the_collective_not_the_process() {
+        let (mut workers, conns) = endpoints(2);
+        let orch = Orchestrator::new(
+            conns,
+            ReduceMode::AllReduce,
+            1,
+            Duration::from_millis(2),
+            Duration::from_millis(300), // short idle budget: rank 1 is gone
+        );
+        let server = thread::spawn(move || orch.run());
+
+        let per: Vec<Vec<Tensor>> = (0..2).map(grads_for).collect();
+        workers[0].send_grads(1, &per[0]).unwrap();
+        // rank 1 "crashes": drop its handle entirely
+        drop(workers.remove(1));
+        let err = workers[0].recv_reduced(1, &per[0]).unwrap_err();
+        // either the orchestrator noticed the disconnect and aborted
+        // (Protocol via Abort, or Disconnected if our pipe died first),
+        // or the worker exhausted its retries against the stall — all
+        // typed, none a hang
+        assert!(
+            matches!(
+                err,
+                CommsError::Protocol { .. }
+                    | CommsError::Exhausted { .. }
+                    | CommsError::Disconnected { .. }
+            ),
+            "{err}"
+        );
+        assert!(server.join().unwrap().is_err());
+    }
+}

@@ -1,0 +1,163 @@
+//! Fault-tolerant comms for multi-process data parallelism.
+//!
+//! The ZeRO collectives in `coordinator/replicas.rs` assume every replica
+//! lives in this process and never fails. This module promotes them onto a
+//! real transport with explicit failure semantics, layered bottom-up:
+//!
+//! ```text
+//!   Trainer / chaos battery
+//!     └─ Cluster            worker handles + orchestrator service thread
+//!         └─ WorkerHandle / Orchestrator     typed protocol (wire::Msg)
+//!             └─ Retryer    bounded retries, exponential backoff + jitter
+//!                 └─ Timeouter               per-op deadline
+//!                     └─ Framed              encode/validate frames
+//!                         └─ [FaultPipe]     deterministic fault injection
+//!                             └─ ChannelPipe | TcpPipe    raw frame carrier
+//! ```
+//!
+//! Every layer speaks [`CommsError`]: a dead peer is a typed
+//! [`CommsError::Timeout`]/[`CommsError::Disconnected`], never a hang —
+//! all receive paths are deadline-bounded — and a corrupt frame is caught
+//! by the framer's checksum above the fault-injection point, so injected
+//! corruption can only surface as a clean error or a successful retry,
+//! never as silently wrong gradients.
+//!
+//! The orchestrator runs the *same* `reduce_scatter_into` /
+//! `all_gather_params_into` kernels the in-process path uses, under the
+//! same `shard_ranges` plan — the transport moves bit-exact f32 payloads,
+//! so in-process-transport training is bitwise identical to the
+//! thread-multiplexed path (asserted in `tests/train_e2e.rs`).
+
+pub mod cluster;
+pub mod fault;
+pub mod framer;
+pub mod handles;
+pub mod pipe;
+pub mod transport;
+pub mod wire;
+
+pub use cluster::{Cluster, CommsOptions, TransportKind};
+pub use fault::{FaultKind, FaultPipe, FaultPlan};
+pub use framer::{decode_frame, encode_frame, FRAME_HEADER_BYTES,
+                 MAX_PAYLOAD_BYTES};
+pub use handles::{Orchestrator, ReduceMode, WorkerHandle};
+pub use pipe::{ChannelPipe, Pipe, TcpPipe};
+pub use transport::{Framed, Retryer, Timeouter, Transport};
+pub use wire::Msg;
+
+use std::time::Duration;
+
+/// Typed comms failure. Split by what the caller can do about it:
+/// [`CommsError::is_transient`] errors are worth a bounded retry (the
+/// message — or its reply — may simply have been lost or mangled);
+/// everything else means the op cannot succeed on this connection and the
+/// caller must fail over (checkpoint rollback, transport rebuild) or give
+/// up with the error intact.
+#[derive(Debug)]
+pub enum CommsError {
+    /// The per-op deadline elapsed with no (complete) message.
+    Timeout { op: String, after: Duration },
+    /// The peer is gone: closed socket, dropped channel, crashed worker.
+    Disconnected { peer: String },
+    /// A frame or message failed validation (bad magic/version/length/
+    /// checksum, truncated or malformed payload).
+    Corrupt { what: String },
+    /// A frame declared a payload over [`MAX_PAYLOAD_BYTES`].
+    Oversized { len: usize, max: usize },
+    /// A well-formed message that violates the protocol phase.
+    Protocol { what: String },
+    /// A bounded retry loop ran out of attempts; carries the last error.
+    Exhausted {
+        op: String,
+        attempts: u32,
+        last: Box<CommsError>,
+    },
+    /// Underlying I/O failure that is none of the above.
+    Io { what: String },
+}
+
+impl CommsError {
+    /// Worth a bounded retry: the op itself may succeed on resend.
+    pub fn is_transient(&self) -> bool {
+        matches!(
+            self,
+            CommsError::Timeout { .. } | CommsError::Corrupt { .. }
+        )
+    }
+}
+
+impl std::fmt::Display for CommsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommsError::Timeout { op, after } => {
+                write!(f, "comms timeout: {op} exceeded {after:?}")
+            }
+            CommsError::Disconnected { peer } => {
+                write!(f, "comms disconnected: {peer} is gone")
+            }
+            CommsError::Corrupt { what } => {
+                write!(f, "comms corrupt frame: {what}")
+            }
+            CommsError::Oversized { len, max } => {
+                write!(f, "comms oversized frame: {len} bytes (max {max})")
+            }
+            CommsError::Protocol { what } => {
+                write!(f, "comms protocol violation: {what}")
+            }
+            CommsError::Exhausted { op, attempts, last } => {
+                write!(f, "comms retries exhausted: {op} failed {attempts} \
+                           attempts, last error: {last}")
+            }
+            CommsError::Io { what } => write!(f, "comms i/o error: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for CommsError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transience_classification() {
+        let t = CommsError::Timeout {
+            op: "recv".into(),
+            after: Duration::from_millis(5),
+        };
+        let c = CommsError::Corrupt { what: "checksum".into() };
+        assert!(t.is_transient());
+        assert!(c.is_transient());
+        let d = CommsError::Disconnected { peer: "worker 1".into() };
+        let o = CommsError::Oversized { len: 9, max: 8 };
+        let p = CommsError::Protocol { what: "phase".into() };
+        let x = CommsError::Exhausted {
+            op: "rpc".into(),
+            attempts: 3,
+            last: Box::new(CommsError::Timeout {
+                op: "recv".into(),
+                after: Duration::from_millis(5),
+            }),
+        };
+        for e in [&d, &o, &p, &x] {
+            assert!(!e.is_transient(), "{e}");
+        }
+    }
+
+    #[test]
+    fn display_names_the_failure() {
+        let e = CommsError::Timeout {
+            op: "recv_reduced".into(),
+            after: Duration::from_millis(50),
+        };
+        assert!(e.to_string().contains("timeout"));
+        assert!(e.to_string().contains("recv_reduced"));
+        let e = CommsError::Exhausted {
+            op: "reduce".into(),
+            attempts: 4,
+            last: Box::new(CommsError::Corrupt { what: "crc".into() }),
+        };
+        let s = e.to_string();
+        assert!(s.contains("4 attempts") && s.contains("crc"), "{s}");
+    }
+}

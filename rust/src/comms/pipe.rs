@@ -1,0 +1,298 @@
+//! Raw frame carriers: the bottom of the comms stack.
+//!
+//! A [`Pipe`] moves opaque frames (as produced by [`super::framer`])
+//! between two endpoints. It makes no promise about frame *validity* —
+//! that is the framing layer's job, which deliberately sits above the
+//! fault-injection point — only about delivery and deadline semantics:
+//! `recv` never blocks past its timeout, and a gone peer is a typed
+//! [`CommsError::Disconnected`], not a hang.
+//!
+//! Two carriers:
+//! - [`ChannelPipe`]: in-process `mpsc` pair; frames arrive whole.
+//! - [`TcpPipe`]: length-prefix segmentation over a byte stream, with a
+//!   resumable internal buffer (a timeout mid-frame keeps the partial
+//!   bytes and the next `recv` continues where it left off) and a poison
+//!   flag once the stream desynchronizes.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use super::framer::{frame_total_len, FRAME_HEADER_BYTES};
+use super::CommsError;
+
+/// A bidirectional frame carrier between two endpoints.
+pub trait Pipe: Send {
+    /// Send one frame. Blocks at most the carrier's write budget.
+    fn send(&mut self, frame: &[u8]) -> Result<(), CommsError>;
+    /// Receive one frame, waiting at most `timeout`.
+    fn recv(&mut self, timeout: Duration) -> Result<Vec<u8>, CommsError>;
+    /// Human-readable peer name for error messages.
+    fn peer(&self) -> String;
+}
+
+// ---------------------------------------------------------------- channel
+
+/// In-process carrier over a pair of `mpsc` channels. The reference
+/// transport: no I/O, no partial delivery, frames arrive exactly as sent.
+pub struct ChannelPipe {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+    peer: String,
+}
+
+impl ChannelPipe {
+    /// Two connected endpoints: what one sends, the other receives.
+    pub fn pair(a_name: &str, b_name: &str) -> (ChannelPipe, ChannelPipe) {
+        let (a_tx, b_rx) = mpsc::channel();
+        let (b_tx, a_rx) = mpsc::channel();
+        (
+            ChannelPipe { tx: a_tx, rx: a_rx, peer: b_name.to_string() },
+            ChannelPipe { tx: b_tx, rx: b_rx, peer: a_name.to_string() },
+        )
+    }
+}
+
+impl Pipe for ChannelPipe {
+    fn send(&mut self, frame: &[u8]) -> Result<(), CommsError> {
+        self.tx
+            .send(frame.to_vec())
+            .map_err(|_| CommsError::Disconnected { peer: self.peer() })
+    }
+
+    fn recv(&mut self, timeout: Duration) -> Result<Vec<u8>, CommsError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(frame) => Ok(frame),
+            Err(RecvTimeoutError::Timeout) => Err(CommsError::Timeout {
+                op: format!("recv from {}", self.peer),
+                after: timeout,
+            }),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(CommsError::Disconnected { peer: self.peer() })
+            }
+        }
+    }
+
+    fn peer(&self) -> String {
+        self.peer.clone()
+    }
+}
+
+// -------------------------------------------------------------------- tcp
+
+/// Frame carrier over a TCP stream. Segments the byte stream with the
+/// frame header's declared length; keeps partial bytes across timeouts so
+/// a slow frame resumes instead of restarting.
+pub struct TcpPipe {
+    stream: TcpStream,
+    peer: String,
+    /// Bytes read off the wire but not yet returned as a frame.
+    buf: Vec<u8>,
+    /// Set once the stream desynchronizes (a header failed validation):
+    /// frame boundaries are lost, so every later recv fails fast.
+    poisoned: bool,
+    write_timeout: Duration,
+}
+
+impl TcpPipe {
+    pub fn new(stream: TcpStream, peer: &str, write_timeout: Duration)
+        -> TcpPipe
+    {
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_write_timeout(Some(write_timeout.max(
+            Duration::from_millis(1),
+        )));
+        TcpPipe {
+            stream,
+            peer: peer.to_string(),
+            buf: Vec::new(),
+            poisoned: false,
+            write_timeout,
+        }
+    }
+
+    /// Loopback-connected pair, for tests and single-host tcp clusters.
+    pub fn pair(a_name: &str, b_name: &str, write_timeout: Duration)
+        -> std::io::Result<(TcpPipe, TcpPipe)>
+    {
+        let listener = TcpListener::bind(("127.0.0.1", 0))?;
+        let addr = listener.local_addr()?;
+        let client = TcpStream::connect(addr)?;
+        let (server, _) = listener.accept()?;
+        Ok((
+            TcpPipe::new(client, b_name, write_timeout),
+            TcpPipe::new(server, a_name, write_timeout),
+        ))
+    }
+
+    fn io_err(&self, e: std::io::Error, op: &str) -> CommsError {
+        use std::io::ErrorKind::*;
+        match e.kind() {
+            WouldBlock | TimedOut => CommsError::Timeout {
+                op: format!("{op} {}", self.peer),
+                after: self.write_timeout,
+            },
+            BrokenPipe | ConnectionReset | ConnectionAborted
+            | UnexpectedEof | NotConnected => {
+                CommsError::Disconnected { peer: self.peer.clone() }
+            }
+            _ => CommsError::Io {
+                what: format!("{op} {}: {e}", self.peer),
+            },
+        }
+    }
+
+    /// Read at least one more chunk into `buf`, honoring `deadline`.
+    fn fill(&mut self, deadline: Instant, want: usize)
+        -> Result<(), CommsError>
+    {
+        let now = Instant::now();
+        if now >= deadline {
+            return Err(CommsError::Timeout {
+                op: format!("recv from {}", self.peer),
+                after: Duration::ZERO,
+            });
+        }
+        // never pass a zero timeout to the socket: std rejects it
+        let remaining = (deadline - now).max(Duration::from_millis(1));
+        self.stream
+            .set_read_timeout(Some(remaining))
+            .map_err(|e| self.io_err(e, "recv from"))?;
+        let mut chunk = [0u8; 64 * 1024];
+        let cap = chunk.len().min(want.max(1));
+        match self.stream.read(&mut chunk[..cap]) {
+            Ok(0) => Err(CommsError::Disconnected { peer: self.peer() }),
+            Ok(n) => {
+                self.buf.extend_from_slice(&chunk[..n]);
+                Ok(())
+            }
+            Err(e) => Err(self.io_err(e, "recv from")),
+        }
+    }
+}
+
+impl Pipe for TcpPipe {
+    fn send(&mut self, frame: &[u8]) -> Result<(), CommsError> {
+        self.stream
+            .write_all(frame)
+            .and_then(|()| self.stream.flush())
+            .map_err(|e| self.io_err(e, "send to"))
+    }
+
+    fn recv(&mut self, timeout: Duration) -> Result<Vec<u8>, CommsError> {
+        if self.poisoned {
+            return Err(CommsError::Io {
+                what: format!(
+                    "stream to {} poisoned: frame boundary lost",
+                    self.peer
+                ),
+            });
+        }
+        let deadline = Instant::now() + timeout;
+        while self.buf.len() < FRAME_HEADER_BYTES {
+            let need = FRAME_HEADER_BYTES - self.buf.len();
+            self.fill(deadline, need)?;
+        }
+        // Header validation failure here means we can no longer tell where
+        // frames begin: poison the stream rather than guess.
+        let total = match frame_total_len(&self.buf) {
+            Ok(t) => t,
+            Err(e) => {
+                self.poisoned = true;
+                return Err(e);
+            }
+        };
+        while self.buf.len() < total {
+            let need = total - self.buf.len();
+            self.fill(deadline, need)?;
+        }
+        let rest = self.buf.split_off(total);
+        let frame = std::mem::replace(&mut self.buf, rest);
+        Ok(frame)
+    }
+
+    fn peer(&self) -> String {
+        self.peer.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::framer::encode_frame;
+    use super::*;
+
+    const T: Duration = Duration::from_millis(500);
+
+    #[test]
+    fn channel_roundtrip_both_directions() {
+        let (mut a, mut b) = ChannelPipe::pair("a", "b");
+        a.send(b"ping").unwrap();
+        assert_eq!(b.recv(T).unwrap(), b"ping");
+        b.send(b"pong").unwrap();
+        assert_eq!(a.recv(T).unwrap(), b"pong");
+    }
+
+    #[test]
+    fn channel_timeout_and_disconnect_are_typed() {
+        let (mut a, b) = ChannelPipe::pair("a", "b");
+        let err = a.recv(Duration::from_millis(10)).unwrap_err();
+        assert!(matches!(err, CommsError::Timeout { .. }), "{err}");
+        drop(b);
+        assert!(matches!(
+            a.recv(T).unwrap_err(),
+            CommsError::Disconnected { .. }
+        ));
+        assert!(matches!(
+            a.send(b"x").unwrap_err(),
+            CommsError::Disconnected { .. }
+        ));
+    }
+
+    #[test]
+    fn tcp_roundtrip_multiple_frames() {
+        let (mut a, mut b) = TcpPipe::pair("a", "b", T).unwrap();
+        let f1 = encode_frame(b"first").unwrap();
+        let f2 = encode_frame(&vec![7u8; 100_000]).unwrap();
+        a.send(&f1).unwrap();
+        a.send(&f2).unwrap();
+        assert_eq!(b.recv(T).unwrap(), f1);
+        assert_eq!(b.recv(T).unwrap(), f2);
+    }
+
+    #[test]
+    fn tcp_partial_frame_resumes_after_timeout() {
+        let (mut a, mut b) = TcpPipe::pair("a", "b", T).unwrap();
+        let frame = encode_frame(b"split delivery").unwrap();
+        let (head, tail) = frame.split_at(FRAME_HEADER_BYTES + 3);
+        a.stream.write_all(head).unwrap();
+        a.stream.flush().unwrap();
+        let err = b.recv(Duration::from_millis(20)).unwrap_err();
+        assert!(matches!(err, CommsError::Timeout { .. }), "{err}");
+        a.stream.write_all(tail).unwrap();
+        a.stream.flush().unwrap();
+        assert_eq!(b.recv(T).unwrap(), frame);
+    }
+
+    #[test]
+    fn tcp_garbage_header_poisons_stream() {
+        let (mut a, mut b) = TcpPipe::pair("a", "b", T).unwrap();
+        a.stream.write_all(&[0xAAu8; 32]).unwrap();
+        a.stream.flush().unwrap();
+        let err = b.recv(T).unwrap_err();
+        assert!(matches!(err, CommsError::Corrupt { .. }), "{err}");
+        // boundary is lost for good: fail fast forever after
+        let err = b.recv(T).unwrap_err();
+        assert!(err.to_string().contains("poisoned"), "{err}");
+    }
+
+    #[test]
+    fn tcp_peer_close_is_disconnected() {
+        let (a, mut b) = TcpPipe::pair("a", "b", T).unwrap();
+        drop(a);
+        assert!(matches!(
+            b.recv(T).unwrap_err(),
+            CommsError::Disconnected { .. }
+        ));
+    }
+}

@@ -1,0 +1,251 @@
+//! Message transports and the composable robustness layers over them.
+//!
+//! [`Framed`] turns a raw [`Pipe`] into a validated message transport:
+//! every payload is wrapped in a checksummed frame on the way out and
+//! verified on the way in, so anything the carrier (or an injected fault)
+//! mangles surfaces as [`CommsError::Corrupt`]. [`Timeouter`] caps how
+//! long any single receive may wait, and [`Retryer`] retries transient
+//! failures with exponential backoff + jitter, converting persistent ones
+//! into [`CommsError::Exhausted`]. The layers compose over any
+//! [`Transport`], so the protocol handles don't care whether they run on
+//! channels, TCP, or a fault-injected wrapper of either.
+
+use std::time::Duration;
+
+use super::framer::{decode_frame, encode_frame};
+use super::pipe::Pipe;
+use super::CommsError;
+use crate::util::Backoff;
+
+/// A validated, message-oriented channel to one peer.
+pub trait Transport: Send {
+    /// Send one message (payload bytes, framing is an implementation
+    /// detail below this trait).
+    fn send(&mut self, payload: &[u8]) -> Result<(), CommsError>;
+    /// Receive one message, waiting at most `timeout`.
+    fn recv(&mut self, timeout: Duration) -> Result<Vec<u8>, CommsError>;
+    /// Peer name for errors and logs.
+    fn peer(&self) -> String;
+}
+
+impl Transport for Box<dyn Transport> {
+    fn send(&mut self, payload: &[u8]) -> Result<(), CommsError> {
+        (**self).send(payload)
+    }
+    fn recv(&mut self, timeout: Duration) -> Result<Vec<u8>, CommsError> {
+        (**self).recv(timeout)
+    }
+    fn peer(&self) -> String {
+        (**self).peer()
+    }
+}
+
+// ----------------------------------------------------------------- framed
+
+/// Frame encode/validate over a raw pipe. The checksum boundary of the
+/// stack: everything below moves untrusted bytes, everything above
+/// handles validated payloads.
+pub struct Framed {
+    pipe: Box<dyn Pipe>,
+}
+
+impl Framed {
+    pub fn new(pipe: Box<dyn Pipe>) -> Framed {
+        Framed { pipe }
+    }
+}
+
+impl Transport for Framed {
+    fn send(&mut self, payload: &[u8]) -> Result<(), CommsError> {
+        let frame = encode_frame(payload)?;
+        self.pipe.send(&frame)
+    }
+
+    fn recv(&mut self, timeout: Duration) -> Result<Vec<u8>, CommsError> {
+        let frame = self.pipe.recv(timeout)?;
+        decode_frame(&frame)
+    }
+
+    fn peer(&self) -> String {
+        self.pipe.peer()
+    }
+}
+
+// -------------------------------------------------------------- timeouter
+
+/// Caps every receive at a per-op deadline, so a dead or wedged peer
+/// costs at most `cap` before surfacing as [`CommsError::Timeout`].
+pub struct Timeouter<T: Transport> {
+    inner: T,
+    cap: Duration,
+}
+
+impl<T: Transport> Timeouter<T> {
+    pub fn new(inner: T, cap: Duration) -> Timeouter<T> {
+        Timeouter { inner, cap }
+    }
+}
+
+impl<T: Transport> Transport for Timeouter<T> {
+    fn send(&mut self, payload: &[u8]) -> Result<(), CommsError> {
+        self.inner.send(payload)
+    }
+
+    fn recv(&mut self, timeout: Duration) -> Result<Vec<u8>, CommsError> {
+        self.inner.recv(timeout.min(self.cap))
+    }
+
+    fn peer(&self) -> String {
+        self.inner.peer()
+    }
+}
+
+// ---------------------------------------------------------------- retryer
+
+/// Run `op` up to `attempts` times, sleeping a jittered exponential
+/// backoff between transient failures. Non-transient errors abort
+/// immediately; running out of attempts yields [`CommsError::Exhausted`]
+/// with the last error attached. This is the retry engine for both
+/// [`Retryer`] and the protocol-level resend loops in `handles`.
+pub fn retry<R>(
+    op_name: &str,
+    attempts: u32,
+    backoff: &mut Backoff,
+    mut op: impl FnMut() -> Result<R, CommsError>,
+) -> Result<R, CommsError> {
+    let attempts = attempts.max(1);
+    let mut last = None;
+    for attempt in 0..attempts {
+        match op() {
+            Ok(r) => return Ok(r),
+            Err(e) if e.is_transient() => {
+                if attempt + 1 < attempts {
+                    std::thread::sleep(backoff.delay(attempt));
+                }
+                last = Some(e);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Err(CommsError::Exhausted {
+        op: op_name.to_string(),
+        attempts,
+        last: Box::new(last.expect("attempts >= 1")),
+    })
+}
+
+/// Bounded-retry wrapper: transient send/recv failures are retried with
+/// backoff; persistent ones become [`CommsError::Exhausted`].
+pub struct Retryer<T: Transport> {
+    inner: T,
+    attempts: u32,
+    backoff: Backoff,
+}
+
+impl<T: Transport> Retryer<T> {
+    pub fn new(inner: T, attempts: u32, backoff: Backoff) -> Retryer<T> {
+        Retryer { inner, attempts, backoff }
+    }
+}
+
+impl<T: Transport> Transport for Retryer<T> {
+    fn send(&mut self, payload: &[u8]) -> Result<(), CommsError> {
+        let (inner, backoff) = (&mut self.inner, &mut self.backoff);
+        retry("send", self.attempts, backoff, || inner.send(payload))
+    }
+
+    fn recv(&mut self, timeout: Duration) -> Result<Vec<u8>, CommsError> {
+        let (inner, backoff) = (&mut self.inner, &mut self.backoff);
+        retry("recv", self.attempts, backoff, || inner.recv(timeout))
+    }
+
+    fn peer(&self) -> String {
+        self.inner.peer()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::fault::{FaultKind, FaultPipe, FaultPlan};
+    use super::super::pipe::ChannelPipe;
+    use super::*;
+    use std::time::Instant;
+
+    const T: Duration = Duration::from_millis(500);
+
+    fn backoff() -> Backoff {
+        Backoff::new(Duration::from_micros(100), Duration::from_millis(2), 1)
+    }
+
+    #[test]
+    fn framed_roundtrip() {
+        let (a, b) = ChannelPipe::pair("a", "b");
+        let mut tx = Framed::new(Box::new(a));
+        let mut rx = Framed::new(Box::new(b));
+        tx.send(b"typed payload").unwrap();
+        assert_eq!(rx.recv(T).unwrap(), b"typed payload");
+    }
+
+    #[test]
+    fn framed_catches_wire_corruption() {
+        let (a, b) = ChannelPipe::pair("a", "b");
+        let plan = FaultPlan::none().on_send(0, FaultKind::Corrupt);
+        let mut tx = Framed::new(Box::new(FaultPipe::new(Box::new(a), plan)));
+        let mut rx = Framed::new(Box::new(b));
+        tx.send(b"gradient bytes").unwrap();
+        let err = rx.recv(T).unwrap_err();
+        assert!(matches!(err, CommsError::Corrupt { .. }), "{err}");
+    }
+
+    #[test]
+    fn timeouter_caps_the_wait() {
+        let (a, b) = ChannelPipe::pair("a", "b");
+        let _keep_alive = a;
+        let cap = Duration::from_millis(20);
+        let mut rx = Timeouter::new(Framed::new(Box::new(b)), cap);
+        let start = Instant::now();
+        let err = rx.recv(Duration::from_secs(3600)).unwrap_err();
+        assert!(matches!(err, CommsError::Timeout { .. }), "{err}");
+        assert!(
+            start.elapsed() < Duration::from_secs(5),
+            "deadline was not clamped: waited {:?}",
+            start.elapsed()
+        );
+    }
+
+    #[test]
+    fn retryer_recovers_when_a_duplicate_survives() {
+        // op 0 corrupted, op 1 is a clean copy: one retry wins
+        let (a, b) = ChannelPipe::pair("a", "b");
+        let plan = FaultPlan::none().on_send(0, FaultKind::Corrupt);
+        let mut tx = Framed::new(Box::new(FaultPipe::new(Box::new(a), plan)));
+        let mut rx = Retryer::new(Framed::new(Box::new(b)), 3, backoff());
+        tx.send(b"resent payload").unwrap();
+        tx.send(b"resent payload").unwrap();
+        assert_eq!(rx.recv(T).unwrap(), b"resent payload");
+    }
+
+    #[test]
+    fn retryer_exhausts_into_typed_error() {
+        let (a, b) = ChannelPipe::pair("a", "b");
+        let _keep_alive = a;
+        let mut rx = Retryer::new(Framed::new(Box::new(b)), 3, backoff());
+        let err = rx.recv(Duration::from_millis(5)).unwrap_err();
+        match err {
+            CommsError::Exhausted { attempts, last, .. } => {
+                assert_eq!(attempts, 3);
+                assert!(matches!(*last, CommsError::Timeout { .. }));
+            }
+            other => panic!("expected Exhausted, got {other}"),
+        }
+    }
+
+    #[test]
+    fn retryer_aborts_on_non_transient() {
+        let (a, b) = ChannelPipe::pair("a", "b");
+        drop(a);
+        let mut rx = Retryer::new(Framed::new(Box::new(b)), 5, backoff());
+        let err = rx.recv(T).unwrap_err();
+        assert!(matches!(err, CommsError::Disconnected { .. }), "{err}");
+    }
+}

@@ -1,0 +1,500 @@
+//! Typed protocol messages and their byte codec.
+//!
+//! The orchestrator/worker protocol exchanges [`Msg`] values as frame
+//! payloads. The codec is little-endian, self-describing (tag byte +
+//! tensor headers), and **bitwise**: an f32 roundtrips through
+//! `to_le_bytes`/`from_le_bytes` unchanged, including NaN payloads, so
+//! the transport can never perturb a gradient. Decoding is fully
+//! bounds-checked — any truncated or malformed payload is a typed
+//! [`CommsError::Corrupt`], never a panic or a wrong value (the frame
+//! checksum below has already caught wire corruption; this layer guards
+//! against protocol bugs and torn frames).
+
+use super::CommsError;
+use crate::runtime::tensor::{Tensor, TensorData};
+
+/// Most dims any tensor in this codebase has; a decoded header above
+/// this is malformed by construction.
+const MAX_NDIM: u32 = 8;
+
+/// A protocol message. `step` fields make the protocol idempotent: a
+/// duplicated or re-sent message for an old step is recognized and
+/// deduplicated instead of corrupting the current collective.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Worker `rank`'s accumulated gradients for `step`.
+    Grads { rank: u32, step: u64, tensors: Vec<Tensor> },
+    /// Orchestrator's reply: reduced gradient shard(s) for `step`.
+    /// `groups[s]` is how many of `tensors` belong to plan shard `s`, so
+    /// the receiver can reassemble the per-shard structure.
+    Reduced { step: u64, groups: Vec<u32>, tensors: Vec<Tensor> },
+    /// Worker `rank` requests the gathered full parameters at `step`,
+    /// shipping its owned shard lists (`groups[s]` tensors per shard) for
+    /// the orchestrator to run the gather kernel over.
+    GatherReq { rank: u32, step: u64, groups: Vec<u32>, tensors: Vec<Tensor> },
+    /// Gathered full parameters for `step`.
+    Gathered { step: u64, tensors: Vec<Tensor> },
+    /// Worker `rank` is done; clean end of the run.
+    Shutdown { rank: u32 },
+    /// The collective at `step` cannot complete; workers must bail out.
+    Abort { step: u64, reason: String },
+}
+
+const TAG_GRADS: u8 = 1;
+const TAG_REDUCED: u8 = 2;
+const TAG_GATHER_REQ: u8 = 3;
+const TAG_GATHERED: u8 = 4;
+const TAG_SHUTDOWN: u8 = 5;
+const TAG_ABORT: u8 = 6;
+
+impl Msg {
+    /// Short name for logs and error messages.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Msg::Grads { .. } => "Grads",
+            Msg::Reduced { .. } => "Reduced",
+            Msg::GatherReq { .. } => "GatherReq",
+            Msg::Gathered { .. } => "Gathered",
+            Msg::Shutdown { .. } => "Shutdown",
+            Msg::Abort { .. } => "Abort",
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        match self {
+            Msg::Grads { rank, step, tensors } => {
+                b.push(TAG_GRADS);
+                b.extend_from_slice(&rank.to_le_bytes());
+                b.extend_from_slice(&step.to_le_bytes());
+                encode_tensors(&mut b, tensors);
+            }
+            Msg::Reduced { step, groups, tensors } => {
+                b.push(TAG_REDUCED);
+                b.extend_from_slice(&step.to_le_bytes());
+                b.extend_from_slice(&(groups.len() as u32).to_le_bytes());
+                for g in groups {
+                    b.extend_from_slice(&g.to_le_bytes());
+                }
+                encode_tensors(&mut b, tensors);
+            }
+            Msg::GatherReq { rank, step, groups, tensors } => {
+                b.push(TAG_GATHER_REQ);
+                b.extend_from_slice(&rank.to_le_bytes());
+                b.extend_from_slice(&step.to_le_bytes());
+                b.extend_from_slice(&(groups.len() as u32).to_le_bytes());
+                for g in groups {
+                    b.extend_from_slice(&g.to_le_bytes());
+                }
+                encode_tensors(&mut b, tensors);
+            }
+            Msg::Gathered { step, tensors } => {
+                b.push(TAG_GATHERED);
+                b.extend_from_slice(&step.to_le_bytes());
+                encode_tensors(&mut b, tensors);
+            }
+            Msg::Shutdown { rank } => {
+                b.push(TAG_SHUTDOWN);
+                b.extend_from_slice(&rank.to_le_bytes());
+            }
+            Msg::Abort { step, reason } => {
+                b.push(TAG_ABORT);
+                b.extend_from_slice(&step.to_le_bytes());
+                let bytes = reason.as_bytes();
+                b.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+                b.extend_from_slice(bytes);
+            }
+        }
+        b
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Msg, CommsError> {
+        let mut c = Cursor { b: bytes, i: 0 };
+        let tag = c.u8()?;
+        let msg = match tag {
+            TAG_GRADS => Msg::Grads {
+                rank: c.u32()?,
+                step: c.u64()?,
+                tensors: decode_tensors(&mut c)?,
+            },
+            TAG_REDUCED => {
+                let step = c.u64()?;
+                let n_groups = c.u32()? as usize;
+                let mut groups = Vec::with_capacity(n_groups.min(1 << 16));
+                for _ in 0..n_groups {
+                    groups.push(c.u32()?);
+                }
+                Msg::Reduced {
+                    step,
+                    groups,
+                    tensors: decode_tensors(&mut c)?,
+                }
+            }
+            TAG_GATHER_REQ => {
+                let rank = c.u32()?;
+                let step = c.u64()?;
+                let n_groups = c.u32()? as usize;
+                let mut groups = Vec::with_capacity(n_groups.min(1 << 16));
+                for _ in 0..n_groups {
+                    groups.push(c.u32()?);
+                }
+                Msg::GatherReq {
+                    rank,
+                    step,
+                    groups,
+                    tensors: decode_tensors(&mut c)?,
+                }
+            }
+            TAG_GATHERED => Msg::Gathered {
+                step: c.u64()?,
+                tensors: decode_tensors(&mut c)?,
+            },
+            TAG_SHUTDOWN => Msg::Shutdown { rank: c.u32()? },
+            TAG_ABORT => {
+                let step = c.u64()?;
+                let len = c.u32()? as usize;
+                let raw = c.take(len)?;
+                let reason = String::from_utf8_lossy(raw).into_owned();
+                Msg::Abort { step, reason }
+            }
+            other => {
+                return Err(CommsError::Corrupt {
+                    what: format!("unknown message tag {other}"),
+                })
+            }
+        };
+        if c.i != bytes.len() {
+            return Err(CommsError::Corrupt {
+                what: format!(
+                    "{} bytes of trailing garbage after {} message",
+                    bytes.len() - c.i,
+                    msg.kind()
+                ),
+            });
+        }
+        Ok(msg)
+    }
+}
+
+/// Borrowed-slice encoders: byte-identical to [`Msg::encode`] on the
+/// corresponding variant, without cloning tensor data into a `Msg` first.
+/// The hot collective path sends multi-megabyte gradient sets every step;
+/// these keep that to a single copy (tensor → wire bytes).
+impl Msg {
+    pub fn grads_bytes(rank: u32, step: u64, tensors: &[Tensor]) -> Vec<u8> {
+        let mut b = vec![TAG_GRADS];
+        b.extend_from_slice(&rank.to_le_bytes());
+        b.extend_from_slice(&step.to_le_bytes());
+        encode_tensors(&mut b, tensors);
+        b
+    }
+
+    pub fn reduced_bytes(step: u64, owned: &[Vec<Tensor>]) -> Vec<u8> {
+        let mut b = vec![TAG_REDUCED];
+        b.extend_from_slice(&step.to_le_bytes());
+        b.extend_from_slice(&(owned.len() as u32).to_le_bytes());
+        for group in owned {
+            b.extend_from_slice(&(group.len() as u32).to_le_bytes());
+        }
+        let refs: Vec<&Tensor> = owned.iter().flatten().collect();
+        encode_tensor_refs(&mut b, &refs);
+        b
+    }
+
+    pub fn gather_req_bytes(rank: u32, step: u64, owned: &[Vec<Tensor>])
+        -> Vec<u8>
+    {
+        let mut b = vec![TAG_GATHER_REQ];
+        b.extend_from_slice(&rank.to_le_bytes());
+        b.extend_from_slice(&step.to_le_bytes());
+        b.extend_from_slice(&(owned.len() as u32).to_le_bytes());
+        for group in owned {
+            b.extend_from_slice(&(group.len() as u32).to_le_bytes());
+        }
+        let refs: Vec<&Tensor> = owned.iter().flatten().collect();
+        encode_tensor_refs(&mut b, &refs);
+        b
+    }
+
+    pub fn gathered_bytes(step: u64, full: &[Tensor]) -> Vec<u8> {
+        let mut b = vec![TAG_GATHERED];
+        b.extend_from_slice(&step.to_le_bytes());
+        encode_tensors(&mut b, full);
+        b
+    }
+}
+
+// ------------------------------------------------------------ tensor codec
+
+fn encode_tensors(b: &mut Vec<u8>, tensors: &[Tensor]) {
+    let refs: Vec<&Tensor> = tensors.iter().collect();
+    encode_tensor_refs(b, &refs);
+}
+
+fn encode_tensor_refs(b: &mut Vec<u8>, tensors: &[&Tensor]) {
+    b.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for t in tensors {
+        b.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+        for &d in &t.shape {
+            b.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        match &t.data {
+            TensorData::F32(v) => {
+                b.push(0);
+                for x in v {
+                    b.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            TensorData::I32(v) => {
+                b.push(1);
+                for x in v {
+                    b.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+}
+
+fn decode_tensors(c: &mut Cursor<'_>) -> Result<Vec<Tensor>, CommsError> {
+    let count = c.u32()? as usize;
+    let mut tensors = Vec::with_capacity(count.min(1 << 16));
+    for _ in 0..count {
+        let ndim = c.u32()?;
+        if ndim > MAX_NDIM {
+            return Err(CommsError::Corrupt {
+                what: format!("tensor header declares {ndim} dims"),
+            });
+        }
+        let mut shape = Vec::with_capacity(ndim as usize);
+        let mut numel: usize = 1;
+        for _ in 0..ndim {
+            let d = c.u64()? as usize;
+            numel = numel.checked_mul(d).ok_or_else(|| {
+                CommsError::Corrupt {
+                    what: "tensor shape overflows".to_string(),
+                }
+            })?;
+            shape.push(d);
+        }
+        let kind = c.u8()?;
+        let data = match kind {
+            0 => {
+                let raw = c.take(numel.checked_mul(4).ok_or_else(|| {
+                    CommsError::Corrupt {
+                        what: "tensor payload overflows".to_string(),
+                    }
+                })?)?;
+                TensorData::F32(
+                    raw.chunks_exact(4)
+                        .map(|q| f32::from_le_bytes([q[0], q[1], q[2], q[3]]))
+                        .collect(),
+                )
+            }
+            1 => {
+                let raw = c.take(numel.checked_mul(4).ok_or_else(|| {
+                    CommsError::Corrupt {
+                        what: "tensor payload overflows".to_string(),
+                    }
+                })?)?;
+                TensorData::I32(
+                    raw.chunks_exact(4)
+                        .map(|q| i32::from_le_bytes([q[0], q[1], q[2], q[3]]))
+                        .collect(),
+                )
+            }
+            other => {
+                return Err(CommsError::Corrupt {
+                    what: format!("unknown tensor dtype tag {other}"),
+                })
+            }
+        };
+        tensors.push(Tensor { shape, data });
+    }
+    Ok(tensors)
+}
+
+// ------------------------------------------------------------------ cursor
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CommsError> {
+        let end = self.i.checked_add(n).filter(|&e| e <= self.b.len());
+        match end {
+            Some(end) => {
+                let s = &self.b[self.i..end];
+                self.i = end;
+                Ok(s)
+            }
+            None => Err(CommsError::Corrupt {
+                what: format!(
+                    "message truncated: wanted {n} bytes at offset {}, have \
+                     {}",
+                    self.i,
+                    self.b.len()
+                ),
+            }),
+        }
+    }
+
+    fn u8(&mut self) -> Result<u8, CommsError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, CommsError> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, CommsError> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7],
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_tensors() -> Vec<Tensor> {
+        vec![
+            Tensor::f32(vec![2, 3], vec![1.0, -2.5, 0.0, f32::MIN,
+                                         f32::MAX, 3.125]),
+            Tensor::i32(vec![2], vec![-7, 42]),
+            Tensor::f32(vec![0], vec![]),
+        ]
+    }
+
+    #[test]
+    fn all_variants_roundtrip() {
+        let msgs = vec![
+            Msg::Grads { rank: 3, step: 17, tensors: sample_tensors() },
+            Msg::Reduced {
+                step: 17,
+                groups: vec![2, 0, 1],
+                tensors: sample_tensors(),
+            },
+            Msg::GatherReq {
+                rank: 0,
+                step: 1,
+                groups: vec![3, 0],
+                tensors: sample_tensors(),
+            },
+            Msg::Gathered { step: 9, tensors: sample_tensors() },
+            Msg::Shutdown { rank: 2 },
+            Msg::Abort { step: 5, reason: "reduce failed".to_string() },
+        ];
+        for m in msgs {
+            let decoded = Msg::decode(&m.encode()).unwrap();
+            assert_eq!(decoded, m);
+        }
+    }
+
+    #[test]
+    fn borrowed_encoders_match_owned_encode() {
+        let ts = sample_tensors();
+        assert_eq!(
+            Msg::grads_bytes(3, 17, &ts),
+            Msg::Grads { rank: 3, step: 17, tensors: ts.clone() }.encode()
+        );
+        assert_eq!(
+            Msg::gathered_bytes(9, &ts),
+            Msg::Gathered { step: 9, tensors: ts.clone() }.encode()
+        );
+        let owned = vec![ts[..2].to_vec(), vec![], ts[2..].to_vec()];
+        assert_eq!(
+            Msg::reduced_bytes(17, &owned),
+            Msg::Reduced {
+                step: 17,
+                groups: vec![2, 0, 1],
+                tensors: ts.clone(),
+            }
+            .encode()
+        );
+        assert_eq!(
+            Msg::gather_req_bytes(1, 4, &owned),
+            Msg::GatherReq {
+                rank: 1,
+                step: 4,
+                groups: vec![2, 0, 1],
+                tensors: ts.clone(),
+            }
+            .encode()
+        );
+    }
+
+    #[test]
+    fn f32_payloads_are_bitwise() {
+        let specials = vec![
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            -0.0,
+            f32::from_bits(0x7FC0_1234), // NaN with payload bits
+            f32::MIN_POSITIVE / 2.0,     // subnormal
+        ];
+        let m = Msg::Reduced {
+            step: 1,
+            groups: vec![1],
+            tensors: vec![Tensor::f32(vec![specials.len()],
+                                      specials.clone())],
+        };
+        let decoded = Msg::decode(&m.encode()).unwrap();
+        let Msg::Reduced { tensors, .. } = decoded else { unreachable!() };
+        let got = tensors[0].as_f32().unwrap();
+        for (a, b) in specials.iter().zip(got) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn truncation_anywhere_is_typed() {
+        let full = Msg::Grads { rank: 1, step: 2, tensors: sample_tensors() }
+            .encode();
+        for cut in 0..full.len() {
+            let err = Msg::decode(&full[..cut]).unwrap_err();
+            assert!(
+                matches!(err, CommsError::Corrupt { .. }),
+                "cut at {cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn malformed_headers_are_typed() {
+        // unknown tag
+        assert!(Msg::decode(&[99]).is_err());
+        // empty message
+        assert!(Msg::decode(&[]).is_err());
+        // trailing garbage
+        let mut b = Msg::Shutdown { rank: 0 }.encode();
+        b.push(0xFF);
+        let err = Msg::decode(&b).unwrap_err();
+        assert!(err.to_string().contains("trailing"), "{err}");
+        // absurd ndim
+        let mut b = vec![TAG_REDUCED];
+        b.extend_from_slice(&1u64.to_le_bytes()); // step
+        b.extend_from_slice(&0u32.to_le_bytes()); // no groups
+        b.extend_from_slice(&1u32.to_le_bytes()); // one tensor
+        b.extend_from_slice(&(MAX_NDIM + 1).to_le_bytes());
+        let err = Msg::decode(&b).unwrap_err();
+        assert!(err.to_string().contains("dims"), "{err}");
+    }
+
+    #[test]
+    fn shape_overflow_is_typed_not_panic() {
+        let mut b = vec![TAG_REDUCED];
+        b.extend_from_slice(&1u64.to_le_bytes());
+        b.extend_from_slice(&0u32.to_le_bytes()); // no groups
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&2u32.to_le_bytes()); // 2 dims
+        b.extend_from_slice(&u64::MAX.to_le_bytes());
+        b.extend_from_slice(&u64::MAX.to_le_bytes());
+        assert!(Msg::decode(&b).is_err());
+    }
+}

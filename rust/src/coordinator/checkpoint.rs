@@ -27,6 +27,10 @@
 //! also rolls back this generation's files), and stale generations are
 //! garbage-collected after the next successful save. Cross-file
 //! config/step/generation checks at load refuse any frankenstein mix.
+//! Renames are made *durable* (not just atomic) by fsyncing the parent
+//! directory: once for the staged shard files before the head references
+//! them, and once after the head rename — the directory-entry fsync is
+//! the true publication point.
 
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
@@ -51,6 +55,51 @@ pub struct Checkpoint {
     pub step: usize,
     pub optimizer: String,
     pub params: Vec<Tensor>,
+}
+
+/// Test hook: fail the Nth directory fsync on this thread (crash-injection
+/// for the publication-point tests below). Thread-local, so concurrently
+/// running tests can't consume each other's armed trigger — a save runs
+/// entirely on its caller's thread.
+#[cfg(test)]
+thread_local! {
+    static FAIL_DIR_FSYNC_AT: std::cell::Cell<u32> =
+        const { std::cell::Cell::new(0) };
+}
+
+/// Fsync the directory holding `path`, making its entry for a just-renamed
+/// file durable. A rename is atomic but **not durable**: the file's bytes
+/// are fsynced before the rename, yet the directory entry itself lives in
+/// the directory's own blocks, and until those hit the disk a power cut
+/// can roll the rename back (resurfacing the old file, or nothing).
+/// Publication is complete only when this returns. No-op off unix
+/// (opening a directory for fsync is a unix-ism; Windows rename
+/// durability has different semantics).
+fn fsync_dir(path: &Path) -> Result<()> {
+    #[cfg(test)]
+    {
+        let fail = FAIL_DIR_FSYNC_AT.with(|c| {
+            let n = c.get();
+            if n > 0 {
+                c.set(n - 1);
+            }
+            n == 1
+        });
+        if fail {
+            bail!("injected directory fsync failure for {path:?}");
+        }
+    }
+    #[cfg(unix)]
+    {
+        let dir = match path.parent() {
+            Some(d) if !d.as_os_str().is_empty() => d,
+            _ => Path::new("."),
+        };
+        std::fs::File::open(dir)
+            .and_then(|f| f.sync_all())
+            .with_context(|| format!("fsyncing directory {dir:?}"))?;
+    }
+    Ok(())
 }
 
 /// Sibling temp path for an atomic write of `path`.
@@ -146,7 +195,10 @@ fn write_adpx(path: &Path, header: &str, params: &[Tensor]) -> Result<()> {
         return Err(e)
             .with_context(|| format!("renaming {tmp:?} to {path:?}"));
     }
-    Ok(())
+    // the rename is only durable once the directory entry is on disk; a
+    // failure here means the new checkpoint is visible but possibly not
+    // crash-durable — surfaced as an error, nothing to roll back
+    fsync_dir(path)
 }
 
 /// Read one ADPX container: returns (header, params). Header-declared
@@ -490,6 +542,14 @@ impl Checkpoint {
             created.pop();
             created.push(fin);
         }
+        // the shard files' directory entries must be durable *before*
+        // the head points at them — otherwise a crash right after head
+        // publication could leave a head referencing files the disk
+        // lost. The head is not yet written, so failure rolls this
+        // generation back and the previous checkpoint stays intact.
+        if let Err(e) = fsync_dir(path) {
+            return Err(fail(&created, e));
+        }
         // the head publishes the new generation — atomically, last
         let head_header = self.header(
             Json::Arr(vec![]),
@@ -509,6 +569,12 @@ impl Checkpoint {
                 .context(format!("renaming {head_tmp:?} to {path:?}"));
             return Err(fail(&created, e));
         }
+        // the head rename happened; only the directory fsync makes the
+        // publication durable. On failure the new head is visible but
+        // possibly not on disk — surface the error and *keep* the old
+        // generation's files (no GC), so whichever head a crash leaves
+        // behind stays loadable.
+        fsync_dir(path)?;
         // durable now: drop whatever the replaced head referenced
         Self::gc_stale_shards(path, &format!(".g{gen}"));
         Ok(())
@@ -1080,6 +1146,105 @@ mod tests {
         assert!(meta.save_sharded_owned(&p, &[]).is_err());
         // nothing was published
         assert!(!p.exists());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn failed_dir_fsync_before_head_publication_preserves_old_checkpoint() {
+        // the publication point is the *directory entry*: if the fsync
+        // that makes the new generation's shard files durable fails, the
+        // head must never be written — the save errors out, this
+        // generation's files are rolled back, and the previous
+        // checkpoint (head + shards) stays fully loadable
+        let mut rng = Rng::new(21);
+        let dir = std::env::temp_dir().join(format!(
+            "adapprox_ckpt_fsyncfail_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("model.ckpt");
+        let a = ck(1, &mut rng);
+        a.save_sharded(&p, 2).unwrap();
+        let gen1_files = Checkpoint::shard_files(&p).unwrap();
+
+        FAIL_DIR_FSYNC_AT.with(|c| c.set(1));
+        let b = ck(2, &mut rng);
+        let err = b.save_sharded(&p, 2).unwrap_err();
+        assert!(err.to_string().contains("fsync"), "{err}");
+
+        // old generation intact and loadable; the failed generation's
+        // files were rolled back (only head + gen1 shards remain)
+        let back = Checkpoint::load_auto(&p).unwrap();
+        assert_eq!(back.step, 1);
+        assert_eq!(back.params, a.params);
+        for f in &gen1_files {
+            assert!(f.exists(), "gen1 shard missing: {f:?}");
+        }
+        let n_files = std::fs::read_dir(&dir).unwrap().count();
+        assert_eq!(n_files, 3, "failed generation's files linger");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn failed_dir_fsync_after_single_file_rename_is_surfaced() {
+        // the single-file save renames first, then makes the rename
+        // durable; an fsync failure there cannot be rolled back but must
+        // never pass silently
+        let mut rng = Rng::new(22);
+        let p = tmp("fsync_plain");
+        ck(1, &mut rng).save(&p).unwrap();
+        FAIL_DIR_FSYNC_AT.with(|c| c.set(1));
+        let err = ck(2, &mut rng).save(&p).unwrap_err();
+        assert!(err.to_string().contains("fsync"), "{err}");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn failed_dir_fsync_after_head_publication_keeps_both_generations() {
+        // first fsync (shard files) passes, second (head publication)
+        // fails: the error is surfaced and the old generation's files
+        // are NOT garbage-collected, so whichever head a crash leaves
+        // behind still has its shard files
+        let mut rng = Rng::new(23);
+        let dir = std::env::temp_dir().join(format!(
+            "adapprox_ckpt_fsynchead_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("model.ckpt");
+        let a = ck(1, &mut rng);
+        a.save_sharded(&p, 2).unwrap();
+        let gen1_files = Checkpoint::shard_files(&p).unwrap();
+
+        // a sharded save fsyncs the directory twice: shard files first,
+        // then the head publication. Arm the countdown to pass the first
+        // and fail the second.
+        FAIL_DIR_FSYNC_AT.with(|c| c.set(2));
+        let b = ck(2, &mut rng);
+        let err = b.save_sharded(&p, 2).unwrap_err();
+        assert!(err.to_string().contains("fsync"), "{err}");
+
+        // the head was renamed before the failed fsync, so the new
+        // generation is what loads — but the old generation's shard
+        // files must NOT have been garbage-collected, because the
+        // on-disk head after a crash could still be the old one
+        let back = Checkpoint::load_auto(&p).unwrap();
+        assert_eq!(back.step, 2);
+        assert_eq!(back.params, b.params);
+        for f in &gen1_files {
+            assert!(
+                f.exists(),
+                "old generation collected despite unpublished head: {f:?}"
+            );
+        }
+        // a subsequent clean save collects every stale generation
+        let c = ck(3, &mut rng);
+        c.save_sharded(&p, 2).unwrap();
+        for f in &gen1_files {
+            assert!(!f.exists(), "stale generation left: {f:?}");
+        }
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -361,13 +361,14 @@ pub fn release_gathered_params(full: &mut Vec<Tensor>) {
     full.shrink_to_fit();
 }
 
-/// Average a set of scalar losses.
-pub fn mean_loss(losses: &[f32]) -> f32 {
+/// Average a set of scalar losses. The empty list is refused: it used to
+/// average to a silent `0.0`, which an eval or accumulation loop that ran
+/// zero batches would happily log as a perfect loss.
+pub fn mean_loss(losses: &[f32]) -> Result<f32> {
     if losses.is_empty() {
-        0.0
-    } else {
-        losses.iter().sum::<f32>() / losses.len() as f32
+        bail!("no losses to average: zero batches were evaluated");
     }
+    Ok(losses.iter().sum::<f32>() / losses.len() as f32)
 }
 
 #[cfg(test)]
@@ -796,9 +797,9 @@ mod tests {
 
     #[test]
     fn loss_mean() {
-        assert_eq!(mean_loss(&[1.0, 2.0, 3.0]), 2.0);
-        // pinned edge case: the empty loss list means "no replicas ran" —
-        // 0.0, never NaN
-        assert_eq!(mean_loss(&[]), 0.0);
+        assert_eq!(mean_loss(&[1.0, 2.0, 3.0]).unwrap(), 2.0);
+        // pinned edge case: the empty loss list means "no batches ran" —
+        // a typed error, never a silent 0.0 (or NaN)
+        assert!(mean_loss(&[]).is_err());
     }
 }

@@ -3,11 +3,13 @@
 //! replicas and metrics.
 
 use std::ops::Range;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
 use anyhow::{anyhow, Result};
 
+use crate::comms::{Cluster, CommsOptions, ReduceMode, TransportKind};
+use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::metrics::{perplexity, CsvWriter, LossTracker};
 use crate::coordinator::replicas::{
     all_gather_params_into, allreduce_mean_into, mean_loss,
@@ -15,8 +17,8 @@ use crate::coordinator::replicas::{
 };
 use crate::coordinator::schedule::LrSchedule;
 use crate::data::{Batch, BatchIterator, BigramCorpus, Split, Task};
-use crate::info;
 use crate::model;
+use crate::{info, warn_};
 use crate::optim::{
     Hyper, NativeOptimizer, Optimizer, ShardedNativeOptimizer, XlaOptimizer,
 };
@@ -73,6 +75,23 @@ pub struct TrainOptions {
     /// levels and unsharded for any (replicas, shards, threads). Requires
     /// `native`.
     pub zero_level: usize,
+    /// `--transport {inproc,tcp}`: route the cross-replica collectives
+    /// through the fault-tolerant comms layer (`comms::Cluster`) instead
+    /// of calling the reduce kernels in-process. The orchestrator runs
+    /// the *same* kernels under the same plan and thread count, so
+    /// training is bitwise identical to the in-memory path. `None` (the
+    /// default) keeps the direct in-memory reduce.
+    pub transport: Option<TransportKind>,
+    /// Checkpoint path for periodic saves and transport-mode crash
+    /// recovery (`Trainer::run` rolls back here when a collective fails
+    /// unrecoverably).
+    pub checkpoint: Option<PathBuf>,
+    /// Save a checkpoint every N steps during `run` (0 = never; the CLI
+    /// still saves once at run end).
+    pub checkpoint_every: usize,
+    /// Transport-mode recovery budget: how many times one `run` may roll
+    /// back to the last published checkpoint generation and resume.
+    pub max_recoveries: usize,
 }
 
 impl Default for TrainOptions {
@@ -93,6 +112,10 @@ impl Default for TrainOptions {
             threads: 1,
             shards: 1,
             zero_level: 1,
+            transport: None,
+            checkpoint: None,
+            checkpoint_every: 0,
+            max_recoveries: 2,
         }
     }
 }
@@ -110,6 +133,10 @@ pub struct HistoryRow {
     /// largest single-shard footprint (== `state_mb` unsharded) — what one
     /// replica holds under `--shards`
     pub max_shard_mb: f64,
+    /// true when the non-finite guard skipped this step's optimizer
+    /// update (loss/gradients were NaN or Inf; weights and moments
+    /// untouched)
+    pub skipped: bool,
 }
 
 /// Reusable gradient-reduce buffers: one per-replica micro-batch mean list
@@ -123,6 +150,12 @@ struct ReduceBufs {
     out: Vec<Tensor>,
     owned: Vec<Vec<Tensor>>,
 }
+
+/// Builds the comms cluster `Trainer` trains over in transport mode.
+/// The chaos drills swap this for a factory that wraps each rank's pipe
+/// in a deterministic fault injector ([`Cluster::connect_with_faults`]).
+pub type ClusterFactory =
+    Box<dyn FnMut(usize, ReduceMode, &CommsOptions) -> Result<Cluster>>;
 
 /// The coordinator.
 pub struct Trainer {
@@ -149,6 +182,20 @@ pub struct Trainer {
     /// `owned_params[s]` holds exactly the tensors in `grad_plan[s]`
     /// (plan order is manifest order). Empty below level 3.
     owned_params: Vec<Vec<Tensor>>,
+    /// Hyperparameters, kept so crash recovery can rebuild the optimizer
+    /// exactly as a process restart from the same checkpoint would.
+    hyper: Hyper,
+    /// Transport mode: the live comms cluster. `None` outside transport
+    /// mode, and between teardown and the next collective's lazy rebuild.
+    cluster: Option<Cluster>,
+    cluster_factory: ClusterFactory,
+    comms_opts: CommsOptions,
+    /// Monotonic nonce numbering the gather collectives. Gathers get
+    /// their own number space (not the training step: one step may gather
+    /// more than once — train window, then eval window — and a cached
+    /// reply keyed on the step would re-serve pre-update parameters).
+    gather_seq: u64,
+    recoveries_used: usize,
 }
 
 impl Trainer {
@@ -175,57 +222,7 @@ impl Trainer {
         }
         let mut rng = Rng::new(opts.seed);
         let params = model::init_params(&cfg, &mut rng);
-        let opt: Box<dyn Optimizer> = if opts.native {
-            let ladders = {
-                let rt = rt.clone();
-                move |m: usize, n: usize| rt.manifest.ladder(m, n).ok().cloned()
-            };
-            if opts.shards > 1 || opts.zero_level >= 2 {
-                Box::new(
-                    ShardedNativeOptimizer::new(
-                        cfg.params.clone(),
-                        hyper,
-                        &ladders,
-                        opts.seed ^ 0x09,
-                        opts.shards,
-                    )?
-                    .with_threads(opts.threads)
-                    .with_zero_level(opts.zero_level),
-                )
-            } else {
-                Box::new(
-                    NativeOptimizer::new(
-                        cfg.params.clone(),
-                        hyper,
-                        &ladders,
-                        opts.seed ^ 0x09,
-                    )?
-                    .with_threads(opts.threads),
-                )
-            }
-        } else {
-            if opts.shards > 1 {
-                return Err(anyhow!(
-                    "--shards requires the native backend (--native): the \
-                     HLO path keeps optimizer state inside per-tensor \
-                     programs and cannot partition it"
-                ));
-            }
-            if opts.zero_level >= 2 {
-                return Err(anyhow!(
-                    "--zero {} requires the native backend (--native): \
-                     gradient/parameter sharding consumes per-shard \
-                     slices inside the native sharded optimizer",
-                    opts.zero_level
-                ));
-            }
-            Box::new(XlaOptimizer::new(
-                rt.clone(),
-                cfg.params.clone(),
-                hyper,
-                opts.seed ^ 0x09,
-            )?)
-        };
+        let opt = Self::build_optimizer(&rt, &cfg, hyper.clone(), &opts)?;
         let grad_plan = if opts.zero_level >= 2 {
             opt.grad_shard_plan().ok_or_else(|| {
                 anyhow!(
@@ -254,6 +251,13 @@ impl Trainer {
         // optimizer comparison trains on the *same* task.
         let corpus = BigramCorpus::new(cfg.vocab, 4, CORPUS_SEED);
         let reduce_pool = Pool::new(opts.threads);
+        // the orchestrator must bucket its reduce over the same pool
+        // width as the in-memory path for bitwise-identical results
+        let comms_opts = CommsOptions {
+            transport: opts.transport.unwrap_or(TransportKind::Inproc),
+            threads: opts.threads,
+            ..CommsOptions::default()
+        };
         Ok(Trainer {
             rt,
             cfg,
@@ -267,7 +271,78 @@ impl Trainer {
             reduce_bufs: ReduceBufs::default(),
             grad_plan,
             owned_params,
+            hyper,
+            cluster: None,
+            cluster_factory: Box::new(|replicas, mode, o| {
+                Cluster::connect(replicas, mode, o)
+            }),
+            comms_opts,
+            gather_seq: 0,
+            recoveries_used: 0,
         })
+    }
+
+    /// The optimizer-backend construction shared by [`Trainer::new`] and
+    /// crash recovery (which rebuilds the optimizer *fresh*, matching
+    /// what a process restart from the checkpoint would hold — moments
+    /// are deliberately not serialized, see `checkpoint.rs`).
+    fn build_optimizer(
+        rt: &Rc<Runtime>,
+        cfg: &ConfigSpec,
+        hyper: Hyper,
+        opts: &TrainOptions,
+    ) -> Result<Box<dyn Optimizer>> {
+        if opts.native {
+            let ladders = {
+                let rt = rt.clone();
+                move |m: usize, n: usize| rt.manifest.ladder(m, n).ok().cloned()
+            };
+            if opts.shards > 1 || opts.zero_level >= 2 {
+                Ok(Box::new(
+                    ShardedNativeOptimizer::new(
+                        cfg.params.clone(),
+                        hyper,
+                        &ladders,
+                        opts.seed ^ 0x09,
+                        opts.shards,
+                    )?
+                    .with_threads(opts.threads)
+                    .with_zero_level(opts.zero_level),
+                ))
+            } else {
+                Ok(Box::new(
+                    NativeOptimizer::new(
+                        cfg.params.clone(),
+                        hyper,
+                        &ladders,
+                        opts.seed ^ 0x09,
+                    )?
+                    .with_threads(opts.threads),
+                ))
+            }
+        } else {
+            if opts.shards > 1 {
+                return Err(anyhow!(
+                    "--shards requires the native backend (--native): the \
+                     HLO path keeps optimizer state inside per-tensor \
+                     programs and cannot partition it"
+                ));
+            }
+            if opts.zero_level >= 2 {
+                return Err(anyhow!(
+                    "--zero {} requires the native backend (--native): \
+                     gradient/parameter sharding consumes per-shard \
+                     slices inside the native sharded optimizer",
+                    opts.zero_level
+                ));
+            }
+            Ok(Box::new(XlaOptimizer::new(
+                rt.clone(),
+                cfg.params.clone(),
+                hyper,
+                opts.seed ^ 0x09,
+            )?))
+        }
     }
 
     /// Replace the optimizer (used by ablation harnesses). Under
@@ -305,6 +380,137 @@ impl Trainer {
         self
     }
 
+    /// Replace the comms cluster factory (chaos drills inject per-rank
+    /// fault schedules here). Only consulted in transport mode.
+    pub fn with_cluster_factory(mut self, f: ClusterFactory) -> Trainer {
+        self.cluster_factory = f;
+        self
+    }
+
+    /// Override the comms tuning knobs (timeouts, retry budget, seed).
+    /// The reduce-pool width is forced back to the trainer's own thread
+    /// count — the orchestrator must bucket exactly like the in-memory
+    /// path for the bitwise guarantee to hold — and the transport kind
+    /// always follows `TrainOptions::transport`.
+    pub fn with_comms_options(mut self, mut o: CommsOptions) -> Trainer {
+        o.threads = self.opts.threads;
+        o.transport = self.opts.transport.unwrap_or(o.transport);
+        self.comms_opts = o;
+        self
+    }
+
+    /// The reduce mode the comms orchestrator mirrors: the same split the
+    /// in-memory path applies in `train_one_step`.
+    fn comms_mode(&self) -> ReduceMode {
+        if self.opts.zero_level >= 2 {
+            ReduceMode::Scatter(self.grad_plan.clone())
+        } else {
+            ReduceMode::AllReduce
+        }
+    }
+
+    /// Lazily (re)build the comms cluster. Separate from use sites so a
+    /// teardown (`drop_cluster`) composes into rebuild-and-replay.
+    fn ensure_cluster(&mut self) -> Result<()> {
+        if self.cluster.is_none() {
+            let mode = self.comms_mode();
+            self.cluster = Some((self.cluster_factory)(
+                self.opts.replicas.max(1),
+                mode,
+                &self.comms_opts,
+            )?);
+        }
+        Ok(())
+    }
+
+    /// Tear the comms cluster down (if any); the next collective lazily
+    /// builds a fresh one. A failed clean shutdown is logged, not fatal —
+    /// the cluster is being discarded either way.
+    fn drop_cluster(&mut self) {
+        if let Some(c) = self.cluster.take() {
+            if let Err(e) = c.shutdown() {
+                warn_!("comms cluster shutdown: {e}");
+            }
+        }
+    }
+
+    /// One cross-replica reduce over the transport, with one transparent
+    /// rebuild-and-replay: nothing before the collective mutates trainer
+    /// state, so tearing the transport down and re-sending the same
+    /// per-replica gradients is bitwise identical to a clean first try.
+    /// A second failure is surfaced for checkpoint rollback.
+    fn cluster_reduce(
+        &mut self,
+        step: u64,
+        per_replica: &[Vec<Tensor>],
+    ) -> Result<Vec<Vec<Tensor>>> {
+        self.ensure_cluster()?;
+        let first = self
+            .cluster
+            .as_mut()
+            .expect("ensured")
+            .reduce(step, per_replica);
+        let e = match first {
+            Ok(owned) => return Ok(owned),
+            Err(e) => e,
+        };
+        warn_!(
+            "comms reduce failed at step {step}: {e}; rebuilding the \
+             transport and replaying"
+        );
+        self.drop_cluster();
+        self.ensure_cluster()?;
+        self.cluster
+            .as_mut()
+            .expect("ensured")
+            .reduce(step, per_replica)
+            .map_err(|e2| {
+                anyhow!(
+                    "comms reduce failed twice at step {step}: first {e}; \
+                     after transport rebuild: {e2}"
+                )
+            })
+    }
+
+    /// ZeRO-3 transport mode: the parameter all-gather as a collective,
+    /// numbered by the gather nonce, with the same rebuild-and-replay as
+    /// [`Trainer::cluster_reduce`] (owned shards are untouched by a
+    /// gather, so a replay is bitwise identical).
+    fn cluster_gather(&mut self) -> Result<Vec<Tensor>> {
+        self.gather_seq += 1;
+        let seq = self.gather_seq;
+        self.ensure_cluster()?;
+        let first = self
+            .cluster
+            .as_mut()
+            .expect("ensured")
+            .all_gather(seq, &self.owned_params);
+        let e = match first {
+            Ok(full) => return Ok(full),
+            Err(e) => e,
+        };
+        warn_!(
+            "comms all-gather failed (seq {seq}): {e}; rebuilding the \
+             transport and replaying"
+        );
+        self.drop_cluster();
+        self.ensure_cluster()?;
+        // fresh nonce for the replay: the old one may sit half-served in
+        // caches on either side
+        self.gather_seq += 1;
+        let seq = self.gather_seq;
+        self.cluster
+            .as_mut()
+            .expect("ensured")
+            .all_gather(seq, &self.owned_params)
+            .map_err(|e2| {
+                anyhow!(
+                    "comms all-gather failed twice: first {e}; after \
+                     transport rebuild: {e2}"
+                )
+            })
+    }
+
     /// ZeRO-3: open the gather window — materialize the full parameter
     /// list from the owned shards into the reused gather buffer
     /// (`self.params`). No-op below level 3. `train_one_step` opens and
@@ -313,12 +519,18 @@ impl Trainer {
     /// with this and [`Trainer::release_params`].
     pub fn gather_params(&mut self) -> Result<()> {
         if self.opts.zero_level == 3 {
-            all_gather_params_into(
-                &self.owned_params,
-                &self.grad_plan,
-                &mut self.params,
-                &self.reduce_pool,
-            )?;
+            if self.opts.transport.is_some() {
+                // same kernel, run by the orchestrator; f32 payloads move
+                // bitwise over the wire
+                self.params = self.cluster_gather()?;
+            } else {
+                all_gather_params_into(
+                    &self.owned_params,
+                    &self.grad_plan,
+                    &mut self.params,
+                    &self.reduce_pool,
+                )?;
+            }
         }
         Ok(())
     }
@@ -452,11 +664,20 @@ impl Trainer {
         out[0].scalar_f32().map_err(Into::into)
     }
 
-    /// Mean validation loss over `n` held-out batches. Under ZeRO-3 the
-    /// full parameters must be materialized first: bracket the call with
-    /// [`Trainer::gather_params`] / [`Trainer::release_params`] (the
-    /// training loop's eval cadence does this itself).
+    /// Mean validation loss over `n` held-out batches. `n == 0` is
+    /// refused: it used to be silently promoted to one batch, and before
+    /// that a zero-batch eval would have reported a perfect 0.0 loss.
+    /// Under ZeRO-3 the full parameters must be materialized first:
+    /// bracket the call with [`Trainer::gather_params`] /
+    /// [`Trainer::release_params`] (the training loop's eval cadence does
+    /// this itself).
     pub fn evaluate(&self, n: usize) -> Result<f64> {
+        if n == 0 {
+            return Err(anyhow!(
+                "evaluate over zero batches is meaningless — pass n >= 1 \
+                 (or disable eval with --eval-every 0)"
+            ));
+        }
         if self.opts.zero_level == 3
             && self.params.len() != self.cfg.params.len()
         {
@@ -475,11 +696,11 @@ impl Trainer {
             Split::Valid,
             (0, 1),
         );
-        let mut tot = 0.0f64;
-        for _ in 0..n.max(1) {
-            tot += self.eval_batch(&it.next_batch())? as f64;
+        let mut losses = Vec::with_capacity(n);
+        for _ in 0..n {
+            losses.push(self.eval_batch(&it.next_batch())?);
         }
-        Ok(tot / n.max(1) as f64)
+        Ok(mean_loss(&losses)? as f64)
     }
 
     /// One full optimizer step: replicas × grad-accum micro-batches,
@@ -515,9 +736,66 @@ impl Trainer {
                 micro_grads.push(grads);
             }
             allreduce_mean_into(&micro_grads, rep_out, &self.reduce_pool)?;
-            losses.push(mean_loss(&micro_losses));
+            losses.push(mean_loss(&micro_losses)?);
         }
-        let info = if self.opts.zero_level >= 2 {
+        // Non-finite guard: a NaN/Inf loss or gradient would poison the
+        // second moments and, through them, every future update. Detect
+        // it *before* the cross-replica reduce and the optimizer step,
+        // skip both, and report the skip — weights and moments untouched.
+        let non_finite = losses.iter().any(|l| !l.is_finite())
+            || bufs.rep.iter().flatten().any(|t| {
+                t.as_f32()
+                    .map(|v| v.iter().any(|x| !x.is_finite()))
+                    .unwrap_or(false)
+            });
+        if non_finite {
+            warn_!(
+                "step {}: non-finite loss or gradient; skipping the \
+                 optimizer step (weights and moments untouched)",
+                self.step
+            );
+            self.release_params();
+            let loss = mean_loss(&losses)?;
+            self.reduce_bufs = bufs;
+            return Ok((
+                loss,
+                crate::optim::StepInfo {
+                    step: self.step,
+                    skipped: true,
+                    ..Default::default()
+                },
+            ));
+        }
+        let info = if self.opts.transport.is_some() {
+            // transport mode: the cross-replica reduce runs as a comms
+            // collective. The orchestrator applies the same kernels under
+            // the same plan and pool width, so each branch below receives
+            // bitwise-identical inputs to its in-memory counterpart.
+            let owned = self.cluster_reduce(self.step as u64, &bufs.rep)?;
+            if self.opts.zero_level >= 2 {
+                bufs.out.clear();
+                bufs.owned = owned;
+                if self.opts.zero_level == 3 {
+                    self.release_params();
+                    self.opt.step_sharded_params(
+                        &mut self.owned_params,
+                        &bufs.owned,
+                        lr,
+                    )?
+                } else {
+                    self.opt.step_sharded_grads(
+                        &mut self.params,
+                        &bufs.owned,
+                        lr,
+                    )?
+                }
+            } else {
+                // AllReduce mode replies with one group: the full mean
+                let mut groups = owned.into_iter();
+                bufs.out = groups.next().unwrap_or_default();
+                self.opt.step(&mut self.params, &bufs.out, lr)?
+            }
+        } else if self.opts.zero_level >= 2 {
             // ZeRO-2/3: the cross-replica reduce is a reduce-scatter under
             // the optimizer's ownership plan — each shard's averaged slice
             // goes straight into the sharded step, and the full
@@ -550,10 +828,18 @@ impl Trainer {
             self.opt.step(&mut self.params, &bufs.out, lr)?
         };
         self.reduce_bufs = bufs;
-        Ok((mean_loss(&losses), info))
+        Ok((mean_loss(&losses)?, info))
     }
 
     /// Full training run; returns the history (Fig. 3/4/6 series).
+    ///
+    /// Transport mode degrades gracefully: when a collective fails past
+    /// its in-step retry budget, the run rolls trainer state back to the
+    /// last checkpoint published at `TrainOptions::checkpoint` (exactly
+    /// the state a killed-and-restarted process would reload — parameters
+    /// from the file, fresh optimizer moments), rewinds the step counter
+    /// and the data streams, and resumes on a fresh transport — at most
+    /// `TrainOptions::max_recoveries` times per run.
     pub fn run(&mut self) -> Result<Vec<HistoryRow>> {
         let corpus = std::mem::replace(
             &mut self.corpus,
@@ -561,33 +847,126 @@ impl Trainer {
         );
         let result = self.run_inner(&corpus);
         self.corpus = corpus;
+        // join the orchestrator; a fresh cluster comes up lazily if the
+        // trainer is driven further (finetune, ablations)
+        self.drop_cluster();
         result
+    }
+
+    /// Can this failure be absorbed by a checkpoint rollback? Requires
+    /// transport mode, a checkpoint path with a published checkpoint, and
+    /// recovery budget left.
+    fn can_recover(&self) -> bool {
+        self.opts.transport.is_some()
+            && self.recoveries_used < self.opts.max_recoveries
+            && self
+                .opts
+                .checkpoint
+                .as_deref()
+                .map_or(false, |p| p.exists())
+    }
+
+    /// Restore a published checkpoint into this trainer: parameters from
+    /// the file, step counter resumed, optimizer rebuilt *fresh* (moments
+    /// are deliberately not checkpointed). The next [`Trainer::run`]
+    /// continues from the checkpoint's step — exactly the state a
+    /// killed-and-restarted process would hold. Crash recovery routes
+    /// through here, so a recovered run and a manual restart are bitwise
+    /// identical.
+    pub fn resume_from_checkpoint(
+        &mut self,
+        path: impl AsRef<Path>,
+    ) -> Result<()> {
+        let path = path.as_ref();
+        let ck = Checkpoint::load_auto(path)?;
+        if ck.config != self.cfg.name {
+            return Err(anyhow!(
+                "checkpoint {path:?} is for config {:?}, not {:?}",
+                ck.config,
+                self.cfg.name
+            ));
+        }
+        let step = ck.step;
+        self.set_params(ck.params)?;
+        self.step = step;
+        self.opt = Self::build_optimizer(
+            &self.rt,
+            &self.cfg,
+            self.hyper.clone(),
+            &self.opts,
+        )?;
+        self.reduce_bufs = ReduceBufs::default();
+        Ok(())
+    }
+
+    /// How many checkpoint rollbacks this trainer has performed.
+    pub fn recoveries(&self) -> usize {
+        self.recoveries_used
+    }
+
+    /// Roll trainer state back to the published checkpoint after an
+    /// unrecoverable collective failure: the comms cluster is torn down
+    /// for a lazy rebuild and [`Trainer::resume_from_checkpoint`] does
+    /// the rest.
+    fn recover_from_checkpoint(&mut self) -> Result<()> {
+        self.recoveries_used += 1;
+        let path = self
+            .opts
+            .checkpoint
+            .clone()
+            .ok_or_else(|| anyhow!("no checkpoint path to recover from"))?;
+        self.drop_cluster();
+        let from = self.step;
+        self.resume_from_checkpoint(&path)?;
+        warn_!(
+            "rolled back from step {from} to checkpoint {path:?} at step \
+             {} (recovery {}/{})",
+            self.step,
+            self.recoveries_used,
+            self.opts.max_recoveries
+        );
+        Ok(())
     }
 
     fn run_inner(&mut self, corpus: &BigramCorpus) -> Result<Vec<HistoryRow>> {
         let sampler = |len: usize, rng: &mut Rng| corpus.sample(len, rng);
         let n_rep = self.opts.replicas.max(1);
-        let mut its: Vec<BatchIterator> = (0..n_rep)
-            .map(|r| {
-                BatchIterator::new(
-                    &sampler,
-                    self.cfg.batch,
-                    self.cfg.seq_len,
-                    self.opts.seed,
-                    Split::Train,
-                    (r, n_rep),
-                )
-            })
-            .collect();
+        // build the per-replica train streams, fast-forwarded past `skip`
+        // consumed optimizer steps (recovery rewinds into the stream);
+        // captures no part of self, so recovery can call it mid-loop
+        let (batch, seq_len, seed) =
+            (self.cfg.batch, self.cfg.seq_len, self.opts.seed);
+        let accum = self.opts.grad_accum.max(1);
+        let sampler_ref: &dyn Fn(usize, &mut Rng) -> Vec<i32> = &sampler;
+        let make_its = move |skip: usize| -> Vec<BatchIterator> {
+            (0..n_rep)
+                .map(|r| {
+                    let mut it = BatchIterator::new(
+                        sampler_ref,
+                        batch,
+                        seq_len,
+                        seed,
+                        Split::Train,
+                        (r, n_rep),
+                    );
+                    for _ in 0..skip * accum {
+                        it.next_batch();
+                    }
+                    it
+                })
+                .collect()
+        };
+        let mut its = make_its(self.step);
         let mut csv = match &self.opts.log_csv {
             Some(p) => Some(CsvWriter::create(
                 p,
                 &["step", "lr", "train_loss", "val_loss", "val_ppl",
-                  "mean_xi", "mean_rank", "state_mb", "max_shard_mb"],
+                  "mean_xi", "mean_rank", "state_mb", "max_shard_mb",
+                  "skipped"],
             )?),
             None => None,
         };
-        let mut history = Vec::new();
+        let mut history: Vec<HistoryRow> = Vec::new();
         let mut tracker = LossTracker::default();
         info!(
             "training {} ({} params) with {} for {} steps, floor H={:.3}",
@@ -597,10 +976,32 @@ impl Trainer {
             self.opts.steps,
             corpus.conditional_entropy(),
         );
-        for t in 1..=self.opts.steps {
-            let (loss, sinfo) = self.train_one_step(&mut its)?;
+        let first_step = self.step + 1;
+        while self.step < self.opts.steps {
+            let (loss, sinfo) = match self.train_one_step(&mut its) {
+                Ok(r) => r,
+                Err(e) if self.can_recover() => {
+                    warn_!("step {} failed: {e}", self.step);
+                    self.recover_from_checkpoint()?;
+                    // history rows are 1:1 with steps, so the rows past
+                    // the checkpoint are exactly the rolled-back ones;
+                    // replay the survivors through a fresh loss tracker
+                    history.truncate(
+                        self.step.saturating_sub(first_step - 1),
+                    );
+                    tracker = LossTracker::default();
+                    for row in &history {
+                        tracker.push(row.train_loss);
+                    }
+                    its = make_its(self.step);
+                    continue;
+                }
+                Err(e) => return Err(e),
+            };
+            let t = self.step;
             tracker.push(loss as f64);
             let do_eval = self.opts.eval_every > 0
+                && self.opts.eval_batches > 0
                 && (t % self.opts.eval_every == 0 || t == self.opts.steps);
             let val = if do_eval {
                 // ZeRO-3: eval runs on the updated weights, so it opens
@@ -622,6 +1023,7 @@ impl Trainer {
                 state_mb: sinfo.state_bytes as f64 / (1024.0 * 1024.0),
                 max_shard_mb: sinfo.max_shard_bytes as f64
                     / (1024.0 * 1024.0),
+                skipped: sinfo.skipped,
             };
             if let Some(csv) = csv.as_mut() {
                 csv.row(&[
@@ -634,6 +1036,7 @@ impl Trainer {
                     row.mean_rank,
                     row.state_mb,
                     row.max_shard_mb,
+                    if row.skipped { 1.0 } else { 0.0 },
                 ])?;
             }
             if t % self.opts.log_every == 0 || t == 1 || t == self.opts.steps {
@@ -657,11 +1060,46 @@ impl Trainer {
                 );
             }
             history.push(row);
+            if self.opts.checkpoint_every > 0
+                && t % self.opts.checkpoint_every == 0
+            {
+                if let Some(p) = self.opts.checkpoint.clone() {
+                    self.save_checkpoint(&p)?;
+                }
+            }
         }
         if let Some(csv) = csv.as_mut() {
             csv.flush()?;
         }
         Ok(history)
+    }
+
+    /// Serialize the current parameters + step to `path` in the layout
+    /// the run dictates: per-shard owned lists under ZeRO-3 (never
+    /// materializing the full list), `shards`-way sharded files under
+    /// `--shards`, one file otherwise. Safe between steps at any point;
+    /// the write is atomic (temp + fsync + rename, with the directory
+    /// entry fsynced — see `checkpoint.rs`), so a crash mid-save leaves
+    /// the previous checkpoint loadable.
+    pub fn save_checkpoint(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let ck = Checkpoint {
+            config: self.cfg.name.clone(),
+            step: self.step,
+            optimizer: self.opt.name(),
+            params: if self.opts.zero_level == 3 {
+                Vec::new()
+            } else {
+                self.params.clone()
+            },
+        };
+        if self.opts.zero_level == 3 {
+            ck.save_sharded_owned(path, &self.owned_params)
+        } else if self.opts.shards > 1 {
+            ck.save_sharded(path, self.opts.shards)
+        } else {
+            ck.save(path)
+        }
     }
 
     /// Fine-tune on a downstream task (Table 3 protocol): LM training with

@@ -22,6 +22,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod comms;
 pub mod coordinator;
 pub mod data;
 pub mod linalg;

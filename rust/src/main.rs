@@ -15,6 +15,7 @@ use std::rc::Rc;
 use anyhow::{anyhow, bail, Result};
 
 use adapprox::cli::Args;
+use adapprox::comms::TransportKind;
 use adapprox::coordinator::{Checkpoint, TrainOptions, Trainer};
 use adapprox::data::task_suite;
 use adapprox::optim::{Hyper, OptKind};
@@ -75,6 +76,12 @@ fn print_help() {
          no full averaged-grad replica;\n\
          \u{20}           3 also streams parameters: owned shards durable, \
          full tensors gathered per step window)]\n\
+         \u{20}          [--transport inproc|tcp (cross-replica collectives \
+         over the fault-tolerant comms layer;\n\
+         \u{20}           bitwise identical to in-memory)] \
+         [--checkpoint-every N (periodic saves + crash recovery)]\n\
+         \u{20}          [--max-recoveries N (checkpoint rollbacks per run, \
+         default 2)]\n\
          eval      --checkpoint PATH [--eval-batches N]\n\
          finetune  --checkpoint PATH --task 0..4 --steps N --lr F\n\
          memory    print Table 2 (exact analytic over GPT-2 inventories)\n\
@@ -125,6 +132,13 @@ fn train_options(args: &Args) -> Result<TrainOptions> {
         threads: args.usize_or("threads", 1)?,
         shards: args.usize_or("shards", 1)?,
         zero_level: args.usize_or("zero", 1)?,
+        transport: args
+            .flag("transport")
+            .map(TransportKind::parse)
+            .transpose()?,
+        checkpoint: args.flag("checkpoint").map(Into::into),
+        checkpoint_every: args.usize_or("checkpoint-every", 0)?,
+        max_recoveries: args.usize_or("max-recoveries", 2)?,
     })
 }
 
@@ -148,34 +162,21 @@ fn cmd_train(args: &Args) -> Result<()> {
         rt.stats().exec_seconds,
     );
     if let Some(p) = args.flag("checkpoint") {
-        let ck = Checkpoint {
-            config: config.to_string(),
-            step: tr.step_count(),
-            optimizer: tr.opt.name(),
-            params: if tr.opts.zero_level == 3 {
-                Vec::new()
-            } else {
-                tr.params.clone()
-            },
-        };
+        // layout (plain / sharded / ZeRO-3 owned-shard) follows the run;
+        // periodic saves during the run use the same path via
+        // --checkpoint-every
+        tr.save_checkpoint(p)?;
         if tr.opts.zero_level == 3 {
-            // each shard file's payload comes straight from that shard's
-            // owned parameter list — no full materialization even at
-            // checkpoint time; restores into any shard count
-            ck.save_sharded_owned(p, tr.owned_params())?;
             println!(
                 "sharded checkpoint ({} shards) saved to {p}",
                 tr.owned_params().len()
             );
         } else if tr.opts.shards > 1 {
-            // per-shard files + head; restores into any shard count
-            ck.save_sharded(p, tr.opts.shards)?;
             println!(
                 "sharded checkpoint ({} shards) saved to {p}",
                 tr.opts.shards
             );
         } else {
-            ck.save(p)?;
             println!("checkpoint saved to {p}");
         }
     }

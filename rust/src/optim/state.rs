@@ -203,6 +203,9 @@ pub struct StepInfo {
     /// largest single-shard footprint: what one data-parallel replica
     /// actually holds under ZeRO-1 sharding (== `state_bytes` unsharded)
     pub max_shard_bytes: u64,
+    /// true when the trainer's non-finite guard skipped the optimizer
+    /// update for this step (weights and moments untouched)
+    pub skipped: bool,
 }
 
 impl OptimizerState {

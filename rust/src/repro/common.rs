@@ -63,6 +63,7 @@ pub fn train_options(args: &Args, default_steps: usize) -> Result<TrainOptions> 
         threads: args.usize_or("threads", 1)?,
         shards: args.usize_or("shards", 1)?,
         zero_level: args.usize_or("zero", 1)?,
+        ..TrainOptions::default()
     })
 }
 

@@ -1,0 +1,93 @@
+//! Exponential backoff with deterministic jitter.
+//!
+//! The retry layers of the comms stack sleep between attempts; the delay
+//! doubles per attempt (bounded by a cap) and carries full jitter drawn
+//! from a seeded [`Rng`], so two replicas that fail the same op at the
+//! same instant do not retry in lockstep — and a test that fixes the seed
+//! replays the exact same delay sequence.
+
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// Exponential-backoff delay generator: `delay(a)` is uniform in
+/// `[base·2^a / 2, base·2^a)`, capped at `cap`.
+#[derive(Debug)]
+pub struct Backoff {
+    base: Duration,
+    cap: Duration,
+    rng: Rng,
+}
+
+impl Backoff {
+    pub fn new(base: Duration, cap: Duration, seed: u64) -> Backoff {
+        Backoff {
+            base,
+            cap,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Delay before retry number `attempt` (0-based). Monotone in
+    /// expectation, never above `cap`, jittered over the top half of the
+    /// exponential window so consecutive delays never collapse to zero.
+    pub fn delay(&mut self, attempt: u32) -> Duration {
+        let exp = 1u64 << attempt.min(20);
+        let full = self
+            .base
+            .saturating_mul(exp.min(u32::MAX as u64) as u32)
+            .min(self.cap);
+        let nanos = full.as_nanos() as u64;
+        if nanos == 0 {
+            return Duration::ZERO;
+        }
+        // uniform in [nanos/2, nanos)
+        let jittered = nanos / 2 + self.rng.below((nanos / 2).max(1));
+        Duration::from_nanos(jittered)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Backoff::new(Duration::from_millis(2),
+                                 Duration::from_millis(100), 7);
+        let mut b = Backoff::new(Duration::from_millis(2),
+                                 Duration::from_millis(100), 7);
+        for i in 0..10 {
+            assert_eq!(a.delay(i), b.delay(i));
+        }
+    }
+
+    #[test]
+    fn capped_and_windowed() {
+        let base = Duration::from_millis(1);
+        let cap = Duration::from_millis(16);
+        let mut bo = Backoff::new(base, cap, 3);
+        for attempt in 0..32 {
+            let d = bo.delay(attempt);
+            assert!(d < cap, "attempt {attempt}: {d:?} >= cap");
+            // full-window floor: at least half the (capped) exponential
+            let full = base
+                .saturating_mul(1u32 << attempt.min(20).min(31))
+                .min(cap);
+            assert!(d >= full / 2, "attempt {attempt}: {d:?} < {full:?}/2");
+        }
+    }
+
+    #[test]
+    fn zero_base_is_zero_delay() {
+        let mut bo = Backoff::new(Duration::ZERO, Duration::ZERO, 1);
+        assert_eq!(bo.delay(5), Duration::ZERO);
+    }
+
+    #[test]
+    fn huge_attempt_does_not_overflow() {
+        let mut bo = Backoff::new(Duration::from_secs(1),
+                                  Duration::from_secs(2), 9);
+        assert!(bo.delay(u32::MAX) <= Duration::from_secs(2));
+    }
+}

@@ -1,11 +1,13 @@
 //! Infrastructure substrates the vendored crate set doesn't provide:
 //! JSON, RNG, logging, and small helpers shared across the framework.
 
+pub mod backoff;
 pub mod json;
 pub mod log;
 pub mod pool;
 pub mod rng;
 
+pub use backoff::Backoff;
 pub use pool::Pool;
 
 /// Pretty byte counts for memory reports (Table 2 prints MB like the paper).

@@ -459,6 +459,361 @@ fn zero3_checkpoint_under_training_fails_cleanly_and_recovers() {
     std::fs::remove_dir_all(dir).ok();
 }
 
+// ---------------------------------------------------------------------
+// Chaos battery (artifact-free): deterministic fault schedules against a
+// synthetic state-free trainer driving the real comms stack. Gradients
+// are a pure function of (step, rank, params) and the update is plain
+// SGD, so replaying a step after a cluster rebuild is bitwise identical
+// — exactly the property `Trainer`'s tier-1 recovery relies on. Every
+// run must either retry to the bitwise-correct weights or surface a
+// typed `CommsError` that a rebuild-and-replay recovers from; the short
+// per-op deadlines in `chaos_opts` make a hang impossible by
+// construction. Seeds come from `CHAOS_SEEDS` (comma-separated,
+// env-overridable; fixed default set) so CI runs a pinned matrix.
+
+use std::time::Duration;
+
+use adapprox::comms::{
+    Cluster, CommsError, CommsOptions, FaultKind, FaultPlan, ReduceMode,
+    TransportKind,
+};
+use adapprox::optim::shard_ranges;
+
+const CHAOS_LR: f32 = 0.01;
+const CHAOS_REBUILD_BUDGET: usize = 8;
+
+fn chaos_opts() -> CommsOptions {
+    CommsOptions {
+        transport: TransportKind::Inproc,
+        op_timeout: Duration::from_millis(250),
+        attempts: 4,
+        backoff_base: Duration::from_micros(200),
+        backoff_cap: Duration::from_millis(2),
+        poll: Duration::from_millis(2),
+        idle_budget: Duration::from_secs(10),
+        threads: 1,
+        seed: 0xC4A05,
+    }
+}
+
+fn chaos_params() -> Vec<Tensor> {
+    let mut rng = Rng::new(0xC4A0);
+    vec![
+        Tensor::f32(vec![6, 4], rng.normal_vec_f32(24)),
+        Tensor::f32(vec![10], rng.normal_vec_f32(10)),
+        Tensor::f32(vec![3, 5], rng.normal_vec_f32(15)),
+    ]
+}
+
+/// Per-replica synthetic gradients: deterministic in (step, rank, params)
+/// so two runs that agree on params agree on gradients bitwise.
+fn chaos_grads(
+    params: &[Tensor],
+    step: u64,
+    replicas: usize,
+) -> Vec<Vec<Tensor>> {
+    (0..replicas)
+        .map(|r| {
+            params
+                .iter()
+                .enumerate()
+                .map(|(i, p)| {
+                    let data: Vec<f32> = p
+                        .as_f32()
+                        .unwrap()
+                        .iter()
+                        .enumerate()
+                        .map(|(j, &x)| {
+                            let phase = (step as f32).mul_add(
+                                0.7,
+                                (r as f32).mul_add(
+                                    0.3,
+                                    (i as f32) + j as f32 * 0.01,
+                                ),
+                            );
+                            x.mul_add(0.1, phase.sin() * 0.05)
+                        })
+                        .collect();
+                    Tensor::f32(p.shape.clone(), data)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn chaos_plan(params: &[Tensor], shards: usize) -> Vec<std::ops::Range<usize>> {
+    let numels: Vec<usize> = params.iter().map(Tensor::numel).collect();
+    shard_ranges(&numels, shards)
+}
+
+fn chaos_mode(zero: usize, plan: &[std::ops::Range<usize>]) -> ReduceMode {
+    if zero >= 2 {
+        ReduceMode::Scatter(plan.to_vec())
+    } else {
+        ReduceMode::AllReduce
+    }
+}
+
+fn sgd(p: &Tensor, g: &Tensor) -> Tensor {
+    let data: Vec<f32> = p
+        .as_f32()
+        .unwrap()
+        .iter()
+        .zip(g.as_f32().unwrap())
+        .map(|(&x, &gr)| x - CHAOS_LR * gr)
+        .collect();
+    Tensor::f32(p.shape.clone(), data)
+}
+
+/// One synthetic training step over the cluster. Params mutate only
+/// after every collective of the step succeeded, so a failed step can be
+/// replayed verbatim on a rebuilt cluster.
+fn chaos_step(
+    cluster: &mut Cluster,
+    params: &mut Vec<Tensor>,
+    plan: &[std::ops::Range<usize>],
+    zero: usize,
+    t: u64,
+    replicas: usize,
+) -> Result<(), CommsError> {
+    let per = chaos_grads(params, t, replicas);
+    let reduced = cluster.reduce(t, &per)?;
+    if zero >= 2 {
+        let updated: Vec<Vec<Tensor>> = plan
+            .iter()
+            .zip(&reduced)
+            .map(|(range, owned_grads)| {
+                range
+                    .clone()
+                    .zip(owned_grads)
+                    .map(|(i, g)| sgd(&params[i], g))
+                    .collect()
+            })
+            .collect();
+        if zero >= 3 {
+            // ZeRO-3 shape: the full list only exists gathered over the
+            // wire from the owned shards
+            *params = cluster.all_gather(t, &updated)?;
+        } else {
+            for (range, owned) in plan.iter().zip(updated) {
+                for (i, p) in range.clone().zip(owned) {
+                    params[i] = p;
+                }
+            }
+        }
+    } else {
+        for (p, g) in params.iter_mut().zip(&reduced[0]) {
+            *p = sgd(p, g);
+        }
+    }
+    Ok(())
+}
+
+/// The fault-free reference trajectory (still over the real transport).
+fn chaos_reference(zero: usize, steps: u64, replicas: usize) -> Vec<Tensor> {
+    let mut params = chaos_params();
+    let plan = chaos_plan(&params, replicas);
+    let mode = chaos_mode(zero, &plan);
+    let mut cluster =
+        Cluster::connect(replicas, mode, &chaos_opts()).unwrap();
+    for t in 1..=steps {
+        chaos_step(&mut cluster, &mut params, &plan, zero, t, replicas)
+            .unwrap();
+    }
+    cluster.shutdown().unwrap();
+    params
+}
+
+/// Run the chaotic trajectory: the first cluster incarnation carries the
+/// fault schedule; on an unrecoverable step error, rebuild clean and
+/// replay the failed step (the trainer's tier-1 recovery). Returns the
+/// final weights and how many rebuilds were needed.
+fn chaos_run(
+    zero: usize,
+    steps: u64,
+    replicas: usize,
+    fault_for_rank: &dyn Fn(usize) -> Option<FaultPlan>,
+) -> (Vec<Tensor>, usize) {
+    let mut params = chaos_params();
+    let plan = chaos_plan(&params, replicas);
+    let mode = chaos_mode(zero, &plan);
+    let opts = chaos_opts();
+    let mut cluster =
+        Cluster::connect_with_faults(replicas, mode.clone(), &opts, |r| {
+            fault_for_rank(r)
+        })
+        .unwrap();
+    let mut rebuilds = 0usize;
+    let mut t = 1u64;
+    while t <= steps {
+        match chaos_step(&mut cluster, &mut params, &plan, zero, t, replicas)
+        {
+            Ok(()) => t += 1,
+            Err(e) => {
+                // the error is typed by construction (CommsError); the
+                // bounded deadline already ruled out a hang. Recover.
+                rebuilds += 1;
+                assert!(
+                    rebuilds <= CHAOS_REBUILD_BUDGET,
+                    "chaos run cannot stabilize after \
+                     {CHAOS_REBUILD_BUDGET} rebuilds: {e}"
+                );
+                let dead = std::mem::replace(
+                    &mut cluster,
+                    Cluster::connect(replicas, mode.clone(), &opts).unwrap(),
+                );
+                drop(dead);
+            }
+        }
+    }
+    cluster.shutdown().ok();
+    (params, rebuilds)
+}
+
+/// `CHAOS_SEEDS` (comma-separated u64s) overrides the pinned seed set.
+fn chaos_seeds() -> Vec<u64> {
+    match std::env::var("CHAOS_SEEDS") {
+        Ok(s) => {
+            let seeds: Vec<u64> = s
+                .split(',')
+                .filter_map(|x| x.trim().parse().ok())
+                .collect();
+            assert!(!seeds.is_empty(), "CHAOS_SEEDS set but unparsable: {s}");
+            seeds
+        }
+        Err(_) => vec![11, 23, 47, 101, 9001],
+    }
+}
+
+#[test]
+fn chaos_battery_explicit_fault_matrix() {
+    // every fault kind, on both sides of the wire, at the first two
+    // protocol ops, under every ZeRO mode: the collective either retries
+    // to the bitwise-correct answer or fails typed and recovers via
+    // rebuild-and-replay — never a hang, never wrong weights
+    let kinds = [
+        FaultKind::Drop,
+        FaultKind::Delay,
+        FaultKind::Duplicate,
+        FaultKind::Corrupt,
+        FaultKind::Disconnect,
+    ];
+    for zero in [1usize, 2, 3] {
+        let reference = chaos_reference(zero, 3, 2);
+        for kind in kinds {
+            for op in [0u64, 1] {
+                for send_side in [true, false] {
+                    let plan = if send_side {
+                        FaultPlan::none().on_send(op, kind)
+                    } else {
+                        FaultPlan::none().on_recv(op, kind)
+                    }
+                    .with_delay(Duration::from_millis(5));
+                    let (got, rebuilds) =
+                        chaos_run(zero, 3, 2, &|r| {
+                            (r == 1).then(|| plan.clone())
+                        });
+                    assert_eq!(
+                        got, reference,
+                        "zero={zero} kind={kind:?} op={op} \
+                         send={send_side} rebuilds={rebuilds}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn chaos_battery_seeded_schedules() {
+    // randomized-but-reproducible schedules: several faults spread over
+    // the run's op horizon, on each rank in turn, for every ZeRO mode
+    for zero in [1usize, 2, 3] {
+        let reference = chaos_reference(zero, 4, 2);
+        for seed in chaos_seeds() {
+            for rank in 0..2usize {
+                let plan = FaultPlan::seeded(seed, 8, 3)
+                    .with_delay(Duration::from_millis(2));
+                let (got, rebuilds) =
+                    chaos_run(zero, 4, 2, &|r| {
+                        (r == rank).then(|| plan.clone())
+                    });
+                assert_eq!(
+                    got, reference,
+                    "zero={zero} seed={seed} rank={rank} \
+                     rebuilds={rebuilds}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn chaos_crash_recovery_drill_rolls_back_to_checkpoint() {
+    // the artifact-free tier-2 drill: a worker dies for good mid-run, the
+    // driver rolls back to the last published checkpoint generation,
+    // rebuilds the cluster, resumes — and lands on exactly the weights of
+    // the uninterrupted run
+    let (zero, replicas, steps) = (2usize, 2usize, 5u64);
+    let reference = chaos_reference(zero, steps, replicas);
+
+    let dir = std::env::temp_dir().join(format!(
+        "adapprox_chaos_drill_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let head = dir.join("chaos.ckpt");
+
+    let mut params = chaos_params();
+    let plan = chaos_plan(&params, replicas);
+    let mode = chaos_mode(zero, &plan);
+    let opts = chaos_opts();
+    // rank 1 crashes permanently on its 4th send (= step 4's gradients)
+    let fplan = FaultPlan::none().on_send(3, FaultKind::Disconnect);
+    let mut cluster = Cluster::connect_with_faults(
+        replicas,
+        mode.clone(),
+        &opts,
+        |r| (r == 1).then(|| fplan.clone()),
+    )
+    .unwrap();
+
+    let mut crashed = false;
+    let mut t = 1u64;
+    while t <= steps {
+        match chaos_step(&mut cluster, &mut params, &plan, zero, t, replicas)
+        {
+            Ok(()) => {
+                Checkpoint {
+                    config: "chaos".into(),
+                    step: t as usize,
+                    optimizer: "sgd(chaos)".into(),
+                    params: params.clone(),
+                }
+                .save_sharded(&head, 2)
+                .unwrap();
+                t += 1;
+            }
+            Err(_) => {
+                crashed = true;
+                let back = Checkpoint::load_auto(&head).unwrap();
+                params = back.params;
+                t = back.step as u64 + 1;
+                let dead = std::mem::replace(
+                    &mut cluster,
+                    Cluster::connect(replicas, mode.clone(), &opts).unwrap(),
+                );
+                drop(dead);
+            }
+        }
+    }
+    assert!(crashed, "the injected crash never fired");
+    assert_eq!(params, reference);
+    cluster.shutdown().unwrap();
+    std::fs::remove_dir_all(dir).ok();
+}
+
 #[test]
 fn second_moments_exposed_for_all_backends() {
     let Some(rt) = runtime() else { return };

@@ -156,6 +156,337 @@ fn sharded_native_training_bitwise_matches_unsharded() {
     }
 }
 
+// ---------------------------------------------------------------------
+// Transport-mode e2e: the comms layer must be an invisible substrate —
+// bitwise-identical training — and its failure handling must recover to
+// exactly the state an uninterrupted (or cleanly restarted) run reaches.
+
+use std::time::Duration;
+
+use adapprox::comms::{
+    Cluster, CommsOptions, FaultKind, FaultPlan, TransportKind,
+};
+use adapprox::coordinator::CORPUS_SEED;
+use adapprox::data::{BatchIterator, BigramCorpus, Split};
+
+/// Shrunk timeouts so faulted collectives fail in milliseconds, not the
+/// production 30 s. `with_comms_options` re-forces threads + transport.
+fn quick_comms() -> CommsOptions {
+    CommsOptions {
+        transport: TransportKind::Inproc,
+        op_timeout: Duration::from_millis(500),
+        attempts: 4,
+        backoff_base: Duration::from_micros(200),
+        backoff_cap: Duration::from_millis(2),
+        poll: Duration::from_millis(2),
+        idle_budget: Duration::from_secs(10),
+        threads: 1,
+        seed: 23,
+    }
+}
+
+type RunResult = (Vec<f64>, Vec<f64>, Vec<Vec<f32>>);
+
+fn transport_run(
+    rt: &Rc<Runtime>,
+    steps: usize,
+    seed: u64,
+    replicas: usize,
+    shards: usize,
+    threads: usize,
+    zero: usize,
+    transport: Option<TransportKind>,
+) -> RunResult {
+    let hyper = Hyper::paper_defaults(OptKind::Adapprox, &rt.manifest.hyper);
+    let mut opts = quick_opts(steps, seed);
+    opts.native = true;
+    opts.replicas = replicas;
+    opts.shards = shards;
+    opts.threads = threads;
+    opts.zero_level = zero;
+    opts.transport = transport;
+    let mut tr = Trainer::new(rt.clone(), "micro", hyper, opts).unwrap();
+    let hist = tr.run().unwrap();
+    let losses: Vec<f64> = hist.iter().map(|r| r.train_loss).collect();
+    let xis: Vec<f64> = hist.iter().map(|r| r.mean_xi).collect();
+    let weights: Vec<Vec<f32>> = tr
+        .full_params()
+        .iter()
+        .map(|p| p.as_f32().unwrap().to_vec())
+        .collect();
+    (losses, xis, weights)
+}
+
+#[test]
+fn transport_inproc_training_bitwise_matches_in_memory() {
+    // the transport acceptance bar: routing the collectives through the
+    // comms layer reproduces the in-memory losses, xi series and final
+    // weights exactly, for (replicas, shards, threads) ∈ {1,2,4} and
+    // every ZeRO level — the orchestrator runs the same kernels under
+    // the same plan and pool width, and f32 payloads move bitwise
+    let Some(rt) = runtime() else { return };
+    let combos: &[(usize, usize, usize)] =
+        &[(1, 1, 1), (2, 2, 2), (4, 4, 4), (2, 4, 2), (4, 2, 4)];
+    for &(replicas, shards, threads) in combos {
+        for zero in [1usize, 2, 3] {
+            let base = transport_run(
+                &rt, 5, 17, replicas, shards, threads, zero, None,
+            );
+            let got = transport_run(
+                &rt,
+                5,
+                17,
+                replicas,
+                shards,
+                threads,
+                zero,
+                Some(TransportKind::Inproc),
+            );
+            assert_eq!(
+                base, got,
+                "transport diverged at replicas={replicas} \
+                 shards={shards} threads={threads} zero={zero}"
+            );
+        }
+    }
+}
+
+#[test]
+fn transport_tcp_training_bitwise_matches_in_memory() {
+    // the same bar over real loopback sockets (framing, segmentation and
+    // reassembly in the path) — one representative ZeRO-2 configuration
+    let Some(rt) = runtime() else { return };
+    let base = transport_run(&rt, 4, 18, 2, 2, 2, 2, None);
+    let got =
+        transport_run(&rt, 4, 18, 2, 2, 2, 2, Some(TransportKind::Tcp));
+    assert_eq!(base, got, "tcp transport diverged");
+}
+
+#[test]
+fn transport_worker_crash_mid_run_recovers_bitwise() {
+    // tier-1 recovery drill: rank 1's connection dies permanently at step
+    // 3; the trainer tears the transport down, rebuilds it through the
+    // factory and replays the step — nothing was mutated before the
+    // collective, so the run lands bitwise on the uninterrupted result
+    let Some(rt) = runtime() else { return };
+    let reference = transport_run(&rt, 6, 19, 2, 2, 2, 2, None);
+
+    let hyper = Hyper::paper_defaults(OptKind::Adapprox, &rt.manifest.hyper);
+    let mut opts = quick_opts(6, 19);
+    opts.native = true;
+    opts.replicas = 2;
+    opts.shards = 2;
+    opts.threads = 2;
+    opts.zero_level = 2;
+    opts.transport = Some(TransportKind::Inproc);
+    let mut incarnation = 0usize;
+    let mut tr = Trainer::new(rt, "micro", hyper, opts)
+        .unwrap()
+        .with_comms_options(quick_comms())
+        .with_cluster_factory(Box::new(move |replicas, mode, o| {
+            incarnation += 1;
+            if incarnation == 1 {
+                Ok(Cluster::connect_with_faults(replicas, mode, o, |r| {
+                    (r == 1).then(|| {
+                        FaultPlan::none()
+                            .on_send(2, FaultKind::Disconnect)
+                    })
+                })?)
+            } else {
+                Ok(Cluster::connect(replicas, mode, o)?)
+            }
+        }));
+    let hist = tr.run().unwrap();
+    let got: RunResult = (
+        hist.iter().map(|r| r.train_loss).collect(),
+        hist.iter().map(|r| r.mean_xi).collect(),
+        tr.full_params()
+            .iter()
+            .map(|p| p.as_f32().unwrap().to_vec())
+            .collect(),
+    );
+    assert_eq!(got, reference, "crash recovery diverged");
+    assert_eq!(tr.recoveries(), 0, "tier-1 replay escalated to rollback");
+}
+
+#[test]
+fn transport_checkpoint_rollback_drill_matches_restart() {
+    // tier-2 recovery drill: the transport dies at step 4 and its tier-1
+    // rebuild dies too, so the trainer rolls back to the step-3
+    // checkpoint generation (parameters from the file, *fresh* optimizer
+    // moments) and resumes. The reference is the semantics rollback
+    // promises: a process killed after step 3 and restarted from the same
+    // checkpoint — both runs must land on bitwise-identical weights and
+    // identical post-rollback losses.
+    let Some(rt) = runtime() else { return };
+    let dir = std::env::temp_dir().join(format!(
+        "adapprox_rollback_drill_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let hyper = Hyper::paper_defaults(OptKind::Adapprox, &rt.manifest.hyper);
+    let base_opts = |steps: usize| {
+        let mut opts = quick_opts(steps, 20);
+        opts.native = true;
+        opts.replicas = 2;
+        opts.shards = 2;
+        opts.threads = 2;
+        opts.zero_level = 2;
+        opts
+    };
+
+    // the chaotic run: checkpoint every step; incarnations 1 and 2 both
+    // lose rank 1 (step 4, then instantly on the tier-1 replay)
+    let ck_run = dir.join("run.ckpt");
+    let mut opts = base_opts(6);
+    opts.transport = Some(TransportKind::Inproc);
+    opts.checkpoint = Some(ck_run.clone());
+    opts.checkpoint_every = 1;
+    opts.max_recoveries = 2;
+    let mut incarnation = 0usize;
+    let mut tr = Trainer::new(rt.clone(), "micro", hyper.clone(), opts)
+        .unwrap()
+        .with_comms_options(quick_comms())
+        .with_cluster_factory(Box::new(move |replicas, mode, o| {
+            incarnation += 1;
+            let at = match incarnation {
+                1 => Some(3u64), // 4th send = step 4's gradients
+                2 => Some(0),    // the tier-1 replay dies immediately
+                _ => None,
+            };
+            match at {
+                Some(at) => Ok(Cluster::connect_with_faults(
+                    replicas,
+                    mode,
+                    o,
+                    move |r| {
+                        (r == 1).then(|| {
+                            FaultPlan::none()
+                                .on_send(at, FaultKind::Disconnect)
+                        })
+                    },
+                )?),
+                None => Ok(Cluster::connect(replicas, mode, o)?),
+            }
+        }));
+    let hist = tr.run().unwrap();
+    assert_eq!(hist.len(), 6);
+    assert_eq!(tr.recoveries(), 1, "expected exactly one rollback");
+
+    // the reference: a process "killed after step 3" — same 6-step
+    // schedule, driven 3 steps by hand, checkpointed, then restarted
+    // from the file into a fresh trainer (fresh moments) for steps 4..6
+    let ck_ref = dir.join("ref.ckpt");
+    let mut a =
+        Trainer::new(rt.clone(), "micro", hyper.clone(), base_opts(6))
+            .unwrap();
+    let (batch, seq_len) = (a.cfg.batch, a.cfg.seq_len);
+    let corpus = BigramCorpus::new(a.cfg.vocab, 4, CORPUS_SEED);
+    let sampler = |len: usize, rng: &mut Rng| corpus.sample(len, rng);
+    let mut its: Vec<BatchIterator> = (0..2)
+        .map(|r| {
+            BatchIterator::new(
+                &sampler,
+                batch,
+                seq_len,
+                20,
+                Split::Train,
+                (r, 2),
+            )
+        })
+        .collect();
+    for _ in 0..3 {
+        a.train_one_step(&mut its).unwrap();
+    }
+    a.save_checkpoint(&ck_ref).unwrap();
+    let mut b =
+        Trainer::new(rt, "micro", hyper, base_opts(6)).unwrap();
+    b.resume_from_checkpoint(&ck_ref).unwrap();
+    let hist_b = b.run().unwrap();
+
+    assert_eq!(hist_b.len(), 3, "restart should cover steps 4..6");
+    let tail: Vec<f64> = hist[3..].iter().map(|r| r.train_loss).collect();
+    let tail_b: Vec<f64> = hist_b.iter().map(|r| r.train_loss).collect();
+    assert_eq!(tail, tail_b, "post-rollback losses diverged from restart");
+    let w: Vec<Vec<f32>> = tr
+        .full_params()
+        .iter()
+        .map(|p| p.as_f32().unwrap().to_vec())
+        .collect();
+    let w_b: Vec<Vec<f32>> = b
+        .full_params()
+        .iter()
+        .map(|p| p.as_f32().unwrap().to_vec())
+        .collect();
+    assert_eq!(w, w_b, "final weights diverged from restart");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn nan_loss_skips_the_step_and_preserves_state() {
+    // the non-finite guard: a poisoned forward pass must not reach the
+    // optimizer — weights and second moments stay untouched and the step
+    // is reported as skipped (surfaced as HistoryRow::skipped / the CSV
+    // `skipped` column by the run loop)
+    let Some(rt) = runtime() else { return };
+    let hyper = Hyper::paper_defaults(OptKind::Adapprox, &rt.manifest.hyper);
+    let mut tr =
+        Trainer::new(rt, "micro", hyper, quick_opts(4, 21)).unwrap();
+    let cfg = tr.cfg.clone();
+    let corpus = BigramCorpus::new(cfg.vocab, 4, CORPUS_SEED);
+    let sampler =
+        |len: usize, rng: &mut Rng| corpus.sample(len, rng);
+    let mut its = vec![BatchIterator::new(
+        &sampler,
+        cfg.batch,
+        cfg.seq_len,
+        21,
+        Split::Train,
+        (0, 1),
+    )];
+    for _ in 0..2 {
+        let (loss, info) = tr.train_one_step(&mut its).unwrap();
+        assert!(loss.is_finite());
+        assert!(!info.skipped);
+    }
+    let healthy = tr.params[0].as_f32().unwrap()[0];
+    let moments_before = tr.opt.second_moments();
+    // poison one weight: the forward pass now yields NaN loss/gradients
+    tr.params[0].as_f32_mut().unwrap()[0] = f32::NAN;
+    let bits = |tr: &Trainer| -> Vec<Vec<u32>> {
+        tr.params
+            .iter()
+            .map(|p| p.as_f32().unwrap().iter().map(|x| x.to_bits()).collect())
+            .collect()
+    };
+    let before = bits(&tr);
+    let (loss, info) = tr.train_one_step(&mut its).unwrap();
+    assert!(!loss.is_finite(), "poisoned step reported a finite loss");
+    assert!(info.skipped, "non-finite step was not skipped");
+    assert_eq!(bits(&tr), before, "skipped step changed the weights");
+    assert_eq!(
+        tr.opt.second_moments(),
+        moments_before,
+        "skipped step poisoned the optimizer moments"
+    );
+    // heal the weight: training resumes normally
+    tr.params[0].as_f32_mut().unwrap()[0] = healthy;
+    let (loss, info) = tr.train_one_step(&mut its).unwrap();
+    assert!(loss.is_finite());
+    assert!(!info.skipped);
+}
+
+#[test]
+fn evaluate_zero_batches_is_a_typed_error() {
+    let Some(rt) = runtime() else { return };
+    let hyper = Hyper::paper_defaults(OptKind::Adapprox, &rt.manifest.hyper);
+    let tr = Trainer::new(rt, "micro", hyper, quick_opts(1, 22)).unwrap();
+    let err = tr.evaluate(0).unwrap_err();
+    assert!(err.to_string().contains("zero batches"), "{err}");
+}
+
 #[test]
 fn zero2_shards_the_averaged_gradient_buffers() {
     // the ZeRO-2 acceptance assertion at trainer level: under --zero 2 no
