@@ -203,7 +203,9 @@ impl Cluster {
                 first = Some(owned);
             }
         }
-        Ok(first.expect("at least one rank"))
+        first.ok_or(CommsError::Protocol {
+            what: "reduce over zero ranks".to_string(),
+        })
     }
 
     /// Gather collective: full parameters from the owned shard lists.

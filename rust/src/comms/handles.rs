@@ -293,11 +293,10 @@ impl Orchestrator {
                 if shut[rank] || self.conns[rank].is_none() {
                     continue;
                 }
-                let bytes = match self.conns[rank]
-                    .as_mut()
-                    .expect("checked live")
-                    .recv(self.poll)
-                {
+                let Some(conn) = self.conns[rank].as_mut() else {
+                    continue;
+                };
+                let bytes = match conn.recv(self.poll) {
                     Ok(b) => b,
                     Err(CommsError::Timeout { .. }) => continue,
                     Err(e @ CommsError::Corrupt { .. }) => {
@@ -372,24 +371,42 @@ impl Orchestrator {
                             }
                         }
                         if grads.iter().all(|g| g.is_some()) {
-                            let step = cur.take().expect("collecting");
-                            let per_replica: Vec<Vec<Tensor>> = grads
-                                .iter_mut()
-                                .map(|g| g.take().expect("all present"))
-                                .collect();
+                            let Some(cstep) = cur.take() else {
+                                return self.abort(
+                                    step,
+                                    "internal: complete gradient set \
+                                     with no current step",
+                                    &shut,
+                                );
+                            };
+                            let mut per_replica: Vec<Vec<Tensor>> =
+                                Vec::with_capacity(n);
+                            for g in grads.iter_mut() {
+                                match g.take() {
+                                    Some(t) => per_replica.push(t),
+                                    None => {
+                                        return self.abort(
+                                            cstep,
+                                            "internal: gradient slot \
+                                             emptied mid-collection",
+                                            &shut,
+                                        )
+                                    }
+                                }
+                            }
                             let reply = match self.reduce(&per_replica) {
                                 Ok(owned) => {
-                                    Msg::reduced_bytes(step, &owned)
+                                    Msg::reduced_bytes(cstep, &owned)
                                 }
                                 Err(e) => {
                                     return self.abort(
-                                        step,
+                                        cstep,
                                         &format!("reduce failed: {e}"),
                                         &shut,
                                     )
                                 }
                             };
-                            reduce_cache = Some((step, reply.clone()));
+                            reduce_cache = Some((cstep, reply.clone()));
                             for r2 in 0..n {
                                 if !shut[r2] {
                                     self.send_to(r2, &reply);

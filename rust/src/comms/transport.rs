@@ -127,11 +127,19 @@ pub fn retry<R>(
             Err(e) => return Err(e),
         }
     }
-    Err(CommsError::Exhausted {
-        op: op_name.to_string(),
-        attempts,
-        last: Box::new(last.expect("attempts >= 1")),
-    })
+    match last {
+        Some(last) => Err(CommsError::Exhausted {
+            op: op_name.to_string(),
+            attempts,
+            last: Box::new(last),
+        }),
+        // unreachable: attempts >= 1, so the loop either returned or
+        // recorded a transient error — but a typed error beats a crash
+        // on the path whose whole job is surviving failures
+        None => Err(CommsError::Protocol {
+            what: format!("retry loop for {op_name} ran zero attempts"),
+        }),
+    }
 }
 
 /// Bounded-retry wrapper: transient send/recv failures are retried with

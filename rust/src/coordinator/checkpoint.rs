@@ -108,6 +108,8 @@ fn tmp_path(path: &Path) -> PathBuf {
         .file_name()
         .map(|s| s.to_string_lossy().into_owned())
         .unwrap_or_else(|| "checkpoint".into());
+    // relaxed: the counter only has to hand out process-unique temp-file
+    // suffixes; no cross-thread ordering rides on it
     let seq = SAVE_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     path.with_file_name(format!("{fname}.tmp{}-{seq}", std::process::id()))
 }
@@ -150,6 +152,7 @@ fn parse_shapes(header: &Json, key: &str) -> Result<Vec<Vec<usize>>> {
 
 /// Write one complete ADPX container (magic, version, header, payloads) to
 /// `path` and fsync it. No rename — callers stage and rename themselves.
+#[allow(unsafe_code)] // zero-copy f32 -> u8 payload view, see SAFETY below
 fn write_adpx_to(path: &Path, header: &str, params: &[Tensor]) -> Result<()> {
     let mut f = std::fs::File::create(path)
         .with_context(|| format!("creating {path:?}"))?;
@@ -160,6 +163,9 @@ fn write_adpx_to(path: &Path, header: &str, params: &[Tensor]) -> Result<()> {
         f.write_all(header.as_bytes())?;
         for t in params {
             let data = t.as_f32()?;
+            // SAFETY: `data` is a live &[f32]; f32 has no padding or
+            // invalid bit patterns as bytes, the length covers exactly
+            // data.len() * 4 bytes, and the view ends before `data` does
             let bytes: &[u8] = unsafe {
                 std::slice::from_raw_parts(
                     data.as_ptr() as *const u8,
@@ -507,6 +513,8 @@ impl Checkpoint {
         let gen = format!(
             "{}-{}",
             std::process::id(),
+            // relaxed: generation tags only need per-process uniqueness,
+            // never an ordering relation with other memory
             SAVE_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
         );
         // every path this save has created so far; all removed on any

@@ -100,21 +100,21 @@ pub fn allreduce_mean_pooled(
 /// The allocation-free entry point: reduce into `out`, reusing its tensor
 /// allocations whenever the element counts line up (the steady-state case —
 /// gradient shapes never change across steps). Implemented as the
-/// single-shard case of [`reduce_scatter_into`], so the two paths can never
-/// drift apart numerically.
+/// single-shard case of the shared [`reduce_scatter_core`], so the two
+/// paths can never drift apart numerically — `out` is passed as the one
+/// shard list directly, no temporary wrapper vector.
 pub fn allreduce_mean_into(
     per_replica: &[Vec<Tensor>],
     out: &mut Vec<Tensor>,
     pool: &Pool,
 ) -> Result<()> {
-    if per_replica.is_empty() {
-        bail!("no replicas");
-    }
-    let n_params = per_replica[0].len();
-    let mut shards = vec![std::mem::take(out)];
-    let res = reduce_scatter_into(per_replica, &[0..n_params], &mut shards, pool);
-    *out = shards.pop().expect("single-shard reduce output");
-    res
+    let n_params = validate_replica_grads(per_replica)?;
+    reduce_scatter_core(
+        per_replica,
+        &[0..n_params],
+        std::slice::from_mut(out),
+        pool,
+    )
 }
 
 /// Validate a replica gradient set: equal per-replica counts and full shape
@@ -198,6 +198,22 @@ pub fn reduce_scatter_into(
 ) -> Result<()> {
     let n_params = validate_replica_grads(per_replica)?;
     validate_shard_plan(plan, n_params)?;
+    owned.resize_with(plan.len(), Vec::new);
+    reduce_scatter_core(per_replica, plan, owned, pool)
+}
+
+/// The shared reduction core behind [`reduce_scatter_into`] and
+/// [`allreduce_mean_into`]: callers have already validated the replica
+/// set and the plan and sized `owned` to exactly `plan.len()` lists.
+/// Keeping one body guarantees the single-shard all-reduce *is* the
+/// reduce-scatter bitwise, for any (plan, bucket size, thread count).
+fn reduce_scatter_core(
+    per_replica: &[Vec<Tensor>],
+    plan: &[Range<usize>],
+    owned: &mut [Vec<Tensor>],
+    pool: &Pool,
+) -> Result<()> {
+    let n_params = per_replica[0].len();
     // Source views up-front (also validates dtype before any work).
     let mut srcs: Vec<Vec<&[f32]>> = Vec::with_capacity(n_params);
     for i in 0..n_params {
@@ -209,7 +225,6 @@ pub fn reduce_scatter_into(
     }
     // (Re)shape every shard's output list, reusing any same-size f32
     // allocation in place.
-    owned.resize_with(plan.len(), Vec::new);
     for (range, shard_out) in plan.iter().zip(owned.iter_mut()) {
         shard_out.truncate(range.len());
         for (j, i) in range.clone().enumerate() {

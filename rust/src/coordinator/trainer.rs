@@ -445,11 +445,10 @@ impl Trainer {
         per_replica: &[Vec<Tensor>],
     ) -> Result<Vec<Vec<Tensor>>> {
         self.ensure_cluster()?;
-        let first = self
-            .cluster
-            .as_mut()
-            .expect("ensured")
-            .reduce(step, per_replica);
+        let Some(cluster) = self.cluster.as_mut() else {
+            return Err(anyhow!("comms cluster unavailable after ensure_cluster"));
+        };
+        let first = cluster.reduce(step, per_replica);
         let e = match first {
             Ok(owned) => return Ok(owned),
             Err(e) => e,
@@ -460,9 +459,10 @@ impl Trainer {
         );
         self.drop_cluster();
         self.ensure_cluster()?;
-        self.cluster
-            .as_mut()
-            .expect("ensured")
+        let Some(cluster) = self.cluster.as_mut() else {
+            return Err(anyhow!("comms cluster unavailable after ensure_cluster"));
+        };
+        cluster
             .reduce(step, per_replica)
             .map_err(|e2| {
                 anyhow!(
@@ -480,11 +480,10 @@ impl Trainer {
         self.gather_seq += 1;
         let seq = self.gather_seq;
         self.ensure_cluster()?;
-        let first = self
-            .cluster
-            .as_mut()
-            .expect("ensured")
-            .all_gather(seq, &self.owned_params);
+        let Some(cluster) = self.cluster.as_mut() else {
+            return Err(anyhow!("comms cluster unavailable after ensure_cluster"));
+        };
+        let first = cluster.all_gather(seq, &self.owned_params);
         let e = match first {
             Ok(full) => return Ok(full),
             Err(e) => e,
@@ -499,9 +498,10 @@ impl Trainer {
         // caches on either side
         self.gather_seq += 1;
         let seq = self.gather_seq;
-        self.cluster
-            .as_mut()
-            .expect("ensured")
+        let Some(cluster) = self.cluster.as_mut() else {
+            return Err(anyhow!("comms cluster unavailable after ensure_cluster"));
+        };
+        cluster
             .all_gather(seq, &self.owned_params)
             .map_err(|e2| {
                 anyhow!(
@@ -1178,9 +1178,11 @@ impl Trainer {
                     .max_by(|&a, &bb| {
                         logits[base + a as usize]
                             .partial_cmp(&logits[base + bb as usize])
-                            .unwrap()
+                            // NaN logits compare equal: still a
+                            // deterministic pick instead of a crash
+                            .unwrap_or(std::cmp::Ordering::Equal)
                     })
-                    .unwrap();
+                    .ok_or_else(|| anyhow!("task has no label tokens"))?;
                 if best == labels[row] {
                     correct += 1;
                 }

@@ -20,6 +20,11 @@
 //! See DESIGN.md for the system inventory and the per-experiment index, and
 //! EXPERIMENTS.md for paper-vs-measured results.
 
+// unsafe is opt-in per function: only the two zero-copy serialization
+// views (checkpoint.rs, tensor.rs) carry #[allow(unsafe_code)], each with
+// a SAFETY comment — machine-checked by `cargo run -p xtask -- analyze`
+#![deny(unsafe_code)]
+
 pub mod bench;
 pub mod cli;
 pub mod comms;

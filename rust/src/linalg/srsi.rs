@@ -210,7 +210,6 @@ pub fn srsi_factored(
 
 /// [`srsi_factored`] with caller-provided scratch (allocation-free). `g` is
 /// the row-major (q0.rows × u0.rows) gradient.
-#[allow(clippy::too_many_arguments)]
 pub fn srsi_factored_scratch(
     q0: &Mat,
     u0: &Mat,

@@ -10,6 +10,9 @@
 //!
 //! Run `adapprox <cmd> --help`-free: flags are documented in README.md.
 
+// the CLI has no business with raw pointers; see lib.rs for the policy
+#![deny(unsafe_code)]
+
 use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Result};

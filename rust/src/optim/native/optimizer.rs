@@ -276,7 +276,6 @@ impl NativeOptimizer {
     /// sketch buffer (filled from `rng` exactly as `Mat::randn` would);
     /// `pool` is this worker's intra-tensor slice — the dense V-step and
     /// S-RSI products fan out over it (bitwise identical at any width).
-    #[allow(clippy::too_many_arguments)]
     fn adapprox_matrix_step(
         hyper: &Hyper,
         rng: &mut Rng,

@@ -63,7 +63,6 @@ pub fn clip_by_rms(x: &mut [f32], d: f32) {
 }
 
 /// AdamW step (bias-corrected; `t` is 1-based). Updates w/m/v in place.
-#[allow(clippy::too_many_arguments)]
 pub fn adamw_step(
     w: &mut [f32],
     m: &mut [f32],
@@ -91,7 +90,6 @@ pub fn adamw_step(
 /// optional first moment (`beta1 = 0` disables exactly; `m` may be empty
 /// in that case and the clipped update is applied directly — numerically
 /// identical to a zeroed scratch moment).
-#[allow(clippy::too_many_arguments)]
 pub fn vec_factored_step(
     w: &mut [f32],
     m: &mut [f32],
@@ -109,7 +107,6 @@ pub fn vec_factored_step(
 }
 
 /// [`vec_factored_step`] with workspace-backed scratch (allocation-free).
-#[allow(clippy::too_many_arguments)]
 pub fn vec_factored_step_ws(
     w: &mut [f32],
     m: &mut [f32],
@@ -143,7 +140,6 @@ pub fn vec_factored_step_ws(
 }
 
 /// Adafactor 2-D step. `m` may be empty when beta1 = 0 (memory-less mode).
-#[allow(clippy::too_many_arguments)]
 pub fn adafactor_step(
     w: &mut [f32],
     m: &mut [f32],
@@ -164,7 +160,6 @@ pub fn adafactor_step(
 }
 
 /// [`adafactor_step`] with workspace-backed scratch (allocation-free).
-#[allow(clippy::too_many_arguments)]
 pub fn adafactor_step_ws(
     w: &mut [f32],
     m: &mut [f32],
@@ -222,7 +217,6 @@ pub fn adafactor_step_ws(
 }
 
 /// CAME 2-D step (requires beta1 > 0).
-#[allow(clippy::too_many_arguments)]
 pub fn came_step(
     w: &mut [f32],
     m: &mut [f32],
@@ -247,7 +241,6 @@ pub fn came_step(
 }
 
 /// [`came_step`] with workspace-backed scratch (allocation-free).
-#[allow(clippy::too_many_arguments)]
 pub fn came_step_ws(
     w: &mut [f32],
     m: &mut [f32],
@@ -358,7 +351,6 @@ pub fn adapprox_vstep_ws(
 /// [`adapprox_vstep_ws`] with the Q Uᵀ product and the elementwise V
 /// combine fanned out over `pool` (row units; bitwise identical — every
 /// element's arithmetic is independent of its thread).
-#[allow(clippy::too_many_arguments)]
 pub fn adapprox_vstep_pooled_ws(
     q: &Mat,
     u: &Mat,
@@ -386,7 +378,6 @@ pub fn adapprox_vstep_pooled_ws(
 
 /// Adapprox update application (rank-independent tail of Alg. 3).
 /// Returns the new first moment implicitly via `m`; `w` updated in place.
-#[allow(clippy::too_many_arguments)]
 pub fn adapprox_apply(
     w: &mut [f32],
     m: &mut [f32],
@@ -405,7 +396,6 @@ pub fn adapprox_apply(
 
 /// [`adapprox_apply`] with a caller-provided update buffer (usually
 /// `&mut ws.upd`; passed separately so `v` may borrow `ws.vmat`).
-#[allow(clippy::too_many_arguments)]
 pub fn adapprox_apply_ws(
     w: &mut [f32],
     m: &mut [f32],
@@ -446,7 +436,6 @@ pub fn adapprox_apply_ws(
 
 /// Full fused Adapprox step (non-refresh path): V-step, S-RSI at the fixed
 /// bucket with explicit sketch Ω, update application. Returns (q, u, ξ).
-#[allow(clippy::too_many_arguments)]
 pub fn adapprox_step(
     w: &mut [f32],
     m: &mut [f32],
@@ -474,7 +463,6 @@ pub fn adapprox_step(
 /// allocations in steady state (the returned factors are fresh
 /// (m+n)·k-sized buffers that become the new optimizer state); bitwise
 /// identical to the allocating entry point.
-#[allow(clippy::too_many_arguments)]
 pub fn adapprox_step_ws(
     w: &mut [f32],
     m: &mut [f32],
@@ -505,7 +493,6 @@ pub fn adapprox_step_ws(
 /// has fewer runnable tensors than worker threads. Bitwise identical to
 /// the serial `_ws` path for any thread count (the update application
 /// stays serial; it is O(mn) elementwise against the GEMMs' O(mn·k·l)).
-#[allow(clippy::too_many_arguments)]
 pub fn adapprox_step_pooled_ws(
     w: &mut [f32],
     m: &mut [f32],
@@ -543,7 +530,6 @@ pub fn adapprox_step_pooled_ws(
 /// per-step factorization from O(mn(k+p)l) into O((m+n)k(k+p)l). The
 /// returned ξ is the surrogate's truncation error (an estimate of the
 /// dense ξ); refresh steps, which need ξ exactly, keep the dense path.
-#[allow(clippy::too_many_arguments)]
 pub fn adapprox_step_fast_ws(
     w: &mut [f32],
     m: &mut [f32],

@@ -66,7 +66,6 @@ impl XlaOptimizer {
         Tensor::f32(vec![cols, kp], self.rng.normal_vec_f32(cols * kp))
     }
 
-    #[allow(clippy::too_many_arguments)]
     fn adapprox_matrix_step(
         &mut self,
         idx: usize,

@@ -90,9 +90,13 @@ impl Tensor {
     }
 
     /// Convert to an xla Literal (copies).
+    #[allow(unsafe_code)] // zero-copy element -> u8 views, see SAFETY below
     pub fn to_literal(&self) -> Result<Literal> {
         match &self.data {
             TensorData::F32(v) => {
+                // SAFETY: `v` is a live &Vec<f32>; f32 bytes have no
+                // padding or invalid patterns, and the view spans exactly
+                // v.len() * 4 bytes, copied into the Literal before drop
                 let bytes: &[u8] = unsafe {
                     std::slice::from_raw_parts(
                         v.as_ptr() as *const u8,
@@ -107,6 +111,8 @@ impl Tensor {
                 .map_err(|e| anyhow!("literal create: {e:?}"))
             }
             TensorData::I32(v) => {
+                // SAFETY: same as the F32 arm — i32 bytes are padding-free
+                // and the view covers exactly v.len() * 4 bytes
                 let bytes: &[u8] = unsafe {
                     std::slice::from_raw_parts(
                         v.as_ptr() as *const u8,

@@ -17,10 +17,13 @@ pub enum Level {
 }
 
 pub fn set_level(l: Level) {
+    // relaxed: verbosity flag set once at startup; no other memory
+    // depends on observing the store in order
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
 pub fn enabled(l: Level) -> bool {
+    // relaxed: worst case a racing reader logs at the old verbosity
     (l as u8) <= LEVEL.load(Ordering::Relaxed)
 }
 

@@ -1,0 +1,19 @@
+//! r3 fail fixture: crashes on the typed-error surface.
+
+pub fn recv_len(buf: &[u8]) -> u32 {
+    let header: [u8; 4] = buf[0..4].try_into().unwrap();
+    let tail = std::str::from_utf8(&buf[4..]).expect("utf8 tail");
+    if tail.is_empty() {
+        panic!("empty frame");
+    }
+    u32::from_le_bytes(header)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        let v: Result<u32, ()> = Ok(7);
+        assert_eq!(v.unwrap(), 7);
+    }
+}

@@ -1,0 +1,3 @@
+//! r4 fail fixture: crate root without `#![deny(unsafe_code)]`.
+
+pub mod nothing {}

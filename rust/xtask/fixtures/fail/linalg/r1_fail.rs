@@ -1,0 +1,19 @@
+//! r1 fail fixture: clocks, hash collections and ambient randomness in
+//! the bitwise-determinism domain.
+
+use std::collections::HashMap;
+use std::time::{Instant, SystemTime};
+
+pub fn xi_accumulate(vals: &[f32]) -> f32 {
+    let t0 = Instant::now();
+    let mut seen: HashMap<u64, f32> = HashMap::new();
+    for (i, v) in vals.iter().enumerate() {
+        seen.insert(i as u64, *v);
+    }
+    let _wall = SystemTime::now();
+    let mut acc = 0.0;
+    for (_, v) in &seen {
+        acc += v;
+    }
+    acc + t0.elapsed().as_secs_f32()
+}

@@ -1,0 +1,17 @@
+//! r2 fail fixture: hidden allocations inside an `_into` kernel body.
+
+pub fn gemm_into(a: &[f32], b: &[f32], out: &mut Vec<f32>) {
+    let mut tmp: Vec<f32> = Vec::new();
+    let scratch = vec![0.0f32; a.len()];
+    let copy = b.to_vec();
+    let doubled: Vec<f32> = a.iter().map(|x| x * 2.0).collect();
+    let boxed = Box::new(scratch.clone());
+    tmp.extend(doubled.iter().chain(copy.iter()).chain(boxed.iter()));
+    out.clear();
+    out.extend(tmp.iter());
+}
+
+pub fn helper_alloc(n: usize) -> Vec<f32> {
+    // no kernel suffix: allocation here is unrestricted
+    vec![0.0; n]
+}

@@ -1,0 +1,7 @@
+//! r4 fail fixture: unsafe (and its local re-allow) outside the
+//! allowlisted files.
+
+#[allow(unsafe_code)]
+pub fn peek(v: &[u64]) -> u64 {
+    unsafe { *v.as_ptr() }
+}

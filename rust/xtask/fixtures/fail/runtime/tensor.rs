@@ -1,0 +1,7 @@
+//! r4 fail fixture: allowlisted unsafe file, but no SAFETY comment.
+
+pub fn as_bytes(v: &[f32]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+    }
+}

@@ -1,0 +1,10 @@
+//! r5 fail fixture: allowlisted file, but no `relaxed:` justification
+//! comment at the site.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+static LEVEL: AtomicU8 = AtomicU8::new(2);
+
+pub fn set_level(l: u8) {
+    LEVEL.store(l, Ordering::Relaxed);
+}

@@ -1,0 +1,11 @@
+//! r5 fail fixture: Relaxed outside the allowlisted files — a local
+//! justification comment cannot override the file allowlist.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+static HITS: AtomicUsize = AtomicUsize::new(0);
+
+pub fn bump() -> usize {
+    // relaxed: this comment does not make the file allowlisted
+    HITS.fetch_add(1, Ordering::Relaxed)
+}

@@ -1,0 +1,21 @@
+//! r3 pass fixture: typed errors on the non-test surface, unwraps only
+//! inside `#[cfg(test)]`.
+
+pub fn parse_len(buf: &[u8]) -> Result<u32, String> {
+    let header: [u8; 4] = buf
+        .get(0..4)
+        .ok_or_else(|| "short frame".to_string())?
+        .try_into()
+        .map_err(|_| "short frame".to_string())?;
+    Ok(u32::from_le_bytes(header))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        assert_eq!(parse_len(&7u32.to_le_bytes()).unwrap(), 7);
+    }
+}

@@ -1,0 +1,5 @@
+//! r4 pass fixture: crate root carrying the required lint.
+
+#![deny(unsafe_code)]
+
+pub mod nothing {}

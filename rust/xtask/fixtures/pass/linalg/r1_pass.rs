@@ -1,0 +1,15 @@
+//! r1 pass fixture: deterministic collections and seeded streams only.
+
+use std::collections::BTreeMap;
+
+pub fn xi_accumulate(vals: &[f32]) -> f32 {
+    // prose mentions of HashMap or Instant must not fire the rule, and
+    // neither must string literals:
+    let banned = "HashMap, HashSet, Instant, SystemTime, thread_rng";
+    let mut seen: BTreeMap<u64, f32> = BTreeMap::new();
+    for (i, v) in vals.iter().enumerate() {
+        seen.insert(i as u64, *v);
+    }
+    let _ = banned.len();
+    seen.values().sum()
+}

@@ -1,0 +1,12 @@
+//! r2 pass fixture: a kernel writing only through caller buffers.
+
+pub fn axpy_into(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+pub fn staging_buffer(n: usize) -> Vec<f32> {
+    // allocation outside the `_into`/`_ws`/`_pooled` contract is free
+    vec![0.0; n]
+}

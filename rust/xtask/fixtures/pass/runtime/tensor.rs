@@ -1,0 +1,10 @@
+//! r4 pass fixture: allowlisted unsafe with its SAFETY contract.
+
+pub fn as_bytes(v: &[f32]) -> &[u8] {
+    // SAFETY: f32 has no padding or invalid bit patterns; the byte view
+    // covers exactly `v.len() * 4` bytes of a live, aligned allocation
+    // and is dropped before `v`.
+    unsafe {
+        std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+    }
+}

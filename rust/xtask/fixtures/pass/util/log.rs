@@ -1,0 +1,11 @@
+//! r5 pass fixture: allowlisted Relaxed with its justification.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+static LEVEL: AtomicU8 = AtomicU8::new(2);
+
+pub fn set_level(l: u8) {
+    // relaxed: LEVEL is a monotonic config flag; no thread orders other
+    // memory against it
+    LEVEL.store(l, Ordering::Relaxed);
+}

@@ -1,0 +1,382 @@
+//! The five invariant rules, applied to preprocessed source files.
+//!
+//! Every rule reads its configuration (domains, token lists, allowlists)
+//! from `rules.toml`; this module is pure mechanism. All line numbers are
+//! 1-based. Test regions (`#[cfg(test)]`) are exempt from every rule —
+//! tests may unwrap, allocate and clone freely.
+//!
+//! - **r1 — determinism domain.** Inside the bitwise-determinism domain
+//!   (`linalg/`, `optim/native/`, `coordinator/replicas.rs`) no
+//!   iteration-order-unstable collections (`HashMap`/`HashSet`), no wall
+//!   or monotonic clocks (`SystemTime`/`Instant`), no ambient randomness.
+//!   Per-parameter seeded `util::rng` streams are the allowlisted way to
+//!   be random.
+//! - **r2 — allocation-free kernels.** Functions named `*_into` / `*_ws` /
+//!   `*_pooled` carry the PR-1/2 contract: the steady-state hot path
+//!   allocates nothing, so allocation calls (`Vec::new`, `vec![`,
+//!   `.to_vec(`, `.clone(`, `.collect`, `Box::new`) are errors anywhere in
+//!   their bodies. Documented deviations are allowlisted per function.
+//! - **r3 — typed comms errors.** `comms/` and `coordinator/` made every
+//!   failure a typed `CommsError`/`anyhow` error; `.unwrap()`, `.expect(`
+//!   and `panic!` in non-test code reintroduce crashes on the recovery
+//!   path and are errors.
+//! - **r4 — unsafe hygiene.** `unsafe` may appear only in the allowlisted
+//!   files, each block within 3 lines of a `// SAFETY:` comment; crate
+//!   roots must carry `#![deny(unsafe_code)]`, and `#[allow(unsafe_code)]`
+//!   outside the allowlisted files is an error.
+//! - **r5 — atomic-ordering discipline.** `Ordering::Relaxed` is legal
+//!   only in allowlisted files and only next to a `relaxed:` justification
+//!   comment; everywhere else it is an error (stronger orderings are
+//!   always fine).
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::rules::Rules;
+use crate::scan::{find_ident, has_ident, preprocess, SourceFile};
+
+/// One rule violation at a file:line.
+pub struct Finding {
+    pub rule: String,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file, self.line, self.rule, self.message
+        )
+    }
+}
+
+/// True when `rel` falls under any of the `domain` entries — a trailing
+/// `/` entry is a directory prefix, anything else an exact file path.
+fn in_domain(rel: &str, domain: &[String]) -> bool {
+    domain.iter().any(|d| {
+        if d.ends_with('/') {
+            rel.starts_with(d.as_str())
+        } else {
+            rel == d
+        }
+    })
+}
+
+fn allow_has(allow: &[String], entry: &str) -> bool {
+    allow.iter().any(|a| a == entry)
+}
+
+// ------------------------------------------------------------------- r1
+
+fn rule_r1(file: &SourceFile, rules: &Rules, out: &mut Vec<Finding>) {
+    if !in_domain(&file.rel, rules.list("r1", "domain")) {
+        return;
+    }
+    let allow = rules.list("r1", "allow");
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.is_test {
+            continue;
+        }
+        for tok in rules.list("r1", "forbidden") {
+            if has_ident(&line.code, tok)
+                && !allow_has(allow, &format!("{}:{}", file.rel, tok))
+            {
+                out.push(Finding {
+                    rule: "r1".into(),
+                    file: file.rel.clone(),
+                    line: idx + 1,
+                    message: format!(
+                        "`{tok}` inside the bitwise-determinism domain \
+                         (seeded util::rng streams are the only sanctioned \
+                         nondeterminism source)"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------- r2
+
+/// Identifier continuation test for function-name scanning.
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Find `fn <name>` on this code line; returns (name, column past name).
+fn fn_decl(code: &str) -> Option<(String, usize)> {
+    let at = find_ident(code, "fn")?;
+    let rest: Vec<char> = code[at + 2..].chars().collect();
+    let mut i = 0usize;
+    while i < rest.len() && rest[i].is_whitespace() {
+        i += 1;
+    }
+    let start = i;
+    while i < rest.len() && is_ident_char(rest[i]) {
+        i += 1;
+    }
+    if i == start {
+        return None; // `fn` not followed by a name (e.g. `Fn` trait syntax)
+    }
+    let name: String = rest[start..i].iter().collect();
+    Some((name, at + 2 + i))
+}
+
+fn rule_r2(file: &SourceFile, rules: &Rules, out: &mut Vec<Finding>) {
+    let suffixes = rules.list("r2", "suffixes");
+    let forbidden = rules.list("r2", "forbidden");
+    let allow = rules.list("r2", "allow");
+    let n = file.lines.len();
+    let mut idx = 0usize;
+    while idx < n {
+        let line = &file.lines[idx];
+        let decl = if line.is_test { None } else { fn_decl(&line.code) };
+        let Some((name, col)) = decl else {
+            idx += 1;
+            continue;
+        };
+        if !suffixes.iter().any(|s| name.ends_with(s.as_str())) {
+            idx += 1;
+            continue;
+        }
+        // Walk the function body by brace depth, starting after the name.
+        let allowed = allow_has(allow, &format!("{}::{}", file.rel, name));
+        let mut depth = 0i64;
+        let mut started = false;
+        let mut j = idx;
+        let mut scan_col = col;
+        while j < n {
+            let code = &file.lines[j].code;
+            for ch in code.chars().skip(if j == idx { scan_col } else { 0 })
+            {
+                if ch == '{' {
+                    depth += 1;
+                    started = true;
+                } else if ch == '}' {
+                    depth -= 1;
+                }
+            }
+            scan_col = 0;
+            if started {
+                if !allowed {
+                    for tok in forbidden {
+                        if code.contains(tok.as_str()) {
+                            out.push(Finding {
+                                rule: "r2".into(),
+                                file: file.rel.clone(),
+                                line: j + 1,
+                                message: format!(
+                                    "`{tok}` inside `fn {name}` — the \
+                                     `_into`/`_ws`/`_pooled` suffix is the \
+                                     allocation-free kernel contract"
+                                ),
+                            });
+                        }
+                    }
+                }
+                if depth <= 0 {
+                    break;
+                }
+            }
+            j += 1;
+        }
+        idx = j + 1;
+    }
+}
+
+// ------------------------------------------------------------------- r3
+
+fn rule_r3(file: &SourceFile, rules: &Rules, out: &mut Vec<Finding>) {
+    if !in_domain(&file.rel, rules.list("r3", "domain")) {
+        return;
+    }
+    if allow_has(rules.list("r3", "allow"), &file.rel) {
+        return;
+    }
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.is_test {
+            continue;
+        }
+        for tok in rules.list("r3", "forbidden") {
+            if line.code.contains(tok.as_str()) {
+                out.push(Finding {
+                    rule: "r3".into(),
+                    file: file.rel.clone(),
+                    line: idx + 1,
+                    message: format!(
+                        "`{tok}` in non-test code — every failure here \
+                         must stay a typed error (CommsError / anyhow), \
+                         never a crash"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------- r4
+
+fn rule_r4(file: &SourceFile, rules: &Rules, out: &mut Vec<Finding>) {
+    let unsafe_files = rules.list("r4", "unsafe_files");
+    let allowlisted = unsafe_files.iter().any(|f| f == &file.rel);
+
+    // Crate roots must deny unsafe code for every non-allowlisted module.
+    if file.rel == "lib.rs" || file.rel == "main.rs" {
+        let has_deny = file
+            .lines
+            .iter()
+            .any(|l| l.code.contains("#![deny(unsafe_code)]"));
+        if !has_deny {
+            out.push(Finding {
+                rule: "r4".into(),
+                file: file.rel.clone(),
+                line: 1,
+                message: "crate root is missing #![deny(unsafe_code)]"
+                    .into(),
+            });
+        }
+    }
+
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.is_test {
+            continue;
+        }
+        if !allowlisted && line.code.contains("allow(unsafe_code)") {
+            out.push(Finding {
+                rule: "r4".into(),
+                file: file.rel.clone(),
+                line: idx + 1,
+                message: "#[allow(unsafe_code)] outside the allowlisted \
+                          unsafe files"
+                    .into(),
+            });
+        }
+        if !has_ident(&line.code, "unsafe") {
+            continue;
+        }
+        if !allowlisted {
+            out.push(Finding {
+                rule: "r4".into(),
+                file: file.rel.clone(),
+                line: idx + 1,
+                message: "`unsafe` outside the allowlisted unsafe files"
+                    .into(),
+            });
+            continue;
+        }
+        let commented = (idx.saturating_sub(3)..=idx)
+            .any(|k| file.lines[k].comment.contains("SAFETY:"));
+        if !commented {
+            out.push(Finding {
+                rule: "r4".into(),
+                file: file.rel.clone(),
+                line: idx + 1,
+                message: "`unsafe` block without a `// SAFETY:` comment \
+                          within the 3 preceding lines"
+                    .into(),
+            });
+        }
+    }
+}
+
+// ------------------------------------------------------------------- r5
+
+fn rule_r5(file: &SourceFile, rules: &Rules, out: &mut Vec<Finding>) {
+    let allowlisted = rules
+        .list("r5", "allow_files")
+        .iter()
+        .any(|f| f == &file.rel);
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.is_test || !line.code.contains("Ordering::Relaxed") {
+            continue;
+        }
+        if !allowlisted {
+            out.push(Finding {
+                rule: "r5".into(),
+                file: file.rel.clone(),
+                line: idx + 1,
+                message: "Ordering::Relaxed outside the allowlisted files \
+                          — use a stronger ordering or extend rules.toml \
+                          with a justification"
+                    .into(),
+            });
+            continue;
+        }
+        let justified = (idx.saturating_sub(2)..=idx).any(|k| {
+            file.lines[k].comment.to_ascii_lowercase().contains("relaxed:")
+        });
+        if !justified {
+            out.push(Finding {
+                rule: "r5".into(),
+                file: file.rel.clone(),
+                line: idx + 1,
+                message: "allowlisted Ordering::Relaxed without a \
+                          `// relaxed:` justification comment within the \
+                          2 preceding lines"
+                    .into(),
+            });
+        }
+    }
+}
+
+// ------------------------------------------------------------ entry points
+
+/// Run every rule over one preprocessed file.
+pub fn analyze_file(file: &SourceFile, rules: &Rules) -> Vec<Finding> {
+    let mut out = Vec::new();
+    rule_r1(file, rules, &mut out);
+    rule_r2(file, rules, &mut out);
+    rule_r3(file, rules, &mut out);
+    rule_r4(file, rules, &mut out);
+    rule_r5(file, rules, &mut out);
+    out.sort_by(|a, b| {
+        (a.line, a.rule.as_str()).cmp(&(b.line, b.rule.as_str()))
+    });
+    out
+}
+
+/// Analyze one source string under a synthetic relative path — the unit
+/// the fixture tests drive directly.
+pub fn analyze_source(rel: &str, content: &str, rules: &Rules) -> Vec<Finding> {
+    analyze_file(&preprocess(rel, content), rules)
+}
+
+/// Walk `root` for `.rs` files (sorted, deterministic) and analyze each.
+pub fn analyze_tree(root: &Path, rules: &Rules) -> Result<Vec<Finding>> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    collect_rs(root, &mut files)
+        .with_context(|| format!("walking {root:?}"))?;
+    files.sort();
+    let mut out = Vec::new();
+    for path in files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let content = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        out.extend(analyze_source(&rel, &content, rules));
+    }
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

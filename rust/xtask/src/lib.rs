@@ -1,0 +1,23 @@
+//! Repo-local static-analysis suite (`cargo run -p xtask -- analyze`).
+//!
+//! The repo's determinism and concurrency guarantees — bitwise-identical
+//! results at any (replicas, shards, threads), allocation-free
+//! `_ws`/`_into`/`_pooled` kernels, typed-error comms — are promises made
+//! by PRs 1–6 and, until now, enforced only by convention plus tests that
+//! sample the space. This crate machine-checks them: a line/token-level
+//! scanner over `rust/src`, a rule set in `rules.toml`, committed
+//! pass/fail fixtures, and a CI job that fails the build on any finding.
+//!
+//! Deliberately `--fix`-free: a violation is either a real bug (fix the
+//! code) or a documented exception (extend the allowlist with a
+//! justification) — the analyzer never decides which.
+
+#![deny(unsafe_code)]
+
+pub mod analyze;
+pub mod rules;
+pub mod scan;
+
+pub use analyze::{analyze_file, analyze_source, analyze_tree, Finding};
+pub use rules::Rules;
+pub use scan::preprocess;

@@ -1,0 +1,224 @@
+//! `rules.toml` loading: the rule set is data, the analyzer is mechanism.
+//!
+//! The file is parsed with a deliberately tiny TOML-subset reader (std
+//! only, same no-dependency constraint as the main crate): `[section]`
+//! headers, `key = "string"` and `key = ["a", "b", ...]` entries (arrays
+//! may span lines), `#` comments. That subset is the whole configuration
+//! language — anything fancier belongs in the analyzer itself.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One rule section: ordered key -> list-of-strings (scalars are
+/// single-element lists).
+pub type Section = BTreeMap<String, Vec<String>>;
+
+/// The full rule set, keyed by section name (`r1`..`r5`).
+#[derive(Default)]
+pub struct Rules {
+    pub sections: BTreeMap<String, Section>,
+}
+
+impl Rules {
+    pub fn load(path: &Path) -> Result<Rules> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading rules file {path:?}"))?;
+        parse(&text).with_context(|| format!("parsing {path:?}"))
+    }
+
+    /// All values of `section.key`, empty when absent.
+    pub fn list(&self, section: &str, key: &str) -> &[String] {
+        self.sections
+            .get(section)
+            .and_then(|s| s.get(key))
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Section names in order — the analyzer's rule inventory.
+    pub fn rule_ids(&self) -> Vec<String> {
+        self.sections.keys().cloned().collect()
+    }
+}
+
+/// Parse one quoted string starting at `s[i]` (which must be `"`),
+/// returning (value, index past the closing quote).
+fn parse_string(s: &[char], mut i: usize) -> Result<(String, usize)> {
+    if s.get(i) != Some(&'"') {
+        bail!("expected opening quote at column {i}");
+    }
+    i += 1;
+    let mut out = String::new();
+    while i < s.len() {
+        match s[i] {
+            '\\' => {
+                let esc = s.get(i + 1).copied().unwrap_or('\\');
+                out.push(match esc {
+                    'n' => '\n',
+                    't' => '\t',
+                    other => other,
+                });
+                i += 2;
+            }
+            '"' => return Ok((out, i + 1)),
+            c => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    bail!("unterminated string");
+}
+
+fn parse(text: &str) -> Result<Rules> {
+    let mut rules = Rules::default();
+    let mut section = String::new();
+    // array parse state: key + collected values while inside [ ... ]
+    let mut open_array: Option<(String, Vec<String>)> = None;
+
+    for (ln, raw) in text.split('\n').enumerate() {
+        let lineno = ln + 1;
+        let line = raw.trim();
+        let chars: Vec<char> = line.chars().collect();
+
+        if let Some((key, mut vals)) = open_array.take() {
+            // continuation of a multi-line array: strings until `]`
+            let mut i = 0usize;
+            let mut closed = false;
+            while i < chars.len() {
+                match chars[i] {
+                    '"' => {
+                        let (v, ni) = parse_string(&chars, i)
+                            .with_context(|| format!("line {lineno}"))?;
+                        vals.push(v);
+                        i = ni;
+                    }
+                    ']' => {
+                        closed = true;
+                        break;
+                    }
+                    ',' | ' ' | '\t' => i += 1,
+                    '#' => break,
+                    c => bail!("line {lineno}: unexpected {c:?} in array"),
+                }
+            }
+            if closed {
+                ensure_section(&mut rules, &section, lineno)?
+                    .insert(key, vals);
+            } else {
+                open_array = Some((key, vals));
+            }
+            continue;
+        }
+
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .with_context(|| format!("line {lineno}: bad section header {line:?}"))?;
+            section = name.trim().to_string();
+            rules.sections.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .with_context(|| format!("line {lineno}: expected `key = value`, got {line:?}"))?;
+        let key = key.trim().to_string();
+        let value = value.trim();
+        let vchars: Vec<char> = value.chars().collect();
+        if value.starts_with('"') {
+            let (v, after) = parse_string(&vchars, 0)
+                .with_context(|| format!("line {lineno}"))?;
+            let rest: String = vchars[after..].iter().collect();
+            let rest = rest.trim();
+            if !rest.is_empty() && !rest.starts_with('#') {
+                bail!("line {lineno}: trailing content {rest:?}");
+            }
+            ensure_section(&mut rules, &section, lineno)?
+                .insert(key, vec![v]);
+        } else if value.starts_with('[') {
+            let mut vals = Vec::new();
+            let mut i = 1usize;
+            let mut closed = false;
+            while i < vchars.len() {
+                match vchars[i] {
+                    '"' => {
+                        let (v, ni) = parse_string(&vchars, i)
+                            .with_context(|| format!("line {lineno}"))?;
+                        vals.push(v);
+                        i = ni;
+                    }
+                    ']' => {
+                        closed = true;
+                        break;
+                    }
+                    ',' | ' ' | '\t' => i += 1,
+                    '#' => break,
+                    c => bail!("line {lineno}: unexpected {c:?} in array"),
+                }
+            }
+            if closed {
+                ensure_section(&mut rules, &section, lineno)?
+                    .insert(key, vals);
+            } else {
+                open_array = Some((key, vals));
+            }
+        } else {
+            bail!("line {lineno}: unsupported value {value:?} (string or array of strings)");
+        }
+    }
+    if let Some((key, _)) = open_array {
+        bail!("unterminated array for key {key:?}");
+    }
+    Ok(rules)
+}
+
+fn ensure_section<'a>(
+    rules: &'a mut Rules,
+    section: &str,
+    lineno: usize,
+) -> Result<&'a mut Section> {
+    if section.is_empty() {
+        bail!("line {lineno}: key outside any [section]");
+    }
+    Ok(rules.sections.entry(section.to_string()).or_default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_scalars_and_arrays() {
+        let r = parse(
+            "# comment\n\
+             [r1]\n\
+             domain = [\"linalg/\", \"optim/native/\"]\n\
+             note = \"one string\"\n\
+             [r2]\n\
+             allow = [\n\
+                 # per-entry justification comment\n\
+                 \"a.rs::f\",\n\
+                 \"b.rs::g\",\n\
+             ]\n",
+        )
+        .unwrap();
+        assert_eq!(r.list("r1", "domain"), ["linalg/", "optim/native/"]);
+        assert_eq!(r.list("r1", "note"), ["one string"]);
+        assert_eq!(r.list("r2", "allow"), ["a.rs::f", "b.rs::g"]);
+        assert_eq!(r.rule_ids(), ["r1", "r2"]);
+        assert!(r.list("r9", "missing").is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_input() {
+        assert!(parse("key = \"outside section\"").is_err());
+        assert!(parse("[r1]\nkey = unquoted").is_err());
+        assert!(parse("[r1]\nkey = \"unterminated").is_err());
+        assert!(parse("[r1]\nkey = [\"never closed\"").is_err());
+    }
+}

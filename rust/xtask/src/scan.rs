@@ -1,0 +1,275 @@
+//! Source preprocessing for the analyzer: per-line separation of code from
+//! comments (so rules never fire on prose or string literals), plus a
+//! line-level `#[cfg(test)]`-region mask (so test code keeps its `unwrap`s
+//! and allocations without weakening any rule for production code).
+//!
+//! This is a line/token-level scanner, not a parser: it understands exactly
+//! as much Rust lexical structure as the rules need — line and (nested)
+//! block comments, string/raw-string/char literals, lifetimes, and brace
+//! depth — and nothing more. Rules match on the stripped code text, where
+//! every string literal has been replaced by `""`.
+
+/// One preprocessed source line.
+pub struct Line {
+    /// The line with comments removed and string literals blanked to `""`.
+    pub code: String,
+    /// The concatenated comment text of the line (line + block comments).
+    pub comment: String,
+    /// True when the line sits inside a `#[cfg(test)]` item (or is the
+    /// attribute itself): fixtures for humans, free of every rule.
+    pub is_test: bool,
+}
+
+/// A preprocessed file: path relative to the scanned root + its lines.
+pub struct SourceFile {
+    /// Forward-slash relative path, e.g. `coordinator/replicas.rs`.
+    pub rel: String,
+    pub lines: Vec<Line>,
+}
+
+/// Split one raw line into (code, comment), updating the block-comment
+/// nesting depth. String/char literals are blanked out of the code text;
+/// comment text (both kinds) accumulates into the comment field.
+fn strip_line(raw: &str, block_depth: &mut u32) -> (String, String) {
+    let mut code = String::with_capacity(raw.len());
+    let mut comment = String::new();
+    let chars: Vec<char> = raw.chars().collect();
+    let n = chars.len();
+    let mut i = 0usize;
+    while i < n {
+        if *block_depth > 0 {
+            if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                *block_depth -= 1;
+                i += 2;
+            } else if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                *block_depth += 1;
+                i += 2;
+            } else {
+                comment.push(chars[i]);
+                i += 1;
+            }
+            continue;
+        }
+        let c = chars[i];
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            comment.extend(&chars[i + 2..]);
+            break;
+        }
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            *block_depth += 1;
+            i += 2;
+            continue;
+        }
+        if c == '"' {
+            // plain string literal: skip to the unescaped closing quote
+            i += 1;
+            while i < n {
+                if chars[i] == '\\' {
+                    i += 2;
+                } else if chars[i] == '"' {
+                    i += 1;
+                    break;
+                } else {
+                    i += 1;
+                }
+            }
+            code.push_str("\"\"");
+            continue;
+        }
+        let prev_ident = i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_');
+        if c == 'r' && !prev_ident && i + 1 < n && (chars[i + 1] == '"' || chars[i + 1] == '#') {
+            // raw string literal r"..." / r#"..."# / r##"..."## ...
+            let mut j = i + 1;
+            let mut hashes = 0usize;
+            while j < n && chars[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && chars[j] == '"' {
+                // scan for `"` followed by `hashes` hashes
+                let mut k = j + 1;
+                let mut closed = false;
+                while k < n {
+                    let tail_hashes = chars[k + 1..]
+                        .iter()
+                        .take_while(|&&h| h == '#')
+                        .count();
+                    if chars[k] == '"' && tail_hashes >= hashes {
+                        i = k + 1 + hashes;
+                        closed = true;
+                        break;
+                    }
+                    k += 1;
+                }
+                if !closed {
+                    i = n; // unterminated on this line: treat rest as literal
+                }
+                code.push_str("\"\"");
+                continue;
+            }
+            code.push(c);
+            i += 1;
+            continue;
+        }
+        if c == '\'' {
+            // char literal vs lifetime
+            if i + 1 < n && chars[i + 1] == '\\' {
+                // escaped char literal: consume through the closing quote
+                let mut j = i + 2;
+                while j < n && chars[j] != '\'' {
+                    j += 1;
+                }
+                i = (j + 1).min(n);
+                code.push_str("' '");
+                continue;
+            }
+            if i + 2 < n && chars[i + 2] == '\'' {
+                // one-char literal like 'x'
+                i += 3;
+                code.push_str("' '");
+                continue;
+            }
+            // lifetime ('a, 'static) — keep the tick, scan on
+            code.push(c);
+            i += 1;
+            continue;
+        }
+        code.push(c);
+        i += 1;
+    }
+    (code, comment)
+}
+
+/// Preprocess a whole file: strip every line, then mark `#[cfg(test)]`
+/// regions by brace matching (the attribute line itself, everything up to
+/// the opening brace of the annotated item, and the full brace span).
+pub fn preprocess(rel: &str, content: &str) -> SourceFile {
+    let mut block_depth = 0u32;
+    let mut stripped: Vec<(String, String)> = Vec::new();
+    for raw in content.split('\n') {
+        stripped.push(strip_line(raw, &mut block_depth));
+    }
+
+    let mut lines: Vec<Line> = Vec::with_capacity(stripped.len());
+    let mut depth = 0i64;
+    // Some(d): inside a test region whose opening brace sits at depth d.
+    let mut region_depth: Option<i64> = None;
+    // saw the attribute, waiting for the annotated item's opening brace
+    let mut pending = false;
+    for (code, comment) in stripped {
+        if region_depth.is_none() && code.contains("#[cfg(test)]") {
+            pending = true;
+        }
+        let is_test = pending || region_depth.is_some();
+        for ch in code.chars() {
+            if ch == '{' {
+                depth += 1;
+                if pending {
+                    region_depth = Some(depth);
+                    pending = false;
+                }
+            } else if ch == '}' {
+                if region_depth == Some(depth) {
+                    region_depth = None;
+                }
+                depth -= 1;
+            }
+        }
+        lines.push(Line { code, comment, is_test });
+    }
+    SourceFile { rel: rel.to_string(), lines }
+}
+
+/// True when `code` contains `token` as a standalone identifier (both
+/// neighbours are non-identifier characters). Used for keyword/type tokens
+/// like `HashMap`, `Instant`, `unsafe` — so `unsafe_code` or
+/// `InstantaneousRate` never match.
+pub fn has_ident(code: &str, token: &str) -> bool {
+    find_ident(code, token).is_some()
+}
+
+/// Position of the first standalone-identifier occurrence of `token`.
+pub fn find_ident(code: &str, token: &str) -> Option<usize> {
+    let bytes = code.as_bytes();
+    let is_ident = |b: u8| b.is_ascii_alphanumeric() || b == b'_';
+    let mut from = 0usize;
+    while let Some(off) = code[from..].find(token) {
+        let start = from + off;
+        let end = start + token.len();
+        let pre_ok = start == 0 || !is_ident(bytes[start - 1]);
+        let post_ok = end >= bytes.len() || !is_ident(bytes[end]);
+        if pre_ok && post_ok {
+            return Some(start);
+        }
+        from = start + 1;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(src: &str) -> Vec<String> {
+        preprocess("x.rs", src).lines.into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn line_comments_are_stripped() {
+        let c = codes("let x = 1; // HashMap here\nlet y = 2;");
+        assert_eq!(c[0], "let x = 1; ");
+        assert_eq!(c[1], "let y = 2;");
+    }
+
+    #[test]
+    fn block_comments_span_lines_and_nest() {
+        let c = codes("a /* one /* two */ still */ b\nplain");
+        assert_eq!(c[0], "a  b");
+        let c = codes("a /* open\nInstant::now()\nclose */ b");
+        assert_eq!(c[0], "a ");
+        assert_eq!(c[1], "");
+        assert_eq!(c[2], " b");
+    }
+
+    #[test]
+    fn strings_are_blanked() {
+        let c = codes(r#"let s = "un\"wrap() panic!"; s.len()"#);
+        assert_eq!(c[0], r#"let s = ""; s.len()"#);
+        let c = codes(r##"let s = r#"raw "panic!" body"#; x"##);
+        assert_eq!(c[0], r#"let s = ""; x"#);
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let c = codes("let c = '\\n'; let b = 'x';");
+        assert_eq!(c[0], "let c = ' '; let b = ' ';");
+        let c = codes("fn f<'a>(x: &'a str) -> &'a str { x }");
+        assert_eq!(c[0], "fn f<'a>(x: &'a str) -> &'a str { x }");
+    }
+
+    #[test]
+    fn cfg_test_region_masks_the_whole_item() {
+        let src = "\
+fn prod() {}\n\
+#[cfg(test)]\n\
+mod tests {\n\
+    fn helper() { val.unwrap(); }\n\
+}\n\
+fn prod2() {}\n";
+        let f = preprocess("x.rs", src);
+        let mask: Vec<bool> = f.lines.iter().map(|l| l.is_test).collect();
+        assert!(!mask[0], "code before the region");
+        assert!(mask[1] && mask[2] && mask[3] && mask[4], "{mask:?}");
+        assert!(!mask[5], "code after the region");
+    }
+
+    #[test]
+    fn ident_matching_requires_boundaries() {
+        assert!(has_ident("use std::time::Instant;", "Instant"));
+        assert!(has_ident("Instant::now()", "Instant"));
+        assert!(!has_ident("InstantaneousRate", "Instant"));
+        assert!(!has_ident("my_unsafe_code", "unsafe"));
+        assert!(has_ident("unsafe { x }", "unsafe"));
+        assert!(!has_ident("#![deny(unsafe_code)]", "unsafe"));
+    }
+}

@@ -1,0 +1,166 @@
+//! Fixture-driven tests for the analyzer: every rule has a committed
+//! passing and failing exemplar under `fixtures/{pass,fail}/`, laid out
+//! as a miniature source tree so domain-scoped rules resolve exactly as
+//! they do over `rust/src`. The fail-side assertions pin *exact* finding
+//! counts and line numbers — a scanner regression that drops or shifts a
+//! finding fails loudly here, not silently in CI.
+
+use std::path::{Path, PathBuf};
+
+use xtask::{analyze_source, analyze_tree, Finding, Rules};
+
+fn fixtures(sub: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(sub)
+}
+
+fn rules() -> Rules {
+    Rules::load(&Path::new(env!("CARGO_MANIFEST_DIR")).join("rules.toml"))
+        .expect("rules.toml parses")
+}
+
+/// (file, line, rule) triples, in the analyzer's deterministic order.
+fn keys(findings: &[Finding]) -> Vec<(String, usize, String)> {
+    findings
+        .iter()
+        .map(|f| (f.file.clone(), f.line, f.rule.clone()))
+        .collect()
+}
+
+#[test]
+fn pass_fixtures_are_clean() {
+    let findings = analyze_tree(&fixtures("pass"), &rules()).unwrap();
+    let rendered: Vec<String> =
+        findings.iter().map(|f| f.to_string()).collect();
+    assert!(findings.is_empty(), "pass fixtures flagged: {rendered:#?}");
+}
+
+#[test]
+fn fail_fixtures_have_exact_findings() {
+    let findings = analyze_tree(&fixtures("fail"), &rules()).unwrap();
+    let expect: Vec<(&str, usize, &str)> = vec![
+        // comms/r3_fail.rs: unwrap / expect / panic on the typed surface
+        ("comms/r3_fail.rs", 4, "r3"),
+        ("comms/r3_fail.rs", 5, "r3"),
+        ("comms/r3_fail.rs", 7, "r3"),
+        // lib.rs: crate root missing #![deny(unsafe_code)]
+        ("lib.rs", 1, "r4"),
+        // linalg/r1_fail.rs: HashMap / Instant / SystemTime in the domain
+        ("linalg/r1_fail.rs", 4, "r1"),
+        ("linalg/r1_fail.rs", 5, "r1"),
+        ("linalg/r1_fail.rs", 5, "r1"),
+        ("linalg/r1_fail.rs", 8, "r1"),
+        ("linalg/r1_fail.rs", 9, "r1"),
+        ("linalg/r1_fail.rs", 13, "r1"),
+        // linalg/r2_fail.rs: six allocation tokens inside fn gemm_into
+        ("linalg/r2_fail.rs", 4, "r2"),
+        ("linalg/r2_fail.rs", 5, "r2"),
+        ("linalg/r2_fail.rs", 6, "r2"),
+        ("linalg/r2_fail.rs", 7, "r2"),
+        ("linalg/r2_fail.rs", 8, "r2"),
+        ("linalg/r2_fail.rs", 8, "r2"),
+        // runtime/r4_outside.rs: allow(unsafe_code) + unsafe outside list
+        ("runtime/r4_outside.rs", 4, "r4"),
+        ("runtime/r4_outside.rs", 6, "r4"),
+        // runtime/tensor.rs: allowlisted file, SAFETY comment missing
+        ("runtime/tensor.rs", 4, "r4"),
+        // util/log.rs: allowlisted Relaxed, justification missing
+        ("util/log.rs", 9, "r5"),
+        // util/r5_outside.rs: Relaxed outside the allowlist
+        ("util/r5_outside.rs", 10, "r5"),
+    ];
+    let got = keys(&findings);
+    let want: Vec<(String, usize, String)> = expect
+        .into_iter()
+        .map(|(f, l, r)| (f.to_string(), l, r.to_string()))
+        .collect();
+    assert_eq!(
+        got,
+        want,
+        "fail-fixture findings drifted:\n{}",
+        findings
+            .iter()
+            .map(|f| format!("  {f}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
+
+#[test]
+fn every_rule_has_a_fail_fixture() {
+    // meta-test: the rule inventory in rules.toml and the fail fixtures
+    // must cover each other — adding a rule without a detection exemplar
+    // (or an exemplar that stopped detecting) fails here
+    let r = rules();
+    let findings = analyze_tree(&fixtures("fail"), &r).unwrap();
+    for rule in r.rule_ids() {
+        assert!(
+            findings.iter().any(|f| f.rule == rule),
+            "rule {rule} has no firing fail fixture"
+        );
+    }
+}
+
+#[test]
+fn test_regions_are_exempt() {
+    // the #[cfg(test)] mod in the r3 fail fixture holds an unwrap that
+    // must NOT be reported: only the 3 non-test findings fire
+    let findings = analyze_tree(&fixtures("fail"), &rules()).unwrap();
+    let r3: Vec<_> =
+        findings.iter().filter(|f| f.file == "comms/r3_fail.rs").collect();
+    assert_eq!(r3.len(), 3);
+    assert!(r3.iter().all(|f| f.line < 12), "{:?}", keys(&findings));
+}
+
+#[test]
+fn strings_and_comments_never_fire() {
+    let r = rules();
+    let src = "\
+// HashMap in a comment is fine\n\
+pub fn f() -> usize {\n\
+    let s = \"Instant::now() .unwrap() panic! Ordering::Relaxed\";\n\
+    /* SystemTime too */\n\
+    s.len()\n\
+}\n";
+    // scanned under every domain at once: linalg (r1), comms (r3)
+    assert!(analyze_source("linalg/x.rs", src, &r).is_empty());
+    assert!(analyze_source("comms/x.rs", src, &r).is_empty());
+}
+
+#[test]
+fn r2_allowlist_is_function_scoped() {
+    let r = rules();
+    // the allowlisted reduce_scatter_into may allocate...
+    let allowed = "\
+pub fn reduce_scatter_into(x: &[f32]) -> Vec<f32> {\n\
+    x.to_vec()\n\
+}\n";
+    assert!(analyze_source("coordinator/replicas.rs", allowed, &r)
+        .is_empty());
+    // ...but the same body under a non-allowlisted kernel name may not
+    let denied = allowed.replace("reduce_scatter_into", "reduce_into");
+    let findings =
+        analyze_source("coordinator/replicas.rs", &denied, &r);
+    assert_eq!(keys(&findings), vec![(
+        "coordinator/replicas.rs".to_string(),
+        2,
+        "r2".to_string()
+    )]);
+}
+
+#[test]
+fn r5_requires_justification_even_when_allowlisted() {
+    let r = rules();
+    let justified = "\
+use std::sync::atomic::{AtomicU8, Ordering};\n\
+static LEVEL: AtomicU8 = AtomicU8::new(2);\n\
+pub fn level() -> u8 {\n\
+    // relaxed: config flag, no cross-memory ordering\n\
+    LEVEL.load(Ordering::Relaxed)\n\
+}\n";
+    assert!(analyze_source("util/log.rs", justified, &r).is_empty());
+    let bare = justified
+        .replace("    // relaxed: config flag, no cross-memory ordering\n", "");
+    let findings = analyze_source("util/log.rs", &bare, &r);
+    assert_eq!(findings.len(), 1, "{:?}", keys(&findings));
+    assert_eq!(findings[0].line, 4);
+}
