@@ -8,6 +8,9 @@
 //! 3. What does a full `Cluster::reduce` collective cost over the inproc
 //!    transport, against the same `allreduce_mean_into` kernel called
 //!    directly (the in-memory path it must match bitwise)?
+//! 4. What do the `--compress` gradient codecs save on the wire (the
+//!    acceptance-bar measurement: ~1.3M elements per rank, 4 replicas),
+//!    and what do encode + compressed collective cost?
 //!
 //! Set BENCH_JSON=BENCH_comms.json to record machine-readable lines.
 
@@ -16,7 +19,8 @@ use std::time::Duration;
 
 use adapprox::bench::{header, Bench};
 use adapprox::comms::{
-    decode_frame, encode_frame, ChannelPipe, Cluster, CommsOptions, Pipe,
+    decode_frame, encode_frame, encode_grads_into, ChannelPipe, Cluster,
+    CodecScratch, CommsOptions, CompressKind, CompressedGrads, Msg, Pipe,
     ReduceMode, TcpPipe, TransportKind,
 };
 use adapprox::coordinator::allreduce_mean_into;
@@ -118,10 +122,114 @@ fn bench_cluster_reduce(b: &Bench, rng: &mut Rng) {
     }
 }
 
+const CODECS: [CompressKind; 4] = [
+    CompressKind::Bf16,
+    CompressKind::Int8,
+    CompressKind::TopK(32),
+    CompressKind::LowRank(4),
+];
+
+fn bench_compress_bytes(rng: &mut Rng) {
+    header("gradient codecs: wire bytes vs the exact f32 frame");
+    // the acceptance-bar case: ~1.3M elements per rank, 4 replicas —
+    // int8 and topk must report a >= 2x reduction here
+    let per_replica = grad_sets(4, 1_300_000, rng);
+    let pool = Pool::new(1);
+    let mut scratch = CodecScratch::new();
+    let exact: u64 = per_replica
+        .iter()
+        .enumerate()
+        .map(|(r, g)| Msg::grads_bytes(r as u32, 1, g).len() as u64)
+        .sum();
+    println!("  {:<12} {exact:>12} B  (baseline, 4 ranks)", "exact-f32");
+    for kind in CODECS {
+        let mut total = 0u64;
+        let mut cg = CompressedGrads::default();
+        for (r, grads) in per_replica.iter().enumerate() {
+            encode_grads_into(
+                kind,
+                1,
+                r as u64,
+                grads,
+                &mut cg,
+                &mut scratch,
+                &pool,
+            )
+            .unwrap();
+            total +=
+                Msg::compressed_grads_bytes(r as u32, 1, &cg).len() as u64;
+        }
+        println!(
+            "  {:<12} {total:>12} B  ({:.1}x smaller)",
+            kind.name(),
+            exact as f64 / total as f64
+        );
+    }
+}
+
+fn bench_compressed_reduce(b: &Bench, rng: &mut Rng) {
+    header("compressed reduce: encode + inproc collective, 16k elems");
+    let small = grad_sets(4, 1 << 14, rng);
+    let pool = Pool::new(1);
+    let mut scratch = CodecScratch::new();
+    for kind in CODECS {
+        let mut cg = CompressedGrads::default();
+        b.run(&format!("encode_{}_r4_16kel", kind.name()), || {
+            for (r, g) in small.iter().enumerate() {
+                encode_grads_into(
+                    kind,
+                    1,
+                    r as u64,
+                    g,
+                    &mut cg,
+                    &mut scratch,
+                    &pool,
+                )
+                .unwrap();
+                std::hint::black_box(&cg);
+            }
+        });
+        let mut frames = Vec::new();
+        for (r, g) in small.iter().enumerate() {
+            let mut f = CompressedGrads::default();
+            encode_grads_into(
+                kind,
+                1,
+                r as u64,
+                g,
+                &mut f,
+                &mut scratch,
+                &pool,
+            )
+            .unwrap();
+            frames.push(f);
+        }
+        let opts = CommsOptions {
+            transport: TransportKind::Inproc,
+            poll: Duration::from_micros(200),
+            compress: kind,
+            ..CommsOptions::default()
+        };
+        let mut cluster =
+            Cluster::connect(4, ReduceMode::AllReduce, &opts)
+                .expect("inproc cluster");
+        let step = Cell::new(0u64);
+        b.run(&format!("reduce_{}_r4_16kel", kind.name()), || {
+            step.set(step.get() + 1);
+            std::hint::black_box(
+                cluster.reduce_compressed(step.get(), &frames).unwrap(),
+            );
+        });
+        cluster.shutdown().expect("clean shutdown");
+    }
+}
+
 fn main() {
     let b = Bench::default().with_json_from_env();
     let mut rng = Rng::new(0xC0_0515);
     bench_framer(&b, &mut rng);
     bench_pipes(&b, &mut rng);
     bench_cluster_reduce(&b, &mut rng);
+    bench_compress_bytes(&mut rng);
+    bench_compressed_reduce(&b, &mut rng);
 }

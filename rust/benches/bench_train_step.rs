@@ -14,9 +14,14 @@
 //! sharded-path perf trajectory is tracked even on CI machines without
 //! an XLA toolchain.
 
+use std::cell::Cell;
 use std::rc::Rc;
+use std::time::Duration;
 
 use adapprox::bench::{header, Bench};
+use adapprox::comms::{
+    Cluster, CommsOptions, CompressKind, ReduceMode, TransportKind,
+};
 use adapprox::coordinator::replicas::{
     all_gather_params_into, allreduce_mean, allreduce_mean_into,
     allreduce_mean_pooled, reduce_scatter_into,
@@ -24,7 +29,7 @@ use adapprox::coordinator::replicas::{
 use adapprox::coordinator::{TrainOptions, Trainer};
 use adapprox::data::{BatchIterator, Split};
 use adapprox::optim::{
-    shard_ranges, Hyper, NativeOptimizer, OptKind, Optimizer,
+    shard_ranges, ErrorFeedback, Hyper, NativeOptimizer, OptKind, Optimizer,
     ShardedNativeOptimizer,
 };
 use adapprox::runtime::manifest::HyperDefaults;
@@ -325,6 +330,37 @@ fn bench_reduce_scatter(b: &Bench) {
     });
 }
 
+/// The trainer-side `--compress` path on the same workload: error
+/// feedback adjust + encode + inproc collective + residual absorb per
+/// step — the wall-clock cost the wire savings are bought with
+/// (bench_comms reports the byte reductions themselves).
+fn bench_compressed_train_reduce(b: &Bench) {
+    header("compressed gradient reduce: EF + inproc collective (r=4)");
+    let reps = reduce_bench_reps();
+    for kind in [CompressKind::Int8, CompressKind::TopK(32)] {
+        let opts = CommsOptions {
+            transport: TransportKind::Inproc,
+            poll: Duration::from_micros(200),
+            compress: kind,
+            ..CommsOptions::default()
+        };
+        let mut cluster =
+            Cluster::connect(4, ReduceMode::AllReduce, &opts)
+                .expect("inproc cluster");
+        let mut ef = ErrorFeedback::new(kind, 4);
+        let step = Cell::new(0u64);
+        b.run(&format!("ef_reduce_{}_r4_1m3", kind.name()), || {
+            step.set(step.get() + 1);
+            ef.adjust_and_encode(step.get(), &reps).unwrap();
+            std::hint::black_box(
+                cluster.reduce_compressed(step.get(), ef.frames()).unwrap(),
+            );
+            ef.absorb().unwrap();
+        });
+        cluster.shutdown().expect("clean shutdown");
+    }
+}
+
 /// Serial vs pooled bucketed all-reduce: 4 replicas × ~1.3M elements.
 fn bench_allreduce(b: &Bench) {
     header("gradient all-reduce: per-tensor serial vs bucketed pooled");
@@ -356,6 +392,7 @@ fn main() {
     bench_zero3_native_step(&b);
     bench_allreduce(&b);
     bench_reduce_scatter(&b);
+    bench_compressed_train_reduce(&b);
     bench_all_gather_params(&b);
 
     let Ok(rt) = Runtime::new("artifacts") else {

@@ -1,0 +1,1260 @@
+//! Gradient compression codecs for the reduce-scatter uplink.
+//!
+//! Every step of data-parallel training ships full-f32 gradients through
+//! `Msg::Grads`; once those bytes cross a real wire, bandwidth is the
+//! ceiling. This module trades gradient precision for bytes behind one
+//! dispatch point, [`encode_grads_into`] / [`decode_grads_into`], with the
+//! loss accounted for exactly by the error-feedback ledger in
+//! `optim::ef` (residual = adjusted − decoded, re-applied next step).
+//!
+//! Codecs (`--compress {none,bf16,int8,topk:<k>,lowrank:<k>}`):
+//!
+//! - **bf16** — mantissa truncation (`bits >> 16`). Scale-free; 2 bytes
+//!   per element; the dropped low half-word is exactly representable, so
+//!   the residual is bitwise exact.
+//! - **int8** — per-bucket ([`BUCKET`] elements) affine quantization
+//!   onto a power-of-two scale `2^e`, the smallest `e ≥ −149` with
+//!   `127·2^e ≥ maxabs` (capped at `e = 121` so `±127·2^e` stays finite;
+//!   values above `127·2^121 ≈ 3.4e38` saturate). Power-of-two scales
+//!   make both the decode (`q·2^e`) and the residual (`x − q·2^e`)
+//!   exact in f32 — see the exactness notes on [`pow2`].
+//! - **topk:k** — per bucket, the `k` largest-magnitude elements
+//!   (ties broken toward the lower index) as sorted u32 indices plus raw
+//!   f32 values; everything else decodes to zero, so the residual is the
+//!   untransmitted remainder, bitwise.
+//! - **lowrank:k** — per matrix tensor, rank-`k` factors `Q·Uᵀ` from the
+//!   same randomized subspace iteration (`srsi_with_omega_scratch_pooled`)
+//!   that approximates the optimizer's second moment; vectors and
+//!   degenerate matrices fall back to bf16. The only codec whose ledger
+//!   is ulp-bounded rather than bitwise (dense reconstruction rounds).
+//!
+//! Non-finite rule: encoding **rejects** NaN/±Inf with a typed
+//! [`CommsError::Protocol`] (the trainer's non-finite guard runs first,
+//! so a rejection here means a real bug, not a loss spike); subnormals
+//! are propagated — truncated (bf16), quantized on subnormal scales
+//! (int8) or shipped verbatim (topk) — and their residuals stay exact.
+//!
+//! Determinism: every codec is deterministic for fixed input — the
+//! low-rank sketch is seeded from `(step, replica, tensor)` — so a fixed
+//! codec yields a deterministic reduction; different codecs are *not*
+//! bitwise-comparable to each other or to the exact path.
+
+use crate::comms::CommsError;
+use crate::linalg::{srsi_with_omega_scratch_pooled, Mat, SrsiScratch};
+use crate::runtime::tensor::{Tensor, TensorData};
+use crate::util::pool::Pool;
+use crate::util::rng::Rng;
+
+/// Quantization bucket: scales (int8) and top-k selection are computed
+/// per contiguous run of this many elements, so one outlier only
+/// degrades its own bucket.
+pub const BUCKET: usize = 4096;
+
+/// Extra sketch columns for the low-rank codec (oversampling improves
+/// the captured subspace at negligible wire cost — the factors are
+/// truncated back to rank k).
+const LOWRANK_OVERSAMPLE: usize = 4;
+
+/// Largest int8 scale exponent: `127·2^121` is the biggest `±127·2^e`
+/// that is still finite in f32, so decode can never overflow to Inf.
+const INT8_MAX_EXP: i32 = 121;
+
+/// Which codec the uplink uses. `None` keeps the literal existing
+/// `Msg::Grads` path, bitwise identical to a build without this module.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum CompressKind {
+    #[default]
+    None,
+    Bf16,
+    Int8,
+    TopK(usize),
+    LowRank(usize),
+}
+
+impl CompressKind {
+    /// Parse the `--compress` CLI grammar:
+    /// `none | bf16 | int8 | topk:<k> | lowrank:<k>` with `k ≥ 1`.
+    pub fn parse(s: &str) -> anyhow::Result<CompressKind> {
+        let s = s.trim();
+        if let Some(k) = s.strip_prefix("topk:") {
+            let k: usize = k.parse()?;
+            anyhow::ensure!(k >= 1, "--compress topk:<k> needs k >= 1");
+            return Ok(CompressKind::TopK(k));
+        }
+        if let Some(k) = s.strip_prefix("lowrank:") {
+            let k: usize = k.parse()?;
+            anyhow::ensure!(k >= 1, "--compress lowrank:<k> needs k >= 1");
+            return Ok(CompressKind::LowRank(k));
+        }
+        match s {
+            "none" => Ok(CompressKind::None),
+            "bf16" => Ok(CompressKind::Bf16),
+            "int8" => Ok(CompressKind::Int8),
+            other => anyhow::bail!(
+                "unknown --compress codec {other:?} \
+                 (expected none|bf16|int8|topk:<k>|lowrank:<k>)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            CompressKind::None => "none".into(),
+            CompressKind::Bf16 => "bf16".into(),
+            CompressKind::Int8 => "int8".into(),
+            CompressKind::TopK(k) => format!("topk:{k}"),
+            CompressKind::LowRank(k) => format!("lowrank:{k}"),
+        }
+    }
+
+    /// Wire codec id (`CompressedGrads.codec`). 0 is reserved for
+    /// `None`, which never appears on the wire.
+    pub fn codec_id(&self) -> u8 {
+        match self {
+            CompressKind::None => 0,
+            CompressKind::Bf16 => 1,
+            CompressKind::Int8 => 2,
+            CompressKind::TopK(_) => 3,
+            CompressKind::LowRank(_) => 4,
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        matches!(self, CompressKind::None)
+    }
+}
+
+/// One compressed gradient set: every tensor of one replica's
+/// contribution for one step, under one codec.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct CompressedGrads {
+    /// [`CompressKind::codec_id`] of the encoder — the orchestrator
+    /// cross-checks it against its configured codec.
+    pub codec: u8,
+    pub tensors: Vec<CompressedTensor>,
+}
+
+/// One tensor's encoding. The element counts of every payload are
+/// derivable from `shape` (+ the codec parameters carried in the
+/// encoding), which is what lets the wire decoder cross-check payload
+/// lengths against the header instead of trusting them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompressedTensor {
+    pub shape: Vec<usize>,
+    pub enc: Encoding,
+}
+
+/// Codec payloads. Buffer layouts are flat and row-major so the wire
+/// format is a direct image of this enum.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Encoding {
+    /// Truncated-mantissa halves, one per element.
+    Bf16 { halves: Vec<u16> },
+    /// Per-bucket scale exponents (`scale = 2^e`) + one i8 per element.
+    Int8 { exps: Vec<i16>, quants: Vec<i8> },
+    /// Per-bucket top-k: globally ascending element indices + raw f32
+    /// values. Per-bucket counts are `min(k, bucket_len)`, derived.
+    TopK { k: u32, idx: Vec<u32>, vals: Vec<f32> },
+    /// Rank-k factors of a matrix tensor: `A ≈ Q·Uᵀ` with `Q (m×k)` and
+    /// `U (n×k)`, row-major.
+    LowRank { k: u32, q: Vec<f32>, u: Vec<f32> },
+}
+
+impl Encoding {
+    /// Wire payload bytes of this encoding (excluding shape headers).
+    pub fn payload_bytes(&self) -> u64 {
+        match self {
+            Encoding::Bf16 { halves } => 2 * halves.len() as u64,
+            Encoding::Int8 { exps, quants } => {
+                2 * exps.len() as u64 + quants.len() as u64
+            }
+            Encoding::TopK { idx, vals, .. } => {
+                4 + 4 * idx.len() as u64 + 4 * vals.len() as u64
+            }
+            Encoding::LowRank { q, u, .. } => {
+                4 + 4 * q.len() as u64 + 4 * u.len() as u64
+            }
+        }
+    }
+}
+
+/// Reused scratch for encode and decode: top-k ordering, the low-rank
+/// matrices and the S-RSI workspace. One instance per encoder/decoder
+/// endpoint; steady state is allocation-free once shapes have been seen.
+pub struct CodecScratch {
+    order: Vec<u32>,
+    amat: Mat,
+    omega: Mat,
+    qmat: Mat,
+    umat: Mat,
+    recon: Mat,
+    srsi: SrsiScratch,
+}
+
+impl CodecScratch {
+    pub fn new() -> CodecScratch {
+        CodecScratch {
+            order: Vec::new(),
+            amat: Mat::empty(),
+            omega: Mat::empty(),
+            qmat: Mat::empty(),
+            umat: Mat::empty(),
+            recon: Mat::empty(),
+            srsi: SrsiScratch::new(),
+        }
+    }
+}
+
+impl Default for CodecScratch {
+    fn default() -> Self {
+        CodecScratch::new()
+    }
+}
+
+/// Exact `2^e` as f32 by bit construction, `e ∈ [−149, 127]`.
+/// Normal range uses the exponent field; `e < −126` lands on the
+/// subnormal with the single mantissa bit at position `e + 149`.
+pub fn pow2(e: i32) -> f32 {
+    debug_assert!((-149..=127).contains(&e), "pow2 exponent {e}");
+    if e >= -126 {
+        f32::from_bits(((e + 127) as u32) << 23)
+    } else {
+        f32::from_bits(1u32 << (e + 149))
+    }
+}
+
+/// Exact `2^e` as f64 for the quantization arithmetic (`e ≥ −1022`
+/// always holds in our range, so this is a normal f64).
+fn pow2_f64(e: i32) -> f64 {
+    debug_assert!((-1022..=1023).contains(&e), "pow2_f64 exponent {e}");
+    f64::from_bits(((e + 1023) as u64) << 52)
+}
+
+/// Smallest `e ∈ [−149, 121]` with `127·2^e ≥ maxabs` (121-cap: see
+/// [`INT8_MAX_EXP`]). All f64 arithmetic below is exact: `maxabs` and
+/// `127·2^e` are both exactly representable.
+fn int8_exp(maxabs: f32) -> i32 {
+    if maxabs == 0.0 {
+        return -149;
+    }
+    let m = maxabs as f64;
+    // first estimate from the exponent field, then fix up; the loops run
+    // O(1) iterations
+    let mut e = (((maxabs.to_bits() >> 23) & 0xff) as i32 - 127 - 7)
+        .clamp(-149, INT8_MAX_EXP);
+    while e > -149 && 127.0 * pow2_f64(e - 1) >= m {
+        e -= 1;
+    }
+    while e < INT8_MAX_EXP && 127.0 * pow2_f64(e) < m {
+        e += 1;
+    }
+    e
+}
+
+fn non_finite_err(ti: usize) -> CommsError {
+    CommsError::Protocol {
+        what: format!(
+            "non-finite element in gradient tensor {ti}: compression \
+             codecs reject NaN/Inf (run the exact path to diagnose)"
+        ),
+    }
+}
+
+fn corrupt(what: String) -> CommsError {
+    CommsError::Corrupt { what }
+}
+
+// Buffer-reuse helpers: move the previous step's payload vectors out of
+// the encoding slot so they can be refilled without reallocating. A
+// variant change (first step, or a tensor switching codec arm) falls
+// back to empty buffers — cold path only.
+
+fn take_bf16(enc: &mut Encoding) -> Vec<u16> {
+    let old = std::mem::replace(enc, Encoding::Bf16 { halves: Vec::with_capacity(0) });
+    match old {
+        Encoding::Bf16 { halves } => halves,
+        _ => Vec::with_capacity(0),
+    }
+}
+
+fn take_int8(enc: &mut Encoding) -> (Vec<i16>, Vec<i8>) {
+    let old = std::mem::replace(enc, Encoding::Bf16 { halves: Vec::with_capacity(0) });
+    match old {
+        Encoding::Int8 { exps, quants } => (exps, quants),
+        _ => (Vec::with_capacity(0), Vec::with_capacity(0)),
+    }
+}
+
+fn take_topk(enc: &mut Encoding) -> (Vec<u32>, Vec<f32>) {
+    let old = std::mem::replace(enc, Encoding::Bf16 { halves: Vec::with_capacity(0) });
+    match old {
+        Encoding::TopK { idx, vals, .. } => (idx, vals),
+        _ => (Vec::with_capacity(0), Vec::with_capacity(0)),
+    }
+}
+
+fn take_lowrank(enc: &mut Encoding) -> (Vec<f32>, Vec<f32>) {
+    let old = std::mem::replace(enc, Encoding::Bf16 { halves: Vec::with_capacity(0) });
+    match old {
+        Encoding::LowRank { q, u, .. } => (q, u),
+        _ => (Vec::with_capacity(0), Vec::with_capacity(0)),
+    }
+}
+
+/// True when the low-rank codec factorizes this shape (matrix with both
+/// sides ≥ 2); everything else falls back to bf16.
+fn lowrank_eligible(shape: &[usize]) -> bool {
+    shape.len() == 2 && shape[0] >= 2 && shape[1] >= 2
+}
+
+/// Encode one replica's gradient tensors under `kind` into `out`,
+/// reusing `out`'s buffers and `scratch` (allocation-free steady state).
+/// `step`/`stream` seed the low-rank sketch, so encoding is a pure
+/// function of `(kind, step, stream, tensors)` — a retry that re-encodes
+/// the same adjusted gradient reproduces the identical frame.
+pub fn encode_grads_into(
+    kind: CompressKind,
+    step: u64,
+    stream: u64,
+    tensors: &[Tensor],
+    out: &mut CompressedGrads,
+    scratch: &mut CodecScratch,
+    pool: &Pool,
+) -> Result<(), CommsError> {
+    if kind.is_none() {
+        return Err(CommsError::Protocol {
+            what: "encode_grads_into called with CompressKind::None".into(),
+        });
+    }
+    out.codec = kind.codec_id();
+    out.tensors.truncate(tensors.len());
+    while out.tensors.len() < tensors.len() {
+        out.tensors.push(CompressedTensor {
+            shape: Vec::with_capacity(4),
+            enc: Encoding::Bf16 { halves: Vec::with_capacity(0) },
+        });
+    }
+    for (ti, t) in tensors.iter().enumerate() {
+        let data = match &t.data {
+            TensorData::F32(v) => v.as_slice(),
+            TensorData::I32(_) => {
+                return Err(CommsError::Protocol {
+                    what: format!("gradient tensor {ti} is not f32"),
+                })
+            }
+        };
+        if data.iter().any(|x| !x.is_finite()) {
+            return Err(non_finite_err(ti));
+        }
+        let ct = &mut out.tensors[ti];
+        ct.shape.clear();
+        ct.shape.extend_from_slice(&t.shape);
+        match kind {
+            CompressKind::None => unreachable!("guarded above"),
+            CompressKind::Bf16 => encode_bf16_into(data, &mut ct.enc),
+            CompressKind::Int8 => encode_int8_into(data, &mut ct.enc),
+            CompressKind::TopK(k) => {
+                encode_topk_into(data, k, &mut ct.enc, scratch)
+            }
+            CompressKind::LowRank(k) => {
+                if lowrank_eligible(&t.shape) {
+                    encode_lowrank_into(
+                        data, &t.shape, k, step, stream, ti, &mut ct.enc,
+                        scratch, pool,
+                    );
+                } else {
+                    encode_bf16_into(data, &mut ct.enc);
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn encode_bf16_into(data: &[f32], enc: &mut Encoding) {
+    let mut halves = take_bf16(enc);
+    halves.clear();
+    halves.reserve(data.len());
+    for &x in data {
+        halves.push((x.to_bits() >> 16) as u16);
+    }
+    *enc = Encoding::Bf16 { halves };
+}
+
+fn encode_int8_into(data: &[f32], enc: &mut Encoding) {
+    let (mut exps, mut quants) = take_int8(enc);
+    exps.clear();
+    quants.clear();
+    exps.reserve(data.len().div_ceil(BUCKET));
+    quants.reserve(data.len());
+    for bucket in data.chunks(BUCKET) {
+        let mut maxabs = 0.0f32;
+        for &x in bucket {
+            maxabs = maxabs.max(x.abs());
+        }
+        let e = int8_exp(maxabs);
+        exps.push(e as i16);
+        let s = pow2_f64(e);
+        for &x in bucket {
+            // f64 division by a power of two is exact (x has ≤ 24
+            // significand bits), so round() is the true nearest integer;
+            // the clamp only binds in the ±127·2^121 saturation regime
+            let q = ((x as f64) / s).round().clamp(-127.0, 127.0);
+            quants.push(q as i8);
+        }
+    }
+    *enc = Encoding::Int8 { exps, quants };
+}
+
+fn encode_topk_into(
+    data: &[f32],
+    k: usize,
+    enc: &mut Encoding,
+    scratch: &mut CodecScratch,
+) {
+    let (mut idx, mut vals) = take_topk(enc);
+    idx.clear();
+    vals.clear();
+    let k = k.max(1);
+    for (bi, bucket) in data.chunks(BUCKET).enumerate() {
+        let base = (bi * BUCKET) as u32;
+        let ord = &mut scratch.order;
+        ord.clear();
+        for i in 0..bucket.len() as u32 {
+            ord.push(i);
+        }
+        // total order: |x| descending, then index ascending — fully
+        // deterministic including ties and signed zeros
+        ord.sort_unstable_by(|&a, &b| {
+            let (xa, xb) = (bucket[a as usize].abs(), bucket[b as usize].abs());
+            xb.total_cmp(&xa).then(a.cmp(&b))
+        });
+        let c = k.min(bucket.len());
+        let sel = &mut ord[..c];
+        sel.sort_unstable();
+        for &i in sel.iter() {
+            idx.push(base + i);
+            vals.push(bucket[i as usize]);
+        }
+    }
+    *enc = Encoding::TopK { k: k as u32, idx, vals };
+}
+
+fn encode_lowrank_into(
+    data: &[f32],
+    shape: &[usize],
+    k: usize,
+    step: u64,
+    stream: u64,
+    ti: usize,
+    enc: &mut Encoding,
+    scratch: &mut CodecScratch,
+    pool: &Pool,
+) {
+    let (m, n) = (shape[0], shape[1]);
+    let kk = k.max(1).min(m).min(n);
+    let kp = (kk + LOWRANK_OVERSAMPLE).min(m).min(n);
+    scratch.amat.reset_for_assign(m, n);
+    scratch.amat.data.copy_from_slice(data);
+    scratch.omega.reset_for_assign(n, kp);
+    let mut rng = Rng::new(
+        0x6772_6164_5f6c_7221
+            ^ step.wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            ^ stream.wrapping_mul(0xc2b2_ae3d_27d4_eb4f)
+            ^ (ti as u64).wrapping_mul(0x1656_67b1_9e37_79f9),
+    );
+    rng.fill_normal_f32(&mut scratch.omega.data);
+    let out = srsi_with_omega_scratch_pooled(
+        &scratch.amat,
+        &scratch.omega,
+        kk,
+        1,
+        &mut scratch.srsi,
+        pool,
+    );
+    let (mut q, mut u) = take_lowrank(enc);
+    q.clear();
+    u.clear();
+    q.extend_from_slice(&out.q.data);
+    u.extend_from_slice(&out.u.data);
+    *enc = Encoding::LowRank { k: kk as u32, q, u };
+}
+
+/// Expected top-k payload count for a tensor: `Σ_buckets min(k, blen)`.
+pub fn topk_count(numel: usize, k: usize) -> usize {
+    let k = k.max(1);
+    let full = numel / BUCKET;
+    let rem = numel % BUCKET;
+    full * k.min(BUCKET) + k.min(rem)
+}
+
+/// Decode one compressed gradient set into plain f32 tensors, reusing
+/// `out`'s buffers and `scratch`. Both the encoder (to compute the
+/// decoded image the residual is measured against) and the orchestrator
+/// run this exact function, so the two sides agree bitwise by
+/// construction. Every payload length is re-validated against the shape
+/// header — a forged count is a typed [`CommsError::Corrupt`], never a
+/// panic or unbounded allocation.
+pub fn decode_grads_into(
+    grads: &CompressedGrads,
+    out: &mut Vec<Tensor>,
+    scratch: &mut CodecScratch,
+) -> Result<(), CommsError> {
+    if !(1..=4).contains(&grads.codec) {
+        return Err(corrupt(format!(
+            "CompressedGrads codec id {} unknown",
+            grads.codec
+        )));
+    }
+    out.truncate(grads.tensors.len());
+    while out.len() < grads.tensors.len() {
+        out.push(empty_tensor());
+    }
+    for (ti, ct) in grads.tensors.iter().enumerate() {
+        let numel = checked_numel(&ct.shape).ok_or_else(|| {
+            corrupt(format!("tensor {ti}: shape {:?} overflows", ct.shape))
+        })?;
+        let slot = &mut out[ti];
+        if slot.shape != ct.shape {
+            *slot = fresh_tensor(&ct.shape);
+        }
+        let buf = match &mut slot.data {
+            TensorData::F32(v) => v,
+            TensorData::I32(_) => {
+                return Err(corrupt(format!("tensor {ti}: non-f32 slot")))
+            }
+        };
+        buf.clear();
+        decode_tensor_into(ti, &ct.shape, numel, &ct.enc, buf, scratch)?;
+    }
+    Ok(())
+}
+
+fn checked_numel(shape: &[usize]) -> Option<usize> {
+    shape.iter().try_fold(1usize, |a, &d| a.checked_mul(d))
+}
+
+// Cold-path constructors (first step / shape change only); deliberately
+// outside the `_into` hot bodies so those stay allocation-token-free.
+fn empty_tensor() -> Tensor {
+    Tensor::f32(vec![0], Vec::new())
+}
+
+fn fresh_tensor(shape: &[usize]) -> Tensor {
+    Tensor::zeros(shape.to_vec())
+}
+
+/// Decode one tensor's encoding into `buf` (cleared by the caller).
+/// All count cross-checks live here.
+fn decode_tensor_into(
+    ti: usize,
+    shape: &[usize],
+    numel: usize,
+    enc: &Encoding,
+    buf: &mut Vec<f32>,
+    scratch: &mut CodecScratch,
+) -> Result<(), CommsError> {
+    match enc {
+        Encoding::Bf16 { halves } => {
+            if halves.len() != numel {
+                return Err(corrupt(format!(
+                    "tensor {ti}: bf16 payload {} elements, shape says {numel}",
+                    halves.len()
+                )));
+            }
+            buf.reserve(numel);
+            for &h in halves {
+                buf.push(f32::from_bits((h as u32) << 16));
+            }
+        }
+        Encoding::Int8 { exps, quants } => {
+            let nb = numel.div_ceil(BUCKET);
+            if exps.len() != nb || quants.len() != numel {
+                return Err(corrupt(format!(
+                    "tensor {ti}: int8 payload {}/{} (exps/quants), shape \
+                     says {nb}/{numel}",
+                    exps.len(),
+                    quants.len()
+                )));
+            }
+            buf.reserve(numel);
+            for (bi, bucket) in quants.chunks(BUCKET).enumerate() {
+                let e = exps[bi] as i32;
+                if !(-149..=INT8_MAX_EXP).contains(&e) {
+                    return Err(corrupt(format!(
+                        "tensor {ti}: int8 bucket {bi} exponent {e} out of \
+                         range"
+                    )));
+                }
+                let s = pow2(e);
+                for &q in bucket {
+                    // |q| ≤ 127 and e ≤ 121, so q·2^e is exact and finite
+                    buf.push(q as f32 * s);
+                }
+            }
+        }
+        Encoding::TopK { k, idx, vals } => {
+            let k = *k as usize;
+            if k == 0 {
+                return Err(corrupt(format!("tensor {ti}: top-k k=0")));
+            }
+            let want = topk_count(numel, k);
+            if idx.len() != want || vals.len() != want {
+                return Err(corrupt(format!(
+                    "tensor {ti}: top-k payload {}/{} (idx/vals), shape+k \
+                     says {want}",
+                    idx.len(),
+                    vals.len()
+                )));
+            }
+            buf.resize(numel, 0.0);
+            let mut pos = 0usize;
+            let nb = numel.div_ceil(BUCKET);
+            for bi in 0..nb {
+                let lo = bi * BUCKET;
+                let hi = (lo + BUCKET).min(numel);
+                let c = k.min(hi - lo);
+                let mut prev: Option<u32> = None;
+                for _ in 0..c {
+                    let i = idx[pos] as usize;
+                    if i < lo || i >= hi {
+                        return Err(corrupt(format!(
+                            "tensor {ti}: top-k index {i} outside bucket \
+                             [{lo}, {hi})"
+                        )));
+                    }
+                    if let Some(p) = prev {
+                        if idx[pos] <= p {
+                            return Err(corrupt(format!(
+                                "tensor {ti}: top-k indices not strictly \
+                                 ascending at {i}"
+                            )));
+                        }
+                    }
+                    prev = Some(idx[pos]);
+                    buf[i] = vals[pos];
+                    pos += 1;
+                }
+            }
+        }
+        Encoding::LowRank { k, q, u } => {
+            if shape.len() != 2 || !lowrank_eligible(shape) {
+                return Err(corrupt(format!(
+                    "tensor {ti}: low-rank encoding on non-matrix shape \
+                     {shape:?}"
+                )));
+            }
+            let (m, n) = (shape[0], shape[1]);
+            let k = *k as usize;
+            if k == 0 || k > m.min(n) {
+                return Err(corrupt(format!(
+                    "tensor {ti}: low-rank k={k} out of range for \
+                     {m}x{n} matrix"
+                )));
+            }
+            let (qn, un) = (m * k, n * k);
+            if q.len() != qn || u.len() != un {
+                return Err(corrupt(format!(
+                    "tensor {ti}: low-rank payload {}/{} (q/u), shape+k \
+                     says {qn}/{un}",
+                    q.len(),
+                    u.len()
+                )));
+            }
+            scratch.qmat.reset_for_assign(m, k);
+            scratch.qmat.data.copy_from_slice(q);
+            scratch.umat.reset_for_assign(n, k);
+            scratch.umat.data.copy_from_slice(u);
+            scratch.recon.reset_for_assign(m, n);
+            // serial reconstruction on both endpoints ⇒ identical floats
+            scratch.qmat.matmul_t_into(&scratch.umat, &mut scratch.recon);
+            buf.extend_from_slice(&scratch.recon.data);
+        }
+    }
+    Ok(())
+}
+
+/// Wire-payload estimate (bytes) for one gradient set of the given
+/// shapes under `kind`, mirroring the actual encodings (headers
+/// excluded). `None` prices the exact f32 path.
+pub fn encoded_bytes_estimate(kind: CompressKind, shapes: &[Vec<usize>]) -> u64 {
+    let mut total = 0u64;
+    for shape in shapes {
+        let n: usize = shape.iter().product();
+        total += match kind {
+            CompressKind::None => 4 * n as u64,
+            CompressKind::Bf16 => 2 * n as u64,
+            CompressKind::Int8 => n as u64 + 2 * n.div_ceil(BUCKET) as u64,
+            CompressKind::TopK(k) => 4 + 8 * topk_count(n, k) as u64,
+            CompressKind::LowRank(k) => {
+                if lowrank_eligible(shape) {
+                    let kk = k.max(1).min(shape[0]).min(shape[1]);
+                    4 + 4 * (kk * (shape[0] + shape[1])) as u64
+                } else {
+                    2 * n as u64
+                }
+            }
+        };
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{forall, usize_in};
+
+    fn encode_one(
+        kind: CompressKind,
+        step: u64,
+        data: Vec<f32>,
+        shape: Vec<usize>,
+    ) -> Result<(CompressedGrads, Vec<Tensor>), CommsError> {
+        let t = Tensor::f32(shape, data);
+        let mut cg = CompressedGrads::default();
+        let mut scratch = CodecScratch::new();
+        let pool = Pool::single();
+        encode_grads_into(
+            kind,
+            step,
+            0,
+            std::slice::from_ref(&t),
+            &mut cg,
+            &mut scratch,
+            &pool,
+        )?;
+        let mut dec = Vec::new();
+        decode_grads_into(&cg, &mut dec, &mut scratch)?;
+        Ok((cg, dec))
+    }
+
+    fn random_data(rng: &mut Rng, n: usize, scale_pow: i32) -> Vec<f32> {
+        let s = pow2(scale_pow);
+        (0..n).map(|_| rng.normal() as f32 * s).collect()
+    }
+
+    #[test]
+    fn pow2_is_exact_everywhere() {
+        for e in -149..=127 {
+            let v = pow2(e);
+            assert!(v > 0.0 && v.is_finite(), "e={e} -> {v}");
+            // against the f64 reference, which is exact in this range
+            assert_eq!(v as f64, pow2_f64(e), "e={e}");
+        }
+        assert_eq!(pow2(-149), f32::from_bits(1));
+        assert_eq!(pow2(0), 1.0);
+        assert_eq!(pow2(-126), f32::MIN_POSITIVE);
+    }
+
+    #[test]
+    fn int8_exp_is_minimal_pow2() {
+        forall(64, |rng| {
+            let e0 = usize_in(rng, 0, 260) as i32 - 140;
+            let maxabs = (rng.uniform().abs() as f32 + 0.5)
+                * pow2(e0.clamp(-149, 120));
+            if !maxabs.is_finite() {
+                return;
+            }
+            let e = int8_exp(maxabs);
+            assert!((-149..=INT8_MAX_EXP).contains(&e));
+            assert!(
+                e == INT8_MAX_EXP
+                    || 127.0 * pow2_f64(e) >= maxabs as f64,
+                "127·2^{e} < {maxabs}"
+            );
+            assert!(
+                e == -149 || 127.0 * pow2_f64(e - 1) < maxabs as f64,
+                "e={e} not minimal for {maxabs}"
+            );
+        });
+    }
+
+    #[test]
+    fn bf16_roundtrip_error_is_relatively_bounded() {
+        forall(32, |rng| {
+            let n = usize_in(rng, 1, 700);
+            let sp = usize_in(rng, 0, 40) as i32 - 20;
+            let data = random_data(rng, n, sp);
+            let (_, dec) =
+                encode_one(CompressKind::Bf16, 1, data.clone(), vec![n])
+                    .unwrap();
+            let d = dec[0].as_f32().unwrap();
+            for (i, (&x, &y)) in data.iter().zip(d).enumerate() {
+                // truncation keeps 7 mantissa bits; subnormal floor 2^-133
+                let bound = (x.abs() * pow2(-7)).max(pow2(-133));
+                assert!(
+                    (x - y).abs() <= bound,
+                    "i={i}: {x} -> {y}, err {} > {bound}",
+                    (x - y).abs()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn int8_roundtrip_error_bounded_by_half_scale() {
+        forall(32, |rng| {
+            let n = usize_in(rng, 1, 3 * BUCKET / 2);
+            let sp = usize_in(rng, 0, 40) as i32 - 20;
+            let data = random_data(rng, n, sp);
+            let (cg, dec) =
+                encode_one(CompressKind::Int8, 1, data.clone(), vec![n])
+                    .unwrap();
+            let Encoding::Int8 { exps, .. } = &cg.tensors[0].enc else {
+                panic!("wrong variant");
+            };
+            let d = dec[0].as_f32().unwrap();
+            for (i, (&x, &y)) in data.iter().zip(d).enumerate() {
+                let e = exps[i / BUCKET] as i32;
+                // round-to-nearest onto the 2^e grid: error ≤ scale/2
+                let bound = pow2_f64(e - 1);
+                assert!(
+                    ((x - y).abs() as f64) <= bound,
+                    "i={i}: {x} -> {y} under scale 2^{e}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn topk_indices_strictly_ascending_in_bounds_and_topk() {
+        forall(32, |rng| {
+            let n = usize_in(rng, 1, 3 * BUCKET / 2);
+            let k = usize_in(rng, 1, 12);
+            let data = random_data(rng, n, 0);
+            let (cg, _) = encode_one(
+                CompressKind::TopK(k),
+                1,
+                data.clone(),
+                vec![n],
+            )
+            .unwrap();
+            let Encoding::TopK { idx, vals, .. } = &cg.tensors[0].enc else {
+                panic!("wrong variant");
+            };
+            assert_eq!(idx.len(), topk_count(n, k));
+            assert_eq!(vals.len(), idx.len());
+            for w in idx.windows(2) {
+                assert!(w[0] < w[1], "indices not strictly ascending");
+            }
+            for (&i, &v) in idx.iter().zip(vals) {
+                assert!((i as usize) < n, "index {i} out of bounds");
+                assert_eq!(v.to_bits(), data[i as usize].to_bits());
+            }
+            // every kept element dominates every dropped one in its bucket
+            let mut kept = vec![false; n];
+            for &i in idx {
+                assert!(!kept[i as usize], "index {i} duplicated");
+                kept[i as usize] = true;
+            }
+            for (bi, bucket) in data.chunks(BUCKET).enumerate() {
+                let lo = bi * BUCKET;
+                let kept_min = bucket
+                    .iter()
+                    .enumerate()
+                    .filter(|(j, _)| kept[lo + j])
+                    .map(|(_, x)| x.abs())
+                    .fold(f32::INFINITY, f32::min);
+                for (j, &x) in bucket.iter().enumerate() {
+                    if !kept[lo + j] {
+                        assert!(
+                            x.abs() <= kept_min,
+                            "dropped {x} bigger than kept min {kept_min}"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn ledger_balances_bitwise_for_exact_codecs() {
+        // decode(encode(x)) + residual == x, bitwise, for every codec
+        // whose decode is exact arithmetic (bf16, int8, topk). −0.0 is
+        // the one IEEE exception (−0 + +0 = +0): value-equal, sign lost.
+        forall(32, |rng| {
+            let n = usize_in(rng, 1, 5000);
+            let sp = usize_in(rng, 0, 60) as i32 - 30;
+            let mut data = random_data(rng, n, sp);
+            // sprinkle exact zeros and subnormals
+            if n > 2 {
+                data[0] = 0.0;
+                data[1] = f32::from_bits(usize_in(rng, 1, 100) as u32);
+            }
+            for kind in [
+                CompressKind::Bf16,
+                CompressKind::Int8,
+                CompressKind::TopK(7),
+            ] {
+                let (_, dec) =
+                    encode_one(kind, 3, data.clone(), vec![n]).unwrap();
+                let d = dec[0].as_f32().unwrap();
+                for (&x, &y) in data.iter().zip(d) {
+                    let residual = x - y;
+                    let back = y + residual;
+                    if x == 0.0 {
+                        assert_eq!(back, 0.0, "{kind:?}");
+                    } else {
+                        assert_eq!(
+                            back.to_bits(),
+                            x.to_bits(),
+                            "{kind:?}: ledger broke at x={x}, dec={y}"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn ledger_is_ulp_bounded_for_lowrank() {
+        forall(16, |rng| {
+            let m = usize_in(rng, 2, 24);
+            let n = usize_in(rng, 2, 24);
+            let data = random_data(rng, m * n, 0);
+            let (_, dec) = encode_one(
+                CompressKind::LowRank(4),
+                5,
+                data.clone(),
+                vec![m, n],
+            )
+            .unwrap();
+            let d = dec[0].as_f32().unwrap();
+            for (&x, &y) in data.iter().zip(d) {
+                let residual = x - y;
+                let back = y + residual;
+                // one rounding in x−y, one in y+(x−y)
+                let tol = 2.0 * (x.abs() + y.abs()) * f32::EPSILON
+                    + f32::MIN_POSITIVE;
+                assert!(
+                    (back - x).abs() <= tol,
+                    "lowrank ledger drift {} > {tol}",
+                    (back - x).abs()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn non_finite_inputs_are_typed_errors() {
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            for kind in [
+                CompressKind::Bf16,
+                CompressKind::Int8,
+                CompressKind::TopK(2),
+                CompressKind::LowRank(2),
+            ] {
+                let err = encode_one(kind, 1, vec![1.0, bad, 2.0], vec![3])
+                    .unwrap_err();
+                assert!(
+                    matches!(err, CommsError::Protocol { .. }),
+                    "{kind:?} x={bad}: {err}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn subnormals_propagate_exactly() {
+        let subs: Vec<f32> = (1..40u32)
+            .map(f32::from_bits)
+            .chain((1..40u32).map(|b| f32::from_bits(b | 0x8000_0000)))
+            .collect();
+        let n = subs.len();
+        for kind in [CompressKind::Bf16, CompressKind::Int8] {
+            let (_, dec) =
+                encode_one(kind, 1, subs.clone(), vec![n]).unwrap();
+            let d = dec[0].as_f32().unwrap();
+            for (&x, &y) in subs.iter().zip(d) {
+                let back = y + (x - y);
+                assert_eq!(back, x, "{kind:?} subnormal {x:e}");
+            }
+        }
+        // topk ships raw bits: kept subnormals are bitwise identical
+        let (cg, _) = encode_one(
+            CompressKind::TopK(n),
+            1,
+            subs.clone(),
+            vec![n],
+        )
+        .unwrap();
+        let Encoding::TopK { idx, vals, .. } = &cg.tensors[0].enc else {
+            panic!("wrong variant");
+        };
+        for (&i, &v) in idx.iter().zip(vals) {
+            assert_eq!(v.to_bits(), subs[i as usize].to_bits());
+        }
+    }
+
+    #[test]
+    fn int8_saturates_finite_near_f32_max() {
+        let data = vec![f32::MAX, -f32::MAX, 1.0, f32::MAX * 0.999];
+        let (_, dec) =
+            encode_one(CompressKind::Int8, 1, data.clone(), vec![4]).unwrap();
+        let d = dec[0].as_f32().unwrap();
+        for (&x, &y) in data.iter().zip(d) {
+            assert!(y.is_finite(), "decode overflowed: {x} -> {y}");
+            let back = y + (x - y);
+            assert_eq!(back.to_bits(), x.to_bits(), "saturation ledger");
+        }
+    }
+
+    #[test]
+    fn encoding_is_deterministic_and_thread_invariant() {
+        let mut rng = Rng::new(77);
+        let t = Tensor::f32(vec![12, 9], rng.normal_vec_f32(108));
+        let pool1 = Pool::single();
+        let pool4 = Pool::new(4);
+        for kind in [
+            CompressKind::Bf16,
+            CompressKind::Int8,
+            CompressKind::TopK(3),
+            CompressKind::LowRank(3),
+        ] {
+            let mut a = CompressedGrads::default();
+            let mut b = CompressedGrads::default();
+            let mut s1 = CodecScratch::new();
+            let mut s2 = CodecScratch::new();
+            encode_grads_into(kind, 9, 1, std::slice::from_ref(&t), &mut a, &mut s1, &pool1)
+                .unwrap();
+            encode_grads_into(kind, 9, 1, std::slice::from_ref(&t), &mut b, &mut s2, &pool4)
+                .unwrap();
+            assert_eq!(a, b, "{kind:?} not deterministic across pools");
+        }
+    }
+
+    #[test]
+    fn lowrank_recovers_low_rank_matrices_and_vectors_fall_back() {
+        // rank-2 matrix: a rank-4 codec must reconstruct it near-exactly
+        let (m, n) = (16, 11);
+        let mut rng = Rng::new(5);
+        let a = Mat::randn(m, 2, &mut rng);
+        let b = Mat::randn(n, 2, &mut rng);
+        let prod = a.matmul_t(&b);
+        let (cg, dec) = encode_one(
+            CompressKind::LowRank(4),
+            2,
+            prod.data.clone(),
+            vec![m, n],
+        )
+        .unwrap();
+        assert!(matches!(cg.tensors[0].enc, Encoding::LowRank { .. }));
+        let d = dec[0].as_f32().unwrap();
+        let num: f64 = prod
+            .data
+            .iter()
+            .zip(d)
+            .map(|(&x, &y)| ((x - y) as f64).powi(2))
+            .sum();
+        let den: f64 =
+            prod.data.iter().map(|&x| (x as f64).powi(2)).sum();
+        assert!(
+            num.sqrt() <= 1e-3 * den.sqrt(),
+            "rank-2 matrix not recovered: rel err {}",
+            num.sqrt() / den.sqrt()
+        );
+        // vectors fall back to bf16
+        let (cg, _) = encode_one(
+            CompressKind::LowRank(4),
+            2,
+            vec![1.0, 2.0, 3.0],
+            vec![3],
+        )
+        .unwrap();
+        assert!(matches!(cg.tensors[0].enc, Encoding::Bf16 { .. }));
+    }
+
+    #[test]
+    fn forged_counts_are_typed_errors_not_panics() {
+        let mut scratch = CodecScratch::new();
+        let mut out = Vec::new();
+        let cases: Vec<CompressedGrads> = vec![
+            // bf16 payload shorter than the shape
+            CompressedGrads {
+                codec: 1,
+                tensors: vec![CompressedTensor {
+                    shape: vec![4],
+                    enc: Encoding::Bf16 { halves: vec![0; 3] },
+                }],
+            },
+            // int8 bucket-count forged
+            CompressedGrads {
+                codec: 2,
+                tensors: vec![CompressedTensor {
+                    shape: vec![10],
+                    enc: Encoding::Int8 {
+                        exps: vec![0, 0],
+                        quants: vec![1; 10],
+                    },
+                }],
+            },
+            // int8 exponent out of range
+            CompressedGrads {
+                codec: 2,
+                tensors: vec![CompressedTensor {
+                    shape: vec![2],
+                    enc: Encoding::Int8 {
+                        exps: vec![300],
+                        quants: vec![1, 2],
+                    },
+                }],
+            },
+            // top-k k forged huge vs payload
+            CompressedGrads {
+                codec: 3,
+                tensors: vec![CompressedTensor {
+                    shape: vec![100],
+                    enc: Encoding::TopK {
+                        k: u32::MAX,
+                        idx: vec![0],
+                        vals: vec![1.0],
+                    },
+                }],
+            },
+            // top-k duplicate index
+            CompressedGrads {
+                codec: 3,
+                tensors: vec![CompressedTensor {
+                    shape: vec![100],
+                    enc: Encoding::TopK {
+                        k: 2,
+                        idx: vec![5, 5],
+                        vals: vec![1.0, 2.0],
+                    },
+                }],
+            },
+            // top-k index out of bucket
+            CompressedGrads {
+                codec: 3,
+                tensors: vec![CompressedTensor {
+                    shape: vec![3],
+                    enc: Encoding::TopK {
+                        k: 3,
+                        idx: vec![0, 1, 7],
+                        vals: vec![1.0, 2.0, 3.0],
+                    },
+                }],
+            },
+            // low-rank k exceeding min(m, n)
+            CompressedGrads {
+                codec: 4,
+                tensors: vec![CompressedTensor {
+                    shape: vec![4, 3],
+                    enc: Encoding::LowRank {
+                        k: 9,
+                        q: vec![0.0; 36],
+                        u: vec![0.0; 27],
+                    },
+                }],
+            },
+            // low-rank on a vector shape
+            CompressedGrads {
+                codec: 4,
+                tensors: vec![CompressedTensor {
+                    shape: vec![6],
+                    enc: Encoding::LowRank {
+                        k: 1,
+                        q: vec![0.0; 6],
+                        u: vec![0.0; 1],
+                    },
+                }],
+            },
+            // unknown codec id
+            CompressedGrads { codec: 9, tensors: vec![] },
+        ];
+        for (i, cg) in cases.iter().enumerate() {
+            let err = decode_grads_into(cg, &mut out, &mut scratch)
+                .unwrap_err();
+            assert!(
+                matches!(err, CommsError::Corrupt { .. }),
+                "case {i}: expected Corrupt, got {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn estimate_matches_actual_payload_bytes() {
+        let mut rng = Rng::new(31);
+        let shapes = vec![vec![33, 17], vec![4099], vec![7]];
+        let tensors: Vec<Tensor> = shapes
+            .iter()
+            .map(|s| {
+                let n = s.iter().product();
+                Tensor::f32(s.clone(), rng.normal_vec_f32(n))
+            })
+            .collect();
+        let pool = Pool::single();
+        for kind in [
+            CompressKind::Bf16,
+            CompressKind::Int8,
+            CompressKind::TopK(5),
+            CompressKind::LowRank(3),
+        ] {
+            let mut cg = CompressedGrads::default();
+            let mut scratch = CodecScratch::new();
+            encode_grads_into(kind, 1, 0, &tensors, &mut cg, &mut scratch, &pool)
+                .unwrap();
+            let actual: u64 =
+                cg.tensors.iter().map(|t| t.enc.payload_bytes()).sum();
+            assert_eq!(
+                actual,
+                encoded_bytes_estimate(kind, &shapes),
+                "{kind:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn parse_grammar_roundtrips_and_rejects() {
+        assert_eq!(CompressKind::parse("none").unwrap(), CompressKind::None);
+        assert_eq!(CompressKind::parse("bf16").unwrap(), CompressKind::Bf16);
+        assert_eq!(CompressKind::parse("int8").unwrap(), CompressKind::Int8);
+        assert_eq!(
+            CompressKind::parse("topk:8").unwrap(),
+            CompressKind::TopK(8)
+        );
+        assert_eq!(
+            CompressKind::parse("lowrank:4").unwrap(),
+            CompressKind::LowRank(4)
+        );
+        for kind in [
+            CompressKind::None,
+            CompressKind::Bf16,
+            CompressKind::Int8,
+            CompressKind::TopK(16),
+            CompressKind::LowRank(2),
+        ] {
+            assert_eq!(CompressKind::parse(&kind.name()).unwrap(), kind);
+        }
+        for bad in ["topk:0", "lowrank:0", "topk:", "fp8", "lowrank:-1"] {
+            assert!(CompressKind::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn steady_state_reuses_buffers() {
+        // second encode of the same shapes must not grow capacity
+        let mut rng = Rng::new(13);
+        let t = Tensor::f32(vec![300], rng.normal_vec_f32(300));
+        let mut cg = CompressedGrads::default();
+        let mut scratch = CodecScratch::new();
+        let pool = Pool::single();
+        for kind in [CompressKind::Int8, CompressKind::TopK(4)] {
+            encode_grads_into(kind, 1, 0, std::slice::from_ref(&t), &mut cg, &mut scratch, &pool)
+                .unwrap();
+            let cap_before = match &cg.tensors[0].enc {
+                Encoding::Int8 { quants, .. } => quants.capacity(),
+                Encoding::TopK { idx, .. } => idx.capacity(),
+                _ => 0,
+            };
+            encode_grads_into(kind, 2, 0, std::slice::from_ref(&t), &mut cg, &mut scratch, &pool)
+                .unwrap();
+            let cap_after = match &cg.tensors[0].enc {
+                Encoding::Int8 { quants, .. } => quants.capacity(),
+                Encoding::TopK { idx, .. } => idx.capacity(),
+                _ => 1,
+            };
+            assert_eq!(cap_before, cap_after, "{kind:?} reallocated");
+        }
+    }
+}

@@ -14,6 +14,9 @@
 //! - [`FaultKind::Delay`]: the op completes after an extra sleep.
 //! - [`FaultKind::Duplicate`]: the frame is delivered twice.
 //! - [`FaultKind::Corrupt`]: one payload byte is flipped in flight.
+//! - [`FaultKind::Truncate`]: only half the frame makes it through, but
+//!   the pipe survives — the framer rejects the torn frame and the
+//!   caller's retry path re-sends over the same connection.
 //! - [`FaultKind::Disconnect`]: the peer "crashes" mid-message — half a
 //!   frame escapes, then the pipe is permanently dead.
 
@@ -30,14 +33,16 @@ pub enum FaultKind {
     Delay,
     Duplicate,
     Corrupt,
+    Truncate,
     Disconnect,
 }
 
-const ALL_KINDS: [FaultKind; 5] = [
+const ALL_KINDS: [FaultKind; 6] = [
     FaultKind::Drop,
     FaultKind::Delay,
     FaultKind::Duplicate,
     FaultKind::Corrupt,
+    FaultKind::Truncate,
     FaultKind::Disconnect,
 ];
 
@@ -159,6 +164,12 @@ impl Pipe for FaultPipe {
                 self.inner.send(frame)
             }
             Some(FaultKind::Corrupt) => self.inner.send(&corrupt(frame)),
+            Some(FaultKind::Truncate) => {
+                // half the frame goes out, but the wire stays up: the
+                // framer's length/checksum check rejects the torn frame
+                // and a retry over this same pipe succeeds
+                self.inner.send(&frame[..frame.len() / 2])
+            }
             Some(FaultKind::Disconnect) => {
                 // crash mid-message: half the frame escapes, then silence
                 let _ = self.inner.send(&frame[..frame.len() / 2]);
@@ -200,6 +211,10 @@ impl Pipe for FaultPipe {
             }
             Some(FaultKind::Corrupt) => {
                 Ok(corrupt(&self.inner.recv(timeout)?))
+            }
+            Some(FaultKind::Truncate) => {
+                let frame = self.inner.recv(timeout)?;
+                Ok(frame[..frame.len() / 2].to_vec())
             }
             Some(FaultKind::Disconnect) => {
                 self.dead = true;
@@ -264,6 +279,20 @@ mod tests {
         let wire = b.recv(T).unwrap();
         let err = decode_frame(&wire).unwrap_err();
         assert!(matches!(err, CommsError::Corrupt { .. }), "{err}");
+    }
+
+    #[test]
+    fn truncate_tears_one_frame_but_pipe_survives() {
+        let (mut a, mut b) =
+            faulty_pair(FaultPlan::none().on_send(0, FaultKind::Truncate));
+        let frame = encode_frame(b"compressed gradients").unwrap();
+        a.send(&frame).unwrap(); // send "succeeds", half a frame escapes
+        let torn = b.recv(T).unwrap();
+        assert_eq!(torn.len(), frame.len() / 2);
+        assert!(decode_frame(&torn).is_err());
+        // unlike Disconnect, the pipe is still usable: a retry goes through
+        a.send(&frame).unwrap();
+        assert_eq!(b.recv(T).unwrap(), frame);
     }
 
     #[test]

@@ -22,6 +22,7 @@
 use std::ops::Range;
 use std::time::{Duration, Instant};
 
+use super::compress::{decode_grads_into, CodecScratch, CompressKind};
 use super::transport::Transport;
 use super::wire::Msg;
 use super::CommsError;
@@ -62,6 +63,35 @@ fn regroup(
         .collect())
 }
 
+/// Shared phase-B acceptance rule: the `Reduced` for our step is the
+/// answer, stale collective replies are drained silently, an `Abort` is a
+/// typed protocol failure. Used by both the exact and the compressed
+/// reduce — the reply side of the protocol is identical.
+fn accept_reduced(
+    step: u64,
+    msg: Msg,
+) -> Result<Option<Vec<Vec<Tensor>>>, CommsError> {
+    match msg {
+        Msg::Reduced { step: s, groups, tensors } if s == step => {
+            regroup(&groups, tensors).map(Some)
+        }
+        Msg::Reduced { step: s, .. } if s < step => Ok(None),
+        // gathers are numbered by the trainer's own gather sequence — a
+        // different number space — so any Gathered here is a stale
+        // leftover, whatever its number says
+        Msg::Gathered { .. } => Ok(None),
+        Msg::Abort { step: s, reason } => Err(CommsError::Protocol {
+            what: format!("orchestrator aborted step {s}: {reason}"),
+        }),
+        other => Err(CommsError::Protocol {
+            what: format!(
+                "unexpected {} while awaiting Reduced for step {step}",
+                other.kind()
+            ),
+        }),
+    }
+}
+
 // ---------------------------------------------------------------- worker
 
 /// Client endpoint for one data-parallel rank.
@@ -89,12 +119,23 @@ impl WorkerHandle {
     }
 
     /// Phase A of the reduce collective: contribute this rank's grads.
+    /// Returns the serialized message size (bytes on the wire before
+    /// framing), for the trainer's wire accounting.
     pub fn send_grads(
         &mut self,
         step: u64,
         grads: &[Tensor],
-    ) -> Result<(), CommsError> {
-        self.transport.send(&Msg::grads_bytes(self.rank, step, grads))
+    ) -> Result<usize, CommsError> {
+        let bytes = Msg::grads_bytes(self.rank, step, grads);
+        self.transport.send(&bytes)?;
+        Ok(bytes.len())
+    }
+
+    /// Phase A for the compressed path: contribute a pre-serialized
+    /// `Msg::CompressedGrads` frame. The caller keeps the bytes so every
+    /// retry re-sends the identical frame.
+    pub fn send_frame(&mut self, frame: &[u8]) -> Result<(), CommsError> {
+        self.transport.send(frame)
     }
 
     /// Phase B: await the reduced shards for `step`, re-sending our grads
@@ -109,30 +150,23 @@ impl WorkerHandle {
         self.await_reply(
             "recv_reduced",
             |t| t.send(&Msg::grads_bytes(rank, step, grads)),
-            |msg| match msg {
-                Msg::Reduced { step: s, groups, tensors } if s == step => {
-                    regroup(&groups, tensors).map(Some)
-                }
-                Msg::Reduced { step: s, .. } if s < step => Ok(None),
-                // gathers are numbered by the trainer's own gather
-                // sequence — a different number space — so any Gathered
-                // here is a stale leftover, whatever its number says
-                Msg::Gathered { .. } => Ok(None),
-                Msg::Abort { step: s, reason } => {
-                    Err(CommsError::Protocol {
-                        what: format!(
-                            "orchestrator aborted step {s}: {reason}"
-                        ),
-                    })
-                }
-                other => Err(CommsError::Protocol {
-                    what: format!(
-                        "unexpected {} while awaiting Reduced for step \
-                         {step}",
-                        other.kind()
-                    ),
-                }),
-            },
+            |msg| accept_reduced(step, msg),
+        )
+    }
+
+    /// Phase B for the compressed path: await the reduced shards,
+    /// re-sending the *stored frame bytes* on transient failure. The
+    /// resend is bit-identical to the original contribution — the
+    /// orchestrator dedups it and error feedback is never double-applied.
+    pub fn recv_reduced_frame(
+        &mut self,
+        step: u64,
+        frame: &[u8],
+    ) -> Result<Vec<Vec<Tensor>>, CommsError> {
+        self.await_reply(
+            "recv_reduced",
+            |t| t.send(frame),
+            |msg| accept_reduced(step, msg),
         )
     }
 
@@ -247,6 +281,8 @@ impl WorkerHandle {
 pub struct Orchestrator {
     conns: Vec<Option<Box<dyn Transport>>>,
     mode: ReduceMode,
+    compress: CompressKind,
+    dec_scratch: CodecScratch,
     pool: Pool,
     poll: Duration,
     idle_budget: Duration,
@@ -256,6 +292,7 @@ impl Orchestrator {
     pub fn new(
         conns: Vec<Box<dyn Transport>>,
         mode: ReduceMode,
+        compress: CompressKind,
         threads: usize,
         poll: Duration,
         idle_budget: Duration,
@@ -263,6 +300,8 @@ impl Orchestrator {
         Orchestrator {
             conns: conns.into_iter().map(Some).collect(),
             mode,
+            compress,
+            dec_scratch: CodecScratch::new(),
             pool: Pool::new(threads),
             poll: poll.max(Duration::from_millis(1)),
             idle_budget,
@@ -335,82 +374,65 @@ impl Orchestrator {
                         continue;
                     }
                 };
-                match msg {
+                // Both gradient-bearing messages funnel into one
+                // accumulation path below: `contribution` holds
+                // (rank, step, tensors) once the payload is validated —
+                // and, for compressed frames, decoded. Accumulating
+                // decoded tensors in the same ascending-rank protocol
+                // keeps the reduction deterministic for a fixed codec.
+                let contribution = match msg {
                     Msg::Shutdown { rank: r } => {
                         if (r as usize) < n {
                             shut[r as usize] = true;
                         }
+                        None
                     }
                     Msg::Grads { rank: r, step, tensors } => {
-                        let r = r as usize;
-                        if r >= n {
-                            continue;
+                        if !self.compress.is_none() {
+                            return self.abort(
+                                step,
+                                &format!(
+                                    "rank {r} sent exact gradients but \
+                                     the cluster is configured for \
+                                     --compress {}",
+                                    self.compress.name()
+                                ),
+                                &shut,
+                            );
                         }
-                        if let Some((s, cached)) = &reduce_cache {
-                            if *s == step {
-                                // this rank's reply was lost: re-serve it
-                                let cached = cached.clone();
-                                self.send_to(r, &cached);
-                                continue;
-                            }
+                        Some((r as usize, step, tensors))
+                    }
+                    Msg::CompressedGrads { rank: r, step, grads: cg } => {
+                        if self.compress.is_none()
+                            || cg.codec != self.compress.codec_id()
+                        {
+                            return self.abort(
+                                step,
+                                &format!(
+                                    "rank {r} sent codec id {} but the \
+                                     cluster is configured for \
+                                     --compress {}",
+                                    cg.codec,
+                                    self.compress.name()
+                                ),
+                                &shut,
+                            );
                         }
-                        match cur {
-                            Some(s) if step == s => {
-                                if grads[r].is_none() {
-                                    grads[r] = Some(tensors);
-                                } // else: duplicate frame, already have it
-                            }
-                            Some(s) if step < s => {} // stale, drop
-                            _ => {
-                                // first contribution of a new step
-                                for g in grads.iter_mut() {
-                                    *g = None;
-                                }
-                                cur = Some(step);
-                                grads[r] = Some(tensors);
-                            }
-                        }
-                        if grads.iter().all(|g| g.is_some()) {
-                            let Some(cstep) = cur.take() else {
-                                return self.abort(
-                                    step,
-                                    "internal: complete gradient set \
-                                     with no current step",
-                                    &shut,
+                        let mut tensors = Vec::new();
+                        match decode_grads_into(
+                            &cg,
+                            &mut tensors,
+                            &mut self.dec_scratch,
+                        ) {
+                            Ok(()) => Some((r as usize, step, tensors)),
+                            Err(e) => {
+                                // bad frame: the worker's bounded retry
+                                // loop re-sends the identical bytes
+                                debug!(
+                                    "comms orchestrator: rank {rank}: \
+                                     bad compressed frame: {e}"
                                 );
-                            };
-                            let mut per_replica: Vec<Vec<Tensor>> =
-                                Vec::with_capacity(n);
-                            for g in grads.iter_mut() {
-                                match g.take() {
-                                    Some(t) => per_replica.push(t),
-                                    None => {
-                                        return self.abort(
-                                            cstep,
-                                            "internal: gradient slot \
-                                             emptied mid-collection",
-                                            &shut,
-                                        )
-                                    }
-                                }
-                            }
-                            let reply = match self.reduce(&per_replica) {
-                                Ok(owned) => {
-                                    Msg::reduced_bytes(cstep, &owned)
-                                }
-                                Err(e) => {
-                                    return self.abort(
-                                        cstep,
-                                        &format!("reduce failed: {e}"),
-                                        &shut,
-                                    )
-                                }
-                            };
-                            reduce_cache = Some((cstep, reply.clone()));
-                            for r2 in 0..n {
-                                if !shut[r2] {
-                                    self.send_to(r2, &reply);
-                                }
+                                None
                             }
                         }
                     }
@@ -448,11 +470,83 @@ impl Orchestrator {
                         };
                         gather_cache = Some((step, reply.clone()));
                         self.send_to(r, &reply);
+                        None
                     }
                     // workers never send these; drop silently
                     Msg::Reduced { .. }
                     | Msg::Gathered { .. }
-                    | Msg::Abort { .. } => {}
+                    | Msg::Abort { .. } => None,
+                };
+                let Some((r, step, tensors)) = contribution else {
+                    continue;
+                };
+                if r >= n {
+                    continue;
+                }
+                if let Some((s, cached)) = &reduce_cache {
+                    if *s == step {
+                        // this rank's reply was lost: re-serve it
+                        let cached = cached.clone();
+                        self.send_to(r, &cached);
+                        continue;
+                    }
+                }
+                match cur {
+                    Some(s) if step == s => {
+                        if grads[r].is_none() {
+                            grads[r] = Some(tensors);
+                        } // else: duplicate frame, already have it
+                    }
+                    Some(s) if step < s => {} // stale, drop
+                    _ => {
+                        // first contribution of a new step
+                        for g in grads.iter_mut() {
+                            *g = None;
+                        }
+                        cur = Some(step);
+                        grads[r] = Some(tensors);
+                    }
+                }
+                if grads.iter().all(|g| g.is_some()) {
+                    let Some(cstep) = cur.take() else {
+                        return self.abort(
+                            step,
+                            "internal: complete gradient set with no \
+                             current step",
+                            &shut,
+                        );
+                    };
+                    let mut per_replica: Vec<Vec<Tensor>> =
+                        Vec::with_capacity(n);
+                    for g in grads.iter_mut() {
+                        match g.take() {
+                            Some(t) => per_replica.push(t),
+                            None => {
+                                return self.abort(
+                                    cstep,
+                                    "internal: gradient slot emptied \
+                                     mid-collection",
+                                    &shut,
+                                )
+                            }
+                        }
+                    }
+                    let reply = match self.reduce(&per_replica) {
+                        Ok(owned) => Msg::reduced_bytes(cstep, &owned),
+                        Err(e) => {
+                            return self.abort(
+                                cstep,
+                                &format!("reduce failed: {e}"),
+                                &shut,
+                            )
+                        }
+                    };
+                    reduce_cache = Some((cstep, reply.clone()));
+                    for r2 in 0..n {
+                        if !shut[r2] {
+                            self.send_to(r2, &reply);
+                        }
+                    }
                 }
             }
             if last_activity.elapsed() > self.idle_budget {
@@ -579,6 +673,7 @@ mod tests {
         let orch = Orchestrator::new(
             conns,
             ReduceMode::AllReduce,
+            CompressKind::None,
             1,
             Duration::from_millis(2),
             Duration::from_secs(5),
@@ -613,6 +708,7 @@ mod tests {
         let orch = Orchestrator::new(
             conns,
             ReduceMode::AllReduce,
+            CompressKind::None,
             1,
             Duration::from_millis(2),
             Duration::from_secs(5),
@@ -650,6 +746,7 @@ mod tests {
         let orch = Orchestrator::new(
             conns,
             ReduceMode::AllReduce,
+            CompressKind::None,
             1,
             Duration::from_millis(2),
             Duration::from_secs(5),
@@ -668,6 +765,7 @@ mod tests {
         let orch = Orchestrator::new(
             conns,
             ReduceMode::AllReduce,
+            CompressKind::None,
             1,
             Duration::from_millis(2),
             Duration::from_millis(300), // short idle budget: rank 1 is gone
@@ -692,6 +790,86 @@ mod tests {
             ),
             "{err}"
         );
+        assert!(server.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn compressed_roundtrip_matches_local_decode() {
+        use super::super::compress::encode_grads_into;
+
+        let (mut workers, conns) = endpoints(2);
+        let orch = Orchestrator::new(
+            conns,
+            ReduceMode::AllReduce,
+            CompressKind::Int8,
+            1,
+            Duration::from_millis(2),
+            Duration::from_secs(5),
+        );
+        let server = thread::spawn(move || orch.run());
+
+        let per: Vec<Vec<Tensor>> = (0..2).map(grads_for).collect();
+        let pool = Pool::new(1);
+        let mut scratch = CodecScratch::new();
+        let mut frames = Vec::new();
+        let mut decoded: Vec<Vec<Tensor>> = Vec::new();
+        for (r, grads) in per.iter().enumerate() {
+            let mut cg = Default::default();
+            encode_grads_into(
+                CompressKind::Int8,
+                1,
+                r as u64,
+                grads,
+                &mut cg,
+                &mut scratch,
+                &pool,
+            )
+            .unwrap();
+            let mut dec = Vec::new();
+            decode_grads_into(&cg, &mut dec, &mut scratch).unwrap();
+            decoded.push(dec);
+            frames.push(Msg::compressed_grads_bytes(r as u32, 1, &cg));
+        }
+        for (r, w) in workers.iter_mut().enumerate() {
+            w.send_frame(&frames[r]).unwrap();
+        }
+        let replies: Vec<Vec<Vec<Tensor>>> = workers
+            .iter_mut()
+            .enumerate()
+            .map(|(r, w)| w.recv_reduced_frame(1, &frames[r]).unwrap())
+            .collect();
+
+        // the orchestrator averages exactly what the codec decodes to
+        let mut want = Vec::new();
+        allreduce_mean_into(&decoded, &mut want, &Pool::new(1)).unwrap();
+        for reply in &replies {
+            assert_eq!(reply.len(), 1);
+            assert_eq!(reply[0], want);
+        }
+        for w in workers.iter_mut() {
+            w.shutdown();
+        }
+        server.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn codec_mismatch_aborts_with_typed_error() {
+        let (mut workers, conns) = endpoints(1);
+        let orch = Orchestrator::new(
+            conns,
+            ReduceMode::AllReduce,
+            CompressKind::Bf16,
+            1,
+            Duration::from_millis(2),
+            Duration::from_secs(5),
+        );
+        let server = thread::spawn(move || orch.run());
+
+        // exact gradients into a compressed cluster: typed abort, no hang
+        let per = grads_for(0);
+        workers[0].send_grads(1, &per).unwrap();
+        let err = workers[0].recv_reduced(1, &per).unwrap_err();
+        assert!(matches!(err, CommsError::Protocol { .. }), "{err}");
         assert!(server.join().unwrap().is_err());
     }
 }

@@ -29,6 +29,7 @@
 //! thread-multiplexed path (asserted in `tests/train_e2e.rs`).
 
 pub mod cluster;
+pub mod compress;
 pub mod fault;
 pub mod framer;
 pub mod handles;
@@ -37,6 +38,9 @@ pub mod transport;
 pub mod wire;
 
 pub use cluster::{Cluster, CommsOptions, TransportKind};
+pub use compress::{decode_grads_into, encode_grads_into,
+                   encoded_bytes_estimate, CodecScratch, CompressKind,
+                   CompressedGrads, CompressedTensor, Encoding};
 pub use fault::{FaultKind, FaultPipe, FaultPlan};
 pub use framer::{decode_frame, encode_frame, FRAME_HEADER_BYTES,
                  MAX_PAYLOAD_BYTES};

@@ -10,6 +10,8 @@
 //! checksum below has already caught wire corruption; this layer guards
 //! against protocol bugs and torn frames).
 
+use super::compress::{topk_count, CompressedGrads, CompressedTensor,
+                      Encoding, BUCKET};
 use super::CommsError;
 use crate::runtime::tensor::{Tensor, TensorData};
 
@@ -38,6 +40,11 @@ pub enum Msg {
     Shutdown { rank: u32 },
     /// The collective at `step` cannot complete; workers must bail out.
     Abort { step: u64, reason: String },
+    /// Worker `rank`'s gradients for `step`, compressed by one of the
+    /// `comms::compress` codecs. Every payload element count is derived
+    /// from the shape header (+ the codec's `k`), never trusted from the
+    /// wire — see [`decode_compressed`].
+    CompressedGrads { rank: u32, step: u64, grads: CompressedGrads },
 }
 
 const TAG_GRADS: u8 = 1;
@@ -46,6 +53,12 @@ const TAG_GATHER_REQ: u8 = 3;
 const TAG_GATHERED: u8 = 4;
 const TAG_SHUTDOWN: u8 = 5;
 const TAG_ABORT: u8 = 6;
+const TAG_COMPRESSED: u8 = 7;
+
+const ENC_BF16: u8 = 0;
+const ENC_INT8: u8 = 1;
+const ENC_TOPK: u8 = 2;
+const ENC_LOWRANK: u8 = 3;
 
 impl Msg {
     /// Short name for logs and error messages.
@@ -57,6 +70,7 @@ impl Msg {
             Msg::Gathered { .. } => "Gathered",
             Msg::Shutdown { .. } => "Shutdown",
             Msg::Abort { .. } => "Abort",
+            Msg::CompressedGrads { .. } => "CompressedGrads",
         }
     }
 
@@ -103,6 +117,12 @@ impl Msg {
                 let bytes = reason.as_bytes();
                 b.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
                 b.extend_from_slice(bytes);
+            }
+            Msg::CompressedGrads { rank, step, grads } => {
+                b.push(TAG_COMPRESSED);
+                b.extend_from_slice(&rank.to_le_bytes());
+                b.extend_from_slice(&step.to_le_bytes());
+                encode_compressed(&mut b, grads);
             }
         }
         b
@@ -157,6 +177,11 @@ impl Msg {
                 let reason = String::from_utf8_lossy(raw).into_owned();
                 Msg::Abort { step, reason }
             }
+            TAG_COMPRESSED => Msg::CompressedGrads {
+                rank: c.u32()?,
+                step: c.u64()?,
+                grads: decode_compressed(&mut c)?,
+            },
             other => {
                 return Err(CommsError::Corrupt {
                     what: format!("unknown message tag {other}"),
@@ -222,6 +247,198 @@ impl Msg {
         encode_tensors(&mut b, full);
         b
     }
+
+    pub fn compressed_grads_bytes(
+        rank: u32,
+        step: u64,
+        grads: &CompressedGrads,
+    ) -> Vec<u8> {
+        let mut b = vec![TAG_COMPRESSED];
+        b.extend_from_slice(&rank.to_le_bytes());
+        b.extend_from_slice(&step.to_le_bytes());
+        encode_compressed(&mut b, grads);
+        b
+    }
+}
+
+// ------------------------------------------------- compressed-grads codec
+
+fn encode_compressed(b: &mut Vec<u8>, grads: &CompressedGrads) {
+    b.push(grads.codec);
+    b.extend_from_slice(&(grads.tensors.len() as u32).to_le_bytes());
+    for t in &grads.tensors {
+        b.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
+        for &d in &t.shape {
+            b.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        match &t.enc {
+            Encoding::Bf16 { halves } => {
+                b.push(ENC_BF16);
+                for h in halves {
+                    b.extend_from_slice(&h.to_le_bytes());
+                }
+            }
+            Encoding::Int8 { exps, quants } => {
+                b.push(ENC_INT8);
+                for e in exps {
+                    b.extend_from_slice(&e.to_le_bytes());
+                }
+                for &q in quants {
+                    b.push(q as u8);
+                }
+            }
+            Encoding::TopK { k, idx, vals } => {
+                b.push(ENC_TOPK);
+                b.extend_from_slice(&k.to_le_bytes());
+                for i in idx {
+                    b.extend_from_slice(&i.to_le_bytes());
+                }
+                for v in vals {
+                    b.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Encoding::LowRank { k, q, u } => {
+                b.push(ENC_LOWRANK);
+                b.extend_from_slice(&k.to_le_bytes());
+                for x in q {
+                    b.extend_from_slice(&x.to_le_bytes());
+                }
+                for x in u {
+                    b.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+}
+
+/// Decode a [`CompressedGrads`] body. Every payload element count is
+/// computed from the shape header and the codec parameters with checked
+/// arithmetic, then bounds-checked against the remaining bytes by
+/// `Cursor::take` — a forged `k`, bucket count or shape is a typed
+/// [`CommsError::Corrupt`], never a short-read panic or an unbounded
+/// allocation (buffers are only sized from bytes actually present).
+fn decode_compressed(c: &mut Cursor<'_>)
+    -> Result<CompressedGrads, CommsError>
+{
+    let codec = c.u8()?;
+    if !(1..=4).contains(&codec) {
+        return Err(CommsError::Corrupt {
+            what: format!("unknown compression codec id {codec}"),
+        });
+    }
+    let count = c.u32()? as usize;
+    let mut tensors = Vec::with_capacity(count.min(1 << 16));
+    for _ in 0..count {
+        let ndim = c.u32()?;
+        if ndim > MAX_NDIM {
+            return Err(CommsError::Corrupt {
+                what: format!("compressed tensor declares {ndim} dims"),
+            });
+        }
+        let mut shape = Vec::with_capacity(ndim as usize);
+        let mut numel: usize = 1;
+        for _ in 0..ndim {
+            let d = c.u64()? as usize;
+            numel = numel.checked_mul(d).ok_or_else(|| {
+                CommsError::Corrupt {
+                    what: "compressed tensor shape overflows".to_string(),
+                }
+            })?;
+            shape.push(d);
+        }
+        let overflow = || CommsError::Corrupt {
+            what: "compressed tensor payload overflows".to_string(),
+        };
+        let etag = c.u8()?;
+        let enc = match etag {
+            ENC_BF16 => {
+                let raw =
+                    c.take(numel.checked_mul(2).ok_or_else(overflow)?)?;
+                Encoding::Bf16 {
+                    halves: raw
+                        .chunks_exact(2)
+                        .map(|q| u16::from_le_bytes([q[0], q[1]]))
+                        .collect(),
+                }
+            }
+            ENC_INT8 => {
+                let nb = numel.div_ceil(BUCKET);
+                let raw_e =
+                    c.take(nb.checked_mul(2).ok_or_else(overflow)?)?;
+                let exps: Vec<i16> = raw_e
+                    .chunks_exact(2)
+                    .map(|q| i16::from_le_bytes([q[0], q[1]]))
+                    .collect();
+                let raw_q = c.take(numel)?;
+                let quants: Vec<i8> =
+                    raw_q.iter().map(|&q| q as i8).collect();
+                Encoding::Int8 { exps, quants }
+            }
+            ENC_TOPK => {
+                let k = c.u32()?;
+                if k == 0 {
+                    return Err(CommsError::Corrupt {
+                        what: "top-k header declares k=0".to_string(),
+                    });
+                }
+                let cnt = topk_count(numel, k as usize);
+                let raw_i =
+                    c.take(cnt.checked_mul(4).ok_or_else(overflow)?)?;
+                let idx: Vec<u32> = raw_i
+                    .chunks_exact(4)
+                    .map(|q| u32::from_le_bytes([q[0], q[1], q[2], q[3]]))
+                    .collect();
+                let raw_v =
+                    c.take(cnt.checked_mul(4).ok_or_else(overflow)?)?;
+                let vals: Vec<f32> = raw_v
+                    .chunks_exact(4)
+                    .map(|q| f32::from_le_bytes([q[0], q[1], q[2], q[3]]))
+                    .collect();
+                Encoding::TopK { k, idx, vals }
+            }
+            ENC_LOWRANK => {
+                let k = c.u32()? as usize;
+                if ndim != 2 {
+                    return Err(CommsError::Corrupt {
+                        what: format!(
+                            "low-rank encoding on {ndim}-d tensor"
+                        ),
+                    });
+                }
+                let (m, n) = (shape[0], shape[1]);
+                if k == 0 || k > m.min(n) {
+                    return Err(CommsError::Corrupt {
+                        what: format!(
+                            "low-rank header k={k} out of range for \
+                             {m}x{n} matrix"
+                        ),
+                    });
+                }
+                let qn = m.checked_mul(k).ok_or_else(overflow)?;
+                let un = n.checked_mul(k).ok_or_else(overflow)?;
+                let raw_q =
+                    c.take(qn.checked_mul(4).ok_or_else(overflow)?)?;
+                let q: Vec<f32> = raw_q
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect();
+                let raw_u =
+                    c.take(un.checked_mul(4).ok_or_else(overflow)?)?;
+                let u: Vec<f32> = raw_u
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect();
+                Encoding::LowRank { k: k as u32, q, u }
+            }
+            other => {
+                return Err(CommsError::Corrupt {
+                    what: format!("unknown encoding tag {other}"),
+                })
+            }
+        };
+        tensors.push(CompressedTensor { shape, enc });
+    }
+    Ok(CompressedGrads { codec, tensors })
 }
 
 // ------------------------------------------------------------ tensor codec
@@ -484,6 +701,180 @@ mod tests {
         b.extend_from_slice(&(MAX_NDIM + 1).to_le_bytes());
         let err = Msg::decode(&b).unwrap_err();
         assert!(err.to_string().contains("dims"), "{err}");
+    }
+
+    fn sample_compressed() -> CompressedGrads {
+        CompressedGrads {
+            codec: 3,
+            tensors: vec![
+                CompressedTensor {
+                    shape: vec![2, 3],
+                    enc: Encoding::TopK {
+                        k: 2,
+                        idx: vec![1, 4],
+                        vals: vec![-2.5, f32::MAX],
+                    },
+                },
+                CompressedTensor {
+                    shape: vec![4],
+                    enc: Encoding::Bf16 { halves: vec![1, 2, 3, 0x8000] },
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn compressed_variants_roundtrip() {
+        let frames = vec![
+            sample_compressed(),
+            CompressedGrads {
+                codec: 1,
+                tensors: vec![CompressedTensor {
+                    shape: vec![3],
+                    enc: Encoding::Bf16 { halves: vec![9, 0, 0xFFFF] },
+                }],
+            },
+            CompressedGrads {
+                codec: 2,
+                tensors: vec![CompressedTensor {
+                    shape: vec![5],
+                    enc: Encoding::Int8 {
+                        exps: vec![-7],
+                        quants: vec![-127, -1, 0, 1, 127],
+                    },
+                }],
+            },
+            CompressedGrads {
+                codec: 4,
+                tensors: vec![CompressedTensor {
+                    shape: vec![3, 2],
+                    enc: Encoding::LowRank {
+                        k: 1,
+                        q: vec![1.0, -2.0, 3.5],
+                        u: vec![0.5, f32::MIN_POSITIVE / 2.0],
+                    },
+                }],
+            },
+        ];
+        for grads in frames {
+            let m = Msg::CompressedGrads { rank: 2, step: 11, grads };
+            let decoded = Msg::decode(&m.encode()).unwrap();
+            assert_eq!(decoded, m);
+        }
+    }
+
+    #[test]
+    fn compressed_borrowed_encoder_matches_owned() {
+        let grads = sample_compressed();
+        assert_eq!(
+            Msg::compressed_grads_bytes(2, 11, &grads),
+            Msg::CompressedGrads { rank: 2, step: 11, grads }.encode()
+        );
+    }
+
+    #[test]
+    fn compressed_truncation_anywhere_is_typed() {
+        let full = Msg::CompressedGrads {
+            rank: 1,
+            step: 2,
+            grads: sample_compressed(),
+        }
+        .encode();
+        for cut in 0..full.len() {
+            let err = Msg::decode(&full[..cut]).unwrap_err();
+            assert!(
+                matches!(err, CommsError::Corrupt { .. }),
+                "cut at {cut}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn compressed_forged_headers_are_typed() {
+        fn header(codec: u8) -> Vec<u8> {
+            let mut b = vec![TAG_COMPRESSED];
+            b.extend_from_slice(&0u32.to_le_bytes()); // rank
+            b.extend_from_slice(&1u64.to_le_bytes()); // step
+            b.push(codec);
+            b.extend_from_slice(&1u32.to_le_bytes()); // one tensor
+            b
+        }
+        // unknown codec id
+        let mut b = header(9);
+        b.truncate(b.len() - 4);
+        assert!(Msg::decode(&b).is_err());
+        // top-k with k=0
+        let mut b = header(3);
+        b.extend_from_slice(&1u32.to_le_bytes()); // 1 dim
+        b.extend_from_slice(&4u64.to_le_bytes()); // len 4
+        b.push(2); // ENC_TOPK
+        b.extend_from_slice(&0u32.to_le_bytes()); // forged k=0
+        let err = Msg::decode(&b).unwrap_err();
+        assert!(err.to_string().contains("k=0"), "{err}");
+        // top-k with forged huge k: derived count exceeds the bytes
+        // actually present -> typed truncation, no allocation from k
+        let mut b = header(3);
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&4u64.to_le_bytes());
+        b.push(2);
+        b.extend_from_slice(&u32::MAX.to_le_bytes());
+        b.extend_from_slice(&[0u8; 8]); // far fewer than 4 idx+vals pairs
+        let err = Msg::decode(&b).unwrap_err();
+        assert!(matches!(err, CommsError::Corrupt { .. }), "{err}");
+        // low-rank with k > min(m, n)
+        let mut b = header(4);
+        b.extend_from_slice(&2u32.to_le_bytes()); // 2 dims
+        b.extend_from_slice(&4u64.to_le_bytes());
+        b.extend_from_slice(&3u64.to_le_bytes());
+        b.push(3); // ENC_LOWRANK
+        b.extend_from_slice(&9u32.to_le_bytes()); // forged k=9
+        let err = Msg::decode(&b).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        // low-rank on a 1-d tensor
+        let mut b = header(4);
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&6u64.to_le_bytes());
+        b.push(3);
+        b.extend_from_slice(&1u32.to_le_bytes());
+        let err = Msg::decode(&b).unwrap_err();
+        assert!(err.to_string().contains("1-d"), "{err}");
+        // int8 with a forged shape so the bucket count mismatches the
+        // remaining payload -> typed truncation
+        let mut b = header(2);
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&10u64.to_le_bytes()); // shape says 10
+        b.push(1); // ENC_INT8
+        b.extend_from_slice(&0i16.to_le_bytes()); // one exp
+        b.extend_from_slice(&[1u8; 4]); // only 4 of 10 quants
+        let err = Msg::decode(&b).unwrap_err();
+        assert!(matches!(err, CommsError::Corrupt { .. }), "{err}");
+    }
+
+    #[test]
+    fn compressed_fixture_frame_is_stable() {
+        // pin the byte layout: tag, rank, step, codec, count, ndim, dim,
+        // enc tag, payload
+        let grads = CompressedGrads {
+            codec: 1,
+            tensors: vec![CompressedTensor {
+                shape: vec![2],
+                enc: Encoding::Bf16 { halves: vec![0x3F80, 0xC000] },
+            }],
+        };
+        let b = Msg::compressed_grads_bytes(1, 3, &grads);
+        let expect: Vec<u8> = vec![
+            7, // TAG_COMPRESSED
+            1, 0, 0, 0, // rank
+            3, 0, 0, 0, 0, 0, 0, 0, // step
+            1, // codec bf16
+            1, 0, 0, 0, // one tensor
+            1, 0, 0, 0, // ndim
+            2, 0, 0, 0, 0, 0, 0, 0, // dim 2
+            0, // ENC_BF16
+            0x80, 0x3F, 0x00, 0xC0, // halves LE
+        ];
+        assert_eq!(b, expect);
+        assert!(Msg::decode(&b).is_ok());
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! manifest — no training required. The same accounting runs live against
 //! `Optimizer::state_bytes()` during training (asserted equal in tests).
 
+use crate::comms::{encoded_bytes_estimate, CompressKind};
 use crate::optim::{shard_ranges, OptKind};
 use crate::runtime::{ConfigSpec, ParamSpec};
 
@@ -298,6 +299,31 @@ pub fn memory_table_sharded(
             .max()
             .unwrap_or(0),
     );
+    // Wire rows: the gradient payload one replica contributes to each
+    // reduce collective, priced under every `--compress` codec over the
+    // same inventory (`comms::encoded_bytes_estimate`). The `none` row is
+    // the exact-f32 frame; for the others `pct_of_adamw` is the
+    // percentage of that full frame — the codec's wire saving.
+    let shapes: Vec<Vec<usize>> =
+        cfg.params.iter().map(|p| p.shape.clone()).collect();
+    let full_wire = encoded_bytes_estimate(CompressKind::None, &shapes);
+    let mut push_wire = |kind: CompressKind| {
+        let bytes = encoded_bytes_estimate(kind, &shapes);
+        rows.push(MemoryRow {
+            label: format!("wire grads {}", kind.name()),
+            bytes,
+            pct_of_adamw: if full_wire > 0 {
+                100.0 * bytes as f64 / full_wire as f64
+            } else {
+                f64::NAN
+            },
+        });
+    };
+    push_wire(CompressKind::None);
+    push_wire(CompressKind::Bf16);
+    push_wire(CompressKind::Int8);
+    push_wire(CompressKind::TopK(32));
+    push_wire(CompressKind::LowRank(k_init.max(1)));
     rows
 }
 
@@ -469,36 +495,61 @@ mod tests {
         let cfg = multi_cfg();
         let a = memory_table(&cfg, 1, 0.25);
         let b = memory_table_sharded(&cfg, 1, 0.25, 1);
-        // the sharded table carries the two ZeRO-2 gradient rows and the
-        // two ZeRO-3 parameter rows
-        assert_eq!(a.len() + 4, b.len());
+        // the sharded table carries the two ZeRO-2 gradient rows, the two
+        // ZeRO-3 parameter rows, and the five wire rows
+        assert_eq!(a.len() + 9, b.len());
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.label, y.label);
             assert_eq!(x.bytes, y.bytes, "{}", x.label);
         }
+        let find = |rows: &[MemoryRow], label: &str| -> (u64, f64) {
+            let r = rows
+                .iter()
+                .find(|r| r.label == label)
+                .unwrap_or_else(|| panic!("row {label} missing"));
+            (r.bytes, r.pct_of_adamw)
+        };
         // at one shard the max gradient/parameter shard is the full replica
-        let (gfull, gshard) = (&b[b.len() - 4], &b[b.len() - 3]);
-        assert_eq!(gfull.label, "grad full-replica");
-        assert_eq!(gfull.bytes, grad_bytes(&cfg));
-        assert_eq!(gshard.label, "grad zero2 max-shard");
-        assert_eq!(gshard.bytes, gfull.bytes);
-        let (pfull, pshard) = (&b[b.len() - 2], &b[b.len() - 1]);
-        assert_eq!(pfull.label, "param full-replica");
-        assert_eq!(pfull.bytes, param_bytes(&cfg));
-        assert_eq!(pshard.label, "param zero3 max-shard");
-        assert_eq!(pshard.bytes, pfull.bytes);
+        let (gfull, _) = find(&b, "grad full-replica");
+        assert_eq!(gfull, grad_bytes(&cfg));
+        let (gshard, _) = find(&b, "grad zero2 max-shard");
+        assert_eq!(gshard, gfull);
+        let (pfull, _) = find(&b, "param full-replica");
+        assert_eq!(pfull, param_bytes(&cfg));
+        let (pshard, _) = find(&b, "param zero3 max-shard");
+        assert_eq!(pshard, pfull);
+        // wire rows: the exact frame prices like the full gradient, and
+        // every codec shrinks it on this inventory
+        let (wfull, wpct) = find(&b, "wire grads none");
+        assert_eq!(wfull, grad_bytes(&cfg));
+        assert!((wpct - 100.0).abs() < 1e-9);
+        let (wbf16, _) = find(&b, "wire grads bf16");
+        assert_eq!(wbf16 * 2, wfull);
+        for label in
+            ["wire grads bf16", "wire grads int8", "wire grads topk:32",
+             "wire grads lowrank:1"]
+        {
+            let (w, pct) = find(&b, label);
+            assert!(w < wfull, "{label}: {w} vs {wfull}");
+            assert!(pct < 100.0, "{label}");
+        }
         // and at 2 shards every priced row shrinks (zip stops before the
-        // gradient/parameter rows; they are checked separately below)
+        // gradient/parameter/wire rows; they are checked separately below)
         let c = memory_table_sharded(&cfg, 1, 0.25, 2);
         for (x, y) in a.iter().zip(&c) {
             if x.bytes > 0 {
                 assert!(y.bytes < x.bytes, "{}", x.label);
             }
         }
-        let g2 = &c[c.len() - 3];
-        assert!(g2.bytes < grad_bytes(&cfg), "grad shard did not shrink");
-        let p2 = &c[c.len() - 1];
-        assert!(p2.bytes < param_bytes(&cfg), "param shard did not shrink");
+        let (g2, _) = find(&c, "grad zero2 max-shard");
+        assert!(g2 < grad_bytes(&cfg), "grad shard did not shrink");
+        let (p2, _) = find(&c, "param zero3 max-shard");
+        assert!(p2 < param_bytes(&cfg), "param shard did not shrink");
+        // wire pricing is shard-count independent: every rank ships its
+        // whole adjusted gradient regardless of the reduce plan
+        let (w2, _) = find(&c, "wire grads int8");
+        let (w1, _) = find(&b, "wire grads int8");
+        assert_eq!(w1, w2);
     }
 
     #[test]

@@ -8,7 +8,9 @@ use std::rc::Rc;
 
 use anyhow::{anyhow, Result};
 
-use crate::comms::{Cluster, CommsOptions, ReduceMode, TransportKind};
+use crate::comms::{
+    Cluster, CommsOptions, CompressKind, ReduceMode, TransportKind,
+};
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::metrics::{perplexity, CsvWriter, LossTracker};
 use crate::coordinator::replicas::{
@@ -20,7 +22,8 @@ use crate::data::{Batch, BatchIterator, BigramCorpus, Split, Task};
 use crate::model;
 use crate::{info, warn_};
 use crate::optim::{
-    Hyper, NativeOptimizer, Optimizer, ShardedNativeOptimizer, XlaOptimizer,
+    ErrorFeedback, Hyper, NativeOptimizer, Optimizer,
+    ShardedNativeOptimizer, XlaOptimizer,
 };
 use crate::runtime::{ConfigSpec, Runtime, Tensor};
 use crate::util::pool::Pool;
@@ -92,6 +95,12 @@ pub struct TrainOptions {
     /// Transport-mode recovery budget: how many times one `run` may roll
     /// back to the last published checkpoint generation and resume.
     pub max_recoveries: usize,
+    /// `--compress {none,bf16,int8,topk:<k>,lowrank:<k>}`: gradient codec
+    /// for the transport-mode reduce collective, with per-replica error
+    /// feedback. `None` keeps the exact `Msg::Grads` path — the literal
+    /// existing code path, bitwise identical to uncompressed training.
+    /// Anything else requires `--native` and `--transport`.
+    pub compress: CompressKind,
 }
 
 impl Default for TrainOptions {
@@ -116,6 +125,7 @@ impl Default for TrainOptions {
             checkpoint: None,
             checkpoint_every: 0,
             max_recoveries: 2,
+            compress: CompressKind::None,
         }
     }
 }
@@ -137,6 +147,9 @@ pub struct HistoryRow {
     /// update (loss/gradients were NaN or Inf; weights and moments
     /// untouched)
     pub skipped: bool,
+    /// serialized gradient-message bytes all replicas put on the wire in
+    /// this step's reduce (0 outside transport mode and on skipped steps)
+    pub wire_bytes: u64,
 }
 
 /// Reusable gradient-reduce buffers: one per-replica micro-batch mean list
@@ -196,6 +209,11 @@ pub struct Trainer {
     /// reply keyed on the step would re-serve pre-update parameters).
     gather_seq: u64,
     recoveries_used: usize,
+    /// Gradient-compression error feedback (`--compress`). Lives here —
+    /// not in the cluster — because clusters are dropped and rebuilt
+    /// during recovery, and the residuals must survive that. Unused when
+    /// `opts.compress` is `None`.
+    ef: ErrorFeedback,
 }
 
 impl Trainer {
@@ -219,6 +237,24 @@ impl Trainer {
                 "--zero must be 1, 2 or 3 (got {})",
                 opts.zero_level
             ));
+        }
+        if !opts.compress.is_none() {
+            if !opts.native {
+                return Err(anyhow!(
+                    "--compress {} requires the native backend (--native): \
+                     error feedback adjusts gradients on the host before \
+                     encoding",
+                    opts.compress.name()
+                ));
+            }
+            if opts.transport.is_none() {
+                return Err(anyhow!(
+                    "--compress {} requires --transport (inproc or tcp): \
+                     the codec shrinks the reduce collective's wire \
+                     frames, which only exist in transport mode",
+                    opts.compress.name()
+                ));
+            }
         }
         let mut rng = Rng::new(opts.seed);
         let params = model::init_params(&cfg, &mut rng);
@@ -256,8 +292,10 @@ impl Trainer {
         let comms_opts = CommsOptions {
             transport: opts.transport.unwrap_or(TransportKind::Inproc),
             threads: opts.threads,
+            compress: opts.compress,
             ..CommsOptions::default()
         };
+        let ef = ErrorFeedback::new(opts.compress, opts.threads);
         Ok(Trainer {
             rt,
             cfg,
@@ -279,6 +317,7 @@ impl Trainer {
             comms_opts,
             gather_seq: 0,
             recoveries_used: 0,
+            ef,
         })
     }
 
@@ -395,6 +434,9 @@ impl Trainer {
     pub fn with_comms_options(mut self, mut o: CommsOptions) -> Trainer {
         o.threads = self.opts.threads;
         o.transport = self.opts.transport.unwrap_or(o.transport);
+        // the codec always follows TrainOptions::compress: the worker
+        // frames and the orchestrator's expectation must agree
+        o.compress = self.opts.compress;
         self.comms_opts = o;
         self
     }
@@ -470,6 +512,55 @@ impl Trainer {
                      after transport rebuild: {e2}"
                 )
             })
+    }
+
+    /// The compressed counterpart of [`Trainer::cluster_reduce`]: error
+    /// feedback adjusts and encodes once, then the same one-rebuild
+    /// replay. The frames are a pure function of `(step, residuals,
+    /// grads)` and the residuals advance only in `absorb` — called after
+    /// the collective succeeds — so the replay re-sends bit-identical
+    /// frames and error feedback is never double-applied, no matter how
+    /// many resends or rebuilds the transport needed.
+    fn cluster_reduce_compressed(
+        &mut self,
+        step: u64,
+        per_replica: &[Vec<Tensor>],
+    ) -> Result<Vec<Vec<Tensor>>> {
+        self.ef.adjust_and_encode(step, per_replica)?;
+        self.ensure_cluster()?;
+        let Some(cluster) = self.cluster.as_mut() else {
+            return Err(anyhow!(
+                "comms cluster unavailable after ensure_cluster"
+            ));
+        };
+        let e = match cluster.reduce_compressed(step, self.ef.frames()) {
+            Ok(owned) => {
+                self.ef.absorb()?;
+                return Ok(owned);
+            }
+            Err(e) => e,
+        };
+        warn_!(
+            "comms compressed reduce failed at step {step}: {e}; \
+             rebuilding the transport and replaying"
+        );
+        self.drop_cluster();
+        self.ensure_cluster()?;
+        let Some(cluster) = self.cluster.as_mut() else {
+            return Err(anyhow!(
+                "comms cluster unavailable after ensure_cluster"
+            ));
+        };
+        match cluster.reduce_compressed(step, self.ef.frames()) {
+            Ok(owned) => {
+                self.ef.absorb()?;
+                Ok(owned)
+            }
+            Err(e2) => Err(anyhow!(
+                "comms compressed reduce failed twice at step {step}: \
+                 first {e}; after transport rebuild: {e2}"
+            )),
+        }
     }
 
     /// ZeRO-3 transport mode: the parameter all-gather as a collective,
@@ -766,12 +857,27 @@ impl Trainer {
                 },
             ));
         }
-        let info = if self.opts.transport.is_some() {
+        let mut wire_bytes = 0u64;
+        let mut info = if self.opts.transport.is_some() {
             // transport mode: the cross-replica reduce runs as a comms
             // collective. The orchestrator applies the same kernels under
             // the same plan and pool width, so each branch below receives
             // bitwise-identical inputs to its in-memory counterpart.
-            let owned = self.cluster_reduce(self.step as u64, &bufs.rep)?;
+            // With --compress, error feedback encodes each replica's
+            // frame and the orchestrator averages the decoded gradients
+            // instead.
+            let owned = if self.opts.compress.is_none() {
+                self.cluster_reduce(self.step as u64, &bufs.rep)?
+            } else {
+                self.cluster_reduce_compressed(
+                    self.step as u64,
+                    &bufs.rep,
+                )?
+            };
+            wire_bytes = self
+                .cluster
+                .as_ref()
+                .map_or(0, |c| c.last_wire_bytes());
             if self.opts.zero_level >= 2 {
                 bufs.out.clear();
                 bufs.owned = owned;
@@ -827,6 +933,7 @@ impl Trainer {
             allreduce_mean_into(&bufs.rep, &mut bufs.out, &self.reduce_pool)?;
             self.opt.step(&mut self.params, &bufs.out, lr)?
         };
+        info.wire_bytes = wire_bytes;
         self.reduce_bufs = bufs;
         Ok((mean_loss(&losses)?, info))
     }
@@ -896,6 +1003,10 @@ impl Trainer {
             &self.opts,
         )?;
         self.reduce_bufs = ReduceBufs::default();
+        // error-feedback residuals have restart semantics, like the
+        // optimizer moments: a recovered run and a killed-and-restarted
+        // process must hold identical state
+        self.ef.reset();
         Ok(())
     }
 
@@ -962,7 +1073,7 @@ impl Trainer {
                 p,
                 &["step", "lr", "train_loss", "val_loss", "val_ppl",
                   "mean_xi", "mean_rank", "state_mb", "max_shard_mb",
-                  "skipped"],
+                  "skipped", "wire_bytes"],
             )?),
             None => None,
         };
@@ -1024,6 +1135,7 @@ impl Trainer {
                 max_shard_mb: sinfo.max_shard_bytes as f64
                     / (1024.0 * 1024.0),
                 skipped: sinfo.skipped,
+                wire_bytes: sinfo.wire_bytes,
             };
             if let Some(csv) = csv.as_mut() {
                 csv.row(&[
@@ -1037,6 +1149,7 @@ impl Trainer {
                     row.state_mb,
                     row.max_shard_mb,
                     if row.skipped { 1.0 } else { 0.0 },
+                    row.wire_bytes as f64,
                 ])?;
             }
             if t % self.opts.log_every == 0 || t == 1 || t == self.opts.steps {

@@ -18,7 +18,7 @@ use std::rc::Rc;
 use anyhow::{anyhow, bail, Result};
 
 use adapprox::cli::Args;
-use adapprox::comms::TransportKind;
+use adapprox::comms::{CompressKind, TransportKind};
 use adapprox::coordinator::{Checkpoint, TrainOptions, Trainer};
 use adapprox::data::task_suite;
 use adapprox::optim::{Hyper, OptKind};
@@ -85,6 +85,10 @@ fn print_help() {
          [--checkpoint-every N (periodic saves + crash recovery)]\n\
          \u{20}          [--max-recoveries N (checkpoint rollbacks per run, \
          default 2)]\n\
+         \u{20}          [--compress none|bf16|int8|topk:<k>|lowrank:<k> \
+         (gradient codec for the transport\n\
+         \u{20}           reduce, with error feedback; needs --native and \
+         --transport)]\n\
          eval      --checkpoint PATH [--eval-batches N]\n\
          finetune  --checkpoint PATH --task 0..4 --steps N --lr F\n\
          memory    print Table 2 (exact analytic over GPT-2 inventories)\n\
@@ -142,6 +146,10 @@ fn train_options(args: &Args) -> Result<TrainOptions> {
         checkpoint: args.flag("checkpoint").map(Into::into),
         checkpoint_every: args.usize_or("checkpoint-every", 0)?,
         max_recoveries: args.usize_or("max-recoveries", 2)?,
+        compress: match args.flag("compress") {
+            Some(s) => CompressKind::parse(s)?,
+            None => CompressKind::None,
+        },
     })
 }
 

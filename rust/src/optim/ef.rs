@@ -1,0 +1,323 @@
+//! Error feedback for compressed gradient collectives.
+//!
+//! Lossy codecs (`comms::compress`) drop part of every gradient; error
+//! feedback keeps the dropped part — the **residual** — on the sending
+//! replica and adds it back to the next step's gradient before encoding,
+//! so quantization error accumulates into later updates instead of being
+//! lost. The ledger per element is:
+//!
+//! ```text
+//!   adjusted = grad + residual_prev        (before encoding)
+//!   residual = adjusted − decoded          (after the collective lands)
+//! ```
+//!
+//! For the exact-arithmetic codecs (bf16/int8/topk) the subtraction is
+//! exact in f32, so `decoded + residual == adjusted` bitwise — the
+//! property battery in `comms::compress` pins this. Low-rank residuals
+//! are ulp-bounded.
+//!
+//! Retry semantics: [`ErrorFeedback::adjust_and_encode`] is a pure
+//! function of `(step, residuals, grads)` — residuals only change in
+//! [`ErrorFeedback::absorb`], which the trainer calls *after* the
+//! collective succeeds. A tier-1 rebuild-and-replay therefore re-encodes
+//! the identical frames (same step, same residuals, deterministic
+//! codecs) and error feedback is never double-applied, no matter how
+//! many resends the transport needed.
+//!
+//! This state lives in the trainer, not the `Cluster`: clusters are
+//! dropped and rebuilt during recovery, residuals must survive that.
+//! Checkpoint rollback resets residuals (like optimizer moments,
+//! rollback has restart semantics).
+
+use anyhow::{bail, Result};
+
+use crate::comms::{
+    decode_grads_into, encode_grads_into, CodecScratch, CompressKind,
+    CompressedGrads,
+};
+use crate::runtime::tensor::{Tensor, TensorData};
+use crate::util::pool::Pool;
+
+/// Per-replica error-feedback residuals + the encode/decode scratch and
+/// the current step's encoded frames. All buffers are reused across
+/// steps (allocation-free steady state).
+pub struct ErrorFeedback {
+    kind: CompressKind,
+    pool: Pool,
+    residual: Vec<Vec<Tensor>>,
+    adjusted: Vec<Vec<Tensor>>,
+    frames: Vec<CompressedGrads>,
+    decoded: Vec<Vec<Tensor>>,
+    enc_scratch: CodecScratch,
+    dec_scratch: CodecScratch,
+    ready: bool,
+}
+
+impl ErrorFeedback {
+    /// `threads` sizes the pool the low-rank factorization encodes on
+    /// (bitwise identical for any width).
+    pub fn new(kind: CompressKind, threads: usize) -> ErrorFeedback {
+        ErrorFeedback {
+            kind,
+            pool: Pool::new(threads.max(1)),
+            residual: Vec::new(),
+            adjusted: Vec::new(),
+            frames: Vec::new(),
+            decoded: Vec::new(),
+            enc_scratch: CodecScratch::new(),
+            dec_scratch: CodecScratch::new(),
+            ready: false,
+        }
+    }
+
+    pub fn kind(&self) -> CompressKind {
+        self.kind
+    }
+
+    /// Add each replica's residual to its gradient, encode the adjusted
+    /// gradients under the configured codec, and precompute the decoded
+    /// image the residual will be measured against. Pure in the
+    /// residuals: calling this again for the same step (a replay)
+    /// reproduces the identical frames.
+    pub fn adjust_and_encode(
+        &mut self,
+        step: u64,
+        per_replica: &[Vec<Tensor>],
+    ) -> Result<()> {
+        if self.kind.is_none() {
+            bail!("error feedback configured with --compress none");
+        }
+        let n = per_replica.len();
+        self.residual.truncate(n);
+        self.adjusted.truncate(n);
+        self.decoded.truncate(n);
+        self.frames.truncate(n);
+        while self.residual.len() < n {
+            self.residual.push(Vec::new());
+        }
+        while self.adjusted.len() < n {
+            self.adjusted.push(Vec::new());
+        }
+        while self.decoded.len() < n {
+            self.decoded.push(Vec::new());
+        }
+        while self.frames.len() < n {
+            self.frames.push(CompressedGrads::default());
+        }
+        for (r, grads) in per_replica.iter().enumerate() {
+            sync_shapes_into(&mut self.residual[r], grads)?;
+            sync_shapes_into(&mut self.adjusted[r], grads)?;
+            for (i, g) in grads.iter().enumerate() {
+                add_into(
+                    g.as_f32()?,
+                    self.residual[r][i].as_f32()?,
+                    self.adjusted[r][i].as_f32_mut()?,
+                );
+            }
+            encode_grads_into(
+                self.kind,
+                step,
+                r as u64,
+                &self.adjusted[r],
+                &mut self.frames[r],
+                &mut self.enc_scratch,
+                &self.pool,
+            )?;
+            decode_grads_into(
+                &self.frames[r],
+                &mut self.decoded[r],
+                &mut self.dec_scratch,
+            )?;
+        }
+        self.ready = true;
+        Ok(())
+    }
+
+    /// The encoded frames for the current step, one per replica, in rank
+    /// order. Valid after [`ErrorFeedback::adjust_and_encode`].
+    pub fn frames(&self) -> &[CompressedGrads] {
+        &self.frames
+    }
+
+    /// The decoded image of the current frames (what the orchestrator
+    /// will reconstruct), for tests and local accounting.
+    pub fn decoded(&self) -> &[Vec<Tensor>] {
+        &self.decoded
+    }
+
+    /// Fold this step's quantization error into the residuals:
+    /// `residual = adjusted − decoded`. Call exactly once per step,
+    /// after the collective has succeeded.
+    pub fn absorb(&mut self) -> Result<()> {
+        if !self.ready {
+            bail!("ErrorFeedback::absorb without a preceding encode");
+        }
+        for r in 0..self.residual.len() {
+            for i in 0..self.residual[r].len() {
+                sub_into(
+                    self.adjusted[r][i].as_f32()?,
+                    self.decoded[r][i].as_f32()?,
+                    self.residual[r][i].as_f32_mut()?,
+                );
+            }
+        }
+        self.ready = false;
+        Ok(())
+    }
+
+    /// Drop all residual state (checkpoint rollback / resume: restart
+    /// semantics, like fresh optimizer moments).
+    pub fn reset(&mut self) {
+        self.residual.clear();
+        self.adjusted.clear();
+        self.decoded.clear();
+        self.frames.clear();
+        self.ready = false;
+    }
+
+    /// Bytes the residual tensors pin per replica (accounting).
+    pub fn residual_bytes(&self) -> u64 {
+        self.residual
+            .iter()
+            .flatten()
+            .map(|t| 4 * t.numel() as u64)
+            .sum()
+    }
+}
+
+/// Make `bufs` mirror `grads`' shapes, reusing allocations. Shape-matched
+/// slots keep their contents (residuals persist across steps); fresh or
+/// reshaped slots start zeroed.
+fn sync_shapes_into(bufs: &mut Vec<Tensor>, grads: &[Tensor]) -> Result<()> {
+    bufs.truncate(grads.len());
+    while bufs.len() < grads.len() {
+        let g = &grads[bufs.len()];
+        bufs.push(zeroed_like(g));
+    }
+    for (b, g) in bufs.iter_mut().zip(grads) {
+        if b.shape != g.shape {
+            *b = zeroed_like(g);
+        }
+        if !matches!(b.data, TensorData::F32(_)) {
+            bail!("error feedback needs f32 gradients");
+        }
+    }
+    Ok(())
+}
+
+// cold path (first step / topology change only)
+fn zeroed_like(g: &Tensor) -> Tensor {
+    Tensor::zeros(g.shape.clone())
+}
+
+/// `out[j] = a[j] + b[j]` (adjusted gradient). Reuses `out`'s allocation.
+fn add_into(a: &[f32], b: &[f32], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(a.len());
+    for j in 0..a.len() {
+        out.push(a[j] + b[j]);
+    }
+}
+
+/// `out[j] = a[j] - b[j]` (new residual). Reuses `out`'s allocation.
+fn sub_into(a: &[f32], b: &[f32], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(a.len());
+    for j in 0..a.len() {
+        out.push(a[j] - b[j]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn grads_for(rng: &mut Rng, replicas: usize) -> Vec<Vec<Tensor>> {
+        (0..replicas)
+            .map(|_| {
+                vec![
+                    Tensor::f32(vec![6, 4], rng.normal_vec_f32(24)),
+                    Tensor::f32(vec![10], rng.normal_vec_f32(10)),
+                ]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn ledger_balances_across_steps() {
+        let mut rng = Rng::new(42);
+        for kind in [
+            CompressKind::Bf16,
+            CompressKind::Int8,
+            CompressKind::TopK(3),
+        ] {
+            let mut ef = ErrorFeedback::new(kind, 1);
+            for step in 1..=4u64 {
+                let grads = grads_for(&mut rng, 2);
+                ef.adjust_and_encode(step, &grads).unwrap();
+                // decoded + residual_next == adjusted, bitwise
+                let adjusted: Vec<Vec<Tensor>> = ef.adjusted.clone();
+                ef.absorb().unwrap();
+                for r in 0..2 {
+                    for i in 0..2 {
+                        let a = adjusted[r][i].as_f32().unwrap();
+                        let d = ef.decoded[r][i].as_f32().unwrap();
+                        let res = ef.residual[r][i].as_f32().unwrap();
+                        for j in 0..a.len() {
+                            let back = d[j] + res[j];
+                            if a[j] == 0.0 {
+                                assert_eq!(back, 0.0);
+                            } else {
+                                assert_eq!(
+                                    back.to_bits(),
+                                    a[j].to_bits(),
+                                    "{kind:?} step {step} r{r} t{i} j{j}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn replay_reencodes_identically() {
+        let mut rng = Rng::new(7);
+        let grads = grads_for(&mut rng, 3);
+        let mut ef = ErrorFeedback::new(CompressKind::Int8, 2);
+        ef.adjust_and_encode(5, &grads).unwrap();
+        let first = ef.frames().to_vec();
+        // a replay before absorb (tier-1 rebuild) must not double-apply
+        ef.adjust_and_encode(5, &grads).unwrap();
+        assert_eq!(ef.frames(), &first[..]);
+        ef.absorb().unwrap();
+        // after absorb the residual changed, so the next step differs
+        ef.adjust_and_encode(6, &grads).unwrap();
+        assert!(ef.ready);
+    }
+
+    #[test]
+    fn reset_drops_residuals() {
+        let mut rng = Rng::new(9);
+        let grads = grads_for(&mut rng, 1);
+        let mut ef = ErrorFeedback::new(CompressKind::TopK(2), 1);
+        ef.adjust_and_encode(1, &grads).unwrap();
+        ef.absorb().unwrap();
+        assert!(ef.residual_bytes() > 0);
+        ef.reset();
+        assert_eq!(ef.residual_bytes(), 0);
+        assert!(ef.absorb().is_err());
+        // works again after reset
+        ef.adjust_and_encode(2, &grads).unwrap();
+        ef.absorb().unwrap();
+    }
+
+    #[test]
+    fn none_kind_is_refused() {
+        let mut ef = ErrorFeedback::new(CompressKind::None, 1);
+        let grads = vec![vec![Tensor::f32(vec![2], vec![1.0, 2.0])]];
+        assert!(ef.adjust_and_encode(1, &grads).is_err());
+    }
+}

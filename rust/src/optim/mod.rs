@@ -13,6 +13,7 @@
 //! Both backends share [`Hyper`], [`rank::RankController`] and the
 //! [`state`] memory accounting.
 
+pub mod ef;
 pub mod hyper;
 pub mod native;
 pub mod rank;
@@ -20,6 +21,7 @@ pub mod state;
 pub mod workspace;
 pub mod xla_exec;
 
+pub use ef::ErrorFeedback;
 pub use hyper::{Hyper, OptKind};
 pub use native::{NativeOptimizer, ShardedNativeOptimizer};
 pub use rank::{f_xi, RankController};

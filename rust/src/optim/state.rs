@@ -206,6 +206,10 @@ pub struct StepInfo {
     /// true when the trainer's non-finite guard skipped the optimizer
     /// update for this step (weights and moments untouched)
     pub skipped: bool,
+    /// serialized gradient-message bytes all replicas put on the wire in
+    /// this step's reduce collective (filled by the trainer in transport
+    /// mode; 0 otherwise)
+    pub wire_bytes: u64,
 }
 
 impl OptimizerState {

@@ -108,7 +108,8 @@ pub fn run(args: &Args) -> Result<()> {
             println!(
                 "(grad/param rows: % is of the full gradient/parameter \
                  replica — the ZeRO-2 `--zero 2` and ZeRO-3 `--zero 3` \
-                 savings)"
+                 savings; wire rows: per-replica reduce payload under \
+                 each `--compress` codec, % of the exact-f32 frame)"
             );
         }
     }

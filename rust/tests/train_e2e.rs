@@ -164,7 +164,7 @@ fn sharded_native_training_bitwise_matches_unsharded() {
 use std::time::Duration;
 
 use adapprox::comms::{
-    Cluster, CommsOptions, FaultKind, FaultPlan, TransportKind,
+    Cluster, CommsOptions, CompressKind, FaultKind, FaultPlan, TransportKind,
 };
 use adapprox::coordinator::CORPUS_SEED;
 use adapprox::data::{BatchIterator, BigramCorpus, Split};
@@ -182,6 +182,7 @@ fn quick_comms() -> CommsOptions {
         idle_budget: Duration::from_secs(10),
         threads: 1,
         seed: 23,
+        compress: CompressKind::None,
     }
 }
 
@@ -197,6 +198,33 @@ fn transport_run(
     zero: usize,
     transport: Option<TransportKind>,
 ) -> RunResult {
+    let (res, _) = transport_run_compress(
+        rt,
+        steps,
+        seed,
+        replicas,
+        shards,
+        threads,
+        zero,
+        transport,
+        CompressKind::None,
+    );
+    res
+}
+
+/// Like `transport_run`, with a gradient codec on the reduce path.
+/// Also returns the total serialized reduce bytes across the run.
+fn transport_run_compress(
+    rt: &Rc<Runtime>,
+    steps: usize,
+    seed: u64,
+    replicas: usize,
+    shards: usize,
+    threads: usize,
+    zero: usize,
+    transport: Option<TransportKind>,
+    compress: CompressKind,
+) -> (RunResult, u64) {
     let hyper = Hyper::paper_defaults(OptKind::Adapprox, &rt.manifest.hyper);
     let mut opts = quick_opts(steps, seed);
     opts.native = true;
@@ -205,16 +233,18 @@ fn transport_run(
     opts.threads = threads;
     opts.zero_level = zero;
     opts.transport = transport;
+    opts.compress = compress;
     let mut tr = Trainer::new(rt.clone(), "micro", hyper, opts).unwrap();
     let hist = tr.run().unwrap();
     let losses: Vec<f64> = hist.iter().map(|r| r.train_loss).collect();
     let xis: Vec<f64> = hist.iter().map(|r| r.mean_xi).collect();
+    let wire: u64 = hist.iter().map(|r| r.wire_bytes).sum();
     let weights: Vec<Vec<f32>> = tr
         .full_params()
         .iter()
         .map(|p| p.as_f32().unwrap().to_vec())
         .collect();
-    (losses, xis, weights)
+    ((losses, xis, weights), wire)
 }
 
 #[test]
@@ -260,6 +290,139 @@ fn transport_tcp_training_bitwise_matches_in_memory() {
     let got =
         transport_run(&rt, 4, 18, 2, 2, 2, 2, Some(TransportKind::Tcp));
     assert_eq!(base, got, "tcp transport diverged");
+}
+
+#[test]
+fn transport_compress_none_is_bitwise_identical() {
+    // `--compress none` is the literal pre-existing reduce path, not a
+    // zero-cost codec: with it, transport training must stay bitwise
+    // identical to the in-memory run for every (replicas, zero,
+    // transport) combination the convergence harness sweeps
+    let Some(rt) = runtime() else { return };
+    for replicas in [1usize, 2, 4] {
+        for zero in [1usize, 2, 3] {
+            let base =
+                transport_run(&rt, 3, 24, replicas, 2, 2, zero, None);
+            for transport in [TransportKind::Inproc, TransportKind::Tcp] {
+                let (got, wire) = transport_run_compress(
+                    &rt,
+                    3,
+                    24,
+                    replicas,
+                    2,
+                    2,
+                    zero,
+                    Some(transport),
+                    CompressKind::None,
+                );
+                assert_eq!(
+                    base, got,
+                    "--compress none diverged at replicas={replicas} \
+                     zero={zero} transport={transport:?}"
+                );
+                assert!(wire > 0, "transport run reported no wire bytes");
+            }
+        }
+    }
+}
+
+#[test]
+fn transport_compressed_training_converges_per_codec() {
+    // every codec trains the real model end to end through the
+    // transport: losses stay finite and land near the exact run's, and
+    // the measured wire bytes shrink where the codec guarantees it
+    // (bf16 halves every payload; int8 is a ≥2x reduction — the
+    // acceptance-bar measurement on the ~1.3M-element case lives in
+    // bench_comms). The loose loss pin catches divergence and broken
+    // error feedback, not codec precision, which the property battery
+    // and the chaos tests pin bitwise.
+    let Some(rt) = runtime() else { return };
+    let ((exact_losses, _, _), exact_wire) = transport_run_compress(
+        &rt,
+        8,
+        25,
+        2,
+        1,
+        2,
+        1,
+        Some(TransportKind::Inproc),
+        CompressKind::None,
+    );
+    assert!(exact_wire > 0);
+    for kind in [
+        CompressKind::Bf16,
+        CompressKind::Int8,
+        CompressKind::TopK(32),
+        CompressKind::LowRank(2),
+    ] {
+        let ((losses, _, weights), wire) = transport_run_compress(
+            &rt,
+            8,
+            25,
+            2,
+            1,
+            2,
+            1,
+            Some(TransportKind::Inproc),
+            kind,
+        );
+        assert!(
+            losses.iter().all(|l| l.is_finite()),
+            "{kind:?}: non-finite loss"
+        );
+        assert!(
+            weights
+                .iter()
+                .all(|p| p.iter().all(|x| x.is_finite())),
+            "{kind:?}: non-finite weight"
+        );
+        let drift =
+            (losses.last().unwrap() - exact_losses.last().unwrap()).abs();
+        assert!(
+            drift < 0.5,
+            "{kind:?}: final loss drifted {drift} from the exact run"
+        );
+        assert!(wire > 0, "{kind:?}: no wire bytes reported");
+        match kind {
+            CompressKind::Bf16 => assert!(
+                wire * 3 < exact_wire * 2,
+                "bf16 wire bytes {wire} not under 2/3 of {exact_wire}"
+            ),
+            CompressKind::Int8 => assert!(
+                wire * 2 < exact_wire,
+                "int8 wire bytes {wire} not a 2x reduction of {exact_wire}"
+            ),
+            _ => {}
+        }
+    }
+}
+
+#[test]
+fn transport_compress_requires_native_and_transport() {
+    // misconfiguration is a clean construction error, not a mid-run
+    // surprise: a codec without --native (error feedback adjusts
+    // gradients on the host) or without --transport (the codec rides
+    // the comms frames) must be refused by Trainer::new
+    let Some(rt) = runtime() else { return };
+    let hyper = Hyper::paper_defaults(OptKind::Adapprox, &rt.manifest.hyper);
+    let mut opts = quick_opts(1, 26);
+    opts.compress = CompressKind::Int8;
+    opts.transport = Some(TransportKind::Inproc);
+    // no --native
+    let err = match Trainer::new(rt.clone(), "micro", hyper.clone(), opts) {
+        Err(e) => e,
+        Ok(_) => panic!("expected --compress/--native error"),
+    };
+    assert!(err.to_string().contains("native"), "{err}");
+    // no --transport
+    let mut opts = quick_opts(1, 26);
+    opts.compress = CompressKind::Int8;
+    opts.native = true;
+    let err = match Trainer::new(rt, "micro", hyper, opts) {
+        Err(e) => e,
+        Ok(_) => panic!("expected --compress/--transport error"),
+    };
+    assert!(err.to_string().contains("transport"), "{err}");
 }
 
 #[test]
