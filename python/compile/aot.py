@@ -13,7 +13,10 @@ reassigns ids (see /opt/xla-example/README.md).
 Emitted program families (DESIGN.md §2.2):
 
 - per trainable model config: ``train_step_<cfg>``, ``eval_step_<cfg>``,
-  ``predict_step_<cfg>``;
+  ``predict_step_<cfg>``, plus the step-graph segment family
+  ``seg_embed_{fwd,bwd}_<cfg>``, ``seg_block<i>_{fwd,bwd}_<cfg>``,
+  ``seg_head_loss_{fwd,bwd}_<cfg>`` and ``seg_head_logits_<cfg>`` (the
+  manifest's ``segments`` table binds them into per-config step graphs);
 - per distinct 2-D parameter shape: ``adamw_step_MxN``,
   ``adafactor_step_MxN``, ``came_step_MxN`` and the rank-ladder family
   ``adapprox_step_MxN_kK`` (one bucket per power of two up to
@@ -154,6 +157,53 @@ def emit_model_programs(em: Emitter, cfg: M.ModelConfig):
     em.emit(f"predict_step_{cfg.name}", M.make_predict_step(cfg),
             [*p_in, ("tokens", (b, s), "i32")],
             [("logits", (b, s, v), "f32")])
+
+
+def emit_segment_programs(em: Emitter, cfg: M.ModelConfig):
+    """Per-segment forward/backward pairs for the step graph.
+
+    Argument protocol (shared with rust/src/runtime/exec.rs): forward takes
+    own params ++ tied params ++ (tokens | act_in) ++ (targets, mask — head
+    only); backward takes the same inputs with the upstream cotangent
+    appended on non-head segments, and returns (dx [non-first], d_own...,
+    d_tied...).  Program names match model.segment_table(cfg).
+    """
+    specs = M.param_specs(cfg)
+    b, s, h, v = cfg.batch, cfg.seq_len, cfg.d_model, cfg.vocab
+    n = len(specs)
+    act = ((b, s, h), "f32")
+    tok = ("tokens", (b, s), "i32")
+
+    embed_in = [(nm, sh, "f32") for (nm, sh, _) in specs[:2]]
+    em.emit(f"seg_embed_fwd_{cfg.name}", M.make_seg_embed_fwd(cfg),
+            embed_in + [tok], [("x", *act)])
+    em.emit(f"seg_embed_bwd_{cfg.name}", M.make_seg_embed_bwd(cfg),
+            embed_in + [tok, ("dx", *act)],
+            [("grad." + nm, sh, "f32") for (nm, sh, _) in specs[:2]])
+
+    for i in range(cfg.n_layer):
+        blk = specs[2 + 12 * i : 2 + 12 * (i + 1)]
+        blk_in = [(nm, sh, "f32") for (nm, sh, _) in blk]
+        em.emit(f"seg_block{i}_fwd_{cfg.name}", M.make_seg_block_fwd(cfg),
+                blk_in + [("x", *act)], [("y", *act)])
+        em.emit(f"seg_block{i}_bwd_{cfg.name}", M.make_seg_block_bwd(cfg),
+                blk_in + [("x", *act), ("dy", *act)],
+                [("dx", *act)]
+                + [("grad." + nm, sh, "f32") for (nm, sh, _) in blk])
+
+    head_in = [(nm, sh, "f32") for (nm, sh, _) in specs[n - 2:]] \
+        + [("embed", specs[0][1], "f32")]
+    data_in = [("x", *act), ("targets", (b, s), "i32"),
+               ("mask", (b, s), "f32")]
+    em.emit(f"seg_head_loss_fwd_{cfg.name}", M.make_seg_head_loss_fwd(cfg),
+            head_in + data_in, [("loss", (), "f32")])
+    em.emit(f"seg_head_loss_bwd_{cfg.name}", M.make_seg_head_loss_bwd(cfg),
+            head_in + data_in,
+            [("dx", *act), ("grad.lnf.g", (h,), "f32"),
+             ("grad.lnf.b", (h,), "f32"),
+             ("grad.embed", specs[0][1], "f32")])
+    em.emit(f"seg_head_logits_{cfg.name}", M.make_seg_head_logits(cfg),
+            head_in + [("x", *act)], [("logits", (b, s, v), "f32")])
 
 
 def emit_matrix_optimizers(em: Emitter, m: int, n: int):
@@ -306,6 +356,7 @@ def main():
         "hyper_defaults": HYPER_DEFAULTS,
         "configs": {},
         "ladders": {},
+        "segments": {},
     }
 
     matrix_shapes = set()
@@ -316,7 +367,9 @@ def main():
         print(f"config {name} ({M.param_count(cfg)/1e6:.2f}M params)",
               flush=True)
         emit_model_programs(em, cfg)
+        emit_segment_programs(em, cfg)
         manifest["configs"][name] = config_manifest(cfg)
+        manifest["segments"][name] = M.segment_table(cfg)
         for (_, shape, kind) in M.param_specs(cfg):
             if kind == "matrix":
                 matrix_shapes.add(tuple(shape))

@@ -4,7 +4,10 @@ The whole forward+backward is lowered as ONE HLO program per model config
 (``train_step``), with parameters passed as a flat, manifest-ordered argument
 list so the Rust coordinator can own all state.  Companion programs:
 ``eval_step`` (loss only) and ``predict_step`` (full logits, used by the
-downstream-task harness).
+downstream-task harness).  The same step is also lowered as per-segment
+forward/backward pairs (``make_seg_*`` below) so the coordinator can run it
+as a step graph with per-segment ZeRO-3 gather windows; ``segment_table``
+emits the manifest binding.
 
 Architecture (matching the paper's GPT-2 targets, Table 1, scaled down per
 DESIGN.md §4): learned token + position embeddings, pre-LN blocks with fused
@@ -169,27 +172,42 @@ def _attention(x, qkv_w, qkv_b, proj_w, proj_b, cfg: ModelConfig):
     return _proj(out, proj_w, cfg) + proj_b
 
 
+def _embed_forward(embed, pos, tokens):
+    """Token + position embedding — the first step-graph segment's body."""
+    return embed[tokens] + pos[None, : tokens.shape[1]]
+
+
+def _block_forward(cfg: ModelConfig, block_params, x):
+    """One pre-LN block given its 12-parameter slice (manifest order)."""
+    (ln1_g, ln1_b, qkv_w, qkv_b, proj_w, proj_b,
+     ln2_g, ln2_b, fc1_w, fc1_b, fc2_w, fc2_b) = block_params
+    x = x + _attention(
+        _layer_norm(x, ln1_g, ln1_b), qkv_w, qkv_b, proj_w, proj_b, cfg
+    )
+    hmid = jax.nn.gelu(_proj(_layer_norm(x, ln2_g, ln2_b), fc1_w, cfg) + fc1_b)
+    return x + _proj(hmid, fc2_w, cfg) + fc2_b
+
+
+def _head_logits(lnf_g, lnf_b, embed, x):
+    """Final LN + tied LM head — the head segment's predict body."""
+    return jnp.einsum("bsd,vd->bsv", _layer_norm(x, lnf_g, lnf_b), embed)
+
+
+def _head_loss(lnf_g, lnf_b, embed, x, targets, mask):
+    """Final LN + tied head + masked mean cross-entropy (head segment)."""
+    logits = _head_logits(lnf_g, lnf_b, embed, x)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.sum(ll * mask) / (jnp.sum(mask) + 1e-9)
+
+
 def forward(cfg: ModelConfig, params: List[jnp.ndarray], tokens):
     """Token ids ``(B, S)`` -> logits ``(B, S, V)`` (tied LM head)."""
-    it = iter(params)
-    embed = next(it)
-    pos = next(it)
-    x = embed[tokens] + pos[None, : tokens.shape[1]]
-    for _ in range(cfg.n_layer):
-        ln1_g, ln1_b = next(it), next(it)
-        qkv_w, qkv_b = next(it), next(it)
-        proj_w, proj_b = next(it), next(it)
-        ln2_g, ln2_b = next(it), next(it)
-        fc1_w, fc1_b = next(it), next(it)
-        fc2_w, fc2_b = next(it), next(it)
-        x = x + _attention(
-            _layer_norm(x, ln1_g, ln1_b), qkv_w, qkv_b, proj_w, proj_b, cfg
-        )
-        hmid = jax.nn.gelu(_proj(_layer_norm(x, ln2_g, ln2_b), fc1_w, cfg) + fc1_b)
-        x = x + _proj(hmid, fc2_w, cfg) + fc2_b
-    lnf_g, lnf_b = next(it), next(it)
-    x = _layer_norm(x, lnf_g, lnf_b)
-    return jnp.einsum("bsd,vd->bsv", x, embed)
+    embed, pos = params[0], params[1]
+    x = _embed_forward(embed, pos, tokens)
+    for i in range(cfg.n_layer):
+        x = _block_forward(cfg, params[2 + 12 * i : 2 + 12 * (i + 1)], x)
+    return _head_logits(params[-2], params[-1], embed, x)
 
 
 def loss_fn(cfg: ModelConfig, params, tokens, targets, mask):
@@ -241,3 +259,136 @@ def make_predict_step(cfg: ModelConfig):
         return (forward(cfg, params, tokens),)
 
     return predict_step
+
+
+# ---------------------------------------------------------------------------
+# Step-graph segment programs.
+#
+# The monolithic train_step is also lowered as per-segment forward/backward
+# pairs so the Rust coordinator can run the step as a graph (per-segment
+# ZeRO-3 gather windows).  The argument protocol is fixed and shared with
+# rust/src/runtime/exec.rs:
+#
+#   forward:  own params ++ tied params ++ (tokens | act_in)
+#             ++ (targets, mask — head only)            -> (act_out | loss,)
+#   backward: same inputs, non-head segments append the upstream cotangent
+#             instead of targets/mask                   -> (dx [non-first],
+#                                                           d_own..., d_tied...)
+#   predict:  own ++ tied ++ act_in                     -> (logits,)  [head]
+# ---------------------------------------------------------------------------
+
+
+def make_seg_embed_fwd(cfg: ModelConfig):
+    """(embed, pos, tokens) -> (x0,)."""
+
+    def seg_embed_fwd(embed, pos, tokens):
+        return (_embed_forward(embed, pos, tokens),)
+
+    return seg_embed_fwd
+
+
+def make_seg_embed_bwd(cfg: ModelConfig):
+    """(embed, pos, tokens, dx0) -> (d_embed, d_pos) — first segment: no dx."""
+
+    def seg_embed_bwd(embed, pos, tokens, dx):
+        _, vjp = jax.vjp(lambda e, p: _embed_forward(e, p, tokens), embed, pos)
+        return vjp(dx)
+
+    return seg_embed_bwd
+
+
+def make_seg_block_fwd(cfg: ModelConfig):
+    """(12 block params, x) -> (y,)."""
+
+    def seg_block_fwd(*args):
+        return (_block_forward(cfg, list(args[:12]), args[12]),)
+
+    return seg_block_fwd
+
+
+def make_seg_block_bwd(cfg: ModelConfig):
+    """(12 block params, x, dy) -> (dx, 12 grads in manifest order)."""
+
+    def seg_block_bwd(*args):
+        block_params, x, dy = list(args[:12]), args[12], args[13]
+        _, vjp = jax.vjp(
+            lambda ps, xin: _block_forward(cfg, ps, xin), block_params, x
+        )
+        dps, dx = vjp(dy)
+        return (dx, *dps)
+
+    return seg_block_bwd
+
+
+def make_seg_head_loss_fwd(cfg: ModelConfig):
+    """(lnf.g, lnf.b, embed[tied], x, targets, mask) -> (loss,)."""
+
+    def seg_head_loss_fwd(lnf_g, lnf_b, embed, x, targets, mask):
+        return (_head_loss(lnf_g, lnf_b, embed, x, targets, mask),)
+
+    return seg_head_loss_fwd
+
+
+def make_seg_head_loss_bwd(cfg: ModelConfig):
+    """(lnf.g, lnf.b, embed[tied], x, targets, mask)
+    -> (dx, d_lnf.g, d_lnf.b, d_embed_tied) — loss cotangent is 1."""
+
+    def seg_head_loss_bwd(lnf_g, lnf_b, embed, x, targets, mask):
+        return jax.grad(
+            lambda lg, lb, e, xx: _head_loss(lg, lb, e, xx, targets, mask),
+            argnums=(3, 0, 1, 2),
+        )(lnf_g, lnf_b, embed, x)
+
+    return seg_head_loss_bwd
+
+
+def make_seg_head_logits(cfg: ModelConfig):
+    """(lnf.g, lnf.b, embed[tied], x) -> (logits,)."""
+
+    def seg_head_logits(lnf_g, lnf_b, embed, x):
+        return (_head_logits(lnf_g, lnf_b, embed, x),)
+
+    return seg_head_logits
+
+
+def segment_table(cfg: ModelConfig):
+    """Manifest ``segments`` entries for one config.
+
+    Mirrors ``rust/src/model/mod.rs::segment_specs`` exactly: an ordered,
+    contiguous partition of the parameter inventory into embed / block{i} /
+    head, with the tied token embedding re-listed on the head segment and
+    activations shaped (batch, seq_len, d_model) chaining between segments.
+    """
+    act = [cfg.batch, cfg.seq_len, cfg.d_model]
+    n = len(param_specs(cfg))
+    seg = lambda base: f"seg_{base}_{cfg.name}"
+    segs = [{
+        "name": "embed",
+        "fwd": seg("embed_fwd"),
+        "bwd": seg("embed_bwd"),
+        "params": [0, 2],
+        "tied": [],
+        "act_in": [],
+        "act_out": list(act),
+    }]
+    for i in range(cfg.n_layer):
+        segs.append({
+            "name": f"block{i}",
+            "fwd": seg(f"block{i}_fwd"),
+            "bwd": seg(f"block{i}_bwd"),
+            "params": [2 + 12 * i, 2 + 12 * (i + 1)],
+            "tied": [],
+            "act_in": list(act),
+            "act_out": list(act),
+        })
+    segs.append({
+        "name": "head",
+        "fwd": seg("head_loss_fwd"),
+        "bwd": seg("head_loss_bwd"),
+        "predict": seg("head_logits"),
+        "params": [n - 2, n],
+        "tied": [0],
+        "act_in": list(act),
+        "act_out": [],
+    })
+    return segs

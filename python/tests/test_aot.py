@@ -117,6 +117,73 @@ class TestManifest:
         for name in ("gpt2_117m", "gpt2_345m"):
             assert manifest["configs"][name]["inventory_only"]
 
+    def test_segments_bind_to_emitted_programs(self, manifest):
+        """Every step-graph segment references lowered programs and the
+        table is a contiguous in-order partition of the inventory."""
+        if "segments" not in manifest:
+            pytest.skip("artifacts predate the step graph")
+        for cfg_name, segs in manifest["segments"].items():
+            cfg = manifest["configs"][cfg_name]
+            cursor = 0
+            for seg in segs:
+                assert seg["fwd"] in manifest["programs"], seg["fwd"]
+                assert seg["bwd"] in manifest["programs"], seg["bwd"]
+                if "predict" in seg:
+                    assert seg["predict"] in manifest["programs"]
+                start, end = seg["params"]
+                assert start == cursor and end > start
+                cursor = end
+            assert cursor == len(cfg["params"]), cfg_name
+
+
+SEG_CFG = M.ModelConfig("segtest", vocab=32, n_layer=2, d_model=16, n_head=2,
+                        seq_len=8, batch=2)
+
+
+class TestSegmentEmission:
+    def test_segment_programs_match_table(self, tmp_path):
+        """emit_segment_programs emits exactly the programs segment_table
+        binds, with the fixed argument-protocol arities."""
+        em = aot.Emitter(str(tmp_path), skip_existing=True)
+        table = M.segment_table(SEG_CFG)
+        names = set()
+        for seg in table:
+            names.update([seg["fwd"], seg["bwd"]])
+            if "predict" in seg:
+                names.add(seg["predict"])
+        # pre-create the files so emit() records IO specs without lowering
+        for name in names:
+            (tmp_path / f"{name}.hlo.txt").touch()
+        aot.emit_segment_programs(em, SEG_CFG)
+        assert names <= set(em.programs)
+        for seg in table:
+            start, end = seg["params"]
+            own, tied = end - start, len(seg["tied"])
+            head = seg["name"] == "head"
+            fwd = em.programs[seg["fwd"]]
+            # own ++ tied ++ (tokens | act_in) ++ (targets, mask — head only)
+            assert len(fwd["inputs"]) == own + tied + 1 + (2 if head else 0)
+            assert len(fwd["outputs"]) == 1
+            bwd = em.programs[seg["bwd"]]
+            # same, non-head appends the upstream cotangent
+            assert len(bwd["inputs"]) == own + tied + 1 + (2 if head else 1)
+            # dx (non-first only) ++ d_own ++ d_tied
+            dx = 0 if start == 0 else 1
+            assert len(bwd["outputs"]) == dx + own + tied
+
+    def test_segment_program_lowers_to_hlo(self, tmp_path):
+        em = aot.Emitter(str(tmp_path), skip_existing=False)
+        c = SEG_CFG
+        em.emit(
+            "seg_embed_fwd_segtest", M.make_seg_embed_fwd(c),
+            [("embed", (c.vocab, c.d_model), "f32"),
+             ("pos", (c.seq_len, c.d_model), "f32"),
+             ("tokens", (c.batch, c.seq_len), "i32")],
+            [("x", (c.batch, c.seq_len, c.d_model), "f32")],
+        )
+        text = (tmp_path / "seg_embed_fwd_segtest.hlo.txt").read_text()
+        assert "ENTRY" in text and "HloModule" in text
+
 
 class TestHloLoweringRoundtrip:
     def test_lowered_text_runs_under_jax(self):

@@ -156,3 +156,84 @@ class TestPredict:
         np.testing.assert_allclose(np.asarray(logits),
                                    np.asarray(M.forward(CFG, params, toks)),
                                    rtol=1e-6)
+
+
+class TestSegments:
+    """The step-graph decomposition must reproduce the monolithic step."""
+
+    def _run_segments(self, params, toks, targets, mask):
+        """Compose the segment programs exactly as the Rust trainer does."""
+        n = len(params)
+        embed, pos = params[0], params[1]
+        head = [params[n - 2], params[n - 1], embed]
+        # forward: embed -> blocks -> head loss, saving segment inputs
+        (x,) = M.make_seg_embed_fwd(CFG)(embed, pos, toks)
+        acts = [x]
+        for i in range(CFG.n_layer):
+            blk = params[2 + 12 * i : 2 + 12 * (i + 1)]
+            (x,) = M.make_seg_block_fwd(CFG)(*blk, x)
+            acts.append(x)
+        (loss,) = M.make_seg_head_loss_fwd(CFG)(*head, acts[-1], targets,
+                                                mask)
+        # backward: head -> blocks (reverse) -> embed
+        grads = [None] * n
+        dx, dg, db, d_tied = M.make_seg_head_loss_bwd(CFG)(
+            *head, acts[-1], targets, mask)
+        grads[n - 2], grads[n - 1] = dg, db
+        d_embed_acc = d_tied
+        for i in reversed(range(CFG.n_layer)):
+            blk = params[2 + 12 * i : 2 + 12 * (i + 1)]
+            outs = M.make_seg_block_bwd(CFG)(*blk, acts[i], dx)
+            dx = outs[0]
+            for j, g in enumerate(outs[1:]):
+                grads[2 + 12 * i + j] = g
+        d_embed, d_pos = M.make_seg_embed_bwd(CFG)(embed, pos, toks, dx)
+        grads[0] = d_embed + d_embed_acc
+        grads[1] = d_pos
+        return loss, grads
+
+    def test_segment_composition_matches_train_step(self, params):
+        rng = np.random.default_rng(10)
+        toks = _batch(rng)
+        mask = jnp.ones((CFG.batch, CFG.seq_len))
+        outs = M.make_train_step(CFG)(*params, toks, toks, mask)
+        loss, grads = self._run_segments(params, toks, toks, mask)
+        np.testing.assert_allclose(float(loss), float(outs[0]), rtol=1e-6)
+        for (name, _, _), g, gm in zip(M.param_specs(CFG), grads, outs[1:]):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(gm),
+                                       rtol=1e-4, atol=1e-6, err_msg=name)
+
+    def test_head_logits_segment_matches_forward(self, params):
+        rng = np.random.default_rng(11)
+        toks = _batch(rng)
+        x = M._embed_forward(params[0], params[1], toks)
+        for i in range(CFG.n_layer):
+            x = M._block_forward(CFG, params[2 + 12 * i : 2 + 12 * (i + 1)],
+                                 x)
+        (logits,) = M.make_seg_head_logits(CFG)(params[-2], params[-1],
+                                                params[0], x)
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(M.forward(CFG, params, toks)),
+                                   rtol=1e-6)
+
+    def test_segment_table_contract(self):
+        """Contiguous in-order partition, tied head, chained activations —
+        the invariants rust/src/runtime/graph.rs::validate enforces."""
+        segs = M.segment_table(CFG)
+        n = len(M.param_specs(CFG))
+        assert segs[0]["name"] == "embed" and segs[-1]["name"] == "head"
+        assert len(segs) == CFG.n_layer + 2
+        cursor = 0
+        for seg in segs:
+            start, end = seg["params"]
+            assert start == cursor and end > start
+            cursor = end
+        assert cursor == n
+        assert segs[0]["act_in"] == [] and segs[-1]["act_out"] == []
+        act = [CFG.batch, CFG.seq_len, CFG.d_model]
+        for a, b in zip(segs, segs[1:]):
+            assert a["act_out"] == b["act_in"] == act
+        head = segs[-1]
+        assert head["tied"] == [0]
+        assert head["predict"] == f"seg_head_logits_{CFG.name}"
+        assert all("predict" not in s for s in segs[:-1])

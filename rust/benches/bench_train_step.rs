@@ -361,6 +361,83 @@ fn bench_compressed_train_reduce(b: &Bench) {
     }
 }
 
+/// Step-graph vs monolithic on the artifact-free native executor: the
+/// forward/backward pass segmented (per-layer programs through the
+/// graph runner) vs pinned to the single train_step program, plus the
+/// full coordinator step under `--zero 3` both ways — where only the
+/// segmented path gets per-segment gather windows. Prints the headline
+/// memory pair: peak gather-window bytes per replica, full-model
+/// (monolithic window) vs max-segment (step graph).
+fn bench_step_graph(b: &Bench) {
+    header("step graph: segmented vs monolithic native train step");
+    let hyper = Hyper::paper_defaults(OptKind::Adapprox, &hd());
+    let base_opts = || TrainOptions {
+        steps: 4,
+        eval_every: 0,
+        log_every: usize::MAX,
+        native: true,
+        threads: 2,
+        ..Default::default()
+    };
+    for monolithic in [false, true] {
+        let mut opts = base_opts();
+        opts.monolithic = monolithic;
+        let mut tr =
+            Trainer::new_native_ref(hyper.clone(), opts).unwrap();
+        let cfg = tr.cfg.clone();
+        let corpus = adapprox::data::BigramCorpus::new(
+            cfg.vocab, 4, adapprox::coordinator::CORPUS_SEED,
+        );
+        let sampler = |len: usize, rng: &mut Rng| corpus.sample(len, rng);
+        let mut it = BatchIterator::new(
+            &sampler, cfg.batch, cfg.seq_len, 1, Split::Train, (0, 1),
+        );
+        let batch = it.next_batch();
+        let mode = if monolithic { "monolithic" } else { "segmented" };
+        b.run(&format!("native_ref_fwd_bwd_{mode}"), || {
+            std::hint::black_box(tr.forward_backward(&batch).unwrap());
+        });
+    }
+    // the full coordinator step under --zero 3, both ways; the segmented
+    // trainer reports its peak per-segment gather window afterwards
+    let mut peak_seg_bytes = 0u64;
+    let mut total_bytes = 0u64;
+    for monolithic in [false, true] {
+        let mut opts = base_opts();
+        opts.shards = 2;
+        opts.zero_level = 3;
+        opts.monolithic = monolithic;
+        let mut tr =
+            Trainer::new_native_ref(hyper.clone(), opts).unwrap();
+        let cfg = tr.cfg.clone();
+        let corpus = adapprox::data::BigramCorpus::new(
+            cfg.vocab, 4, adapprox::coordinator::CORPUS_SEED,
+        );
+        let sampler = |len: usize, rng: &mut Rng| corpus.sample(len, rng);
+        let mut its = vec![BatchIterator::new(
+            &sampler, cfg.batch, cfg.seq_len, 1, Split::Train, (0, 1),
+        )];
+        let mode = if monolithic { "monolithic" } else { "segmented" };
+        b.run(&format!("native_ref_step_zero3_{mode}"), || {
+            std::hint::black_box(tr.train_one_step(&mut its).unwrap());
+        });
+        if !monolithic {
+            peak_seg_bytes = 4 * tr.peak_window_elems() as u64;
+            total_bytes = cfg
+                .params
+                .iter()
+                .map(|p| 4 * p.numel() as u64)
+                .sum();
+        }
+    }
+    println!(
+        "  peak gather-window bytes/replica under --zero 3: full-model \
+         {total_bytes} (monolithic window) vs max-segment \
+         {peak_seg_bytes} ({:.1}%)",
+        100.0 * peak_seg_bytes as f64 / total_bytes as f64
+    );
+}
+
 /// Serial vs pooled bucketed all-reduce: 4 replicas × ~1.3M elements.
 fn bench_allreduce(b: &Bench) {
     header("gradient all-reduce: per-tensor serial vs bucketed pooled");
@@ -394,6 +471,7 @@ fn main() {
     bench_reduce_scatter(&b);
     bench_compressed_train_reduce(&b);
     bench_all_gather_params(&b);
+    bench_step_graph(&b);
 
     let Ok(rt) = Runtime::new("artifacts") else {
         println!("run `make artifacts` for the PJRT train_step benches");

@@ -19,7 +19,7 @@ pub struct Args {
 /// Flags that take no value.
 const BOOL_FLAGS: &[&str] = &[
     "help", "quick", "full", "no-clip", "cos-guidance", "fast-srsi",
-    "native", "v", "vv", "q",
+    "native", "monolithic", "v", "vv", "q",
 ];
 
 impl Args {

@@ -254,7 +254,10 @@ pub fn memory_table(cfg: &ConfigSpec, k_init: usize, kmax_frac: f64) -> Vec<Memo
 /// weights one rank holds without `--zero 3`) and `param zero3 max-shard`
 /// (the largest durable parameter slice outside the gather window). For
 /// these rows `pct_of_adamw` is the percentage of the corresponding
-/// **full replica**, not of AdamW state.
+/// **full replica**, not of AdamW state. Canonical-layout inventories
+/// additionally get the ZeRO-3 gather-window pair (`gather-window
+/// full-model` vs `gather-window max-segment`) pricing the transient
+/// forward/backward materialization with and without the step graph.
 pub fn memory_table_sharded(
     cfg: &ConfigSpec,
     k_init: usize,
@@ -299,6 +302,38 @@ pub fn memory_table_sharded(
             .max()
             .unwrap_or(0),
     );
+    // Gather-window rows: what one replica *transiently* materializes for
+    // the forward/backward passes under `--zero 3` (on top of its durable
+    // shard). The monolithic program needs the full model gathered at
+    // once; the step graph opens one per-segment window at a time, so the
+    // peak is the largest single window — the segment's owned parameters
+    // plus its tied reads (`SegmentSpec::window_elems`). Priced only when
+    // the inventory follows the canonical layout the segment table
+    // describes (embed/pos + 12 per block + final LN). The max-segment
+    // row's `pct_of_adamw` is the percentage of the full-model window.
+    if cfg.params.len() == 12 * cfg.n_layer + 4 {
+        let segs = crate::model::segment_specs(cfg);
+        let full = param_bytes(cfg);
+        let max_seg = segs
+            .iter()
+            .map(|s| 4 * s.window_elems(&cfg.params) as u64)
+            .max()
+            .unwrap_or(0);
+        rows.push(MemoryRow {
+            label: "gather-window full-model".into(),
+            bytes: full,
+            pct_of_adamw: 100.0,
+        });
+        rows.push(MemoryRow {
+            label: "gather-window max-segment".into(),
+            bytes: max_seg,
+            pct_of_adamw: if full > 0 {
+                100.0 * max_seg as f64 / full as f64
+            } else {
+                f64::NAN
+            },
+        });
+    }
     // Wire rows: the gradient payload one replica contributes to each
     // reduce collective, priced under every `--compress` codec over the
     // same inventory (`comms::encoded_bytes_estimate`). The `none` row is
@@ -550,6 +585,36 @@ mod tests {
         let (w2, _) = find(&c, "wire grads int8");
         let (w1, _) = find(&b, "wire grads int8");
         assert_eq!(w1, w2);
+    }
+
+    #[test]
+    fn gather_window_rows_price_the_segment_table() {
+        // multi_cfg is not canonical-layout: no gather-window rows
+        let rows = memory_table_sharded(&multi_cfg(), 1, 0.25, 2);
+        assert!(rows
+            .iter()
+            .all(|r| !r.label.starts_with("gather-window")));
+        // the native reference config is: full-model vs max-segment
+        let cfg = crate::model::build_config("ref", 32, 2, 16, 2, 8, 2);
+        let rows = memory_table_sharded(&cfg, 1, 0.25, 2);
+        let find = |label: &str| -> u64 {
+            rows.iter()
+                .find(|r| r.label == label)
+                .unwrap_or_else(|| panic!("row {label} missing"))
+                .bytes
+        };
+        let full = find("gather-window full-model");
+        assert_eq!(full, param_bytes(&cfg));
+        let max_seg = find("gather-window max-segment");
+        // largest window is one block: 12 params, 3280 elems
+        assert_eq!(max_seg, 4 * 3280);
+        assert!(max_seg < full);
+        // eleven rows beyond the unsharded table: 2 grad + 2 param +
+        // 2 gather-window + 5 wire
+        assert_eq!(
+            memory_table(&cfg, 1, 0.25).len() + 11,
+            rows.len()
+        );
     }
 
     #[test]

@@ -19,8 +19,8 @@ pub use memory::{
 pub use metrics::{perplexity, CsvWriter, JsonlWriter, LossTracker};
 pub use replicas::{
     all_gather_params_into, allreduce_mean, allreduce_mean_into,
-    allreduce_mean_pooled, mean_loss, reduce_scatter_into,
-    release_gathered_params,
+    allreduce_mean_pooled, gather_param_subset_into, mean_loss,
+    reduce_scatter_into, release_gathered_params, release_param_subset,
 };
 pub use schedule::LrSchedule;
 pub use trainer::{HistoryRow, TrainOptions, Trainer, CORPUS_SEED};

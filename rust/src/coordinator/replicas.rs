@@ -376,6 +376,107 @@ pub fn release_gathered_params(full: &mut Vec<Tensor>) {
     full.shrink_to_fit();
 }
 
+/// Per-segment ZeRO-3 gather window: materialize only the parameters in
+/// `indices` (a segment's owned range plus its tied reads) whose slot in
+/// `full` is not already resident, and record exactly which indices this
+/// call materialized in `gathered` (a reused buffer) so the matching
+/// [`release_param_subset`] drops those and nothing else.
+///
+/// `full` is the full-length manifest-order slot list; an empty slot
+/// (`numel() == 0`) means "not resident on this replica". Because the
+/// window only touches empty slots, windows nest cleanly: inside a
+/// full-model [`all_gather_params_into`] materialization every per-segment
+/// window is a no-op (it gathers and releases nothing), and under
+/// `--zero < 3` — where `full` is the durably resident parameter list —
+/// the step graph runs with zero gather traffic. Peak resident parameter
+/// elements under strict per-segment windows is therefore
+/// `StepGraph::max_segment_elems` (owned range + tied reads of the widest
+/// segment), the number `memory::memory_table_sharded` prices and e2e
+/// asserts.
+///
+/// Documented deviation from the r2 allocation contract (allowlisted):
+/// materialized slots are fresh tensor allocations by design — the slot
+/// was empty, that is the point of the window — and the bucket descriptor
+/// list is per-call, exactly like [`all_gather_params_into`].
+pub fn gather_param_subset_into(
+    owned: &[Vec<Tensor>],
+    plan: &[Range<usize>],
+    indices: &[usize],
+    full: &mut [Tensor],
+    gathered: &mut Vec<usize>,
+    pool: &Pool,
+) -> Result<()> {
+    let n_params = full.len();
+    validate_shard_plan(plan, n_params)?;
+    if owned.len() != plan.len() {
+        bail!(
+            "segment gather shard-list count mismatch: {} owned lists, {} \
+             plan ranges",
+            owned.len(),
+            plan.len()
+        );
+    }
+    for (s, (range, own)) in plan.iter().zip(owned).enumerate() {
+        if own.len() != range.len() {
+            bail!(
+                "shard {s} owns {} parameters but its list holds {}",
+                range.len(),
+                own.len()
+            );
+        }
+    }
+    gathered.clear();
+    for &i in indices {
+        if i >= n_params {
+            bail!("segment gather index {i} outside {n_params} parameters");
+        }
+        if full[i].numel() == 0 && !gathered.contains(&i) {
+            gathered.push(i);
+        }
+    }
+    // Materialize the missing slots, then copy bucket-by-bucket over the
+    // pool (disjoint destination chunks, same structure as the full
+    // all-gather, so the copy is bitwise trivially).
+    for (i, t) in full.iter_mut().enumerate() {
+        if !gathered.contains(&i) {
+            continue;
+        }
+        let s = plan.partition_point(|r| r.end <= i);
+        let src = &owned[s][i - plan[s].start];
+        *t = Tensor::zeros(src.shape.clone());
+    }
+    let mut buckets: Vec<GatherBucket> = Vec::new();
+    for (i, t) in full.iter_mut().enumerate() {
+        if !gathered.contains(&i) {
+            continue;
+        }
+        let s = plan.partition_point(|r| r.end <= i);
+        let src: &[f32] = owned[s][i - plan[s].start].as_f32()?;
+        let data: &mut [f32] = t.as_f32_mut()?;
+        for (bi, chunk) in data.chunks_mut(BUCKET_ELEMS).enumerate() {
+            let off = bi * BUCKET_ELEMS;
+            let take = chunk.len();
+            buckets.push(GatherBucket {
+                out: chunk,
+                src: &src[off..off + take],
+            });
+        }
+    }
+    pool.run_each(&mut buckets, |b| b.out.copy_from_slice(b.src));
+    Ok(())
+}
+
+/// Close a per-segment gather window: empty exactly the slots `gathered`
+/// names (dropping their tensor allocations), leaving every other slot —
+/// resident before the window opened — untouched.
+pub fn release_param_subset(full: &mut [Tensor], gathered: &[usize]) {
+    for &i in gathered {
+        if i < full.len() {
+            full[i] = Tensor::f32(vec![0], vec![]);
+        }
+    }
+}
+
 /// Average a set of scalar losses. The empty list is refused: it used to
 /// average to a silent `0.0`, which an eval or accumulation loop that ran
 /// zero batches would happily log as a perfect loss.
@@ -808,6 +909,103 @@ mod tests {
         all_gather_params_into(&owned, &[0..1, 1..2], &mut full, &pool)
             .unwrap();
         assert_eq!(full.len(), 2);
+    }
+
+    #[test]
+    fn segment_window_gathers_only_its_indices_and_releases_them() {
+        use crate::optim::state::shard_ranges;
+        let mut rng = Rng::new(59);
+        let params: Vec<Tensor> = vec![
+            Tensor::f32(vec![8, 4], rng.normal_vec_f32(32)),
+            Tensor::f32(vec![6], rng.normal_vec_f32(6)),
+            Tensor::f32(vec![4, 4], rng.normal_vec_f32(16)),
+            Tensor::f32(vec![10], rng.normal_vec_f32(10)),
+            Tensor::f32(vec![3], rng.normal_vec_f32(3)),
+        ];
+        let numels: Vec<usize> = params.iter().map(|t| t.numel()).collect();
+        let plan = shard_ranges(&numels, 2);
+        let owned: Vec<Vec<Tensor>> =
+            plan.iter().map(|r| params[r.clone()].to_vec()).collect();
+        // all slots start empty (strict ZeRO-3: nothing resident)
+        let mut full: Vec<Tensor> =
+            (0..5).map(|_| Tensor::f32(vec![0], vec![])).collect();
+        let mut win = Vec::new();
+        let pool = Pool::new(2);
+        // "segment" A: params 0..2 plus a tied read of 4
+        gather_param_subset_into(
+            &owned,
+            &plan,
+            &[0, 1, 4],
+            &mut full,
+            &mut win,
+            &pool,
+        )
+        .unwrap();
+        assert_eq!(win, vec![0, 1, 4]);
+        assert_eq!(full[0], params[0]);
+        assert_eq!(full[1], params[1]);
+        assert_eq!(full[4], params[4]);
+        // non-window slots stay empty: peak resident = this window only
+        assert_eq!(full[2].numel(), 0);
+        assert_eq!(full[3].numel(), 0);
+        release_param_subset(&mut full, &win);
+        assert!(full.iter().all(|t| t.numel() == 0));
+        // "segment" B follows in the vacated buffer
+        gather_param_subset_into(
+            &owned,
+            &plan,
+            &[2, 3],
+            &mut full,
+            &mut win,
+            &pool,
+        )
+        .unwrap();
+        assert_eq!(full[2], params[2]);
+        assert_eq!(full[0].numel(), 0);
+        release_param_subset(&mut full, &win);
+        // bad index refused
+        assert!(gather_param_subset_into(
+            &owned,
+            &plan,
+            &[9],
+            &mut full,
+            &mut win,
+            &pool
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn segment_window_is_noop_inside_full_materialization() {
+        use crate::optim::state::shard_ranges;
+        let mut rng = Rng::new(61);
+        let params: Vec<Tensor> = vec![
+            Tensor::f32(vec![5], rng.normal_vec_f32(5)),
+            Tensor::f32(vec![7], rng.normal_vec_f32(7)),
+        ];
+        let numels: Vec<usize> = params.iter().map(|t| t.numel()).collect();
+        let plan = shard_ranges(&numels, 2);
+        let owned: Vec<Vec<Tensor>> =
+            plan.iter().map(|r| params[r.clone()].to_vec()).collect();
+        let pool = Pool::single();
+        let mut full = Vec::new();
+        all_gather_params_into(&owned, &plan, &mut full, &pool).unwrap();
+        let ptr = full[0].as_f32().unwrap().as_ptr();
+        let mut win = vec![99]; // stale content must be cleared
+        gather_param_subset_into(
+            &owned,
+            &plan,
+            &[0, 1],
+            &mut full,
+            &mut win,
+            &pool,
+        )
+        .unwrap();
+        assert!(win.is_empty(), "window gathered inside a full gather");
+        assert_eq!(full[0].as_f32().unwrap().as_ptr(), ptr);
+        release_param_subset(&mut full, &win); // releases nothing
+        assert_eq!(full[0], params[0]);
+        assert_eq!(full[1], params[1]);
     }
 
     #[test]

@@ -14,8 +14,9 @@ use crate::comms::{
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::metrics::{perplexity, CsvWriter, LossTracker};
 use crate::coordinator::replicas::{
-    all_gather_params_into, allreduce_mean_into, mean_loss,
-    reduce_scatter_into, release_gathered_params,
+    all_gather_params_into, allreduce_mean_into, gather_param_subset_into,
+    mean_loss, reduce_scatter_into, release_gathered_params,
+    release_param_subset,
 };
 use crate::coordinator::schedule::LrSchedule;
 use crate::data::{Batch, BatchIterator, BigramCorpus, Split, Task};
@@ -25,7 +26,10 @@ use crate::optim::{
     ErrorFeedback, Hyper, NativeOptimizer, Optimizer,
     ShardedNativeOptimizer, XlaOptimizer,
 };
-use crate::runtime::{ConfigSpec, Runtime, Tensor};
+use crate::runtime::{
+    ActArena, ConfigSpec, Executor, Ladder, NativeExecutor, Runtime,
+    StepGraph, Tensor,
+};
 use crate::util::pool::Pool;
 use crate::util::rng::Rng;
 
@@ -101,6 +105,14 @@ pub struct TrainOptions {
     /// existing code path, bitwise identical to uncompressed training.
     /// Anything else requires `--native` and `--transport`.
     pub compress: CompressKind,
+    /// `--monolithic`: pin the single-program `train_step`/`eval_step`/
+    /// `predict_step` path even when a step graph is installed. The
+    /// default routes through the graph whenever one exists (manifest
+    /// `segments` on PJRT, the canonical table on the native executor);
+    /// results are bitwise identical either way on the native executor —
+    /// the bench compares the two, and under `--zero 3` only the
+    /// segmented path gets per-segment gather windows.
+    pub monolithic: bool,
 }
 
 impl Default for TrainOptions {
@@ -126,6 +138,7 @@ impl Default for TrainOptions {
             checkpoint_every: 0,
             max_recoveries: 2,
             compress: CompressKind::None,
+            monolithic: false,
         }
     }
 }
@@ -170,9 +183,95 @@ struct ReduceBufs {
 pub type ClusterFactory =
     Box<dyn FnMut(usize, ReduceMode, &CommsOptions) -> Result<Cluster>>;
 
+/// Step-graph runner scratch, allocated once per trainer and reused every
+/// step: the activation arena, the reusable batch tensors (`[tokens,
+/// targets, mask]` — one contiguous slice, so the monolithic path passes
+/// `params ++ batch` as exactly two parts with no per-step argument-list
+/// assembly), the tied-gradient stash, and the per-segment gather-window
+/// bookkeeping.
+struct RunState {
+    arena: ActArena,
+    batch: [Tensor; 3],
+    tied: Vec<(usize, Tensor)>,
+    win_indices: Vec<usize>,
+    gathered: Vec<usize>,
+    peak_window_elems: usize,
+}
+
+impl RunState {
+    fn new(cfg: &ConfigSpec) -> RunState {
+        let shape = vec![cfg.batch, cfg.seq_len];
+        let n = cfg.batch * cfg.seq_len;
+        RunState {
+            arena: ActArena::new(),
+            batch: [
+                Tensor::i32(shape.clone(), vec![0; n]),
+                Tensor::i32(shape.clone(), vec![0; n]),
+                Tensor::f32(shape, vec![0.0; n]),
+            ],
+            tied: Vec::new(),
+            win_indices: Vec::new(),
+            gathered: Vec::new(),
+            peak_window_elems: 0,
+        }
+    }
+}
+
+/// A full-length manifest-order slot list with every slot empty — the
+/// per-segment gather window's "nothing resident" state.
+fn empty_slots(n: usize) -> Vec<Tensor> {
+    (0..n).map(|_| Tensor::f32(vec![0], vec![])).collect()
+}
+
+/// Append one slice to a fixed-size parts array (the zero-heap-allocation
+/// argument form [`Executor::run_parts`] takes).
+fn push_part<'a, const N: usize>(
+    parts: &mut [&'a [Tensor]; N],
+    np: &mut usize,
+    p: &'a [Tensor],
+) -> Result<()> {
+    if *np == N {
+        return Err(anyhow!(
+            "segment argument list exceeds {N} parts (too many tied reads)"
+        ));
+    }
+    parts[*np] = p;
+    *np += 1;
+    Ok(())
+}
+
+/// Elementwise-accumulate a tied gradient into the owner's slot.
+fn add_grad(dst: &mut Tensor, src: &Tensor) -> Result<()> {
+    if dst.shape != src.shape {
+        return Err(anyhow!(
+            "tied gradient shape {:?} != owner slot {:?}",
+            src.shape,
+            dst.shape
+        ));
+    }
+    let d = dst.as_f32_mut()?;
+    let s = src.as_f32()?;
+    for (a, b) in d.iter_mut().zip(s.iter()) {
+        *a += *b;
+    }
+    Ok(())
+}
+
 /// The coordinator.
 pub struct Trainer {
-    pub rt: Rc<Runtime>,
+    /// PJRT runtime behind the executor — `None` when the trainer runs on
+    /// the artifact-free [`NativeExecutor`] (the HLO optimizer backend and
+    /// manifest ladders need `Some`).
+    pub rt: Option<Rc<Runtime>>,
+    /// The executor every forward/backward/eval/predict program routes
+    /// through — PJRT or native, monolithic or step-graph.
+    exec: Rc<dyn Executor>,
+    /// The validated step graph, when one is installed (manifest
+    /// `segments` on PJRT, `model::segment_specs` on the native executor).
+    /// `None` means only the monolithic programs exist.
+    graph: Option<Rc<StepGraph>>,
+    /// Step-graph runner scratch (arena, batch buffers, window tracking).
+    run: RunState,
     pub cfg: ConfigSpec,
     /// Below ZeRO-3: the durable full parameter list. Under `--zero 3`
     /// this is the **gather buffer** — empty outside the
@@ -229,8 +328,47 @@ impl Trainer {
         opts: TrainOptions,
     ) -> Result<Trainer> {
         let cfg = rt.manifest.config(config_name)?.clone();
+        // A manifest `segments` table installs the step graph; without one
+        // the trainer keeps the monolithic programs (older artifacts).
+        let graph = match rt.manifest.segments(config_name) {
+            Some(table) => Some(StepGraph::new(
+                config_name,
+                cfg.params.len(),
+                table.to_vec(),
+                Some(&rt.manifest.programs),
+            )?),
+            None => None,
+        };
+        let exec: Rc<dyn Executor> = rt.clone();
+        Self::build(Some(rt), exec, cfg, graph, hyper, opts)
+    }
+
+    /// Build a trainer over the artifact-free [`NativeExecutor`] reference
+    /// config: no PJRT, no manifest — the step graph comes from
+    /// `model::segment_specs` and the optimizer must be the native backend
+    /// (`opts.native`). This is what un-gates the e2e trainer sweep in CI.
+    pub fn new_native_ref(hyper: Hyper, opts: TrainOptions) -> Result<Trainer> {
+        let native = NativeExecutor::reference();
+        let cfg = native.cfg().clone();
+        let graph = StepGraph::new(
+            &cfg.name,
+            cfg.params.len(),
+            model::segment_specs(&cfg),
+            None,
+        )?;
+        Self::build(None, Rc::new(native), cfg, Some(graph), hyper, opts)
+    }
+
+    fn build(
+        rt: Option<Rc<Runtime>>,
+        exec: Rc<dyn Executor>,
+        cfg: ConfigSpec,
+        graph: Option<StepGraph>,
+        hyper: Hyper,
+        opts: TrainOptions,
+    ) -> Result<Trainer> {
         if cfg.inventory_only {
-            return Err(anyhow!("config {config_name} is inventory-only"));
+            return Err(anyhow!("config {} is inventory-only", cfg.name));
         }
         if !(1..=3).contains(&opts.zero_level) {
             return Err(anyhow!(
@@ -258,7 +396,7 @@ impl Trainer {
         }
         let mut rng = Rng::new(opts.seed);
         let params = model::init_params(&cfg, &mut rng);
-        let opt = Self::build_optimizer(&rt, &cfg, hyper.clone(), &opts)?;
+        let opt = Self::build_optimizer(rt.as_ref(), &cfg, hyper.clone(), &opts)?;
         let grad_plan = if opts.zero_level >= 2 {
             opt.grad_shard_plan().ok_or_else(|| {
                 anyhow!(
@@ -271,13 +409,24 @@ impl Trainer {
         };
         // ZeRO-3: scatter the freshly initialized parameters into the
         // durable per-shard storage; the full list is released and only
-        // ever re-materialized inside a gather window.
+        // ever re-materialized inside a gather window. With per-segment
+        // windows the buffer is instead a full-length slot list of empty
+        // tensors the graph runner gathers into segment by segment.
+        let segmented = opts.zero_level == 3
+            && opts.transport.is_none()
+            && graph.is_some()
+            && !opts.monolithic;
         let (params, owned_params) = if opts.zero_level == 3 {
             let owned: Vec<Vec<Tensor>> = grad_plan
                 .iter()
                 .map(|r| params[r.clone()].to_vec())
                 .collect();
-            (Vec::new(), owned)
+            let buffer = if segmented {
+                empty_slots(cfg.params.len())
+            } else {
+                Vec::new()
+            };
+            (buffer, owned)
         } else {
             (params, Vec::new())
         };
@@ -296,8 +445,12 @@ impl Trainer {
             ..CommsOptions::default()
         };
         let ef = ErrorFeedback::new(opts.compress, opts.threads);
+        let run = RunState::new(&cfg);
         Ok(Trainer {
             rt,
+            exec,
+            graph: graph.map(Rc::new),
+            run,
             cfg,
             params,
             opt,
@@ -326,15 +479,25 @@ impl Trainer {
     /// what a process restart from the checkpoint would hold — moments
     /// are deliberately not serialized, see `checkpoint.rs`).
     fn build_optimizer(
-        rt: &Rc<Runtime>,
+        rt: Option<&Rc<Runtime>>,
         cfg: &ConfigSpec,
         hyper: Hyper,
         opts: &TrainOptions,
     ) -> Result<Box<dyn Optimizer>> {
         if opts.native {
             let ladders = {
-                let rt = rt.clone();
-                move |m: usize, n: usize| rt.manifest.ladder(m, n).ok().cloned()
+                let rt = rt.cloned();
+                // manifest ladders when PJRT artifacts back the run; a
+                // small builtin ladder for the artifact-free native
+                // executor (the optimizer clamps it per matrix shape)
+                move |m: usize, n: usize| match &rt {
+                    Some(rt) => rt.manifest.ladder(m, n).ok().cloned(),
+                    None => Some(Ladder {
+                        buckets: vec![1, 2, 4],
+                        oversample: vec![5, 5, 5],
+                        kmax: 4,
+                    }),
+                }
             };
             if opts.shards > 1 || opts.zero_level >= 2 {
                 Ok(Box::new(
@@ -375,6 +538,12 @@ impl Trainer {
                     opts.zero_level
                 ));
             }
+            let Some(rt) = rt else {
+                return Err(anyhow!(
+                    "the HLO optimizer backend needs PJRT artifacts — the \
+                     artifact-free native executor requires --native"
+                ));
+            };
             Ok(Box::new(XlaOptimizer::new(
                 rt.clone(),
                 cfg.params.clone(),
@@ -610,7 +779,11 @@ impl Trainer {
     /// with this and [`Trainer::release_params`].
     pub fn gather_params(&mut self) -> Result<()> {
         if self.opts.zero_level == 3 {
-            if self.opts.transport.is_some() {
+            if self.segment_windows_active() {
+                // per-segment windows open inside the graph runner; the
+                // "window" here is just the full-length empty slot list
+                self.reset_window_slots();
+            } else if self.opts.transport.is_some() {
                 // same kernel, run by the orchestrator; f32 payloads move
                 // bitwise over the wire
                 self.params = self.cluster_gather()?;
@@ -631,8 +804,95 @@ impl Trainer {
     /// back to its owned shard. No-op below level 3.
     pub fn release_params(&mut self) {
         if self.opts.zero_level == 3 {
-            release_gathered_params(&mut self.params);
+            if self.segment_windows_active() {
+                self.reset_window_slots();
+            } else {
+                release_gathered_params(&mut self.params);
+            }
         }
+    }
+
+    /// True when ZeRO-3 runs with per-segment gather windows: a step graph
+    /// is installed, `--monolithic` is off, and the collectives run
+    /// in-process (transport mode keeps the full-window collective gather,
+    /// numbered by the gather nonce).
+    pub fn segment_windows_active(&self) -> bool {
+        self.opts.zero_level == 3
+            && self.opts.transport.is_none()
+            && self.graph.is_some()
+            && !self.opts.monolithic
+    }
+
+    /// Restore the per-segment window buffer to its resting state: a
+    /// full-length manifest-order slot list with every slot empty.
+    /// Idempotent; only called when per-segment windows are active.
+    fn reset_window_slots(&mut self) {
+        let n = self.cfg.params.len();
+        self.params.truncate(n);
+        for t in self.params.iter_mut() {
+            if t.numel() != 0 {
+                *t = Tensor::f32(vec![0], vec![]);
+            }
+        }
+        while self.params.len() < n {
+            self.params.push(Tensor::f32(vec![0], vec![]));
+        }
+    }
+
+    /// Open segment `si`'s ZeRO-3 gather window: materialize exactly the
+    /// segment's owned range and tied reads that are not already resident,
+    /// and track the peak resident total. No-op unless per-segment windows
+    /// are active — inside a full-window materialization (transport mode,
+    /// explicit [`Trainer::gather_params`]) every slot is already resident
+    /// and the window gathers nothing.
+    fn open_segment_window(
+        &mut self,
+        graph: &StepGraph,
+        si: usize,
+    ) -> Result<()> {
+        if !self.segment_windows_active() {
+            return Ok(());
+        }
+        let seg = &graph.segments[si];
+        self.run.win_indices.clear();
+        self.run.win_indices.extend(seg.params.clone());
+        self.run.win_indices.extend(seg.tied.iter().copied());
+        gather_param_subset_into(
+            &self.owned_params,
+            &self.grad_plan,
+            &self.run.win_indices,
+            &mut self.params,
+            &mut self.run.gathered,
+            &self.reduce_pool,
+        )?;
+        let resident: usize = self.params.iter().map(|t| t.numel()).sum();
+        self.run.peak_window_elems =
+            self.run.peak_window_elems.max(resident);
+        Ok(())
+    }
+
+    /// Close the currently open per-segment window, releasing exactly the
+    /// slots it materialized (slots resident before it opened are left
+    /// untouched, so windows nest cleanly inside a full gather).
+    fn close_segment_window(&mut self) {
+        if !self.segment_windows_active() {
+            return;
+        }
+        release_param_subset(&mut self.params, &self.run.gathered);
+        self.run.gathered.clear();
+    }
+
+    /// Peak resident gathered-parameter elements observed in any single
+    /// per-segment window since construction (0 until a graph step runs;
+    /// meaningful under `--zero 3` with per-segment windows). The e2e
+    /// memory assertion compares this to `StepGraph::max_segment_elems`.
+    pub fn peak_window_elems(&self) -> usize {
+        self.run.peak_window_elems
+    }
+
+    /// The installed step graph, if any.
+    pub fn graph(&self) -> Option<&StepGraph> {
+        self.graph.as_deref()
     }
 
     /// The durable per-shard parameter storage under ZeRO-3 (empty below
@@ -673,6 +933,9 @@ impl Trainer {
                 .map(|r| params[r.clone()].to_vec())
                 .collect();
             release_gathered_params(&mut self.params);
+            if self.segment_windows_active() {
+                self.reset_window_slots();
+            }
         } else {
             self.params = params;
         }
@@ -718,51 +981,222 @@ impl Trainer {
         (full, per_shard)
     }
 
-    fn batch_tensors(&self, b: &Batch) -> [Tensor; 3] {
-        let shape = vec![b.batch, b.seq_len];
-        [
-            Tensor::i32(shape.clone(), b.tokens.clone()),
-            Tensor::i32(shape.clone(), b.targets.clone()),
-            Tensor::f32(shape, b.mask.clone()),
-        ]
+    /// Copy a batch into the trainer's reusable batch tensors. The
+    /// tensors are allocated once at construction, so the hot path makes
+    /// no batch-sized allocations and no batch vector clones.
+    fn load_batch(&mut self, b: &Batch) -> Result<()> {
+        let n = self.cfg.batch * self.cfg.seq_len;
+        if b.batch != self.cfg.batch
+            || b.seq_len != self.cfg.seq_len
+            || b.tokens.len() != n
+            || b.targets.len() != n
+            || b.mask.len() != n
+        {
+            return Err(anyhow!(
+                "batch {}x{} does not match config {}x{}",
+                b.batch,
+                b.seq_len,
+                self.cfg.batch,
+                self.cfg.seq_len
+            ));
+        }
+        let [tok, tgt, mask] = &mut self.run.batch;
+        tok.as_i32_mut()?.copy_from_slice(&b.tokens);
+        tgt.as_i32_mut()?.copy_from_slice(&b.targets);
+        mask.as_f32_mut()?.copy_from_slice(&b.mask);
+        Ok(())
     }
 
-    /// Execute train_step: returns (loss, grads).
+    /// The step graph this run routes through: the installed graph unless
+    /// `--monolithic` pins the single-program path.
+    fn graph_for_run(&self) -> Option<Rc<StepGraph>> {
+        if self.opts.monolithic {
+            None
+        } else {
+            self.graph.clone()
+        }
+    }
+
+    /// Forward walk of the step graph over the loaded batch. Each
+    /// segment's arguments are a handful of contiguous slices (owned param
+    /// range, tied reads, batch buffer or arena slot) pushed into a stack
+    /// array — no per-segment argument list on the heap. `predict` swaps
+    /// the head's loss program for its logits program. Returns the head's
+    /// single output; intermediate activations land in the arena (slot `i`
+    /// = segment `i`'s output), which the backward walk rematerializes
+    /// from.
+    fn graph_forward(
+        &mut self,
+        graph: &StepGraph,
+        predict: bool,
+    ) -> Result<Tensor> {
+        let n = graph.segments.len();
+        self.run.arena.ensure(n.saturating_sub(1));
+        let exec = Rc::clone(&self.exec);
+        let mut head_out = None;
+        for i in 0..n {
+            self.open_segment_window(graph, i)?;
+            let seg = &graph.segments[i];
+            let last = i + 1 == n;
+            let mut parts: [&[Tensor]; 8] = [&[]; 8];
+            let mut np = 0usize;
+            push_part(&mut parts, &mut np, &self.params[seg.params.clone()])?;
+            for &t in &seg.tied {
+                push_part(&mut parts, &mut np, &self.params[t..t + 1])?;
+            }
+            if i == 0 {
+                push_part(&mut parts, &mut np, &self.run.batch[0..1])?;
+            } else {
+                push_part(&mut parts, &mut np, self.run.arena.slice(i - 1))?;
+            }
+            let prog = if last && predict {
+                seg.predict.as_ref().ok_or_else(|| {
+                    anyhow!("segment {} has no predict program", seg.name)
+                })?
+            } else {
+                &seg.fwd
+            };
+            if last && !predict {
+                push_part(&mut parts, &mut np, &self.run.batch[1..3])?;
+            }
+            let mut out = exec.run_parts(prog, &parts[..np])?;
+            let t = out
+                .pop()
+                .ok_or_else(|| anyhow!("{prog}: empty output"))?;
+            if !out.is_empty() {
+                return Err(anyhow!(
+                    "{prog}: expected one output, got {}",
+                    out.len() + 1
+                ));
+            }
+            self.close_segment_window();
+            if last {
+                head_out = Some(t);
+            } else {
+                self.run.arena.set(i, t);
+            }
+        }
+        head_out.ok_or_else(|| anyhow!("step graph produced no output"))
+    }
+
+    /// Backward walk of the step graph: head-first, each segment
+    /// rematerializing its forward internals from the arena-saved input
+    /// plus the upstream cotangent, per the executor argument protocol
+    /// (`[dx (non-first only), d_own..., d_tied...]`). Tied gradients are
+    /// stashed and summed into the owner's slot after the walk — the same
+    /// fixed order the monolithic composition applies, so segmented
+    /// gradients are bitwise identical on the native executor.
+    fn graph_backward(&mut self, graph: &StepGraph) -> Result<Vec<Tensor>> {
+        let n = graph.segments.len();
+        let exec = Rc::clone(&self.exec);
+        let mut grads = empty_slots(self.cfg.params.len());
+        self.run.tied.clear();
+        let mut cot = Tensor::f32(vec![0], vec![]);
+        for i in (0..n).rev() {
+            self.open_segment_window(graph, i)?;
+            let seg = &graph.segments[i];
+            let last = i + 1 == n;
+            let mut parts: [&[Tensor]; 8] = [&[]; 8];
+            let mut np = 0usize;
+            push_part(&mut parts, &mut np, &self.params[seg.params.clone()])?;
+            for &t in &seg.tied {
+                push_part(&mut parts, &mut np, &self.params[t..t + 1])?;
+            }
+            if i == 0 {
+                push_part(&mut parts, &mut np, &self.run.batch[0..1])?;
+            } else {
+                push_part(&mut parts, &mut np, self.run.arena.slice(i - 1))?;
+            }
+            if last {
+                push_part(&mut parts, &mut np, &self.run.batch[1..3])?;
+            } else {
+                push_part(&mut parts, &mut np, std::slice::from_ref(&cot))?;
+            }
+            let mut out = exec.run_parts(&seg.bwd, &parts[..np])?;
+            let expect =
+                usize::from(i > 0) + seg.params.len() + seg.tied.len();
+            if out.len() != expect {
+                return Err(anyhow!(
+                    "{}: {} outputs, expected {expect}",
+                    seg.bwd,
+                    out.len()
+                ));
+            }
+            for &t in seg.tied.iter().rev() {
+                let g = out.pop().ok_or_else(|| {
+                    anyhow!("{}: missing tied gradient", seg.bwd)
+                })?;
+                self.run.tied.push((t, g));
+            }
+            for pi in seg.params.clone().rev() {
+                grads[pi] = out.pop().ok_or_else(|| {
+                    anyhow!("{}: missing gradient {pi}", seg.bwd)
+                })?;
+            }
+            if i > 0 {
+                cot = out.pop().ok_or_else(|| {
+                    anyhow!("{}: missing input cotangent", seg.bwd)
+                })?;
+            }
+            self.close_segment_window();
+        }
+        while let Some((t, g)) = self.run.tied.pop() {
+            add_grad(&mut grads[t], &g)?;
+        }
+        Ok(grads)
+    }
+
+    /// Execute one forward+backward pass: returns (loss, grads).
     ///
-    /// Parameters are passed by reference into the runtime (no per-step
-    /// model copy — EXPERIMENTS.md §Perf).
-    pub fn forward_backward(&self, b: &Batch) -> Result<(f32, Vec<Tensor>)> {
-        let [tokens, targets, mask] = self.batch_tensors(b);
-        let mut args: Vec<&Tensor> = self.params.iter().collect();
-        args.push(&tokens);
-        args.push(&targets);
-        args.push(&mask);
-        let mut out =
-            self.rt.exec_ref(&model::train_step_name(&self.cfg), &args)?;
+    /// Routes through the step graph when one is installed (per-segment
+    /// ZeRO-3 gather windows live there), or the monolithic `train_step`
+    /// program otherwise. Either way the parameters and the reusable
+    /// batch buffers are passed by reference as contiguous slices — no
+    /// per-step model copy and no per-step argument-list assembly
+    /// (EXPERIMENTS.md §Perf).
+    pub fn forward_backward(&mut self, b: &Batch) -> Result<(f32, Vec<Tensor>)> {
+        self.load_batch(b)?;
+        if let Some(graph) = self.graph_for_run() {
+            let loss = self.graph_forward(&graph, false)?.scalar_f32()?;
+            let grads = self.graph_backward(&graph)?;
+            return Ok((loss, grads));
+        }
+        let parts: [&[Tensor]; 2] = [&self.params, &self.run.batch];
+        let mut out = self
+            .exec
+            .run_parts(&model::train_step_name(&self.cfg), &parts)?;
         let grads = out.split_off(1);
         let loss = out[0].scalar_f32()?;
         Ok((loss, grads))
     }
 
-    /// Loss on one batch via eval_step (no gradients).
-    pub fn eval_batch(&self, b: &Batch) -> Result<f32> {
-        let [tokens, targets, mask] = self.batch_tensors(b);
-        let mut args: Vec<&Tensor> = self.params.iter().collect();
-        args.push(&tokens);
-        args.push(&targets);
-        args.push(&mask);
-        let out = self.rt.exec_ref(&model::eval_step_name(&self.cfg), &args)?;
+    /// Loss on one batch, without gradients: the graph's forward walk, or
+    /// the monolithic eval_step.
+    pub fn eval_batch(&mut self, b: &Batch) -> Result<f32> {
+        self.load_batch(b)?;
+        if let Some(graph) = self.graph_for_run() {
+            return self
+                .graph_forward(&graph, false)?
+                .scalar_f32()
+                .map_err(Into::into);
+        }
+        let parts: [&[Tensor]; 2] = [&self.params, &self.run.batch];
+        let out = self
+            .exec
+            .run_parts(&model::eval_step_name(&self.cfg), &parts)?;
         out[0].scalar_f32().map_err(Into::into)
     }
 
     /// Mean validation loss over `n` held-out batches. `n == 0` is
     /// refused: it used to be silently promoted to one batch, and before
     /// that a zero-batch eval would have reported a perfect 0.0 loss.
-    /// Under ZeRO-3 the full parameters must be materialized first:
-    /// bracket the call with [`Trainer::gather_params`] /
-    /// [`Trainer::release_params`] (the training loop's eval cadence does
-    /// this itself).
-    pub fn evaluate(&self, n: usize) -> Result<f64> {
+    /// Under ZeRO-3 with a full-window gather the parameters must be
+    /// materialized first: bracket the call with
+    /// [`Trainer::gather_params`] / [`Trainer::release_params`] (the
+    /// training loop's eval cadence does this itself). With per-segment
+    /// windows the graph runner gathers for itself and no bracketing is
+    /// needed.
+    pub fn evaluate(&mut self, n: usize) -> Result<f64> {
         if n == 0 {
             return Err(anyhow!(
                 "evaluate over zero batches is meaningless — pass n >= 1 \
@@ -770,6 +1204,7 @@ impl Trainer {
             ));
         }
         if self.opts.zero_level == 3
+            && !self.segment_windows_active()
             && self.params.len() != self.cfg.params.len()
         {
             return Err(anyhow!(
@@ -778,18 +1213,27 @@ impl Trainer {
                  release_params after)"
             ));
         }
-        let sampler = |len: usize, rng: &mut Rng| self.corpus.sample(len, rng);
-        let mut it = BatchIterator::new(
-            &sampler,
-            self.cfg.batch,
-            self.cfg.seq_len,
-            self.opts.seed,
-            Split::Valid,
-            (0, 1),
-        );
+        // draw the batches first (the sampler borrows the corpus), then
+        // run them through the mutable eval path
+        let mut batches = Vec::with_capacity(n);
+        {
+            let sampler =
+                |len: usize, rng: &mut Rng| self.corpus.sample(len, rng);
+            let mut it = BatchIterator::new(
+                &sampler,
+                self.cfg.batch,
+                self.cfg.seq_len,
+                self.opts.seed,
+                Split::Valid,
+                (0, 1),
+            );
+            for _ in 0..n {
+                batches.push(it.next_batch());
+            }
+        }
         let mut losses = Vec::with_capacity(n);
-        for _ in 0..n {
-            losses.push(self.eval_batch(&it.next_batch())?);
+        for b in &batches {
+            losses.push(self.eval_batch(b)?);
         }
         Ok(mean_loss(&losses)? as f64)
     }
@@ -997,7 +1441,7 @@ impl Trainer {
         self.set_params(ck.params)?;
         self.step = step;
         self.opt = Self::build_optimizer(
-            &self.rt,
+            self.rt.as_ref(),
             &self.cfg,
             self.hyper.clone(),
             &self.opts,
@@ -1237,17 +1681,14 @@ impl Trainer {
             let step_lr = self.schedule.lr(self.step.min(steps));
             let (tokens, targets, mask, _labels) =
                 task.batch(self.cfg.batch, &mut rng);
-            let shape = vec![self.cfg.batch, self.cfg.seq_len];
-            let tok_t = Tensor::i32(shape.clone(), tokens);
-            let tgt_t = Tensor::i32(shape.clone(), targets);
-            let mask_t = Tensor::f32(shape, mask);
-            let mut args: Vec<&Tensor> = self.params.iter().collect();
-            args.push(&tok_t);
-            args.push(&tgt_t);
-            args.push(&mask_t);
-            let mut out =
-                self.rt.exec_ref(&model::train_step_name(&self.cfg), &args)?;
-            let grads = out.split_off(1);
+            let b = Batch {
+                batch: self.cfg.batch,
+                seq_len: self.cfg.seq_len,
+                tokens,
+                targets,
+                mask,
+            };
+            let (_loss, grads) = self.forward_backward(&b)?;
             self.opt.step(&mut self.params, &grads, step_lr)?;
         }
         self.task_accuracy(task, eval_examples, &mut rng)
@@ -1255,12 +1696,13 @@ impl Trainer {
 
     /// Accuracy = argmax over the task's label tokens at the label position.
     pub fn task_accuracy(
-        &self,
+        &mut self,
         task: &Task,
         n_examples: usize,
         rng: &mut Rng,
     ) -> Result<f64> {
         if self.opts.zero_level == 3
+            && !self.segment_windows_active()
             && self.params.len() != self.cfg.params.len()
         {
             return Err(anyhow!(
@@ -1275,12 +1717,22 @@ impl Trainer {
         let mut total = 0usize;
         while total < n_examples {
             let (tokens, _targets, _mask, labels) = task.batch(b, rng);
-            let tok_t = Tensor::i32(vec![b, s], tokens);
-            let mut args: Vec<&Tensor> = self.params.iter().collect();
-            args.push(&tok_t);
-            let out = self
-                .rt
-                .exec_ref(&model::predict_step_name(&self.cfg), &args)?;
+            if tokens.len() != b * s {
+                return Err(anyhow!(
+                    "task batch has {} tokens, expected {}",
+                    tokens.len(),
+                    b * s
+                ));
+            }
+            self.run.batch[0].as_i32_mut()?.copy_from_slice(&tokens);
+            let out = if let Some(graph) = self.graph_for_run() {
+                vec![self.graph_forward(&graph, true)?]
+            } else {
+                let parts: [&[Tensor]; 2] =
+                    [&self.params, &self.run.batch[0..1]];
+                self.exec
+                    .run_parts(&model::predict_step_name(&self.cfg), &parts)?
+            };
             let logits = out[0].as_f32()?;
             for row in 0..b {
                 // position s-2 predicts the label at s-1

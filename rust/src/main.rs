@@ -89,6 +89,10 @@ fn print_help() {
          (gradient codec for the transport\n\
          \u{20}           reduce, with error feedback; needs --native and \
          --transport)]\n\
+         \u{20}          [--monolithic (pin the single-program step even \
+         when the manifest carries a\n\
+         \u{20}           `segments` step graph; default routes through the \
+         graph — per-segment ZeRO-3 windows)]\n\
          eval      --checkpoint PATH [--eval-batches N]\n\
          finetune  --checkpoint PATH --task 0..4 --steps N --lr F\n\
          memory    print Table 2 (exact analytic over GPT-2 inventories)\n\
@@ -150,6 +154,7 @@ fn train_options(args: &Args) -> Result<TrainOptions> {
             Some(s) => CompressKind::parse(s)?,
             None => CompressKind::None,
         },
+        monolithic: args.has("monolithic"),
     })
 }
 

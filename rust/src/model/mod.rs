@@ -1,11 +1,14 @@
-//! Model-side helpers on the Rust side: parameter initialization and
-//! program-name mapping for a manifest `ConfigSpec`.
+//! Model-side helpers on the Rust side: parameter initialization,
+//! program-name mapping, and the param→segment mapping for a manifest
+//! `ConfigSpec`.
 //!
 //! The architecture itself lives in Layer 2 (python/compile/model.py) and is
-//! executed as the AOT `train_step`/`eval_step`/`predict_step` programs; the
-//! coordinator only needs to *own* the parameter buffers.
+//! executed as the AOT `train_step`/`eval_step`/`predict_step` programs (or
+//! their `seg_*` step-graph slices); the coordinator only needs to *own* the
+//! parameter buffers and know which segment owns which parameter.
 
-use crate::runtime::{ConfigSpec, Tensor};
+use crate::runtime::graph::SegmentSpec;
+use crate::runtime::{ConfigSpec, ParamSpec, Tensor};
 use crate::util::rng::Rng;
 
 /// GPT-2-style initialization, mirroring python/compile/model.py:
@@ -44,6 +47,137 @@ pub fn predict_step_name(cfg: &ConfigSpec) -> String {
 /// Total parameter bytes (fp32 weights themselves, not optimizer state).
 pub fn param_bytes(cfg: &ConfigSpec) -> u64 {
     cfg.params.iter().map(|p| p.numel() as u64 * 4).sum()
+}
+
+/// Build a `ConfigSpec` programmatically, mirroring
+/// `python/compile/model.py::param_specs` exactly (same names, shapes,
+/// kinds, and ordering — the manifest contract). Used for configs that
+/// never pass through an artifact manifest, e.g. the native executor's
+/// reference config.
+pub fn build_config(
+    name: &str,
+    vocab: usize,
+    n_layer: usize,
+    d_model: usize,
+    n_head: usize,
+    seq_len: usize,
+    batch: usize,
+) -> ConfigSpec {
+    let (h, f) = (d_model, 4 * d_model);
+    let mut params = vec![
+        ParamSpec {
+            name: "embed".into(),
+            shape: vec![vocab, h],
+            kind: "matrix".into(),
+        },
+        ParamSpec {
+            name: "pos".into(),
+            shape: vec![seq_len, h],
+            kind: "matrix".into(),
+        },
+    ];
+    for i in 0..n_layer {
+        let p = format!("layer{i}.");
+        let mut push = |suffix: &str, shape: Vec<usize>, kind: &str| {
+            params.push(ParamSpec {
+                name: format!("{p}{suffix}"),
+                shape,
+                kind: kind.into(),
+            });
+        };
+        push("ln1.g", vec![h], "vector");
+        push("ln1.b", vec![h], "vector");
+        push("qkv.w", vec![h, 3 * h], "matrix");
+        push("qkv.b", vec![3 * h], "vector");
+        push("proj.w", vec![h, h], "matrix");
+        push("proj.b", vec![h], "vector");
+        push("ln2.g", vec![h], "vector");
+        push("ln2.b", vec![h], "vector");
+        push("fc1.w", vec![h, f], "matrix");
+        push("fc1.b", vec![f], "vector");
+        push("fc2.w", vec![f, h], "matrix");
+        push("fc2.b", vec![h], "vector");
+    }
+    params.push(ParamSpec {
+        name: "lnf.g".into(),
+        shape: vec![h],
+        kind: "vector".into(),
+    });
+    params.push(ParamSpec {
+        name: "lnf.b".into(),
+        shape: vec![h],
+        kind: "vector".into(),
+    });
+    let param_count = params.iter().map(|p| p.numel()).sum();
+    ConfigSpec {
+        name: name.into(),
+        vocab,
+        n_layer,
+        d_model,
+        n_head,
+        seq_len,
+        batch,
+        inventory_only: false,
+        param_count,
+        params,
+    }
+}
+
+/// The canonical segment table for a config: `embed` (params 0..2), one
+/// `block{i}` per layer (12 params each), and the tied `head` (final LN +
+/// the embedding it reads but does not own). This is the programmatic
+/// default — manifests may carry their own `segments` section, which wins
+/// on the PJRT path.
+pub fn segment_specs(cfg: &ConfigSpec) -> Vec<SegmentSpec> {
+    let act = vec![cfg.batch, cfg.seq_len, cfg.d_model];
+    let n = cfg.params.len();
+    let seg = |base: &str| format!("seg_{base}_{}", cfg.name);
+    let mut segs = vec![SegmentSpec {
+        name: "embed".into(),
+        fwd: seg("embed_fwd"),
+        bwd: seg("embed_bwd"),
+        predict: None,
+        params: 0..2,
+        tied: vec![],
+        act_in: vec![],
+        act_out: act.clone(),
+    }];
+    for i in 0..cfg.n_layer {
+        segs.push(SegmentSpec {
+            name: format!("block{i}"),
+            fwd: seg(&format!("block{i}_fwd")),
+            bwd: seg(&format!("block{i}_bwd")),
+            predict: None,
+            params: 2 + 12 * i..2 + 12 * (i + 1),
+            tied: vec![],
+            act_in: act.clone(),
+            act_out: act.clone(),
+        });
+    }
+    segs.push(SegmentSpec {
+        name: "head".into(),
+        fwd: seg("head_loss_fwd"),
+        bwd: seg("head_loss_bwd"),
+        predict: Some(seg("head_logits")),
+        params: n - 2..n,
+        tied: vec![0],
+        act_in: act,
+        act_out: vec![],
+    });
+    segs
+}
+
+/// param index → segment index, per the canonical table. The memory table
+/// prices the per-segment ZeRO-3 gather window off this mapping.
+pub fn segment_param_map(cfg: &ConfigSpec) -> Vec<usize> {
+    let segs = segment_specs(cfg);
+    let mut map = vec![0usize; cfg.params.len()];
+    for (si, seg) in segs.iter().enumerate() {
+        for pi in seg.params.clone() {
+            map[pi] = si;
+        }
+    }
+    map
 }
 
 #[cfg(test)]
@@ -108,5 +242,60 @@ mod tests {
         let c = cfg();
         assert_eq!(train_step_name(&c), "train_step_t");
         assert_eq!(param_bytes(&c), (16 * 8 + 8 + 24) * 4);
+    }
+
+    #[test]
+    fn build_config_matches_python_inventory() {
+        let c = build_config("ref", 32, 2, 16, 2, 8, 2);
+        assert_eq!(c.params.len(), 2 + 12 * 2 + 2);
+        assert_eq!(c.params[0].name, "embed");
+        assert_eq!(c.params[0].shape, vec![32, 16]);
+        assert_eq!(c.params[1].name, "pos");
+        assert_eq!(c.params[4].name, "layer0.qkv.w");
+        assert_eq!(c.params[4].shape, vec![16, 48]);
+        assert_eq!(c.params[14].name, "layer1.ln1.g");
+        assert_eq!(c.params[25].name, "layer1.fc2.b");
+        assert_eq!(c.params[26].name, "lnf.g");
+        assert!(c.params[4].is_matrix());
+        assert!(!c.params[26].is_matrix());
+        // embed 512 + pos 128 + 2 blocks à 3280 + lnf 32
+        assert_eq!(c.param_count, 512 + 128 + 2 * 3280 + 32);
+    }
+
+    #[test]
+    fn segment_table_validates_and_maps() {
+        let c = build_config("ref", 32, 2, 16, 2, 8, 2);
+        let segs = segment_specs(&c);
+        assert_eq!(segs.len(), c.n_layer + 2);
+        crate::runtime::graph::validate(c.params.len(), &segs, None).unwrap();
+        assert_eq!(segs[0].fwd, "seg_embed_fwd_ref");
+        assert_eq!(segs[1].bwd, "seg_block0_bwd_ref");
+        assert_eq!(
+            segs.last().unwrap().predict.as_deref(),
+            Some("seg_head_logits_ref")
+        );
+        assert_eq!(segs.last().unwrap().tied, vec![0]);
+        let map = segment_param_map(&c);
+        assert_eq!(map[0], 0);
+        assert_eq!(map[1], 0);
+        assert_eq!(map[2], 1);
+        assert_eq!(map[13], 1);
+        assert_eq!(map[14], 2);
+        assert_eq!(map[26], 3);
+        assert_eq!(map[27], 3);
+        // the head's window includes the tied embedding; the per-block
+        // window (3280 elems) is the max
+        let g = crate::runtime::StepGraph::new(
+            &c.name,
+            c.params.len(),
+            segs,
+            None,
+        )
+        .unwrap();
+        assert_eq!(g.max_segment_elems(&c.params), 3280);
+        assert_eq!(
+            g.segments.last().unwrap().window_elems(&c.params),
+            32 + 512
+        );
     }
 }

@@ -19,7 +19,7 @@ use anyhow::{bail, Result};
 use crate::optim::state::{OptimizerState, ParamState, StepInfo};
 use crate::optim::{Hyper, OptKind, Optimizer};
 use crate::optim::rank::RankDecision;
-use crate::runtime::{ParamSpec, Runtime, Tensor};
+use crate::runtime::{Executor, ParamSpec, Runtime, Tensor};
 use crate::util::rng::Rng;
 
 /// HLO-backed optimizer over the full parameter set.
@@ -116,7 +116,7 @@ impl XlaOptimizer {
                 // Between refreshes Alg. 2 does not evaluate xi — use the
                 // fast program without the telemetry reconstruction
                 // (EXPERIMENTS.md §Perf); last_xi keeps the refresh value.
-                let out = self.rt.exec_ref(
+                let out = self.rt.run_program(
                     &format!("adapprox_fast_{sname}_k{bucket}"),
                     &[
                         w, &m_t, &q_t, &u_t, g, &om,
@@ -150,9 +150,9 @@ impl XlaOptimizer {
                 // V computed once at the stored factor bucket
                 let v = self
                     .rt
-                    .exec(
+                    .run_program(
                         &format!("adapprox_vstep_{sname}_k{bucket_stored}"),
-                        &[q_t, u_t, g.clone(), Self::scalar(h.beta2)],
+                        &[&q_t, &u_t, g, &Self::scalar(h.beta2)],
                     )?
                     .remove(0);
                 // Alg. 2 repeat-loop over growing rank buckets
@@ -169,9 +169,9 @@ impl XlaOptimizer {
                     };
                     let kp = (b + p).min(rows.min(cols));
                     let om = self.omega(cols, kp);
-                    let out = self.rt.exec(
+                    let out = self.rt.run_program(
                         &format!("srsi_{sname}_k{b}"),
-                        &[v.clone(), om],
+                        &[&v, &om],
                     )?;
                     let [q2, u2, xi_t] = take3(out)?;
                     xi = xi_t.scalar_f32()? as f64;
@@ -193,19 +193,19 @@ impl XlaOptimizer {
                         None => break,
                     }
                 }
-                let out = self.rt.exec(
+                let out = self.rt.run_program(
                     &format!("adapprox_apply_{sname}"),
                     &[
-                        w.clone(),
-                        m_t,
-                        v,
-                        g.clone(),
-                        Self::scalar(lr),
-                        Self::scalar(h.beta1),
-                        Self::scalar(h.eps),
-                        Self::scalar(h.weight_decay),
-                        Self::scalar(d),
-                        Self::scalar(cos_flag),
+                        w,
+                        &m_t,
+                        &v,
+                        g,
+                        &Self::scalar(lr),
+                        &Self::scalar(h.beta1),
+                        &Self::scalar(h.eps),
+                        &Self::scalar(h.weight_decay),
+                        &Self::scalar(d),
+                        &Self::scalar(cos_flag),
                     ],
                 )?;
                 let [w2, m2] = take2(out)?;
@@ -261,18 +261,6 @@ fn take4(mut v: Vec<Tensor>) -> Result<[Tensor; 4]> {
     Ok([a, b, c, d])
 }
 
-fn take5(mut v: Vec<Tensor>) -> Result<[Tensor; 5]> {
-    if v.len() != 5 {
-        bail!("expected 5 outputs, got {}", v.len());
-    }
-    let e = v.pop().unwrap();
-    let d = v.pop().unwrap();
-    let c = v.pop().unwrap();
-    let b = v.pop().unwrap();
-    let a = v.pop().unwrap();
-    Ok([a, b, c, d, e])
-}
-
 impl Optimizer for XlaOptimizer {
     fn step(
         &mut self,
@@ -294,7 +282,6 @@ impl Optimizer for XlaOptimizer {
 
         for i in 0..self.specs.len() {
             let spec = self.specs[i].clone();
-            let g = grads[i].clone();
             let is_adapprox_matrix = matches!(
                 self.state.states[i],
                 ParamState::Adapprox { .. }
@@ -307,7 +294,7 @@ impl Optimizer for XlaOptimizer {
                     spec.shape[0],
                     spec.shape[1],
                     &mut w,
-                    &g,
+                    &grads[i],
                     lr,
                     t,
                     &mut info,
@@ -315,7 +302,6 @@ impl Optimizer for XlaOptimizer {
                 params[i] = w;
                 continue;
             }
-            let w = params[i].clone();
             match &mut self.state.states[i] {
                 ParamState::AdamW { m, v } => {
                     let prog = if spec.is_matrix() {
@@ -323,19 +309,19 @@ impl Optimizer for XlaOptimizer {
                     } else {
                         format!("vec_adamw_step_{}", spec.shape[0])
                     };
-                    let out = self.rt.exec(
+                    let out = self.rt.run_program(
                         &prog,
                         &[
-                            w,
-                            Tensor::f32(spec.shape.clone(), m.clone()),
-                            Tensor::f32(spec.shape.clone(), v.clone()),
-                            g,
-                            Tensor::scalar(t as f32),
-                            Tensor::scalar(lr),
-                            Tensor::scalar(h.beta1),
-                            Tensor::scalar(h.beta2),
-                            Tensor::scalar(h.eps),
-                            Tensor::scalar(h.weight_decay),
+                            &params[i],
+                            &Tensor::f32(spec.shape.clone(), m.clone()),
+                            &Tensor::f32(spec.shape.clone(), v.clone()),
+                            &grads[i],
+                            &Tensor::scalar(t as f32),
+                            &Tensor::scalar(lr),
+                            &Tensor::scalar(h.beta1),
+                            &Tensor::scalar(h.beta2),
+                            &Tensor::scalar(h.eps),
+                            &Tensor::scalar(h.weight_decay),
                         ],
                     )?;
                     let [w2, m2, v2] = take3(out)?;
@@ -346,19 +332,19 @@ impl Optimizer for XlaOptimizer {
                 ParamState::FactoredVec { m, v } => {
                     let n = spec.shape[0];
                     let m_in = m.clone().unwrap_or_else(|| vec![0.0; n]);
-                    let out = self.rt.exec(
+                    let out = self.rt.run_program(
                         &format!("vec_factored_step_{n}"),
                         &[
-                            w,
-                            Tensor::f32(vec![n], m_in),
-                            Tensor::f32(vec![n], v.clone()),
-                            g,
-                            Tensor::scalar(lr),
-                            Tensor::scalar(h.beta1),
-                            Tensor::scalar(h.beta2),
-                            Tensor::scalar(h.eps),
-                            Tensor::scalar(h.weight_decay),
-                            Tensor::scalar(h.d_eff()),
+                            &params[i],
+                            &Tensor::f32(vec![n], m_in),
+                            &Tensor::f32(vec![n], v.clone()),
+                            &grads[i],
+                            &Tensor::scalar(lr),
+                            &Tensor::scalar(h.beta1),
+                            &Tensor::scalar(h.beta2),
+                            &Tensor::scalar(h.eps),
+                            &Tensor::scalar(h.weight_decay),
+                            &Tensor::scalar(h.d_eff()),
                         ],
                     )?;
                     let [w2, m2, v2] = take3(out)?;
@@ -372,20 +358,20 @@ impl Optimizer for XlaOptimizer {
                     let (rows, cols) = (spec.shape[0], spec.shape[1]);
                     let m_in =
                         m.clone().unwrap_or_else(|| vec![0.0; rows * cols]);
-                    let out = self.rt.exec(
+                    let out = self.rt.run_program(
                         &format!("adafactor_step_{rows}x{cols}"),
                         &[
-                            w,
-                            Tensor::f32(vec![rows, cols], m_in),
-                            Tensor::f32(vec![rows], r.clone()),
-                            Tensor::f32(vec![cols], c.clone()),
-                            g,
-                            Tensor::scalar(lr),
-                            Tensor::scalar(h.beta1),
-                            Tensor::scalar(h.beta2),
-                            Tensor::scalar(1e-30),
-                            Tensor::scalar(h.weight_decay),
-                            Tensor::scalar(h.d_eff()),
+                            &params[i],
+                            &Tensor::f32(vec![rows, cols], m_in),
+                            &Tensor::f32(vec![rows], r.clone()),
+                            &Tensor::f32(vec![cols], c.clone()),
+                            &grads[i],
+                            &Tensor::scalar(lr),
+                            &Tensor::scalar(h.beta1),
+                            &Tensor::scalar(h.beta2),
+                            &Tensor::scalar(1e-30),
+                            &Tensor::scalar(h.weight_decay),
+                            &Tensor::scalar(h.d_eff()),
                         ],
                     )?;
                     if out.len() != 4 {
@@ -402,24 +388,24 @@ impl Optimizer for XlaOptimizer {
                 }
                 ParamState::Came { m, r, c, rc, cc } => {
                     let (rows, cols) = (spec.shape[0], spec.shape[1]);
-                    let out = self.rt.exec(
+                    let out = self.rt.run_program(
                         &format!("came_step_{rows}x{cols}"),
                         &[
-                            w,
-                            Tensor::f32(vec![rows, cols], m.clone()),
-                            Tensor::f32(vec![rows], r.clone()),
-                            Tensor::f32(vec![cols], c.clone()),
-                            Tensor::f32(vec![rows], rc.clone()),
-                            Tensor::f32(vec![cols], cc.clone()),
-                            g,
-                            Tensor::scalar(lr),
-                            Tensor::scalar(h.beta1),
-                            Tensor::scalar(h.beta2),
-                            Tensor::scalar(h.beta3),
-                            Tensor::scalar(1e-30),
-                            Tensor::scalar(h.eps2),
-                            Tensor::scalar(h.weight_decay),
-                            Tensor::scalar(h.d_eff()),
+                            &params[i],
+                            &Tensor::f32(vec![rows, cols], m.clone()),
+                            &Tensor::f32(vec![rows], r.clone()),
+                            &Tensor::f32(vec![cols], c.clone()),
+                            &Tensor::f32(vec![rows], rc.clone()),
+                            &Tensor::f32(vec![cols], cc.clone()),
+                            &grads[i],
+                            &Tensor::scalar(lr),
+                            &Tensor::scalar(h.beta1),
+                            &Tensor::scalar(h.beta2),
+                            &Tensor::scalar(h.beta3),
+                            &Tensor::scalar(1e-30),
+                            &Tensor::scalar(h.eps2),
+                            &Tensor::scalar(h.weight_decay),
+                            &Tensor::scalar(h.d_eff()),
                         ],
                     )?;
                     if out.len() != 6 {

@@ -86,9 +86,12 @@ pub fn run(args: &Args) -> Result<()> {
         // `memory --shards N`: the per-replica footprint under ZeRO
         // sharding — largest single shard per optimizer row, plus the
         // ZeRO-2 gradient rows (full averaged-grad replica vs the largest
-        // owned slice after the `--zero 2` reduce-scatter) and the ZeRO-3
+        // owned slice after the `--zero 2` reduce-scatter), the ZeRO-3
         // parameter rows (full weight replica vs the largest durable
-        // owned slice outside the `--zero 3` gather window)
+        // owned slice outside the `--zero 3` gather window), and — for
+        // canonical-layout inventories — the gather-window pair: the
+        // transient forward/backward materialization with the monolithic
+        // program (full model) vs the step graph (largest single segment)
         let shards = args.usize_or("shards", 1)?;
         if shards > 1 {
             println!(
@@ -108,7 +111,9 @@ pub fn run(args: &Args) -> Result<()> {
             println!(
                 "(grad/param rows: % is of the full gradient/parameter \
                  replica — the ZeRO-2 `--zero 2` and ZeRO-3 `--zero 3` \
-                 savings; wire rows: per-replica reduce payload under \
+                 savings; gather-window rows: transient forward/backward \
+                 materialization, full model vs largest step-graph \
+                 segment; wire rows: per-replica reduce payload under \
                  each `--compress` codec, % of the exact-f32 frame)"
             );
         }

@@ -85,17 +85,22 @@ impl Runtime {
         Ok(rc)
     }
 
-    /// Validate `args` against the program's input contract.
-    fn validate(&self, spec: &ProgramSpec, args: &[&Tensor]) -> Result<()> {
-        if args.len() != spec.inputs.len() {
+    /// Validate an argument stream against the program's input contract.
+    fn validate<'a>(
+        &self,
+        spec: &ProgramSpec,
+        n_args: usize,
+        args: impl Iterator<Item = &'a Tensor>,
+    ) -> Result<()> {
+        if n_args != spec.inputs.len() {
             bail!(
                 "{}: got {} args, expected {}",
                 spec.name,
-                args.len(),
+                n_args,
                 spec.inputs.len()
             );
         }
-        for (&t, a) in args.iter().zip(&spec.inputs) {
+        for (t, a) in args.zip(&spec.inputs) {
             if t.shape != a.shape {
                 bail!(
                     "{}: arg '{}' shape {:?} != manifest {:?}",
@@ -134,13 +139,36 @@ impl Runtime {
     /// them first cost one full model copy per step before the perf pass —
     /// see EXPERIMENTS.md §Perf).
     pub fn exec_ref(&self, name: &str, args: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.exec_core(name, args.len(), args.iter().copied())
+    }
+
+    /// Execute with the argument list formed by concatenating `parts` —
+    /// the step-graph calling form: a handful of contiguous tensor slices
+    /// (param range, tied params, batch buffers, activation slot) instead
+    /// of a freshly assembled `Vec<&Tensor>` per step.
+    pub fn exec_parts(
+        &self,
+        name: &str,
+        parts: &[&[Tensor]],
+    ) -> Result<Vec<Tensor>> {
+        let n: usize = parts.iter().map(|p| p.len()).sum();
+        self.exec_core(name, n, parts.iter().flat_map(|p| p.iter()))
+    }
+
+    fn exec_core<'a, I>(
+        &self,
+        name: &str,
+        n_args: usize,
+        args: I,
+    ) -> Result<Vec<Tensor>>
+    where
+        I: Iterator<Item = &'a Tensor> + Clone,
+    {
         let spec = self.manifest.program(name)?.clone();
-        self.validate(&spec, args)?;
+        self.validate(&spec, n_args, args.clone())?;
         let exe = self.executable(name)?;
-        let literals: Vec<xla::Literal> = args
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
+        let literals: Vec<xla::Literal> =
+            args.map(|t| t.to_literal()).collect::<Result<_>>()?;
         let t0 = Instant::now();
         let out = exe
             .execute::<xla::Literal>(&literals)

@@ -1,0 +1,550 @@
+//! Step graph: per-layer program boundaries for the forward/backward pass.
+//!
+//! The monolithic `train_step_<cfg>` call is replaced by an ordered list of
+//! [`SegmentSpec`]s — `embed` (batch tokens → first activation), one
+//! `block{i}` per transformer layer (activation → activation), and `head`
+//! (activation + targets/mask → loss) — mirrored in reverse for the
+//! backward pass. Each segment carries typed bindings: a **contiguous**
+//! parameter index range in manifest order, optional tied reads (the LM
+//! head reads the token embedding it does not own), and the activation
+//! shapes that must chain segment-to-segment.
+//!
+//! The payoff is the ZeRO-3 gather window: with per-segment boundaries the
+//! trainer materializes only one segment's parameters at a time, so the
+//! peak gathered-parameter buffer drops from full-model to max-segment
+//! (`coordinator/memory.rs` prices both). The graph is also the boundary
+//! ROADMAP items 3 (serving) and 4 (overlapped pipeline) build on.
+//!
+//! Tables come from the manifest's `segments` section (PJRT path) or from
+//! `model::segment_specs` (the programmatic default, used by the native
+//! executor); both go through [`StepGraph::new`], which refuses malformed
+//! tables with a typed [`SegmentError`].
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::ops::Range;
+
+use crate::runtime::manifest::{ParamSpec, ProgramSpec};
+use crate::runtime::Tensor;
+
+/// One segment of the step graph, with its typed bindings.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SegmentSpec {
+    /// Short name (`embed`, `block0`, `head`) used in errors and accounting.
+    pub name: String,
+    /// Forward program.
+    pub fwd: String,
+    /// Backward program (rematerializing: takes the segment's forward
+    /// input plus the upstream cotangent, returns the downstream cotangent
+    /// followed by the parameter gradients).
+    pub bwd: String,
+    /// Logits program (forward without the loss), present on the head
+    /// segment only — the downstream-task predict path.
+    pub predict: Option<String>,
+    /// Contiguous owned parameter index range, in manifest order.
+    pub params: Range<usize>,
+    /// Extra parameter indices read but owned by another segment (the tied
+    /// LM head reads the token embedding). Tied gradients are summed into
+    /// the owner's slot in a fixed order after the owner's own backward.
+    pub tied: Vec<usize>,
+    /// Activation input shape; empty for the first (batch-fed) segment.
+    pub act_in: Vec<usize>,
+    /// Activation output shape; empty for the last segment (scalar loss).
+    pub act_out: Vec<usize>,
+}
+
+impl SegmentSpec {
+    /// Elements this segment materializes in a ZeRO-3 gather window:
+    /// its owned range plus every tied read.
+    pub fn window_elems(&self, specs: &[ParamSpec]) -> usize {
+        let owned: usize =
+            specs[self.params.clone()].iter().map(|s| s.numel()).sum();
+        let tied: usize =
+            self.tied.iter().map(|&i| specs[i].numel()).sum();
+        owned + tied
+    }
+}
+
+/// Typed refusals for a malformed segment table. Each variant names the
+/// offending segment so manifest errors point at the entry to fix.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SegmentError {
+    /// The table has no segments.
+    Empty,
+    /// The first segment's range does not start at parameter 0.
+    RangeStart { seg: String, got: usize },
+    /// A segment's range start does not meet the previous segment's end:
+    /// the ranges must be a contiguous in-order partition.
+    RangeGap { seg: String, expected: usize, got: usize },
+    /// A segment's range runs backwards (start > end).
+    RangeOrder { seg: String, start: usize, end: usize },
+    /// The last segment's range does not end at the parameter count.
+    RangeEnd { expected: usize, got: usize },
+    /// A tied index is outside the parameter inventory.
+    TiedOutOfRange { seg: String, index: usize, n_params: usize },
+    /// A tied index falls inside the segment's own range (a tied read must
+    /// reference another segment's parameter).
+    TiedOwned { seg: String, index: usize },
+    /// A program named by the table does not exist in the manifest.
+    UnknownProgram { seg: String, program: String },
+    /// Adjacent activation shapes do not chain (producer out != consumer in).
+    ActChain {
+        from: String,
+        to: String,
+        out: Vec<usize>,
+        inp: Vec<usize>,
+    },
+    /// The first segment declares an activation input (it is batch-fed).
+    FirstActIn { seg: String, shape: Vec<usize> },
+    /// The last segment declares an activation output (it emits the loss).
+    LastActOut { seg: String, shape: Vec<usize> },
+}
+
+impl fmt::Display for SegmentError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SegmentError::Empty => write!(f, "segment table is empty"),
+            SegmentError::RangeStart { seg, got } => write!(
+                f,
+                "segment {seg}: first param range must start at 0, got {got}"
+            ),
+            SegmentError::RangeGap { seg, expected, got } => write!(
+                f,
+                "segment {seg}: param range must start at {expected} \
+                 (previous segment's end), got {got}"
+            ),
+            SegmentError::RangeOrder { seg, start, end } => write!(
+                f,
+                "segment {seg}: param range {start}..{end} runs backwards"
+            ),
+            SegmentError::RangeEnd { expected, got } => write!(
+                f,
+                "last segment's param range must end at {expected}, got {got}"
+            ),
+            SegmentError::TiedOutOfRange { seg, index, n_params } => write!(
+                f,
+                "segment {seg}: tied index {index} outside the \
+                 {n_params}-parameter inventory"
+            ),
+            SegmentError::TiedOwned { seg, index } => write!(
+                f,
+                "segment {seg}: tied index {index} lies inside the \
+                 segment's own range"
+            ),
+            SegmentError::UnknownProgram { seg, program } => write!(
+                f,
+                "segment {seg}: program {program:?} not in the manifest"
+            ),
+            SegmentError::ActChain { from, to, out, inp } => write!(
+                f,
+                "activation shapes do not chain: {from} emits {out:?} but \
+                 {to} expects {inp:?}"
+            ),
+            SegmentError::FirstActIn { seg, shape } => write!(
+                f,
+                "segment {seg}: first segment is batch-fed but declares \
+                 activation input {shape:?}"
+            ),
+            SegmentError::LastActOut { seg, shape } => write!(
+                f,
+                "segment {seg}: last segment emits the loss but declares \
+                 activation output {shape:?}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SegmentError {}
+
+/// The validated, ordered step graph for one model config.
+#[derive(Clone, Debug)]
+pub struct StepGraph {
+    pub config: String,
+    pub n_params: usize,
+    pub segments: Vec<SegmentSpec>,
+}
+
+impl StepGraph {
+    /// Validate a segment table and build the graph. `programs` is the
+    /// manifest program inventory when the graph will run on PJRT
+    /// (`None` for the native executor, which synthesizes programs by
+    /// name).
+    pub fn new(
+        config: &str,
+        n_params: usize,
+        segments: Vec<SegmentSpec>,
+        programs: Option<&BTreeMap<String, ProgramSpec>>,
+    ) -> Result<StepGraph, SegmentError> {
+        validate(n_params, &segments, programs)?;
+        Ok(StepGraph {
+            config: config.to_string(),
+            n_params,
+            segments,
+        })
+    }
+
+    /// Largest single-segment gather window (owned range + tied reads),
+    /// in elements — the ZeRO-3 per-segment peak the memory table prices
+    /// and e2e asserts.
+    pub fn max_segment_elems(&self, specs: &[ParamSpec]) -> usize {
+        self.segments
+            .iter()
+            .map(|s| s.window_elems(specs))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// The table checks behind [`StepGraph::new`], exposed for property tests:
+/// contiguous in-order partition of the parameter inventory, tied reads
+/// outside the own range, chained activation shapes, known programs.
+pub fn validate(
+    n_params: usize,
+    segments: &[SegmentSpec],
+    programs: Option<&BTreeMap<String, ProgramSpec>>,
+) -> Result<(), SegmentError> {
+    if segments.is_empty() {
+        return Err(SegmentError::Empty);
+    }
+    let mut expected = 0usize;
+    for (i, seg) in segments.iter().enumerate() {
+        if seg.params.start > seg.params.end {
+            return Err(SegmentError::RangeOrder {
+                seg: seg.name.clone(),
+                start: seg.params.start,
+                end: seg.params.end,
+            });
+        }
+        if i == 0 && seg.params.start != 0 {
+            return Err(SegmentError::RangeStart {
+                seg: seg.name.clone(),
+                got: seg.params.start,
+            });
+        }
+        if i > 0 && seg.params.start != expected {
+            return Err(SegmentError::RangeGap {
+                seg: seg.name.clone(),
+                expected,
+                got: seg.params.start,
+            });
+        }
+        expected = seg.params.end;
+        for &t in &seg.tied {
+            if t >= n_params {
+                return Err(SegmentError::TiedOutOfRange {
+                    seg: seg.name.clone(),
+                    index: t,
+                    n_params,
+                });
+            }
+            if seg.params.contains(&t) {
+                return Err(SegmentError::TiedOwned {
+                    seg: seg.name.clone(),
+                    index: t,
+                });
+            }
+        }
+        if let Some(progs) = programs {
+            for prog in [Some(&seg.fwd), Some(&seg.bwd), seg.predict.as_ref()]
+                .into_iter()
+                .flatten()
+            {
+                if !progs.contains_key(prog) {
+                    return Err(SegmentError::UnknownProgram {
+                        seg: seg.name.clone(),
+                        program: prog.clone(),
+                    });
+                }
+            }
+        }
+    }
+    if expected != n_params {
+        return Err(SegmentError::RangeEnd {
+            expected: n_params,
+            got: expected,
+        });
+    }
+    let first = &segments[0];
+    if !first.act_in.is_empty() {
+        return Err(SegmentError::FirstActIn {
+            seg: first.name.clone(),
+            shape: first.act_in.clone(),
+        });
+    }
+    let last = &segments[segments.len() - 1];
+    if !last.act_out.is_empty() {
+        return Err(SegmentError::LastActOut {
+            seg: last.name.clone(),
+            shape: last.act_out.clone(),
+        });
+    }
+    for w in segments.windows(2) {
+        if w[0].act_out != w[1].act_in {
+            return Err(SegmentError::ActChain {
+                from: w[0].name.clone(),
+                to: w[1].name.clone(),
+                out: w[0].act_out.clone(),
+                inp: w[1].act_in.clone(),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Reusable activation arena: one slot per segment boundary (slot `i`
+/// holds segment `i`'s forward output, which is segment `i+1`'s input and
+/// segment `i+1`'s backward rematerialization point). Tensors are *moved*
+/// into slots — no copies — and the slot list itself is allocated once
+/// and reused across steps.
+#[derive(Default)]
+pub struct ActArena {
+    slots: Vec<Tensor>,
+}
+
+impl ActArena {
+    pub fn new() -> ActArena {
+        ActArena { slots: Vec::new() }
+    }
+
+    /// Grow the slot list to `n` entries (empty tensors); never shrinks.
+    pub fn ensure(&mut self, n: usize) {
+        while self.slots.len() < n {
+            self.slots.push(Tensor::f32(vec![0], vec![]));
+        }
+    }
+
+    /// Move a forward output into slot `i`.
+    pub fn set(&mut self, i: usize, t: Tensor) {
+        self.slots[i] = t;
+    }
+
+    /// Borrow slot `i` as a single-element slice (the zero-assembly
+    /// argument form `Executor::run_parts` takes).
+    pub fn slice(&self, i: usize) -> &[Tensor] {
+        &self.slots[i..i + 1]
+    }
+
+    pub fn get(&self, i: usize) -> &Tensor {
+        &self.slots[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+    use crate::util::rng::Rng;
+
+    fn spec(
+        name: &str,
+        range: Range<usize>,
+        tied: Vec<usize>,
+        act_in: Vec<usize>,
+        act_out: Vec<usize>,
+    ) -> SegmentSpec {
+        SegmentSpec {
+            name: name.to_string(),
+            fwd: format!("seg_{name}_fwd_t"),
+            bwd: format!("seg_{name}_bwd_t"),
+            predict: None,
+            params: range,
+            tied,
+            act_in,
+            act_out,
+        }
+    }
+
+    /// A well-formed 4-segment table over a 28-parameter inventory
+    /// (2 embed + 2×12 block + 2 head), activations chained at [2, 8, 16].
+    fn good_table() -> (usize, Vec<SegmentSpec>) {
+        let act = vec![2usize, 8, 16];
+        let segs = vec![
+            spec("embed", 0..2, vec![], vec![], act.clone()),
+            spec("block0", 2..14, vec![], act.clone(), act.clone()),
+            spec("block1", 14..26, vec![], act.clone(), act.clone()),
+            spec("head", 26..28, vec![0], act, vec![]),
+        ];
+        (28, segs)
+    }
+
+    #[test]
+    fn accepts_well_formed_table() {
+        let (n, segs) = good_table();
+        assert!(validate(n, &segs, None).is_ok());
+    }
+
+    #[test]
+    fn rejects_empty_table() {
+        assert_eq!(validate(4, &[], None), Err(SegmentError::Empty));
+    }
+
+    #[test]
+    fn rejects_gap_overlap_and_misaligned_ends() {
+        let (n, mut segs) = good_table();
+        segs[1].params = 3..14; // gap after embed
+        assert!(matches!(
+            validate(n, &segs, None),
+            Err(SegmentError::RangeGap { expected: 2, got: 3, .. })
+        ));
+        segs[1].params = 1..14; // overlap into embed
+        assert!(matches!(
+            validate(n, &segs, None),
+            Err(SegmentError::RangeGap { .. })
+        ));
+        let (n, mut segs) = good_table();
+        segs[0].params = 1..2;
+        assert!(matches!(
+            validate(n, &segs, None),
+            Err(SegmentError::RangeStart { got: 1, .. })
+        ));
+        let (n, mut segs) = good_table();
+        segs[3].params = 26..27; // short of the inventory
+        assert!(matches!(
+            validate(n, &segs, None),
+            Err(SegmentError::RangeEnd { expected: 28, got: 27 })
+        ));
+        let (n, mut segs) = good_table();
+        segs[2].params = 20..14; // backwards
+        assert!(matches!(
+            validate(n, &segs, None),
+            Err(SegmentError::RangeOrder { start: 20, end: 14, .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_bad_tied_reads() {
+        let (n, mut segs) = good_table();
+        segs[3].tied = vec![99];
+        assert!(matches!(
+            validate(n, &segs, None),
+            Err(SegmentError::TiedOutOfRange { index: 99, .. })
+        ));
+        let (n, mut segs) = good_table();
+        segs[3].tied = vec![27]; // inside its own 26..28 range
+        assert!(matches!(
+            validate(n, &segs, None),
+            Err(SegmentError::TiedOwned { index: 27, .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_unchained_activations_and_batch_edges() {
+        let (n, mut segs) = good_table();
+        segs[1].act_out = vec![2, 8, 17];
+        assert!(matches!(
+            validate(n, &segs, None),
+            Err(SegmentError::ActChain { .. })
+        ));
+        let (n, mut segs) = good_table();
+        segs[0].act_in = vec![2, 8];
+        assert!(matches!(
+            validate(n, &segs, None),
+            Err(SegmentError::FirstActIn { .. })
+        ));
+        let (n, mut segs) = good_table();
+        segs[3].act_out = vec![1];
+        assert!(matches!(
+            validate(n, &segs, None),
+            Err(SegmentError::LastActOut { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_unknown_programs_when_manifest_given() {
+        let (n, segs) = good_table();
+        let programs = BTreeMap::new(); // nothing registered
+        assert!(matches!(
+            validate(n, &segs, Some(&programs)),
+            Err(SegmentError::UnknownProgram { .. })
+        ));
+    }
+
+    #[test]
+    fn window_elems_counts_owned_plus_tied() {
+        let (n, segs) = good_table();
+        let specs: Vec<ParamSpec> = (0..n)
+            .map(|i| ParamSpec {
+                name: format!("p{i}"),
+                shape: vec![i + 1],
+                kind: "vector".into(),
+            })
+            .collect();
+        // head owns params 26, 27 (numels 27, 28) + tied embed (numel 1)
+        assert_eq!(segs[3].window_elems(&specs), 27 + 28 + 1);
+        let g = StepGraph::new("t", n, segs, None).unwrap();
+        // block1 owns 14..26 -> numels 15..=26
+        let block1: usize = (15..=26).sum();
+        assert_eq!(g.max_segment_elems(&specs), block1);
+    }
+
+    /// Forall property: random well-formed tables validate; a random
+    /// single-field corruption (range start/end, tied index, activation
+    /// shape) is always refused with a typed error.
+    #[test]
+    fn forall_random_tables_validate_and_corruptions_are_refused() {
+        forall(24, |rng: &mut Rng| {
+            // build a random contiguous partition of n params
+            let n_seg = 2 + (rng.uniform() * 4.0) as usize; // 2..=5
+            let per: Vec<usize> = (0..n_seg)
+                .map(|_| 1 + (rng.uniform() * 5.0) as usize)
+                .collect();
+            let n: usize = per.iter().sum();
+            let act = vec![1 + (rng.uniform() * 3.0) as usize, 4];
+            let mut segs = Vec::new();
+            let mut start = 0usize;
+            for (i, &len) in per.iter().enumerate() {
+                let a_in = if i == 0 { vec![] } else { act.clone() };
+                let a_out =
+                    if i + 1 == n_seg { vec![] } else { act.clone() };
+                let tied = if i + 1 == n_seg && start > 0 {
+                    vec![0] // head ties to the first parameter
+                } else {
+                    vec![]
+                };
+                segs.push(spec(
+                    &format!("s{i}"),
+                    start..start + len,
+                    tied,
+                    a_in,
+                    a_out,
+                ));
+                start += len;
+            }
+            assert!(
+                validate(n, &segs, None).is_ok(),
+                "well-formed random table refused"
+            );
+            // corrupt one field at random; validation must refuse
+            let victim = (rng.uniform() * n_seg as f64) as usize % n_seg;
+            match (rng.uniform() * 4.0) as usize {
+                0 => segs[victim].params.start += 1,
+                1 => segs[victim].params.end += 1,
+                2 => segs[victim].tied = vec![n + 3],
+                _ => {
+                    // break the activation chain (or a batch edge)
+                    if victim + 1 == n_seg {
+                        segs[victim].act_out = vec![9, 9];
+                    } else {
+                        segs[victim].act_out = vec![7, 7, 7];
+                    }
+                }
+            }
+            assert!(
+                validate(n, &segs, None).is_err(),
+                "corrupted table accepted (victim {victim})"
+            );
+        });
+    }
+
+    #[test]
+    fn arena_moves_and_reuses_slots() {
+        let mut a = ActArena::new();
+        a.ensure(2);
+        a.set(0, Tensor::f32(vec![2], vec![1.0, 2.0]));
+        a.set(1, Tensor::f32(vec![1], vec![3.0]));
+        assert_eq!(a.slice(0).len(), 1);
+        assert_eq!(a.get(0).numel(), 2);
+        a.ensure(1); // never shrinks
+        assert_eq!(a.get(1).numel(), 1);
+    }
+}

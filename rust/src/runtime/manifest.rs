@@ -5,6 +5,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::runtime::graph::SegmentSpec;
 use crate::util::json::Json;
 
 /// One program argument/output: name, dtype ("f32"/"i32"), shape.
@@ -159,6 +160,12 @@ pub struct Manifest {
     pub programs: BTreeMap<String, ProgramSpec>,
     pub ladders: BTreeMap<String, Ladder>,
     pub hyper: HyperDefaults,
+    /// Step-graph tables keyed by config name (manifest `segments`,
+    /// optional): validated at load against the config's parameter
+    /// inventory and the program table, so a malformed table is refused
+    /// before anything runs. Configs without a table fall back to the
+    /// monolithic programs.
+    pub segments: BTreeMap<String, Vec<SegmentSpec>>,
 }
 
 fn req<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
@@ -175,6 +182,52 @@ fn req_f64(j: &Json, key: &str) -> Result<f64> {
     req(j, key)?
         .as_f64()
         .ok_or_else(|| anyhow!("'{key}' is not a number"))
+}
+
+fn parse_usize_arr(j: &Json, key: &str) -> Result<Vec<usize>> {
+    req(j, key)?
+        .as_arr()
+        .ok_or_else(|| anyhow!("'{key}' is not an array"))?
+        .iter()
+        .map(|v| {
+            v.as_usize()
+                .ok_or_else(|| anyhow!("'{key}' entry is not a number"))
+        })
+        .collect()
+}
+
+/// One entry of a manifest `segments` table. `params` is `[start, end)`;
+/// `predict` is present on the head segment only.
+fn parse_segment(j: &Json) -> Result<SegmentSpec> {
+    let range = parse_usize_arr(j, "params")?;
+    if range.len() != 2 {
+        bail!("segment 'params' must be [start, end], got {range:?}");
+    }
+    let name_of = |key: &str| -> Result<String> {
+        Ok(req(j, key)?
+            .as_str()
+            .ok_or_else(|| anyhow!("segment '{key}' is not a string"))?
+            .to_string())
+    };
+    Ok(SegmentSpec {
+        name: name_of("name")?,
+        fwd: name_of("fwd")?,
+        bwd: name_of("bwd")?,
+        predict: match j.get("predict") {
+            Some(p) => Some(
+                p.as_str()
+                    .ok_or_else(|| {
+                        anyhow!("segment 'predict' is not a string")
+                    })?
+                    .to_string(),
+            ),
+            None => None,
+        },
+        params: range[0]..range[1],
+        tied: parse_usize_arr(j, "tied")?,
+        act_in: parse_usize_arr(j, "act_in")?,
+        act_out: parse_usize_arr(j, "act_out")?,
+    })
 }
 
 fn parse_args(j: &Json) -> Result<Vec<ArgSpec>> {
@@ -330,6 +383,38 @@ impl Manifest {
             );
         }
 
+        // Optional step-graph tables: each is validated right here — the
+        // contiguous-partition / tied / activation-chain checks plus the
+        // program-name check against the table parsed above — so a stale
+        // or hand-mangled manifest fails at load, not mid-training.
+        let mut segments = BTreeMap::new();
+        if let Some(s) = j.get("segments") {
+            for (cfg_name, table) in s
+                .as_obj()
+                .ok_or_else(|| anyhow!("segments is not an object"))?
+            {
+                let cfg = configs.get(cfg_name).ok_or_else(|| {
+                    anyhow!("segments table for unknown config '{cfg_name}'")
+                })?;
+                let segs = table
+                    .as_arr()
+                    .ok_or_else(|| {
+                        anyhow!("segments['{cfg_name}'] is not an array")
+                    })?
+                    .iter()
+                    .map(parse_segment)
+                    .collect::<Result<Vec<SegmentSpec>>>()
+                    .with_context(|| format!("segments['{cfg_name}']"))?;
+                crate::runtime::graph::validate(
+                    cfg.params.len(),
+                    &segs,
+                    Some(&programs),
+                )
+                .map_err(|e| anyhow!("segments['{cfg_name}']: {e}"))?;
+                segments.insert(cfg_name.clone(), segs);
+            }
+        }
+
         let hd = req(&j, "hyper_defaults")?;
         let hyper = HyperDefaults {
             beta1: req_f64(hd, "beta1")? as f32,
@@ -354,6 +439,7 @@ impl Manifest {
             programs,
             ladders,
             hyper,
+            segments,
         })
     }
 
@@ -367,6 +453,13 @@ impl Manifest {
         self.programs
             .get(name)
             .ok_or_else(|| anyhow!("unknown program '{name}'"))
+    }
+
+    /// The step-graph table for a config, if the manifest carries one.
+    /// `None` means "no segmented programs were emitted" — callers fall
+    /// back to the monolithic `train_step`/`eval_step`/`predict_step`.
+    pub fn segments(&self, config: &str) -> Option<&[SegmentSpec]> {
+        self.segments.get(config).map(|v| v.as_slice())
     }
 
     /// Ladder for a matrix shape.
@@ -515,6 +608,115 @@ mod tests {
         let err = Manifest::load(&dir).unwrap_err();
         assert!(err.to_string().contains("min dimension"), "{err}");
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    /// A manifest with one 3-parameter config `t`, the segment programs
+    /// registered, and a caller-supplied `segments` body — the fixture
+    /// behind the step-graph load tests.
+    fn write_seg_manifest(name: &str, segments_json: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "adapprox_segments_{name}_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let prog = "{\"file\": \"x.hlo\", \"inputs\": [], \"outputs\": []}";
+        let json = format!(
+            "{{\"configs\": {{\"t\": {{\"vocab\": 4, \"n_layer\": 1, \
+             \"d_model\": 2, \"n_head\": 1, \"seq_len\": 2, \"batch\": 1, \
+             \"inventory_only\": false, \"param_count\": 14, \"params\": [\
+             {{\"name\": \"e\", \"shape\": [4, 2], \"kind\": \"matrix\"}}, \
+             {{\"name\": \"w\", \"shape\": [2, 2], \"kind\": \"matrix\"}}, \
+             {{\"name\": \"h\", \"shape\": [2], \"kind\": \"vector\"}}]}}}}, \
+             \"programs\": {{\"seg_a_fwd_t\": {prog}, \
+             \"seg_a_bwd_t\": {prog}, \"seg_b_fwd_t\": {prog}, \
+             \"seg_b_bwd_t\": {prog}, \"seg_b_logits_t\": {prog}}}, \
+             \"ladders\": {{}}, \"segments\": {{{segments_json}}}, \
+             \"hyper_defaults\": {{\"beta1\": 0.9, \"beta2\": 0.999, \
+             \"eps\": 1e-8, \"weight_decay\": 0.1, \"clip_d\": 1.0, \
+             \"k_init\": 1, \"l\": 5, \"p\": 5, \"xi_thresh\": 0.01, \
+             \"delta_s\": 10, \"f_eta\": 200.0, \"f_omega\": -10.0, \
+             \"f_phi\": -2.5, \"f_tau\": -9.0}}}}"
+        );
+        std::fs::write(dir.join("manifest.json"), json).unwrap();
+        dir
+    }
+
+    const GOOD_SEGMENTS: &str = "\"t\": [\
+        {\"name\": \"a\", \"fwd\": \"seg_a_fwd_t\", \
+         \"bwd\": \"seg_a_bwd_t\", \"params\": [0, 2], \"tied\": [], \
+         \"act_in\": [], \"act_out\": [1, 2, 2]}, \
+        {\"name\": \"b\", \"fwd\": \"seg_b_fwd_t\", \
+         \"bwd\": \"seg_b_bwd_t\", \"predict\": \"seg_b_logits_t\", \
+         \"params\": [2, 3], \"tied\": [0], \"act_in\": [1, 2, 2], \
+         \"act_out\": []}]";
+
+    #[test]
+    fn load_parses_and_validates_segments() {
+        let dir = write_seg_manifest("ok", GOOD_SEGMENTS);
+        let m = Manifest::load(&dir).unwrap();
+        let segs = m.segments("t").expect("table for config t");
+        assert_eq!(segs.len(), 2);
+        assert_eq!(segs[0].name, "a");
+        assert_eq!(segs[0].params, 0..2);
+        assert_eq!(segs[0].predict, None);
+        assert_eq!(segs[1].params, 2..3);
+        assert_eq!(segs[1].tied, vec![0]);
+        assert_eq!(segs[1].predict.as_deref(), Some("seg_b_logits_t"));
+        assert!(m.segments("nano").is_none());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_bad_segment_tables() {
+        // (fixture name, segments body, expected error fragment)
+        for (name, body, frag) in [
+            (
+                "seg_unknown_prog",
+                "\"t\": [{\"name\": \"a\", \"fwd\": \"nope\", \
+                 \"bwd\": \"seg_a_bwd_t\", \"params\": [0, 3], \
+                 \"tied\": [], \"act_in\": [], \"act_out\": []}]",
+                "not in the manifest",
+            ),
+            (
+                "seg_gap",
+                "\"t\": [{\"name\": \"a\", \"fwd\": \"seg_a_fwd_t\", \
+                 \"bwd\": \"seg_a_bwd_t\", \"params\": [0, 1], \
+                 \"tied\": [], \"act_in\": [], \"act_out\": [2]}, \
+                 {\"name\": \"b\", \"fwd\": \"seg_b_fwd_t\", \
+                 \"bwd\": \"seg_b_bwd_t\", \"params\": [2, 3], \
+                 \"tied\": [], \"act_in\": [2], \"act_out\": []}]",
+                "param range must start at 1",
+            ),
+            (
+                "seg_chain",
+                "\"t\": [{\"name\": \"a\", \"fwd\": \"seg_a_fwd_t\", \
+                 \"bwd\": \"seg_a_bwd_t\", \"params\": [0, 2], \
+                 \"tied\": [], \"act_in\": [], \"act_out\": [2, 2]}, \
+                 {\"name\": \"b\", \"fwd\": \"seg_b_fwd_t\", \
+                 \"bwd\": \"seg_b_bwd_t\", \"params\": [2, 3], \
+                 \"tied\": [], \"act_in\": [9, 9], \"act_out\": []}]",
+                "do not chain",
+            ),
+            (
+                "seg_unknown_cfg",
+                "\"zz\": []",
+                "unknown config 'zz'",
+            ),
+            (
+                "seg_bad_range_arity",
+                "\"t\": [{\"name\": \"a\", \"fwd\": \"seg_a_fwd_t\", \
+                 \"bwd\": \"seg_a_bwd_t\", \"params\": [0], \
+                 \"tied\": [], \"act_in\": [], \"act_out\": []}]",
+                "[start, end]",
+            ),
+        ] {
+            let dir = write_seg_manifest(name, body);
+            let err = Manifest::load(&dir)
+                .expect_err(&format!("{name} should fail"));
+            let chain = format!("{err:#}");
+            assert!(chain.contains(frag), "{name}: {chain}");
+            std::fs::remove_dir_all(dir).ok();
+        }
     }
 
     #[test]

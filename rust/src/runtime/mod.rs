@@ -1,17 +1,26 @@
 //! PJRT runtime: load AOT artifacts, compile once, execute from the hot path.
 //!
 //! - [`manifest`] — parses `artifacts/manifest.json` (the binding contract
-//!   emitted by `python/compile/aot.py`).
+//!   emitted by `python/compile/aot.py`), including the `segments` step-graph
+//!   tables.
 //! - [`tensor`] — host-side tensors and Literal conversion.
 //! - [`client`] — the PJRT CPU client wrapper with a lazy executable cache;
 //!   one compiled executable per program, compiled on first use and reused
 //!   for the rest of the process.
+//! - [`graph`] — the step graph: ordered segments with typed bindings
+//!   (param ranges, activation slots, batch inputs) and the activation arena.
+//! - [`exec`] — the [`exec::Executor`] trait the trainer runs against, plus
+//!   the artifact-free deterministic [`exec::NativeExecutor`].
 
 pub mod client;
+pub mod exec;
+pub mod graph;
 pub mod manifest;
 pub mod tensor;
 
 pub use client::{Runtime, RuntimeStats};
+pub use exec::{Executor, NativeExecutor};
+pub use graph::{ActArena, SegmentError, SegmentSpec, StepGraph};
 pub use manifest::{
     ConfigSpec, HyperDefaults, Ladder, Manifest, ParamSpec, ProgramSpec,
 };

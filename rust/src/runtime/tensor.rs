@@ -73,6 +73,13 @@ impl Tensor {
         }
     }
 
+    pub fn as_i32_mut(&mut self) -> Result<&mut Vec<i32>> {
+        match &mut self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
     pub fn as_i32(&self) -> Result<&[i32]> {
         match &self.data {
             TensorData::I32(v) => Ok(v),

@@ -13,6 +13,7 @@ use adapprox::util::rng::Rng;
 fn runtime() -> Option<Runtime> {
     let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
     if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("e2e: SKIP (no PJRT artifacts at {dir})");
         return None;
     }
     Some(Runtime::new(dir).expect("runtime"))
@@ -211,4 +212,80 @@ fn vec_factored_step_parity() {
     assert_allclose(out[0].as_f32().unwrap(), &w_native, 1e-4, 1e-7);
     assert_allclose(out[1].as_f32().unwrap(), &mm, 1e-4, 1e-7);
     assert_allclose(out[2].as_f32().unwrap(), &vv, 1e-4, 1e-10);
+}
+
+#[test]
+fn segmented_step_graph_matches_monolithic_on_pjrt() {
+    // The step-graph parity bar on the HLO backend: the per-segment
+    // programs replay the monolithic train_step's math, but XLA fuses
+    // each program independently, so float-level differences up to
+    // re-association are expected — tolerance-pinned, not bitwise (the
+    // bitwise identity lives in train_e2e over the native executor).
+    use std::rc::Rc;
+
+    use adapprox::coordinator::{TrainOptions, Trainer};
+    use adapprox::data::{BatchIterator, BigramCorpus, Split};
+    use adapprox::optim::{Hyper, OptKind};
+
+    let Some(rt) = runtime() else { return };
+    let rt = Rc::new(rt);
+    if rt.manifest.segments("micro").is_none() {
+        eprintln!("e2e: SKIP (artifacts carry no `segments` table)");
+        return;
+    }
+    let hyper = Hyper::paper_defaults(OptKind::Adapprox, &rt.manifest.hyper);
+    let mk = |monolithic: bool| {
+        let opts = TrainOptions {
+            steps: 1,
+            warmup: 1,
+            eval_every: 0,
+            log_every: usize::MAX,
+            seed: 41,
+            monolithic,
+            ..Default::default()
+        };
+        Trainer::new(rt.clone(), "micro", hyper.clone(), opts).unwrap()
+    };
+    let mut seg = mk(false);
+    let mut mono = mk(true);
+    let cfg = seg.cfg.clone();
+    let corpus = BigramCorpus::new(
+        cfg.vocab,
+        4,
+        adapprox::coordinator::CORPUS_SEED,
+    );
+    let sampler =
+        |len: usize, rng: &mut adapprox::util::rng::Rng| {
+            corpus.sample(len, rng)
+        };
+    let mut it = BatchIterator::new(
+        &sampler,
+        cfg.batch,
+        cfg.seq_len,
+        41,
+        Split::Train,
+        (0, 1),
+    );
+    let b = it.next_batch();
+    let (l_seg, g_seg) = seg.forward_backward(&b).unwrap();
+    let (l_mono, g_mono) = mono.forward_backward(&b).unwrap();
+    assert!(
+        (l_seg - l_mono).abs() < 1e-4,
+        "loss diverged: {l_seg} vs {l_mono}"
+    );
+    assert_eq!(g_seg.len(), g_mono.len());
+    for (a, c) in g_seg.iter().zip(&g_mono) {
+        assert_allclose(
+            a.as_f32().unwrap(),
+            c.as_f32().unwrap(),
+            1e-3,
+            1e-5,
+        );
+    }
+    let e_seg = seg.eval_batch(&b).unwrap();
+    let e_mono = mono.eval_batch(&b).unwrap();
+    assert!(
+        (e_seg - e_mono).abs() < 1e-4,
+        "eval loss diverged: {e_seg} vs {e_mono}"
+    );
 }

@@ -1,0 +1,16 @@
+//! r6 fail fixture: direct runtime execution outside `runtime/`.
+
+pub fn forward(rt: &Runtime, args: &[Tensor]) -> Result<Vec<Tensor>> {
+    let out = rt.exec("train_step_a", args)?;
+    let refs: Vec<&Tensor> = out.iter().collect();
+    let again = rt.exec_ref("eval_step_a", &refs)?;
+    Ok(again)
+}
+
+#[cfg(test)]
+mod tests {
+    // a direct call in test code is fine: tests may drive raw programs
+    pub fn probe(rt: &Runtime) {
+        let _ = rt.exec("train_step_a", &[]);
+    }
+}

@@ -1,0 +1,8 @@
+//! r6 pass fixture: outside `runtime/`, programs run through the
+//! `Executor` trait — backend-generic, and the step graph's per-segment
+//! gather windows stay in the loop.
+
+pub fn forward(exec: &dyn Executor, parts: &[&[Tensor]]) -> Result<f32> {
+    let out = exec.run_parts("train_step_a", parts)?;
+    out[0].scalar_f32().map_err(|e| e.to_string())
+}

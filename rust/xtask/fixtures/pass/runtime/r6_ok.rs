@@ -1,0 +1,10 @@
+//! r6 pass fixture: `runtime/` is exempt — the raw entry points live
+//! here, and the `Executor` impl forwards to them.
+
+pub fn run_program(rt: &Runtime, name: &str) -> Result<Vec<Tensor>> {
+    rt.exec_ref(name, &[])
+}
+
+pub fn run_once(rt: &Runtime, name: &str) -> Result<Vec<Tensor>> {
+    rt.exec(name, &[])
+}

@@ -1,4 +1,4 @@
-//! The five invariant rules, applied to preprocessed source files.
+//! The six invariant rules, applied to preprocessed source files.
 //!
 //! Every rule reads its configuration (domains, token lists, allowlists)
 //! from `rules.toml`; this module is pure mechanism. All line numbers are
@@ -28,6 +28,10 @@
 //!   only in allowlisted files and only next to a `relaxed:` justification
 //!   comment; everywhere else it is an error (stronger orderings are
 //!   always fine).
+//! - **r6 — executor abstraction.** Outside `runtime/`, programs run
+//!   through the `Executor` trait (`run_program` / `run_parts`) — direct
+//!   `.exec(` / `.exec_ref(` calls pin callers to PJRT and bypass the
+//!   backend the step graph is generic over.
 
 use std::fmt;
 use std::path::{Path, PathBuf};
@@ -324,6 +328,36 @@ fn rule_r5(file: &SourceFile, rules: &Rules, out: &mut Vec<Finding>) {
     }
 }
 
+// ------------------------------------------------------------------- r6
+
+fn rule_r6(file: &SourceFile, rules: &Rules, out: &mut Vec<Finding>) {
+    if in_domain(&file.rel, rules.list("r6", "exempt")) {
+        return;
+    }
+    if allow_has(rules.list("r6", "allow"), &file.rel) {
+        return;
+    }
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.is_test {
+            continue;
+        }
+        for tok in rules.list("r6", "forbidden") {
+            if line.code.contains(tok.as_str()) {
+                out.push(Finding {
+                    rule: "r6".into(),
+                    file: file.rel.clone(),
+                    line: idx + 1,
+                    message: format!(
+                        "`{tok}` outside runtime/ — run programs through \
+                         the Executor trait (run_program / run_parts), \
+                         which PJRT and the native executor both implement"
+                    ),
+                });
+            }
+        }
+    }
+}
+
 // ------------------------------------------------------------ entry points
 
 /// Run every rule over one preprocessed file.
@@ -334,6 +368,7 @@ pub fn analyze_file(file: &SourceFile, rules: &Rules) -> Vec<Finding> {
     rule_r3(file, rules, &mut out);
     rule_r4(file, rules, &mut out);
     rule_r5(file, rules, &mut out);
+    rule_r6(file, rules, &mut out);
     out.sort_by(|a, b| {
         (a.line, a.rule.as_str()).cmp(&(b.line, b.rule.as_str()))
     });

@@ -19,7 +19,7 @@ fn usage() -> &'static str {
     "usage: cargo run -p xtask -- analyze [--root DIR] [--rules FILE]\n\
      \n\
      Static-analysis pass over rust/src enforcing the determinism and\n\
-     concurrency invariants (rules r1..r5, configured in xtask/rules.toml).\n\
+     concurrency invariants (rules r1..r6, configured in xtask/rules.toml).\n\
      Exits 0 when clean, 1 with file:line findings otherwise."
 }
 

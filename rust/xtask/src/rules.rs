@@ -15,7 +15,7 @@ use anyhow::{bail, Context, Result};
 /// single-element lists).
 pub type Section = BTreeMap<String, Vec<String>>;
 
-/// The full rule set, keyed by section name (`r1`..`r5`).
+/// The full rule set, keyed by section name (`r1`..`r6`).
 #[derive(Default)]
 pub struct Rules {
     pub sections: BTreeMap<String, Section>,

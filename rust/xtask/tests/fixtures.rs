@@ -42,6 +42,9 @@ fn fail_fixtures_have_exact_findings() {
         ("comms/r3_fail.rs", 4, "r3"),
         ("comms/r3_fail.rs", 5, "r3"),
         ("comms/r3_fail.rs", 7, "r3"),
+        // coordinator/r6_fail.rs: direct .exec( / .exec_ref( outside runtime/
+        ("coordinator/r6_fail.rs", 4, "r6"),
+        ("coordinator/r6_fail.rs", 6, "r6"),
         // lib.rs: crate root missing #![deny(unsafe_code)]
         ("lib.rs", 1, "r4"),
         // linalg/r1_fail.rs: HashMap / Instant / SystemTime in the domain
