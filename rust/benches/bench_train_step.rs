@@ -9,8 +9,9 @@
 //! reports peak resident averaged-gradient bytes per replica; ZeRO-3
 //! updates per-shard owned *parameter* lists in place and reports peak
 //! resident durable parameter bytes per replica), the serial-vs-pooled
-//! bucketed all-reduce, the ZeRO-2 reduce-scatter counterpart and the
-//! ZeRO-3 parameter all-gather. All emit `BENCH_JSON` lines, so the
+//! bucketed all-reduce, the ZeRO-2 reduce-scatter counterpart, the
+//! ZeRO-3 parameter all-gather and the overlapped-vs-sequential
+//! `--zero 3` step pipeline. All emit `BENCH_JSON` lines, so the
 //! sharded-path perf trajectory is tracked even on CI machines without
 //! an XLA toolchain.
 
@@ -438,6 +439,63 @@ fn bench_step_graph(b: &Bench) {
     );
 }
 
+/// Overlapped vs pinned-sequential coordinator step under `--zero 3` on
+/// the native reference config: same kernels over the same plan in the
+/// same accumulation order (the runs are bitwise identical — train_e2e
+/// pins that), so the p50 delta is pure stall recovery — the prefetched
+/// gather windows hide behind compute and the per-shard optimizer steps
+/// hide behind the next shard's reduce. Prints the cumulative
+/// gather-stall time each pipeline paid on top of the step p50s.
+fn bench_overlap_step(b: &Bench) {
+    header("overlapped step pipeline: --no-overlap vs default (--zero 3)");
+    let hyper = Hyper::paper_defaults(OptKind::Adapprox, &hd());
+    for threads in [2usize, 4] {
+        for overlap in [Some(false), None] {
+            let opts = TrainOptions {
+                steps: 4,
+                eval_every: 0,
+                log_every: usize::MAX,
+                native: true,
+                threads,
+                shards: 2,
+                zero_level: 3,
+                overlap,
+                ..Default::default()
+            };
+            let mut tr =
+                Trainer::new_native_ref(hyper.clone(), opts).unwrap();
+            let cfg = tr.cfg.clone();
+            let corpus = adapprox::data::BigramCorpus::new(
+                cfg.vocab, 4, adapprox::coordinator::CORPUS_SEED,
+            );
+            let sampler =
+                |len: usize, rng: &mut Rng| corpus.sample(len, rng);
+            let mut its = vec![BatchIterator::new(
+                &sampler, cfg.batch, cfg.seq_len, 1, Split::Train, (0, 1),
+            )];
+            let (name, mode) = match overlap {
+                Some(_) => (
+                    format!("native_step_zero3_sequential_{threads}t"),
+                    "sequential",
+                ),
+                None => (
+                    format!(
+                        "native_step_zero3_overlap_vs_sequential_{threads}t"
+                    ),
+                    "overlapped",
+                ),
+            };
+            b.run(&name, || {
+                std::hint::black_box(tr.train_one_step(&mut its).unwrap());
+            });
+            println!(
+                "  {mode} {threads}t cumulative gather-stall: {:.3} ms",
+                tr.gather_stall().as_secs_f64() * 1e3
+            );
+        }
+    }
+}
+
 /// Serial vs pooled bucketed all-reduce: 4 replicas × ~1.3M elements.
 fn bench_allreduce(b: &Bench) {
     header("gradient all-reduce: per-tensor serial vs bucketed pooled");
@@ -472,6 +530,7 @@ fn main() {
     bench_compressed_train_reduce(&b);
     bench_all_gather_params(&b);
     bench_step_graph(&b);
+    bench_overlap_step(&b);
 
     let Ok(rt) = Runtime::new("artifacts") else {
         println!("run `make artifacts` for the PJRT train_step benches");

@@ -19,7 +19,7 @@ pub struct Args {
 /// Flags that take no value.
 const BOOL_FLAGS: &[&str] = &[
     "help", "quick", "full", "no-clip", "cos-guidance", "fast-srsi",
-    "native", "monolithic", "v", "vv", "q",
+    "native", "monolithic", "overlap", "no-overlap", "v", "vv", "q",
 ];
 
 impl Args {
@@ -154,6 +154,27 @@ mod tests {
         // absent transport stays in-memory (None at the option layer)
         let b = Args::parse(&argv("train --native")).unwrap();
         assert_eq!(b.flag("transport"), None);
+    }
+
+    #[test]
+    fn parses_overlap_flags() {
+        // both pipeline pins are boolean flags: no value is consumed,
+        // and the flag after them still parses
+        let a = Args::parse(&argv(
+            "train --native --no-overlap --zero 3 --threads 2",
+        ))
+        .unwrap();
+        assert!(a.has("no-overlap"));
+        assert!(!a.has("overlap"));
+        assert_eq!(a.usize_or("zero", 1).unwrap(), 3);
+        let b = Args::parse(&argv("train --native --overlap --shards 2"))
+            .unwrap();
+        assert!(b.has("overlap"));
+        assert!(!b.has("no-overlap"));
+        assert_eq!(b.usize_or("shards", 1).unwrap(), 2);
+        // absent: neither pin set (None at the option layer)
+        let c = Args::parse(&argv("train --native")).unwrap();
+        assert!(!c.has("overlap") && !c.has("no-overlap"));
     }
 
     #[test]

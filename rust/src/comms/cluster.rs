@@ -110,6 +110,14 @@ pub struct Cluster {
     frame_buf: Vec<Vec<u8>>,
     /// Payload bytes contributed by all ranks in the last reduce.
     last_wire_bytes: u64,
+    /// Step nonce of a reduce that has been issued ([`Cluster::
+    /// reduce_issue`]) but not yet collected — the overlapped pipeline's
+    /// in-flight window. Tracked so a mid-pipeline failure is observable
+    /// (`has_in_flight`) and a second issue cannot interleave two
+    /// collectives on one connection set. Replay after a failure needs no
+    /// special casing here: the trainer rebuilds the cluster and
+    /// re-issues from scratch, and the wire protocol dedups by step.
+    in_flight: Option<u64>,
 }
 
 impl Cluster {
@@ -186,6 +194,7 @@ impl Cluster {
             orchestrator: Some(handle),
             frame_buf: Vec::new(),
             last_wire_bytes: 0,
+            in_flight: None,
         })
     }
 
@@ -196,12 +205,37 @@ impl Cluster {
     /// Reduce collective over all ranks. Phase A contributes every rank's
     /// gradients; phase B collects every rank's reply (each is the same
     /// full per-shard reduction — this process hosts all shards). Returns
-    /// the per-shard owned lists in plan order.
+    /// the per-shard owned lists in plan order. Composed of
+    /// [`Cluster::reduce_issue`] + [`Cluster::reduce_complete`] back to
+    /// back — the phase-sequential reference the overlapped pipeline
+    /// (which does trainer work between the two halves, while the
+    /// orchestrator reduces) is bitwise identical to by construction.
     pub fn reduce(
         &mut self,
         step: u64,
         per_replica: &[Vec<Tensor>],
     ) -> Result<Vec<Vec<Tensor>>, CommsError> {
+        self.reduce_issue(step, per_replica)?;
+        self.reduce_complete(step, per_replica)
+    }
+
+    /// Phase A of the reduce collective: contribute every rank's
+    /// gradients and mark the step in flight. After this returns the
+    /// orchestrator owns the reduction; the caller is free to do
+    /// unrelated work before collecting via [`Cluster::reduce_complete`].
+    pub fn reduce_issue(
+        &mut self,
+        step: u64,
+        per_replica: &[Vec<Tensor>],
+    ) -> Result<(), CommsError> {
+        if let Some(prev) = self.in_flight {
+            return Err(CommsError::Protocol {
+                what: format!(
+                    "reduce step {step} issued while step {prev} is still \
+                     in flight"
+                ),
+            });
+        }
         if per_replica.len() != self.workers.len() {
             return Err(CommsError::Protocol {
                 what: format!(
@@ -216,6 +250,34 @@ impl Cluster {
             wire += w.send_grads(step, &per_replica[r])? as u64;
         }
         self.last_wire_bytes = wire;
+        self.in_flight = Some(step);
+        Ok(())
+    }
+
+    /// Phase B of the reduce collective: collect every rank's reply for a
+    /// step previously issued with [`Cluster::reduce_issue`]. The
+    /// in-flight marker is cleared up front — on failure the collective
+    /// is dead either way, and recovery re-issues from scratch (on this
+    /// cluster or a rebuilt one; the protocol dedups by step, so the
+    /// replay is idempotent). `per_replica` must be the issued gradients:
+    /// a transient recv fault re-sends them under the same step nonce.
+    pub fn reduce_complete(
+        &mut self,
+        step: u64,
+        per_replica: &[Vec<Tensor>],
+    ) -> Result<Vec<Vec<Tensor>>, CommsError> {
+        match self.in_flight {
+            Some(s) if s == step => {}
+            other => {
+                return Err(CommsError::Protocol {
+                    what: format!(
+                        "reduce_complete for step {step} but in-flight \
+                         step is {other:?}"
+                    ),
+                });
+            }
+        }
+        self.in_flight = None;
         let mut first = None;
         for (r, w) in self.workers.iter_mut().enumerate() {
             let owned = w.recv_reduced(step, &per_replica[r])?;
@@ -226,6 +288,14 @@ impl Cluster {
         first.ok_or(CommsError::Protocol {
             what: "reduce over zero ranks".to_string(),
         })
+    }
+
+    /// True between a successful [`Cluster::reduce_issue`] and the
+    /// matching [`Cluster::reduce_complete`] call — the window in which
+    /// the overlapped pipeline runs trainer work under an outstanding
+    /// collective.
+    pub fn has_in_flight(&self) -> bool {
+        self.in_flight.is_some()
     }
 
     /// Compressed reduce collective: each rank contributes one encoded
@@ -530,6 +600,42 @@ mod tests {
         let got = cluster.reduce_compressed(1, &frames).unwrap();
         assert_eq!(got, vec![want]);
         cluster.shutdown().unwrap();
+    }
+
+    #[test]
+    fn split_reduce_matches_one_shot_and_tracks_in_flight() {
+        // the overlapped pipeline's seam: issue → (trainer work) →
+        // complete returns exactly what one-shot reduce returns, and the
+        // in-flight marker brackets the window
+        for kind in [TransportKind::Inproc, TransportKind::Tcp] {
+            let per = per_replica(2);
+            let mut cluster = Cluster::connect(
+                2,
+                ReduceMode::AllReduce,
+                &quick_opts(kind),
+            )
+            .unwrap();
+            assert!(!cluster.has_in_flight());
+            cluster.reduce_issue(1, &per).unwrap();
+            assert!(cluster.has_in_flight());
+            // a second issue while one is outstanding refuses
+            assert!(cluster.reduce_issue(2, &per).is_err());
+            // completing the wrong step refuses and keeps the op alive
+            assert!(cluster.reduce_complete(9, &per).is_err());
+            assert!(cluster.has_in_flight());
+            let got = cluster.reduce_complete(1, &per).unwrap();
+            assert!(!cluster.has_in_flight());
+            let mut want = Vec::new();
+            allreduce_mean_into(&per, &mut want, &Pool::new(1)).unwrap();
+            assert_eq!(got, vec![want], "{kind:?}");
+            // completing with nothing in flight refuses
+            assert!(cluster.reduce_complete(1, &per).is_err());
+            // the split path leaves the cluster reusable step after step
+            let got2 = cluster.reduce(2, &per).unwrap();
+            let want2 = cluster.reduce(3, &per).unwrap();
+            assert_eq!(got2, want2);
+            cluster.shutdown().unwrap();
+        }
     }
 
     #[test]

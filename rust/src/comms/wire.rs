@@ -43,7 +43,7 @@ pub enum Msg {
     /// Worker `rank`'s gradients for `step`, compressed by one of the
     /// `comms::compress` codecs. Every payload element count is derived
     /// from the shape header (+ the codec's `k`), never trusted from the
-    /// wire — see [`decode_compressed`].
+    /// wire — see `decode_compressed`.
     CompressedGrads { rank: u32, step: u64, grads: CompressedGrads },
 }
 

@@ -255,9 +255,12 @@ pub fn memory_table(cfg: &ConfigSpec, k_init: usize, kmax_frac: f64) -> Vec<Memo
 /// (the largest durable parameter slice outside the gather window). For
 /// these rows `pct_of_adamw` is the percentage of the corresponding
 /// **full replica**, not of AdamW state. Canonical-layout inventories
-/// additionally get the ZeRO-3 gather-window pair (`gather-window
-/// full-model` vs `gather-window max-segment`) pricing the transient
-/// forward/backward materialization with and without the step graph.
+/// additionally get the ZeRO-3 gather-window triple (`gather-window
+/// full-model` vs `gather-window max-segment` vs `gather-window
+/// double-buffered`) pricing the transient forward/backward
+/// materialization without the step graph, with it, and with the overlap
+/// pipeline's prefetch buffer holding the next window alongside the
+/// current one.
 pub fn memory_table_sharded(
     cfg: &ConfigSpec,
     k_init: usize,
@@ -307,18 +310,28 @@ pub fn memory_table_sharded(
     // shard). The monolithic program needs the full model gathered at
     // once; the step graph opens one per-segment window at a time, so the
     // peak is the largest single window — the segment's owned parameters
-    // plus its tied reads (`SegmentSpec::window_elems`). Priced only when
-    // the inventory follows the canonical layout the segment table
-    // describes (embed/pos + 12 per block + final LN). The max-segment
-    // row's `pct_of_adamw` is the percentage of the full-model window.
+    // plus its tied reads (`SegmentSpec::window_elems`). The overlap
+    // pipeline double-buffers: while one window computes, the next is
+    // prefetched, so its peak is the largest *adjacent pair* of windows
+    // (`StepGraph::max_window_pair_elems` — same walk-order adjacency,
+    // tied reads double-counted when both windows gather them). Priced
+    // only when the inventory follows the canonical layout the segment
+    // table describes (embed/pos + 12 per block + final LN). The
+    // max-segment and double-buffered rows' `pct_of_adamw` is the
+    // percentage of the full-model window.
     if cfg.params.len() == 12 * cfg.n_layer + 4 {
         let segs = crate::model::segment_specs(cfg);
         let full = param_bytes(cfg);
-        let max_seg = segs
+        let windows: Vec<u64> = segs
             .iter()
             .map(|s| 4 * s.window_elems(&cfg.params) as u64)
+            .collect();
+        let max_seg = windows.iter().copied().max().unwrap_or(0);
+        let pair = windows
+            .windows(2)
+            .map(|p| p[0] + p[1])
             .max()
-            .unwrap_or(0);
+            .unwrap_or(max_seg);
         rows.push(MemoryRow {
             label: "gather-window full-model".into(),
             bytes: full,
@@ -329,6 +342,15 @@ pub fn memory_table_sharded(
             bytes: max_seg,
             pct_of_adamw: if full > 0 {
                 100.0 * max_seg as f64 / full as f64
+            } else {
+                f64::NAN
+            },
+        });
+        rows.push(MemoryRow {
+            label: "gather-window double-buffered".into(),
+            bytes: pair,
+            pct_of_adamw: if full > 0 {
+                100.0 * pair as f64 / full as f64
             } else {
                 f64::NAN
             },
@@ -609,10 +631,25 @@ mod tests {
         // largest window is one block: 12 params, 3280 elems
         assert_eq!(max_seg, 4 * 3280);
         assert!(max_seg < full);
-        // eleven rows beyond the unsharded table: 2 grad + 2 param +
-        // 2 gather-window + 5 wire
+        // the double-buffered row prices the overlap pipeline's prefetch:
+        // the largest adjacent window pair, exactly what
+        // StepGraph::max_window_pair_elems reports for the same table
+        let pair = find("gather-window double-buffered");
+        let g = crate::runtime::StepGraph::new(
+            &cfg.name,
+            cfg.params.len(),
+            crate::model::segment_specs(&cfg),
+            None,
+        )
+        .unwrap();
+        assert_eq!(pair, 4 * g.max_window_pair_elems(&cfg.params) as u64);
+        assert!(pair >= max_seg, "{pair} vs {max_seg}");
+        assert!(pair <= 2 * max_seg, "{pair} vs {max_seg}");
+        assert!(pair < full, "double-buffering must still beat full gather");
+        // twelve rows beyond the unsharded table: 2 grad + 2 param +
+        // 3 gather-window + 5 wire
         assert_eq!(
-            memory_table(&cfg, 1, 0.25).len() + 11,
+            memory_table(&cfg, 1, 0.25).len() + 12,
             rows.len()
         );
     }

@@ -2,6 +2,36 @@
 //! AOT-compiled programs — the trainer loop, LR schedule, data-parallel
 //! replicas + all-reduce, checkpointing, metrics, and the Table-2 memory
 //! accounting.
+//!
+//! Invariants this layer maintains (see `docs/ARCHITECTURE.md` for the
+//! full ledger, and `cargo run -p xtask -- analyze` for the machine
+//! checks):
+//!
+//! - **One ownership plan.** Every sharded path — optimizer state,
+//!   reduce-scatter, gather windows, checkpoints — partitions parameters
+//!   under the same contiguous `optim::state::shard_ranges` plan. There is
+//!   no second partitioning scheme anywhere in the crate.
+//! - **Fixed accumulation order.** The bucketed collectives in
+//!   [`replicas`] accumulate replica contributions in ascending-replica
+//!   order with a single final 1/R scale, regardless of pool width or
+//!   bucket grouping. This is what makes every configuration sweep
+//!   (threads, shards, ZeRO level, transport, overlap) bitwise identical
+//!   to the serial baseline.
+//! - **Scheduling never changes arithmetic.** The overlapped step pipeline
+//!   in [`trainer`] (prefetched ZeRO-3 gather windows, shard-at-a-time
+//!   reduce+step via [`replicas::reduce_scatter_shard_into`] and the
+//!   piecewise optimizer, the split transport reduce) reorders *when*
+//!   kernels run, never *what* they compute — `--no-overlap` is the
+//!   literal sequential path and the overlapped run must match it
+//!   bit-for-bit.
+//! - **Nothing mutates before the collective succeeds.** Parameters,
+//!   optimizer state and the error-feedback ledger are only advanced after
+//!   the reduce completes, so a comms failure can tier-1 replay the step
+//!   verbatim (and tier-2 falls back to the last atomically-published
+//!   checkpoint generation in [`checkpoint`]).
+//! - **Typed failures only.** Non-test code in this module neither panics
+//!   nor unwraps; comms failures surface as `comms::CommsError` and feed
+//!   the recovery ladder.
 
 pub mod checkpoint;
 pub mod memory;
@@ -20,7 +50,8 @@ pub use metrics::{perplexity, CsvWriter, JsonlWriter, LossTracker};
 pub use replicas::{
     all_gather_params_into, allreduce_mean, allreduce_mean_into,
     allreduce_mean_pooled, gather_param_subset_into, mean_loss,
-    reduce_scatter_into, release_gathered_params, release_param_subset,
+    reduce_scatter_into, reduce_scatter_shard_into,
+    release_gathered_params, release_param_subset,
 };
 pub use schedule::LrSchedule;
 pub use trainer::{HistoryRow, TrainOptions, Trainer, CORPUS_SEED};

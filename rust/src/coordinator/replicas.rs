@@ -53,7 +53,7 @@ use crate::util::pool::Pool;
 /// enough that a typical model yields far more buckets than threads (good
 /// balance), large enough that one bucket amortizes its scheduling
 /// overhead.
-const BUCKET_ELEMS: usize = 1 << 15;
+pub const BUCKET_ELEMS: usize = 1 << 15;
 
 /// One bucket of the reduce-scatter: a contiguous element range of one
 /// output tensor plus the matching source slice from every replica. Owned
@@ -100,7 +100,7 @@ pub fn allreduce_mean_pooled(
 /// The allocation-free entry point: reduce into `out`, reusing its tensor
 /// allocations whenever the element counts line up (the steady-state case —
 /// gradient shapes never change across steps). Implemented as the
-/// single-shard case of the shared [`reduce_scatter_core`], so the two
+/// single-shard case of the shared `reduce_scatter_core`, so the two
 /// paths can never drift apart numerically — `out` is passed as the one
 /// shard list directly, no temporary wrapper vector.
 pub fn allreduce_mean_into(
@@ -200,6 +200,37 @@ pub fn reduce_scatter_into(
     validate_shard_plan(plan, n_params)?;
     owned.resize_with(plan.len(), Vec::new);
     reduce_scatter_core(per_replica, plan, owned, pool)
+}
+
+/// One shard's slice of [`reduce_scatter_into`]: reduce only `plan[shard]`
+/// into `shard_out` — the issue/complete half the trainer's overlapped
+/// pipeline drives, reducing shard `s` on the comms lane while shard
+/// `s-1`'s optimizer step runs on the compute lane.
+///
+/// Bitwise identical to the matching list of a full [`reduce_scatter_into`]
+/// call by construction: the shared core chunks buckets **per tensor**
+/// (boundaries independent of the plan) and indexes replica sources by
+/// absolute parameter index, so restricting the plan to one range changes
+/// which buckets are built, never what any bucket computes. Reuses
+/// `shard_out`'s tensor allocations across steps like the full entry point.
+pub fn reduce_scatter_shard_into(
+    per_replica: &[Vec<Tensor>],
+    plan: &[Range<usize>],
+    shard: usize,
+    shard_out: &mut Vec<Tensor>,
+    pool: &Pool,
+) -> Result<()> {
+    let n_params = validate_replica_grads(per_replica)?;
+    validate_shard_plan(plan, n_params)?;
+    let Some(range) = plan.get(shard) else {
+        bail!("shard {shard} out of range ({} shards)", plan.len());
+    };
+    reduce_scatter_core(
+        per_replica,
+        std::slice::from_ref(range),
+        std::slice::from_mut(shard_out),
+        pool,
+    )
 }
 
 /// The shared reduction core behind [`reduce_scatter_into`] and
@@ -721,6 +752,102 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn reduce_scatter_shard_into_matches_full_reduce_scatter() {
+        // the overlapped-pipeline reduce bar: reducing the plan one shard
+        // at a time — in any order — reproduces the one-shot
+        // reduce_scatter_into lists bitwise, for any (replicas, shards,
+        // threads), and reuses each shard's buffers across steps
+        use crate::optim::state::shard_ranges;
+        forall(6, |rng| {
+            let n_params = 1 + rng.below(6) as usize;
+            let reps = 1 + rng.below(4) as usize;
+            let shapes: Vec<Vec<usize>> = (0..n_params)
+                .map(|_| match rng.below(3) {
+                    0 => vec![1 + rng.below(80) as usize],
+                    1 => vec![
+                        1 + rng.below(24) as usize,
+                        1 + rng.below(24) as usize,
+                    ],
+                    // cross BUCKET_ELEMS so multi-bucket tensors are hit
+                    _ => vec![40_000 + rng.below(9000) as usize],
+                })
+                .collect();
+            let gs: Vec<Vec<Tensor>> = (0..reps)
+                .map(|_| {
+                    shapes
+                        .iter()
+                        .map(|s| {
+                            let numel = s.iter().product();
+                            Tensor::f32(s.clone(), rng.normal_vec_f32(numel))
+                        })
+                        .collect()
+                })
+                .collect();
+            let numels: Vec<usize> =
+                gs[0].iter().map(|t| t.numel()).collect();
+            for shards in [1usize, 2, 4] {
+                let plan = shard_ranges(&numels, shards);
+                let mut full = Vec::new();
+                reduce_scatter_into(&gs, &plan, &mut full, &Pool::single())
+                    .unwrap();
+                for threads in [1usize, 2, 4] {
+                    let pool = Pool::new(threads);
+                    let mut owned: Vec<Vec<Tensor>> =
+                        vec![Vec::new(); plan.len()];
+                    // descending order — arrival order must not matter
+                    for s in (0..plan.len()).rev() {
+                        reduce_scatter_shard_into(
+                            &gs,
+                            &plan,
+                            s,
+                            &mut owned[s],
+                            &pool,
+                        )
+                        .unwrap();
+                    }
+                    assert_eq!(
+                        full, owned,
+                        "shards={shards} threads={threads}"
+                    );
+                    // steady state: per-shard buffers are reused
+                    let before: Vec<*const f32> = owned
+                        .iter()
+                        .flatten()
+                        .map(|t| t.as_f32().unwrap().as_ptr())
+                        .collect();
+                    for s in 0..plan.len() {
+                        reduce_scatter_shard_into(
+                            &gs,
+                            &plan,
+                            s,
+                            &mut owned[s],
+                            &pool,
+                        )
+                        .unwrap();
+                    }
+                    let after: Vec<*const f32> = owned
+                        .iter()
+                        .flatten()
+                        .map(|t| t.as_f32().unwrap().as_ptr())
+                        .collect();
+                    assert_eq!(before, after, "shard buffers reallocated");
+                }
+            }
+        });
+        // shard index out of range refuses
+        let gs = vec![vec![Tensor::f32(vec![4], vec![1.0; 4])]];
+        let mut out = Vec::new();
+        assert!(reduce_scatter_shard_into(
+            &gs,
+            &[0..1],
+            1,
+            &mut out,
+            &Pool::single()
+        )
+        .is_err());
     }
 
     #[test]

@@ -5,6 +5,7 @@
 use std::ops::Range;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -15,8 +16,8 @@ use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::metrics::{perplexity, CsvWriter, LossTracker};
 use crate::coordinator::replicas::{
     all_gather_params_into, allreduce_mean_into, gather_param_subset_into,
-    mean_loss, reduce_scatter_into, release_gathered_params,
-    release_param_subset,
+    mean_loss, reduce_scatter_into, reduce_scatter_shard_into,
+    release_gathered_params, release_param_subset,
 };
 use crate::coordinator::schedule::LrSchedule;
 use crate::data::{Batch, BatchIterator, BigramCorpus, Split, Task};
@@ -30,7 +31,7 @@ use crate::runtime::{
     ActArena, ConfigSpec, Executor, Ladder, NativeExecutor, Runtime,
     StepGraph, Tensor,
 };
-use crate::util::pool::Pool;
+use crate::util::pool::{overlap, Pool};
 use crate::util::rng::Rng;
 
 /// The pretraining corpus seed — fixed so every optimizer comparison sees
@@ -113,6 +114,19 @@ pub struct TrainOptions {
     /// the bench compares the two, and under `--zero 3` only the
     /// segmented path gets per-segment gather windows.
     pub monolithic: bool,
+    /// Overlapped step pipeline (`--overlap` / `--no-overlap`). `None`
+    /// (the default) auto-enables overlap exactly when the native backend
+    /// runs through a step graph without `--monolithic`; `Some(true)`
+    /// forces it (refused with `--monolithic` or without `--native`);
+    /// `Some(false)` pins the literal phase-sequential path — gather,
+    /// then forward/backward, then reduce, then step, nothing in flight
+    /// concurrently. The overlapped schedule is **bitwise identical** to
+    /// the pinned one: prefetched gather windows hold the same bytes a
+    /// synchronous gather produces, the shard-at-a-time reduce-scatter
+    /// reuses the same bucketed kernel under the same plan and pool
+    /// width, and the per-shard optimizer steps run the exact
+    /// one-shot-step job math — only the wall-clock schedule moves.
+    pub overlap: Option<bool>,
 }
 
 impl Default for TrainOptions {
@@ -139,6 +153,7 @@ impl Default for TrainOptions {
             max_recoveries: 2,
             compress: CompressKind::None,
             monolithic: false,
+            overlap: None,
         }
     }
 }
@@ -195,7 +210,23 @@ struct RunState {
     tied: Vec<(usize, Tensor)>,
     win_indices: Vec<usize>,
     gathered: Vec<usize>,
+    /// The second gather buffer of the overlap pipeline: a full-length
+    /// manifest-order slot list the prefetch lane gathers the *next*
+    /// segment's window into while the current segment computes. Empty
+    /// slots everywhere except the indices in `prefetch_idx`.
+    prefetch: Vec<Tensor>,
+    /// Manifest indices currently resident in `prefetch` (filled by the
+    /// prefetch gather, drained when the next window opens).
+    prefetch_idx: Vec<usize>,
+    /// Scratch: the index list staged for the in-flight prefetch gather.
+    pf_indices: Vec<usize>,
+    /// Scratch: indices this window adopted from `prefetch`, merged into
+    /// `gathered` after the synchronous gather fills the remainder.
+    installed: Vec<usize>,
     peak_window_elems: usize,
+    /// Wall-clock time spent blocked on synchronous (critical-path)
+    /// window gathers — what the prefetch lane exists to shrink.
+    gather_stall: Duration,
 }
 
 impl RunState {
@@ -212,7 +243,12 @@ impl RunState {
             tied: Vec::new(),
             win_indices: Vec::new(),
             gathered: Vec::new(),
+            prefetch: empty_slots(cfg.params.len()),
+            prefetch_idx: Vec::new(),
+            pf_indices: Vec::new(),
+            installed: Vec::new(),
             peak_window_elems: 0,
+            gather_stall: Duration::ZERO,
         }
     }
 }
@@ -253,6 +289,119 @@ fn add_grad(dst: &mut Tensor, src: &Tensor) -> Result<()> {
     let s = src.as_f32()?;
     for (a, b) in d.iter_mut().zip(s.iter()) {
         *a += *b;
+    }
+    Ok(())
+}
+
+/// One forward segment of the step graph: assemble the argument parts
+/// (owned param range, tied reads, batch or arena input), run the
+/// segment's program, return its single output. Free-standing so the
+/// overlap pipeline can run it on the compute lane while the prefetch
+/// gather borrows the rest of the trainer — it reads only what it is
+/// handed.
+fn forward_segment(
+    exec: &dyn Executor,
+    graph: &StepGraph,
+    i: usize,
+    predict: bool,
+    params: &[Tensor],
+    batch: &[Tensor; 3],
+    arena: &ActArena,
+) -> Result<Tensor> {
+    let seg = &graph.segments[i];
+    let last = i + 1 == graph.segments.len();
+    let mut parts: [&[Tensor]; 8] = [&[]; 8];
+    let mut np = 0usize;
+    push_part(&mut parts, &mut np, &params[seg.params.clone()])?;
+    for &t in &seg.tied {
+        push_part(&mut parts, &mut np, &params[t..t + 1])?;
+    }
+    if i == 0 {
+        push_part(&mut parts, &mut np, &batch[0..1])?;
+    } else {
+        push_part(&mut parts, &mut np, arena.slice(i - 1))?;
+    }
+    let prog = if last && predict {
+        seg.predict.as_ref().ok_or_else(|| {
+            anyhow!("segment {} has no predict program", seg.name)
+        })?
+    } else {
+        &seg.fwd
+    };
+    if last && !predict {
+        push_part(&mut parts, &mut np, &batch[1..3])?;
+    }
+    let mut out = exec.run_parts(prog, &parts[..np])?;
+    let t = out
+        .pop()
+        .ok_or_else(|| anyhow!("{prog}: empty output"))?;
+    if !out.is_empty() {
+        return Err(anyhow!(
+            "{prog}: expected one output, got {}",
+            out.len() + 1
+        ));
+    }
+    Ok(t)
+}
+
+/// One backward segment of the step graph: rematerialize from the
+/// arena-saved input plus the upstream cotangent, pop the outputs into
+/// the gradient slots / tied stash / cotangent per the executor argument
+/// protocol. Free-standing for the same reason as [`forward_segment`].
+#[allow(clippy::too_many_arguments)]
+fn backward_segment(
+    exec: &dyn Executor,
+    graph: &StepGraph,
+    i: usize,
+    params: &[Tensor],
+    batch: &[Tensor; 3],
+    arena: &ActArena,
+    cot: &mut Tensor,
+    grads: &mut [Tensor],
+    tied: &mut Vec<(usize, Tensor)>,
+) -> Result<()> {
+    let seg = &graph.segments[i];
+    let last = i + 1 == graph.segments.len();
+    let mut parts: [&[Tensor]; 8] = [&[]; 8];
+    let mut np = 0usize;
+    push_part(&mut parts, &mut np, &params[seg.params.clone()])?;
+    for &t in &seg.tied {
+        push_part(&mut parts, &mut np, &params[t..t + 1])?;
+    }
+    if i == 0 {
+        push_part(&mut parts, &mut np, &batch[0..1])?;
+    } else {
+        push_part(&mut parts, &mut np, arena.slice(i - 1))?;
+    }
+    if last {
+        push_part(&mut parts, &mut np, &batch[1..3])?;
+    } else {
+        push_part(&mut parts, &mut np, std::slice::from_ref(cot))?;
+    }
+    let mut out = exec.run_parts(&seg.bwd, &parts[..np])?;
+    let expect = usize::from(i > 0) + seg.params.len() + seg.tied.len();
+    if out.len() != expect {
+        return Err(anyhow!(
+            "{}: {} outputs, expected {expect}",
+            seg.bwd,
+            out.len()
+        ));
+    }
+    for &t in seg.tied.iter().rev() {
+        let g = out.pop().ok_or_else(|| {
+            anyhow!("{}: missing tied gradient", seg.bwd)
+        })?;
+        tied.push((t, g));
+    }
+    for pi in seg.params.clone().rev() {
+        grads[pi] = out.pop().ok_or_else(|| {
+            anyhow!("{}: missing gradient {pi}", seg.bwd)
+        })?;
+    }
+    if i > 0 {
+        *cot = out.pop().ok_or_else(|| {
+            anyhow!("{}: missing input cotangent", seg.bwd)
+        })?;
     }
     Ok(())
 }
@@ -391,6 +540,25 @@ impl Trainer {
                      the codec shrinks the reduce collective's wire \
                      frames, which only exist in transport mode",
                     opts.compress.name()
+                ));
+            }
+        }
+        if let Some(force) = opts.overlap {
+            let flag = if force { "--overlap" } else { "--no-overlap" };
+            if opts.monolithic {
+                return Err(anyhow!(
+                    "{flag} cannot be combined with --monolithic: the \
+                     overlap pipeline schedules prefetch and per-shard \
+                     steps over the step graph, which --monolithic pins \
+                     off (drop one of the two flags)"
+                ));
+            }
+            if !opts.native {
+                return Err(anyhow!(
+                    "{flag} requires the native backend (--native): the \
+                     overlapped and the pinned sequential pipeline both \
+                     run the per-shard optimizer steps inside the native \
+                     sharded optimizer"
                 ));
             }
         }
@@ -683,6 +851,68 @@ impl Trainer {
             })
     }
 
+    /// The overlap pipeline's transport reduce: the collective is issued
+    /// ([`Cluster::reduce_issue`] puts every replica's gradients on the
+    /// wire), the ZeRO-3 gather window is released while the orchestrator
+    /// reduces, and the reply is then collected
+    /// ([`Cluster::reduce_complete`]). Same wire protocol, same kernels,
+    /// same bytes as [`Trainer::cluster_reduce`] — only the window
+    /// release moves off the post-reduce critical path (it is idempotent,
+    /// so the step's shared release afterwards stays a no-op). A failure
+    /// in either half falls back to one rebuild of the transport and a
+    /// replay of the *whole* collective: nothing before the reply
+    /// mutates trainer state and the workers dedup by step, so the
+    /// replay is bitwise identical to a clean first try.
+    fn cluster_reduce_overlapped(
+        &mut self,
+        step: u64,
+        per_replica: &[Vec<Tensor>],
+    ) -> Result<Vec<Vec<Tensor>>> {
+        self.ensure_cluster()?;
+        let issued = match self.cluster.as_mut() {
+            Some(c) => c.reduce_issue(step, per_replica),
+            None => {
+                return Err(anyhow!(
+                    "comms cluster unavailable after ensure_cluster"
+                ))
+            }
+        };
+        let first_err = match issued {
+            Ok(()) => {
+                self.release_params();
+                match self.cluster.as_mut() {
+                    Some(c) => match c.reduce_complete(step, per_replica) {
+                        Ok(owned) => return Ok(owned),
+                        Err(e) => e,
+                    },
+                    None => {
+                        return Err(anyhow!(
+                            "comms cluster unavailable after ensure_cluster"
+                        ))
+                    }
+                }
+            }
+            Err(e) => e,
+        };
+        warn_!(
+            "comms overlapped reduce failed at step {step}: {first_err}; \
+             rebuilding the transport and replaying"
+        );
+        self.drop_cluster();
+        self.ensure_cluster()?;
+        let Some(cluster) = self.cluster.as_mut() else {
+            return Err(anyhow!("comms cluster unavailable after ensure_cluster"));
+        };
+        let owned = cluster.reduce(step, per_replica).map_err(|e2| {
+            anyhow!(
+                "comms reduce failed twice at step {step}: first \
+                 {first_err}; after transport rebuild: {e2}"
+            )
+        })?;
+        self.release_params();
+        Ok(owned)
+    }
+
     /// The compressed counterpart of [`Trainer::cluster_reduce`]: error
     /// feedback adjusts and encodes once, then the same one-rebuild
     /// replay. The frames are a pure function of `(step, residuals,
@@ -824,7 +1054,9 @@ impl Trainer {
     }
 
     /// Restore the per-segment window buffer to its resting state: a
-    /// full-length manifest-order slot list with every slot empty.
+    /// full-length manifest-order slot list with every slot empty, and
+    /// nothing resident in the prefetch buffer either (a step that
+    /// errored mid-overlap may leave a prefetched window behind).
     /// Idempotent; only called when per-segment windows are active.
     fn reset_window_slots(&mut self) {
         let n = self.cfg.params.len();
@@ -836,6 +1068,11 @@ impl Trainer {
         }
         while self.params.len() < n {
             self.params.push(Tensor::f32(vec![0], vec![]));
+        }
+        while let Some(i) = self.run.prefetch_idx.pop() {
+            if let Some(t) = self.run.prefetch.get_mut(i) {
+                *t = Tensor::f32(vec![0], vec![]);
+            }
         }
     }
 
@@ -857,6 +1094,31 @@ impl Trainer {
         self.run.win_indices.clear();
         self.run.win_indices.extend(seg.params.clone());
         self.run.win_indices.extend(seg.tied.iter().copied());
+        // Adopt whatever the prefetch lane already gathered: slots this
+        // window needs move over (they hold the same bytes a synchronous
+        // gather would have produced — the prefetch runs the same kernel
+        // from the same owned shards); anything else is released, so the
+        // durable bytes stay owned-shard only. The adopted indices join
+        // `gathered` below and are released by `close_segment_window`
+        // exactly like synchronously gathered ones.
+        self.run.installed.clear();
+        while let Some(i) = self.run.prefetch_idx.pop() {
+            let slot = std::mem::replace(
+                &mut self.run.prefetch[i],
+                Tensor::f32(vec![0], vec![]),
+            );
+            if slot.numel() != 0
+                && self.params[i].numel() == 0
+                && self.run.win_indices.contains(&i)
+            {
+                self.params[i] = slot;
+                self.run.installed.push(i);
+            }
+        }
+        // The synchronous remainder is the window's critical-path stall:
+        // everything the prefetch lane covered is skipped as already
+        // resident, so with overlap on this shrinks toward zero.
+        let t0 = Instant::now();
         gather_param_subset_into(
             &self.owned_params,
             &self.grad_plan,
@@ -865,10 +1127,25 @@ impl Trainer {
             &mut self.run.gathered,
             &self.reduce_pool,
         )?;
-        let resident: usize = self.params.iter().map(|t| t.numel()).sum();
+        self.run.gather_stall += t0.elapsed();
+        self.run.gathered.append(&mut self.run.installed);
+        self.note_window_peak();
+        Ok(())
+    }
+
+    /// Track the peak resident gathered-parameter total: everything in the
+    /// window buffer plus everything the prefetch buffer holds (the
+    /// double-buffer's cost — `StepGraph::max_window_pair_elems` is the
+    /// matching static bound).
+    fn note_window_peak(&mut self) {
+        let resident: usize = self
+            .params
+            .iter()
+            .chain(self.run.prefetch.iter())
+            .map(|t| t.numel())
+            .sum();
         self.run.peak_window_elems =
             self.run.peak_window_elems.max(resident);
-        Ok(())
     }
 
     /// Close the currently open per-segment window, releasing exactly the
@@ -882,12 +1159,39 @@ impl Trainer {
         self.run.gathered.clear();
     }
 
-    /// Peak resident gathered-parameter elements observed in any single
-    /// per-segment window since construction (0 until a graph step runs;
-    /// meaningful under `--zero 3` with per-segment windows). The e2e
-    /// memory assertion compares this to `StepGraph::max_segment_elems`.
+    /// Peak resident gathered-parameter elements observed across the
+    /// window *and* prefetch buffers since construction (0 until a graph
+    /// step runs; meaningful under `--zero 3` with per-segment windows).
+    /// The e2e memory assertion compares this to
+    /// `StepGraph::max_segment_elems` with the overlap pipeline pinned
+    /// off, and to `StepGraph::max_window_pair_elems` (the double-buffer
+    /// bound) with it on.
     pub fn peak_window_elems(&self) -> usize {
         self.run.peak_window_elems
+    }
+
+    /// True when the overlapped step pipeline runs:
+    /// `--overlap`/`--no-overlap` pin it, and the default auto-enables it
+    /// exactly when the native backend routes through a step graph
+    /// without `--monolithic`. Output is bitwise identical either way;
+    /// this only decides the wall-clock schedule.
+    pub fn overlap_active(&self) -> bool {
+        match self.opts.overlap {
+            Some(v) => v,
+            None => {
+                self.opts.native
+                    && self.graph.is_some()
+                    && !self.opts.monolithic
+            }
+        }
+    }
+
+    /// Cumulative wall-clock time the step loop spent blocked on
+    /// synchronous per-segment window gathers (the critical-path part the
+    /// prefetch lane exists to hide). The overlap bench prints this next
+    /// to the step latency.
+    pub fn gather_stall(&self) -> Duration {
+        self.run.gather_stall
     }
 
     /// The installed step graph, if any.
@@ -1033,44 +1337,75 @@ impl Trainer {
         let n = graph.segments.len();
         self.run.arena.ensure(n.saturating_sub(1));
         let exec = Rc::clone(&self.exec);
+        // Overlap: while segment i computes, the comms lane gathers
+        // segment i+1's window into the prefetch buffer, so the next
+        // `open_segment_window` adopts it instead of stalling. Only
+        // meaningful where per-segment windows gather at all.
+        let prefetching =
+            self.overlap_active() && self.segment_windows_active();
         let mut head_out = None;
         for i in 0..n {
             self.open_segment_window(graph, i)?;
-            let seg = &graph.segments[i];
-            let last = i + 1 == n;
-            let mut parts: [&[Tensor]; 8] = [&[]; 8];
-            let mut np = 0usize;
-            push_part(&mut parts, &mut np, &self.params[seg.params.clone()])?;
-            for &t in &seg.tied {
-                push_part(&mut parts, &mut np, &self.params[t..t + 1])?;
-            }
-            if i == 0 {
-                push_part(&mut parts, &mut np, &self.run.batch[0..1])?;
+            let t = if prefetching && i + 1 < n {
+                let next = &graph.segments[i + 1];
+                self.run.pf_indices.clear();
+                self.run.pf_indices.extend(next.params.clone());
+                self.run.pf_indices.extend(next.tied.iter().copied());
+                let Trainer {
+                    run,
+                    params,
+                    owned_params,
+                    grad_plan,
+                    reduce_pool,
+                    ..
+                } = &mut *self;
+                let RunState {
+                    batch,
+                    arena,
+                    prefetch,
+                    prefetch_idx,
+                    pf_indices,
+                    ..
+                } = run;
+                let (gathered, t) = overlap(
+                    || {
+                        gather_param_subset_into(
+                            owned_params,
+                            grad_plan,
+                            pf_indices,
+                            prefetch,
+                            prefetch_idx,
+                            reduce_pool,
+                        )
+                    },
+                    || {
+                        forward_segment(
+                            exec.as_ref(),
+                            graph,
+                            i,
+                            predict,
+                            params,
+                            batch,
+                            arena,
+                        )
+                    },
+                );
+                gathered?;
+                self.note_window_peak();
+                t?
             } else {
-                push_part(&mut parts, &mut np, self.run.arena.slice(i - 1))?;
-            }
-            let prog = if last && predict {
-                seg.predict.as_ref().ok_or_else(|| {
-                    anyhow!("segment {} has no predict program", seg.name)
-                })?
-            } else {
-                &seg.fwd
+                forward_segment(
+                    exec.as_ref(),
+                    graph,
+                    i,
+                    predict,
+                    &self.params,
+                    &self.run.batch,
+                    &self.run.arena,
+                )?
             };
-            if last && !predict {
-                push_part(&mut parts, &mut np, &self.run.batch[1..3])?;
-            }
-            let mut out = exec.run_parts(prog, &parts[..np])?;
-            let t = out
-                .pop()
-                .ok_or_else(|| anyhow!("{prog}: empty output"))?;
-            if !out.is_empty() {
-                return Err(anyhow!(
-                    "{prog}: expected one output, got {}",
-                    out.len() + 1
-                ));
-            }
             self.close_segment_window();
-            if last {
+            if i + 1 == n {
                 head_out = Some(t);
             } else {
                 self.run.arena.set(i, t);
@@ -1091,52 +1426,79 @@ impl Trainer {
         let exec = Rc::clone(&self.exec);
         let mut grads = empty_slots(self.cfg.params.len());
         self.run.tied.clear();
+        // Overlap mirrors the forward walk, head-first: while segment i
+        // runs its backward program, the comms lane prefetches segment
+        // i-1's window. Nothing is prefetched across the forward→backward
+        // turn-around (the head's window is gathered synchronously), and
+        // gradients are written only into `grads` — a local — so the
+        // prefetch gather never races a gradient write.
+        let prefetching =
+            self.overlap_active() && self.segment_windows_active();
         let mut cot = Tensor::f32(vec![0], vec![]);
         for i in (0..n).rev() {
             self.open_segment_window(graph, i)?;
-            let seg = &graph.segments[i];
-            let last = i + 1 == n;
-            let mut parts: [&[Tensor]; 8] = [&[]; 8];
-            let mut np = 0usize;
-            push_part(&mut parts, &mut np, &self.params[seg.params.clone()])?;
-            for &t in &seg.tied {
-                push_part(&mut parts, &mut np, &self.params[t..t + 1])?;
-            }
-            if i == 0 {
-                push_part(&mut parts, &mut np, &self.run.batch[0..1])?;
+            if prefetching && i > 0 {
+                let prev = &graph.segments[i - 1];
+                self.run.pf_indices.clear();
+                self.run.pf_indices.extend(prev.params.clone());
+                self.run.pf_indices.extend(prev.tied.iter().copied());
+                let Trainer {
+                    run,
+                    params,
+                    owned_params,
+                    grad_plan,
+                    reduce_pool,
+                    ..
+                } = &mut *self;
+                let RunState {
+                    batch,
+                    arena,
+                    tied,
+                    prefetch,
+                    prefetch_idx,
+                    pf_indices,
+                    ..
+                } = run;
+                let (gathered, r) = overlap(
+                    || {
+                        gather_param_subset_into(
+                            owned_params,
+                            grad_plan,
+                            pf_indices,
+                            prefetch,
+                            prefetch_idx,
+                            reduce_pool,
+                        )
+                    },
+                    || {
+                        backward_segment(
+                            exec.as_ref(),
+                            graph,
+                            i,
+                            params,
+                            batch,
+                            arena,
+                            &mut cot,
+                            &mut grads,
+                            tied,
+                        )
+                    },
+                );
+                gathered?;
+                self.note_window_peak();
+                r?;
             } else {
-                push_part(&mut parts, &mut np, self.run.arena.slice(i - 1))?;
-            }
-            if last {
-                push_part(&mut parts, &mut np, &self.run.batch[1..3])?;
-            } else {
-                push_part(&mut parts, &mut np, std::slice::from_ref(&cot))?;
-            }
-            let mut out = exec.run_parts(&seg.bwd, &parts[..np])?;
-            let expect =
-                usize::from(i > 0) + seg.params.len() + seg.tied.len();
-            if out.len() != expect {
-                return Err(anyhow!(
-                    "{}: {} outputs, expected {expect}",
-                    seg.bwd,
-                    out.len()
-                ));
-            }
-            for &t in seg.tied.iter().rev() {
-                let g = out.pop().ok_or_else(|| {
-                    anyhow!("{}: missing tied gradient", seg.bwd)
-                })?;
-                self.run.tied.push((t, g));
-            }
-            for pi in seg.params.clone().rev() {
-                grads[pi] = out.pop().ok_or_else(|| {
-                    anyhow!("{}: missing gradient {pi}", seg.bwd)
-                })?;
-            }
-            if i > 0 {
-                cot = out.pop().ok_or_else(|| {
-                    anyhow!("{}: missing input cotangent", seg.bwd)
-                })?;
+                backward_segment(
+                    exec.as_ref(),
+                    graph,
+                    i,
+                    &self.params,
+                    &self.run.batch,
+                    &self.run.arena,
+                    &mut cot,
+                    &mut grads,
+                    &mut self.run.tied,
+                )?;
             }
             self.close_segment_window();
         }
@@ -1238,6 +1600,89 @@ impl Trainer {
         Ok(mean_loss(&losses)? as f64)
     }
 
+    /// The overlap pipeline's in-memory ZeRO-2/3 reduce + update: the
+    /// cross-replica reduce-scatter runs shard by shard through
+    /// [`reduce_scatter_shard_into`] — each call produces exactly the
+    /// slices the one-shot [`reduce_scatter_into`] would (same bucketing,
+    /// same ascending-replica sums, same pool width) — and while shard
+    /// s+1's buckets reduce on the comms lane, shard s's optimizer step
+    /// runs on the compute lane through the sharded optimizer's
+    /// piecewise API. Under ZeRO-3 the gather window is released before
+    /// the first reduce (the reduce only reads the per-replica gradient
+    /// buffers), which the sequential path does right after its reduce:
+    /// the full parameters still never coexist with a full averaged
+    /// gradient, and every byte written is identical — only the
+    /// wall-clock schedule moves.
+    fn pipelined_reduce_step(
+        &mut self,
+        bufs: &mut ReduceBufs,
+        lr: f32,
+    ) -> Result<crate::optim::StepInfo> {
+        let n_shards = self.grad_plan.len();
+        if bufs.owned.len() != n_shards {
+            bufs.owned.resize_with(n_shards, Vec::new);
+        }
+        if self.opts.zero_level == 3 {
+            self.release_params();
+        }
+        // shard 0's averaged slices must exist before any step can start
+        reduce_scatter_shard_into(
+            &bufs.rep,
+            &self.grad_plan,
+            0,
+            &mut bufs.owned[0],
+            &self.reduce_pool,
+        )?;
+        let zero3 = self.opts.zero_level == 3;
+        let Trainer {
+            opt,
+            params,
+            owned_params,
+            grad_plan,
+            reduce_pool,
+            ..
+        } = &mut *self;
+        let Some(sh) = opt.as_sharded_native() else {
+            return Err(anyhow!(
+                "the pipelined reduce+step needs the native sharded \
+                 optimizer (checked before dispatch)"
+            ));
+        };
+        let plan: &[Range<usize>] = grad_plan;
+        let pool: &Pool = reduce_pool;
+        let mut piece = sh.begin_piecewise(lr);
+        for s in 0..n_shards {
+            let sp: &mut [Tensor] = if zero3 {
+                owned_params[s].as_mut_slice()
+            } else {
+                &mut params[plan[s].clone()]
+            };
+            if s + 1 < n_shards {
+                let (done, todo) = bufs.owned.split_at_mut(s + 1);
+                let out = &mut todo[0];
+                let shard_grads: &[Tensor] = &done[s];
+                let rep: &[Vec<Tensor>] = &bufs.rep;
+                let (reduced, stepped) = overlap(
+                    || {
+                        reduce_scatter_shard_into(
+                            rep,
+                            plan,
+                            s + 1,
+                            out,
+                            pool,
+                        )
+                    },
+                    || sh.step_shard_piece(&mut piece, s, sp, shard_grads),
+                );
+                reduced?;
+                stepped?;
+            } else {
+                sh.step_shard_piece(&mut piece, s, sp, &bufs.owned[s])?;
+            }
+        }
+        sh.finish_piecewise(piece)
+    }
+
     /// One full optimizer step: replicas × grad-accum micro-batches,
     /// bucketed all-reduce, optimizer update. Returns (train loss, step
     /// info). Both reduce levels (micro-batch mean per replica, then
@@ -1310,13 +1755,18 @@ impl Trainer {
             // With --compress, error feedback encodes each replica's
             // frame and the orchestrator averages the decoded gradients
             // instead.
-            let owned = if self.opts.compress.is_none() {
-                self.cluster_reduce(self.step as u64, &bufs.rep)?
-            } else {
+            let owned = if !self.opts.compress.is_none() {
+                // compression/error feedback stays phase-sequential: the
+                // encode must see the final micro-batch means, and the
+                // residual advance is ordered after the collective
                 self.cluster_reduce_compressed(
                     self.step as u64,
                     &bufs.rep,
                 )?
+            } else if self.overlap_active() {
+                self.cluster_reduce_overlapped(self.step as u64, &bufs.rep)?
+            } else {
+                self.cluster_reduce(self.step as u64, &bufs.rep)?
             };
             wire_bytes = self
                 .cluster
@@ -1345,6 +1795,17 @@ impl Trainer {
                 bufs.out = groups.next().unwrap_or_default();
                 self.opt.step(&mut self.params, &bufs.out, lr)?
             }
+        } else if self.opts.zero_level >= 2
+            && self.overlap_active()
+            && self.grad_plan.len() > 1
+            && self.opt.as_sharded_native().is_some()
+        {
+            // ZeRO-2/3 with the overlap pipeline: shard-at-a-time
+            // reduce-scatter on the comms lane, per-shard optimizer steps
+            // on the compute lane — bitwise identical to the sequential
+            // branch below (`bufs.out` stays empty here too).
+            bufs.out.clear();
+            self.pipelined_reduce_step(&mut bufs, lr)?
         } else if self.opts.zero_level >= 2 {
             // ZeRO-2/3: the cross-replica reduce is a reduce-scatter under
             // the optimizer's ownership plan — each shard's averaged slice

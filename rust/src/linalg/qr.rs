@@ -83,7 +83,7 @@ fn project_out(col_j: &[f32], cols: &mut [f32], m: usize) {
 /// per element the arithmetic sequence — ascending-row norm, ascending-row
 /// dot, one subtraction per pivot in pivot order — is unchanged, and the
 /// transposes move bits without touching them. Small panels (and small
-/// trailing tails) skip the fan-out entirely — see [`MIN_PAR_ELEMS`].
+/// trailing tails) skip the fan-out entirely — see `MIN_PAR_ELEMS`.
 pub fn mgs_qr_in_place_pooled(q: &mut Mat, qt: &mut Mat, pool: &Pool) {
     let (m, c) = (q.rows, q.cols);
     if pool.threads() <= 1 || c <= 1 || m == 0 || m * c < MIN_PAR_ELEMS {

@@ -93,6 +93,11 @@ fn print_help() {
          when the manifest carries a\n\
          \u{20}           `segments` step graph; default routes through the \
          graph — per-segment ZeRO-3 windows)]\n\
+         \u{20}          [--overlap | --no-overlap (force / pin off the \
+         overlapped step pipeline: prefetched\n\
+         \u{20}           gather windows + shard-at-a-time reduce+step; \
+         default auto-enables it on native graph\n\
+         \u{20}           runs; bitwise identical either way)]\n\
          eval      --checkpoint PATH [--eval-batches N]\n\
          finetune  --checkpoint PATH --task 0..4 --steps N --lr F\n\
          memory    print Table 2 (exact analytic over GPT-2 inventories)\n\
@@ -155,6 +160,16 @@ fn train_options(args: &Args) -> Result<TrainOptions> {
             None => CompressKind::None,
         },
         monolithic: args.has("monolithic"),
+        overlap: match (args.has("overlap"), args.has("no-overlap")) {
+            (true, true) => bail!(
+                "--overlap and --no-overlap are mutually exclusive: pass \
+                 at most one (the default auto-enables overlap on native \
+                 step-graph runs)"
+            ),
+            (true, false) => Some(true),
+            (false, true) => Some(false),
+            (false, false) => None,
+        },
     })
 }
 

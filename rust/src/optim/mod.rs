@@ -23,7 +23,7 @@ pub mod xla_exec;
 
 pub use ef::ErrorFeedback;
 pub use hyper::{Hyper, OptKind};
-pub use native::{NativeOptimizer, ShardedNativeOptimizer};
+pub use native::{NativeOptimizer, PiecewiseStep, ShardedNativeOptimizer};
 pub use rank::{f_xi, RankController};
 pub use state::{shard_ranges, OptimizerState, ParamState, StepInfo};
 pub use workspace::Workspace;
@@ -96,6 +96,15 @@ pub trait Optimizer {
              shard plan)",
             self.name()
         )
+    }
+
+    /// Downcast hook for the trainer's overlapped reduce+step pipeline:
+    /// the piecewise (shard-at-a-time) step API lives on
+    /// [`ShardedNativeOptimizer`] only, and the pipeline falls back to
+    /// the phase-sequential path whenever this returns `None` (every
+    /// non-sharded backend — the default).
+    fn as_sharded_native(&mut self) -> Option<&mut ShardedNativeOptimizer> {
+        None
     }
 
     /// Human name for logs/tables.

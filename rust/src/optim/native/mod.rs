@@ -10,5 +10,5 @@ mod sharded;
 pub mod steps;
 
 pub use optimizer::NativeOptimizer;
-pub use sharded::ShardedNativeOptimizer;
+pub use sharded::{PiecewiseStep, ShardedNativeOptimizer};
 pub use steps::*;

@@ -81,6 +81,11 @@ pub(crate) struct StepJob<'a> {
     rng: &'a mut Rng,
     w: &'a mut [f32],
     g: &'a [f32],
+    /// Global manifest index of this parameter. `fan_out_jobs` sorts
+    /// *stably* on (kind, size), so equal-key jobs keep manifest order;
+    /// `idx` lets a piecewise (shard-at-a-time) step reconstruct that
+    /// exact global order when re-aggregating telemetry.
+    idx: usize,
     /// outputs (aggregated single-threaded after the fan-out)
     xi: f64,
     rank: f64,
@@ -92,15 +97,19 @@ pub(crate) struct StepJob<'a> {
 /// The five input slices run in parallel (`specs[i]` ↔ `states[i]` ↔
 /// `rngs[i]` ↔ `params[i]` ↔ `grads[i]`); the sharded engine calls this
 /// once per shard with that shard's contiguous sub-slices, so the
-/// concatenated job list is identical to the unsharded one.
+/// concatenated job list is identical to the unsharded one. `base` is
+/// the global manifest index of `specs[0]` (0 for an unsharded call,
+/// the shard's plan start for a sharded one).
 pub(crate) fn build_jobs<'a>(
     specs: &'a [ParamSpec],
     states: &'a mut [ParamState],
     rngs: &'a mut [Rng],
     params: &'a mut [Tensor],
     grads: &'a [Tensor],
+    base: usize,
     jobs: &mut Vec<StepJob<'a>>,
 ) -> Result<()> {
+    let mut idx = base;
     for (((spec, st), rng), (p, gt)) in specs
         .iter()
         .zip(states.iter_mut())
@@ -115,11 +124,13 @@ pub(crate) fn build_jobs<'a>(
             rng,
             w,
             g,
+            idx,
             xi: 0.0,
             rank: 0.0,
             retries: 0,
             is_matrix: false,
         });
+        idx += 1;
     }
     Ok(())
 }
@@ -226,6 +237,71 @@ pub(crate) fn collect_info(t: usize, jobs: &[StepJob]) -> StepInfo {
             info.mean_rank += job.rank;
         }
         info.rank_retries += job.retries;
+    }
+    if n_matrix > 0 {
+        info.mean_xi /= n_matrix as f64;
+        info.mean_rank /= n_matrix as f64;
+    }
+    info
+}
+
+/// One job's telemetry, detached from the job borrows — what a piecewise
+/// (shard-at-a-time) step accumulates across shards so the final
+/// [`StepInfo`] can be aggregated in the exact one-shot order.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct JobTele {
+    /// sort key parts mirroring `fan_out_jobs`'s stable sort …
+    sort_matrix: bool,
+    numel: usize,
+    /// … with the manifest index as the stability tiebreak
+    idx: usize,
+    is_matrix: bool,
+    xi: f64,
+    rank: f64,
+    retries: usize,
+}
+
+/// Detach each job's telemetry (post-fan-out) into `out`.
+pub(crate) fn collect_job_tele(jobs: &[StepJob], out: &mut Vec<JobTele>) {
+    for j in jobs {
+        out.push(JobTele {
+            sort_matrix: j.spec.is_matrix(),
+            numel: j.spec.numel(),
+            idx: j.idx,
+            is_matrix: j.is_matrix,
+            xi: j.xi,
+            rank: j.rank,
+            retries: j.retries,
+        });
+    }
+}
+
+/// Aggregate piecewise-collected telemetry into a [`StepInfo`] that is
+/// bitwise identical to [`collect_info`] over the equivalent one-shot
+/// job list. `fan_out_jobs` sorts stably on `(!is_matrix, Reverse
+/// (numel))`, so equal-key jobs retain manifest order — re-sorting here
+/// on the same key with the manifest index as tiebreak reproduces the
+/// one-shot summation order exactly, which matters because the ξ/rank
+/// means are f64 sums (floating-point addition is order-sensitive).
+pub(crate) fn collect_info_piecewise(
+    t: usize,
+    tele: &mut [JobTele],
+) -> StepInfo {
+    tele.sort_by_key(|j| {
+        (!j.sort_matrix, std::cmp::Reverse(j.numel), j.idx)
+    });
+    let mut info = StepInfo {
+        step: t,
+        ..Default::default()
+    };
+    let mut n_matrix = 0usize;
+    for j in tele.iter() {
+        if j.is_matrix {
+            n_matrix += 1;
+            info.mean_xi += j.xi;
+            info.mean_rank += j.rank;
+        }
+        info.rank_retries += j.retries;
     }
     if n_matrix > 0 {
         info.mean_xi /= n_matrix as f64;
@@ -545,6 +621,7 @@ impl Optimizer for NativeOptimizer {
             &mut self.rngs,
             params,
             grads,
+            0,
             &mut jobs,
         )?;
         fan_out_jobs(&h, t, lr, &mut jobs, &pool, &mut self.ctxs);

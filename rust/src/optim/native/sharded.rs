@@ -29,7 +29,8 @@ use std::ops::Range;
 use anyhow::{bail, Result};
 
 use super::optimizer::{
-    build_jobs, collect_info, fan_out_jobs, StepJob, WorkerCtx,
+    build_jobs, collect_info, collect_info_piecewise, collect_job_tele,
+    fan_out_jobs, JobTele, StepJob, WorkerCtx,
 };
 use crate::optim::state::{shard_ranges, OptimizerState, StepInfo};
 use crate::optim::{Hyper, Optimizer};
@@ -203,6 +204,7 @@ impl ShardedNativeOptimizer {
                     rh,
                     &mut **ph,
                     gh,
+                    range.start,
                     &mut jobs,
                 )?;
                 rrest = rt;
@@ -228,6 +230,117 @@ impl ShardedNativeOptimizer {
         }
         out
     }
+
+    /// Open a piecewise step: one optimizer step driven shard by shard,
+    /// so the trainer's overlapped pipeline can step shard `s-1` while
+    /// shard `s`'s averaged gradients are still being reduced. Bumps the
+    /// step counter once (exactly as `step_shard_slices` does); every
+    /// shard must then be stepped exactly once via
+    /// [`ShardedNativeOptimizer::step_shard_piece`] and the step closed
+    /// with [`ShardedNativeOptimizer::finish_piecewise`]. Bitwise
+    /// identical to the one-shot step: each shard builds the identical
+    /// job slice (same RNG streams, split by global index), the shared
+    /// fan-out computes the identical per-job floats (thread/grouping
+    /// independent by construction), and `finish_piecewise` re-aggregates
+    /// telemetry in the exact one-shot order.
+    pub fn begin_piecewise(&mut self, lr: f32) -> PiecewiseStep {
+        self.step += 1;
+        let t = self.step;
+        for st in &mut self.shards {
+            st.step = t;
+        }
+        PiecewiseStep {
+            t,
+            lr,
+            done: vec![false; self.plan.len()],
+            tele: Vec::with_capacity(self.specs.len()),
+        }
+    }
+
+    /// Step one shard of an open piecewise step. `shard_params` /
+    /// `shard_grads` must each cover exactly `plan()[s]`.
+    pub fn step_shard_piece(
+        &mut self,
+        piece: &mut PiecewiseStep,
+        s: usize,
+        shard_params: &mut [Tensor],
+        shard_grads: &[Tensor],
+    ) -> Result<()> {
+        if piece.t != self.step {
+            bail!(
+                "piecewise step {} does not match optimizer step {}",
+                piece.t,
+                self.step
+            );
+        }
+        let Some(range) = self.plan.get(s).cloned() else {
+            bail!("shard {s} out of range ({} shards)", self.plan.len());
+        };
+        if piece.done[s] {
+            bail!("shard {s} already stepped in this piecewise step");
+        }
+        if shard_params.len() != range.len()
+            || shard_grads.len() != range.len()
+        {
+            bail!(
+                "shard {s} owns {} parameters but received {} params and \
+                 {} gradients",
+                range.len(),
+                shard_params.len(),
+                shard_grads.len()
+            );
+        }
+        let h = self.hyper.clone();
+        let pool = self.pool.clone();
+        let mut jobs: Vec<StepJob> = Vec::with_capacity(range.len());
+        build_jobs(
+            &self.specs[range.clone()],
+            &mut self.shards[s].states,
+            &mut self.rngs[range.clone()],
+            shard_params,
+            shard_grads,
+            range.start,
+            &mut jobs,
+        )?;
+        if !jobs.is_empty() {
+            fan_out_jobs(&h, piece.t, piece.lr, &mut jobs, &pool,
+                         &mut self.ctxs);
+        }
+        collect_job_tele(&jobs, &mut piece.tele);
+        piece.done[s] = true;
+        Ok(())
+    }
+
+    /// Close a piecewise step once every shard has been stepped,
+    /// returning the same [`StepInfo`] the one-shot step would.
+    pub fn finish_piecewise(
+        &mut self,
+        mut piece: PiecewiseStep,
+    ) -> Result<StepInfo> {
+        if piece.t != self.step {
+            bail!(
+                "piecewise step {} does not match optimizer step {}",
+                piece.t,
+                self.step
+            );
+        }
+        if let Some(s) = piece.done.iter().position(|&d| !d) {
+            bail!("piecewise step finished with shard {s} never stepped");
+        }
+        let mut info = collect_info_piecewise(piece.t, &mut piece.tele);
+        info.state_bytes = self.shards.iter().map(|s| s.bytes()).sum();
+        info.max_shard_bytes = self.max_shard_bytes();
+        Ok(info)
+    }
+}
+
+/// An open shard-at-a-time optimizer step — see
+/// [`ShardedNativeOptimizer::begin_piecewise`].
+pub struct PiecewiseStep {
+    t: usize,
+    lr: f32,
+    done: Vec<bool>,
+    tele: Vec<JobTele>,
 }
 
 impl Optimizer for ShardedNativeOptimizer {
@@ -310,6 +423,10 @@ impl Optimizer for ShardedNativeOptimizer {
 
     fn state_bytes(&self) -> u64 {
         self.shards.iter().map(|s| s.bytes()).sum()
+    }
+
+    fn as_sharded_native(&mut self) -> Option<&mut ShardedNativeOptimizer> {
+        Some(self)
     }
 
     fn second_moments(&self) -> Vec<(String, Vec<usize>, Vec<f32>)> {
@@ -486,6 +603,158 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Drive `steps` random-gradient steps through the piecewise API
+    /// (same gradient stream as [`run_opt`]), stepping shards in
+    /// ascending or descending order.
+    fn run_opt_piecewise(
+        mut opt: ShardedNativeOptimizer,
+        steps: usize,
+        reverse: bool,
+    ) -> (Vec<Vec<f32>>, Vec<(f64, f64)>) {
+        let mut rng = Rng::new(17);
+        let mut params: Vec<Tensor> = specs6()
+            .iter()
+            .map(|s| {
+                Tensor::f32(s.shape.clone(), rng.normal_vec_f32(s.numel()))
+            })
+            .collect();
+        let mut tele = vec![];
+        let plan = opt.plan().to_vec();
+        for _ in 0..steps {
+            let grads: Vec<Tensor> = params
+                .iter()
+                .map(|t| {
+                    Tensor::f32(t.shape.clone(), rng.normal_vec_f32(t.numel()))
+                })
+                .collect();
+            let order: Vec<usize> = if reverse {
+                (0..plan.len()).rev().collect()
+            } else {
+                (0..plan.len()).collect()
+            };
+            let mut piece = opt.begin_piecewise(1e-3);
+            for s in order {
+                let r = plan[s].clone();
+                opt.step_shard_piece(
+                    &mut piece,
+                    s,
+                    &mut params[r.clone()],
+                    &grads[r],
+                )
+                .unwrap();
+            }
+            let info = opt.finish_piecewise(piece).unwrap();
+            tele.push((info.mean_xi, info.mean_rank));
+        }
+        let weights = params
+            .iter()
+            .map(|p| p.as_f32().unwrap().to_vec())
+            .collect();
+        (weights, tele)
+    }
+
+    #[test]
+    fn piecewise_step_bitwise_matches_one_shot() {
+        // the overlapped-pipeline acceptance bar: stepping shard by shard
+        // — in either order — reproduces the unsharded single-threaded
+        // weights AND telemetry exactly, for any (shards, threads)
+        let h = Hyper::paper_defaults(OptKind::Adapprox, &hd());
+        let base = run_opt(
+            Box::new(
+                NativeOptimizer::new(specs6(), h.clone(), &ladder, 13)
+                    .unwrap(),
+            ),
+            12,
+        );
+        for shards in [1usize, 2, 4] {
+            for threads in [1usize, 2, 4] {
+                for reverse in [false, true] {
+                    let opt = ShardedNativeOptimizer::new(
+                        specs6(),
+                        h.clone(),
+                        &ladder,
+                        13,
+                        shards,
+                    )
+                    .unwrap()
+                    .with_threads(threads);
+                    let got = run_opt_piecewise(opt, 12, reverse);
+                    assert_eq!(
+                        base.0, got.0,
+                        "weights diverged at shards={shards} \
+                         threads={threads} reverse={reverse}"
+                    );
+                    assert_eq!(
+                        base.1, got.1,
+                        "telemetry diverged at shards={shards} \
+                         threads={threads} reverse={reverse}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn piecewise_step_refuses_misuse() {
+        let h = Hyper::paper_defaults(OptKind::Adapprox, &hd());
+        let mut opt =
+            ShardedNativeOptimizer::new(specs6(), h, &ladder, 13, 2)
+                .unwrap();
+        let mut rng = Rng::new(5);
+        let mut params: Vec<Tensor> = specs6()
+            .iter()
+            .map(|s| {
+                Tensor::f32(s.shape.clone(), rng.normal_vec_f32(s.numel()))
+            })
+            .collect();
+        let grads: Vec<Tensor> = params
+            .iter()
+            .map(|t| {
+                Tensor::f32(t.shape.clone(), rng.normal_vec_f32(t.numel()))
+            })
+            .collect();
+        let plan = opt.plan().to_vec();
+        let r0 = plan[0].clone();
+        let piece = opt.begin_piecewise(1e-3);
+        // finishing with an unstepped shard refuses
+        assert!(opt.finish_piecewise(piece).is_err());
+        // stepping the same shard twice refuses
+        let mut piece = opt.begin_piecewise(1e-3);
+        opt.step_shard_piece(
+            &mut piece,
+            0,
+            &mut params[r0.clone()],
+            &grads[r0.clone()],
+        )
+        .unwrap();
+        assert!(opt
+            .step_shard_piece(
+                &mut piece,
+                0,
+                &mut params[r0.clone()],
+                &grads[r0.clone()],
+            )
+            .is_err());
+        // out-of-range shard and wrong slice lengths refuse
+        assert!(opt
+            .step_shard_piece(&mut piece, 9, &mut [], &[])
+            .is_err());
+        assert!(opt
+            .step_shard_piece(&mut piece, 1, &mut [], &[])
+            .is_err());
+        // a stale piece (begin called again underneath) refuses
+        piece = opt.begin_piecewise(1e-3);
+        let _fresh = opt.begin_piecewise(1e-3);
+        assert!(opt
+            .step_shard_piece(
+                &mut piece,
+                0,
+                &mut params[r0.clone()],
+                &grads[r0],
+            )
+            .is_err());
     }
 
     #[test]

@@ -193,6 +193,24 @@ impl StepGraph {
             .max()
             .unwrap_or(0)
     }
+
+    /// Largest *adjacent-pair* gather footprint (window i plus window
+    /// i+1), in elements — the ZeRO-3 peak under the overlapped pipeline,
+    /// where segment i+1's parameters are prefetched into the second
+    /// gather buffer while segment i computes. The prefetch order is the
+    /// walk order (forward ascending, backward descending), so only
+    /// adjacent windows ever coexist; a single-segment graph degrades to
+    /// [`StepGraph::max_segment_elems`]. An index tied into both windows
+    /// of a pair is counted twice, matching the double-buffer residency
+    /// (the prefetch buffer holds its own copy until install).
+    pub fn max_window_pair_elems(&self, specs: &[ParamSpec]) -> usize {
+        let w: Vec<usize> =
+            self.segments.iter().map(|s| s.window_elems(specs)).collect();
+        w.windows(2)
+            .map(|p| p[0] + p[1])
+            .max()
+            .unwrap_or_else(|| w.first().copied().unwrap_or(0))
+    }
 }
 
 /// The table checks behind [`StepGraph::new`], exposed for property tests:
@@ -475,6 +493,31 @@ mod tests {
         // block1 owns 14..26 -> numels 15..=26
         let block1: usize = (15..=26).sum();
         assert_eq!(g.max_segment_elems(&specs), block1);
+        // the overlapped-pipeline peak is the largest adjacent pair of
+        // windows: block0 (owns 2..14 -> numels 3..=14) + block1
+        let block0: usize = (3..=14).sum();
+        assert_eq!(g.max_window_pair_elems(&specs), block0 + block1);
+        // a single-segment graph has no pair: peak stays one window
+        let lone = StepGraph::new(
+            "t1",
+            2,
+            vec![SegmentSpec {
+                name: "all".into(),
+                fwd: "f".into(),
+                bwd: "b".into(),
+                predict: None,
+                params: 0..2,
+                tied: vec![],
+                act_in: vec![],
+                act_out: vec![],
+            }],
+            None,
+        )
+        .unwrap();
+        assert_eq!(
+            lone.max_window_pair_elems(&specs[..2]),
+            lone.max_segment_elems(&specs[..2])
+        );
     }
 
     /// Forall property: random well-formed tables validate; a random

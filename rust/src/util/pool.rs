@@ -233,6 +233,37 @@ impl Pool {
     }
 }
 
+/// Run a comms task and a compute task concurrently and return both
+/// results — the two-lane span behind the trainer's overlapped step
+/// pipeline (prefetch-gather under segment compute, reduce-scatter under
+/// the piecewise optimizer step).
+///
+/// `comms` is spawned on a scoped thread (it must be `Send`); `compute`
+/// runs on the calling thread, so it may hold thread-local state such as
+/// the trainer's `Rc<dyn Executor>`. Both complete before the call
+/// returns — the overlap changes *when* work runs, never what it
+/// computes, which is how the overlapped pipeline stays bitwise
+/// identical to the phase-sequential path.
+pub fn overlap<A, B, RA, RB>(comms: A, compute: B) -> (RA, RB)
+where
+    A: FnOnce() -> RA + Send,
+    RA: Send,
+    B: FnOnce() -> RB,
+{
+    std::thread::scope(|scope| {
+        let lane = scope.spawn(comms);
+        let rb = compute();
+        let ra = match lane.join() {
+            Ok(ra) => ra,
+            // a panicking comms closure is a bug in the closure, not a
+            // recoverable comms fault (those travel as Result values
+            // through RA); re-raise it on the caller's thread
+            Err(payload) => std::panic::resume_unwind(payload),
+        };
+        (ra, rb)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -421,6 +452,35 @@ mod tests {
             });
         });
         assert!(data.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn overlap_runs_both_lanes_and_returns_both_results() {
+        // plain results travel through; both lanes ran to completion
+        let hits = AtomicUsize::new(0);
+        let (a, b) = overlap(
+            || {
+                hits.fetch_add(1, Ordering::SeqCst);
+                21usize
+            },
+            || {
+                hits.fetch_add(1, Ordering::SeqCst);
+                2usize
+            },
+        );
+        assert_eq!(a * b, 42);
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+        // errors are values, not panics: a failing comms lane never
+        // poisons the compute result
+        let (ra, rb): (Result<(), String>, u32) =
+            overlap(|| Err("torn frame".into()), || 7);
+        assert_eq!(ra.unwrap_err(), "torn frame");
+        assert_eq!(rb, 7);
+        // the compute lane may hold non-Send state (Rc), as the trainer's
+        // executor does
+        let rc = std::rc::Rc::new(5u32);
+        let (x, y) = overlap(|| 1u32, || *rc + 1);
+        assert_eq!((x, y), (1, 6));
     }
 
     #[test]

@@ -579,10 +579,44 @@ fn chaos_step(
 ) -> Result<(), CommsError> {
     let per = chaos_grads(params, t, replicas);
     let reduced = cluster.reduce(t, &per)?;
+    chaos_update(cluster, params, plan, zero, t, &reduced)
+}
+
+/// The split-reduce variant of `chaos_step`: issue the reduce, do local
+/// work while the collective is on the wire, then complete it. This is
+/// the shape the overlapped trainer pipeline uses (it releases its
+/// gathered parameter windows inside the issue/complete gap), so the
+/// split path gets the same fault battery as the one-shot reduce.
+fn chaos_step_split(
+    cluster: &mut Cluster,
+    params: &mut Vec<Tensor>,
+    plan: &[std::ops::Range<usize>],
+    zero: usize,
+    t: u64,
+    replicas: usize,
+) -> Result<(), CommsError> {
+    let per = chaos_grads(params, t, replicas);
+    cluster.reduce_issue(t, &per)?;
+    // the overlap window: the reduce is in flight and the cluster says so
+    assert!(cluster.has_in_flight(), "issued reduce not tracked");
+    let reduced = cluster.reduce_complete(t, &per)?;
+    assert!(!cluster.has_in_flight(), "completed reduce still in flight");
+    chaos_update(cluster, params, plan, zero, t, &reduced)
+}
+
+/// The post-reduce SGD update shared by both step drivers.
+fn chaos_update(
+    cluster: &mut Cluster,
+    params: &mut Vec<Tensor>,
+    plan: &[std::ops::Range<usize>],
+    zero: usize,
+    t: u64,
+    reduced: &[Vec<Tensor>],
+) -> Result<(), CommsError> {
     if zero >= 2 {
         let updated: Vec<Vec<Tensor>> = plan
             .iter()
-            .zip(&reduced)
+            .zip(reduced)
             .map(|(range, owned_grads)| {
                 range
                     .clone()
@@ -671,6 +705,60 @@ fn chaos_run(
     (params, rebuilds)
 }
 
+/// `chaos_run` over the split issue/complete reduce: same tier-1
+/// rebuild-and-replay loop, but every step's collective goes through
+/// `reduce_issue` + `reduce_complete` with the overlap window in
+/// between. A rebuilt cluster must come up with no reduce in flight.
+fn chaos_run_split(
+    zero: usize,
+    steps: u64,
+    replicas: usize,
+    fault_for_rank: &dyn Fn(usize) -> Option<FaultPlan>,
+) -> (Vec<Tensor>, usize) {
+    let mut params = chaos_params();
+    let plan = chaos_plan(&params, replicas);
+    let mode = chaos_mode(zero, &plan);
+    let opts = chaos_opts();
+    let mut cluster =
+        Cluster::connect_with_faults(replicas, mode.clone(), &opts, |r| {
+            fault_for_rank(r)
+        })
+        .unwrap();
+    let mut rebuilds = 0usize;
+    let mut t = 1u64;
+    while t <= steps {
+        match chaos_step_split(
+            &mut cluster,
+            &mut params,
+            &plan,
+            zero,
+            t,
+            replicas,
+        ) {
+            Ok(()) => t += 1,
+            Err(e) => {
+                // a failure between issue and complete may leave the dead
+                // cluster with a reduce formally in flight — the rebuild
+                // must start clean
+                rebuilds += 1;
+                assert!(
+                    rebuilds <= CHAOS_REBUILD_BUDGET,
+                    "split-reduce chaos run cannot stabilize after \
+                     {CHAOS_REBUILD_BUDGET} rebuilds: {e}"
+                );
+                let dead = std::mem::replace(
+                    &mut cluster,
+                    Cluster::connect(replicas, mode.clone(), &opts).unwrap(),
+                );
+                drop(dead);
+                assert!(!cluster.has_in_flight(), "rebuild inherited state");
+            }
+        }
+    }
+    cluster.shutdown().ok();
+    (params, rebuilds)
+}
+
 /// `CHAOS_SEEDS` (comma-separated u64s) overrides the pinned seed set.
 fn chaos_seeds() -> Vec<u64> {
     match std::env::var("CHAOS_SEEDS") {
@@ -751,6 +839,116 @@ fn chaos_battery_seeded_schedules() {
 }
 
 #[test]
+fn chaos_split_reduce_fault_matrix() {
+    // the overlapped trainer splits its transport reduce into
+    // reduce_issue / reduce_complete so local work can run while the
+    // collective is on the wire. Same bar as the one-shot battery —
+    // Drop, Disconnect and Truncate, on both sides of the wire, at the
+    // first two protocol ops, under every ZeRO mode: bitwise-identical
+    // weights to the fault-free one-shot reference, because the split is
+    // pure scheduling, not new arithmetic
+    let kinds =
+        [FaultKind::Drop, FaultKind::Disconnect, FaultKind::Truncate];
+    for zero in [1usize, 2, 3] {
+        let reference = chaos_reference(zero, 3, 2);
+        for kind in kinds {
+            for op in [0u64, 1] {
+                for send_side in [true, false] {
+                    let plan = if send_side {
+                        FaultPlan::none().on_send(op, kind)
+                    } else {
+                        FaultPlan::none().on_recv(op, kind)
+                    }
+                    .with_delay(Duration::from_millis(5));
+                    let (got, rebuilds) =
+                        chaos_run_split(zero, 3, 2, &|r| {
+                            (r == 1).then(|| plan.clone())
+                        });
+                    assert_eq!(
+                        got, reference,
+                        "split reduce: zero={zero} kind={kind:?} op={op} \
+                         send={send_side} rebuilds={rebuilds}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn chaos_split_reduce_crash_rolls_back_to_checkpoint() {
+    // tier-2 over the split path: a permanent mid-run crash lands between
+    // reduce_issue and reduce_complete; the driver rolls back to the last
+    // published checkpoint generation, rebuilds (no reduce in flight on
+    // the fresh cluster) and resumes — bitwise on the uninterrupted run
+    let (zero, replicas, steps) = (2usize, 2usize, 5u64);
+    let reference = chaos_reference(zero, steps, replicas);
+
+    let dir = std::env::temp_dir().join(format!(
+        "adapprox_chaos_split_drill_{}",
+        std::process::id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let head = dir.join("chaos.ckpt");
+
+    let mut params = chaos_params();
+    let plan = chaos_plan(&params, replicas);
+    let mode = chaos_mode(zero, &plan);
+    let opts = chaos_opts();
+    // rank 1 crashes permanently on its 4th send (= step 4's gradients)
+    let fplan = FaultPlan::none().on_send(3, FaultKind::Disconnect);
+    let mut cluster = Cluster::connect_with_faults(
+        replicas,
+        mode.clone(),
+        &opts,
+        |r| (r == 1).then(|| fplan.clone()),
+    )
+    .unwrap();
+
+    let mut crashed = false;
+    let mut t = 1u64;
+    while t <= steps {
+        match chaos_step_split(
+            &mut cluster,
+            &mut params,
+            &plan,
+            zero,
+            t,
+            replicas,
+        ) {
+            Ok(()) => {
+                Checkpoint {
+                    config: "chaos".into(),
+                    step: t as usize,
+                    optimizer: "sgd(chaos)".into(),
+                    params: params.clone(),
+                }
+                .save_sharded(&head, 2)
+                .unwrap();
+                t += 1;
+            }
+            Err(_) => {
+                crashed = true;
+                let back = Checkpoint::load_auto(&head).unwrap();
+                params = back.params;
+                t = back.step as u64 + 1;
+                let dead = std::mem::replace(
+                    &mut cluster,
+                    Cluster::connect(replicas, mode.clone(), &opts).unwrap(),
+                );
+                drop(dead);
+                assert!(!cluster.has_in_flight(), "rebuild inherited state");
+            }
+        }
+    }
+    assert!(crashed, "the injected crash never fired");
+    assert_eq!(params, reference);
+    cluster.shutdown().unwrap();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
 fn chaos_crash_recovery_drill_rolls_back_to_checkpoint() {
     // the artifact-free tier-2 drill: a worker dies for good mid-run, the
     // driver rolls back to the last published checkpoint generation,
@@ -814,6 +1012,106 @@ fn chaos_crash_recovery_drill_rolls_back_to_checkpoint() {
     assert_eq!(params, reference);
     cluster.shutdown().unwrap();
     std::fs::remove_dir_all(dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// Overlapped-pipeline chaos at trainer level (artifact-free): the real
+// Trainer over the native reference config, transport mode, with the
+// overlapped reduce (reduce_issue -> release windows -> reduce_complete)
+// under injected connection faults.
+
+use adapprox::runtime::manifest::HyperDefaults;
+
+/// Paper-shaped hyperparameters for the artifact-free reference config
+/// (mirrors the native tier in `train_e2e`).
+fn native_ref_hyper() -> Hyper {
+    Hyper::paper_defaults(
+        OptKind::Adapprox,
+        &HyperDefaults {
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            clip_d: 1.0,
+            k_init: 2,
+            l: 5,
+            p: 5,
+            xi_thresh: 0.01,
+            delta_s: 10,
+            f_eta: 200.0,
+            f_omega: -10.0,
+            f_phi: -2.5,
+            f_tau: -9.0,
+        },
+    )
+}
+
+#[test]
+fn overlapped_trainer_transport_fault_replays_bitwise() {
+    // the trainer-level tier-1 drill on the overlapped pipeline: rank 1's
+    // connection dies mid-run, so either the issue or the completion of
+    // an in-flight overlapped reduce fails after the trainer has already
+    // released its gathered windows. The trainer rebuilds the transport
+    // through the factory and replays the step's reduce one-shot; the
+    // run must land bitwise on the fault-free pinned-sequential
+    // (--no-overlap) run, with zero tier-2 rollbacks
+    let mk_opts = |overlap: Option<bool>| TrainOptions {
+        steps: 5,
+        warmup: 2,
+        eval_every: 0,
+        eval_batches: 1,
+        log_every: usize::MAX,
+        seed: 51,
+        native: true,
+        replicas: 2,
+        shards: 2,
+        threads: 2,
+        zero_level: 2,
+        transport: Some(TransportKind::Inproc),
+        overlap,
+        ..Default::default()
+    };
+    let mut seq =
+        Trainer::new_native_ref(native_ref_hyper(), mk_opts(Some(false)))
+            .unwrap()
+            .with_comms_options(chaos_opts());
+    assert!(!seq.overlap_active());
+    let hist = seq.run().unwrap();
+    let reference: (Vec<f64>, Vec<Vec<f32>>) = (
+        hist.iter().map(|r| r.train_loss).collect(),
+        seq.full_params()
+            .iter()
+            .map(|p| p.as_f32().unwrap().to_vec())
+            .collect(),
+    );
+
+    let mut incarnation = 0usize;
+    let mut tr = Trainer::new_native_ref(native_ref_hyper(), mk_opts(None))
+        .unwrap()
+        .with_comms_options(chaos_opts())
+        .with_cluster_factory(Box::new(move |replicas, mode, o| {
+            incarnation += 1;
+            if incarnation == 1 {
+                Ok(Cluster::connect_with_faults(replicas, mode, o, |r| {
+                    (r == 1).then(|| {
+                        FaultPlan::none().on_send(2, FaultKind::Disconnect)
+                    })
+                })?)
+            } else {
+                Ok(Cluster::connect(replicas, mode, o)?)
+            }
+        }));
+    assert!(tr.overlap_active());
+    let hist = tr.run().unwrap();
+    let got: (Vec<f64>, Vec<Vec<f32>>) = (
+        hist.iter().map(|r| r.train_loss).collect(),
+        tr.full_params()
+            .iter()
+            .map(|p| p.as_f32().unwrap().to_vec())
+            .collect(),
+    );
+    assert_eq!(got, reference, "overlapped fault recovery diverged");
+    assert_eq!(tr.recoveries(), 0, "tier-1 replay escalated to rollback");
 }
 
 // ---------------------------------------------------------------------

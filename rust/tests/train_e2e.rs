@@ -961,7 +961,10 @@ fn native_hyper() -> Hyper {
 }
 
 /// One full native-executor training run; returns the same (losses, xis,
-/// final weights) triple the PJRT sweeps compare.
+/// final weights) triple the PJRT sweeps compare. `overlap` is the
+/// pipeline pin: `None` is the CLI default (auto-enables the overlapped
+/// pipeline on these native graph runs), `Some(false)` is `--no-overlap`
+/// (the literal sequential path).
 #[allow(clippy::too_many_arguments)]
 fn native_run(
     steps: usize,
@@ -972,6 +975,7 @@ fn native_run(
     zero: usize,
     monolithic: bool,
     transport: Option<TransportKind>,
+    overlap: Option<bool>,
 ) -> RunResult {
     let mut opts = quick_opts(steps, seed);
     opts.native = true;
@@ -981,6 +985,7 @@ fn native_run(
     opts.zero_level = zero;
     opts.monolithic = monolithic;
     opts.transport = transport;
+    opts.overlap = overlap;
     let mut tr = Trainer::new_native_ref(native_hyper(), opts).unwrap();
     let hist = tr.run().unwrap();
     let losses: Vec<f64> = hist.iter().map(|r| r.train_loss).collect();
@@ -1006,9 +1011,11 @@ fn native_segmented_training_bitwise_matches_monolithic() {
                 let shards = if zero >= 2 { 2 } else { 1 };
                 let seg = native_run(
                     4, 31, replicas, shards, threads, zero, false, None,
+                    None,
                 );
                 let mono = native_run(
                     4, 31, replicas, shards, threads, zero, true, None,
+                    None,
                 );
                 assert_eq!(
                     seg, mono,
@@ -1102,21 +1109,30 @@ fn native_predict_path_matches_monolithic() {
 #[test]
 fn native_zero3_peak_gather_window_is_one_segment() {
     // the memory acceptance bar: under --zero 3 with the step graph, the
-    // peak gathered-parameter materialization is one segment, not the
-    // full model — and outside the step nothing stays resident. The
-    // reference config has two transformer blocks, so the bound is
-    // strict (the largest segment is well under the full model).
-    let mut opts = quick_opts(4, 35);
-    opts.native = true;
-    opts.replicas = 2;
-    opts.shards = 2;
-    opts.threads = 2;
-    opts.zero_level = 3;
+    // peak gathered-parameter materialization is bounded by the graph —
+    // one segment window under --no-overlap, one adjacent *pair* of
+    // windows under the default overlapped pipeline (the prefetched
+    // next window is resident while the current one computes) — never
+    // the full model. Outside the step nothing stays resident. The
+    // reference config has two transformer blocks, so both bounds are
+    // strict (well under the full model).
+    let base_opts = |steps: usize| {
+        let mut opts = quick_opts(steps, 35);
+        opts.native = true;
+        opts.replicas = 2;
+        opts.shards = 2;
+        opts.threads = 2;
+        opts.zero_level = 3;
+        opts
+    };
     // exercise the eval cadence through per-segment windows too
+    let mut opts = base_opts(4);
     opts.eval_every = 2;
     opts.eval_batches = 1;
+    opts.overlap = Some(false);
     let mut tr = Trainer::new_native_ref(native_hyper(), opts).unwrap();
     assert!(tr.segment_windows_active());
+    assert!(!tr.overlap_active());
     let hist = tr.run().unwrap();
     assert!(hist.iter().all(|r| r.train_loss.is_finite()));
     assert!(hist.iter().any(|r| r.val_loss.is_some()));
@@ -1127,12 +1143,36 @@ fn native_zero3_peak_gather_window_is_one_segment() {
     assert_eq!(
         tr.peak_window_elems(),
         max_seg,
-        "peak gathered elems != largest segment window"
+        "sequential peak gathered elems != largest segment window"
     );
     assert!(
         max_seg < total,
         "with >= 2 blocks the segment bound must be strict: \
          {max_seg} vs full model {total}"
+    );
+    // the default (overlapped) pipeline pays exactly one extra window:
+    // peak residency is the largest *adjacent pair* of windows, still
+    // strictly under the full model
+    let mut tr2 = Trainer::new_native_ref(native_hyper(), base_opts(4))
+        .unwrap();
+    assert!(tr2.segment_windows_active());
+    assert!(tr2.overlap_active());
+    tr2.run().unwrap();
+    assert_eq!(tr2.param_buffer_elems(), 0, "a gather window stayed open");
+    let pair = tr2
+        .graph()
+        .unwrap()
+        .max_window_pair_elems(&tr2.cfg.params);
+    assert_eq!(
+        tr2.peak_window_elems(),
+        pair,
+        "overlapped peak gathered elems != largest adjacent window pair"
+    );
+    assert!(pair >= max_seg && pair <= 2 * max_seg);
+    assert!(
+        pair < total,
+        "the double-buffer bound must stay strict: \
+         {pair} vs full model {total}"
     );
     // eval needs no explicit bracketing: the graph runner opens its own
     // windows, and closes back down to zero
@@ -1161,7 +1201,7 @@ fn native_transport_training_bitwise_matches_in_memory() {
     // zero × transport × compress-none on the native executor: the comms
     // layer stays an invisible substrate with no artifacts in sight
     for zero in [1usize, 2, 3] {
-        let base = native_run(4, 37, 2, 2, 2, zero, false, None);
+        let base = native_run(4, 37, 2, 2, 2, zero, false, None, None);
         let got = native_run(
             4,
             37,
@@ -1171,14 +1211,130 @@ fn native_transport_training_bitwise_matches_in_memory() {
             zero,
             false,
             Some(TransportKind::Inproc),
+            None,
         );
         assert_eq!(base, got, "transport diverged at zero={zero}");
     }
     // real loopback sockets, one representative ZeRO-2 configuration
-    let base = native_run(3, 38, 2, 2, 2, 2, false, None);
-    let got =
-        native_run(3, 38, 2, 2, 2, 2, false, Some(TransportKind::Tcp));
+    let base = native_run(3, 38, 2, 2, 2, 2, false, None, None);
+    let got = native_run(
+        3,
+        38,
+        2,
+        2,
+        2,
+        2,
+        false,
+        Some(TransportKind::Tcp),
+        None,
+    );
     assert_eq!(base, got, "tcp transport diverged");
+}
+
+#[test]
+fn native_overlap_bitwise_matches_no_overlap() {
+    // the overlap acceptance bar: `--no-overlap` pins the literal
+    // pre-existing sequential step (gather -> compute -> reduce -> step),
+    // the default auto-enables the overlapped pipeline (prefetched gather
+    // windows during compute, shard-at-a-time reduce+step). The two must
+    // be bitwise identical — losses, xi series and trained weights — for
+    // every (replicas, zero, threads) in the sweep: the overlapped lanes
+    // run the same kernels over the same plan in the same accumulation
+    // order, just earlier.
+    for replicas in [1usize, 2, 4] {
+        for zero in [1usize, 2, 3] {
+            for threads in [1usize, 2, 4] {
+                let shards = if zero >= 2 { 2 } else { 1 };
+                let seq = native_run(
+                    4,
+                    41,
+                    replicas,
+                    shards,
+                    threads,
+                    zero,
+                    false,
+                    None,
+                    Some(false),
+                );
+                let ov = native_run(
+                    4, 41, replicas, shards, threads, zero, false, None,
+                    None,
+                );
+                assert_eq!(
+                    seq, ov,
+                    "overlapped diverged from sequential at \
+                     replicas={replicas} zero={zero} threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn native_overlap_transport_bitwise_matches_sequential() {
+    // the transport side of the overlap pipeline: the split
+    // reduce_issue/reduce_complete path (parameters released while the
+    // orchestrator reduces) must land bitwise on the one-shot reduce,
+    // over in-process channels and real loopback sockets
+    for (transport, zero) in [
+        (TransportKind::Inproc, 2usize),
+        (TransportKind::Inproc, 3),
+        (TransportKind::Tcp, 2),
+    ] {
+        let seq = native_run(
+            3,
+            42,
+            2,
+            2,
+            2,
+            zero,
+            false,
+            Some(transport),
+            Some(false),
+        );
+        let ov = native_run(
+            3,
+            42,
+            2,
+            2,
+            2,
+            zero,
+            false,
+            Some(transport),
+            None,
+        );
+        assert_eq!(
+            seq, ov,
+            "overlapped transport reduce diverged at \
+             transport={transport:?} zero={zero}"
+        );
+    }
+}
+
+#[test]
+fn overlap_flags_are_validated_at_construction() {
+    // both pipeline pins are refused cleanly at Trainer::new time when
+    // they cannot mean anything: with --monolithic (no step graph to
+    // schedule over) and without --native (no sharded native optimizer
+    // to run per-shard steps in)
+    for force in [true, false] {
+        let mut opts = quick_opts(1, 43);
+        opts.native = true;
+        opts.monolithic = true;
+        opts.overlap = Some(force);
+        let err = match Trainer::new_native_ref(native_hyper(), opts) {
+            Err(e) => e,
+            Ok(_) => panic!("expected overlap/--monolithic error"),
+        };
+        assert!(err.to_string().contains("monolithic"), "{err}");
+        let mut opts = quick_opts(1, 43);
+        opts.overlap = Some(force); // no --native
+        let err = match Trainer::new_native_ref(native_hyper(), opts) {
+            Err(e) => e,
+            Ok(_) => panic!("expected overlap/--native error"),
+        };
+        assert!(err.to_string().contains("native"), "{err}");
+    }
 }
 
 #[test]
